@@ -1,0 +1,139 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): start the full stack —
+//! corpus, sharded indexes, dynamic batcher, PJRT engine, TCP server — fire
+//! a closed-loop multi-client workload at it, and report latency/throughput
+//! per execution mode.
+//!
+//!     make artifacts && cargo run --release --example serve_e2e
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::{
+    server, BatchConfig, Coordinator, CoordinatorConfig, ExecMode, IndexKind, Request, Response,
+};
+use simetra::data::{vmf_mixture, VmfSpec};
+use simetra::metrics::DenseVec;
+
+const N: usize = 50_000;
+const DIM: usize = 128;
+const CLIENTS: usize = 8;
+const QUERIES_PER_CLIENT: usize = 250;
+const K: usize = 10;
+
+fn run_mode(
+    corpus: &[DenseVec],
+    queries: &[DenseVec],
+    mode: ExecMode,
+    artifacts: Option<std::path::PathBuf>,
+) -> anyhow::Result<()> {
+    let coord = Coordinator::new(
+        corpus.to_vec(),
+        CoordinatorConfig {
+            n_shards: 4,
+            index: IndexKind::Vp,
+            bound: BoundKind::Mult,
+            mode,
+            batch: BatchConfig {
+                max_batch: 32,
+                max_wait: std::time::Duration::from_micros(500),
+                queue_depth: 2048,
+            },
+            artifact_dir: artifacts,
+            hybrid_pivots: 32,
+        },
+    )?;
+    let addr = server::serve(coord.clone(), "127.0.0.1:0")?;
+
+    let done = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let queries: Vec<Vec<f32>> = (0..QUERIES_PER_CLIENT)
+            .map(|i| queries[(c * QUERIES_PER_CLIENT + i) % queries.len()].as_slice().to_vec())
+            .collect();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+            let mut client = server::Client::connect(addr)?;
+            let mut lat_us = Vec::with_capacity(queries.len());
+            for v in queries {
+                let q0 = Instant::now();
+                let resp = client.request(&Request::Knn { vector: v, k: K })?;
+                lat_us.push(q0.elapsed().as_micros() as u64);
+                match resp {
+                    Response::Ok { hits, .. } => assert_eq!(hits.len(), K),
+                    other => anyhow::bail!("bad response: {other:?}"),
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(lat_us)
+        }));
+    }
+    let mut latencies: Vec<u64> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().expect("client thread")?);
+    }
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    let total = latencies.len();
+    let pct = |p: f64| latencies[((total as f64 * p) as usize).min(total - 1)];
+    let stats = coord.stats();
+    println!(
+        "  mode={mode:?}: {total} queries in {wall:.2?} -> {:.0} qps | \
+         p50={}us p95={}us p99={}us max={}us",
+        total as f64 / wall.as_secs_f64(),
+        pct(0.50),
+        pct(0.95),
+        pct(0.99),
+        latencies[total - 1],
+    );
+    println!(
+        "         batches={} (avg {:.1} q/batch) engine_calls={} sim_evals={} ({:.2}% of brute force)",
+        stats.batches,
+        stats.queries as f64 / stats.batches.max(1) as f64,
+        stats.engine_calls,
+        stats.sim_evals,
+        100.0 * stats.sim_evals as f64 / (stats.queries as f64 * N as f64),
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "E2E serving benchmark: n={N} dim={DIM}, {CLIENTS} closed-loop clients x \
+         {QUERIES_PER_CLIENT} queries, k={K}"
+    );
+    println!("generating corpus ...");
+    let (corpus, _) = vmf_mixture(&VmfSpec {
+        n: N,
+        dim: DIM,
+        // kappa=800 at d=128 => within-cluster sims ~0.92: the clustered
+        // regime where exact cosine pruning engages (see pruning_study).
+        clusters: 128,
+        kappa: 800.0,
+        seed: 42,
+    });
+    // Queries: corpus members spread across the id range — the "find items
+    // most similar to this item" workload (every query has dense cluster
+    // neighborhoods, so index pruning has something to work with).
+    let queries: Vec<DenseVec> = (0..CLIENTS * QUERIES_PER_CLIENT)
+        .map(|i| corpus[(i * 23) % N].clone())
+        .collect();
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = artifacts.join("manifest.json").exists();
+
+    println!("\n== scalar index path (VP-tree, Mult bound) ==");
+    run_mode(&corpus, &queries, ExecMode::Index, None)?;
+
+    if have_artifacts {
+        println!("\n== batched PJRT engine path (exhaustive artifact scoring) ==");
+        run_mode(&corpus, &queries, ExecMode::Engine, Some(artifacts.clone()))?;
+        println!("\n== hybrid path (PJRT pivot_filter + exact re-score) ==");
+        run_mode(&corpus, &queries, ExecMode::Hybrid, Some(artifacts))?;
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the engine/hybrid modes)");
+    }
+    Ok(())
+}

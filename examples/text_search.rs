@@ -1,0 +1,111 @@
+//! Sparse text search: tf-idf corpus + LAESA pivot filtering — the paper's
+//! motivating workload (cosine over sparse text vectors, §2).
+//!
+//!     cargo run --release --example text_search
+
+use simetra::bounds::BoundKind;
+use simetra::data::{zipf_corpus, ZipfSpec};
+use simetra::index::{Laesa, LinearScan, QueryStats, SimilarityIndex};
+
+fn main() {
+    // Synthetic tf-idf corpus: 20k docs, 50k-term vocabulary, Zipf terms
+    // with topic structure.
+    let spec = ZipfSpec {
+        n_docs: 20_000,
+        vocab: 50_000,
+        exponent: 1.07,
+        doc_len: 150,
+        seed: 9,
+        topics: 40,
+    };
+    println!("generating {} tf-idf docs (vocab {}) ...", spec.n_docs, spec.vocab);
+    let docs = zipf_corpus(&spec);
+    let avg_nnz: f64 =
+        docs.iter().map(|d| d.nnz() as f64).sum::<f64>() / docs.len() as f64;
+    println!("average non-zeros per doc: {avg_nnz:.1}");
+
+    // LAESA with 48 pivots: the merge-join dot product of §2 is the exact
+    // scorer; the paper's bounds prune candidates per pivot.
+    let t0 = std::time::Instant::now();
+    let index = Laesa::build(docs.clone(), BoundKind::Mult, 48);
+    println!("built LAESA ({} pivots) in {:?}", index.n_pivots(), t0.elapsed());
+
+    let linear = LinearScan::build(docs.clone());
+    let mut total_idx = QueryStats::default();
+    let mut total_lin = QueryStats::default();
+    let queries = [5usize, 1234, 7777, 19_999];
+    for &qi in &queries {
+        let q = &docs[qi];
+        let mut stats = QueryStats::default();
+        let t0 = std::time::Instant::now();
+        let hits = index.knn(q, 10, &mut stats);
+        let dt = t0.elapsed();
+
+        let mut lin_stats = QueryStats::default();
+        let lin_hits = linear.knn(q, 10, &mut lin_stats);
+        for ((_, a), (_, b)) in hits.iter().zip(&lin_hits) {
+            assert!((a - b).abs() < 1e-12, "exactness violated");
+        }
+        println!(
+            "\nquery doc {qi}: 10-NN in {dt:?}, {}/{} docs scored ({} pruned)",
+            stats.sim_evals,
+            docs.len(),
+            stats.pruned
+        );
+        for (rank, (id, sim)) in hits.iter().take(5).enumerate() {
+            println!("  #{rank} doc={id:<6} sim={sim:.4}");
+        }
+        total_idx.merge(&stats);
+        total_lin.merge(&lin_stats);
+    }
+    println!(
+        "\ntotal: {} vs {} exact scores ({:.2}x)",
+        total_idx.sim_evals,
+        total_lin.sim_evals,
+        total_lin.sim_evals as f64 / total_idx.sim_evals as f64
+    );
+    println!(
+        "\nNote: sparse text lives in the near-orthogonal regime (neighbor sims\n\
+         ~0.1-0.3), where Eq. 13 through any far pivot is vacuous — exact\n\
+         cosine indexes cannot prune here (paper section 2's concentration\n\
+         discussion; this is why approximate methods dominate text retrieval).\n\
+         What the sparse substrate buys is the merge-join scorer itself:\n\
+         each exact evaluation touches ~{:.0} nonzeros instead of {} dims.",
+        2.0 * docs.iter().map(|d| d.nnz() as f64).sum::<f64>() / docs.len() as f64,
+        spec.vocab
+    );
+
+    // Where the bounds DO pay off for text: near-duplicate detection.
+    // Append perturbed copies of some docs and range-query at high tau.
+    println!("\n== near-duplicate detection (range tau=0.85) ==");
+    let mut with_dups = docs.clone();
+    for src in (0..200).map(|i| i * 97) {
+        // A duplicate: same doc with a few entries dropped (truncation).
+        let orig: Vec<(u32, f32)> = docs[src].iter().collect();
+        let cut = orig.len() - orig.len() / 10;
+        with_dups.push(simetra::sparse::SparseVec::new(
+            orig.into_iter().take(cut).collect(),
+            docs[src].dim(),
+        ));
+    }
+    let dup_index = Laesa::build(with_dups.clone(), BoundKind::Mult, 48);
+    let mut stats = QueryStats::default();
+    let mut found = 0;
+    for src in (0..200).map(|i| i * 97) {
+        let hits = dup_index.range(&with_dups[src], 0.85, &mut stats);
+        found += hits.iter().filter(|&&(id, _)| id as usize != src).count();
+    }
+    println!(
+        "found {found}/200 near-duplicates with {} exact scores\n\
+         ({:.1}% of brute force)",
+        stats.sim_evals,
+        100.0 * stats.sim_evals as f64 / (200.0 * with_dups.len() as f64)
+    );
+    println!(
+        "\nEven here pruning is marginal: a pivot can only certify ub < tau for\n\
+         a candidate if one leg through it is strongly similar, and spread-out\n\
+         pivots on near-orthogonal data never are. Exact results + the sparse\n\
+         scorer are the value on text; the pruning wins live in the clustered\n\
+         embedding regime (see examples/pruning_study.rs)."
+    );
+}

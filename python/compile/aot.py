@@ -1,0 +1,152 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT `lowered.compile().serialize()` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's bundled xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser re-assigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/.
+
+Each entry point is lowered at a fixed set of padded shapes (the "variants"
+the coordinator's batcher fills); `artifacts/manifest.json` records every
+variant's entry name, file, input/output shapes and dtypes so the rust side
+never hard-codes a shape.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (Q, N, D, K) variants of the score_topk artifact. N is the corpus-shard
+# tile the scheduler re-ranks at once; Q the padded query batch.
+SCORE_VARIANTS = [
+    (8, 1024, 128, 16),
+    (8, 8192, 128, 16),
+    (16, 8192, 128, 16),
+    (32, 4096, 128, 16),
+    (32, 8192, 128, 32),
+    (64, 8192, 128, 32),
+]
+# (Q, P, N) variants of the pivot_filter artifact.
+PIVOT_VARIANTS = [
+    (8, 16, 1024),
+    (32, 32, 4096),
+]
+# (Q, N, D) variants of the full score_matrix artifact (figures + re-rank).
+MATRIX_VARIANTS = [
+    (8, 1024, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_score_topk(q, n, d, k):
+    fn = functools.partial(model.score_topk, k=k)
+    lowered = jax.jit(fn).lower(
+        _spec((q, d)), _spec((n, d)), _spec((), jnp.int32))
+    return lowered, {
+        "entry": "score_topk",
+        "inputs": [
+            {"name": "queries", "shape": [q, d], "dtype": "f32"},
+            {"name": "corpus", "shape": [n, d], "dtype": "f32"},
+            {"name": "valid_n", "shape": [], "dtype": "i32"},
+        ],
+        "outputs": [
+            {"name": "values", "shape": [q, k], "dtype": "f32"},
+            {"name": "indices", "shape": [q, k], "dtype": "i32"},
+        ],
+        "params": {"q": q, "n": n, "d": d, "k": k},
+    }
+
+
+def lower_score_matrix(q, n, d):
+    lowered = jax.jit(lambda a, b: (model.score_matrix(a, b),)).lower(
+        _spec((q, d)), _spec((n, d)))
+    return lowered, {
+        "entry": "score_matrix",
+        "inputs": [
+            {"name": "queries", "shape": [q, d], "dtype": "f32"},
+            {"name": "corpus", "shape": [n, d], "dtype": "f32"},
+        ],
+        "outputs": [{"name": "scores", "shape": [q, n], "dtype": "f32"}],
+        "params": {"q": q, "n": n, "d": d},
+    }
+
+
+def lower_pivot_filter(q, p, n):
+    lowered = jax.jit(model.pivot_filter).lower(
+        _spec((q, p)), _spec((p, n)))
+    return lowered, {
+        "entry": "pivot_filter",
+        "inputs": [
+            {"name": "sim_qp", "shape": [q, p], "dtype": "f32"},
+            {"name": "sim_pc", "shape": [p, n], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "lb", "shape": [q, n], "dtype": "f32"},
+            {"name": "ub", "shape": [q, n], "dtype": "f32"},
+        ],
+        "params": {"q": q, "p": p, "n": n},
+    }
+
+
+def build_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    jobs = []
+    for q, n, d, k in SCORE_VARIANTS:
+        jobs.append((f"score_topk_q{q}_n{n}_d{d}_k{k}",
+                     lower_score_topk(q, n, d, k)))
+    for q, p, n in PIVOT_VARIANTS:
+        jobs.append((f"pivot_filter_q{q}_p{p}_n{n}",
+                     lower_pivot_filter(q, p, n)))
+    for q, n, d in MATRIX_VARIANTS:
+        jobs.append((f"score_matrix_q{q}_n{n}_d{d}",
+                     lower_score_matrix(q, n, d)))
+
+    for name, (lowered, meta) in jobs:
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        meta["file"] = path
+        meta["name"] = name
+        entries.append(meta)
+        print(f"  {path}: {len(text)} chars")
+
+    manifest = {"version": 1, "pad_score": model.PAD_SCORE,
+                "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: tiled cosine-similarity matrix with fused normalization.
+
+The serving hot-spot is scoring a batch of queries against a corpus shard:
+an (M, D) x (N, D) -> (M, N) contraction followed by a rank-1 scaling by the
+inverse norms. On a real TPU this is an MXU problem; we tile the output in
+(BM, BN) blocks held in VMEM, iterate the contraction dimension in BK steps
+(k is the innermost grid axis so each output block is revisited
+sequentially), and fuse the normalization into the final k step so the raw
+corpus never needs a separate normalization pass over HBM.
+
+Lowered with interpret=True: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically (DESIGN.md
+section "Perf").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On a real TPU a (128, 128) output tile per MXU pass is
+# canonical; here the same kernel must also execute tolerably under
+# interpret=True on CPU, where every grid step becomes one iteration of an
+# XLA while-loop — so we use large tiles (few steps) that still fit VMEM:
+# q-tile 128x512 (256 KiB) + c-tile 2048x512 (4 MiB) + out 128x2048 (1 MiB)
+# = ~5.3 MiB live, ~11 MiB double-buffered, inside a TensorCore's ~16 MiB.
+# See DESIGN.md "Perf" for the grid-step-count analysis.
+BM, BN, BK = 128, 2048, 512
+
+
+def _cosine_kernel(q_ref, c_ref, qinv_ref, cinv_ref, o_ref, *, nk):
+    """One (BM, BN) output tile; accumulates over the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BM, BK) x (BN, BK) -> (BM, BN), contracting the trailing dims. The
+    # corpus block is kept row-major (N, D) so both operand tiles stream
+    # from HBM with unit stride.
+    o_ref[...] += jax.lax.dot_general(
+        q_ref[...], c_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        # Fused normalization: scores = (q . c) / (|q| |c|).
+        o_ref[...] *= qinv_ref[...][:, None] * cinv_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def cosine_scores_kernel(queries, corpus, q_inv_norms, c_inv_norms,
+                         bm=BM, bn=BN, bk=BK):
+    """Cosine-similarity matrix via the Pallas kernel.
+
+    queries: (M, D) raw (un-normalized) vectors; corpus: (N, D);
+    q_inv_norms: (M,) 1/|q| (0 for zero rows); c_inv_norms: (N,).
+    M, N, D must be multiples of the block sizes (the L2 graph in
+    model.py pads and masks); returns (M, N) f32 scores.
+    """
+    m, d = queries.shape
+    n, d2 = corpus.shape
+    assert d == d2, (d, d2)
+    assert m % bm == 0 and n % bn == 0 and d % bk == 0, (m, n, d, bm, bn, bk)
+    nk = d // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_cosine_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bm,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(queries, corpus, q_inv_norms, c_inv_norms)

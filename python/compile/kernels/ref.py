@@ -1,0 +1,105 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the pytest
+suite asserts `assert_allclose(kernel(...), ref(...))` over a hypothesis
+sweep of shapes. These functions are also the L2 building blocks the AOT
+graphs are validated against.
+
+Bound equations follow the paper's Table 1 numbering (Schubert, SISAP 2021):
+  Eq. 7  Euclidean      Eq. 8  Eucl-LB      Eq. 9  Arccos
+  Eq.10  Mult           Eq.11  Mult-LB1     Eq.12  Mult-LB2
+  Eq.13  Mult upper bound
+"""
+
+import jax.numpy as jnp
+
+
+def normalize(x, eps=0.0):
+    """L2-normalize rows; zero rows stay zero (guarded reciprocal)."""
+    norms = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    inv = jnp.where(norms > eps, 1.0 / jnp.maximum(norms, 1e-30), 0.0)
+    return x * inv
+
+
+def cosine_scores(queries, corpus):
+    """Full cosine-similarity matrix: (Q, D) x (N, D) -> (Q, N)."""
+    q = normalize(queries)
+    c = normalize(corpus)
+    return q @ c.T
+
+
+# --- Triangle-inequality bounds (element-wise over arrays of s1, s2) ------
+
+def lb_euclidean(s1, s2):
+    """Eq. 7: bound via the Euclidean triangle inequality on the sphere."""
+    r1 = jnp.sqrt(jnp.maximum(1.0 - s1, 0.0))
+    r2 = jnp.sqrt(jnp.maximum(1.0 - s2, 0.0))
+    return s1 + s2 - 1.0 - 2.0 * r1 * r2
+
+
+def lb_eucl_lb(s1, s2):
+    """Eq. 8: cheap approximation of Eq. 7 using min(s1, s2)."""
+    return s1 + s2 + 2.0 * jnp.minimum(s1, s2) - 3.0
+
+
+def lb_arccos(s1, s2):
+    """Eq. 9: the tight bound via arc lengths (expensive trig form)."""
+    a1 = jnp.arccos(jnp.clip(s1, -1.0, 1.0))
+    a2 = jnp.arccos(jnp.clip(s2, -1.0, 1.0))
+    # cos is even and 2pi-periodic; the sum of two arccos is in [0, 2pi],
+    # matching the paper's Eq. 9 exactly.
+    return jnp.cos(a1 + a2)
+
+
+def _mult_radical(s1, s2):
+    return jnp.sqrt(jnp.maximum((1.0 - s1 * s1) * (1.0 - s2 * s2), 0.0))
+
+
+def lb_mult(s1, s2):
+    """Eq. 10: the recommended lower bound (= Eq. 9, trig-free)."""
+    return s1 * s2 - _mult_radical(s1, s2)
+
+
+def ub_mult(s1, s2):
+    """Eq. 13: the recommended upper bound (opposite direction)."""
+    return s1 * s2 + _mult_radical(s1, s2)
+
+
+def lb_mult_lb1(s1, s2):
+    """Eq. 11: cheap approximation of Eq. 10 using the smaller similarity."""
+    return s1 * s2 + jnp.minimum(s1 * s1, s2 * s2) - 1.0
+
+
+def lb_mult_lb2(s1, s2):
+    """Eq. 12: min/max expansion of Eq. 10 (strictly inferior to Eq. 11)."""
+    return 2.0 * s1 * s2 - jnp.abs(s1 - s2) - 1.0
+
+
+def bounds_mult(s1, s2):
+    """(lower, upper) pair of the recommended Eqs. 10/13."""
+    prod = s1 * s2
+    rad = _mult_radical(s1, s2)
+    return prod - rad, prod + rad
+
+
+# --- LAESA-style pivot pruning --------------------------------------------
+
+def pivot_bounds(sim_qp, sim_pc):
+    """Combine per-pivot bounds on sim(q, c).
+
+    sim_qp: (Q, P) similarities query->pivot; sim_pc: (P, N) pivot->corpus.
+    Returns (lb, ub) of shape (Q, N): lb = max over pivots of Eq. 10,
+    ub = min over pivots of Eq. 13 (each pivot gives a valid bound; the
+    intersection is the tightest certified interval).
+    """
+    s1 = sim_qp[:, :, None]  # (Q, P, 1)
+    s2 = sim_pc[None, :, :]  # (1, P, N)
+    lb, ub = bounds_mult(s1, s2)
+    return jnp.max(lb, axis=1), jnp.min(ub, axis=1)
+
+
+def topk(scores, k):
+    """Reference top-k by full sort: returns (values, indices)."""
+    idx = jnp.argsort(-scores, axis=-1)[..., :k]
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx

@@ -1,0 +1,115 @@
+"""L2: JAX compute graphs for the simetra serving engine.
+
+These are the functions `aot.py` lowers to HLO text; the rust coordinator
+executes the compiled artifacts on its PJRT CPU client. Everything here is
+shape-static: the coordinator picks an artifact variant (padded batch shape)
+from the manifest and pads/masks on the rust side only when a request batch
+underfills it — the padding *semantics* (zero vectors score PAD_SCORE, below
+any real cosine) are fixed here so both sides agree.
+
+Graphs:
+  score_topk   : raw queries + raw corpus -> (top-k values, top-k indices)
+  score_matrix : raw queries + raw corpus -> full (Q, N) similarity matrix
+  pivot_filter : pivot similarity tables -> certified (lb, ub) per (q, c)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bounds as bounds_kernel
+from compile.kernels import cosine as cosine_kernel
+
+# Scores of padding columns: strictly below the cosine range [-1, 1] so a
+# padded slot can never enter a top-k result.
+PAD_SCORE = -2.0
+
+
+def _inv_norms(x):
+    """Row-wise 1/|x| with zero rows mapping to 0 (=> zero scores)."""
+    sq = jnp.sum(x * x, axis=-1)
+    return jnp.where(sq > 0.0, jax.lax.rsqrt(jnp.maximum(sq, 1e-30)), 0.0)
+
+
+def _pad_to(x, m, axis):
+    pad = m - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pad_up(n, b):
+    return (n + b - 1) // b * b
+
+
+def score_matrix(queries, corpus, valid_n=None):
+    """Full (Q, N) cosine matrix via the Pallas kernel, handling padding.
+
+    valid_n: number of real corpus rows; columns >= valid_n get PAD_SCORE.
+    """
+    m, d = queries.shape
+    n, _ = corpus.shape
+    bm = min(cosine_kernel.BM, _pad_up(m, 8))
+    bn = min(cosine_kernel.BN, _pad_up(n, 128))
+    # bk must divide the padded d; prefer the largest MXU-friendly tile.
+    dp128 = _pad_up(d, 128)
+    bk = next(c for c in (512, 384, 256, 128) if c <= cosine_kernel.BK
+              and (dp128 % c == 0 or c >= dp128))
+    bk = min(bk, dp128)
+    mp, np_, dp = _pad_up(m, bm), _pad_up(n, bn), _pad_up(dp128, bk)
+    q = _pad_to(_pad_to(queries, mp, 0), dp, 1)
+    c = _pad_to(_pad_to(corpus, np_, 0), dp, 1)
+    scores = cosine_kernel.cosine_scores_kernel(
+        q, c, _inv_norms(q), _inv_norms(c), bm=bm, bn=bn, bk=bk)
+    scores = scores[:m, :n]
+    if valid_n is not None:
+        col = jax.lax.broadcasted_iota(jnp.int32, (m, n), 1)
+        scores = jnp.where(col < valid_n, scores, PAD_SCORE)
+    return scores
+
+
+def score_topk(queries, corpus, valid_n, k):
+    """Top-k corpus entries per query: ((Q, k) values, (Q, k) i32 indices).
+
+    Implemented with a full descending sort rather than `jax.lax.top_k`:
+    top_k lowers to the HLO `topk(..., largest=true)` instruction, which the
+    runtime's XLA (xla_extension 0.5.1 text parser) predates. `sort` with a
+    custom comparator round-trips fine and XLA fuses the slice.
+    """
+    scores = score_matrix(queries, corpus, valid_n=valid_n)
+    idx = jnp.argsort(-scores, axis=-1)[:, :k].astype(jnp.int32)
+    vals = jnp.take_along_axis(scores, idx, axis=-1)
+    return vals, idx
+
+
+def pivot_filter(sim_qp, sim_pc):
+    """LAESA pivot filtering: certified similarity intervals per (q, c).
+
+    sim_qp: (Q, P) exact sims query->pivot; sim_pc: (P, N) precomputed
+    pivot->corpus table. Per pivot, Eqs. 10/13 certify an interval on
+    sim(q, c); intersecting over pivots gives (max lb, min ub) — the rust
+    scheduler prunes candidates whose ub < tau (range) or < heap floor (kNN).
+    """
+    q, p = sim_qp.shape
+    p2, n = sim_pc.shape
+    assert p == p2, (p, p2)
+    s1 = jnp.broadcast_to(sim_qp[:, :, None], (q, p, n)).reshape(-1)
+    s2 = jnp.broadcast_to(sim_pc[None, :, :], (q, p, n)).reshape(-1)
+    total = q * p * n
+    # Interpret-mode grid steps carry the full output through an XLA
+    # while-loop (one dynamic-update-slice copy per step), so the CPU
+    # artifact wants exactly one step whenever the array fits comfortably
+    # in host memory. A real-TPU build would instead fix
+    # block = bounds_kernel.BLOCK (VMEM-sized) and let the grid stream.
+    if total <= (1 << 23):
+        block = _pad_up(total, 128)
+    else:
+        block = 1 << 23
+    padded = _pad_up(total, block)
+    s1 = _pad_to(s1, padded, 0)
+    s2 = _pad_to(s2, padded, 0)
+    lb, ub = bounds_kernel.mult_bounds_kernel(s1, s2, block=block)
+    lb = lb[:total].reshape(q, p, n)
+    ub = ub[:total].reshape(q, p, n)
+    return jnp.max(lb, axis=1), jnp.min(ub, axis=1)

@@ -1,0 +1,118 @@
+"""Mathematical properties of the paper's bounds (hypothesis, f64).
+
+These are the paper's core claims, checked as executable properties:
+  * validity  — every lower bound <= sim(x,y) <= upper bound, for real
+    unit-vector triples (not just grid values);
+  * tightness — the Mult bound (Eq. 10) equals the Arccos bound (Eq. 9)
+    to f64 roundoff (paper section 4.2 / Fig. 5);
+  * partial order (Fig. 3):
+      Eucl-LB <= Euclidean <= Arccos = Mult
+      Eucl-LB <= Mult-LB2 <= Mult-LB1 <= Mult
+"""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+ALL_LOWER = [
+    ref.lb_euclidean, ref.lb_eucl_lb, ref.lb_arccos,
+    ref.lb_mult, ref.lb_mult_lb1, ref.lb_mult_lb2,
+]
+
+
+def _unit(v):
+    return v / np.linalg.norm(v)
+
+
+def _triple(seed, dim):
+    rng = np.random.default_rng(seed)
+    x, y, z = (_unit(rng.standard_normal(dim)) for _ in range(3))
+    return x, y, z
+
+
+@settings(max_examples=200, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dim=st.integers(2, 64))
+def test_all_lower_bounds_valid_on_unit_vectors(seed, dim):
+    x, y, z = _triple(seed, dim)
+    sxy, sxz, szy = x @ y, x @ z, z @ y
+    for lb in ALL_LOWER:
+        b = float(lb(np.float64(sxz), np.float64(szy)))
+        assert b <= sxy + 1e-9, (lb.__name__, b, sxy)
+
+
+@settings(max_examples=200, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), dim=st.integers(2, 64))
+def test_upper_bound_valid_on_unit_vectors(seed, dim):
+    x, y, z = _triple(seed, dim)
+    sxy, sxz, szy = x @ y, x @ z, z @ y
+    ub = float(ref.ub_mult(np.float64(sxz), np.float64(szy)))
+    assert ub >= sxy - 1e-9
+
+
+@settings(max_examples=300, deadline=None)
+@given(s1=st.floats(-1, 1), s2=st.floats(-1, 1))
+def test_partial_order_fig3(s1, s2):
+    s1, s2 = np.float64(s1), np.float64(s2)
+    eucl = float(ref.lb_euclidean(s1, s2))
+    eucl_lb = float(ref.lb_eucl_lb(s1, s2))
+    arcc = float(ref.lb_arccos(s1, s2))
+    mult = float(ref.lb_mult(s1, s2))
+    lb1 = float(ref.lb_mult_lb1(s1, s2))
+    lb2 = float(ref.lb_mult_lb2(s1, s2))
+    eps = 1e-12
+    assert eucl_lb <= eucl + eps
+    assert eucl <= arcc + eps
+    assert eucl_lb <= lb2 + eps
+    assert lb2 <= lb1 + eps
+    assert lb1 <= mult + eps
+
+
+@settings(max_examples=300, deadline=None)
+@given(s1=st.floats(-1, 1), s2=st.floats(-1, 1))
+def test_mult_equals_arccos_fig5(s1, s2):
+    """Fig. 5: |Mult - Arccos| at the limit of f64 precision (~1e-16)."""
+    mult = float(ref.lb_mult(np.float64(s1), np.float64(s2)))
+    arcc = float(ref.lb_arccos(np.float64(s1), np.float64(s2)))
+    assert abs(mult - arcc) < 5e-15
+
+
+def test_paper_anchor_values():
+    """Spot values the paper calls out explicitly."""
+    # Inputs 0.5/0.5 (60 deg + 60 deg): the gap between the bounds peaks at
+    # 0.5 (Fig. 1c): Euclidean gives -1, Arccos/Mult gives cos(120 deg) = -0.5.
+    np.testing.assert_allclose(float(ref.lb_mult(0.5, 0.5)), -0.5, atol=1e-12)
+    np.testing.assert_allclose(
+        float(ref.lb_euclidean(0.5, 0.5)), -1.0, atol=1e-12)
+    # Worst case of the Euclidean bound: opposite-opposite gives -7 while
+    # the true similarity is +1 (Fig. 1 discussion).
+    np.testing.assert_allclose(
+        float(ref.lb_euclidean(-1.0, -1.0)), -7.0, atol=1e-12)
+    np.testing.assert_allclose(float(ref.lb_mult(-1.0, -1.0)), 1.0, atol=1e-12)
+    # Chained identical points: knowing sim=1 to z pins sim(x,y) exactly.
+    np.testing.assert_allclose(float(ref.lb_mult(1.0, 0.3)), 0.3, atol=1e-12)
+    np.testing.assert_allclose(float(ref.ub_mult(1.0, 0.3)), 0.3, atol=1e-12)
+
+
+def test_grid_average_statistic_section41():
+    """Paper section 4.1: avg Euclid ~ 0.2447, avg Arccos ~ 0.3121 (+27.5%).
+
+    Reverse-engineered protocol that reproduces the printed values: uniform
+    grid over the non-negative domain [0, 1]^2, averaging each bound over
+    the cells where the (tight) Arccos bound is non-negative. At a 401-point
+    grid this gives 0.2454 / 0.3126, ratio +27.4% — matching the paper to
+    grid resolution.
+    """
+    g = np.linspace(0.0, 1.0, 401)
+    s1, s2 = np.meshgrid(g, g)
+    eucl = np.asarray(ref.lb_euclidean(s1, s2))
+    mult = np.asarray(ref.lb_mult(s1, s2))
+    mask = mult >= 0
+    avg_e, avg_m = eucl[mask].mean(), mult[mask].mean()
+    assert abs(avg_e - 0.2447) < 2e-3, avg_e
+    assert abs(avg_m - 0.3121) < 2e-3, avg_m
+    ratio = (avg_m - avg_e) / avg_e
+    assert abs(ratio - 0.275) < 0.01, ratio

@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes (and the bound kernels' value domain); every case
+asserts allclose against `kernels.ref`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bounds as bounds_kernel
+from compile.kernels import cosine as cosine_kernel
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+# --- cosine kernel ---------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mb=st.integers(1, 3), nb=st.integers(1, 3), kb=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cosine_kernel_matches_ref(mb, nb, kb, seed):
+    """Block-multiple shapes: kernel == normalized matmul reference."""
+    bm, bn, bk = 8, 128, 128
+    m, n, d = mb * bm, nb * bn, kb * bk
+    rng = np.random.default_rng(seed)
+    q, c = _rand(rng, m, d), _rand(rng, n, d)
+    qi = 1.0 / jnp.linalg.norm(q, axis=1)
+    ci = 1.0 / jnp.linalg.norm(c, axis=1)
+    got = cosine_kernel.cosine_scores_kernel(q, c, qi, ci, bm=bm, bn=bn, bk=bk)
+    want = ref.cosine_scores(q, c)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_cosine_kernel_multi_k_accumulation():
+    """d > bk exercises the k-axis accumulate-then-epilogue path."""
+    rng = np.random.default_rng(0)
+    q, c = _rand(rng, 8, 512), _rand(rng, 128, 512)
+    qi = 1.0 / jnp.linalg.norm(q, axis=1)
+    ci = 1.0 / jnp.linalg.norm(c, axis=1)
+    got = cosine_kernel.cosine_scores_kernel(q, c, qi, ci, bm=8, bn=128, bk=128)
+    np.testing.assert_allclose(got, ref.cosine_scores(q, c), atol=2e-5)
+
+
+def test_cosine_kernel_zero_row_guard():
+    """Zero inv-norm rows must produce zero scores, not NaN."""
+    rng = np.random.default_rng(1)
+    q = np.asarray(rng.standard_normal((8, 128)), dtype=np.float32)
+    q[3] = 0.0
+    c = _rand(rng, 128, 128)
+    qn = np.linalg.norm(q, axis=1)
+    qi = jnp.asarray(np.where(qn > 0, 1.0 / np.where(qn > 0, qn, 1), 0.0),
+                     dtype=jnp.float32)
+    ci = 1.0 / jnp.linalg.norm(c, axis=1)
+    got = cosine_kernel.cosine_scores_kernel(
+        jnp.asarray(q), c, qi, ci, bm=8, bn=128, bk=128)
+    assert not np.any(np.isnan(got))
+    np.testing.assert_allclose(got[3], np.zeros(128), atol=1e-7)
+
+
+def test_cosine_kernel_rejects_unaligned():
+    rng = np.random.default_rng(2)
+    q, c = _rand(rng, 7, 128), _rand(rng, 128, 128)
+    with pytest.raises(AssertionError):
+        cosine_kernel.cosine_scores_kernel(
+            q, c, jnp.ones(7), jnp.ones(128), bm=8, bn=128, bk=128)
+
+
+def test_cosine_kernel_self_similarity_is_one():
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 128, 128)
+    xi = 1.0 / jnp.linalg.norm(x, axis=1)
+    got = cosine_kernel.cosine_scores_kernel(x, x, xi, xi, bm=128, bn=128, bk=128)
+    np.testing.assert_allclose(np.diag(got), np.ones(128), atol=2e-6)
+
+
+# --- bounds kernel ---------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([8, 128, 1024]),
+)
+def test_bounds_kernel_matches_ref(blocks, seed, block):
+    rng = np.random.default_rng(seed)
+    n = blocks * block
+    s1 = jnp.asarray(rng.uniform(-1, 1, n), dtype=jnp.float32)
+    s2 = jnp.asarray(rng.uniform(-1, 1, n), dtype=jnp.float32)
+    lb, ub = bounds_kernel.mult_bounds_kernel(s1, s2, block=block)
+    wlb, wub = ref.bounds_mult(s1, s2)
+    np.testing.assert_allclose(lb, wlb, atol=1e-6)
+    np.testing.assert_allclose(ub, wub, atol=1e-6)
+
+
+def test_bounds_kernel_edge_values():
+    """|s| = 1 exactly: radical must be exactly 0, no NaN from roundoff."""
+    s1 = jnp.asarray([1.0, -1.0, 1.0, -1.0, 0.0, 1.0, 0.5, 0.5], jnp.float32)
+    s2 = jnp.asarray([1.0, -1.0, -1.0, 1.0, 0.0, 0.0, 0.5, -0.5], jnp.float32)
+    lb, ub = bounds_kernel.mult_bounds_kernel(s1, s2, block=8)
+    assert not np.any(np.isnan(lb)) and not np.any(np.isnan(ub))
+    # sim(x,z)=sim(z,y)=1 => x == y on the sphere => sim(x,y) == 1 exactly.
+    np.testing.assert_allclose(lb[0], 1.0, atol=1e-7)
+    np.testing.assert_allclose(ub[0], 1.0, atol=1e-7)
+    # opposite-opposite => identical: lb = ub = 1.
+    np.testing.assert_allclose(lb[1], 1.0, atol=1e-7)
+    # one similarity 0 => interval [-sqrt(1-s^2).., ..] symmetric around 0*s.
+    np.testing.assert_allclose(lb[5], 0.0, atol=1e-7)
+    np.testing.assert_allclose(ub[5], 0.0, atol=1e-7)
+
+
+def test_bounds_kernel_rejects_mismatched_block():
+    s = jnp.zeros(12, jnp.float32)
+    with pytest.raises(AssertionError):
+        bounds_kernel.mult_bounds_kernel(s, s, block=8)

@@ -1,0 +1,97 @@
+//! Runtime bench: batched PJRT artifact scoring vs the native scalar loop —
+//! the L1/L2 hot path measured from the L3 side, plus the pivot_filter
+//! artifact. Skips (with a note) when artifacts/ is missing.
+//!
+//!     make artifacts && cargo bench --bench batch_scoring
+
+use simetra::data::uniform_sphere;
+use simetra::index::KnnHeap;
+use simetra::metrics::SimVector;
+use simetra::runtime::Engine;
+use simetra::util::bench::{bench, black_box, report, BenchConfig};
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("skipping: artifacts/ missing (run `make artifacts`)");
+        return;
+    }
+    let cfg = BenchConfig::from_env();
+    let engine = Engine::load(&dir).expect("engine load");
+    println!("platform: {}\n", engine.platform());
+
+    for (q, n, d, k) in [(8usize, 1024usize, 128usize, 16usize), (32, 4096, 128, 16), (64, 8192, 128, 32)] {
+        let corpus = uniform_sphere(n, d, 31);
+        let queries = uniform_sphere(q, d, 32);
+        let qflat: Vec<f32> = queries.iter().flat_map(|v| v.as_slice().to_vec()).collect();
+        let cflat: Vec<f32> = corpus.iter().flat_map(|v| v.as_slice().to_vec()).collect();
+
+        let ops = (q * n) as u64; // similarity evaluations per call
+        let m = bench(&cfg, &format!("pjrt score_topk q{q} n{n} k{k}"), ops, || {
+            black_box(engine.score_topk(&qflat, q, &cflat, n, d, k).unwrap())
+        });
+        report(&m);
+
+        // Native scalar equivalent: full scoring + heap.
+        let m2 = bench(&cfg, &format!("native scalar q{q} n{n} k{k}"), ops, || {
+            let mut out = Vec::with_capacity(q);
+            for qv in &queries {
+                let mut heap = KnnHeap::new(k);
+                for (i, cv) in corpus.iter().enumerate() {
+                    heap.offer(i as u32, qv.sim(cv));
+                }
+                out.push(heap.into_sorted());
+            }
+            black_box(out)
+        });
+        report(&m2);
+        println!(
+            "    -> engine/native ratio: {:.2}x per similarity\n",
+            m.mean_ns / m2.mean_ns
+        );
+    }
+
+    // pivot_filter artifact.
+    for (q, p, n) in [(8usize, 16usize, 1024usize), (32, 32, 4096)] {
+        let corpus = uniform_sphere(n, 64, 33);
+        let pivots = uniform_sphere(p, 64, 34);
+        let queries = uniform_sphere(q, 64, 35);
+        let sim_qp: Vec<f32> = queries
+            .iter()
+            .flat_map(|qv| pivots.iter().map(|pv| qv.sim(pv) as f32).collect::<Vec<_>>())
+            .collect();
+        let sim_pc: Vec<f32> = pivots
+            .iter()
+            .flat_map(|pv| corpus.iter().map(|cv| pv.sim(cv) as f32).collect::<Vec<_>>())
+            .collect();
+        let ops = (q * p * n) as u64; // bound evaluations per call
+        let m = bench(&cfg, &format!("pjrt pivot_filter q{q} p{p} n{n}"), ops, || {
+            black_box(engine.pivot_filter(&sim_qp, q, &sim_pc, p, n).unwrap())
+        });
+        report(&m);
+
+        // Native equivalent per bound evaluation.
+        let m2 = bench(&cfg, &format!("native bounds q{q} p{p} n{n}"), ops, || {
+            let mut acc = 0.0f32;
+            for qi in 0..q {
+                for ci in 0..n {
+                    let mut lo = -1.0f32;
+                    let mut hi = 1.0f32;
+                    for pi in 0..p {
+                        let s1 = sim_qp[qi * p + pi];
+                        let s2 = sim_pc[pi * n + ci];
+                        let prod = s1 * s2;
+                        let rad =
+                            (((1.0 - s1 * s1) * (1.0 - s2 * s2)).max(0.0)).sqrt();
+                        lo = lo.max(prod - rad);
+                        hi = hi.min(prod + rad);
+                    }
+                    acc += hi - lo;
+                }
+            }
+            black_box(acc)
+        });
+        report(&m2);
+        println!();
+    }
+}

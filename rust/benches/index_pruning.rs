@@ -1,0 +1,93 @@
+//! Experiment X1: pruning power AND wall-clock of the similarity-native
+//! indexes across bounds — the index integration the paper motivates.
+//! Complements examples/pruning_study.rs (which sweeps more workloads) with
+//! timed end-to-end query benchmarks on a fixed serving-like corpus.
+//!
+//!     cargo bench --bench index_pruning
+
+use simetra::bounds::BoundKind;
+use simetra::data::{vmf_mixture, VmfSpec};
+use simetra::index::{
+    BallTree, CoverTree, Gnat, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex, VpTree,
+};
+use simetra::metrics::DenseVec;
+use simetra::util::bench::{bench, black_box, report, BenchConfig};
+
+const N: usize = 30_000;
+const DIM: usize = 32;
+const K: usize = 10;
+const QUERY_ROT: usize = 64;
+
+fn bench_index(
+    cfg: &BenchConfig,
+    name: &str,
+    idx: &dyn SimilarityIndex<DenseVec>,
+    queries: &[DenseVec],
+) {
+    // Wall clock per kNN query.
+    let mut qi = 0usize;
+    let m = bench(cfg, &format!("{name} knn"), 1, || {
+        let mut stats = QueryStats::default();
+        qi = (qi + 1) % queries.len();
+        black_box(idx.knn(&queries[qi], K, &mut stats))
+    });
+    // Pruning power, measured separately (not timed).
+    let mut stats = QueryStats::default();
+    for q in queries {
+        idx.knn(q, K, &mut stats);
+    }
+    let pct = 100.0 * stats.sim_evals as f64 / (queries.len() * N) as f64;
+    report(&m);
+    println!("    -> {pct:.1}% of corpus exactly scored, {} subtrees pruned", stats.pruned);
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    println!("corpus: vMF n={N} d={DIM} clusters=50 kappa=80; k={K}\n");
+    let (pts, _) = vmf_mixture(&VmfSpec {
+        n: N,
+        dim: DIM,
+        clusters: 50,
+        kappa: 80.0,
+        seed: 21,
+    });
+    let (qs, _) = vmf_mixture(&VmfSpec {
+        n: QUERY_ROT,
+        dim: DIM,
+        clusters: 50,
+        kappa: 40.0,
+        seed: 22,
+    });
+
+    println!("== baseline ==");
+    let lin = LinearScan::build(pts.clone());
+    bench_index(&cfg, "linear", &lin, &qs);
+
+    println!("\n== index structures (Mult bound, Eq. 10/13) ==");
+    let vp = VpTree::build(pts.clone(), BoundKind::Mult, 7);
+    bench_index(&cfg, "vp-tree", &vp, &qs);
+    let ball = BallTree::build(pts.clone(), BoundKind::Mult, 16);
+    bench_index(&cfg, "ball-tree", &ball, &qs);
+    let mtree = MTree::build(pts.clone(), BoundKind::Mult, 12);
+    bench_index(&cfg, "m-tree", &mtree, &qs);
+    let cover = CoverTree::build(pts.clone(), BoundKind::Mult);
+    bench_index(&cfg, "cover-tree", &cover, &qs);
+    let laesa = Laesa::build(pts.clone(), BoundKind::Mult, 32);
+    bench_index(&cfg, "laesa-32", &laesa, &qs);
+    let gnat = Gnat::build(pts.clone(), BoundKind::Mult, 8);
+    bench_index(&cfg, "gnat", &gnat, &qs);
+
+    println!("\n== bound ablation on the vp-tree (same tree shape) ==");
+    for bound in [
+        BoundKind::Mult,
+        BoundKind::ArccosFast,
+        BoundKind::Arccos,
+        BoundKind::Euclidean,
+        BoundKind::MultLb1,
+        BoundKind::MultLb2,
+        BoundKind::EuclLb,
+    ] {
+        let idx = VpTree::build(pts.clone(), bound, 7);
+        bench_index(&cfg, &format!("vp-tree/{}", bound.name()), &idx, &qs);
+    }
+}

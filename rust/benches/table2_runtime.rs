@@ -1,0 +1,97 @@
+//! Table 2 reproduction: runtime of each bound equation over a pre-generated
+//! array of 2M random similarity pairs, JMH-style (warmup + measurement
+//! iterations), plus the baseline add to calibrate memory-access cost.
+//!
+//! Expected *shape* (the paper's testbed was Java/JMH on an i7-8650U; ours
+//! is rust on this container): Mult ~ Euclidean ~ the cheap bounds, all
+//! within ~2x of the add baseline; Arccos (libm trig) an order of magnitude
+//! slower; Arccos-fast (polynomial, the JaFaMa substitute) in between.
+//!
+//!     cargo bench --bench table2_runtime
+
+use simetra::bounds::lower::*;
+use simetra::bounds::upper::ub_mult;
+use simetra::util::bench::{bench, black_box, report, BenchConfig};
+use simetra::util::Rng;
+
+const PAIRS: usize = 2_000_000;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rng = Rng::seed_from_u64(42);
+    let s1: Vec<f64> = (0..PAIRS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let s2: Vec<f64> = (0..PAIRS).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+    println!("Table 2: per-evaluation cost over {PAIRS} pre-generated pairs");
+    println!("(paper: Mult 9.7ns ~ Euclid 10.4ns << Arccos 610ns; JaFaMa 59ns)\n");
+
+    macro_rules! row {
+        ($name:expr, $eq:expr, $f:expr) => {{
+            let f = $f;
+            let m = bench(&cfg, concat!($name, " (", $eq, ")"), PAIRS as u64, || {
+                let mut acc = 0.0f64;
+                for i in 0..PAIRS {
+                    acc += f(black_box(s1[i]), black_box(s2[i]));
+                }
+                acc
+            });
+            report(&m);
+            m
+        }};
+    }
+
+    let base = {
+        let m = bench(&cfg, "baseline (sum)", PAIRS as u64, || {
+            let mut acc = 0.0f64;
+            for i in 0..PAIRS {
+                acc += black_box(s1[i]) + black_box(s2[i]);
+            }
+            acc
+        });
+        report(&m);
+        m
+    };
+
+    let eucl = row!("Euclidean", "7", lb_euclidean);
+    let eucl_lb = row!("Eucl-LB", "8", lb_eucl_lb);
+    let arccos = row!("Arccos", "9", lb_arccos);
+    let arccos_fast = row!("Arccos-fast", "9*", lb_arccos_fast);
+    let mult = row!("Mult", "10", lb_mult);
+    let mult_var = row!("Mult-variant", "fn.2", lb_mult_variant);
+    let mult_lb1 = row!("Mult-LB1", "11", lb_mult_lb1);
+    let mult_lb2 = row!("Mult-LB2", "12", lb_mult_lb2);
+    let upper = row!("Mult-upper", "13", ub_mult);
+
+    println!("\n== shape checks vs the paper ==");
+    let ratio = arccos.mean_ns / mult.mean_ns;
+    println!("Arccos / Mult speed ratio: {ratio:.1}x (paper: ~63x)");
+    let fast_ratio = arccos.mean_ns / arccos_fast.mean_ns;
+    println!("Arccos / Arccos-fast:      {fast_ratio:.1}x (paper JaFaMa: ~10x)");
+    println!(
+        "Mult overhead over baseline: {:.1} ns (paper: ~1.6 ns)",
+        mult.mean_ns - base.mean_ns
+    );
+    let mut ok = true;
+    if arccos.mean_ns < 2.0 * mult.mean_ns {
+        println!("!! UNEXPECTED: Arccos not clearly slower than Mult");
+        ok = false;
+    }
+    if arccos_fast.mean_ns > arccos.mean_ns {
+        println!("!! UNEXPECTED: fast arccos slower than libm arccos");
+        ok = false;
+    }
+    for (name, m) in [
+        ("Euclidean", &eucl),
+        ("Eucl-LB", &eucl_lb),
+        ("Mult-variant", &mult_var),
+        ("Mult-LB1", &mult_lb1),
+        ("Mult-LB2", &mult_lb2),
+        ("Mult-upper", &upper),
+    ] {
+        if m.mean_ns > 6.0 * mult.mean_ns.max(base.mean_ns) {
+            println!("!! UNEXPECTED: {name} an outlier at {:.1} ns", m.mean_ns);
+            ok = false;
+        }
+    }
+    println!("{}", if ok { "shape OK: matches Table 2" } else { "shape DIVERGES from Table 2" });
+}

@@ -1,0 +1,221 @@
+//! Interval arithmetic over similarities — the routing-node primitive.
+//!
+//! Tree indexes don't know one similarity `s2 = sim(z, y)` for a subtree,
+//! they know a *range*: every point `y` under routing object `z` has
+//! `sim(z, y)` in `[lo, hi]`. Pruning then needs
+//!
+//! ```text
+//! ub*(s1, [lo,hi]) >= max_{s2 in [lo,hi]} ub(s1, s2)   (can anything match?)
+//! lb*(s1, [lo,hi]) <= min_{s2 in [lo,hi]} lb(s1, s2)   (must everything match?)
+//! ```
+//!
+//! For the tight Mult pair these extrema have closed positions in angle
+//! space: `ub = cos(|t1 - t2|)` peaks where `t2 = t1` (i.e. `s2 = s1`) and
+//! `lb = cos(t1 + t2)` bottoms where `t1 + t2 = pi` (i.e. `s2 = -s1`). For
+//! the relaxed bounds the kinks of `min`/`|.|` and the vertex of Eq. 11's
+//! quadratic piece add `s2 in {s1, -s1, -s1/2}`. Evaluating a bound at the
+//! interval endpoints plus whichever of these probe points fall inside the
+//! interval therefore covers every extremum of every kind — keeping the
+//! whole routing computation trig-free.
+
+use super::BoundKind;
+
+/// A closed interval of similarities, `[-1, 1]`-clamped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimInterval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl SimInterval {
+    #[inline]
+    pub fn new(lo: f64, hi: f64) -> Self {
+        SimInterval { lo: lo.clamp(-1.0, 1.0), hi: hi.clamp(-1.0, 1.0) }
+    }
+
+    /// The degenerate interval holding a single known similarity.
+    #[inline]
+    pub fn point(s: f64) -> Self {
+        Self::new(s, s)
+    }
+
+    /// The vacuous interval (whole similarity range).
+    #[inline]
+    pub fn full() -> Self {
+        SimInterval { lo: -1.0, hi: 1.0 }
+    }
+
+    #[inline]
+    pub fn contains(&self, s: f64) -> bool {
+        self.lo <= s && s <= self.hi
+    }
+
+    /// Grow to cover `s`.
+    #[inline]
+    pub fn extend(&mut self, s: f64) {
+        let s = s.clamp(-1.0, 1.0);
+        if s < self.lo {
+            self.lo = s;
+        }
+        if s > self.hi {
+            self.hi = s;
+        }
+    }
+
+    /// Intersection with another certified interval (both must hold).
+    #[inline]
+    pub fn intersect(&self, other: &SimInterval) -> SimInterval {
+        SimInterval { lo: self.lo.max(other.lo), hi: self.hi.min(other.hi) }
+    }
+
+    /// True iff no similarity satisfies both intervals.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo > self.hi
+    }
+}
+
+impl BoundKind {
+    /// Upper bound on `sim(x, y)` over all `y` with `sim(z, y)` in `range`,
+    /// given `s1 = sim(x, z)`.
+    #[inline]
+    pub fn upper_over(self, s1: f64, range: SimInterval) -> f64 {
+        // Peak of the tight ub is at s2 = s1; if that's inside the range the
+        // answer is ub(s1, s1) (= 1 for the tight kind, >= 1 for relaxed
+        // ones, all valid). Otherwise the max lies at the nearest endpoint
+        // for the tight kind; relaxed kinds are evaluated at all probes too
+        // (a max over a superset of probe values stays an upper bound).
+        let mut best = self.upper(s1, range.lo).max(self.upper(s1, range.hi));
+        // Interior extrema / kinks: the tight ub peaks at s2 = s1; the
+        // relaxed kinds add |s2| = |s1| kinks and quadratic vertices at
+        // +/- s1/2 (e.g. Eq. 11's mirrored piece s1*s2 + 1 - s2^2).
+        for probe in [s1, -s1, 0.5 * s1, -0.5 * s1] {
+            if range.contains(probe) {
+                best = best.max(self.upper(s1, probe));
+            }
+        }
+        best
+    }
+
+    /// Lower bound on `sim(x, y)` over all `y` with `sim(z, y)` in `range`.
+    #[inline]
+    pub fn lower_over(self, s1: f64, range: SimInterval) -> f64 {
+        let mut worst = self.lower(s1, range.lo).min(self.lower(s1, range.hi));
+        // Interior extrema / kinks of the various bound formulas.
+        for probe in [-s1, s1, -0.5 * s1, 0.5 * s1] {
+            if range.contains(probe) {
+                worst = worst.min(self.lower(s1, probe));
+            }
+        }
+        worst
+    }
+
+    /// Certified interval on `sim(x, y)` for a whole subtree.
+    #[inline]
+    pub fn interval_over(self, s1: f64, range: SimInterval) -> SimInterval {
+        SimInterval::new(self.lower_over(s1, range), self.upper_over(s1, range))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force extrema by dense sampling, to validate the probe logic.
+    fn sampled_extrema(kind: BoundKind, s1: f64, range: SimInterval) -> (f64, f64) {
+        let mut min_lb = f64::INFINITY;
+        let mut max_ub = f64::NEG_INFINITY;
+        let steps = 2000;
+        for i in 0..=steps {
+            let s2 = range.lo + (range.hi - range.lo) * i as f64 / steps as f64;
+            min_lb = min_lb.min(kind.lower(s1, s2));
+            max_ub = max_ub.max(kind.upper(s1, s2));
+        }
+        (min_lb, max_ub)
+    }
+
+    #[test]
+    fn interval_over_dominates_sampled_extrema() {
+        let ranges = [
+            SimInterval::new(-1.0, 1.0),
+            SimInterval::new(0.2, 0.9),
+            SimInterval::new(-0.8, -0.1),
+            SimInterval::new(-0.3, 0.6),
+            SimInterval::new(0.95, 1.0),
+        ];
+        for kind in BoundKind::ALL {
+            for &range in &ranges {
+                for i in 0..=20 {
+                    let s1 = -1.0 + i as f64 / 10.0;
+                    let (min_lb, max_ub) = sampled_extrema(kind, s1, range);
+                    let lo = kind.lower_over(s1, range);
+                    let hi = kind.upper_over(s1, range);
+                    assert!(
+                        lo <= min_lb + 1e-9,
+                        "{}: lower_over {lo} > sampled {min_lb} (s1={s1}, {range:?})",
+                        kind.name()
+                    );
+                    assert!(
+                        hi >= max_ub - 1e-9,
+                        "{}: upper_over {hi} < sampled {max_ub} (s1={s1}, {range:?})",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tight_interval_over_is_tight() {
+        // For the Mult kind the probe construction should not just dominate
+        // but *match* the sampled extrema (it is exact on the sphere).
+        let range = SimInterval::new(-0.4, 0.7);
+        for i in 0..=20 {
+            let s1 = -1.0 + i as f64 / 10.0;
+            let (min_lb, max_ub) = sampled_extrema(BoundKind::Mult, s1, range);
+            assert!((BoundKind::Mult.lower_over(s1, range) - min_lb).abs() < 1e-6);
+            assert!((BoundKind::Mult.upper_over(s1, range) - max_ub).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn point_interval_reduces_to_plain_bounds() {
+        for kind in BoundKind::ALL {
+            let iv = kind.interval_over(0.3, SimInterval::point(0.5));
+            assert!((iv.lo - kind.lower(0.3, 0.5).max(-1.0)).abs() < 1e-12);
+            assert!((iv.hi - kind.upper(0.3, 0.5).min(1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn containment_yields_trivial_upper() {
+        // s1 inside the subtree range: some y may equal x, so ub must be 1.
+        let ub = BoundKind::Mult.upper_over(0.4, SimInterval::new(0.0, 0.8));
+        assert!((ub - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn opposite_reachable_yields_trivial_lower() {
+        // -s1 inside the range: some y may be antipodal, so lb must be -1.
+        let lb = BoundKind::Mult.lower_over(0.4, SimInterval::new(-0.8, 0.0));
+        assert!((lb + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intersect_and_empty() {
+        let a = SimInterval::new(0.1, 0.5);
+        let b = SimInterval::new(0.4, 0.9);
+        let c = a.intersect(&b);
+        assert!((c.lo - 0.4).abs() < 1e-15 && (c.hi - 0.5).abs() < 1e-15);
+        assert!(!c.is_empty());
+        assert!(a.intersect(&SimInterval::new(0.6, 0.9)).is_empty());
+    }
+
+    #[test]
+    fn extend_covers() {
+        let mut iv = SimInterval::point(0.0);
+        iv.extend(0.5);
+        iv.extend(-0.25);
+        assert!(iv.contains(0.49) && iv.contains(-0.2) && !iv.contains(0.51));
+    }
+}

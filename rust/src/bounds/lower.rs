@@ -1,0 +1,162 @@
+//! Lower bounds on `sim(x, y)` given `s1 = sim(x, z)`, `s2 = sim(z, y)`.
+//!
+//! Equation numbers follow the paper. All functions take similarities in
+//! `[-1, 1]`; values slightly outside (from accumulated floating-point
+//! roundoff in dot products) are tolerated — the radicands are clamped at 0
+//! so no NaN can escape.
+
+/// Eq. 7: lower bound through the Euclidean triangle inequality applied to
+/// `d = sqrt(2 - 2 sim)` on the unit sphere.
+#[inline(always)]
+pub fn lb_euclidean(s1: f64, s2: f64) -> f64 {
+    s1 + s2 - 1.0 - 2.0 * ((1.0 - s1).max(0.0) * (1.0 - s2).max(0.0)).sqrt()
+}
+
+/// Eq. 8: cheap relaxation of Eq. 7 — the radical is over-approximated with
+/// the smaller similarity, trading tightness for a sqrt-free form.
+#[inline(always)]
+pub fn lb_eucl_lb(s1: f64, s2: f64) -> f64 {
+    s1 + s2 + 2.0 * s1.min(s2) - 3.0
+}
+
+/// Eq. 9: the tight bound via arc lengths, in its direct trig form
+/// `cos(arccos(s1) + arccos(s2))`. Mathematically equal to [`lb_mult`];
+/// 60–100 cycles per trig call make it the slow reference (paper Table 2).
+#[inline(always)]
+pub fn lb_arccos(s1: f64, s2: f64) -> f64 {
+    (s1.clamp(-1.0, 1.0).acos() + s2.clamp(-1.0, 1.0).acos()).cos()
+}
+
+/// Polynomial arccos in the spirit of the paper's JaFaMa measurement:
+/// a fast-math drop-in for `acos` (Abramowitz & Stegun 4.4.45 minimax form,
+/// max abs error ~6.7e-5 rad).
+#[inline(always)]
+pub fn fast_arccos(x: f64) -> f64 {
+    let neg = x < 0.0;
+    let x = x.abs().min(1.0);
+    // acos(x) ~= sqrt(1-x) * (a0 + a1 x + a2 x^2 + a3 x^3)
+    let poly = 1.570_796_3 + x * (-0.212_114_4 + x * (0.074_261_0 - x * 0.018_729_3));
+    let r = (1.0 - x).sqrt() * poly;
+    if neg {
+        std::f64::consts::PI - r
+    } else {
+        r
+    }
+}
+
+/// Eq. 9 evaluated with [`fast_arccos`] — Table 2's "Arccos (JaFaMa)" row.
+///
+/// NOTE: the polynomial error (~1.3e-4 rad) makes this an *approximation* of
+/// the tight bound; to stay a valid lower bound for pruning we subtract the
+/// worst-case error (cos is 1-Lipschitz, so a similarity margin equal to the
+/// summed angle error is always sufficient, on both monotone branches).
+#[inline(always)]
+pub fn lb_arccos_fast(s1: f64, s2: f64) -> f64 {
+    const ERR: f64 = 2.6e-4; // 2 * max poly error (1.27e-4 rad each)
+    (fast_arccos(s1.clamp(-1.0, 1.0)) + fast_arccos(s2.clamp(-1.0, 1.0))).cos() - ERR
+}
+
+/// Eq. 10, "Mult": the recommended tight lower bound,
+/// `s1*s2 - sqrt((1 - s1^2)(1 - s2^2))` — equal to Eq. 9 up to f64 roundoff
+/// (paper Fig. 5) at roughly the cost of the Euclidean form.
+#[inline(always)]
+pub fn lb_mult(s1: f64, s2: f64) -> f64 {
+    s1 * s2 - (((1.0 - s1 * s1) * (1.0 - s2 * s2)).max(0.0)).sqrt()
+}
+
+/// Footnote-2 variant of Eq. 10: radical expanded via
+/// `(1 - x^2) = (1 + x)(1 - x)` — numerically equivalent, measured
+/// separately in Table 2 ("Mult-variant").
+#[inline(always)]
+pub fn lb_mult_variant(s1: f64, s2: f64) -> f64 {
+    s1 * s2
+        - (((1.0 + s1) * (1.0 - s1) * (1.0 + s2) * (1.0 - s2)).max(0.0)).sqrt()
+}
+
+/// Eq. 11, "Mult-LB1": sqrt-free relaxation of Eq. 10 using the smaller
+/// squared similarity. The best of the cheap bounds (paper Fig. 2f).
+#[inline(always)]
+pub fn lb_mult_lb1(s1: f64, s2: f64) -> f64 {
+    s1 * s2 + (s1 * s1).min(s2 * s2) - 1.0
+}
+
+/// Eq. 12, "Mult-LB2": min/max expansion of Eq. 10; strictly inferior to
+/// Eq. 11 (paper section 3).
+#[inline(always)]
+pub fn lb_mult_lb2(s1: f64, s2: f64) -> f64 {
+    2.0 * s1 * s2 - (s1 - s2).abs() - 1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> Vec<f64> {
+        (0..=80).map(|i| -1.0 + i as f64 / 40.0).collect()
+    }
+
+    #[test]
+    fn mult_equals_arccos_to_roundoff() {
+        // Paper Fig. 5: |Mult - Arccos| at the limit of f64 precision.
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                let diff = (lb_mult(s1, s2) - lb_arccos(s1, s2)).abs();
+                assert!(diff < 5e-15, "diff {diff} at ({s1}, {s2})");
+            }
+        }
+    }
+
+    #[test]
+    fn mult_variant_equals_mult() {
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                let diff = (lb_mult(s1, s2) - lb_mult_variant(s1, s2)).abs();
+                assert!(diff < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_arccos_error_within_budget() {
+        // The A&S 4.4.45 minimax form is good to ~1.27e-4 rad.
+        for i in 0..=100_000 {
+            let x = -1.0 + 2.0 * i as f64 / 100_000.0;
+            let err = (fast_arccos(x) - x.acos()).abs();
+            assert!(err < 1.3e-4, "err {err} at {x}");
+        }
+    }
+
+    #[test]
+    fn fast_arccos_bound_is_conservative() {
+        // lb_arccos_fast must never exceed the true tight bound.
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                assert!(
+                    lb_arccos_fast(s1, s2) <= lb_arccos(s1, s2) + 1e-12,
+                    "at ({s1}, {s2})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_anchor_values() {
+        // Fig. 1 discussion: inputs (0.5, 0.5) -> Euclid -1, tight -0.5;
+        // opposite-opposite -> Euclid -7, tight +1.
+        assert!((lb_euclidean(0.5, 0.5) - (-1.0)).abs() < 1e-12);
+        assert!((lb_mult(0.5, 0.5) - (-0.5)).abs() < 1e-12);
+        assert!((lb_euclidean(-1.0, -1.0) - (-7.0)).abs() < 1e-12);
+        assert!((lb_mult(-1.0, -1.0) - 1.0).abs() < 1e-12);
+        // sim(x,z) = 1 pins x = z on the sphere: bound collapses to s2.
+        assert!((lb_mult(1.0, 0.3) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds_tolerate_slightly_out_of_range_inputs() {
+        for f in [lb_euclidean, lb_eucl_lb, lb_arccos, lb_arccos_fast, lb_mult,
+                  lb_mult_variant, lb_mult_lb1, lb_mult_lb2] {
+            let v = f(1.0 + 1e-9, -1.0 - 1e-9);
+            assert!(v.is_finite(), "non-finite bound for out-of-range input");
+        }
+    }
+}

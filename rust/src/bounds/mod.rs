@@ -1,0 +1,166 @@
+//! Triangle inequalities for cosine similarity (Schubert, SISAP 2021).
+//!
+//! Given the known similarities `s1 = sim(x, z)` and `s2 = sim(z, y)` to a
+//! common reference point `z`, these bounds certify an interval on the
+//! unknown `sim(x, y)` without computing it. The recommended tight pair
+//! (paper Eqs. 10/13, "Mult") is
+//!
+//! ```text
+//! sim(x,y) >= s1*s2 - sqrt((1 - s1^2)(1 - s2^2))
+//! sim(x,y) <= s1*s2 + sqrt((1 - s1^2)(1 - s2^2))
+//! ```
+//!
+//! which is exactly `cos(theta1 +/- theta2)` — tight on the sphere — at the
+//! cost of one square root. The module also implements every alternative the
+//! paper evaluates (Table 1) plus the matching upper-bound forms, so the
+//! index layer can be instantiated with any of them and the benchmark
+//! harness can regenerate the paper's comparisons.
+
+pub mod interval;
+pub mod lower;
+pub mod order;
+pub mod upper;
+
+pub use interval::SimInterval;
+pub use lower::{
+    fast_arccos, lb_arccos, lb_arccos_fast, lb_eucl_lb, lb_euclidean, lb_mult,
+    lb_mult_lb1, lb_mult_lb2, lb_mult_variant,
+};
+pub use upper::{ub_arccos, ub_eucl_ub, ub_euclidean, ub_mult, ub_mult_ub1};
+
+/// Which triangle-inequality pair an index uses for pruning.
+///
+/// Every variant is *valid* (never prunes a true result); they differ in
+/// tightness (pruning power) and per-evaluation cost — the trade-off the
+/// paper's evaluation section measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoundKind {
+    /// Paper Eq. 7 (lower) and its mirrored upper form: bounds via the
+    /// Euclidean metric on the unit sphere.
+    Euclidean,
+    /// Paper Eq. 8: cheapest, loosest (lower); upper mirrors Eq. 7's
+    /// structure with the `min`-approximation.
+    EuclLb,
+    /// Paper Eq. 9: tight bound through `arccos`/`cos` (expensive trig).
+    Arccos,
+    /// Paper Eq. 9 evaluated with polynomial `fast_arccos` — the JaFaMa
+    /// substitute of Table 2.
+    ArccosFast,
+    /// Paper Eqs. 10/13: the recommended tight, trig-free pair.
+    Mult,
+    /// Paper Eq. 11 (lower) + matching relaxation of Eq. 13 (upper).
+    MultLb1,
+    /// Paper Eq. 12 (lower) + Eq. 13 relaxed the same way (upper).
+    MultLb2,
+}
+
+impl BoundKind {
+    /// All kinds, in the paper's Table 1 order (fast-arccos appended).
+    pub const ALL: [BoundKind; 7] = [
+        BoundKind::Euclidean,
+        BoundKind::EuclLb,
+        BoundKind::Arccos,
+        BoundKind::ArccosFast,
+        BoundKind::Mult,
+        BoundKind::MultLb1,
+        BoundKind::MultLb2,
+    ];
+
+    /// Stable display name matching the paper's Table 1.
+    pub fn name(self) -> &'static str {
+        match self {
+            BoundKind::Euclidean => "Euclidean",
+            BoundKind::EuclLb => "Eucl-LB",
+            BoundKind::Arccos => "Arccos",
+            BoundKind::ArccosFast => "Arccos-fast",
+            BoundKind::Mult => "Mult",
+            BoundKind::MultLb1 => "Mult-LB1",
+            BoundKind::MultLb2 => "Mult-LB2",
+        }
+    }
+
+    /// Paper equation number of the lower bound ("9*" for the fast-math
+    /// variant of Eq. 9).
+    pub fn equation(self) -> &'static str {
+        match self {
+            BoundKind::Euclidean => "7",
+            BoundKind::EuclLb => "8",
+            BoundKind::Arccos => "9",
+            BoundKind::ArccosFast => "9*",
+            BoundKind::Mult => "10",
+            BoundKind::MultLb1 => "11",
+            BoundKind::MultLb2 => "12",
+        }
+    }
+
+    /// Lower bound on `sim(x, y)` from `s1 = sim(x, z)`, `s2 = sim(z, y)`.
+    #[inline]
+    pub fn lower(self, s1: f64, s2: f64) -> f64 {
+        match self {
+            BoundKind::Euclidean => lb_euclidean(s1, s2),
+            BoundKind::EuclLb => lb_eucl_lb(s1, s2),
+            BoundKind::Arccos => lb_arccos(s1, s2),
+            BoundKind::ArccosFast => lb_arccos_fast(s1, s2),
+            BoundKind::Mult => lb_mult(s1, s2),
+            BoundKind::MultLb1 => lb_mult_lb1(s1, s2),
+            BoundKind::MultLb2 => lb_mult_lb2(s1, s2),
+        }
+    }
+
+    /// Upper bound on `sim(x, y)` from `s1 = sim(x, z)`, `s2 = sim(z, y)`.
+    #[inline]
+    pub fn upper(self, s1: f64, s2: f64) -> f64 {
+        match self {
+            BoundKind::Euclidean => ub_euclidean(s1, s2),
+            BoundKind::EuclLb => ub_eucl_ub(s1, s2),
+            BoundKind::Arccos => ub_arccos(s1, s2),
+            BoundKind::ArccosFast => ub_mult(s1, s2),
+            BoundKind::Mult => ub_mult(s1, s2),
+            BoundKind::MultLb1 => ub_mult_ub1(s1, s2),
+            BoundKind::MultLb2 => ub_mult_ub1(s1, s2),
+        }
+    }
+
+    /// Certified interval on `sim(x, y)`.
+    #[inline]
+    pub fn interval(self, s1: f64, s2: f64) -> SimInterval {
+        SimInterval::new(self.lower(s1, s2), self.upper(s1, s2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_names_and_equations() {
+        let rows: Vec<(&str, &str)> =
+            BoundKind::ALL.iter().map(|b| (b.name(), b.equation())).collect();
+        assert_eq!(rows[0], ("Euclidean", "7"));
+        assert_eq!(rows[1], ("Eucl-LB", "8"));
+        assert_eq!(rows[2], ("Arccos", "9"));
+        assert_eq!(rows[4], ("Mult", "10"));
+        assert_eq!(rows[5], ("Mult-LB1", "11"));
+        assert_eq!(rows[6], ("Mult-LB2", "12"));
+    }
+
+    #[test]
+    fn lower_never_exceeds_upper() {
+        for kind in BoundKind::ALL {
+            for i in 0..=40 {
+                for j in 0..=40 {
+                    let s1 = -1.0 + i as f64 / 20.0;
+                    let s2 = -1.0 + j as f64 / 20.0;
+                    let iv = kind.interval(s1, s2);
+                    assert!(
+                        iv.lo <= iv.hi + 1e-12,
+                        "{} lo={} hi={} at ({s1},{s2})",
+                        kind.name(),
+                        iv.lo,
+                        iv.hi
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! The partial order between lower bounds (paper Fig. 3), as executable
+//! checks: `Eucl-LB <= Euclidean <= Arccos = Mult` and
+//! `Eucl-LB <= Mult-LB2 <= Mult-LB1 <= Mult = Arccos`.
+//!
+//! `verify_order` is used by the `figures --fig 3` harness to emit the
+//! empirical verification table, and by the proptest suite.
+
+use super::lower::*;
+
+/// One directed edge `a <= b` of the Fig. 3 Hasse diagram.
+#[derive(Debug, Clone, Copy)]
+pub struct OrderEdge {
+    pub weaker: &'static str,
+    pub stronger: &'static str,
+    weaker_fn: fn(f64, f64) -> f64,
+    stronger_fn: fn(f64, f64) -> f64,
+}
+
+/// All claimed dominance relations from Fig. 3.
+pub const EDGES: [OrderEdge; 5] = [
+    OrderEdge { weaker: "Eucl-LB", stronger: "Euclidean",
+                weaker_fn: lb_eucl_lb, stronger_fn: lb_euclidean },
+    OrderEdge { weaker: "Euclidean", stronger: "Mult",
+                weaker_fn: lb_euclidean, stronger_fn: lb_mult },
+    OrderEdge { weaker: "Eucl-LB", stronger: "Mult-LB2",
+                weaker_fn: lb_eucl_lb, stronger_fn: lb_mult_lb2 },
+    OrderEdge { weaker: "Mult-LB2", stronger: "Mult-LB1",
+                weaker_fn: lb_mult_lb2, stronger_fn: lb_mult_lb1 },
+    OrderEdge { weaker: "Mult-LB1", stronger: "Mult",
+                weaker_fn: lb_mult_lb1, stronger_fn: lb_mult },
+];
+
+impl OrderEdge {
+    /// Check the relation at one input pair; returns the violation amount
+    /// (positive = violated), for the empirical Fig. 3 table.
+    #[inline]
+    pub fn violation(&self, s1: f64, s2: f64) -> f64 {
+        (self.weaker_fn)(s1, s2) - (self.stronger_fn)(s1, s2)
+    }
+}
+
+/// Verify every Fig. 3 edge on an `n x n` grid over `[-1, 1]^2`; returns
+/// `(edge name, max violation)` per edge. All max violations must be
+/// <= ~1e-15 for the figure's claim to hold.
+pub fn verify_order(n: usize) -> Vec<(String, f64)> {
+    EDGES
+        .iter()
+        .map(|edge| {
+            let mut worst = f64::NEG_INFINITY;
+            for i in 0..n {
+                for j in 0..n {
+                    let s1 = -1.0 + 2.0 * i as f64 / (n - 1) as f64;
+                    let s2 = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
+                    worst = worst.max(edge.violation(s1, s2));
+                }
+            }
+            (format!("{} <= {}", edge.weaker, edge.stronger), worst)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_order_holds_on_grid() {
+        for (name, violation) in verify_order(201) {
+            assert!(violation <= 1e-12, "{name} violated by {violation}");
+        }
+    }
+
+    #[test]
+    fn order_is_strict_somewhere() {
+        // The edges are genuine (not equalities): each has a point where the
+        // stronger bound is strictly better.
+        for edge in EDGES {
+            let mut found = false;
+            for i in 0..50 {
+                for j in 0..50 {
+                    let s1 = -0.98 + 2.0 * i as f64 / 50.0;
+                    let s2 = -0.98 + 2.0 * j as f64 / 50.0;
+                    if edge.violation(s1, s2) < -1e-3 {
+                        found = true;
+                    }
+                }
+            }
+            assert!(found, "{} <= {} never strict", edge.weaker, edge.stronger);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Upper bounds on `sim(x, y)` — the paper's "opposite direction" (§3.1).
+//!
+//! For similarity search these are the *pruning* direction: a range query
+//! `sim(q, y) >= tau` can discard `y` (or a whole subtree) whenever an upper
+//! bound falls below `tau`, and a kNN search whenever it falls below the
+//! current k-th best similarity.
+
+/// Eq. 13: the recommended tight upper bound,
+/// `s1*s2 + sqrt((1 - s1^2)(1 - s2^2))` = `cos(arccos s1 - arccos s2)`.
+#[inline(always)]
+pub fn ub_mult(s1: f64, s2: f64) -> f64 {
+    s1 * s2 + (((1.0 - s1 * s1) * (1.0 - s2 * s2)).max(0.0)).sqrt()
+}
+
+/// Trig form of Eq. 13 (the §3.1 derivation before simplification).
+#[inline(always)]
+pub fn ub_arccos(s1: f64, s2: f64) -> f64 {
+    (s1.clamp(-1.0, 1.0).acos() - s2.clamp(-1.0, 1.0).acos()).cos()
+}
+
+/// Upper bound via the Euclidean metric on the sphere: from
+/// `d(x,y) >= |d(x,z) - d(z,y)|` with `d = sqrt(2 - 2 sim)`,
+/// `sim(x,y) <= s1 + s2 - 1 + 2 sqrt((1-s1)(1-s2))` — the mirror of Eq. 7.
+#[inline(always)]
+pub fn ub_euclidean(s1: f64, s2: f64) -> f64 {
+    s1 + s2 - 1.0 + 2.0 * ((1.0 - s1).max(0.0) * (1.0 - s2).max(0.0)).sqrt()
+}
+
+/// Sqrt-free relaxation of [`ub_euclidean`] mirroring Eq. 8's construction:
+/// `sqrt((1-s1)(1-s2)) <= 1 - min(s1, s2)` (both factors in `[0, 2]`).
+#[inline(always)]
+pub fn ub_eucl_ub(s1: f64, s2: f64) -> f64 {
+    s1 + s2 - 1.0 + 2.0 * (1.0 - s1.min(s2))
+}
+
+/// Sqrt-free relaxation of Eq. 13 mirroring Eq. 11's construction:
+/// the radical is over-approximated by `1 - min(s1^2, s2^2)`.
+#[inline(always)]
+pub fn ub_mult_ub1(s1: f64, s2: f64) -> f64 {
+    s1 * s2 + 1.0 - (s1 * s1).min(s2 * s2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::lower::lb_mult;
+
+    fn grid() -> Vec<f64> {
+        (0..=80).map(|i| -1.0 + i as f64 / 40.0).collect()
+    }
+
+    #[test]
+    fn ub_mult_equals_trig_form() {
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                assert!((ub_mult(s1, s2) - ub_arccos(s1, s2)).abs() < 5e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn relaxations_dominate_tight_upper() {
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                let tight = ub_mult(s1, s2);
+                assert!(ub_euclidean(s1, s2) >= tight - 1e-12);
+                assert!(ub_eucl_ub(s1, s2) >= ub_euclidean(s1, s2) - 1e-12);
+                assert!(ub_mult_ub1(s1, s2) >= tight - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_error_band_around_product() {
+        // §3.1: |sim(x,y) - s1*s2| <= radical, i.e. ub - lb = 2 * radical
+        // and both are symmetric around the product.
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                let mid = 0.5 * (ub_mult(s1, s2) + lb_mult(s1, s2));
+                assert!((mid - s1 * s2).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_reference_pins_value() {
+        // s1 = 1 => x = z => sim(x,y) = s2 exactly, from both sides.
+        assert!((ub_mult(1.0, -0.4) - (-0.4)).abs() < 1e-12);
+        assert!((lb_mult(1.0, -0.4) - (-0.4)).abs() < 1e-12);
+    }
+}

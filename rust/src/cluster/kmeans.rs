@@ -1,0 +1,300 @@
+//! Bound-accelerated spherical k-means (see module docs in `mod.rs`).
+
+use crate::bounds::ub_mult;
+use crate::metrics::{DenseVec, SimVector};
+use crate::util::Rng;
+
+/// Configuration for [`spherical_kmeans`].
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when fewer than this fraction of points change assignment.
+    pub tol_moved: f64,
+    pub seed: u64,
+    /// Enable the Eq. 10/13 prunings (off = plain Lloyd, for ablation).
+    pub use_bounds: bool,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig { k: 8, max_iters: 50, tol_moved: 0.001, seed: 42, use_bounds: true }
+    }
+}
+
+/// Clustering output + instrumentation.
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub assignment: Vec<u32>,
+    pub centroids: Vec<DenseVec>,
+    /// Mean similarity of points to their centroid (objective; maximize).
+    pub objective: f64,
+    pub iterations: usize,
+    /// Exact similarity evaluations spent in assignment steps.
+    pub sim_evals: u64,
+    /// Candidate centroids skipped by Eq. 13 (center-center pruning).
+    pub pruned_centers: u64,
+    /// Points whose assignment was certified unchanged by drift chaining.
+    pub skipped_points: u64,
+}
+
+fn mean_direction(points: &[DenseVec], members: &[u32], d: usize) -> Option<DenseVec> {
+    if members.is_empty() {
+        return None;
+    }
+    let mut acc = vec![0.0f64; d];
+    for &i in members {
+        for (a, &v) in acc.iter_mut().zip(points[i as usize].as_slice()) {
+            *a += v as f64;
+        }
+    }
+    let v: Vec<f32> = acc.iter().map(|&a| a as f32).collect();
+    let out = DenseVec::new(v);
+    // Degenerate (sum ~ 0): signal caller to reseed.
+    if out.as_slice().iter().all(|&x| x == 0.0) {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Spherical k-means with Eq. 10/13 acceleration.
+///
+/// Assignments are identical to plain Lloyd's at every iteration (the
+/// prunings are exact), so `use_bounds` changes only `sim_evals`, never the
+/// result — a property the tests assert.
+pub fn spherical_kmeans(points: &[DenseVec], config: &KMeansConfig) -> KMeansResult {
+    let n = points.len();
+    let k = config.k.min(n).max(1);
+    let d = points.first().map(|p| p.len()).unwrap_or(0);
+    let mut rng = Rng::seed_from_u64(config.seed);
+
+    // k-means++-style seeding in similarity space: first centroid random,
+    // each next one sampled proportional to (1 - max sim to chosen).
+    let mut centroids: Vec<DenseVec> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(n)].clone());
+    let mut best_sim: Vec<f64> = points.iter().map(|p| p.sim(&centroids[0])).collect();
+    let mut sim_evals = n as u64;
+    while centroids.len() < k {
+        let weights: Vec<f64> = best_sim.iter().map(|&s| (1.0 - s).max(1e-12)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut pick = rng.f64() * total;
+        let mut chosen = n - 1;
+        for (i, w) in weights.iter().enumerate() {
+            pick -= w;
+            if pick <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        let c = points[chosen].clone();
+        for (i, p) in points.iter().enumerate() {
+            let s = p.sim(&c);
+            if s > best_sim[i] {
+                best_sim[i] = s;
+            }
+        }
+        sim_evals += n as u64;
+        centroids.push(c);
+    }
+
+    let mut assignment: Vec<u32> = vec![0; n];
+    // Certified interval on sim(x, c_assigned) carried between iterations.
+    let mut lb_assigned: Vec<f64> = vec![-1.0; n];
+    let mut ub_others: Vec<f64> = vec![1.0; n]; // upper bound on best rival sim
+    let mut pruned_centers = 0u64;
+    let mut skipped_points = 0u64;
+    let mut iterations = 0;
+
+    for iter in 0..config.max_iters {
+        iterations = iter + 1;
+        // Centroid-centroid similarity table (k^2, cheap next to n*k).
+        let cc: Vec<f64> = (0..k * k)
+            .map(|ij| centroids[ij / k].sim(&centroids[ij % k]))
+            .collect();
+
+        let mut moved = 0usize;
+        for i in 0..n {
+            // Drift chaining: if the certified lower bound on the assigned
+            // centroid still beats the certified upper bound on every
+            // rival, the assignment provably cannot change.
+            if config.use_bounds && iter > 0 && lb_assigned[i] >= ub_others[i] {
+                skipped_points += 1;
+                continue;
+            }
+            let p = &points[i];
+            let mut best = assignment[i] as usize;
+            let mut s_best = p.sim(&centroids[best]);
+            sim_evals += 1;
+            let mut second = -1.0f64;
+            for j in 0..k {
+                if j == best {
+                    continue;
+                }
+                if config.use_bounds {
+                    // Eq. 13 with z = current best centroid.
+                    let cap = ub_mult(s_best, cc[best * k + j]);
+                    if cap <= s_best {
+                        pruned_centers += 1;
+                        second = second.max(cap);
+                        continue;
+                    }
+                }
+                let s = p.sim(&centroids[j]);
+                sim_evals += 1;
+                if s > s_best {
+                    second = second.max(s_best);
+                    s_best = s;
+                    best = j;
+                } else {
+                    second = second.max(s);
+                }
+            }
+            if best != assignment[i] as usize {
+                moved += 1;
+                assignment[i] = best as u32;
+            }
+            lb_assigned[i] = s_best;
+            ub_others[i] = second;
+        }
+
+        // Update step.
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (i, &a) in assignment.iter().enumerate() {
+            members[a as usize].push(i as u32);
+        }
+        let mut drift: Vec<f64> = Vec::with_capacity(k); // sim(c_old, c_new)
+        for j in 0..k {
+            match mean_direction(points, &members[j], d) {
+                Some(new_c) => {
+                    drift.push(centroids[j].sim(&new_c));
+                    centroids[j] = new_c;
+                }
+                None => {
+                    // Empty/degenerate cluster: reseed on a random point.
+                    centroids[j] = points[rng.below(n)].clone();
+                    drift.push(-1.0); // no certificate survives a reseed
+                }
+            }
+        }
+        // Re-chain the carried bounds through the drift with the interval
+        // primitives (the raw Eq. 10/13 forms are not monotone in the
+        // carried argument, so certified-interval propagation is the only
+        // valid way to chain a *bound* rather than an exact similarity):
+        //   sim(x, c_new) >= lower_over(drift_a, [lb, 1])
+        //   rival sims    <= upper_over(min rival drift, [-1, ub])
+        if config.use_bounds {
+            use crate::bounds::{BoundKind, SimInterval};
+            // Smallest drift among all centroids (conservative scalar for
+            // the rival side keeps the pass O(n + k)).
+            for i in 0..n {
+                let a = assignment[i] as usize;
+                lb_assigned[i] = BoundKind::Mult
+                    .lower_over(drift[a], SimInterval::new(lb_assigned[i], 1.0));
+                let mut worst = 1.0f64;
+                for (j, &dj) in drift.iter().enumerate() {
+                    if j != a {
+                        worst = worst.min(dj);
+                    }
+                }
+                ub_others[i] = BoundKind::Mult
+                    .upper_over(worst, SimInterval::new(-1.0, ub_others[i]));
+            }
+        }
+
+        if (moved as f64) < config.tol_moved * n as f64 && iter > 0 {
+            break;
+        }
+    }
+
+    let mut objective = 0.0;
+    for (i, &a) in assignment.iter().enumerate() {
+        objective += points[i].sim(&centroids[a as usize]);
+    }
+    objective /= n.max(1) as f64;
+
+    KMeansResult {
+        assignment,
+        centroids,
+        objective,
+        iterations,
+        sim_evals,
+        pruned_centers,
+        skipped_points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{vmf_mixture, VmfSpec};
+
+    fn clustered(n: usize, k: usize) -> (Vec<DenseVec>, Vec<u32>) {
+        vmf_mixture(&VmfSpec { n, dim: 16, clusters: k, kappa: 120.0, seed: 31 })
+    }
+
+    #[test]
+    fn bounded_and_plain_agree() {
+        let (pts, _) = clustered(2000, 8);
+        let base = KMeansConfig { k: 8, seed: 7, ..Default::default() };
+        let plain = spherical_kmeans(&pts, &KMeansConfig { use_bounds: false, ..base.clone() });
+        let fast = spherical_kmeans(&pts, &KMeansConfig { use_bounds: true, ..base });
+        // The prunings are exact: identical assignments and objective.
+        assert_eq!(plain.assignment, fast.assignment);
+        assert!((plain.objective - fast.objective).abs() < 1e-12);
+        // And the bounds must actually save work on clustered data.
+        assert!(
+            fast.sim_evals < plain.sim_evals,
+            "no savings: {} vs {}",
+            fast.sim_evals,
+            plain.sim_evals
+        );
+        assert!(fast.pruned_centers > 0);
+    }
+
+    #[test]
+    fn recovers_planted_clusters() {
+        let (pts, labels) = clustered(1500, 5);
+        let res = spherical_kmeans(&pts, &KMeansConfig { k: 5, ..Default::default() });
+        assert!(res.objective > 0.85, "objective {}", res.objective);
+        // Clustering accuracy via majority-label purity.
+        let mut purity = 0usize;
+        for c in 0..5u32 {
+            let mut counts = [0usize; 5];
+            for i in 0..pts.len() {
+                if res.assignment[i] == c {
+                    counts[labels[i] as usize] += 1;
+                }
+            }
+            purity += counts.iter().max().unwrap();
+        }
+        assert!(purity as f64 / pts.len() as f64 > 0.9, "purity {purity}");
+    }
+
+    #[test]
+    fn objective_nondecreasing_over_restarts_of_same_seed() {
+        let (pts, _) = clustered(800, 4);
+        let a = spherical_kmeans(&pts, &KMeansConfig { k: 4, seed: 3, ..Default::default() });
+        let b = spherical_kmeans(&pts, &KMeansConfig { k: 4, seed: 3, ..Default::default() });
+        assert_eq!(a.assignment, b.assignment); // deterministic
+        assert!((a.objective - b.objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handles_k_greater_than_n_and_tiny_inputs() {
+        let pts = vec![
+            DenseVec::new(vec![1.0, 0.0]),
+            DenseVec::new(vec![0.0, 1.0]),
+        ];
+        let res = spherical_kmeans(&pts, &KMeansConfig { k: 8, ..Default::default() });
+        assert_eq!(res.assignment.len(), 2);
+        assert!(res.objective > 0.99); // each point gets its own centroid
+    }
+
+    #[test]
+    fn duplicate_points_are_fine() {
+        let pts = vec![DenseVec::new(vec![0.6, 0.8]); 50];
+        let res = spherical_kmeans(&pts, &KMeansConfig { k: 3, ..Default::default() });
+        assert!((res.objective - 1.0).abs() < 1e-6);
+    }
+}

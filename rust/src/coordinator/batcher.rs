@@ -1,0 +1,201 @@
+//! Dynamic batching: collect queries until `max_batch` or `max_wait`,
+//! whichever first — the standard serving trade-off between batching
+//! efficiency (the PJRT artifact amortizes over the padded batch) and
+//! tail latency. Thread-based (this offline build has no async runtime):
+//! one collector thread owns the queue; per-request replies travel over
+//! rendezvous channels.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Flush when this many queries are waiting.
+    pub max_batch: usize,
+    /// Flush when the oldest waiting query has waited this long.
+    pub max_wait: Duration,
+    /// Bounded queue depth — submitters block when full (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 32, max_wait: Duration::from_millis(2), queue_depth: 1024 }
+    }
+}
+
+/// A queued unit of work with its reply channel.
+pub struct Job<Q, R> {
+    pub query: Q,
+    pub reply: mpsc::SyncSender<R>,
+    pub enqueued: Instant,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchError {
+    /// The batch loop has shut down.
+    Closed,
+    /// The batch loop dropped the reply (worker panic / overload shed).
+    Dropped,
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BatchError::Closed => write!(f, "batcher closed"),
+            BatchError::Dropped => write!(f, "reply dropped"),
+        }
+    }
+}
+
+impl std::error::Error for BatchError {}
+
+/// Submit side: shareable across threads.
+pub struct BatchSubmitter<Q, R> {
+    tx: Mutex<mpsc::SyncSender<Job<Q, R>>>,
+}
+
+impl<Q: Send + 'static, R: Send + 'static> BatchSubmitter<Q, R> {
+    /// Submit one query and block for its result. Applies backpressure when
+    /// the queue is full; errors only if the batch loop is gone.
+    pub fn submit(&self, query: Q) -> Result<R, BatchError> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        {
+            let tx = self.tx.lock().map_err(|_| BatchError::Closed)?;
+            tx.send(Job { query, reply, enqueued: Instant::now() })
+                .map_err(|_| BatchError::Closed)?;
+        }
+        rx.recv().map_err(|_| BatchError::Dropped)
+    }
+}
+
+/// Spawn the batch loop: `handler` receives full batches on the collector
+/// thread. Returns the submitter; the loop ends when the submitter drops.
+pub fn spawn_batcher<Q, R, F>(config: BatchConfig, handler: F) -> BatchSubmitter<Q, R>
+where
+    Q: Send + 'static,
+    R: Send + 'static,
+    F: Fn(Vec<Job<Q, R>>) + Send + 'static,
+{
+    let (tx, rx) = mpsc::sync_channel::<Job<Q, R>>(config.queue_depth.max(1));
+    std::thread::Builder::new()
+        .name("simetra-batcher".into())
+        .spawn(move || {
+            let mut pending: Vec<Job<Q, R>> = Vec::with_capacity(config.max_batch);
+            loop {
+                // Wait for the first job of the batch (or shutdown).
+                let first = match rx.recv() {
+                    Ok(job) => job,
+                    Err(_) => break,
+                };
+                pending.push(first);
+                // Drain whatever is already queued (no waiting): under
+                // sustained load the backlog fills batches immediately.
+                while pending.len() < config.max_batch {
+                    match rx.try_recv() {
+                        Ok(job) => pending.push(job),
+                        Err(_) => break,
+                    }
+                }
+                // Then wait up to max_wait (measured from now — if the
+                // previous batch took long, the clock must not have already
+                // expired or batching degrades to size 1 under load).
+                let deadline = Instant::now() + config.max_wait;
+                while pending.len() < config.max_batch {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match rx.recv_timeout(remaining) {
+                        Ok(job) => pending.push(job),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                handler(std::mem::take(&mut pending));
+            }
+            if !pending.is_empty() {
+                handler(pending);
+            }
+        })
+        .expect("spawn batcher thread");
+    BatchSubmitter { tx: Mutex::new(tx) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn batches_fill_to_max_batch() {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let s2 = sizes.clone();
+        let sub: Arc<BatchSubmitter<u32, u32>> = Arc::new(spawn_batcher(
+            BatchConfig { max_batch: 4, max_wait: Duration::from_millis(100), queue_depth: 64 },
+            move |jobs| {
+                s2.lock().unwrap().push(jobs.len());
+                for j in jobs {
+                    let q = j.query;
+                    let _ = j.reply.send(q * 2);
+                }
+            },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..8u32 {
+            let sub = sub.clone();
+            handles.push(std::thread::spawn(move || sub.submit(i).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), i as u32 * 2);
+        }
+        let sizes = sizes.lock().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().all(|&s| s <= 4));
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let sub: BatchSubmitter<u32, u32> = spawn_batcher(
+            BatchConfig { max_batch: 100, max_wait: Duration::from_millis(5), queue_depth: 16 },
+            |jobs| {
+                for j in jobs {
+                    let q = j.query;
+                    let _ = j.reply.send(q + 1);
+                }
+            },
+        );
+        // A single query must not wait for a full batch.
+        let start = Instant::now();
+        assert_eq!(sub.submit(41).unwrap(), 42);
+        assert!(start.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn no_job_is_lost_under_load() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let sub: Arc<BatchSubmitter<u32, u32>> = Arc::new(spawn_batcher(
+            BatchConfig { max_batch: 7, max_wait: Duration::from_millis(1), queue_depth: 8 },
+            move |jobs| {
+                c2.fetch_add(jobs.len(), Ordering::SeqCst);
+                for j in jobs {
+                    let q = j.query;
+                    let _ = j.reply.send(q);
+                }
+            },
+        ));
+        let mut handles = Vec::new();
+        for i in 0..200u32 {
+            let sub = sub.clone();
+            handles.push(std::thread::spawn(move || sub.submit(i).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), i as u32);
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 200);
+    }
+}

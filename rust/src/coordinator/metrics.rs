@@ -1,0 +1,127 @@
+//! Lock-free serving metrics: counters + a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::protocol::StatsSnapshot;
+
+/// Exponential histogram buckets in microseconds: 1us .. ~17s.
+const BUCKETS: usize = 48;
+
+/// Serving metrics, cheap enough for the per-request hot path.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub queries: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    pub sim_evals: AtomicU64,
+    pub engine_calls: AtomicU64,
+    pub pruned: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    #[inline]
+    fn bucket_of(us: u64) -> usize {
+        // One bucket per octave: bucket i holds [2^(i-1), 2^i).
+        ((64 - (us + 1).leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Approximate percentile (upper edge of the containing bucket).
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Upper edge of bucket i.
+                return 1u64 << i.min(63);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+}
+
+impl Metrics {
+    pub fn record_latency_us(&self, us: u64) {
+        self.latency.record(us);
+    }
+
+    pub fn snapshot(&self, corpus_size: u64, shards: u64) -> StatsSnapshot {
+        StatsSnapshot {
+            queries: self.queries.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            corpus_size,
+            shards,
+            sim_evals: self.sim_evals.load(Ordering::Relaxed),
+            engine_calls: self.engine_calls.load(Ordering::Relaxed),
+            pruned: self.pruned.load(Ordering::Relaxed),
+            latency_us_p50: self.latency.percentile(0.50),
+            latency_us_p99: self.latency.percentile(0.99),
+            latency_us_max: self.latency.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 5, 10, 50, 100, 500, 1000, 5000, 10_000] {
+            for _ in 0..10 {
+                h.record(us);
+            }
+        }
+        let p50 = h.percentile(0.5);
+        let p99 = h.percentile(0.99);
+        assert!(p50 <= p99, "p50={p50} p99={p99}");
+        assert!(p50 >= 10, "p50={p50}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::default();
+        m.queries.fetch_add(3, Ordering::Relaxed);
+        m.record_latency_us(120);
+        let s = m.snapshot(100, 2);
+        assert_eq!(s.queries, 3);
+        assert_eq!(s.corpus_size, 100);
+        assert_eq!(s.shards, 2);
+        assert!(s.latency_us_max >= 120);
+    }
+}

@@ -1,0 +1,442 @@
+//! The serving coordinator: dynamic batching, shard scatter-gather, and the
+//! choice between the scalar index path and the batched PJRT paths.
+//!
+//! Request flow:
+//!
+//! ```text
+//! client -> BatchSubmitter -> batch loop -> per-shard execution -> merge
+//!            (queue +           (max_batch /    Index | Engine |     (top-k /
+//!             backpressure)      max_wait)       Hybrid)              concat)
+//! ```
+//!
+//! Python never appears on this path: the Engine/Hybrid strategies execute
+//! AOT-compiled HLO artifacts on the PJRT CPU client owned by a dedicated
+//! executor thread. Threading model: batch collection on one thread, shard
+//! execution fanned out over a per-coordinator thread pool, PJRT execution
+//! serialized on the engine thread (single CPU device).
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod server;
+pub mod shard;
+
+pub use batcher::{BatchConfig, BatchError, BatchSubmitter};
+pub use metrics::Metrics;
+pub use protocol::{Hit, Request, Response, StatsSnapshot};
+pub use shard::{ExecMode, IndexKind, Shard};
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bounds::BoundKind;
+use crate::metrics::DenseVec;
+use crate::runtime::EngineHandle;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub n_shards: usize,
+    pub index: IndexKind,
+    pub bound: BoundKind,
+    pub mode: ExecMode,
+    pub batch: BatchConfig,
+    /// Artifact directory; required for Engine/Hybrid modes.
+    pub artifact_dir: Option<PathBuf>,
+    /// Pivots per shard for the hybrid path (0 = default).
+    pub hybrid_pivots: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_shards: 2,
+            index: IndexKind::Vp,
+            bound: BoundKind::Mult,
+            mode: ExecMode::Index,
+            batch: BatchConfig::default(),
+            artifact_dir: None,
+            hybrid_pivots: 0,
+        }
+    }
+}
+
+/// One query travelling through the batcher.
+#[derive(Debug, Clone)]
+enum Query {
+    Knn { vector: Vec<f32>, k: usize },
+    Range { vector: Vec<f32>, tau: f64 },
+}
+
+type QueryResult = Result<(Vec<Hit>, u64), String>;
+
+/// Work sent to a persistent per-shard worker thread (Index mode): the
+/// whole batch, answered with per-job (hits, evals). Long-lived workers
+/// avoid per-batch thread-spawn latency on the hot path.
+struct ShardJob {
+    queries: Arc<Vec<Query>>,
+    parsed: Arc<Vec<DenseVec>>,
+    reply: std::sync::mpsc::SyncSender<(u64, Vec<(Vec<(u32, f64)>, u64)>)>,
+}
+
+struct ShardWorker {
+    tx: std::sync::mpsc::Sender<ShardJob>,
+}
+
+fn spawn_shard_worker(shard: Arc<Shard>) -> ShardWorker {
+    let (tx, rx) = std::sync::mpsc::channel::<ShardJob>();
+    std::thread::Builder::new()
+        .name(format!("simetra-shard-{}", shard.base))
+        .spawn(move || {
+            for job in rx {
+                let mut out = Vec::with_capacity(job.queries.len());
+                for (q, v) in job.queries.iter().zip(job.parsed.iter()) {
+                    let (hits, stats) = match q {
+                        Query::Knn { k, .. } => shard.knn_index(v, *k),
+                        Query::Range { tau, .. } => shard.range_index(v, *tau),
+                    };
+                    out.push((hits, stats.sim_evals));
+                }
+                let _ = job.reply.send((shard.base, out));
+            }
+        })
+        .expect("spawn shard worker");
+    ShardWorker { tx }
+}
+
+/// The serving engine. Cheap to clone (all state behind `Arc`).
+#[derive(Clone)]
+pub struct Coordinator {
+    submitter: Arc<BatchSubmitter<Query, QueryResult>>,
+    metrics: Arc<Metrics>,
+    corpus_size: u64,
+    n_shards: u64,
+}
+
+impl Coordinator {
+    /// Build shards and spawn the batch loop.
+    pub fn new(corpus: Vec<DenseVec>, config: CoordinatorConfig) -> Result<Self> {
+        let corpus_size = corpus.len() as u64;
+        let hybrid_pivots =
+            if config.mode == ExecMode::Hybrid { config.hybrid_pivots.max(16) } else { 0 };
+        let shards = router::build_shards(
+            corpus,
+            config.n_shards,
+            config.index,
+            config.bound,
+            hybrid_pivots,
+        );
+        let n_shards = shards.len() as u64;
+        let engine: Option<Arc<EngineHandle>> = match (&config.artifact_dir, config.mode) {
+            (Some(dir), ExecMode::Engine | ExecMode::Hybrid) => {
+                Some(Arc::new(EngineHandle::spawn(dir)?))
+            }
+            (Some(dir), ExecMode::Index) => EngineHandle::spawn(dir).ok().map(Arc::new),
+            (None, ExecMode::Engine | ExecMode::Hybrid) => {
+                anyhow::bail!("mode {:?} requires an artifact dir", config.mode)
+            }
+            (None, ExecMode::Index) => None,
+        };
+        let metrics = Arc::new(Metrics::default());
+        let workers: Arc<Vec<ShardWorker>> =
+            Arc::new(shards.iter().map(|s| spawn_shard_worker(s.clone())).collect());
+
+        let m2 = metrics.clone();
+        let mode = config.mode;
+        let submitter = batcher::spawn_batcher(
+            config.batch.clone(),
+            move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
+                m2.batches.fetch_add(1, Relaxed);
+                execute_batch(&shards, &workers, engine.as_deref(), &m2, mode, jobs);
+            },
+        );
+        Ok(Coordinator {
+            submitter: Arc::new(submitter),
+            metrics,
+            corpus_size,
+            n_shards,
+        })
+    }
+
+    /// kNN query (batched behind the scenes); blocks until answered.
+    pub fn knn(&self, vector: Vec<f32>, k: usize) -> Result<(Vec<Hit>, u64)> {
+        let started = Instant::now();
+        let out = self
+            .submitter
+            .submit(Query::Knn { vector, k })
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .map_err(|e| anyhow::anyhow!(e));
+        self.finish(started, &out);
+        out
+    }
+
+    /// Range query (`sim >= tau`); blocks until answered.
+    pub fn range(&self, vector: Vec<f32>, tau: f64) -> Result<(Vec<Hit>, u64)> {
+        let started = Instant::now();
+        let out = self
+            .submitter
+            .submit(Query::Range { vector, tau })
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .map_err(|e| anyhow::anyhow!(e));
+        self.finish(started, &out);
+        out
+    }
+
+    fn finish(&self, started: Instant, out: &Result<(Vec<Hit>, u64)>) {
+        self.metrics.queries.fetch_add(1, Relaxed);
+        if out.is_err() {
+            self.metrics.errors.fetch_add(1, Relaxed);
+        }
+        self.metrics.record_latency_us(started.elapsed().as_micros() as u64);
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.metrics.snapshot(self.corpus_size, self.n_shards)
+    }
+}
+
+/// Execute one batch: scatter to shards, merge, reply.
+fn execute_batch(
+    shards: &[Arc<Shard>],
+    workers: &[ShardWorker],
+    engine: Option<&EngineHandle>,
+    metrics: &Metrics,
+    mode: ExecMode,
+    jobs: Vec<batcher::Job<Query, QueryResult>>,
+) {
+    let queries: Vec<Query> = jobs.iter().map(|j| j.query.clone()).collect();
+    let parsed: Arc<Vec<DenseVec>> = Arc::new(
+        queries
+            .iter()
+            .map(|q| match q {
+                Query::Knn { vector, .. } | Query::Range { vector, .. } => {
+                    DenseVec::new(vector.clone())
+                }
+            })
+            .collect(),
+    );
+    let queries = Arc::new(queries);
+
+    // Per-job accumulators: (global hits, sim_evals).
+    let mut results: Vec<(Vec<(u64, f64)>, u64)> = vec![(Vec::new(), 0); jobs.len()];
+
+    match mode {
+        ExecMode::Index => {
+            // Scalar path: scatter the batch to the persistent shard
+            // workers, gather per-shard answers.
+            let (reply, rx) = std::sync::mpsc::sync_channel(workers.len());
+            let mut sent = 0usize;
+            for worker in workers {
+                if worker
+                    .tx
+                    .send(ShardJob {
+                        queries: queries.clone(),
+                        parsed: parsed.clone(),
+                        reply: reply.clone(),
+                    })
+                    .is_ok()
+                {
+                    sent += 1;
+                }
+            }
+            drop(reply);
+            let mut answered = 0usize;
+            for (base, per_shard) in rx {
+                answered += 1;
+                for (ji, (hits, evals)) in per_shard.into_iter().enumerate() {
+                    for (id, s) in hits {
+                        results[ji].0.push((base + id as u64, s));
+                    }
+                    results[ji].1 += evals;
+                }
+            }
+            if answered != sent {
+                for r in &mut results {
+                    r.1 = u64::MAX; // a worker died mid-batch; poisoned
+                }
+            }
+        }
+        ExecMode::Engine | ExecMode::Hybrid => {
+            let engine = engine.expect("engine required (checked in new)");
+            let knn_ids: Vec<usize> = queries
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| matches!(q, Query::Knn { .. }))
+                .map(|(i, _)| i)
+                .collect();
+            let range_ids: Vec<usize> = queries
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| matches!(q, Query::Range { .. }))
+                .map(|(i, _)| i)
+                .collect();
+            let kmax = knn_ids
+                .iter()
+                .map(|&i| match &queries[i] {
+                    Query::Knn { k, .. } => *k,
+                    _ => 0,
+                })
+                .max()
+                .unwrap_or(0);
+            let knn_vecs: Vec<DenseVec> =
+                knn_ids.iter().map(|&i| parsed[i].clone()).collect();
+
+            for shard in shards {
+                if !knn_ids.is_empty() {
+                    metrics.engine_calls.fetch_add(1, Relaxed);
+                    let res = match mode {
+                        ExecMode::Engine => shard.knn_engine(engine, &knn_vecs, kmax).map(
+                            |hits| {
+                                hits.into_iter()
+                                    .map(|h| (h, shard.len() as u64))
+                                    .collect::<Vec<_>>()
+                            },
+                        ),
+                        _ => shard.knn_hybrid(engine, &knn_vecs, kmax),
+                    };
+                    match res {
+                        Ok(per_query) => {
+                            for (pos, (hits, evals)) in per_query.into_iter().enumerate() {
+                                let ji = knn_ids[pos];
+                                for (id, s) in hits {
+                                    results[ji].0.push((shard.base + id as u64, s));
+                                }
+                                results[ji].1 += evals;
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("engine batch failed: {e}; falling back to index");
+                            for &ji in &knn_ids {
+                                let Query::Knn { k, .. } = &queries[ji] else { continue };
+                                let (hits, stats) = shard.knn_index(&parsed[ji], *k);
+                                for (id, s) in hits {
+                                    results[ji].0.push((shard.base + id as u64, s));
+                                }
+                                results[ji].1 += stats.sim_evals;
+                            }
+                        }
+                    }
+                }
+                for &ji in &range_ids {
+                    let Query::Range { tau, .. } = &queries[ji] else { continue };
+                    if mode == ExecMode::Hybrid {
+                        metrics.engine_calls.fetch_add(1, Relaxed);
+                        match shard.range_hybrid(engine, std::slice::from_ref(&parsed[ji]), *tau)
+                        {
+                            Ok(mut per_query) => {
+                                let (hits, evals) = per_query.remove(0);
+                                for (id, s) in hits {
+                                    results[ji].0.push((shard.base + id as u64, s));
+                                }
+                                results[ji].1 += evals;
+                            }
+                            Err(e) => {
+                                eprintln!("hybrid range failed: {e}; index fallback");
+                                let (hits, stats) = shard.range_index(&parsed[ji], *tau);
+                                for (id, s) in hits {
+                                    results[ji].0.push((shard.base + id as u64, s));
+                                }
+                                results[ji].1 += stats.sim_evals;
+                            }
+                        }
+                    } else {
+                        let (hits, stats) = shard.range_index(&parsed[ji], *tau);
+                        for (id, s) in hits {
+                            results[ji].0.push((shard.base + id as u64, s));
+                        }
+                        results[ji].1 += stats.sim_evals;
+                    }
+                }
+            }
+        }
+    }
+
+    // Merge + reply.
+    for (job, (mut hits, evals)) in jobs.into_iter().zip(results) {
+        if evals == u64::MAX {
+            metrics.errors.fetch_add(1, Relaxed);
+            let _ = job.reply.send(Err("internal shard failure".into()));
+            continue;
+        }
+        metrics.sim_evals.fetch_add(evals, Relaxed);
+        hits.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        if let Query::Knn { k, .. } = &job.query {
+            hits.truncate(*k);
+        }
+        let hits: Vec<Hit> = hits.into_iter().map(|(id, score)| Hit { id, score }).collect();
+        let _ = job.reply.send(Ok((hits, evals)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+    use crate::index::{LinearScan, QueryStats, SimilarityIndex};
+
+    #[test]
+    fn index_mode_matches_linear_scan() {
+        let pts = uniform_sphere(500, 16, 101);
+        let coord = Coordinator::new(
+            pts.clone(),
+            CoordinatorConfig { n_shards: 3, ..Default::default() },
+        )
+        .unwrap();
+        let lin = LinearScan::build(pts.clone());
+        for qi in [0usize, 250, 499] {
+            let (hits, _) = coord.knn(pts[qi].as_slice().to_vec(), 5).unwrap();
+            let mut st = QueryStats::default();
+            let want = lin.knn(&pts[qi], 5, &mut st);
+            assert_eq!(hits.len(), 5);
+            for (h, (_, s)) in hits.iter().zip(&want) {
+                assert!((h.score - s).abs() < 1e-9);
+            }
+            assert_eq!(hits[0].id, qi as u64);
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.queries, 3);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn range_mode_returns_threshold_matches() {
+        let pts = uniform_sphere(300, 8, 102);
+        let coord = Coordinator::new(
+            pts.clone(),
+            CoordinatorConfig { n_shards: 2, ..Default::default() },
+        )
+        .unwrap();
+        let (hits, _) = coord.range(pts[7].as_slice().to_vec(), 0.5).unwrap();
+        let lin = LinearScan::build(pts.clone());
+        let mut st = QueryStats::default();
+        let want = lin.range(&pts[7], 0.5, &mut st);
+        assert_eq!(hits.len(), want.len());
+        assert_eq!(hits[0].id, 7);
+    }
+
+    #[test]
+    fn concurrent_queries_all_answered() {
+        let pts = uniform_sphere(400, 8, 103);
+        let coord = Coordinator::new(
+            pts.clone(),
+            CoordinatorConfig { n_shards: 2, ..Default::default() },
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for qi in 0..100usize {
+            let coord = coord.clone();
+            let v = pts[qi % 400].as_slice().to_vec();
+            handles.push(std::thread::spawn(move || coord.knn(v, 3).unwrap()));
+        }
+        for (qi, h) in handles.into_iter().enumerate() {
+            let (hits, _) = h.join().unwrap();
+            assert_eq!(hits[0].id, (qi % 400) as u64, "query {qi}");
+        }
+        assert_eq!(coord.stats().queries, 100);
+    }
+}

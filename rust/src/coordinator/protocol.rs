@@ -1,0 +1,222 @@
+//! Wire protocol of the serving engine: newline-delimited JSON over TCP.
+//!
+//! Hand-rolled (de)serialization over `util::Json` (serde is unavailable in
+//! this offline build); the shapes mirror what a serde-tagged enum would
+//! produce: `{"op": "knn", "vector": [...], "k": 10}`.
+
+use anyhow::{bail, Result};
+
+use crate::util::Json;
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// k nearest neighbors by cosine similarity.
+    Knn { vector: Vec<f32>, k: usize },
+    /// All items with `sim >= tau`.
+    Range { vector: Vec<f32>, tau: f64 },
+    /// Server + query statistics.
+    Stats,
+    /// Health check.
+    Ping,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Knn { vector, k } => Json::obj(vec![
+                ("op", Json::Str("knn".into())),
+                ("vector", Json::arr_f32(vector.iter().copied())),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            Request::Range { vector, tau } => Json::obj(vec![
+                ("op", Json::Str("range".into())),
+                ("vector", Json::arr_f32(vector.iter().copied())),
+                ("tau", Json::Num(*tau)),
+            ]),
+            Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Request> {
+        Ok(match v.req("op")?.as_str()? {
+            "knn" => Request::Knn {
+                vector: v.req("vector")?.as_f32_vec()?,
+                k: v.req("k")?.as_usize()?,
+            },
+            "range" => Request::Range {
+                vector: v.req("vector")?.as_f32_vec()?,
+                tau: v.req("tau")?.as_f64()?,
+            },
+            "stats" => Request::Stats,
+            "ping" => Request::Ping,
+            other => bail!("unknown op '{other}'"),
+        })
+    }
+
+    pub fn parse(line: &str) -> Result<Request> {
+        Self::from_json(&Json::parse(line)?)
+    }
+}
+
+/// One scored hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hit {
+    pub id: u64,
+    pub score: f64,
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok {
+        hits: Vec<Hit>,
+        /// Exact similarity evaluations spent on this query (pruning power).
+        sim_evals: u64,
+    },
+    Stats(StatsSnapshot),
+    Pong,
+    Error { message: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Ok { hits, sim_evals } => Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                (
+                    "hits",
+                    Json::Arr(
+                        hits.iter()
+                            .map(|h| {
+                                Json::obj(vec![
+                                    ("id", Json::Num(h.id as f64)),
+                                    ("score", Json::Num(h.score)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("sim_evals", Json::Num(*sim_evals as f64)),
+            ]),
+            Response::Stats(s) => Json::obj(vec![
+                ("status", Json::Str("stats".into())),
+                ("queries", Json::Num(s.queries as f64)),
+                ("batches", Json::Num(s.batches as f64)),
+                ("errors", Json::Num(s.errors as f64)),
+                ("corpus_size", Json::Num(s.corpus_size as f64)),
+                ("shards", Json::Num(s.shards as f64)),
+                ("sim_evals", Json::Num(s.sim_evals as f64)),
+                ("engine_calls", Json::Num(s.engine_calls as f64)),
+                ("pruned", Json::Num(s.pruned as f64)),
+                ("latency_us_p50", Json::Num(s.latency_us_p50 as f64)),
+                ("latency_us_p99", Json::Num(s.latency_us_p99 as f64)),
+                ("latency_us_max", Json::Num(s.latency_us_max as f64)),
+            ]),
+            Response::Pong => Json::obj(vec![("status", Json::Str("pong".into()))]),
+            Response::Error { message } => Json::obj(vec![
+                ("status", Json::Str("error".into())),
+                ("message", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response> {
+        Ok(match v.req("status")?.as_str()? {
+            "ok" => Response::Ok {
+                hits: v
+                    .req("hits")?
+                    .as_arr()?
+                    .iter()
+                    .map(|h| {
+                        Ok(Hit {
+                            id: h.req("id")?.as_f64()? as u64,
+                            score: h.req("score")?.as_f64()?,
+                        })
+                    })
+                    .collect::<Result<_>>()?,
+                sim_evals: v.req("sim_evals")?.as_f64()? as u64,
+            },
+            "stats" => {
+                let g = |key: &str| -> Result<u64> { Ok(v.req(key)?.as_f64()? as u64) };
+                Response::Stats(StatsSnapshot {
+                    queries: g("queries")?,
+                    batches: g("batches")?,
+                    errors: g("errors")?,
+                    corpus_size: g("corpus_size")?,
+                    shards: g("shards")?,
+                    sim_evals: g("sim_evals")?,
+                    engine_calls: g("engine_calls")?,
+                    pruned: g("pruned")?,
+                    latency_us_p50: g("latency_us_p50")?,
+                    latency_us_p99: g("latency_us_p99")?,
+                    latency_us_max: g("latency_us_max")?,
+                })
+            }
+            "pong" => Response::Pong,
+            "error" => Response::Error { message: v.req("message")?.as_str()?.to_string() },
+            other => bail!("unknown status '{other}'"),
+        })
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        Self::from_json(&Json::parse(line)?)
+    }
+}
+
+/// Point-in-time metrics snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub queries: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub corpus_size: u64,
+    pub shards: u64,
+    pub sim_evals: u64,
+    pub engine_calls: u64,
+    pub pruned: u64,
+    /// Latency percentiles in microseconds.
+    pub latency_us_p50: u64,
+    pub latency_us_p99: u64,
+    pub latency_us_max: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips() {
+        let reqs = vec![
+            Request::Knn { vector: vec![1.0, 2.0], k: 5 },
+            Request::Range { vector: vec![-0.5], tau: 0.25 },
+            Request::Stats,
+            Request::Ping,
+        ];
+        for r in reqs {
+            let line = r.to_json().to_string();
+            assert_eq!(Request::parse(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let resps = vec![
+            Response::Ok { hits: vec![Hit { id: 3, score: 0.9 }], sim_evals: 17 },
+            Response::Stats(StatsSnapshot { queries: 5, corpus_size: 100, ..Default::default() }),
+            Response::Pong,
+            Response::Error { message: "boom".into() },
+        ];
+        for r in resps {
+            let line = r.to_json().to_string();
+            assert_eq!(Response::parse(&line).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        assert!(Request::parse(r#"{"op": "explode"}"#).is_err());
+        assert!(Request::parse(r#"{"vector": []}"#).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Sharding and scatter-gather merge.
+
+use std::sync::Arc;
+
+use crate::metrics::DenseVec;
+
+use super::shard::{IndexKind, Shard};
+use crate::bounds::BoundKind;
+
+/// Split a corpus into `n_shards` contiguous blocks and build one [`Shard`]
+/// per block (contiguous blocks keep global-id math trivial and preserve
+/// any locality the ingest order had).
+pub fn build_shards(
+    corpus: Vec<DenseVec>,
+    n_shards: usize,
+    kind: IndexKind,
+    bound: BoundKind,
+    hybrid_pivots: usize,
+) -> Vec<Arc<Shard>> {
+    let n = corpus.len();
+    let n_shards = n_shards.max(1).min(n.max(1));
+    let per = n.div_ceil(n_shards);
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut corpus = corpus;
+    let mut base = 0u64;
+    for _ in 0..n_shards {
+        let take = per.min(corpus.len());
+        let rest = corpus.split_off(take);
+        let block = corpus;
+        corpus = rest;
+        if block.is_empty() {
+            break;
+        }
+        let len = block.len() as u64;
+        shards.push(Arc::new(Shard::new(base, block, kind, bound, hybrid_pivots)));
+        base += len;
+    }
+    shards
+}
+
+/// Merge per-shard kNN results (local ids) into a global top-k.
+pub fn merge_knn(
+    per_shard: &[(u64, Vec<(u32, f64)>)],
+    k: usize,
+) -> Vec<(u64, f64)> {
+    // Per-shard lists are already <= k; a sort of <= shards*k entries is
+    // cheaper than a heap at serving sizes.
+    let mut all: Vec<(u64, f64)> = Vec::new();
+    for (base, hits) in per_shard {
+        for &(id, s) in hits {
+            all.push((base + id as u64, s));
+        }
+    }
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+/// Merge per-shard range results into a single sorted list.
+pub fn merge_range(per_shard: &[(u64, Vec<(u32, f64)>)]) -> Vec<(u64, f64)> {
+    let mut all: Vec<(u64, f64)> = Vec::new();
+    for (base, hits) in per_shard {
+        for &(id, s) in hits {
+            all.push((base + id as u64, s));
+        }
+    }
+    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn shards_cover_corpus_contiguously() {
+        let pts = uniform_sphere(103, 8, 91);
+        let shards = build_shards(pts, 4, IndexKind::Linear, BoundKind::Mult, 0);
+        assert_eq!(shards.len(), 4);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 103);
+        let mut expect_base = 0u64;
+        for s in &shards {
+            assert_eq!(s.base, expect_base);
+            expect_base += s.len() as u64;
+        }
+    }
+
+    #[test]
+    fn merge_knn_takes_global_best() {
+        let a = (0u64, vec![(0u32, 0.9), (1, 0.5)]);
+        let b = (100u64, vec![(0u32, 0.8), (1, 0.7)]);
+        let merged = merge_knn(&[a, b], 3);
+        assert_eq!(merged, vec![(0, 0.9), (100, 0.8), (101, 0.7)]);
+    }
+
+    #[test]
+    fn merge_range_sorts_globally() {
+        let a = (0u64, vec![(1u32, 0.6)]);
+        let b = (10u64, vec![(2u32, 0.9)]);
+        let merged = merge_range(&[a, b]);
+        assert_eq!(merged, vec![(12, 0.9), (1, 0.6)]);
+    }
+
+    #[test]
+    fn more_shards_than_items() {
+        let pts = uniform_sphere(3, 4, 92);
+        let shards = build_shards(pts, 10, IndexKind::Linear, BoundKind::Mult, 0);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 3);
+    }
+}

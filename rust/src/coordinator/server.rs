@@ -1,0 +1,179 @@
+//! TCP front end: newline-delimited JSON requests, thread-per-connection,
+//! plus a typed blocking client.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{Hit, Request, Response};
+use super::Coordinator;
+
+/// Serve a coordinator on `addr` on a background thread; returns the bound
+/// address (useful with port 0). The listener runs until process exit.
+pub fn serve(coordinator: Coordinator, addr: &str) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("simetra-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                match stream {
+                    Ok(socket) => {
+                        let coord = coordinator.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("simetra-conn".into())
+                            .spawn(move || {
+                                if let Err(e) = handle_conn(coord, socket) {
+                                    let msg = e.to_string();
+                                    if !msg.contains("reset") && !msg.contains("Broken pipe") {
+                                        eprintln!("connection error: {msg}");
+                                    }
+                                }
+                            });
+                    }
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+        })
+        .context("spawn accept thread")?;
+    Ok(local)
+}
+
+fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
+    socket.set_nodelay(true)?;
+    let mut writer = socket.try_clone()?;
+    let reader = BufReader::new(socket);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(req) => dispatch(&coord, req),
+            Err(e) => Response::Error { message: format!("bad request: {e}") },
+        };
+        let mut out = response.to_json().to_string().into_bytes();
+        out.push(b'\n');
+        writer.write_all(&out)?;
+    }
+    Ok(())
+}
+
+fn dispatch(coord: &Coordinator, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Stats => Response::Stats(coord.stats()),
+        Request::Knn { vector, k } => match coord.knn(vector, k.max(1)) {
+            Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+        Request::Range { vector, tau } => match coord.range(vector, tau) {
+            Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+    }
+}
+
+/// Blocking line-protocol client for examples, tests and load generators.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect")?;
+        stream.set_nodelay(true)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn request(&mut self, req: &Request) -> Result<Response> {
+        let mut line = req.to_json().to_string().into_bytes();
+        line.push(b'\n');
+        self.writer.write_all(&line)?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Response::parse(&buf)
+    }
+
+    /// Send raw bytes (for protocol-robustness tests).
+    pub fn request_raw(&mut self, raw: &[u8]) -> Result<Response> {
+        self.writer.write_all(raw)?;
+        let mut buf = String::new();
+        self.reader.read_line(&mut buf)?;
+        Response::parse(&buf)
+    }
+
+    pub fn knn(&mut self, vector: Vec<f32>, k: usize) -> Result<Vec<Hit>> {
+        match self.request(&Request::Knn { vector, k })? {
+            Response::Ok { hits, .. } => Ok(hits),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn serve_and_query_over_tcp() {
+        let pts = uniform_sphere(200, 8, 111);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let addr = serve(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(addr).unwrap();
+
+        match client.request(&Request::Ping).unwrap() {
+            Response::Pong => {}
+            other => panic!("{other:?}"),
+        }
+        let hits = client.knn(pts[3].as_slice().to_vec(), 4).unwrap();
+        assert_eq!(hits.len(), 4);
+        assert_eq!(hits[0].id, 3);
+        match client.request(&Request::Stats).unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.corpus_size, 200);
+                assert!(s.queries >= 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Malformed input yields an error response, not a dropped connection.
+        match client.request_raw(b"{not json}\n").unwrap() {
+            Response::Error { .. } => {}
+            other => panic!("{other:?}"),
+        }
+        // The connection still works afterwards.
+        let hits = client.knn(pts[5].as_slice().to_vec(), 2).unwrap();
+        assert_eq!(hits[0].id, 5);
+    }
+
+    #[test]
+    fn multiple_concurrent_clients() {
+        let pts = uniform_sphere(100, 8, 112);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let addr = serve(coord, "127.0.0.1:0").unwrap();
+        let mut handles = Vec::new();
+        for c in 0..8usize {
+            let pts = pts.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for qi in 0..10 {
+                    let id = (c * 10 + qi) % 100;
+                    let hits = client.knn(pts[id].as_slice().to_vec(), 1).unwrap();
+                    assert_eq!(hits[0].id, id as u64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

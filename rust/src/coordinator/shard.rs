@@ -1,0 +1,360 @@
+//! A corpus shard: local index + dense matrix + the per-shard execution
+//! strategies (pure index walk, batched PJRT scoring, hybrid pivot filter).
+
+use anyhow::Result;
+
+use crate::bounds::BoundKind;
+use crate::index::{
+    BallTree, CoverTree, Gnat, KnnHeap, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex,
+    VpTree,
+};
+use crate::metrics::{DenseVec, SimVector};
+use crate::runtime::EngineHandle;
+
+/// Which index structure each shard builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexKind {
+    Linear,
+    Vp,
+    Ball,
+    MTree,
+    Cover,
+    Laesa,
+    Gnat,
+}
+
+impl IndexKind {
+    pub fn parse(s: &str) -> Option<IndexKind> {
+        Some(match s {
+            "linear" => IndexKind::Linear,
+            "vp" | "vp-tree" | "vptree" => IndexKind::Vp,
+            "ball" | "ball-tree" => IndexKind::Ball,
+            "m" | "m-tree" | "mtree" => IndexKind::MTree,
+            "cover" | "cover-tree" => IndexKind::Cover,
+            "laesa" => IndexKind::Laesa,
+            "gnat" => IndexKind::Gnat,
+            _ => return None,
+        })
+    }
+
+    pub fn build(
+        self,
+        items: Vec<DenseVec>,
+        bound: BoundKind,
+    ) -> Box<dyn SimilarityIndex<DenseVec>> {
+        match self {
+            IndexKind::Linear => Box::new(LinearScan::build(items)),
+            IndexKind::Vp => Box::new(VpTree::build(items, bound, 0x5ee_d)),
+            IndexKind::Ball => Box::new(BallTree::build(items, bound, 16)),
+            IndexKind::MTree => Box::new(MTree::build(items, bound, 12)),
+            IndexKind::Cover => Box::new(CoverTree::build(items, bound)),
+            IndexKind::Laesa => Box::new(Laesa::build(items, bound, 24)),
+            IndexKind::Gnat => Box::new(Gnat::build(items, bound, 8)),
+        }
+    }
+}
+
+/// Execution strategy for query batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Per-query index walk (scalar hot path).
+    Index,
+    /// Batched exhaustive scoring through the PJRT artifact (top-k only;
+    /// range queries fall back to the index).
+    Engine,
+    /// LAESA pivot filtering through the PJRT `pivot_filter` artifact,
+    /// exact re-scoring of survivors in rust.
+    Hybrid,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        Some(match s {
+            "index" => ExecMode::Index,
+            "engine" => ExecMode::Engine,
+            "hybrid" => ExecMode::Hybrid,
+            _ => return None,
+        })
+    }
+}
+
+/// One shard of the corpus with its local index.
+pub struct Shard {
+    /// Global id of local item 0 (shards own contiguous id blocks).
+    pub base: u64,
+    items: Vec<DenseVec>,
+    /// Row-major normalized matrix (engine path input).
+    flat: Vec<f32>,
+    d: usize,
+    index: Box<dyn SimilarityIndex<DenseVec>>,
+    /// Pivot table for the hybrid path.
+    laesa: Option<Laesa<DenseVec>>,
+    /// Pivot->corpus similarity table, f32 row-major (p, n), for the engine.
+    pivot_table_f32: Vec<f32>,
+    bound: BoundKind,
+}
+
+impl Shard {
+    pub fn new(
+        base: u64,
+        items: Vec<DenseVec>,
+        kind: IndexKind,
+        bound: BoundKind,
+        hybrid_pivots: usize,
+    ) -> Self {
+        let d = items.first().map(|v| v.len()).unwrap_or(0);
+        let mut flat = Vec::with_capacity(items.len() * d);
+        for it in &items {
+            flat.extend_from_slice(it.as_slice());
+        }
+        let laesa = if hybrid_pivots > 0 && !items.is_empty() {
+            Some(Laesa::build(items.clone(), bound, hybrid_pivots))
+        } else {
+            None
+        };
+        let pivot_table_f32 = match &laesa {
+            Some(l) => {
+                let n = items.len();
+                let mut t = Vec::with_capacity(l.n_pivots() * n);
+                for p in 0..l.n_pivots() {
+                    t.extend(l.table_row(p).iter().map(|&v| v as f32));
+                }
+                t
+            }
+            None => Vec::new(),
+        };
+        let index = kind.build(items.clone(), bound);
+        Shard { base, items, flat, d, index, laesa, pivot_table_f32, bound }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn flat_corpus(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// Per-query kNN through the local index.
+    pub fn knn_index(&self, q: &DenseVec, k: usize) -> (Vec<(u32, f64)>, QueryStats) {
+        let mut stats = QueryStats::default();
+        let hits = self.index.knn(q, k, &mut stats);
+        (hits, stats)
+    }
+
+    /// Per-query range through the local index.
+    pub fn range_index(&self, q: &DenseVec, tau: f64) -> (Vec<(u32, f64)>, QueryStats) {
+        let mut stats = QueryStats::default();
+        let hits = self.index.range(q, tau, &mut stats);
+        (hits, stats)
+    }
+
+    /// Batched kNN over the whole shard through the PJRT artifact, tiling
+    /// the corpus when it exceeds the largest artifact.
+    pub fn knn_engine(
+        &self,
+        engine: &EngineHandle,
+        queries: &[DenseVec],
+        k: usize,
+    ) -> Result<Vec<Vec<(u32, f64)>>> {
+        let qn = queries.len();
+        let mut qflat = Vec::with_capacity(qn * self.d);
+        for q in queries {
+            qflat.extend_from_slice(q.as_slice());
+        }
+        // Tile size: the largest n available for this d is discovered by
+        // probing; use 8192 (the biggest emitted variant) and fall back to
+        // smaller tiles automatically via variant selection.
+        let tile = 8192usize;
+        let mut heaps: Vec<KnnHeap> = (0..qn).map(|_| KnnHeap::new(k)).collect();
+        let mut start = 0usize;
+        while start < self.items.len() {
+            let n = tile.min(self.items.len() - start);
+            let corpus = self.flat[start * self.d..(start + n) * self.d].to_vec();
+            let out = engine
+                .score_topk(qflat.clone(), qn, corpus, n, self.d, k.min(n))
+                ?;
+            for qi in 0..qn {
+                for j in 0..out.k {
+                    let idx = out.indices[qi * out.k + j];
+                    let val = out.values[qi * out.k + j] as f64;
+                    heaps[qi].offer((start + idx as usize) as u32, val);
+                }
+            }
+            start += n;
+        }
+        Ok(heaps.into_iter().map(|h| h.into_sorted()).collect())
+    }
+
+    /// Certified (lb, ub) for every (query, corpus item) through the PJRT
+    /// `pivot_filter` artifact, tiling the corpus when the shard exceeds the
+    /// largest artifact's n. Returns row-major (qn, n) arrays.
+    fn pivot_bounds_tiled(
+        &self,
+        engine: &EngineHandle,
+        sim_qp: &[f32],
+        qn: usize,
+        p: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = self.items.len();
+        const TILE: usize = 4096;
+        let mut lb = vec![0.0f32; qn * n];
+        let mut ub = vec![0.0f32; qn * n];
+        let mut start = 0usize;
+        while start < n {
+            let tn = TILE.min(n - start);
+            // Column slice of the row-major (p, n) pivot table.
+            let mut pc = Vec::with_capacity(p * tn);
+            for row in 0..p {
+                pc.extend_from_slice(&self.pivot_table_f32[row * n + start..row * n + start + tn]);
+            }
+            let out = engine.pivot_filter(sim_qp.to_vec(), qn, pc, p, tn)?;
+            for qi in 0..qn {
+                lb[qi * n + start..qi * n + start + tn]
+                    .copy_from_slice(&out.lb[qi * tn..(qi + 1) * tn]);
+                ub[qi * n + start..qi * n + start + tn]
+                    .copy_from_slice(&out.ub[qi * tn..(qi + 1) * tn]);
+            }
+            start += tn;
+        }
+        Ok((lb, ub))
+    }
+
+    /// Query-pivot similarities (exact, cheap: p dots per query), row-major.
+    fn query_pivot_sims(&self, laesa: &Laesa<DenseVec>, queries: &[DenseVec]) -> Vec<f32> {
+        let mut sim_qp = Vec::with_capacity(queries.len() * laesa.n_pivots());
+        for q in queries {
+            for &pid in laesa.pivots() {
+                sim_qp.push(q.sim(&self.items[pid as usize]) as f32);
+            }
+        }
+        sim_qp
+    }
+
+    /// Hybrid kNN: pivot similarities in rust, certified bounds through the
+    /// PJRT `pivot_filter` artifact, exact re-scoring of survivors in rust.
+    /// Returns per-query hits plus the number of exact evaluations spent.
+    pub fn knn_hybrid(
+        &self,
+        engine: &EngineHandle,
+        queries: &[DenseVec],
+        k: usize,
+    ) -> Result<Vec<(Vec<(u32, f64)>, u64)>> {
+        let laesa = self
+            .laesa
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("shard built without pivots"))?;
+        let qn = queries.len();
+        let p = laesa.n_pivots();
+        let n = self.items.len();
+        let sim_qp = self.query_pivot_sims(laesa, queries);
+        let bounds = {
+            let (lb, ub) = self.pivot_bounds_tiled(engine, &sim_qp, qn, p)?;
+            crate::runtime::PivotBounds { lb, ub, n }
+        };
+        let mut out = Vec::with_capacity(qn);
+        // f32 bound slack: the artifact computes in f32; widen certified
+        // intervals by an epsilon so no true neighbor is lost to roundoff.
+        const EPS: f64 = 1e-5;
+        for qi in 0..qn {
+            let lb = &bounds.lb[qi * n..(qi + 1) * n];
+            let ub = &bounds.ub[qi * n..(qi + 1) * n];
+            // Floor: k-th largest certified lower bound.
+            let mut lbs: Vec<f64> = lb.iter().map(|&v| v as f64 - EPS).collect();
+            let kth = if lbs.len() > k {
+                let (_, kth, _) = lbs.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+                *kth
+            } else {
+                -1.0
+            };
+            let mut heap = KnnHeap::new(k);
+            let mut evals = 0u64;
+            for (i, &u) in ub.iter().enumerate() {
+                if (u as f64 + EPS) >= kth {
+                    let s = queries[qi].sim(&self.items[i]);
+                    evals += 1;
+                    heap.offer(i as u32, s);
+                }
+            }
+            out.push((heap.into_sorted(), evals));
+        }
+        Ok(out)
+    }
+
+    /// Hybrid range: like `knn_hybrid` but with a fixed threshold.
+    pub fn range_hybrid(
+        &self,
+        engine: &EngineHandle,
+        queries: &[DenseVec],
+        tau: f64,
+    ) -> Result<Vec<(Vec<(u32, f64)>, u64)>> {
+        let laesa = self
+            .laesa
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("shard built without pivots"))?;
+        let qn = queries.len();
+        let p = laesa.n_pivots();
+        let n = self.items.len();
+        let sim_qp = self.query_pivot_sims(laesa, queries);
+        let bounds = {
+            let (lb, ub) = self.pivot_bounds_tiled(engine, &sim_qp, qn, p)?;
+            crate::runtime::PivotBounds { lb, ub, n }
+        };
+        const EPS: f64 = 1e-5;
+        let mut out = Vec::with_capacity(qn);
+        for qi in 0..qn {
+            let ub = &bounds.ub[qi * n..(qi + 1) * n];
+            let mut hits = Vec::new();
+            let mut evals = 0u64;
+            for (i, &u) in ub.iter().enumerate() {
+                if (u as f64 + EPS) >= tau {
+                    let s = queries[qi].sim(&self.items[i]);
+                    evals += 1;
+                    if s >= tau {
+                        hits.push((i as u32, s));
+                    }
+                }
+            }
+            hits.sort_by(|a: &(u32, f64), b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            out.push((hits, evals));
+        }
+        Ok(out)
+    }
+
+    pub fn bound(&self) -> BoundKind {
+        self.bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn index_kinds_parse() {
+        assert_eq!(IndexKind::parse("vp"), Some(IndexKind::Vp));
+        assert_eq!(IndexKind::parse("m-tree"), Some(IndexKind::MTree));
+        assert_eq!(IndexKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn shard_local_search_matches_linear() {
+        let pts = uniform_sphere(300, 16, 81);
+        let shard = Shard::new(0, pts.clone(), IndexKind::Vp, BoundKind::Mult, 0);
+        let lin = Shard::new(0, pts.clone(), IndexKind::Linear, BoundKind::Mult, 0);
+        let (a, _) = shard.knn_index(&pts[5], 7);
+        let (b, _) = lin.knn_index(&pts[5], 7);
+        for ((_, x), (_, y)) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates its bounds on value grids, not datasets; the index
+//! and serving experiments need corpora. Substitution (documented in
+//! DESIGN.md): we generate the workloads the paper's introduction motivates —
+//! dense neural-network-embedding-like vectors (uniform sphere and von
+//! Mises–Fisher cluster mixtures) and sparse text-like tf-idf vectors with
+//! Zipf-distributed vocabulary.
+
+pub mod sphere;
+pub mod vmf;
+pub mod zipf;
+
+pub use sphere::uniform_sphere;
+pub use vmf::{vmf_mixture, VmfSpec};
+pub use zipf::{zipf_corpus, ZipfSpec};

@@ -1,0 +1,54 @@
+//! Uniform samples on the unit sphere S^{d-1}.
+
+use crate::metrics::DenseVec;
+use crate::util::Rng;
+
+/// `n` i.i.d. uniform unit vectors in `d` dimensions (isotropic Gaussian,
+/// normalized) — the hardest case for pruning (no cluster structure).
+pub fn uniform_sphere(n: usize, d: usize, seed: u64) -> Vec<DenseVec> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| sample_unit(&mut rng, d)).collect()
+}
+
+pub(crate) fn sample_unit(rng: &mut Rng, d: usize) -> DenseVec {
+    loop {
+        let raw: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let norm: f64 = raw.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            let inv = (1.0 / norm) as f32;
+            return DenseVec::from_normalized(raw.iter().map(|&v| v * inv).collect());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::SimVector;
+
+    #[test]
+    fn vectors_are_unit_norm() {
+        for v in uniform_sphere(50, 16, 1) {
+            let n: f64 = v.as_slice().iter().map(|&x| x as f64 * x as f64).sum();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(uniform_sphere(5, 8, 7), uniform_sphere(5, 8, 7));
+        assert_ne!(uniform_sphere(5, 8, 7), uniform_sphere(5, 8, 8));
+    }
+
+    #[test]
+    fn high_dim_similarities_concentrate_near_zero() {
+        // Distance concentration (paper §2): random high-dim directions are
+        // nearly orthogonal.
+        let pts = uniform_sphere(200, 256, 3);
+        let mut max_abs: f64 = 0.0;
+        for i in 1..pts.len() {
+            max_abs = max_abs.max(pts[0].sim(&pts[i]).abs());
+        }
+        assert!(max_abs < 0.35, "max |sim| = {max_abs}");
+    }
+}

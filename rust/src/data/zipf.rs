@@ -1,0 +1,130 @@
+//! Sparse text-like corpora: Zipf-distributed term draws, log-tf * idf
+//! weighting — the workload shape of paper §2's text-analysis motivation.
+
+use std::collections::HashMap;
+
+use crate::sparse::SparseVec;
+use crate::util::Rng;
+
+/// Parameters of a synthetic tf-idf corpus.
+#[derive(Debug, Clone)]
+pub struct ZipfSpec {
+    pub n_docs: usize,
+    pub vocab: usize,
+    /// Zipf exponent (~1.0 for natural language).
+    pub exponent: f64,
+    /// Mean document length in token draws.
+    pub doc_len: usize,
+    pub seed: u64,
+    /// Number of latent topics; each doc draws most tokens from its topic's
+    /// reshuffled rank order, giving cluster structure like real corpora.
+    pub topics: usize,
+}
+
+impl Default for ZipfSpec {
+    fn default() -> Self {
+        ZipfSpec { n_docs: 5_000, vocab: 20_000, exponent: 1.07, doc_len: 120, seed: 42, topics: 25 }
+    }
+}
+
+/// Generate the corpus: returns normalized tf-idf sparse vectors.
+pub fn zipf_corpus(spec: &ZipfSpec) -> Vec<SparseVec> {
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    // Zipf CDF table for inverse-transform sampling.
+    let weights: Vec<f64> =
+        (1..=spec.vocab).map(|r| 1.0 / (r as f64).powf(spec.exponent)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(spec.vocab);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    // Topic structure: the head of the Zipf curve (top 64 ranks) is shared
+    // global vocabulary (stopword-like); tail ranks map into a per-topic
+    // vocabulary block, so documents of one topic overlap heavily in
+    // content terms (like real corpora) while different topics are nearly
+    // orthogonal after idf weighting.
+    let head = 64usize.min(spec.vocab);
+    let block_len = ((spec.vocab - head) / spec.topics.max(1)).max(1);
+
+    // First pass: raw term frequencies per doc.
+    let mut docs_tf: Vec<HashMap<u32, u32>> = Vec::with_capacity(spec.n_docs);
+    let mut df: HashMap<u32, u32> = HashMap::new();
+    for _ in 0..spec.n_docs {
+        let topic = rng.below(spec.topics);
+        let len = (spec.doc_len / 2).max(1) + rng.below(spec.doc_len + 1);
+        let mut tf: HashMap<u32, u32> = HashMap::new();
+        for _ in 0..len {
+            let u: f64 = rng.f64();
+            let rank = match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) | Err(i) => i.min(spec.vocab - 1),
+            };
+            // Head terms stay global; tail terms land in the topic block
+            // (rank order preserved inside the block, keeping Zipf shape).
+            let term = if rank < head {
+                rank
+            } else {
+                head + topic * block_len + (rank - head) % block_len
+            };
+            *tf.entry(term as u32).or_insert(0) += 1;
+        }
+        for &t in tf.keys() {
+            *df.entry(t).or_insert(0) += 1;
+        }
+        docs_tf.push(tf);
+    }
+
+    // Second pass: log-tf * idf, normalized.
+    let n = spec.n_docs as f64;
+    docs_tf
+        .into_iter()
+        .map(|tf| {
+            let pairs: Vec<(u32, f32)> = tf
+                .into_iter()
+                .map(|(t, f)| {
+                    let idf = (n / (1.0 + df[&t] as f64)).ln().max(0.0);
+                    (t, ((1.0 + f as f64).ln() * idf) as f32)
+                })
+                .filter(|&(_, w)| w > 0.0)
+                .collect();
+            SparseVec::new(pairs, spec.vocab)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_sparse_and_normalized() {
+        let spec = ZipfSpec { n_docs: 100, vocab: 2_000, doc_len: 60, ..Default::default() };
+        let docs = zipf_corpus(&spec);
+        assert_eq!(docs.len(), 100);
+        for d in &docs {
+            assert!(d.nnz() > 0, "empty doc");
+            assert!(d.nnz() < 400, "doc not sparse: {}", d.nnz());
+            let norm: f64 = d.iter().map(|(_, v)| v as f64 * v as f64).sum();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = ZipfSpec { n_docs: 20, vocab: 500, doc_len: 30, ..Default::default() };
+        assert_eq!(zipf_corpus(&spec), zipf_corpus(&spec));
+    }
+
+    #[test]
+    fn similarities_are_nonnegative_and_in_range() {
+        let spec = ZipfSpec { n_docs: 50, vocab: 1_000, doc_len: 40, ..Default::default() };
+        let docs = zipf_corpus(&spec);
+        for i in 0..docs.len() {
+            for j in 0..docs.len() {
+                let s = docs[i].dot(&docs[j]);
+                assert!((-1e-9..=1.0 + 1e-9).contains(&s), "s = {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Regeneration of every figure in the paper's evaluation section.
+//!
+//! Each function returns the figure's data as rows and can write it as CSV;
+//! `simetra figures` is the CLI front end. Figures are value grids over the
+//! input similarities `s1 = sim(x, z)`, `s2 = sim(z, y)`:
+//!
+//! * Fig. 1: Euclidean (a) vs Arccos (b) bound surfaces on `[-1, 1]^2` and
+//!   their difference (c) — max difference 0.5 at (0.5, 0.5).
+//! * Fig. 2: all six bound surfaces on the non-negative domain `[0, 1]^2`.
+//! * Fig. 3: empirical verification of the bound partial order.
+//! * Fig. 4: differences of the simplified bounds to the tight bound.
+//! * Fig. 5: `Mult - Arccos` in f64 — numerical noise at ~1e-16.
+//! * §4.1 statistic: average Euclidean vs Arccos bound over the grid.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::bounds::{order, BoundKind};
+
+/// A sampled surface `z = f(s1, s2)` over a uniform grid.
+pub struct Surface {
+    pub name: String,
+    pub lo: f64,
+    pub hi: f64,
+    pub steps: usize,
+    /// Row-major `steps x steps`: `values[i * steps + j] = f(lo + i*h, lo + j*h)`.
+    pub values: Vec<f64>,
+}
+
+impl Surface {
+    pub fn sample(name: &str, lo: f64, hi: f64, steps: usize, f: impl Fn(f64, f64) -> f64) -> Self {
+        let h = (hi - lo) / (steps - 1) as f64;
+        let mut values = Vec::with_capacity(steps * steps);
+        for i in 0..steps {
+            for j in 0..steps {
+                values.push(f(lo + i as f64 * h, lo + j as f64 * h));
+            }
+        }
+        Surface { name: name.to_string(), lo, hi, steps, values }
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.values[i * self.steps + j]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Write `s1,s2,value` CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+        );
+        writeln!(f, "s1,s2,{}", self.name)?;
+        let h = (self.hi - self.lo) / (self.steps - 1) as f64;
+        for i in 0..self.steps {
+            for j in 0..self.steps {
+                writeln!(
+                    f,
+                    "{:.6},{:.6},{:.17e}",
+                    self.lo + i as f64 * h,
+                    self.lo + j as f64 * h,
+                    self.at(i, j)
+                )?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default grid resolution (the paper plots are ~512 px wide; 401 keeps the
+/// §4.1 statistic at the paper's printed precision).
+pub const GRID: usize = 401;
+
+/// Fig. 1: Euclidean and Arccos surfaces on `[-1, 1]^2` plus difference.
+pub fn fig1(steps: usize) -> Vec<Surface> {
+    let eucl = Surface::sample("euclidean_eq7", -1.0, 1.0, steps, |a, b| {
+        BoundKind::Euclidean.lower(a, b)
+    });
+    let arcc =
+        Surface::sample("arccos_eq9", -1.0, 1.0, steps, |a, b| BoundKind::Arccos.lower(a, b));
+    // Fig. 1c: difference of the *effective* bounds — any lower bound below
+    // the trivial -1 is clamped (a bound below -1 prunes nothing). This is
+    // what makes the paper's "max difference 0.5 at (0.5, 0.5)" true even
+    // though the raw Euclidean bound dives to -7.
+    let diff = Surface {
+        name: "arccos_minus_euclidean".into(),
+        lo: -1.0,
+        hi: 1.0,
+        steps,
+        values: arcc
+            .values
+            .iter()
+            .zip(&eucl.values)
+            .map(|(a, e)| a.max(-1.0) - e.max(-1.0))
+            .collect(),
+    };
+    vec![eucl, arcc, diff]
+}
+
+/// Fig. 2: the six Table-1 bounds on the non-negative domain `[0, 1]^2`.
+pub fn fig2(steps: usize) -> Vec<Surface> {
+    [
+        BoundKind::Euclidean,
+        BoundKind::Arccos,
+        BoundKind::Mult,
+        BoundKind::EuclLb,
+        BoundKind::MultLb2,
+        BoundKind::MultLb1,
+    ]
+    .iter()
+    .map(|&k| Surface::sample(k.name(), 0.0, 1.0, steps, move |a, b| k.lower(a, b)))
+    .collect()
+}
+
+/// Fig. 3: empirical verification of the partial order; returns
+/// `(relation, max violation over the grid)` — all must be <= ~1e-15.
+pub fn fig3(steps: usize) -> Vec<(String, f64)> {
+    order::verify_order(steps)
+}
+
+/// Fig. 4: differences of the three simplified bounds to the tight bound
+/// on `[0, 1]^2`.
+pub fn fig4(steps: usize) -> Vec<Surface> {
+    [BoundKind::EuclLb, BoundKind::MultLb2, BoundKind::MultLb1]
+        .iter()
+        .map(|&k| {
+            Surface::sample(
+                &format!("arccos_minus_{}", k.name()),
+                0.0,
+                1.0,
+                steps,
+                move |a, b| BoundKind::Arccos.lower(a, b) - k.lower(a, b),
+            )
+        })
+        .collect()
+}
+
+/// Fig. 5: `Mult - Arccos` (f64), expected |.| < 5e-15 everywhere.
+pub fn fig5(steps: usize) -> Surface {
+    Surface::sample("mult_minus_arccos", -1.0, 1.0, steps, |a, b| {
+        BoundKind::Mult.lower(a, b) - BoundKind::Arccos.lower(a, b)
+    })
+}
+
+/// §4.1 statistic: (avg Euclidean, avg Arccos, ratio) over the cells of the
+/// `[0, 1]^2` grid where the tight bound is non-negative. Paper values:
+/// 0.2447, 0.3121, +27.5%.
+pub fn section41_stats(steps: usize) -> (f64, f64, f64) {
+    let h = 1.0 / (steps - 1) as f64;
+    let (mut se, mut sm, mut count) = (0.0, 0.0, 0usize);
+    for i in 0..steps {
+        for j in 0..steps {
+            let (a, b) = (i as f64 * h, j as f64 * h);
+            let m = BoundKind::Mult.lower(a, b);
+            if m >= 0.0 {
+                se += BoundKind::Euclidean.lower(a, b);
+                sm += m;
+                count += 1;
+            }
+        }
+    }
+    let avg_e = se / count as f64;
+    let avg_m = sm / count as f64;
+    (avg_e, avg_m, (avg_m - avg_e) / avg_e)
+}
+
+/// Write all figures + a summary to `out_dir`.
+pub fn write_all(out_dir: &Path, steps: usize) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    for (fig, surfaces) in
+        [("fig1", fig1(steps)), ("fig2", fig2(steps)), ("fig4", fig4(steps))]
+    {
+        for s in surfaces {
+            s.write_csv(&out_dir.join(format!("{fig}_{}.csv", s.name)))?;
+        }
+    }
+    fig5(steps).write_csv(&out_dir.join("fig5_mult_minus_arccos.csv"))?;
+
+    let mut f = std::fs::File::create(out_dir.join("summary.txt"))?;
+    writeln!(f, "== Fig. 3: partial order (max violation; <= 0 means holds) ==")?;
+    for (name, v) in fig3(steps.min(301)) {
+        writeln!(f, "{name}: {v:.3e}")?;
+    }
+    let (e, m, r) = section41_stats(steps);
+    writeln!(f, "\n== Section 4.1 average-bound statistic ==")?;
+    writeln!(f, "avg Euclidean bound: {e:.4}  (paper: 0.2447)")?;
+    writeln!(f, "avg Arccos bound:    {m:.4}  (paper: 0.3121)")?;
+    writeln!(f, "ratio:               +{:.1}% (paper: +27.5%)", r * 100.0)?;
+    let f5 = fig5(steps.min(301));
+    writeln!(f, "\n== Fig. 5 numerical-stability check ==")?;
+    writeln!(f, "max |Mult - Arccos| = {:.3e} (expect ~1e-15)",
+        f5.values.iter().fold(0.0f64, |acc, &v| acc.max(v.abs())))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_anchors() {
+        let surfaces = fig1(401);
+        let (eucl, arcc, diff) = (&surfaces[0], &surfaces[1], &surfaces[2]);
+        // Euclidean bound goes down to -7 at (-1, -1); Arccos gives +1 there
+        // (opposite-opposite implies identical).
+        assert!((eucl.at(0, 0) - (-7.0)).abs() < 1e-12);
+        assert!((arcc.at(0, 0) - 1.0).abs() < 1e-12);
+        // Paper: max difference 0.5 at inputs (0.5, 0.5) — this is the
+        // difference of the *effective* (clamped-at--1) bounds over the
+        // non-negative domain; in the negative domain the gap reaches 2.
+        let i = 300; // s = -1 + 300/200 = 0.5
+        assert!((diff.at(i, i) - 0.5).abs() < 1e-12);
+        let mid = 200; // s = 0
+        let mut nonneg_max = f64::NEG_INFINITY;
+        for a in mid..401 {
+            for b in mid..401 {
+                nonneg_max = nonneg_max.max(diff.at(a, b));
+            }
+        }
+        assert!((nonneg_max - 0.5).abs() < 1e-9, "nonneg max = {nonneg_max}");
+        assert!((diff.at(0, 0) - 2.0).abs() < 1e-12);
+        // Arccos bound is never below Euclidean.
+        assert!(diff.min() >= -1e-12);
+    }
+
+    #[test]
+    fn fig2_bounds_max_at_one_one() {
+        for s in fig2(101) {
+            let v = s.at(100, 100);
+            assert!((v - 1.0).abs() < 1e-9, "{}: bound at (1,1) = {v}", s.name);
+        }
+    }
+
+    #[test]
+    fn fig3_no_violations() {
+        for (name, v) in fig3(151) {
+            assert!(v <= 1e-12, "{name}: {v}");
+        }
+    }
+
+    #[test]
+    fn fig4_differences_nonnegative() {
+        for s in fig4(101) {
+            assert!(s.min() >= -1e-12, "{} dips to {}", s.name, s.min());
+        }
+    }
+
+    #[test]
+    fn fig5_noise_at_f64_limit() {
+        let s = fig5(201);
+        let max = s.values.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+        assert!(max < 5e-15, "max |diff| = {max}");
+    }
+
+    #[test]
+    fn section41_matches_paper() {
+        let (e, m, r) = section41_stats(401);
+        assert!((e - 0.2447).abs() < 2e-3, "avg eucl {e}");
+        assert!((m - 0.3121).abs() < 2e-3, "avg arccos {m}");
+        assert!((r - 0.275).abs() < 0.01, "ratio {r}");
+    }
+
+    #[test]
+    fn csv_write_smoke() {
+        let dir = std::env::temp_dir().join("simetra_fig_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_all(&dir, 51).unwrap();
+        assert!(dir.join("summary.txt").exists());
+        assert!(dir.join("fig1_euclidean_eq7.csv").exists());
+    }
+}

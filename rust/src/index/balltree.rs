@@ -1,0 +1,303 @@
+//! Ball tree in the similarity domain.
+//!
+//! Binary covering tree (Omohundro 1989): each node owns a routing point
+//! (an actual corpus item) and the exact similarity interval of the *other*
+//! items in its subtree to that point — a "similarity cap" replacing the
+//! covering radius. Children are formed by two-seed assignment: pick the
+//! two least-similar items as seeds, assign every item to the seed it is
+//! more similar to. Pruning: once `sim(q, center)` is known, the subtree
+//! can only contain a match if `upper_over(sim(q, center), cover) >= tau`
+//! (range) / `> floor` (kNN) — Eq. 13 applied to the similarity interval.
+
+use std::collections::BinaryHeap;
+
+use crate::bounds::{BoundKind, SimInterval};
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+
+struct Node {
+    /// Routing point id; also a member of the subtree.
+    center: u32,
+    /// Similarity interval of every *other* subtree member to `center`.
+    /// `None` when the node holds only its center.
+    cover: Option<SimInterval>,
+    children: Vec<Node>,
+    /// Leaf payload (excluding center).
+    bucket: Vec<u32>,
+}
+
+/// Similarity-native ball tree.
+pub struct BallTree<V: SimVector> {
+    items: Vec<V>,
+    root: Option<Node>,
+    bound: BoundKind,
+}
+
+impl<V: SimVector> BallTree<V> {
+    pub fn build(items: Vec<V>, bound: BoundKind, leaf_size: usize) -> Self {
+        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        let root = if ids.is_empty() {
+            None
+        } else {
+            Some(Self::build_node(&items, ids, leaf_size.max(2)))
+        };
+        BallTree { items, root, bound }
+    }
+
+    fn cover_of(items: &[V], center: u32, member_ids: &[u32]) -> Option<SimInterval> {
+        let mut iv: Option<SimInterval> = None;
+        for &id in member_ids {
+            let s = items[center as usize].sim(&items[id as usize]);
+            match &mut iv {
+                Some(iv) => iv.extend(s),
+                None => iv = Some(SimInterval::point(s)),
+            }
+        }
+        iv
+    }
+
+    /// All member ids below a node (for cover computation during build).
+    fn collect_members(node: &Node, out: &mut Vec<u32>) {
+        out.extend_from_slice(&node.bucket);
+        for c in &node.children {
+            out.push(c.center);
+            Self::collect_members(c, out);
+        }
+    }
+
+    fn build_node(items: &[V], mut ids: Vec<u32>, leaf_size: usize) -> Node {
+        let center = ids[0];
+        ids.remove(0);
+
+        if ids.len() <= leaf_size {
+            let cover = Self::cover_of(items, center, &ids);
+            return Node { center, cover, children: Vec::new(), bucket: ids };
+        }
+
+        // Two-seed split: seed A = least similar to center; seed B = least
+        // similar to A (farthest-pair heuristic in angle space).
+        let c = &items[center as usize];
+        let seed_a = *ids
+            .iter()
+            .min_by(|&&x, &&y| {
+                c.sim(&items[x as usize]).partial_cmp(&c.sim(&items[y as usize])).unwrap()
+            })
+            .unwrap();
+        let a = &items[seed_a as usize];
+        let seed_b = *ids
+            .iter()
+            .filter(|&&x| x != seed_a)
+            .min_by(|&&x, &&y| {
+                a.sim(&items[x as usize]).partial_cmp(&a.sim(&items[y as usize])).unwrap()
+            })
+            .unwrap();
+
+        let mut left_ids = vec![seed_a];
+        let mut right_ids = vec![seed_b];
+        for &id in &ids {
+            if id == seed_a || id == seed_b {
+                continue;
+            }
+            let sa = items[seed_a as usize].sim(&items[id as usize]);
+            let sb = items[seed_b as usize].sim(&items[id as usize]);
+            if sa >= sb {
+                left_ids.push(id);
+            } else {
+                right_ids.push(id);
+            }
+        }
+
+        let children = vec![
+            Self::build_node(items, left_ids, leaf_size),
+            Self::build_node(items, right_ids, leaf_size),
+        ];
+        // Cover over all members (children's centers + everything below).
+        let mut members = Vec::new();
+        for ch in &children {
+            members.push(ch.center);
+            Self::collect_members(ch, &mut members);
+        }
+        let cover = Self::cover_of(items, center, &members);
+        Node { center, cover, children, bucket: Vec::new() }
+    }
+
+    /// Range search; `s` is the already-computed `sim(q, node.center)`.
+    fn range_rec(
+        &self,
+        node: &Node,
+        q: &V,
+        s: f64,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        stats: &mut QueryStats,
+    ) {
+        stats.nodes_visited += 1;
+        if s >= tau {
+            out.push((node.center, s));
+        }
+        let Some(cover) = node.cover else { return };
+        if self.bound.upper_over(s, cover) < tau {
+            stats.pruned += 1;
+            return; // nothing below can reach tau
+        }
+        for &id in &node.bucket {
+            let si = q.sim(&self.items[id as usize]);
+            stats.sim_evals += 1;
+            if si >= tau {
+                out.push((id, si));
+            }
+        }
+        for child in &node.children {
+            let sc = q.sim(&self.items[child.center as usize]);
+            stats.sim_evals += 1;
+            self.range_rec(child, q, sc, tau, out, stats);
+        }
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for BallTree<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        if let Some(root) = &self.root {
+            let s = q.sim(&self.items[root.center as usize]);
+            stats.sim_evals += 1;
+            self.range_rec(root, q, s, tau, &mut out, stats);
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut results = KnnHeap::new(k);
+        // Frontier entries carry the node and its already-computed center
+        // similarity; priority is the subtree's upper bound.
+        let mut frontier: BinaryHeap<Prioritized<(&Node, f64)>> = BinaryHeap::new();
+        if let Some(root) = &self.root {
+            let s = q.sim(&self.items[root.center as usize]);
+            stats.sim_evals += 1;
+            results.offer(root.center, s);
+            let ub = match root.cover {
+                Some(cover) => self.bound.upper_over(s, cover),
+                None => -1.0,
+            };
+            frontier.push(Prioritized { ub, item: (root, s) });
+        }
+        while let Some(Prioritized { ub, item: (node, s) }) = frontier.pop() {
+            if results.len() >= k && ub <= results.floor() {
+                break;
+            }
+            if node.cover.is_none() {
+                continue;
+            }
+            stats.nodes_visited += 1;
+            let _ = s;
+            for &id in &node.bucket {
+                let si = q.sim(&self.items[id as usize]);
+                stats.sim_evals += 1;
+                results.offer(id, si);
+            }
+            for child in &node.children {
+                let sc = q.sim(&self.items[child.center as usize]);
+                stats.sim_evals += 1;
+                results.offer(child.center, sc);
+                let child_ub = match child.cover {
+                    Some(cover) => self.bound.upper_over(sc, cover),
+                    None => -1.0,
+                };
+                if results.len() < k || child_ub > results.floor() {
+                    frontier.push(Prioritized { ub: child_ub, item: (child, sc) });
+                } else {
+                    stats.pruned += 1;
+                }
+            }
+        }
+        results.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "ball-tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+    use crate::index::LinearScan;
+
+    #[test]
+    fn matches_linear_scan() {
+        let pts = uniform_sphere(400, 8, 31);
+        let tree = BallTree::build(pts.clone(), BoundKind::Mult, 8);
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [0usize, 37, 200, 399] {
+            for tau in [0.9, 0.4, 0.0] {
+                assert_eq!(
+                    tree.range(&pts[qi], tau, &mut s1),
+                    lin.range(&pts[qi], tau, &mut s2)
+                );
+            }
+            let a = tree.knn(&pts[qi], 7, &mut s1);
+            let b = lin.knn(&pts[qi], 7, &mut s2);
+            for ((_, x), (_, y)) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_linear_with_loose_bound() {
+        let pts = uniform_sphere(200, 6, 33);
+        let tree = BallTree::build(pts.clone(), BoundKind::MultLb1, 4);
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [3usize, 77, 150] {
+            assert_eq!(
+                tree.range(&pts[qi], 0.3, &mut s1),
+                lin.range(&pts[qi], 0.3, &mut s2)
+            );
+        }
+    }
+
+    #[test]
+    fn covers_are_valid() {
+        let pts = uniform_sphere(100, 6, 32);
+        let tree = BallTree::build(pts.clone(), BoundKind::Mult, 4);
+        let root = tree.root.as_ref().unwrap();
+        let cover = root.cover.unwrap();
+        let c = &pts[root.center as usize];
+        for (i, p) in pts.iter().enumerate() {
+            if i as u32 != root.center {
+                let s = c.sim(p);
+                assert!(s >= cover.lo - 1e-9 && s <= cover.hi + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn prunes_on_clustered_data() {
+        let (pts, _) = crate::data::vmf_mixture(&crate::data::VmfSpec {
+            n: 2000,
+            dim: 16,
+            clusters: 20,
+            kappa: 80.0,
+            seed: 4,
+        });
+        let tree = BallTree::build(pts.clone(), BoundKind::Mult, 16);
+        let mut st = QueryStats::default();
+        tree.range(&pts[0], 0.9, &mut st);
+        assert!(
+            st.sim_evals < 2000,
+            "no pruning happened: {} evals",
+            st.sim_evals
+        );
+    }
+}

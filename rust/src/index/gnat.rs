@@ -1,0 +1,305 @@
+//! GNAT — Geometric Near-neighbor Access Tree (Brin 1995) in the
+//! similarity domain.
+//!
+//! Each node holds `m` split points; every other item joins the region of
+//! its most similar split point. The node stores the full `m x m` table of
+//! similarity intervals `range[i][j]` = interval of `sim(split_i, y)` over
+//! all `y` in region `j`. A query computes the `m` split similarities and
+//! discards region `j` whenever *any* split point `i` certifies
+//! `upper_over(sim(q, split_i), range[i][j]) < tau` — the multi-pivot
+//! generalization of the VP-tree test.
+
+use crate::bounds::{BoundKind, SimInterval};
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
+
+struct Node {
+    splits: Vec<u32>,
+    /// `ranges[i * regions + j]`: interval of sim(splits[i], y) for y in
+    /// region j (including region j's split point).
+    ranges: Vec<SimInterval>,
+    children: Vec<Node>,
+    /// Leaf payload.
+    bucket: Vec<u32>,
+}
+
+/// Similarity-native GNAT.
+pub struct Gnat<V: SimVector> {
+    items: Vec<V>,
+    root: Option<Node>,
+    bound: BoundKind,
+    fanout: usize,
+}
+
+impl<V: SimVector> Gnat<V> {
+    pub fn build(items: Vec<V>, bound: BoundKind, fanout: usize) -> Self {
+        let fanout = fanout.max(2);
+        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        let root = if ids.is_empty() {
+            None
+        } else {
+            Some(Self::build_node(&items, ids, fanout))
+        };
+        Gnat { items, root, bound, fanout }
+    }
+
+    pub fn fanout(&self) -> usize {
+        self.fanout
+    }
+
+    fn build_node(items: &[V], ids: Vec<u32>, fanout: usize) -> Node {
+        if ids.len() <= fanout + 1 {
+            return Node {
+                splits: Vec::new(),
+                ranges: Vec::new(),
+                children: Vec::new(),
+                bucket: ids,
+            };
+        }
+
+        // Farthest-first split points.
+        let mut splits: Vec<u32> = vec![ids[0]];
+        let mut max_sim: Vec<f64> =
+            ids.iter().map(|&i| items[ids[0] as usize].sim(&items[i as usize])).collect();
+        while splits.len() < fanout {
+            let (pos, _) = max_sim
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let s = ids[pos];
+            if splits.contains(&s) {
+                break;
+            }
+            splits.push(s);
+            for (j, &i) in ids.iter().enumerate() {
+                max_sim[j] = max_sim[j].max(items[s as usize].sim(&items[i as usize]));
+            }
+        }
+        if splits.len() < 2 {
+            return Node {
+                splits: Vec::new(),
+                ranges: Vec::new(),
+                children: Vec::new(),
+                bucket: ids,
+            };
+        }
+
+        // Assign to most similar split point.
+        let m = splits.len();
+        let mut regions: Vec<Vec<u32>> = vec![Vec::new(); m];
+        for &i in &ids {
+            if splits.contains(&i) {
+                continue;
+            }
+            let (g, _) = splits
+                .iter()
+                .enumerate()
+                .map(|(g, &sp)| (g, items[sp as usize].sim(&items[i as usize])))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            regions[g].push(i);
+        }
+
+        // Interval table over (split, region) incl. the region's own split.
+        let mut ranges = vec![SimInterval::point(0.0); m * m];
+        for (i, &sp) in splits.iter().enumerate() {
+            for (j, region) in regions.iter().enumerate() {
+                let mut iv = SimInterval::point(
+                    items[sp as usize].sim(&items[splits[j] as usize]),
+                );
+                for &y in region {
+                    iv.extend(items[sp as usize].sim(&items[y as usize]));
+                }
+                ranges[i * m + j] = iv;
+            }
+        }
+
+        let children: Vec<Node> = regions
+            .into_iter()
+            .enumerate()
+            .map(|(j, mut region)| {
+                region.push(splits[j]);
+                Self::build_node(items, region, fanout)
+            })
+            .collect();
+
+        Node { splits, ranges, children, bucket: Vec::new() }
+    }
+
+    fn range_rec(
+        &self,
+        node: &Node,
+        q: &V,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        stats: &mut QueryStats,
+    ) {
+        stats.nodes_visited += 1;
+        for &id in &node.bucket {
+            let s = q.sim(&self.items[id as usize]);
+            stats.sim_evals += 1;
+            if s >= tau {
+                out.push((id, s));
+            }
+        }
+        if node.splits.is_empty() {
+            return;
+        }
+        let m = node.splits.len();
+        let split_sims: Vec<f64> = node
+            .splits
+            .iter()
+            .map(|&sp| {
+                stats.sim_evals += 1;
+                q.sim(&self.items[sp as usize])
+            })
+            .collect();
+        // NOTE: split points live in their own region's subtree; regions
+        // are pruned collectively below, and surviving subtrees report them.
+        for (j, child) in node.children.iter().enumerate() {
+            let mut alive = true;
+            for i in 0..m {
+                if self.bound.upper_over(split_sims[i], node.ranges[i * m + j]) < tau {
+                    alive = false;
+                    break;
+                }
+            }
+            if alive {
+                self.range_rec(child, q, tau, out, stats);
+            } else {
+                stats.pruned += 1;
+            }
+        }
+    }
+
+    fn knn_rec<'a>(
+        &'a self,
+        node: &'a Node,
+        q: &V,
+        results: &mut KnnHeap,
+        k: usize,
+        stats: &mut QueryStats,
+    ) {
+        stats.nodes_visited += 1;
+        for &id in &node.bucket {
+            let s = q.sim(&self.items[id as usize]);
+            stats.sim_evals += 1;
+            results.offer(id, s);
+        }
+        if node.splits.is_empty() {
+            return;
+        }
+        let m = node.splits.len();
+        let split_sims: Vec<f64> = node
+            .splits
+            .iter()
+            .map(|&sp| {
+                stats.sim_evals += 1;
+                q.sim(&self.items[sp as usize])
+            })
+            .collect();
+        // Visit regions in order of their best upper bound so the floor
+        // rises quickly; skip regions certified below the floor.
+        let mut order: Vec<(usize, f64)> = (0..node.children.len())
+            .map(|j| {
+                let ub = (0..m)
+                    .map(|i| self.bound.upper_over(split_sims[i], node.ranges[i * m + j]))
+                    .fold(f64::INFINITY, f64::min);
+                (j, ub)
+            })
+            .collect();
+        order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (j, ub) in order {
+            if results.len() >= k && ub <= results.floor() {
+                stats.pruned += 1;
+                continue;
+            }
+            self.knn_rec(&node.children[j], q, results, k, stats);
+        }
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for Gnat<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        if let Some(root) = &self.root {
+            self.range_rec(root, q, tau, &mut out, stats);
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut results = KnnHeap::new(k);
+        if let Some(root) = &self.root {
+            self.knn_rec(root, q, &mut results, k, stats);
+        }
+        results.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "gnat"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
+    use crate::index::LinearScan;
+
+    #[test]
+    fn matches_linear_scan() {
+        let pts = uniform_sphere(400, 8, 61);
+        let tree = Gnat::build(pts.clone(), BoundKind::Mult, 6);
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [0usize, 200, 399] {
+            for tau in [0.8, 0.3] {
+                assert_eq!(
+                    tree.range(&pts[qi], tau, &mut s1),
+                    lin.range(&pts[qi], tau, &mut s2),
+                    "tau={tau}"
+                );
+            }
+            let a = tree.knn(&pts[qi], 8, &mut s1);
+            let b = lin.knn(&pts[qi], 8, &mut s2);
+            for ((_, x), (_, y)) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn prunes_on_clustered_data() {
+        let (pts, _) =
+            vmf_mixture(&VmfSpec { n: 3000, dim: 16, clusters: 30, kappa: 100.0, seed: 9 });
+        let tree = Gnat::build(pts.clone(), BoundKind::Mult, 8);
+        let mut st = QueryStats::default();
+        tree.range(&pts[100], 0.9, &mut st);
+        assert!(st.sim_evals < 3000, "{}", st.sim_evals);
+        assert!(st.pruned > 0);
+    }
+
+    #[test]
+    fn all_items_reachable() {
+        // Every item must appear in exactly one leaf/region path: a full
+        // range query at tau = -1 returns everything exactly once.
+        let pts = uniform_sphere(200, 4, 62);
+        let tree = Gnat::build(pts.clone(), BoundKind::Mult, 5);
+        let mut st = QueryStats::default();
+        let hits = tree.range(&pts[0], -1.0, &mut st);
+        assert_eq!(hits.len(), 200);
+        let mut ids: Vec<u32> = hits.iter().map(|&(i, _)| i).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 200);
+    }
+}

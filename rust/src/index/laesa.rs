@@ -1,0 +1,227 @@
+//! LAESA (Micó/Oncina/Vidal 1994) in the similarity domain.
+//!
+//! Linear preprocessing: a table of exact similarities from `P` pivots to
+//! every corpus item. At query time the `P` query-pivot similarities are
+//! computed once; each candidate then gets a certified interval on
+//! `sim(q, c)` by intersecting the per-pivot intervals (Eqs. 10/13) — only
+//! candidates whose upper bound clears the threshold are scored exactly.
+//!
+//! This is also the batch-friendly index: the interval table for a whole
+//! query batch is exactly the `pivot_filter` PJRT artifact (see
+//! `runtime`), so the coordinator can run the filtering phase on the
+//! XLA side.
+
+use crate::bounds::{BoundKind, SimInterval};
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
+
+/// Pivot-table index with triangle-inequality candidate filtering.
+pub struct Laesa<V: SimVector> {
+    items: Vec<V>,
+    /// Pivot item ids.
+    pivots: Vec<u32>,
+    /// `table[p * n + i]` = sim(pivots[p], items[i]).
+    table: Vec<f64>,
+    bound: BoundKind,
+}
+
+impl<V: SimVector> Laesa<V> {
+    /// Build with `n_pivots` pivots chosen by farthest-first traversal in
+    /// angle space (maximize the minimum angle to previous pivots), the
+    /// standard "extreme pivots" heuristic.
+    pub fn build(items: Vec<V>, bound: BoundKind, n_pivots: usize) -> Self {
+        let n = items.len();
+        let p = n_pivots.min(n).max(if n == 0 { 0 } else { 1 });
+        let mut pivots: Vec<u32> = Vec::with_capacity(p);
+        let mut table: Vec<f64> = Vec::with_capacity(p * n);
+        if n > 0 {
+            // min over chosen pivots of |angle| ~ max over pivots of sim;
+            // track per-item max similarity to any chosen pivot.
+            let mut max_sim = vec![f64::NEG_INFINITY; n];
+            let mut next = 0u32; // first pivot: item 0
+            for _ in 0..p {
+                pivots.push(next);
+                let pv = &items[next as usize];
+                let row_start = table.len();
+                for item in items.iter() {
+                    table.push(pv.sim(item));
+                }
+                for i in 0..n {
+                    max_sim[i] = max_sim[i].max(table[row_start + i]);
+                }
+                // Next pivot: the item least similar to all chosen pivots.
+                next = (0..n)
+                    .min_by(|&a, &b| max_sim[a].partial_cmp(&max_sim[b]).unwrap())
+                    .unwrap() as u32;
+            }
+        }
+        Laesa { items, pivots, table, bound }
+    }
+
+    pub fn n_pivots(&self) -> usize {
+        self.pivots.len()
+    }
+
+    pub fn pivots(&self) -> &[u32] {
+        &self.pivots
+    }
+
+    /// Exact similarity table row for pivot `p` (length = corpus size).
+    pub fn table_row(&self, p: usize) -> &[f64] {
+        let n = self.items.len();
+        &self.table[p * n..(p + 1) * n]
+    }
+
+    /// Certified interval on `sim(q, item_i)` from the pivot table, given
+    /// the query's pivot similarities.
+    #[inline]
+    pub fn interval_for(&self, q_piv: &[f64], i: usize) -> SimInterval {
+        let n = self.items.len();
+        let mut iv = SimInterval::full();
+        for (p, &sq) in q_piv.iter().enumerate() {
+            let sp = self.table[p * n + i];
+            iv = iv.intersect(&self.bound.interval(sq, sp));
+            if iv.is_empty() {
+                break;
+            }
+        }
+        iv
+    }
+
+    fn query_pivot_sims(&self, q: &V, stats: &mut QueryStats) -> Vec<f64> {
+        stats.sim_evals += self.pivots.len() as u64;
+        self.pivots.iter().map(|&p| q.sim(&self.items[p as usize])).collect()
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for Laesa<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        stats.nodes_visited += 1;
+        let q_piv = self.query_pivot_sims(q, stats);
+        let mut out = Vec::new();
+        for i in 0..self.items.len() {
+            let iv = self.interval_for(&q_piv, i);
+            if iv.hi < tau || iv.is_empty() {
+                stats.pruned += 1;
+                continue; // certified non-match
+            }
+            let s = q.sim(&self.items[i]);
+            stats.sim_evals += 1;
+            if s >= tau {
+                out.push((i as u32, s));
+            }
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        stats.nodes_visited += 1;
+        let q_piv = self.query_pivot_sims(q, stats);
+        let n = self.items.len();
+
+        // AESA-style ordering: score candidates in decreasing upper bound so
+        // the floor rises as fast as possible; stop when the floor clears
+        // the best remaining upper bound.
+        let mut cands: Vec<(u32, f64)> = (0..n)
+            .map(|i| (i as u32, self.interval_for(&q_piv, i).hi))
+            .collect();
+        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+
+        let mut results = KnnHeap::new(k);
+        // Seed with the pivots (already evaluated — free information).
+        for (idx, &p) in self.pivots.iter().enumerate() {
+            results.offer(p, q_piv[idx]);
+        }
+        let pivot_set: std::collections::HashSet<u32> = self.pivots.iter().copied().collect();
+        for (pos, &(id, ub)) in cands.iter().enumerate() {
+            if results.len() >= k && ub <= results.floor() {
+                stats.pruned += (cands.len() - pos) as u64;
+                break;
+            }
+            if pivot_set.contains(&id) {
+                continue;
+            }
+            let s = q.sim(&self.items[id as usize]);
+            stats.sim_evals += 1;
+            results.offer(id, s);
+        }
+        results.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "laesa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
+    use crate::index::LinearScan;
+
+    #[test]
+    fn matches_linear_scan() {
+        let pts = uniform_sphere(300, 8, 41);
+        let idx = Laesa::build(pts.clone(), BoundKind::Mult, 12);
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [0usize, 50, 299] {
+            for tau in [0.8, 0.3] {
+                assert_eq!(idx.range(&pts[qi], tau, &mut s1), lin.range(&pts[qi], tau, &mut s2));
+            }
+            let a = idx.knn(&pts[qi], 10, &mut s1);
+            let b = lin.knn(&pts[qi], 10, &mut s2);
+            for ((_, x), (_, y)) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_contain_truth() {
+        let pts = uniform_sphere(100, 8, 43);
+        let idx = Laesa::build(pts.clone(), BoundKind::Mult, 8);
+        let q = &pts[99];
+        let mut stats = QueryStats::default();
+        let q_piv = idx.query_pivot_sims(q, &mut stats);
+        for i in 0..100 {
+            let iv = idx.interval_for(&q_piv, i);
+            let s = q.sim(&pts[i]);
+            assert!(iv.lo <= s + 1e-9 && s <= iv.hi + 1e-9, "item {i}: {iv:?} vs {s}");
+        }
+    }
+
+    #[test]
+    fn prunes_on_clustered_data() {
+        let (pts, _) = vmf_mixture(&VmfSpec { n: 3000, dim: 16, clusters: 30, kappa: 100.0, seed: 5 });
+        let idx = Laesa::build(pts.clone(), BoundKind::Mult, 32);
+        let mut st = QueryStats::default();
+        idx.range(&pts[0], 0.9, &mut st);
+        assert!(st.sim_evals < 3000, "{} evals", st.sim_evals);
+        assert!(st.pruned > 0);
+    }
+
+    #[test]
+    fn more_pivots_never_hurt_pruning() {
+        let (pts, _) = vmf_mixture(&VmfSpec { n: 1000, dim: 8, clusters: 10, kappa: 50.0, seed: 6 });
+        let few = Laesa::build(pts.clone(), BoundKind::Mult, 4);
+        let many = Laesa::build(pts.clone(), BoundKind::Mult, 32);
+        let mut sf = QueryStats::default();
+        let mut sm = QueryStats::default();
+        for qi in 0..10 {
+            few.range(&pts[qi * 100], 0.8, &mut sf);
+            many.range(&pts[qi * 100], 0.8, &mut sm);
+        }
+        // Non-pivot evaluations should shrink with more pivots.
+        let f_extra = sf.sim_evals - 10 * 4;
+        let m_extra = sm.sim_evals - 10 * 32;
+        assert!(m_extra <= f_extra, "few={f_extra} many={m_extra}");
+    }
+}

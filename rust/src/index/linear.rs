@@ -1,0 +1,92 @@
+//! Exhaustive scan — the correctness oracle and pruning-power baseline.
+
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
+
+/// Brute-force index: every query evaluates every item.
+pub struct LinearScan<V: SimVector> {
+    items: Vec<V>,
+}
+
+impl<V: SimVector> LinearScan<V> {
+    pub fn build(items: Vec<V>) -> Self {
+        LinearScan { items }
+    }
+
+    pub fn items(&self) -> &[V] {
+        &self.items
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for LinearScan<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        stats.nodes_visited += 1;
+        let mut out = Vec::new();
+        for (i, item) in self.items.iter().enumerate() {
+            let s = q.sim(item);
+            stats.sim_evals += 1;
+            if s >= tau {
+                out.push((i as u32, s));
+            }
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        stats.nodes_visited += 1;
+        let mut heap = KnnHeap::new(k);
+        for (i, item) in self.items.iter().enumerate() {
+            let s = q.sim(item);
+            stats.sim_evals += 1;
+            heap.offer(i as u32, s);
+        }
+        heap.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn range_returns_sorted_matches() {
+        let pts = uniform_sphere(100, 8, 1);
+        let idx = LinearScan::build(pts.clone());
+        let mut stats = QueryStats::default();
+        let hits = idx.range(&pts[0], 0.5, &mut stats);
+        assert_eq!(stats.sim_evals, 100);
+        assert!(hits.windows(2).all(|w| w[0].1 >= w[1].1));
+        assert!(hits.iter().all(|&(_, s)| s >= 0.5));
+        assert_eq!(hits[0].0, 0);
+    }
+
+    #[test]
+    fn knn_self_is_first() {
+        let pts = uniform_sphere(50, 8, 2);
+        let idx = LinearScan::build(pts.clone());
+        let mut stats = QueryStats::default();
+        let hits = idx.knn(&pts[7], 5, &mut stats);
+        assert_eq!(hits.len(), 5);
+        assert_eq!(hits[0].0, 7);
+        assert!((hits[0].1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn knn_with_k_larger_than_corpus() {
+        let pts = uniform_sphere(3, 4, 3);
+        let idx = LinearScan::build(pts.clone());
+        let mut stats = QueryStats::default();
+        assert_eq!(idx.knn(&pts[0], 10, &mut stats).len(), 3);
+    }
+}

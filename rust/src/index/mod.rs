@@ -1,0 +1,189 @@
+//! Similarity-native metric indexes.
+//!
+//! Each index answers exact range queries (`sim(q, y) >= tau`) and exact
+//! kNN (max similarity) using the paper's triangle inequalities for
+//! pruning — no conversion to distances anywhere on the query path. Every
+//! index is parameterized by a [`BoundKind`] so the benchmark harness can
+//! measure how bound tightness translates into pruning power (the paper's
+//! motivating application, deferred there to future work).
+//!
+//! Exactness contract: for any corpus, query, `tau` and `k`, results equal
+//! the linear scan's (up to ties in kNN) for **every** bound kind — looser
+//! bounds may only cost extra similarity evaluations, never results. The
+//! proptest suite in `integration_index_exactness.rs` enforces this.
+
+pub mod balltree;
+pub mod cover;
+pub mod gnat;
+pub mod laesa;
+pub mod linear;
+pub mod mtree;
+pub mod vptree;
+
+pub use balltree::BallTree;
+pub use cover::CoverTree;
+pub use gnat::Gnat;
+pub use laesa::Laesa;
+pub use linear::LinearScan;
+pub use mtree::MTree;
+pub use vptree::VpTree;
+
+use crate::metrics::SimVector;
+
+/// Query-time instrumentation: the paper's pruning-power currency is the
+/// number of exact similarity computations avoided.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Exact similarity evaluations performed.
+    pub sim_evals: u64,
+    /// Tree nodes (or pivot tables / regions) visited.
+    pub nodes_visited: u64,
+    /// Candidates discarded by a bound without an exact evaluation.
+    pub pruned: u64,
+}
+
+impl QueryStats {
+    pub fn merge(&mut self, other: &QueryStats) {
+        self.sim_evals += other.sim_evals;
+        self.nodes_visited += other.nodes_visited;
+        self.pruned += other.pruned;
+    }
+}
+
+/// An exact cosine-similarity search index.
+pub trait SimilarityIndex<V: SimVector>: Send + Sync {
+    /// Number of indexed items.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All `(id, sim)` with `sim(q, item) >= tau`, in descending similarity.
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)>;
+
+    /// The `k` most similar items, in descending similarity. Fewer than `k`
+    /// are returned only when the corpus is smaller than `k`.
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)>;
+
+    /// Index name for benchmark tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Bounded max-similarity result collector for kNN searches.
+#[derive(Debug)]
+pub struct KnnHeap {
+    k: usize,
+    /// Min-heap by similarity (worst current member on top), as a sorted
+    /// Vec kept small: k is small in practice, so O(k) insert is fine and
+    /// avoids float-ordering wrappers.
+    entries: Vec<(u32, f64)>,
+}
+
+impl KnnHeap {
+    pub fn new(k: usize) -> Self {
+        KnnHeap { k: k.max(1), entries: Vec::with_capacity(k + 1) }
+    }
+
+    /// Current pruning floor: the k-th best similarity, or -1 (no pruning)
+    /// while the heap is not full.
+    #[inline]
+    pub fn floor(&self) -> f64 {
+        if self.entries.len() < self.k {
+            -1.0
+        } else {
+            self.entries.last().map(|&(_, s)| s).unwrap_or(-1.0)
+        }
+    }
+
+    #[inline]
+    pub fn offer(&mut self, id: u32, sim: f64) {
+        if self.entries.len() >= self.k && sim <= self.floor() {
+            return;
+        }
+        let pos = self
+            .entries
+            .partition_point(|&(_, s)| s > sim || (s == sim && true));
+        self.entries.insert(pos, (id, sim));
+        self.entries.truncate(self.k);
+    }
+
+    pub fn into_sorted(self) -> Vec<(u32, f64)> {
+        self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Sort a result set in descending similarity with deterministic tie order.
+pub(crate) fn sort_desc(results: &mut Vec<(u32, f64)>) {
+    results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+}
+
+/// Max-priority entry for best-first tree searches: orders a node handle by
+/// its similarity upper bound.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Prioritized<T> {
+    pub ub: f64,
+    pub item: T,
+}
+
+impl<T> PartialEq for Prioritized<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.ub == other.ub
+    }
+}
+impl<T> Eq for Prioritized<T> {}
+impl<T> PartialOrd for Prioritized<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Prioritized<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.ub.partial_cmp(&other.ub).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_heap_keeps_best_k() {
+        let mut h = KnnHeap::new(3);
+        for (id, s) in [(0, 0.1), (1, 0.9), (2, 0.5), (3, 0.7), (4, 0.3)] {
+            h.offer(id, s);
+        }
+        let out = h.into_sorted();
+        assert_eq!(out.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn knn_heap_floor_semantics() {
+        let mut h = KnnHeap::new(2);
+        assert_eq!(h.floor(), -1.0);
+        h.offer(0, 0.5);
+        assert_eq!(h.floor(), -1.0); // not full yet
+        h.offer(1, 0.8);
+        assert!((h.floor() - 0.5).abs() < 1e-15);
+        h.offer(2, 0.6);
+        assert!((h.floor() - 0.6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn prioritized_orders_by_ub() {
+        let mut heap = std::collections::BinaryHeap::new();
+        heap.push(Prioritized { ub: 0.2, item: "a" });
+        heap.push(Prioritized { ub: 0.9, item: "b" });
+        heap.push(Prioritized { ub: 0.5, item: "c" });
+        assert_eq!(heap.pop().unwrap().item, "b");
+        assert_eq!(heap.pop().unwrap().item, "c");
+    }
+}

@@ -1,0 +1,341 @@
+//! M-tree (Ciaccia/Patella/Zezula 1997) in the similarity domain.
+//!
+//! Capacity-bounded balanced-ish tree of routing entries. Each entry stores
+//! its routing object, the similarity "covering interval" of its subtree,
+//! and the *exact similarity between the routing object and its parent's
+//! routing object*. That last value enables the M-tree's signature saving:
+//! before computing `sim(q, route)`, chain the known `sim(q, parent)` with
+//! `sim(parent, route)` through Eqs. 10/13 to a certified interval on
+//! `sim(q, route)`; if even the most optimistic value cannot clear the
+//! threshold once widened by the covering interval, the whole entry is
+//! dropped with **zero** similarity evaluations.
+
+use std::collections::BinaryHeap;
+
+use crate::bounds::{BoundKind, SimInterval};
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+
+struct Entry {
+    /// Routing object (internal) or data item (leaf).
+    id: u32,
+    /// sim(id, parent routing object); 1.0 at the root (no parent).
+    parent_sim: f64,
+    /// Covering interval: similarities of all subtree items to `id`.
+    /// `None` for leaf entries (the entry is the item itself).
+    cover: Option<SimInterval>,
+    child: Option<Box<NodeBody>>,
+}
+
+struct NodeBody {
+    entries: Vec<Entry>,
+    is_leaf: bool,
+}
+
+/// Similarity-native M-tree.
+pub struct MTree<V: SimVector> {
+    items: Vec<V>,
+    root: Option<NodeBody>,
+    bound: BoundKind,
+    capacity: usize,
+}
+
+impl<V: SimVector> MTree<V> {
+    /// Bulk-load an M-tree with node capacity `capacity` (>= 4 recommended).
+    pub fn build(items: Vec<V>, bound: BoundKind, capacity: usize) -> Self {
+        let capacity = capacity.max(2);
+        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        let root = if ids.is_empty() {
+            None
+        } else {
+            Some(Self::bulk_load(&items, ids, capacity, None))
+        };
+        MTree { items, root, bound, capacity }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Recursive bulk load: pick `capacity` routing objects (spread by a
+    /// farthest-first pass), assign items to the most similar route, recurse.
+    fn bulk_load(items: &[V], ids: Vec<u32>, capacity: usize, parent: Option<u32>) -> NodeBody {
+        let parent_sim = |id: u32| -> f64 {
+            match parent {
+                Some(p) => items[p as usize].sim(&items[id as usize]),
+                None => 1.0,
+            }
+        };
+
+        if ids.len() <= capacity {
+            let entries = ids
+                .into_iter()
+                .map(|id| Entry { id, parent_sim: parent_sim(id), cover: None, child: None })
+                .collect();
+            return NodeBody { entries, is_leaf: true };
+        }
+
+        // Choose routing objects: farthest-first (min-max-similarity).
+        let mut routes: Vec<u32> = vec![ids[0]];
+        let mut max_sim: Vec<f64> =
+            ids.iter().map(|&i| items[ids[0] as usize].sim(&items[i as usize])).collect();
+        while routes.len() < capacity {
+            let (pos, _) = max_sim
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let r = ids[pos];
+            if routes.contains(&r) {
+                break;
+            }
+            routes.push(r);
+            for (j, &i) in ids.iter().enumerate() {
+                max_sim[j] = max_sim[j].max(items[r as usize].sim(&items[i as usize]));
+            }
+        }
+
+        if routes.len() < 2 {
+            // Degenerate data (e.g. all-identical points): an oversized leaf
+            // is correct and terminates the recursion.
+            let entries = ids
+                .into_iter()
+                .map(|id| Entry { id, parent_sim: parent_sim(id), cover: None, child: None })
+                .collect();
+            return NodeBody { entries, is_leaf: true };
+        }
+
+        // Assign every id to its most similar route.
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); routes.len()];
+        for &i in &ids {
+            if routes.contains(&i) {
+                continue;
+            }
+            let (g, _) = routes
+                .iter()
+                .enumerate()
+                .map(|(g, &r)| (g, items[r as usize].sim(&items[i as usize])))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            groups[g].push(i);
+        }
+
+        let entries = routes
+            .iter()
+            .zip(groups)
+            .map(|(&r, mut group)| {
+                // The route itself lives inside its subtree.
+                group.push(r);
+                let mut cover: Option<SimInterval> = None;
+                for &i in &group {
+                    let s = items[r as usize].sim(&items[i as usize]);
+                    match &mut cover {
+                        Some(c) => c.extend(s),
+                        None => cover = Some(SimInterval::point(s)),
+                    }
+                }
+                let child = Self::bulk_load(items, group, capacity, Some(r));
+                Entry {
+                    id: r,
+                    parent_sim: parent_sim(r),
+                    cover,
+                    child: Some(Box::new(child)),
+                }
+            })
+            .collect();
+        NodeBody { entries, is_leaf: false }
+    }
+
+    /// Range search over a node; `parent_s` = sim(q, parent route), or None
+    /// at the root (parent_sim fields are then vacuous 1.0 and the cheap
+    /// pre-check is skipped).
+    fn range_rec(
+        &self,
+        node: &NodeBody,
+        q: &V,
+        parent_s: Option<f64>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        stats: &mut QueryStats,
+    ) {
+        stats.nodes_visited += 1;
+        for entry in &node.entries {
+            // Cheap pre-check (no sim eval): certified interval on
+            // sim(q, entry.id) via the parent chain...
+            if let Some(ps) = parent_s {
+                let route_iv = self.bound.interval(ps, entry.parent_sim);
+                // ...widened over the covering interval: can anything in the
+                // subtree reach tau?
+                let reach = match entry.cover {
+                    Some(cover) => {
+                        let a = self.bound.upper_over(route_iv.lo, cover);
+                        let b = self.bound.upper_over(route_iv.hi, cover);
+                        let inside = !route_iv.intersect(&cover).is_empty();
+                        if inside {
+                            1.0
+                        } else {
+                            a.max(b)
+                        }
+                    }
+                    None => route_iv.hi,
+                };
+                if reach < tau {
+                    stats.pruned += 1;
+                    continue; // dropped without computing sim(q, route)
+                }
+            }
+            let s = q.sim(&self.items[entry.id as usize]);
+            stats.sim_evals += 1;
+            if node.is_leaf {
+                if s >= tau {
+                    out.push((entry.id, s));
+                }
+                continue;
+            }
+            // Internal entry: the route itself is reported by its subtree
+            // (routes are members of their own subtrees).
+            let Some(cover) = entry.cover else { continue };
+            if self.bound.upper_over(s, cover) >= tau {
+                self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), tau, out, stats);
+            } else {
+                stats.pruned += 1;
+            }
+        }
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for MTree<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        if let Some(root) = &self.root {
+            self.range_rec(root, q, None, tau, &mut out, stats);
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut results = KnnHeap::new(k);
+        // Frontier carries (node, sim(q, parent route)); NAN at the root.
+        let mut frontier: BinaryHeap<Prioritized<(&NodeBody, f64)>> = BinaryHeap::new();
+        if let Some(root) = &self.root {
+            frontier.push(Prioritized { ub: 1.0, item: (root, f64::NAN) });
+        }
+        while let Some(Prioritized { ub, item: (node, parent_s) }) = frontier.pop() {
+            if results.len() >= k && ub <= results.floor() {
+                break;
+            }
+            stats.nodes_visited += 1;
+            for entry in &node.entries {
+                // Cheap pre-check against the current floor (the M-tree's
+                // saved similarity computation).
+                if !parent_s.is_nan() && results.len() >= k {
+                    let route_iv = self.bound.interval(parent_s, entry.parent_sim);
+                    let reach = match entry.cover {
+                        Some(cover) => {
+                            if !route_iv.intersect(&cover).is_empty() {
+                                1.0
+                            } else {
+                                self.bound
+                                    .upper_over(route_iv.lo, cover)
+                                    .max(self.bound.upper_over(route_iv.hi, cover))
+                            }
+                        }
+                        None => route_iv.hi,
+                    };
+                    if reach <= results.floor() {
+                        stats.pruned += 1;
+                        continue;
+                    }
+                }
+                let s = q.sim(&self.items[entry.id as usize]);
+                stats.sim_evals += 1;
+                if node.is_leaf {
+                    results.offer(entry.id, s);
+                } else {
+                    // Routes are members of their own subtrees; the leaf
+                    // level reports them (avoids duplicate result entries).
+                    if let Some(cover) = entry.cover {
+                        let child_ub = self.bound.upper_over(s, cover);
+                        if results.len() < k || child_ub > results.floor() {
+                            frontier.push(Prioritized {
+                                ub: child_ub,
+                                item: (entry.child.as_ref().unwrap(), s),
+                            });
+                        } else {
+                            stats.pruned += 1;
+                        }
+                    }
+                }
+            }
+        }
+        results.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "m-tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
+    use crate::index::LinearScan;
+
+    #[test]
+    fn matches_linear_scan() {
+        let pts = uniform_sphere(500, 8, 51);
+        let tree = MTree::build(pts.clone(), BoundKind::Mult, 8);
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [0usize, 123, 499] {
+            for tau in [0.85, 0.4, -0.2] {
+                assert_eq!(
+                    tree.range(&pts[qi], tau, &mut s1),
+                    lin.range(&pts[qi], tau, &mut s2),
+                    "tau={tau} qi={qi}"
+                );
+            }
+            let a = tree.knn(&pts[qi], 9, &mut s1);
+            let b = lin.knn(&pts[qi], 9, &mut s2);
+            for ((_, x), (_, y)) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_linear_with_every_bound_kind() {
+        let pts = uniform_sphere(150, 6, 52);
+        let lin = LinearScan::build(pts.clone());
+        for bound in BoundKind::ALL {
+            let tree = MTree::build(pts.clone(), bound, 6);
+            let mut s1 = QueryStats::default();
+            let mut s2 = QueryStats::default();
+            for qi in [1usize, 75] {
+                assert_eq!(
+                    tree.range(&pts[qi], 0.5, &mut s1),
+                    lin.range(&pts[qi], 0.5, &mut s2),
+                    "bound={bound:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parent_chain_saves_evaluations_on_clusters() {
+        let (pts, _) = vmf_mixture(&VmfSpec { n: 4000, dim: 16, clusters: 40, kappa: 120.0, seed: 8 });
+        let tree = MTree::build(pts.clone(), BoundKind::Mult, 16);
+        let mut st = QueryStats::default();
+        tree.range(&pts[42], 0.9, &mut st);
+        assert!(st.sim_evals < 4000 / 2, "{} evals", st.sim_evals);
+        assert!(st.pruned > 0);
+    }
+}

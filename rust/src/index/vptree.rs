@@ -1,0 +1,266 @@
+//! Vantage-point tree in the similarity domain.
+//!
+//! Classic VP-tree (Uhlmann 1991 / Yianilos 1993), with every distance
+//! replaced by a similarity and every pruning test by the paper's triangle
+//! inequality: a child subtree whose members' similarity to the vantage
+//! point lies in `[lo, hi]` can only contain matches if
+//! `upper_over(sim(q, vp), [lo, hi]) >= tau` (range) or `> floor` (kNN).
+
+use std::collections::BinaryHeap;
+
+use crate::bounds::{BoundKind, SimInterval};
+use crate::metrics::SimVector;
+
+use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+
+struct Node {
+    /// Vantage point (item id).
+    vp: u32,
+    /// Children: `near` holds items with `sim(vp, x) >= mu` (the similar
+    /// half), `far` the rest; each with the exact similarity interval of
+    /// its members to `vp`.
+    near: Option<(SimInterval, Box<Node>)>,
+    far: Option<(SimInterval, Box<Node>)>,
+    /// Leaf payload: item ids (only for leaves; vp is still queried).
+    bucket: Vec<u32>,
+}
+
+/// Similarity-native vantage-point tree.
+pub struct VpTree<V: SimVector> {
+    items: Vec<V>,
+    root: Option<Node>,
+    bound: BoundKind,
+    leaf_size: usize,
+}
+
+impl<V: SimVector> VpTree<V> {
+    /// Build with the given pruning bound; `leaf_size` trades tree depth for
+    /// scan width (8–32 is typical).
+    pub fn build(items: Vec<V>, bound: BoundKind, seed: u64) -> Self {
+        Self::with_leaf_size(items, bound, seed, 16)
+    }
+
+    pub fn with_leaf_size(items: Vec<V>, bound: BoundKind, seed: u64, leaf_size: usize) -> Self {
+        let mut ids: Vec<u32> = (0..items.len() as u32).collect();
+        let mut rng = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let root = if ids.is_empty() {
+            None
+        } else {
+            Some(Self::build_node(&items, &mut ids, leaf_size.max(1), &mut rng))
+        };
+        VpTree { items, root, bound, leaf_size: leaf_size.max(1) }
+    }
+
+    fn next_rand(rng: &mut u64) -> u64 {
+        // xorshift64*: deterministic, dependency-free pivot selection.
+        let mut x = *rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        *rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn build_node(items: &[V], ids: &mut [u32], leaf_size: usize, rng: &mut u64) -> Node {
+        // Random vantage point; swap it to the front.
+        let pick = (Self::next_rand(rng) % ids.len() as u64) as usize;
+        ids.swap(0, pick);
+        let vp = ids[0];
+        let rest = &mut ids[1..];
+
+        if rest.len() <= leaf_size {
+            return Node { vp, near: None, far: None, bucket: rest.to_vec() };
+        }
+
+        // Split at the median similarity to the vantage point.
+        let mut sims: Vec<(u32, f64)> =
+            rest.iter().map(|&id| (id, items[vp as usize].sim(&items[id as usize]))).collect();
+        sims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mid = sims.len() / 2;
+
+        let (near_slice, far_slice) = sims.split_at(mid);
+        let make = |slice: &[(u32, f64)], rng: &mut u64| -> Option<(SimInterval, Box<Node>)> {
+            if slice.is_empty() {
+                return None;
+            }
+            let mut iv = SimInterval::point(slice[0].1);
+            for &(_, s) in slice {
+                iv.extend(s);
+            }
+            let mut child_ids: Vec<u32> = slice.iter().map(|&(id, _)| id).collect();
+            Some((iv, Box::new(Self::build_node(items, &mut child_ids, leaf_size, rng))))
+        };
+        let near = make(near_slice, rng);
+        let far = make(far_slice, rng);
+        Node { vp, near, far, bucket: Vec::new() }
+    }
+
+    pub fn bound(&self) -> BoundKind {
+        self.bound
+    }
+
+    pub fn leaf_size(&self) -> usize {
+        self.leaf_size
+    }
+
+    fn range_node(
+        &self,
+        node: &Node,
+        q: &V,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        stats: &mut QueryStats,
+    ) {
+        stats.nodes_visited += 1;
+        let s = q.sim(&self.items[node.vp as usize]);
+        stats.sim_evals += 1;
+        if s >= tau {
+            out.push((node.vp, s));
+        }
+        for &id in &node.bucket {
+            let si = q.sim(&self.items[id as usize]);
+            stats.sim_evals += 1;
+            if si >= tau {
+                out.push((id, si));
+            }
+        }
+        for child in [&node.near, &node.far].into_iter().flatten() {
+            let (iv, sub) = child;
+            if self.bound.upper_over(s, *iv) >= tau {
+                self.range_node(sub, q, tau, out, stats);
+            } else {
+                stats.pruned += 1;
+            }
+        }
+    }
+}
+
+impl<V: SimVector> SimilarityIndex<V> for VpTree<V> {
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        if let Some(root) = &self.root {
+            self.range_node(root, q, tau, &mut out, stats);
+        }
+        sort_desc(&mut out);
+        out
+    }
+
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut results = KnnHeap::new(k);
+        let mut frontier: BinaryHeap<Prioritized<&Node>> = BinaryHeap::new();
+        if let Some(root) = &self.root {
+            frontier.push(Prioritized { ub: 1.0, item: root });
+        }
+        while let Some(Prioritized { ub, item: node }) = frontier.pop() {
+            if results.len() >= k && ub <= results.floor() {
+                break; // no remaining node can improve the result set
+            }
+            stats.nodes_visited += 1;
+            let s = q.sim(&self.items[node.vp as usize]);
+            stats.sim_evals += 1;
+            results.offer(node.vp, s);
+            for &id in &node.bucket {
+                let si = q.sim(&self.items[id as usize]);
+                stats.sim_evals += 1;
+                results.offer(id, si);
+            }
+            for child in [&node.near, &node.far].into_iter().flatten() {
+                let (iv, sub) = child;
+                let child_ub = self.bound.upper_over(s, *iv);
+                if results.len() < k || child_ub > results.floor() {
+                    frontier.push(Prioritized { ub: child_ub, item: sub });
+                } else {
+                    stats.pruned += 1;
+                }
+            }
+        }
+        results.into_sorted()
+    }
+
+    fn name(&self) -> &'static str {
+        "vp-tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+    use crate::index::LinearScan;
+
+    fn check_matches_linear(n: usize, d: usize, seed: u64, bound: BoundKind) {
+        let pts = uniform_sphere(n, d, seed);
+        let tree = VpTree::build(pts.clone(), bound, seed);
+        let lin = LinearScan::build(pts.clone());
+        for qi in 0..5.min(n) {
+            let q = &pts[qi * (n / 5).max(1) % n];
+            let mut s1 = QueryStats::default();
+            let mut s2 = QueryStats::default();
+            for tau in [0.9, 0.5, 0.0] {
+                let a = tree.range(q, tau, &mut s1);
+                let b = lin.range(q, tau, &mut s2);
+                assert_eq!(a, b, "range tau={tau} bound={:?}", bound);
+            }
+            let a = tree.knn(q, 10, &mut s1);
+            let b = lin.knn(q, 10, &mut s2);
+            let av: Vec<f64> = a.iter().map(|&(_, s)| s).collect();
+            let bv: Vec<f64> = b.iter().map(|&(_, s)| s).collect();
+            for (x, y) in av.iter().zip(&bv) {
+                assert!((x - y).abs() < 1e-12, "knn sims differ: {av:?} vs {bv:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_linear_scan_low_dim() {
+        check_matches_linear(300, 4, 11, BoundKind::Mult);
+    }
+
+    #[test]
+    fn matches_linear_scan_mid_dim() {
+        check_matches_linear(300, 16, 12, BoundKind::Mult);
+    }
+
+    #[test]
+    fn matches_linear_with_loose_bounds() {
+        check_matches_linear(200, 8, 13, BoundKind::Euclidean);
+        check_matches_linear(200, 8, 14, BoundKind::MultLb1);
+        check_matches_linear(200, 8, 15, BoundKind::EuclLb);
+    }
+
+    #[test]
+    fn tighter_bound_prunes_at_least_as_well() {
+        let pts = uniform_sphere(2000, 8, 21);
+        let tight = VpTree::build(pts.clone(), BoundKind::Mult, 1);
+        let loose = VpTree::build(pts.clone(), BoundKind::Euclidean, 1);
+        let mut st = QueryStats::default();
+        let mut sl = QueryStats::default();
+        for qi in 0..20 {
+            tight.range(&pts[qi * 100], 0.8, &mut st);
+            loose.range(&pts[qi * 100], 0.8, &mut sl);
+        }
+        assert!(
+            st.sim_evals <= sl.sim_evals,
+            "tight {} > loose {}",
+            st.sim_evals,
+            sl.sim_evals
+        );
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: VpTree<crate::metrics::DenseVec> =
+            VpTree::build(Vec::new(), BoundKind::Mult, 0);
+        let mut stats = QueryStats::default();
+        let q = crate::metrics::DenseVec::new(vec![1.0, 0.0]);
+        assert!(empty.range(&q, 0.0, &mut stats).is_empty());
+        assert!(empty.knn(&q, 3, &mut stats).is_empty());
+
+        let one = VpTree::build(vec![q.clone()], BoundKind::Mult, 0);
+        assert_eq!(one.knn(&q, 3, &mut stats).len(), 1);
+    }
+}

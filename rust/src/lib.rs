@@ -1,0 +1,36 @@
+//! # simetra — exact cosine-similarity search with a triangle inequality
+//!
+//! A reproduction and productionization of Erich Schubert, *"A Triangle
+//! Inequality for Cosine Similarity"* (SISAP 2021). The paper derives tight,
+//! trig-free triangle inequalities in the similarity domain
+//! (`bounds`), which this crate uses to lift the classical metric-index
+//! family (`index`: VP-tree, ball-tree, M-tree, cover tree, LAESA, GNAT)
+//! from distances to cosine similarity — plus a batched scoring `runtime`
+//! backed by AOT-compiled JAX/Pallas artifacts over PJRT, wrapped in a
+//! `coordinator` serving engine.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::uniform_sphere;
+//! use simetra::index::{SimilarityIndex, VpTree};
+//!
+//! let corpus = uniform_sphere(10_000, 64, 42);
+//! let index = VpTree::build(corpus.clone(), BoundKind::Mult, 7);
+//! let mut stats = simetra::index::QueryStats::default();
+//! let hits = index.knn(&corpus[0], 10, &mut stats);
+//! assert_eq!(hits[0].0, 0); // a point's own nearest neighbor is itself
+//! println!("similarity computations: {}", stats.sim_evals);
+//! ```
+
+pub mod bounds;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod index;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,262 @@
+//! simetra CLI: serve a corpus, run one-shot searches, regenerate the
+//! paper's figures, and self-check the PJRT runtime against native scoring.
+//!
+//! Argument parsing is hand-rolled (`clap` is unavailable in this offline
+//! build); flags are `--key value` pairs after a subcommand.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::{
+    server, BatchConfig, Coordinator, CoordinatorConfig, ExecMode, IndexKind,
+};
+use simetra::data::{uniform_sphere, vmf_mixture, VmfSpec};
+use simetra::figures;
+use simetra::index::QueryStats;
+use simetra::metrics::SimVector;
+use simetra::runtime::Engine;
+
+const USAGE: &str = "\
+simetra — exact cosine-similarity search with a triangle inequality
+          (Schubert, SISAP 2021)
+
+USAGE: simetra <command> [--flag value ...]
+
+COMMANDS:
+  serve      Serve a synthetic corpus over TCP (JSON lines protocol)
+             --addr 127.0.0.1:7878  --n 100000  --dim 128  --clusters 64
+             --kappa 40  --shards 4  --index vp  --bound mult
+             --mode index|engine|hybrid  --artifacts artifacts
+             --max-batch 32  --max-wait-us 2000
+  search     One-shot kNN on a synthetic corpus (sanity/demo)
+             --n 10000  --dim 64  --k 10  --index vp  --bound mult
+  figures    Regenerate the paper's figures as CSV + summary
+             --out figures_out  --steps 401
+  selfcheck  Verify the PJRT runtime against native rust scoring
+             --artifacts artifacts
+
+INDEXES: linear vp ball m-tree cover laesa gnat
+BOUNDS:  euclidean eucl-lb arccos arccos-fast mult mult-lb1 mult-lb2
+";
+
+/// Tiny `--key value` flag parser.
+struct Flags(HashMap<String, String>);
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut map = HashMap::new();
+        let mut it = args.iter();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{arg}'"))?;
+            let value = it.next().with_context(|| format!("--{key} needs a value"))?;
+            map.insert(key.replace('-', "_"), value.clone());
+        }
+        Ok(Flags(map))
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.0.get(key).map(|s| s.as_str())
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+}
+
+pub fn parse_bound(s: &str) -> Result<BoundKind> {
+    Ok(match s.to_lowercase().as_str() {
+        "euclidean" | "eucl" => BoundKind::Euclidean,
+        "eucl-lb" | "eucllb" => BoundKind::EuclLb,
+        "arccos" => BoundKind::Arccos,
+        "arccos-fast" | "fast" => BoundKind::ArccosFast,
+        "mult" => BoundKind::Mult,
+        "mult-lb1" | "lb1" => BoundKind::MultLb1,
+        "mult-lb2" | "lb2" => BoundKind::MultLb2,
+        other => bail!("unknown bound '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = args.first() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match command.as_str() {
+        "serve" => cmd_serve(&flags),
+        "search" => cmd_search(&flags),
+        "figures" => cmd_figures(&flags),
+        "selfcheck" => cmd_selfcheck(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let addr = flags.str_or("addr", "127.0.0.1:7878");
+    let n = flags.usize_or("n", 100_000)?;
+    let dim = flags.usize_or("dim", 128)?;
+    let clusters = flags.usize_or("clusters", 64)?;
+    let kappa = flags.f64_or("kappa", 40.0)?;
+    let shards = flags.usize_or("shards", 4)?;
+    let index = IndexKind::parse(&flags.str_or("index", "vp"))
+        .context("unknown --index")?;
+    let bound = parse_bound(&flags.str_or("bound", "mult"))?;
+    let mode = ExecMode::parse(&flags.str_or("mode", "index")).context("unknown --mode")?;
+    let artifacts = flags.get("artifacts").map(PathBuf::from);
+    let max_batch = flags.usize_or("max_batch", 32)?;
+    let max_wait_us = flags.usize_or("max_wait_us", 2000)? as u64;
+
+    eprintln!("generating corpus: n={n} dim={dim} clusters={clusters} kappa={kappa}");
+    let (corpus, _) = vmf_mixture(&VmfSpec { n, dim, clusters, kappa, seed: 42 });
+    eprintln!("building {index:?} shards={shards} bound={} mode={mode:?}", bound.name());
+    let coord = Coordinator::new(
+        corpus,
+        CoordinatorConfig {
+            n_shards: shards,
+            index,
+            bound,
+            mode,
+            batch: BatchConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(max_wait_us),
+                queue_depth: 4096,
+            },
+            artifact_dir: artifacts,
+            hybrid_pivots: 32,
+        },
+    )?;
+    let local = server::serve(coord, &addr)?;
+    eprintln!("serving on {local} — press Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_search(flags: &Flags) -> Result<()> {
+    let n = flags.usize_or("n", 10_000)?;
+    let dim = flags.usize_or("dim", 64)?;
+    let k = flags.usize_or("k", 10)?;
+    let kind =
+        IndexKind::parse(&flags.str_or("index", "vp")).context("unknown --index")?;
+    let bound = parse_bound(&flags.str_or("bound", "mult"))?;
+    let (corpus, _) = vmf_mixture(&VmfSpec { n, dim, clusters: 32, kappa: 50.0, seed: 42 });
+    let build0 = std::time::Instant::now();
+    let idx = kind.build(corpus.clone(), bound);
+    let build_t = build0.elapsed();
+    let q = &corpus[0];
+    let mut stats = QueryStats::default();
+    let t0 = std::time::Instant::now();
+    let hits = idx.knn(q, k, &mut stats);
+    let dt = t0.elapsed();
+    println!("index={} bound={} n={n} dim={dim} (built in {build_t:?})", idx.name(), bound.name());
+    println!(
+        "query took {dt:?}; {} sim evals ({:.1}% of corpus), {} pruned",
+        stats.sim_evals,
+        100.0 * stats.sim_evals as f64 / n as f64,
+        stats.pruned
+    );
+    for (rank, (id, s)) in hits.iter().enumerate() {
+        println!("  #{rank}: id={id} sim={s:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(flags: &Flags) -> Result<()> {
+    let out = PathBuf::from(flags.str_or("out", "figures_out"));
+    let steps = flags.usize_or("steps", figures::GRID)?;
+    figures::write_all(&out, steps)?;
+    println!("figures written to {}", out.display());
+    print!("{}", std::fs::read_to_string(out.join("summary.txt"))?);
+    Ok(())
+}
+
+fn cmd_selfcheck(flags: &Flags) -> Result<()> {
+    let dir = PathBuf::from(flags.str_or("artifacts", "artifacts"));
+    let engine = Engine::load(&dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", engine.manifest().artifacts.len());
+
+    let corpus = uniform_sphere(1000, 128, 7);
+    let queries = uniform_sphere(8, 128, 8);
+    let mut qflat = Vec::new();
+    for q in &queries {
+        qflat.extend_from_slice(q.as_slice());
+    }
+    let mut cflat = Vec::new();
+    for c in &corpus {
+        cflat.extend_from_slice(c.as_slice());
+    }
+    let out = engine.score_topk(&qflat, 8, &cflat, 1000, 128, 5)?;
+    let mut max_err = 0.0f64;
+    for (qi, q) in queries.iter().enumerate() {
+        let native: Vec<f64> = corpus.iter().map(|c| q.sim(c)).collect();
+        let mut order: Vec<usize> = (0..1000).collect();
+        order.sort_by(|&a, &b| native[b].partial_cmp(&native[a]).unwrap());
+        for j in 0..5 {
+            let got = out.values[qi * out.k + j] as f64;
+            let want = native[order[j]];
+            max_err = max_err.max((got - want).abs());
+        }
+    }
+    println!("score_topk max |err| vs native: {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "runtime numerics diverge");
+
+    // pivot_filter: verify certified intervals contain the truth.
+    let pivots = uniform_sphere(16, 128, 9);
+    let mut sim_qp = Vec::new();
+    for q in &queries {
+        for p in &pivots {
+            sim_qp.push(q.sim(p) as f32);
+        }
+    }
+    let mut sim_pc = Vec::new();
+    for p in &pivots {
+        for c in corpus.iter().take(1000) {
+            sim_pc.push(p.sim(c) as f32);
+        }
+    }
+    let bounds = engine.pivot_filter(&sim_qp, 8, &sim_pc, 16, 1000)?;
+    let mut violations = 0;
+    for (qi, q) in queries.iter().enumerate() {
+        for (ci, c) in corpus.iter().enumerate() {
+            let truth = q.sim(c);
+            let lb = bounds.lb[qi * 1000 + ci] as f64;
+            let ub = bounds.ub[qi * 1000 + ci] as f64;
+            if truth < lb - 1e-4 || truth > ub + 1e-4 {
+                violations += 1;
+            }
+        }
+    }
+    println!("pivot_filter interval violations: {violations}/8000");
+    anyhow::ensure!(violations == 0, "pivot bounds do not contain the truth");
+    println!("selfcheck OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Distances derived from cosine similarity (paper §2, Eqs. 4–6) and the
+//! similarity/distance conversions used when comparing against classical
+//! metric indexing.
+
+/// Eq. 4: the common "cosine distance" `1 - sim`. **Not a metric** — it
+/// violates the triangle inequality (see tests), which is the paper's
+/// motivation.
+#[inline]
+pub fn d_cosine(sim: f64) -> f64 {
+    1.0 - sim
+}
+
+/// Eq. 5: `sqrt(2 - 2 sim)` — the Euclidean distance of the normalized
+/// vectors; a metric.
+#[inline]
+pub fn d_sqrt_cosine(sim: f64) -> f64 {
+    (2.0 - 2.0 * sim).max(0.0).sqrt()
+}
+
+/// Eq. 6: `arccos(sim)` — the angle / arc length; a metric on the sphere.
+#[inline]
+pub fn d_arccos(sim: f64) -> f64 {
+    sim.clamp(-1.0, 1.0).acos()
+}
+
+/// Inverse of Eq. 5 (distance back to similarity).
+#[inline]
+pub fn sim_from_sqrt_cosine(d: f64) -> f64 {
+    1.0 - 0.5 * d * d
+}
+
+/// Inverse of Eq. 6.
+#[inline]
+pub fn sim_from_arccos(d: f64) -> f64 {
+    d.cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sphere::uniform_sphere;
+    use crate::metrics::SimVector;
+
+    #[test]
+    fn conversions_round_trip() {
+        for i in 0..=100 {
+            let s = -1.0 + 2.0 * i as f64 / 100.0;
+            assert!((sim_from_sqrt_cosine(d_sqrt_cosine(s)) - s).abs() < 1e-12);
+            assert!((sim_from_arccos(d_arccos(s)) - s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cosine_distance_violates_triangle_inequality() {
+        // The paper's univariate counterexample style: three coplanar unit
+        // vectors at angles 0, 60 and 120 degrees.
+        let sim = |a: f64, b: f64| (a - b).cos();
+        let (x, z, y) = (0.0f64, 1.0471975512, 2.0943951024); // 0, 60, 120 deg
+        let dxy = d_cosine(sim(x, y));
+        let dxz = d_cosine(sim(x, z));
+        let dzy = d_cosine(sim(z, y));
+        assert!(dxy > dxz + dzy + 1e-9, "expected violation: {dxy} vs {}", dxz + dzy);
+    }
+
+    #[test]
+    fn sqrt_cosine_and_arccos_are_metric_on_samples() {
+        let pts = uniform_sphere(60, 8, 42);
+        for i in 0..pts.len() {
+            for j in 0..pts.len() {
+                for k in 0..pts.len() {
+                    let sxy = pts[i].sim(&pts[j]);
+                    let sxz = pts[i].sim(&pts[k]);
+                    let szy = pts[k].sim(&pts[j]);
+                    assert!(
+                        d_sqrt_cosine(sxy) <= d_sqrt_cosine(sxz) + d_sqrt_cosine(szy) + 1e-9
+                    );
+                    assert!(d_arccos(sxy) <= d_arccos(sxz) + d_arccos(szy) + 1e-9);
+                }
+            }
+        }
+    }
+}

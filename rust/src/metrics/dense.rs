@@ -1,0 +1,109 @@
+//! Dense vectors, L2-normalized at construction.
+
+/// A dense vector stored normalized (f32 payload, f64 accumulation).
+///
+/// Normalizing once at ingest makes every similarity a plain dot product —
+/// and makes the stored corpus directly usable as rows of the PJRT scoring
+/// artifact's input buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseVec {
+    data: Vec<f32>,
+}
+
+impl DenseVec {
+    /// Build from raw values; the vector is L2-normalized (zero vectors are
+    /// kept as all-zeros, so their similarity to anything is 0).
+    pub fn new(raw: Vec<f32>) -> Self {
+        let mut data = raw;
+        let norm: f64 = data.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            let inv = (1.0 / norm) as f32;
+            for v in &mut data {
+                *v *= inv;
+            }
+        }
+        DenseVec { data }
+    }
+
+    /// Wrap values that are already unit-norm (or intentionally raw);
+    /// used by generators that sample directly on the sphere.
+    pub fn from_normalized(data: Vec<f32>) -> Self {
+        DenseVec { data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Dot product with 4-way unrolled f64 accumulation (the scalar hot
+    /// path; the batched hot path goes through the PJRT artifact).
+    #[inline]
+    pub fn dot(&self, other: &Self) -> f64 {
+        let a = &self.data;
+        let b = &other.data;
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len().min(b.len());
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for i in 0..chunks {
+            let j = i * 4;
+            s0 += a[j] as f64 * b[j] as f64;
+            s1 += a[j + 1] as f64 * b[j + 1] as f64;
+            s2 += a[j + 2] as f64 * b[j + 2] as f64;
+            s3 += a[j + 3] as f64 * b[j + 3] as f64;
+        }
+        let mut sum = (s0 + s1) + (s2 + s3);
+        for j in chunks * 4..n {
+            sum += a[j] as f64 * b[j] as f64;
+        }
+        sum.clamp(-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalizes_on_construction() {
+        let v = DenseVec::new(vec![3.0, 4.0]);
+        let norm: f32 = v.as_slice().iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_matches_naive_for_odd_lengths() {
+        for n in [1usize, 2, 3, 5, 7, 13, 100, 101] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.71).cos()).collect();
+            let da = DenseVec::new(a.clone());
+            let db = DenseVec::new(b.clone());
+            let naive: f64 = da
+                .as_slice()
+                .iter()
+                .zip(db.as_slice())
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            assert!((da.dot(&db) - naive.clamp(-1.0, 1.0)).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_clamps_to_cosine_range() {
+        let v = DenseVec::new(vec![1.0; 64]);
+        assert!(v.dot(&v) <= 1.0);
+        let w = DenseVec::new(vec![-1.0; 64]);
+        assert!(v.dot(&w) >= -1.0);
+    }
+}

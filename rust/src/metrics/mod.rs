@@ -1,0 +1,77 @@
+//! Cosine similarity over dense and sparse vectors, and the derived
+//! distances of paper §2 (Eqs. 4–6).
+
+pub mod convert;
+pub mod dense;
+
+pub use convert::{d_arccos, d_cosine, d_sqrt_cosine};
+pub use dense::DenseVec;
+
+use crate::sparse::SparseVec;
+
+/// A vector that can report its cosine similarity to another of its type.
+///
+/// Implementations pre-normalize at construction so `sim` is a plain dot
+/// product — the paper's "best practice" of working with L2-normalized data.
+pub trait SimVector: Clone + Send + Sync + 'static {
+    /// Cosine similarity in `[-1, 1]` (0 against the zero vector).
+    fn sim(&self, other: &Self) -> f64;
+
+    /// Dimensionality (vector-space dimension, not #non-zeros).
+    fn dim(&self) -> usize;
+}
+
+impl SimVector for DenseVec {
+    #[inline]
+    fn sim(&self, other: &Self) -> f64 {
+        self.dot(other)
+    }
+
+    fn dim(&self) -> usize {
+        self.len()
+    }
+}
+
+impl SimVector for SparseVec {
+    #[inline]
+    fn sim(&self, other: &Self) -> f64 {
+        self.dot(other)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_and_sparse_agree() {
+        let a = vec![0.0f32, 1.0, 0.0, 2.0, 0.0, 3.0];
+        let b = vec![1.0f32, 1.0, 0.0, 0.0, 0.0, 4.0];
+        let da = DenseVec::new(a.clone());
+        let db = DenseVec::new(b.clone());
+        let sa = SparseVec::from_dense(&a);
+        let sb = SparseVec::from_dense(&b);
+        assert!((da.sim(&db) - sa.sim(&sb)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sim_is_scale_invariant() {
+        let a = DenseVec::new(vec![1.0, 2.0, 3.0]);
+        let b = DenseVec::new(vec![3.0, 2.0, 1.0]);
+        let a4 = DenseVec::new(vec![4.0, 8.0, 12.0]);
+        assert!((a.sim(&b) - a4.sim(&b)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn self_similarity_is_one_zero_vector_is_zero() {
+        let a = DenseVec::new(vec![0.3, -0.4, 0.5]);
+        assert!((a.sim(&a) - 1.0).abs() < 1e-6);
+        let z = DenseVec::new(vec![0.0, 0.0, 0.0]);
+        assert_eq!(z.sim(&a), 0.0);
+        assert_eq!(z.sim(&z), 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Tensor description (shape + dtype) of one artifact input/output.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled entry point at a fixed (padded) shape.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub entry: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub params: HashMap<String, i64>,
+}
+
+impl ArtifactMeta {
+    pub fn param(&self, key: &str) -> i64 {
+        *self.params.get(key).unwrap_or(&0)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+            v.req(key)?.as_arr()?.iter().map(TensorMeta::from_json).collect()
+        };
+        let mut params = HashMap::new();
+        if let Json::Obj(fields) = v.req("params")? {
+            for (k, val) in fields {
+                params.insert(k.clone(), val.as_i64()?);
+            }
+        }
+        Ok(ArtifactMeta {
+            name: v.req("name")?.as_str()?.to_string(),
+            entry: v.req("entry")?.as_str()?.to_string(),
+            file: v.req("file")?.as_str()?.to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+            params,
+        })
+    }
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub pad_score: f64,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("parsing manifest JSON")?;
+        let version = v.req("version")?.as_usize()? as u32;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<_>>()?;
+        Ok(Manifest { version, pad_score: v.req("pad_score")?.as_f64()?, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// All artifacts for an entry point.
+    pub fn variants(&self, entry: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.entry == entry).collect()
+    }
+
+    /// Smallest `score_topk` variant that fits a (q, n, d, k) request.
+    pub fn pick_score_topk(&self, q: usize, n: usize, d: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.variants("score_topk")
+            .into_iter()
+            .filter(|a| {
+                // d may be zero-padded up to the artifact's d (zero features
+                // change neither dots nor norms).
+                a.param("q") as usize >= q
+                    && a.param("n") as usize >= n
+                    && a.param("d") as usize >= d
+                    && a.param("k") as usize >= k
+            })
+            .min_by_key(|a| (a.param("q"), a.param("n"), a.param("d"), a.param("k")))
+    }
+
+    /// Smallest `pivot_filter` variant fitting (q, p, n).
+    pub fn pick_pivot_filter(&self, q: usize, p: usize, n: usize) -> Option<&ArtifactMeta> {
+        self.variants("pivot_filter")
+            .into_iter()
+            .filter(|a| {
+                a.param("q") as usize >= q
+                    && a.param("p") as usize >= p
+                    && a.param("n") as usize >= n
+            })
+            .min_by_key(|a| (a.param("q"), a.param("p"), a.param("n")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1, "pad_score": -2.0,
+              "artifacts": [
+                {"name": "a", "entry": "score_topk", "file": "a.hlo.txt",
+                 "inputs": [{"name": "queries", "shape": [8, 128], "dtype": "f32"}],
+                 "outputs": [],
+                 "params": {"q": 8, "n": 1024, "d": 128, "k": 16}},
+                {"name": "b", "entry": "score_topk", "file": "b.hlo.txt",
+                 "inputs": [], "outputs": [],
+                 "params": {"q": 32, "n": 4096, "d": 128, "k": 16}},
+                {"name": "p", "entry": "pivot_filter", "file": "p.hlo.txt",
+                 "inputs": [], "outputs": [],
+                 "params": {"q": 8, "p": 16, "n": 1024}}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_tensor_meta() {
+        let m = sample();
+        assert_eq!(m.pad_score, -2.0);
+        assert_eq!(m.artifacts[0].inputs[0].shape, vec![8, 128]);
+        assert_eq!(m.artifacts[0].inputs[0].dtype, "f32");
+    }
+
+    #[test]
+    fn picks_smallest_fitting_variant() {
+        let m = sample();
+        assert_eq!(m.pick_score_topk(4, 500, 128, 10).unwrap().name, "a");
+        assert_eq!(m.pick_score_topk(16, 500, 128, 10).unwrap().name, "b");
+        assert_eq!(m.pick_score_topk(4, 2000, 128, 10).unwrap().name, "b");
+        assert!(m.pick_score_topk(64, 500, 128, 10).is_none());
+        // Smaller d fits via zero-padding; larger d does not.
+        assert_eq!(m.pick_score_topk(4, 500, 64, 10).unwrap().name, "a");
+        assert!(m.pick_score_topk(4, 500, 256, 10).is_none());
+    }
+
+    #[test]
+    fn pivot_variant_selection() {
+        let m = sample();
+        assert_eq!(m.pick_pivot_filter(8, 16, 1000).unwrap().name, "p");
+        assert!(m.pick_pivot_filter(9, 16, 1000).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "pad_score": 0, "artifacts": []}"#).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Sparse vectors as sorted `(index, value)` pairs with a merge-join dot
+//! product — the representation paper §2 singles out as the reason cosine
+//! similarity is cheap on text data.
+
+/// A sparse vector: strictly increasing `idx`, parallel `val`, normalized to
+/// unit L2 norm at construction (zero vectors stay zero).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVec {
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    dim: usize,
+}
+
+impl SparseVec {
+    /// Build from (index, value) pairs; sorts, merges duplicate indexes
+    /// (summing), drops explicit zeros, and L2-normalizes.
+    pub fn new(mut pairs: Vec<(u32, f32)>, dim: usize) -> Self {
+        pairs.sort_by_key(|&(i, _)| i);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            debug_assert!((i as usize) < dim, "index {i} out of dim {dim}");
+            if let Some(&last) = idx.last() {
+                if last == i {
+                    *val.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            idx.push(i);
+            val.push(v);
+        }
+        // Drop zeros created by cancellation, then normalize.
+        let mut k = 0;
+        for j in 0..idx.len() {
+            if val[j] != 0.0 {
+                idx[k] = idx[j];
+                val[k] = val[j];
+                k += 1;
+            }
+        }
+        idx.truncate(k);
+        val.truncate(k);
+        let norm: f64 = val.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            let inv = (1.0 / norm) as f32;
+            for v in &mut val {
+                *v *= inv;
+            }
+        }
+        SparseVec { idx, val, dim }
+    }
+
+    /// Build from a dense slice (test/interop convenience).
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let pairs = dense
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        Self::new(pairs, dense.len())
+    }
+
+    /// Materialize to a dense (normalized) vector of length `dim` — the
+    /// bridge to the PJRT batched-scoring path.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.idx.iter().copied().zip(self.val.iter().copied())
+    }
+
+    /// Merge-join dot product: O(nnz_a + nnz_b), touching only indexes
+    /// present in both vectors.
+    pub fn dot(&self, other: &Self) -> f64 {
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut sum = 0.0f64;
+        let (ai, av) = (&self.idx, &self.val);
+        let (bi, bv) = (&other.idx, &other.val);
+        while i < ai.len() && j < bi.len() {
+            match ai[i].cmp(&bi[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    sum += av[i] as f64 * bv[j] as f64;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        sum.clamp(-1.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_dot_matches_dense_dot() {
+        let a = vec![0.0f32, 2.0, 0.0, 0.0, 3.0, 0.0, 1.0];
+        let b = vec![1.0f32, 4.0, 0.0, 2.0, 5.0, 0.0, 0.0];
+        let sa = SparseVec::from_dense(&a);
+        let sb = SparseVec::from_dense(&b);
+        let na: f64 = a.iter().map(|&v| (v * v) as f64).sum::<f64>().sqrt();
+        let nb: f64 = b.iter().map(|&v| (v * v) as f64).sum::<f64>().sqrt();
+        let want: f64 =
+            a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum::<f64>() / (na * nb);
+        assert!((sa.dot(&sb) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_indexes_are_merged() {
+        let v = SparseVec::new(vec![(3, 1.0), (3, 2.0), (1, 1.0)], 8);
+        assert_eq!(v.nnz(), 2);
+        let w = SparseVec::new(vec![(1, 1.0), (3, 3.0)], 8);
+        assert!((v.dot(&w) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cancellation_drops_entries() {
+        let v = SparseVec::new(vec![(2, 1.5), (2, -1.5), (5, 1.0)], 8);
+        assert_eq!(v.nnz(), 1);
+    }
+
+    #[test]
+    fn to_dense_round_trips() {
+        let v = SparseVec::new(vec![(0, 1.0), (6, -2.0)], 7);
+        let d = v.to_dense();
+        let back = SparseVec::from_dense(&d);
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn disjoint_supports_have_zero_similarity() {
+        let a = SparseVec::new(vec![(0, 1.0), (2, 1.0)], 6);
+        let b = SparseVec::new(vec![(1, 1.0), (3, 1.0)], 6);
+        assert_eq!(a.dot(&b), 0.0);
+    }
+
+    #[test]
+    fn zero_vector_is_safe() {
+        let z = SparseVec::new(vec![], 4);
+        let a = SparseVec::new(vec![(1, 2.0)], 4);
+        assert_eq!(z.dot(&a), 0.0);
+        assert_eq!(z.nnz(), 0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion replacement for the offline build).
+//!
+//! JMH-style protocol matching the paper's §4.3 methodology: warmup
+//! iterations followed by measurement iterations, reporting mean ± stddev
+//! of per-op time. A `black_box` sink prevents the optimizer from deleting
+//! the measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of the optimizer sink.
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's measured statistics.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean nanoseconds per operation.
+    pub mean_ns: f64,
+    /// Standard deviation across measurement iterations.
+    pub std_ns: f64,
+    pub iterations: usize,
+    pub ops_per_iter: u64,
+}
+
+impl Measurement {
+    pub fn throughput_mops(&self) -> f64 {
+        1e3 / self.mean_ns
+    }
+}
+
+/// Harness configuration (JMH-flavored).
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Target wall time per iteration; op count adapts to reach it.
+    pub iter_time_ms: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, measure_iters: 7, iter_time_ms: 200 }
+    }
+}
+
+/// Quick config for CI/tests.
+impl BenchConfig {
+    pub fn quick() -> Self {
+        BenchConfig { warmup_iters: 1, measure_iters: 3, iter_time_ms: 30 }
+    }
+
+    /// Honor `SIMETRA_BENCH_QUICK=1` (used by `cargo test`-driven smoke).
+    pub fn from_env() -> Self {
+        if std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Measure `op`, which must execute `ops_per_call` logical operations per
+/// invocation (e.g. a loop over a pre-generated array — the paper's Table 2
+/// protocol) and return a value to sink.
+pub fn bench<T>(
+    config: &BenchConfig,
+    name: &str,
+    ops_per_call: u64,
+    mut op: impl FnMut() -> T,
+) -> Measurement {
+    // Calibrate: how many calls fit in iter_time_ms?
+    let t0 = Instant::now();
+    black_box(op());
+    let once = t0.elapsed().as_nanos().max(1) as u64;
+    let target_ns = config.iter_time_ms * 1_000_000;
+    let calls_per_iter = (target_ns / once).clamp(1, 1_000_000_000);
+
+    let run_iter = |op: &mut dyn FnMut() -> T| -> f64 {
+        let t = Instant::now();
+        for _ in 0..calls_per_iter {
+            black_box(op());
+        }
+        t.elapsed().as_nanos() as f64 / (calls_per_iter * ops_per_call) as f64
+    };
+
+    for _ in 0..config.warmup_iters {
+        run_iter(&mut op);
+    }
+    let samples: Vec<f64> = (0..config.measure_iters).map(|_| run_iter(&mut op)).collect();
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len().max(1) as f64;
+    Measurement {
+        name: name.to_string(),
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        iterations: config.measure_iters,
+        ops_per_iter: calls_per_iter * ops_per_call,
+    }
+}
+
+/// Print a Table-2-style row.
+pub fn report(m: &Measurement) {
+    println!(
+        "{:<24} {:>10.3} ns/op  ± {:>7.3} ns  ({} iters x {} ops)",
+        m.name, m.mean_ns, m.std_ns, m.iterations, m.ops_per_iter
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let cfg = BenchConfig::quick();
+        let data: Vec<f64> = (0..1024).map(|i| i as f64).collect();
+        let m = bench(&cfg, "sum", data.len() as u64, || {
+            data.iter().sum::<f64>()
+        });
+        assert!(m.mean_ns > 0.0 && m.mean_ns < 1e5, "{}", m.mean_ns);
+    }
+
+    #[test]
+    fn slower_op_measures_slower() {
+        let cfg = BenchConfig::quick();
+        let small: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let big: Vec<f64> = (0..65536).map(|i| i as f64).collect();
+        let fast = bench(&cfg, "fast", 1, || small.iter().sum::<f64>());
+        let slow = bench(&cfg, "slow", 1, || big.iter().sum::<f64>());
+        assert!(slow.mean_ns > fast.mean_ns * 10.0);
+    }
+}

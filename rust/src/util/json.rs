@@ -1,0 +1,390 @@
+//! Minimal JSON: parser + writer (in-tree replacement for `serde_json`,
+//! unavailable in this offline build).
+//!
+//! Supports the full JSON grammar except for exotic float forms; numbers
+//! are f64 (adequate for the manifest and the wire protocol). Object key
+//! order is preserved.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    // --- constructors -----------------------------------------------------
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(values: impl IntoIterator<Item = f64>) -> Json {
+        Json::Arr(values.into_iter().map(Json::Num).collect())
+    }
+
+    pub fn arr_f32(values: impl IntoIterator<Item = f32>) -> Json {
+        Json::Arr(values.into_iter().map(|v| Json::Num(v as f64)).collect())
+    }
+
+    // --- accessors ---------------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(v) => Ok(*v),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("expected non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        let v = self.as_f64()?;
+        if v.fract() != 0.0 {
+            bail!("expected integer, got {v}");
+        }
+        Ok(v as i64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(a) => Ok(a),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>> {
+        self.as_arr()?.iter().map(|v| Ok(v.as_f64()? as f32)).collect()
+    }
+
+    // --- parsing -----------------------------------------------------------
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at offset {pos}");
+        }
+        Ok(value)
+    }
+
+    // --- writing -----------------------------------------------------------
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 9e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Object fields as a map (for tests / diffing).
+    pub fn to_map(&self) -> BTreeMap<String, Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().cloned().collect(),
+            _ => BTreeMap::new(),
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    other => bail!("expected ',' or ']' at {pos}, got {other:?}"),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    bail!("expected ':' at {pos}");
+                }
+                *pos += 1;
+                let value = parse_value(b, pos)?;
+                fields.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    other => bail!("expected ',' or '}}' at {pos}, got {other:?}"),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("invalid literal at {pos}")
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at {pos}");
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                        // Surrogate pairs: decode when followed by a low
+                        // surrogate; lone surrogates map to U+FFFD.
+                        if (0xD800..0xDC00).contains(&code)
+                            && b.get(*pos + 5..*pos + 7) == Some(b"\\u")
+                        {
+                            let hex2 = b
+                                .get(*pos + 7..*pos + 11)
+                                .ok_or_else(|| anyhow!("bad surrogate pair"))?;
+                            let low = u32::from_str_radix(std::str::from_utf8(hex2)?, 16)?;
+                            let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                            out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                            *pos += 10;
+                        } else {
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            *pos += 4;
+                        }
+                    }
+                    other => bail!("bad escape {other:?}"),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar.
+                let rest = std::str::from_utf8(&b[*pos..])?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos])?;
+    let v: f64 = text.parse().map_err(|e| anyhow!("bad number '{text}': {e}"))?;
+    Ok(Json::Num(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_structures() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "e": "x\ny"}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_bool().unwrap(), true);
+        assert_eq!(v.get("e").unwrap().as_str().unwrap(), "x\ny");
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(Json::parse("42").unwrap().as_i64().unwrap(), 42);
+        assert_eq!(Json::parse("-1.5").unwrap().as_f64().unwrap(), -1.5);
+        assert_eq!(Json::parse("1e3").unwrap().as_f64().unwrap(), 1000.0);
+        assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn escapes_round_trip() {
+        let v = Json::Str("quote\" slash\\ tab\t nl\n".into());
+        let back = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn unicode_escape() {
+        assert_eq!(Json::parse(r#""é""#).unwrap().as_str().unwrap(), "é");
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("tru").is_err());
+        assert!(Json::parse("1 2").is_err());
+    }
+
+    #[test]
+    fn f32_vec_helper() {
+        let v = Json::parse("[0.5, 1, -2]").unwrap().as_f32_vec().unwrap();
+        assert_eq!(v, vec![0.5f32, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::Arr(vec![]).to_string(), "[]");
+    }
+}

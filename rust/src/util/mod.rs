@@ -1,0 +1,9 @@
+//! In-tree infrastructure for the offline build: RNG, JSON, micro-bench
+//! harness (replacing `rand`, `serde_json`, `criterion`).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,152 @@
+//! Integration: the full serving stack — coordinator modes (index / engine /
+//! hybrid), TCP server, and cross-mode agreement on the same corpus.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::{
+    server, BatchConfig, Coordinator, CoordinatorConfig, ExecMode, IndexKind, Request, Response,
+};
+use simetra::data::{vmf_mixture, VmfSpec};
+use simetra::index::{LinearScan, QueryStats, SimilarityIndex};
+use simetra::metrics::DenseVec;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+fn corpus(n: usize, d: usize) -> Vec<DenseVec> {
+    vmf_mixture(&VmfSpec { n, dim: d, clusters: 16, kappa: 60.0, seed: 7 }).0
+}
+
+fn config(mode: ExecMode, artifacts: Option<std::path::PathBuf>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        n_shards: 2,
+        index: IndexKind::Vp,
+        bound: BoundKind::Mult,
+        mode,
+        batch: BatchConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(1),
+            queue_depth: 256,
+        },
+        artifact_dir: artifacts,
+        hybrid_pivots: 16,
+    }
+}
+
+#[test]
+fn engine_mode_matches_index_mode() {
+    let Some(dir) = artifact_dir() else { return };
+    let pts = corpus(3000, 128);
+    let index_coord = Coordinator::new(pts.clone(), config(ExecMode::Index, None)).unwrap();
+    let engine_coord =
+        Coordinator::new(pts.clone(), config(ExecMode::Engine, Some(dir))).unwrap();
+    for qi in [0usize, 1500, 2999] {
+        let v = pts[qi].as_slice().to_vec();
+        let (a, _) = index_coord.knn(v.clone(), 5).unwrap();
+        let (b, _) = engine_coord.knn(v, 5).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            // f32 artifact vs f64 native: scores agree to 1e-4.
+            assert!((x.score - y.score).abs() < 1e-4, "{x:?} vs {y:?}");
+        }
+        assert_eq!(a[0].id, qi as u64);
+        assert_eq!(b[0].id, qi as u64);
+    }
+}
+
+#[test]
+fn hybrid_mode_matches_index_mode() {
+    let Some(dir) = artifact_dir() else { return };
+    let pts = corpus(2000, 64);
+    let index_coord = Coordinator::new(pts.clone(), config(ExecMode::Index, None)).unwrap();
+    let hybrid_coord =
+        Coordinator::new(pts.clone(), config(ExecMode::Hybrid, Some(dir))).unwrap();
+    for qi in [0usize, 999, 1999] {
+        let v = pts[qi].as_slice().to_vec();
+        let (a, _) = index_coord.knn(v.clone(), 7).unwrap();
+        let (b, evals) = hybrid_coord.knn(v.clone(), 7).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x.score - y.score).abs() < 1e-6, "{x:?} vs {y:?}");
+        }
+        // The hybrid path must actually prune (clustered corpus).
+        assert!(evals < 2000, "hybrid did not prune: {evals} evals");
+
+        let (ra, _) = index_coord.range(v.clone(), 0.8).unwrap();
+        let (rb, _) = hybrid_coord.range(v, 0.8).unwrap();
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.id, y.id);
+        }
+    }
+}
+
+#[test]
+fn every_index_kind_serves_correctly() {
+    let pts = corpus(600, 32);
+    let lin = LinearScan::build(pts.clone());
+    for kind in [
+        IndexKind::Linear,
+        IndexKind::Vp,
+        IndexKind::Ball,
+        IndexKind::MTree,
+        IndexKind::Cover,
+        IndexKind::Laesa,
+        IndexKind::Gnat,
+    ] {
+        let mut cfg = config(ExecMode::Index, None);
+        cfg.index = kind;
+        let coord = Coordinator::new(pts.clone(), cfg).unwrap();
+        let (hits, _) = coord.knn(pts[123].as_slice().to_vec(), 5).unwrap();
+        let mut st = QueryStats::default();
+        let want = lin.knn(&pts[123], 5, &mut st);
+        for (h, (_, s)) in hits.iter().zip(&want) {
+            assert!((h.score - s).abs() < 1e-9, "{kind:?}");
+        }
+        assert_eq!(hits[0].id, 123, "{kind:?}");
+    }
+}
+
+#[test]
+fn tcp_server_end_to_end_with_engine() {
+    let Some(dir) = artifact_dir() else { return };
+    let pts = corpus(1500, 128);
+    let coord = Coordinator::new(pts.clone(), config(ExecMode::Engine, Some(dir))).unwrap();
+    let addr = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = server::Client::connect(addr).unwrap();
+    let hits = client.knn(pts[42].as_slice().to_vec(), 3).unwrap();
+    assert_eq!(hits[0].id, 42);
+    match client.request(&Request::Stats).unwrap() {
+        Response::Stats(s) => {
+            assert!(s.engine_calls >= 1, "engine was not used: {s:?}");
+            assert_eq!(s.corpus_size, 1500);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn batched_load_through_engine_mode() {
+    let Some(dir) = artifact_dir() else { return };
+    let pts = corpus(2000, 128);
+    let coord = Coordinator::new(pts.clone(), config(ExecMode::Engine, Some(dir))).unwrap();
+    let mut handles = Vec::new();
+    for qi in 0..32usize {
+        let coord = coord.clone();
+        let v = pts[qi * 60].as_slice().to_vec();
+        handles.push(std::thread::spawn(move || coord.knn(v, 4).unwrap()));
+    }
+    for (qi, h) in handles.into_iter().enumerate() {
+        let (hits, _) = h.join().unwrap();
+        assert_eq!(hits[0].id, (qi * 60) as u64);
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.queries, 32);
+    // Batching must have grouped queries: fewer batches than queries.
+    assert!(stats.batches < 32, "no batching happened: {}", stats.batches);
+}

@@ -1,0 +1,218 @@
+//! Property sweep: every index x every bound kind x every workload shape
+//! returns EXACTLY the linear scan's results. This is the load-bearing
+//! correctness guarantee of the whole system — the triangle inequality may
+//! only ever save work, never results.
+//!
+//! (Hand-rolled property testing: the offline build has no proptest; we
+//! sweep a seeded randomized grid instead, which is what proptest would
+//! shrink from anyway.)
+
+use simetra::bounds::BoundKind;
+use simetra::data::{uniform_sphere, vmf_mixture, zipf_corpus, VmfSpec, ZipfSpec};
+use simetra::index::{
+    BallTree, CoverTree, Gnat, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex, VpTree,
+};
+use simetra::metrics::DenseVec;
+use simetra::sparse::SparseVec;
+use simetra::util::Rng;
+
+fn build_all(
+    pts: &[DenseVec],
+    bound: BoundKind,
+) -> Vec<Box<dyn SimilarityIndex<DenseVec>>> {
+    vec![
+        Box::new(VpTree::build(pts.to_vec(), bound, 97)),
+        Box::new(BallTree::build(pts.to_vec(), bound, 8)),
+        Box::new(MTree::build(pts.to_vec(), bound, 8)),
+        Box::new(CoverTree::build(pts.to_vec(), bound)),
+        Box::new(Laesa::build(pts.to_vec(), bound, 12)),
+        Box::new(Gnat::build(pts.to_vec(), bound, 6)),
+    ]
+}
+
+fn assert_same_range(
+    idx: &dyn SimilarityIndex<DenseVec>,
+    lin: &LinearScan<DenseVec>,
+    q: &DenseVec,
+    tau: f64,
+    ctx: &str,
+) {
+    let mut s1 = QueryStats::default();
+    let mut s2 = QueryStats::default();
+    let a = idx.range(q, tau, &mut s1);
+    let b = lin.range(q, tau, &mut s2);
+    assert_eq!(a, b, "range mismatch: {ctx} tau={tau} index={}", idx.name());
+}
+
+fn assert_same_knn(
+    idx: &dyn SimilarityIndex<DenseVec>,
+    lin: &LinearScan<DenseVec>,
+    q: &DenseVec,
+    k: usize,
+    ctx: &str,
+) {
+    let mut s1 = QueryStats::default();
+    let mut s2 = QueryStats::default();
+    let a = idx.knn(q, k, &mut s1);
+    let b = lin.knn(q, k, &mut s2);
+    assert_eq!(a.len(), b.len(), "{ctx} index={}", idx.name());
+    for (i, ((_, x), (_, y))) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-12,
+            "knn sim mismatch at rank {i}: {x} vs {y} ({ctx}, index={})",
+            idx.name()
+        );
+    }
+}
+
+#[test]
+fn exactness_sweep_uniform_sphere() {
+    let mut rng = Rng::seed_from_u64(2024);
+    for trial in 0..6 {
+        let n = 50 + rng.below(400);
+        let d = 2 + rng.below(48);
+        let pts = uniform_sphere(n, d, 1000 + trial);
+        let lin = LinearScan::build(pts.clone());
+        let bound = BoundKind::ALL[rng.below(BoundKind::ALL.len())];
+        let ctx = format!("uniform trial={trial} n={n} d={d} bound={}", bound.name());
+        for idx in build_all(&pts, bound) {
+            for _ in 0..3 {
+                let q = &pts[rng.below(n)];
+                let tau = rng.uniform(-0.5, 0.95);
+                assert_same_range(idx.as_ref(), &lin, q, tau, &ctx);
+                let k = 1 + rng.below(20);
+                assert_same_knn(idx.as_ref(), &lin, q, k, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn exactness_sweep_clustered() {
+    let mut rng = Rng::seed_from_u64(77);
+    for trial in 0..4 {
+        let (pts, _) = vmf_mixture(&VmfSpec {
+            n: 300 + rng.below(300),
+            dim: 4 + rng.below(32),
+            clusters: 1 + rng.below(12),
+            kappa: rng.uniform(0.0, 150.0),
+            seed: 2000 + trial,
+        });
+        let lin = LinearScan::build(pts.clone());
+        let bound = BoundKind::ALL[rng.below(BoundKind::ALL.len())];
+        let ctx = format!("vmf trial={trial} bound={}", bound.name());
+        for idx in build_all(&pts, bound) {
+            let q = &pts[rng.below(pts.len())];
+            assert_same_range(idx.as_ref(), &lin, q, 0.9, &ctx);
+            assert_same_range(idx.as_ref(), &lin, q, 0.2, &ctx);
+            assert_same_knn(idx.as_ref(), &lin, q, 10, &ctx);
+        }
+    }
+}
+
+#[test]
+fn exactness_with_out_of_corpus_queries() {
+    // Queries that are NOT corpus members (the serving case).
+    let pts = uniform_sphere(400, 16, 3030);
+    let queries = uniform_sphere(10, 16, 3031);
+    let lin = LinearScan::build(pts.clone());
+    for bound in [BoundKind::Mult, BoundKind::Euclidean, BoundKind::ArccosFast] {
+        for idx in build_all(&pts, bound) {
+            for q in &queries {
+                assert_same_range(idx.as_ref(), &lin, q, 0.5, "out-of-corpus");
+                assert_same_knn(idx.as_ref(), &lin, q, 5, "out-of-corpus");
+            }
+        }
+    }
+}
+
+#[test]
+fn exactness_on_sparse_vectors_via_laesa() {
+    // Sparse text-like corpus: generic-over-V indexes must work on SparseVec.
+    let docs = zipf_corpus(&ZipfSpec {
+        n_docs: 400,
+        vocab: 3000,
+        doc_len: 50,
+        ..Default::default()
+    });
+    let lin = LinearScan::build(docs.clone());
+    let laesa = Laesa::build(docs.clone(), BoundKind::Mult, 16);
+    let vp = VpTree::build(docs.clone(), BoundKind::Mult, 5);
+    let cover = CoverTree::build(docs.clone(), BoundKind::Mult);
+    let mut s1 = QueryStats::default();
+    let mut s2 = QueryStats::default();
+    for qi in [0usize, 100, 399] {
+        let q: &SparseVec = &docs[qi];
+        for tau in [0.6, 0.2] {
+            let want = lin.range(q, tau, &mut s2);
+            assert_eq!(laesa.range(q, tau, &mut s1), want);
+            assert_eq!(vp.range(q, tau, &mut s1), want);
+            assert_eq!(cover.range(q, tau, &mut s1), want);
+        }
+        let want = lin.knn(q, 8, &mut s2);
+        for idx in [
+            &laesa as &dyn SimilarityIndex<SparseVec>,
+            &vp,
+            &cover,
+        ] {
+            let got = idx.knn(q, 8, &mut s1);
+            for ((_, x), (_, y)) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_corpora() {
+    // All-identical, antipodal pairs, and tiny corpora must not break any
+    // index or bound.
+    let same = vec![DenseVec::new(vec![1.0, 2.0, 3.0]); 30];
+    let mut anti = Vec::new();
+    for i in 0..20 {
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        anti.push(DenseVec::new(vec![sign, 0.0, 0.0]));
+    }
+    for pts in [same, anti] {
+        let lin = LinearScan::build(pts.clone());
+        for bound in BoundKind::ALL {
+            for idx in build_all(&pts, bound) {
+                let q = &pts[0];
+                assert_same_knn(idx.as_ref(), &lin, q, 5, "degenerate");
+                assert_same_range(idx.as_ref(), &lin, q, 0.99, "degenerate");
+                assert_same_range(idx.as_ref(), &lin, q, -1.0, "degenerate");
+            }
+        }
+    }
+}
+
+#[test]
+fn pruning_is_monotone_in_bound_tightness() {
+    // Fig. 3's order, observed operationally: a tighter bound never needs
+    // more similarity evaluations than a looser one on the same tree shape.
+    let (pts, _) =
+        vmf_mixture(&VmfSpec { n: 3000, dim: 16, clusters: 24, kappa: 90.0, seed: 5050 });
+    let chains = [
+        [BoundKind::Mult, BoundKind::MultLb1, BoundKind::MultLb2],
+        [BoundKind::Mult, BoundKind::Euclidean, BoundKind::EuclLb],
+    ];
+    for chain in chains {
+        let mut prev_evals = 0u64;
+        for (i, bound) in chain.iter().enumerate() {
+            let idx = VpTree::build(pts.clone(), *bound, 11); // same seed => same tree
+            let mut stats = QueryStats::default();
+            for qi in 0..20 {
+                idx.range(&pts[qi * 150], 0.85, &mut stats);
+            }
+            if i > 0 {
+                assert!(
+                    stats.sim_evals >= prev_evals,
+                    "looser bound {} beat tighter one: {} < {prev_evals}",
+                    bound.name(),
+                    stats.sim_evals
+                );
+            }
+            prev_evals = stats.sim_evals;
+        }
+    }
+}

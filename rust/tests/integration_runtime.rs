@@ -1,0 +1,158 @@
+//! Integration: PJRT runtime executing the real AOT artifacts, cross-checked
+//! against native rust scoring. Requires `make artifacts` (skipped with a
+//! note when artifacts/ is absent, e.g. in a fresh checkout).
+
+use simetra::data::uniform_sphere;
+use simetra::metrics::SimVector;
+use simetra::runtime::{Engine, EngineHandle};
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    assert_eq!(engine.platform().to_lowercase(), "cpu");
+    assert!(engine.manifest().artifacts.len() >= 3);
+}
+
+#[test]
+fn score_topk_matches_native_scoring() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = uniform_sphere(1000, 128, 21);
+    let queries = uniform_sphere(8, 128, 22);
+    let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
+    let cflat: Vec<f32> = corpus.iter().flat_map(|c| c.as_slice().to_vec()).collect();
+    let out = engine.score_topk(&qflat, 8, &cflat, 1000, 128, 10).unwrap();
+    assert_eq!(out.k, 10);
+    for (qi, q) in queries.iter().enumerate() {
+        let mut native: Vec<(usize, f64)> =
+            corpus.iter().enumerate().map(|(i, c)| (i, q.sim(c))).collect();
+        native.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for j in 0..10 {
+            let got_v = out.values[qi * 10 + j] as f64;
+            let want_v = native[j].1;
+            assert!(
+                (got_v - want_v).abs() < 1e-4,
+                "q{qi} rank{j}: got {got_v} want {want_v}"
+            );
+        }
+        // Indices must point at rows that actually score their value.
+        for j in 0..10 {
+            let idx = out.indices[qi * 10 + j] as usize;
+            let v = out.values[qi * 10 + j] as f64;
+            assert!((q.sim(&corpus[idx]) - v).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn score_topk_respects_valid_n_masking() {
+    // Ask for a corpus smaller than the artifact tile: padded rows must
+    // never appear among the results.
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = uniform_sphere(300, 128, 23);
+    let queries = uniform_sphere(4, 128, 24);
+    let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
+    let cflat: Vec<f32> = corpus.iter().flat_map(|c| c.as_slice().to_vec()).collect();
+    let out = engine.score_topk(&qflat, 4, &cflat, 300, 128, 16).unwrap();
+    for &idx in &out.indices {
+        assert!((idx as usize) < 300, "padded index {idx} leaked");
+    }
+}
+
+#[test]
+fn score_topk_pads_smaller_d() {
+    // d=64 < artifact d=128: zero-padding features preserves cosine.
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = uniform_sphere(500, 64, 25);
+    let queries = uniform_sphere(4, 64, 26);
+    let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
+    let cflat: Vec<f32> = corpus.iter().flat_map(|c| c.as_slice().to_vec()).collect();
+    let out = engine.score_topk(&qflat, 4, &cflat, 500, 64, 5).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        let best = corpus
+            .iter()
+            .map(|c| q.sim(c))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((out.values[qi * 5] as f64 - best).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn pivot_filter_intervals_contain_truth() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let corpus = uniform_sphere(800, 64, 27);
+    let pivots = uniform_sphere(16, 64, 28);
+    let queries = uniform_sphere(8, 64, 29);
+    let sim_qp: Vec<f32> = queries
+        .iter()
+        .flat_map(|q| pivots.iter().map(|p| q.sim(p) as f32).collect::<Vec<_>>())
+        .collect();
+    let sim_pc: Vec<f32> = pivots
+        .iter()
+        .flat_map(|p| corpus.iter().map(|c| p.sim(c) as f32).collect::<Vec<_>>())
+        .collect();
+    let out = engine.pivot_filter(&sim_qp, 8, &sim_pc, 16, 800).unwrap();
+    for (qi, q) in queries.iter().enumerate() {
+        for (ci, c) in corpus.iter().enumerate() {
+            let truth = q.sim(c);
+            let lb = out.lb[qi * 800 + ci] as f64;
+            let ub = out.ub[qi * 800 + ci] as f64;
+            assert!(lb - 1e-4 <= truth, "lb {lb} > truth {truth}");
+            assert!(ub + 1e-4 >= truth, "ub {ub} < truth {truth}");
+        }
+    }
+}
+
+#[test]
+fn engine_handle_serves_concurrent_callers() {
+    let Some(dir) = artifact_dir() else { return };
+    let handle = std::sync::Arc::new(EngineHandle::spawn(&dir).unwrap());
+    let corpus = uniform_sphere(256, 128, 30);
+    let cflat: Vec<f32> = corpus.iter().flat_map(|c| c.as_slice().to_vec()).collect();
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let handle = handle.clone();
+        let cflat = cflat.clone();
+        let corpus = corpus.clone();
+        threads.push(std::thread::spawn(move || {
+            let queries = uniform_sphere(2, 128, 100 + t);
+            let qflat: Vec<f32> =
+                queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
+            let out = handle.score_topk(qflat, 2, cflat, 256, 128, 3).unwrap();
+            for (qi, q) in queries.iter().enumerate() {
+                let best =
+                    corpus.iter().map(|c| q.sim(c)).fold(f64::NEG_INFINITY, f64::max);
+                assert!((out.values[qi * 3] as f64 - best).abs() < 1e-4);
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn errors_are_reported_not_panicked() {
+    let Some(dir) = artifact_dir() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    // Oversized request: no artifact fits.
+    let err = engine.score_topk(&vec![0.0; 128 * 128], 128, &vec![0.0; 128], 1, 128, 5);
+    assert!(err.is_err());
+    // Shape mismatch.
+    let err = engine.score_topk(&vec![0.0; 10], 4, &vec![0.0; 128], 1, 128, 5);
+    assert!(err.is_err());
+}
