@@ -4,34 +4,37 @@
 //!     cargo run --release --example quickstart
 
 use simetra::bounds::BoundKind;
-use simetra::data::{vmf_mixture, VmfSpec};
+use simetra::data::{vmf_mixture_store, VmfSpec};
 use simetra::index::{LinearScan, QueryStats, SimilarityIndex, VpTree};
 
 fn main() {
-    // 1. A clustered embedding-like corpus (100k x 64, von Mises-Fisher).
+    // 1. A clustered embedding-like corpus (100k x 64, von Mises-Fisher),
+    //    generated straight into one contiguous CorpusStore allocation.
     //    kappa=250 gives within-cluster sims ~0.87 — the regime where
     //    metric pruning pays off (high-dim uniform data concentrates and
     //    defeats any exact index; see paper section 2 and DESIGN.md).
     let spec = VmfSpec { n: 100_000, dim: 64, clusters: 256, kappa: 250.0, seed: 42 };
     println!("generating corpus: n={} dim={} ...", spec.n, spec.dim);
-    let (corpus, _) = vmf_mixture(&spec);
+    let (store, _) = vmf_mixture_store(&spec);
 
     // 2. Build a VP-tree that prunes with the paper's recommended bound
-    //    (Eq. 10/13, "Mult").
+    //    (Eq. 10/13, "Mult"). The index holds a zero-copy view of the
+    //    store — no vectors are cloned, and leaf scans run through the
+    //    blocked batch kernels.
     let t0 = std::time::Instant::now();
-    let index = VpTree::build(corpus.clone(), BoundKind::Mult, 7);
+    let index = VpTree::build(store.view(), BoundKind::Mult, 7);
     println!("built vp-tree over {} vectors in {:?}", index.len(), t0.elapsed());
 
     // 3. Exact 10-NN for one query.
-    let q = &corpus[123];
+    let q = store.vec(123);
     let mut stats = QueryStats::default();
     let t0 = std::time::Instant::now();
-    let hits = index.knn(q, 10, &mut stats);
+    let hits = index.knn(&q, 10, &mut stats);
     let dt = t0.elapsed();
     println!("\n10-NN in {dt:?} — {} exact similarity evaluations \
               ({:.1}% of the corpus, {} subtrees pruned)",
         stats.sim_evals,
-        100.0 * stats.sim_evals as f64 / corpus.len() as f64,
+        100.0 * stats.sim_evals as f64 / store.len() as f64,
         stats.pruned);
     for (rank, (id, sim)) in hits.iter().enumerate() {
         println!("  #{rank:<2} id={id:<7} sim={sim:.6}");
@@ -39,14 +42,15 @@ fn main() {
 
     // 4. Range query: everything with sim >= 0.9.
     let mut stats = QueryStats::default();
-    let matches = index.range(q, 0.9, &mut stats);
+    let matches = index.range(&q, 0.9, &mut stats);
     println!("\nrange(sim >= 0.9): {} matches with {} evaluations",
         matches.len(), stats.sim_evals);
 
-    // 5. Sanity: identical results to the exhaustive scan.
-    let linear = LinearScan::build(corpus.clone());
+    // 5. Sanity: identical results to the exhaustive scan (which shares the
+    //    same store — still zero copies of the corpus anywhere).
+    let linear = LinearScan::build(store.view());
     let mut lin_stats = QueryStats::default();
-    let lin_hits = linear.knn(q, 10, &mut lin_stats);
+    let lin_hits = linear.knn(&q, 10, &mut lin_stats);
     assert_eq!(
         hits.iter().map(|&(_, s)| (s * 1e12) as i64).collect::<Vec<_>>(),
         lin_hits.iter().map(|&(_, s)| (s * 1e12) as i64).collect::<Vec<_>>(),

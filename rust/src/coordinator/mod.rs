@@ -37,6 +37,7 @@ use anyhow::Result;
 use crate::bounds::BoundKind;
 use crate::metrics::DenseVec;
 use crate::runtime::EngineHandle;
+use crate::storage::CorpusStore;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -115,17 +116,24 @@ pub struct Coordinator {
     submitter: Arc<BatchSubmitter<Query, QueryResult>>,
     metrics: Arc<Metrics>,
     corpus_size: u64,
+    corpus_dim: usize,
     n_shards: u64,
 }
 
 impl Coordinator {
     /// Build shards and spawn the batch loop.
-    pub fn new(corpus: Vec<DenseVec>, config: CoordinatorConfig) -> Result<Self> {
-        let corpus_size = corpus.len() as u64;
+    ///
+    /// Accepts a [`CorpusStore`] directly (the zero-copy path — shards
+    /// become views of the one shared buffer) or anything convertible into
+    /// one, e.g. a `Vec<DenseVec>`, which is packed into a store first.
+    pub fn new(corpus: impl Into<CorpusStore>, config: CoordinatorConfig) -> Result<Self> {
+        let store: CorpusStore = corpus.into();
+        let corpus_size = store.len() as u64;
+        let corpus_dim = store.dim();
         let hybrid_pivots =
             if config.mode == ExecMode::Hybrid { config.hybrid_pivots.max(16) } else { 0 };
         let shards = router::build_shards(
-            corpus,
+            &store,
             config.n_shards,
             config.index,
             config.bound,
@@ -159,18 +167,34 @@ impl Coordinator {
             submitter: Arc::new(submitter),
             metrics,
             corpus_size,
+            corpus_dim,
             n_shards,
         })
+    }
+
+    /// Reject wrong-dimension client vectors up front: the strict dot
+    /// kernels treat a dimension mismatch deep inside a shard worker as a
+    /// bug (panic), so malformed input must never get that far.
+    fn check_dim(&self, vector: &[f32]) -> Result<()> {
+        if self.corpus_size > 0 && vector.len() != self.corpus_dim {
+            anyhow::bail!(
+                "query dimension {} does not match corpus dimension {}",
+                vector.len(),
+                self.corpus_dim
+            );
+        }
+        Ok(())
     }
 
     /// kNN query (batched behind the scenes); blocks until answered.
     pub fn knn(&self, vector: Vec<f32>, k: usize) -> Result<(Vec<Hit>, u64)> {
         let started = Instant::now();
-        let out = self
-            .submitter
-            .submit(Query::Knn { vector, k })
-            .map_err(|e| anyhow::anyhow!("{e}"))?
-            .map_err(|e| anyhow::anyhow!(e));
+        let out = self.check_dim(&vector).and_then(|()| {
+            self.submitter
+                .submit(Query::Knn { vector, k })
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .map_err(|e| anyhow::anyhow!(e))
+        });
         self.finish(started, &out);
         out
     }
@@ -178,11 +202,12 @@ impl Coordinator {
     /// Range query (`sim >= tau`); blocks until answered.
     pub fn range(&self, vector: Vec<f32>, tau: f64) -> Result<(Vec<Hit>, u64)> {
         let started = Instant::now();
-        let out = self
-            .submitter
-            .submit(Query::Range { vector, tau })
-            .map_err(|e| anyhow::anyhow!("{e}"))?
-            .map_err(|e| anyhow::anyhow!(e));
+        let out = self.check_dim(&vector).and_then(|()| {
+            self.submitter
+                .submit(Query::Range { vector, tau })
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .map_err(|e| anyhow::anyhow!(e))
+        });
         self.finish(started, &out);
         out
     }
@@ -417,6 +442,26 @@ mod tests {
         let want = lin.range(&pts[7], 0.5, &mut st);
         assert_eq!(hits.len(), want.len());
         assert_eq!(hits[0].id, 7);
+    }
+
+    #[test]
+    fn store_backed_coordinator_serves_and_rejects_bad_dims() {
+        let store = crate::data::uniform_sphere_store(200, 16, 104);
+        let q = store.vec(9).as_slice().to_vec();
+        let coord = Coordinator::new(
+            store.clone(),
+            CoordinatorConfig { n_shards: 3, ..Default::default() },
+        )
+        .unwrap();
+        let (hits, _) = coord.knn(q, 4).unwrap();
+        assert_eq!(hits[0].id, 9);
+        // Wrong-dimension queries get a clean error, not a shard panic.
+        let err = coord.knn(vec![1.0f32; 7], 3);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("dimension"));
+        // The coordinator still works afterwards.
+        let (hits, _) = coord.knn(store.vec(0).as_slice().to_vec(), 1).unwrap();
+        assert_eq!(hits[0].id, 0);
     }
 
     #[test]

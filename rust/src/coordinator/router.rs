@@ -2,38 +2,38 @@
 
 use std::sync::Arc;
 
-use crate::metrics::DenseVec;
+use crate::bounds::BoundKind;
+use crate::storage::CorpusStore;
 
 use super::shard::{IndexKind, Shard};
-use crate::bounds::BoundKind;
 
-/// Split a corpus into `n_shards` contiguous blocks and build one [`Shard`]
-/// per block (contiguous blocks keep global-id math trivial and preserve
-/// any locality the ingest order had).
+/// Partition the shared store into `n_shards` contiguous row-range views
+/// and build one [`Shard`] per block. Contiguous blocks keep global-id math
+/// trivial, preserve any locality the ingest order had, and — because every
+/// shard holds a view, not a copy — the corpus stays a single allocation no
+/// matter the shard count.
 pub fn build_shards(
-    corpus: Vec<DenseVec>,
+    store: &CorpusStore,
     n_shards: usize,
     kind: IndexKind,
     bound: BoundKind,
     hybrid_pivots: usize,
 ) -> Vec<Arc<Shard>> {
-    let n = corpus.len();
+    let n = store.len();
     let n_shards = n_shards.max(1).min(n.max(1));
     let per = n.div_ceil(n_shards);
     let mut shards = Vec::with_capacity(n_shards);
-    let mut corpus = corpus;
-    let mut base = 0u64;
-    for _ in 0..n_shards {
-        let take = per.min(corpus.len());
-        let rest = corpus.split_off(take);
-        let block = corpus;
-        corpus = rest;
-        if block.is_empty() {
-            break;
-        }
-        let len = block.len() as u64;
-        shards.push(Arc::new(Shard::new(base, block, kind, bound, hybrid_pivots)));
-        base += len;
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + per).min(n);
+        shards.push(Arc::new(Shard::new(
+            start as u64,
+            store.slice(start..end),
+            kind,
+            bound,
+            hybrid_pivots,
+        )));
+        start = end;
     }
     shards
 }
@@ -71,12 +71,12 @@ pub fn merge_range(per_shard: &[(u64, Vec<(u32, f64)>)]) -> Vec<(u64, f64)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::uniform_sphere;
+    use crate::data::uniform_sphere_store;
 
     #[test]
     fn shards_cover_corpus_contiguously() {
-        let pts = uniform_sphere(103, 8, 91);
-        let shards = build_shards(pts, 4, IndexKind::Linear, BoundKind::Mult, 0);
+        let store = uniform_sphere_store(103, 8, 91);
+        let shards = build_shards(&store, 4, IndexKind::Linear, BoundKind::Mult, 0);
         assert_eq!(shards.len(), 4);
         let total: usize = shards.iter().map(|s| s.len()).sum();
         assert_eq!(total, 103);
@@ -105,8 +105,8 @@ mod tests {
 
     #[test]
     fn more_shards_than_items() {
-        let pts = uniform_sphere(3, 4, 92);
-        let shards = build_shards(pts, 10, IndexKind::Linear, BoundKind::Mult, 0);
+        let store = uniform_sphere_store(3, 4, 92);
+        let shards = build_shards(&store, 10, IndexKind::Linear, BoundKind::Mult, 0);
         let total: usize = shards.iter().map(|s| s.len()).sum();
         assert_eq!(total, 3);
     }

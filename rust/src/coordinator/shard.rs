@@ -1,15 +1,22 @@
-//! A corpus shard: local index + dense matrix + the per-shard execution
-//! strategies (pure index walk, batched PJRT scoring, hybrid pivot filter).
+//! A corpus shard: a zero-copy view into the shared [`CorpusStore`], the
+//! local index built over it, and the per-shard execution strategies (pure
+//! index walk, batched PJRT scoring, hybrid pivot filter).
+//!
+//! A shard never owns vector data: its view, its index, its LAESA pivot
+//! table, and the PJRT input tiles all alias the one store buffer.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::bounds::BoundKind;
 use crate::index::{
-    BallTree, CoverTree, Gnat, KnnHeap, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex,
-    VpTree,
+    BallTree, Corpus, CoverTree, Gnat, KnnHeap, Laesa, LinearScan, MTree, QueryStats,
+    SimilarityIndex, VpTree,
 };
-use crate::metrics::{DenseVec, SimVector};
+use crate::metrics::DenseVec;
 use crate::runtime::EngineHandle;
+use crate::storage::CorpusView;
 
 /// Which index structure each shard builds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,19 +44,21 @@ impl IndexKind {
         })
     }
 
+    /// Build this index kind over a zero-copy corpus view (the view is an
+    /// `Arc`-backed handle; no vector data is cloned).
     pub fn build(
         self,
-        items: Vec<DenseVec>,
+        view: CorpusView,
         bound: BoundKind,
     ) -> Box<dyn SimilarityIndex<DenseVec>> {
         match self {
-            IndexKind::Linear => Box::new(LinearScan::build(items)),
-            IndexKind::Vp => Box::new(VpTree::build(items, bound, 0x5ee_d)),
-            IndexKind::Ball => Box::new(BallTree::build(items, bound, 16)),
-            IndexKind::MTree => Box::new(MTree::build(items, bound, 12)),
-            IndexKind::Cover => Box::new(CoverTree::build(items, bound)),
-            IndexKind::Laesa => Box::new(Laesa::build(items, bound, 24)),
-            IndexKind::Gnat => Box::new(Gnat::build(items, bound, 8)),
+            IndexKind::Linear => Box::new(LinearScan::build(view)),
+            IndexKind::Vp => Box::new(VpTree::build(view, bound, 0x5ee_d)),
+            IndexKind::Ball => Box::new(BallTree::build(view, bound, 16)),
+            IndexKind::MTree => Box::new(MTree::build(view, bound, 12)),
+            IndexKind::Cover => Box::new(CoverTree::build(view, bound)),
+            IndexKind::Laesa => Box::new(Laesa::build(view, bound, 24)),
+            IndexKind::Gnat => Box::new(Gnat::build(view, bound, 8)),
         }
     }
 }
@@ -78,43 +87,41 @@ impl ExecMode {
     }
 }
 
-/// One shard of the corpus with its local index.
+/// One shard of the corpus with its local index. Local ids `0..len` map to
+/// global ids `base..base+len`.
 pub struct Shard {
     /// Global id of local item 0 (shards own contiguous id blocks).
     pub base: u64,
-    items: Vec<DenseVec>,
-    /// Row-major normalized matrix (engine path input).
-    flat: Vec<f32>,
-    d: usize,
+    /// Zero-copy window onto the shared store.
+    view: CorpusView,
     index: Box<dyn SimilarityIndex<DenseVec>>,
     /// Pivot table for the hybrid path.
-    laesa: Option<Laesa<DenseVec>>,
+    laesa: Option<Laesa<CorpusView>>,
     /// Pivot->corpus similarity table, f32 row-major (p, n), for the engine.
     pivot_table_f32: Vec<f32>,
     bound: BoundKind,
 }
 
 impl Shard {
+    /// Build a shard over a corpus view. The serving stack
+    /// (`router::build_shards`) always passes contiguous row-range views;
+    /// id-list views work for the index/hybrid paths but make
+    /// [`Shard::flat_corpus`] panic — keep engine-path shards contiguous.
     pub fn new(
         base: u64,
-        items: Vec<DenseVec>,
+        view: CorpusView,
         kind: IndexKind,
         bound: BoundKind,
         hybrid_pivots: usize,
     ) -> Self {
-        let d = items.first().map(|v| v.len()).unwrap_or(0);
-        let mut flat = Vec::with_capacity(items.len() * d);
-        for it in &items {
-            flat.extend_from_slice(it.as_slice());
-        }
-        let laesa = if hybrid_pivots > 0 && !items.is_empty() {
-            Some(Laesa::build(items.clone(), bound, hybrid_pivots))
+        let laesa = if hybrid_pivots > 0 && !view.is_empty() {
+            Some(Laesa::build(view.clone(), bound, hybrid_pivots))
         } else {
             None
         };
         let pivot_table_f32 = match &laesa {
             Some(l) => {
-                let n = items.len();
+                let n = view.len();
                 let mut t = Vec::with_capacity(l.n_pivots() * n);
                 for p in 0..l.n_pivots() {
                     t.extend(l.table_row(p).iter().map(|&v| v as f32));
@@ -123,24 +130,39 @@ impl Shard {
             }
             None => Vec::new(),
         };
-        let index = kind.build(items.clone(), bound);
-        Shard { base, items, flat, d, index, laesa, pivot_table_f32, bound }
+        let index = kind.build(view.clone(), bound);
+        Shard { base, view, index, laesa, pivot_table_f32, bound }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.view.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.view.is_empty()
     }
 
     pub fn dim(&self) -> usize {
-        self.d
+        self.view.dim()
     }
 
+    /// The shard's view into the shared store.
+    pub fn view(&self) -> &CorpusView {
+        &self.view
+    }
+
+    /// Row-major normalized matrix: a borrowed slice of the shared store's
+    /// buffer — no copy. (The engine path itself ships view tiles; this
+    /// accessor exists for aliasing checks and direct matrix consumers.)
+    ///
+    /// # Panics
+    /// Panics if the shard was built over a non-contiguous (id-list) view;
+    /// see [`Shard::new`]. Use [`Shard::view`] +
+    /// [`CorpusView::contiguous_or_gather`] when that case must work.
     pub fn flat_corpus(&self) -> &[f32] {
-        &self.flat
+        self.view
+            .as_contiguous()
+            .expect("shard view is a non-contiguous id-list; see Shard::new docs")
     }
 
     /// Per-query kNN through the local index.
@@ -158,7 +180,8 @@ impl Shard {
     }
 
     /// Batched kNN over the whole shard through the PJRT artifact, tiling
-    /// the corpus when it exceeds the largest artifact.
+    /// the corpus when it exceeds the largest artifact. Tiles are sub-views
+    /// of the store: the engine reads the shared buffer directly.
     pub fn knn_engine(
         &self,
         engine: &EngineHandle,
@@ -166,22 +189,21 @@ impl Shard {
         k: usize,
     ) -> Result<Vec<Vec<(u32, f64)>>> {
         let qn = queries.len();
-        let mut qflat = Vec::with_capacity(qn * self.d);
+        let mut qflat = Vec::with_capacity(qn * self.dim());
         for q in queries {
             qflat.extend_from_slice(q.as_slice());
         }
+        let qflat = Arc::new(qflat);
         // Tile size: the largest n available for this d is discovered by
         // probing; use 8192 (the biggest emitted variant) and fall back to
         // smaller tiles automatically via variant selection.
         let tile = 8192usize;
         let mut heaps: Vec<KnnHeap> = (0..qn).map(|_| KnnHeap::new(k)).collect();
         let mut start = 0usize;
-        while start < self.items.len() {
-            let n = tile.min(self.items.len() - start);
-            let corpus = self.flat[start * self.d..(start + n) * self.d].to_vec();
-            let out = engine
-                .score_topk(qflat.clone(), qn, corpus, n, self.d, k.min(n))
-                ?;
+        while start < self.len() {
+            let n = tile.min(self.len() - start);
+            let sub = self.view.slice_rows(start, start + n);
+            let out = engine.score_topk(qflat.clone(), qn, sub, k.min(n))?;
             for qi in 0..qn {
                 for j in 0..out.k {
                     let idx = out.indices[qi * out.k + j];
@@ -204,7 +226,7 @@ impl Shard {
         qn: usize,
         p: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let n = self.items.len();
+        let n = self.len();
         const TILE: usize = 4096;
         let mut lb = vec![0.0f32; qn * n];
         let mut ub = vec![0.0f32; qn * n];
@@ -228,13 +250,14 @@ impl Shard {
         Ok((lb, ub))
     }
 
-    /// Query-pivot similarities (exact, cheap: p dots per query), row-major.
-    fn query_pivot_sims(&self, laesa: &Laesa<DenseVec>, queries: &[DenseVec]) -> Vec<f32> {
+    /// Query-pivot similarities (exact, cheap: p dots per query), row-major,
+    /// through the blocked batch kernel.
+    fn query_pivot_sims(&self, laesa: &Laesa<CorpusView>, queries: &[DenseVec]) -> Vec<f32> {
         let mut sim_qp = Vec::with_capacity(queries.len() * laesa.n_pivots());
+        let mut buf = Vec::new();
         for q in queries {
-            for &pid in laesa.pivots() {
-                sim_qp.push(q.sim(&self.items[pid as usize]) as f32);
-            }
+            self.view.sims(q, laesa.pivots(), &mut buf);
+            sim_qp.extend(buf.iter().map(|&v| v as f32));
         }
         sim_qp
     }
@@ -254,7 +277,7 @@ impl Shard {
             .ok_or_else(|| anyhow::anyhow!("shard built without pivots"))?;
         let qn = queries.len();
         let p = laesa.n_pivots();
-        let n = self.items.len();
+        let n = self.len();
         let sim_qp = self.query_pivot_sims(laesa, queries);
         let bounds = {
             let (lb, ub) = self.pivot_bounds_tiled(engine, &sim_qp, qn, p)?;
@@ -279,7 +302,7 @@ impl Shard {
             let mut evals = 0u64;
             for (i, &u) in ub.iter().enumerate() {
                 if (u as f64 + EPS) >= kth {
-                    let s = queries[qi].sim(&self.items[i]);
+                    let s = self.view.sim_q(&queries[qi], i as u32);
                     evals += 1;
                     heap.offer(i as u32, s);
                 }
@@ -302,7 +325,7 @@ impl Shard {
             .ok_or_else(|| anyhow::anyhow!("shard built without pivots"))?;
         let qn = queries.len();
         let p = laesa.n_pivots();
-        let n = self.items.len();
+        let n = self.len();
         let sim_qp = self.query_pivot_sims(laesa, queries);
         let bounds = {
             let (lb, ub) = self.pivot_bounds_tiled(engine, &sim_qp, qn, p)?;
@@ -316,7 +339,7 @@ impl Shard {
             let mut evals = 0u64;
             for (i, &u) in ub.iter().enumerate() {
                 if (u as f64 + EPS) >= tau {
-                    let s = queries[qi].sim(&self.items[i]);
+                    let s = self.view.sim_q(&queries[qi], i as u32);
                     evals += 1;
                     if s >= tau {
                         hits.push((i as u32, s));
@@ -338,6 +361,7 @@ impl Shard {
 mod tests {
     use super::*;
     use crate::data::uniform_sphere;
+    use crate::storage::CorpusStore;
 
     #[test]
     fn index_kinds_parse() {
@@ -349,12 +373,23 @@ mod tests {
     #[test]
     fn shard_local_search_matches_linear() {
         let pts = uniform_sphere(300, 16, 81);
-        let shard = Shard::new(0, pts.clone(), IndexKind::Vp, BoundKind::Mult, 0);
-        let lin = Shard::new(0, pts.clone(), IndexKind::Linear, BoundKind::Mult, 0);
+        let store = CorpusStore::from_rows(pts.clone());
+        let shard = Shard::new(0, store.view(), IndexKind::Vp, BoundKind::Mult, 0);
+        let lin = Shard::new(0, store.view(), IndexKind::Linear, BoundKind::Mult, 0);
         let (a, _) = shard.knn_index(&pts[5], 7);
         let (b, _) = lin.knn_index(&pts[5], 7);
         for ((_, x), (_, y)) in a.iter().zip(&b) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn shards_alias_one_store_buffer() {
+        let pts = uniform_sphere(64, 8, 82);
+        let store = CorpusStore::from_rows(pts);
+        let a = Shard::new(0, store.slice(0..32), IndexKind::Linear, BoundKind::Mult, 4);
+        let b = Shard::new(32, store.slice(32..64), IndexKind::Linear, BoundKind::Mult, 4);
+        assert_eq!(a.flat_corpus().as_ptr(), store.flat().as_ptr());
+        assert_eq!(b.flat_corpus().as_ptr(), store.flat()[32 * 8..].as_ptr());
     }
 }

@@ -6,11 +6,16 @@
 //! dense neural-network-embedding-like vectors (uniform sphere and von
 //! Mises–Fisher cluster mixtures) and sparse text-like tf-idf vectors with
 //! Zipf-distributed vocabulary.
+//!
+//! Dense generators come in two flavors: `Vec<DenseVec>` (owning, handy in
+//! tests) and `*_store` variants that sample straight into a contiguous
+//! [`crate::storage::CorpusStore`] — the native serving path, bit-identical
+//! rows, no per-vector allocations.
 
 pub mod sphere;
 pub mod vmf;
 pub mod zipf;
 
-pub use sphere::uniform_sphere;
-pub use vmf::{vmf_mixture, VmfSpec};
+pub use sphere::{uniform_sphere, uniform_sphere_store};
+pub use vmf::{vmf_mixture, vmf_mixture_store, VmfSpec};
 pub use zipf::{zipf_corpus, ZipfSpec};

@@ -1,6 +1,7 @@
 //! Uniform samples on the unit sphere S^{d-1}.
 
 use crate::metrics::DenseVec;
+use crate::storage::CorpusStore;
 use crate::util::Rng;
 
 /// `n` i.i.d. uniform unit vectors in `d` dimensions (isotropic Gaussian,
@@ -10,13 +11,40 @@ pub fn uniform_sphere(n: usize, d: usize, seed: u64) -> Vec<DenseVec> {
     (0..n).map(|_| sample_unit(&mut rng, d)).collect()
 }
 
+/// Store-native variant of [`uniform_sphere`]: samples straight into the
+/// contiguous SoA buffer (no per-vector allocations) and produces rows
+/// bit-identical to the `Vec<DenseVec>` variant for the same seed.
+pub fn uniform_sphere_store(n: usize, d: usize, seed: u64) -> CorpusStore {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut flat = vec![0.0f32; n * d];
+    for row in flat.chunks_mut(d.max(1)).take(n) {
+        fill_unit_row(&mut rng, row);
+    }
+    CorpusStore::from_flat_normalized(flat, d)
+}
+
 pub(crate) fn sample_unit(rng: &mut Rng, d: usize) -> DenseVec {
+    let mut row = vec![0.0f32; d];
+    fill_unit_row(rng, &mut row);
+    DenseVec::from_normalized(row)
+}
+
+/// Fill `row` with a uniform unit vector (rejection on near-zero norms).
+pub(crate) fn fill_unit_row(rng: &mut Rng, row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
     loop {
-        let raw: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
-        let norm: f64 = raw.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let norm: f64 = row.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
         if norm > 1e-12 {
             let inv = (1.0 / norm) as f32;
-            return DenseVec::from_normalized(raw.iter().map(|&v| v * inv).collect());
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+            return;
         }
     }
 }
@@ -38,6 +66,17 @@ mod tests {
     fn deterministic_by_seed() {
         assert_eq!(uniform_sphere(5, 8, 7), uniform_sphere(5, 8, 7));
         assert_ne!(uniform_sphere(5, 8, 7), uniform_sphere(5, 8, 8));
+    }
+
+    #[test]
+    fn store_variant_matches_vec_variant_bitwise() {
+        let store = uniform_sphere_store(40, 16, 5);
+        let rows = uniform_sphere(40, 16, 5);
+        assert_eq!(store.len(), 40);
+        assert_eq!(store.dim(), 16);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(store.row(i), r.as_slice(), "row {i}");
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! actually pay off).
 
 use crate::metrics::DenseVec;
+use crate::storage::{normalize_row, CorpusStore};
 use crate::util::Rng;
 
 use super::sphere::sample_unit;
@@ -40,11 +41,37 @@ pub fn vmf_mixture(spec: &VmfSpec) -> (Vec<DenseVec>, Vec<u32>) {
     (points, labels)
 }
 
+/// Store-native variant of [`vmf_mixture`]: samples straight into the
+/// contiguous SoA buffer (no per-vector allocations) and produces rows
+/// bit-identical to the `Vec<DenseVec>` variant for the same spec.
+pub fn vmf_mixture_store(spec: &VmfSpec) -> (CorpusStore, Vec<u32>) {
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let means: Vec<DenseVec> =
+        (0..spec.clusters).map(|_| sample_unit(&mut rng, spec.dim)).collect();
+    let mut flat = vec![0.0f32; spec.n * spec.dim];
+    let mut labels = Vec::with_capacity(spec.n);
+    for row in flat.chunks_mut(spec.dim.max(1)).take(spec.n) {
+        let c = rng.below(spec.clusters);
+        sample_vmf_into(&mut rng, means[c].as_slice(), spec.kappa, row);
+        labels.push(c as u32);
+    }
+    (CorpusStore::from_flat_normalized(flat, spec.dim), labels)
+}
+
 /// Wood (1994) rejection sampler for vMF on S^{d-1}.
 pub fn sample_vmf(rng: &mut Rng, mean: &[f32], kappa: f64) -> DenseVec {
+    let mut out = vec![0.0f32; mean.len()];
+    sample_vmf_into(rng, mean, kappa, &mut out);
+    DenseVec::from_normalized(out)
+}
+
+/// [`sample_vmf`] writing into a caller-provided row (normalized in place).
+pub fn sample_vmf_into(rng: &mut Rng, mean: &[f32], kappa: f64, out: &mut [f32]) {
     let d = mean.len();
+    assert_eq!(out.len(), d, "output row dimension {} != mean dimension {d}", out.len());
     if kappa < 1e-9 {
-        return sample_unit(rng, d);
+        crate::data::sphere::fill_unit_row(rng, out);
+        return;
     }
     let dm1 = (d - 1) as f64;
     let b = dm1 / (2.0 * kappa + (4.0 * kappa * kappa + dm1 * dm1).sqrt());
@@ -69,15 +96,13 @@ pub fn sample_vmf(rng: &mut Rng, mean: &[f32], kappa: f64) -> DenseVec {
     }
     let norm: f64 = v.iter().map(|&a| a * a).sum::<f64>().sqrt();
     let t = (1.0 - w * w).max(0.0).sqrt();
-    let out: Vec<f32> = mean
-        .iter()
-        .zip(&v)
-        .map(|(&m, &vi)| {
-            let vi = if norm > 1e-12 { vi / norm } else { 0.0 };
-            (w * m as f64 + t * vi) as f32
-        })
-        .collect();
-    DenseVec::new(out)
+    for ((o, &m), &vi) in out.iter_mut().zip(mean).zip(&v) {
+        let vi = if norm > 1e-12 { vi / norm } else { 0.0 };
+        *o = (w * m as f64 + t * vi) as f32;
+    }
+    // Same arithmetic as `DenseVec::new`: rows stay bit-identical to the
+    // owning generator path.
+    normalize_row(out);
 }
 
 fn sample_beta(rng: &mut Rng, a: f64, b: f64) -> f64 {
@@ -137,6 +162,17 @@ mod tests {
         assert!(tight > loose, "tight={tight} loose={loose}");
         // E[cos theta] ~ 1 - (d-1)/(2 kappa) = 1 - 31/200 ~ 0.845 at d=32.
         assert!(tight > 0.75, "tight={tight}");
+    }
+
+    #[test]
+    fn store_variant_matches_vec_variant_bitwise() {
+        let spec = VmfSpec { n: 60, dim: 12, clusters: 5, kappa: 30.0, seed: 13 };
+        let (store, store_labels) = vmf_mixture_store(&spec);
+        let (pts, labels) = vmf_mixture(&spec);
+        assert_eq!(store_labels, labels);
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(store.row(i), p.as_slice(), "row {i}");
+        }
     }
 
     #[test]

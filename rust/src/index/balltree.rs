@@ -8,13 +8,15 @@
 //! more similar to. Pruning: once `sim(q, center)` is known, the subtree
 //! can only contain a match if `upper_over(sim(q, center), cover) >= tau`
 //! (range) / `> floor` (kNN) — Eq. 13 applied to the similarity interval.
+//!
+//! Leaf buckets are scored through the corpus's batch kernels when built on
+//! a zero-copy [`crate::storage::CorpusView`].
 
 use std::collections::BinaryHeap;
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
 
 struct Node {
     /// Routing point id; also a member of the subtree.
@@ -28,27 +30,27 @@ struct Node {
 }
 
 /// Similarity-native ball tree.
-pub struct BallTree<V: SimVector> {
-    items: Vec<V>,
+pub struct BallTree<C: Corpus> {
+    corpus: C,
     root: Option<Node>,
     bound: BoundKind,
 }
 
-impl<V: SimVector> BallTree<V> {
-    pub fn build(items: Vec<V>, bound: BoundKind, leaf_size: usize) -> Self {
-        let ids: Vec<u32> = (0..items.len() as u32).collect();
+impl<C: Corpus> BallTree<C> {
+    pub fn build(corpus: C, bound: BoundKind, leaf_size: usize) -> Self {
+        let ids: Vec<u32> = (0..corpus.len() as u32).collect();
         let root = if ids.is_empty() {
             None
         } else {
-            Some(Self::build_node(&items, ids, leaf_size.max(2)))
+            Some(Self::build_node(&corpus, ids, leaf_size.max(2)))
         };
-        BallTree { items, root, bound }
+        BallTree { corpus, root, bound }
     }
 
-    fn cover_of(items: &[V], center: u32, member_ids: &[u32]) -> Option<SimInterval> {
+    fn cover_of(corpus: &C, center: u32, member_ids: &[u32]) -> Option<SimInterval> {
         let mut iv: Option<SimInterval> = None;
         for &id in member_ids {
-            let s = items[center as usize].sim(&items[id as usize]);
+            let s = corpus.sim_ij(center, id);
             match &mut iv {
                 Some(iv) => iv.extend(s),
                 None => iv = Some(SimInterval::point(s)),
@@ -66,30 +68,28 @@ impl<V: SimVector> BallTree<V> {
         }
     }
 
-    fn build_node(items: &[V], mut ids: Vec<u32>, leaf_size: usize) -> Node {
+    fn build_node(corpus: &C, mut ids: Vec<u32>, leaf_size: usize) -> Node {
         let center = ids[0];
         ids.remove(0);
 
         if ids.len() <= leaf_size {
-            let cover = Self::cover_of(items, center, &ids);
+            let cover = Self::cover_of(corpus, center, &ids);
             return Node { center, cover, children: Vec::new(), bucket: ids };
         }
 
         // Two-seed split: seed A = least similar to center; seed B = least
         // similar to A (farthest-pair heuristic in angle space).
-        let c = &items[center as usize];
         let seed_a = *ids
             .iter()
             .min_by(|&&x, &&y| {
-                c.sim(&items[x as usize]).partial_cmp(&c.sim(&items[y as usize])).unwrap()
+                corpus.sim_ij(center, x).partial_cmp(&corpus.sim_ij(center, y)).unwrap()
             })
             .unwrap();
-        let a = &items[seed_a as usize];
         let seed_b = *ids
             .iter()
             .filter(|&&x| x != seed_a)
             .min_by(|&&x, &&y| {
-                a.sim(&items[x as usize]).partial_cmp(&a.sim(&items[y as usize])).unwrap()
+                corpus.sim_ij(seed_a, x).partial_cmp(&corpus.sim_ij(seed_a, y)).unwrap()
             })
             .unwrap();
 
@@ -99,8 +99,8 @@ impl<V: SimVector> BallTree<V> {
             if id == seed_a || id == seed_b {
                 continue;
             }
-            let sa = items[seed_a as usize].sim(&items[id as usize]);
-            let sb = items[seed_b as usize].sim(&items[id as usize]);
+            let sa = corpus.sim_ij(seed_a, id);
+            let sb = corpus.sim_ij(seed_b, id);
             if sa >= sb {
                 left_ids.push(id);
             } else {
@@ -109,8 +109,8 @@ impl<V: SimVector> BallTree<V> {
         }
 
         let children = vec![
-            Self::build_node(items, left_ids, leaf_size),
-            Self::build_node(items, right_ids, leaf_size),
+            Self::build_node(corpus, left_ids, leaf_size),
+            Self::build_node(corpus, right_ids, leaf_size),
         ];
         // Cover over all members (children's centers + everything below).
         let mut members = Vec::new();
@@ -118,7 +118,7 @@ impl<V: SimVector> BallTree<V> {
             members.push(ch.center);
             Self::collect_members(ch, &mut members);
         }
-        let cover = Self::cover_of(items, center, &members);
+        let cover = Self::cover_of(corpus, center, &members);
         Node { center, cover, children, bucket: Vec::new() }
     }
 
@@ -126,7 +126,7 @@ impl<V: SimVector> BallTree<V> {
     fn range_rec(
         &self,
         node: &Node,
-        q: &V,
+        q: &C::Vector,
         s: f64,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
@@ -141,30 +141,24 @@ impl<V: SimVector> BallTree<V> {
             stats.pruned += 1;
             return; // nothing below can reach tau
         }
-        for &id in &node.bucket {
-            let si = q.sim(&self.items[id as usize]);
-            stats.sim_evals += 1;
-            if si >= tau {
-                out.push((id, si));
-            }
-        }
+        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
         for child in &node.children {
-            let sc = q.sim(&self.items[child.center as usize]);
+            let sc = self.corpus.sim_q(q, child.center);
             stats.sim_evals += 1;
             self.range_rec(child, q, sc, tau, out, stats);
         }
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for BallTree<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if let Some(root) = &self.root {
-            let s = q.sim(&self.items[root.center as usize]);
+            let s = self.corpus.sim_q(q, root.center);
             stats.sim_evals += 1;
             self.range_rec(root, q, s, tau, &mut out, stats);
         }
@@ -172,13 +166,13 @@ impl<V: SimVector> SimilarityIndex<V> for BallTree<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut results = KnnHeap::new(k);
         // Frontier entries carry the node and its already-computed center
         // similarity; priority is the subtree's upper bound.
         let mut frontier: BinaryHeap<Prioritized<(&Node, f64)>> = BinaryHeap::new();
         if let Some(root) = &self.root {
-            let s = q.sim(&self.items[root.center as usize]);
+            let s = self.corpus.sim_q(q, root.center);
             stats.sim_evals += 1;
             results.offer(root.center, s);
             let ub = match root.cover {
@@ -196,13 +190,9 @@ impl<V: SimVector> SimilarityIndex<V> for BallTree<V> {
             }
             stats.nodes_visited += 1;
             let _ = s;
-            for &id in &node.bucket {
-                let si = q.sim(&self.items[id as usize]);
-                stats.sim_evals += 1;
-                results.offer(id, si);
-            }
+            stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, &mut results);
             for child in &node.children {
-                let sc = q.sim(&self.items[child.center as usize]);
+                let sc = self.corpus.sim_q(q, child.center);
                 stats.sim_evals += 1;
                 results.offer(child.center, sc);
                 let child_ub = match child.cover {
@@ -276,7 +266,7 @@ mod tests {
         let c = &pts[root.center as usize];
         for (i, p) in pts.iter().enumerate() {
             if i as u32 != root.center {
-                let s = c.sim(p);
+                let s = crate::metrics::SimVector::sim(c, p);
                 assert!(s >= cover.lo - 1e-9 && s <= cover.hi + 1e-9);
             }
         }

@@ -12,9 +12,8 @@
 use std::collections::BinaryHeap;
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
 
 /// Geometric base of the level radii (2.0 in the original paper; 1.3 gives
 /// flatter trees on the sphere where all angles are <= pi).
@@ -53,17 +52,16 @@ impl Node {
 }
 
 /// Similarity-native cover tree.
-pub struct CoverTree<V: SimVector> {
-    items: Vec<V>,
+pub struct CoverTree<C: Corpus> {
+    corpus: C,
     root: Option<Node>,
     bound: BoundKind,
 }
 
-impl<V: SimVector> CoverTree<V> {
-    pub fn build(items: Vec<V>, bound: BoundKind) -> Self {
-        let mut tree = CoverTree { items: Vec::new(), root: None, bound };
-        tree.items = items;
-        for id in 0..tree.items.len() as u32 {
+impl<C: Corpus> CoverTree<C> {
+    pub fn build(corpus: C, bound: BoundKind) -> Self {
+        let mut tree = CoverTree { corpus, root: None, bound };
+        for id in 0..tree.corpus.len() as u32 {
             tree.insert(id);
         }
         tree
@@ -74,7 +72,7 @@ impl<V: SimVector> CoverTree<V> {
             self.root = Some(Node { id: x, level: MAX_LEVEL, children: Vec::new(), cover: None });
             return;
         };
-        let s_root = self.items[root.id as usize].sim(&self.items[x as usize]);
+        let s_root = self.corpus.sim_ij(root.id, x);
         if s_root < covdist_cos(root.level) {
             // x does not fit under the root's cover: raise the root level
             // until it does (top level covers the sphere, so this ends).
@@ -82,25 +80,25 @@ impl<V: SimVector> CoverTree<V> {
                 root.level += 1;
             }
         }
-        Self::insert_rec(&self.items, &mut root, x, s_root);
+        Self::insert_rec(&self.corpus, &mut root, x, s_root);
         self.root = Some(root);
     }
 
     /// Insert x under p (which covers it); `s_p` = sim(p, x), already known.
-    fn insert_rec(items: &[V], p: &mut Node, x: u32, s_p: f64) {
+    fn insert_rec(corpus: &C, p: &mut Node, x: u32, s_p: f64) {
         p.extend_cover(s_p);
         // Try to hand off to a child that covers x.
         // (First compute similarities; borrow rules: index the chosen child.)
         let mut chosen: Option<(usize, f64)> = None;
         for (ci, c) in p.children.iter().enumerate() {
-            let s_c = items[c.id as usize].sim(&items[x as usize]);
+            let s_c = corpus.sim_ij(c.id, x);
             if s_c >= covdist_cos(c.level) {
                 chosen = Some((ci, s_c));
                 break;
             }
         }
         match chosen {
-            Some((ci, s_c)) => Self::insert_rec(items, &mut p.children[ci], x, s_c),
+            Some((ci, s_c)) => Self::insert_rec(corpus, &mut p.children[ci], x, s_c),
             None => {
                 let level = (p.level - 1).max(MIN_LEVEL);
                 p.children.push(Node { id: x, level, children: Vec::new(), cover: None });
@@ -120,7 +118,7 @@ impl<V: SimVector> CoverTree<V> {
     fn range_rec(
         &self,
         node: &Node,
-        q: &V,
+        q: &C::Vector,
         s: f64,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
@@ -136,22 +134,22 @@ impl<V: SimVector> CoverTree<V> {
             return;
         }
         for child in &node.children {
-            let sc = q.sim(&self.items[child.id as usize]);
+            let sc = self.corpus.sim_q(q, child.id);
             stats.sim_evals += 1;
             self.range_rec(child, q, sc, tau, out, stats);
         }
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for CoverTree<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if let Some(root) = &self.root {
-            let s = q.sim(&self.items[root.id as usize]);
+            let s = self.corpus.sim_q(q, root.id);
             stats.sim_evals += 1;
             self.range_rec(root, q, s, tau, &mut out, stats);
         }
@@ -159,11 +157,11 @@ impl<V: SimVector> SimilarityIndex<V> for CoverTree<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut results = KnnHeap::new(k);
         let mut frontier: BinaryHeap<Prioritized<(&Node, f64)>> = BinaryHeap::new();
         if let Some(root) = &self.root {
-            let s = q.sim(&self.items[root.id as usize]);
+            let s = self.corpus.sim_q(q, root.id);
             stats.sim_evals += 1;
             results.offer(root.id, s);
             let ub = match root.cover {
@@ -178,7 +176,7 @@ impl<V: SimVector> SimilarityIndex<V> for CoverTree<V> {
             }
             stats.nodes_visited += 1;
             for child in &node.children {
-                let sc = q.sim(&self.items[child.id as usize]);
+                let sc = self.corpus.sim_q(q, child.id);
                 stats.sim_evals += 1;
                 results.offer(child.id, sc);
                 let child_ub = match child.cover {
@@ -205,6 +203,7 @@ mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
     use crate::index::LinearScan;
+    use crate::metrics::SimVector;
 
     #[test]
     fn matches_linear_scan() {

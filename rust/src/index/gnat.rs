@@ -8,11 +8,14 @@
 //! discards region `j` whenever *any* split point `i` certifies
 //! `upper_over(sim(q, split_i), range[i][j]) < tau` — the multi-pivot
 //! generalization of the VP-tree test.
+//!
+//! Split-point similarities and leaf buckets are scored through the
+//! corpus's batch kernels (blocked, zero-copy when built on a
+//! [`crate::storage::CorpusView`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
 
 struct Node {
     splits: Vec<u32>,
@@ -25,30 +28,30 @@ struct Node {
 }
 
 /// Similarity-native GNAT.
-pub struct Gnat<V: SimVector> {
-    items: Vec<V>,
+pub struct Gnat<C: Corpus> {
+    corpus: C,
     root: Option<Node>,
     bound: BoundKind,
     fanout: usize,
 }
 
-impl<V: SimVector> Gnat<V> {
-    pub fn build(items: Vec<V>, bound: BoundKind, fanout: usize) -> Self {
+impl<C: Corpus> Gnat<C> {
+    pub fn build(corpus: C, bound: BoundKind, fanout: usize) -> Self {
         let fanout = fanout.max(2);
-        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        let ids: Vec<u32> = (0..corpus.len() as u32).collect();
         let root = if ids.is_empty() {
             None
         } else {
-            Some(Self::build_node(&items, ids, fanout))
+            Some(Self::build_node(&corpus, ids, fanout))
         };
-        Gnat { items, root, bound, fanout }
+        Gnat { corpus, root, bound, fanout }
     }
 
     pub fn fanout(&self) -> usize {
         self.fanout
     }
 
-    fn build_node(items: &[V], ids: Vec<u32>, fanout: usize) -> Node {
+    fn build_node(corpus: &C, ids: Vec<u32>, fanout: usize) -> Node {
         if ids.len() <= fanout + 1 {
             return Node {
                 splits: Vec::new(),
@@ -60,8 +63,7 @@ impl<V: SimVector> Gnat<V> {
 
         // Farthest-first split points.
         let mut splits: Vec<u32> = vec![ids[0]];
-        let mut max_sim: Vec<f64> =
-            ids.iter().map(|&i| items[ids[0] as usize].sim(&items[i as usize])).collect();
+        let mut max_sim: Vec<f64> = ids.iter().map(|&i| corpus.sim_ij(ids[0], i)).collect();
         while splits.len() < fanout {
             let (pos, _) = max_sim
                 .iter()
@@ -74,7 +76,7 @@ impl<V: SimVector> Gnat<V> {
             }
             splits.push(s);
             for (j, &i) in ids.iter().enumerate() {
-                max_sim[j] = max_sim[j].max(items[s as usize].sim(&items[i as usize]));
+                max_sim[j] = max_sim[j].max(corpus.sim_ij(s, i));
             }
         }
         if splits.len() < 2 {
@@ -96,7 +98,7 @@ impl<V: SimVector> Gnat<V> {
             let (g, _) = splits
                 .iter()
                 .enumerate()
-                .map(|(g, &sp)| (g, items[sp as usize].sim(&items[i as usize])))
+                .map(|(g, &sp)| (g, corpus.sim_ij(sp, i)))
                 .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
                 .unwrap();
             regions[g].push(i);
@@ -106,11 +108,9 @@ impl<V: SimVector> Gnat<V> {
         let mut ranges = vec![SimInterval::point(0.0); m * m];
         for (i, &sp) in splits.iter().enumerate() {
             for (j, region) in regions.iter().enumerate() {
-                let mut iv = SimInterval::point(
-                    items[sp as usize].sim(&items[splits[j] as usize]),
-                );
+                let mut iv = SimInterval::point(corpus.sim_ij(sp, splits[j]));
                 for &y in region {
-                    iv.extend(items[sp as usize].sim(&items[y as usize]));
+                    iv.extend(corpus.sim_ij(sp, y));
                 }
                 ranges[i * m + j] = iv;
             }
@@ -121,7 +121,7 @@ impl<V: SimVector> Gnat<V> {
             .enumerate()
             .map(|(j, mut region)| {
                 region.push(splits[j]);
-                Self::build_node(items, region, fanout)
+                Self::build_node(corpus, region, fanout)
             })
             .collect();
 
@@ -131,31 +131,20 @@ impl<V: SimVector> Gnat<V> {
     fn range_rec(
         &self,
         node: &Node,
-        q: &V,
+        q: &C::Vector,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
         stats: &mut QueryStats,
     ) {
         stats.nodes_visited += 1;
-        for &id in &node.bucket {
-            let s = q.sim(&self.items[id as usize]);
-            stats.sim_evals += 1;
-            if s >= tau {
-                out.push((id, s));
-            }
-        }
+        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
         if node.splits.is_empty() {
             return;
         }
         let m = node.splits.len();
-        let split_sims: Vec<f64> = node
-            .splits
-            .iter()
-            .map(|&sp| {
-                stats.sim_evals += 1;
-                q.sim(&self.items[sp as usize])
-            })
-            .collect();
+        let mut split_sims = Vec::new();
+        self.corpus.sims(q, &node.splits, &mut split_sims);
+        stats.sim_evals += m as u64;
         // NOTE: split points live in their own region's subtree; regions
         // are pruned collectively below, and surviving subtrees report them.
         for (j, child) in node.children.iter().enumerate() {
@@ -174,32 +163,23 @@ impl<V: SimVector> Gnat<V> {
         }
     }
 
-    fn knn_rec<'a>(
-        &'a self,
-        node: &'a Node,
-        q: &V,
+    fn knn_rec(
+        &self,
+        node: &Node,
+        q: &C::Vector,
         results: &mut KnnHeap,
         k: usize,
         stats: &mut QueryStats,
     ) {
         stats.nodes_visited += 1;
-        for &id in &node.bucket {
-            let s = q.sim(&self.items[id as usize]);
-            stats.sim_evals += 1;
-            results.offer(id, s);
-        }
+        stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, results);
         if node.splits.is_empty() {
             return;
         }
         let m = node.splits.len();
-        let split_sims: Vec<f64> = node
-            .splits
-            .iter()
-            .map(|&sp| {
-                stats.sim_evals += 1;
-                q.sim(&self.items[sp as usize])
-            })
-            .collect();
+        let mut split_sims = Vec::new();
+        self.corpus.sims(q, &node.splits, &mut split_sims);
+        stats.sim_evals += m as u64;
         // Visit regions in order of their best upper bound so the floor
         // rises quickly; skip regions certified below the floor.
         let mut order: Vec<(usize, f64)> = (0..node.children.len())
@@ -221,12 +201,12 @@ impl<V: SimVector> Gnat<V> {
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for Gnat<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if let Some(root) = &self.root {
             self.range_rec(root, q, tau, &mut out, stats);
@@ -235,7 +215,7 @@ impl<V: SimVector> SimilarityIndex<V> for Gnat<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut results = KnnHeap::new(k);
         if let Some(root) = &self.root {
             self.knn_rec(root, q, &mut results, k, stats);

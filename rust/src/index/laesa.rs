@@ -9,16 +9,16 @@
 //! This is also the batch-friendly index: the interval table for a whole
 //! query batch is exactly the `pivot_filter` PJRT artifact (see
 //! `runtime`), so the coordinator can run the filtering phase on the
-//! XLA side.
+//! XLA side. Table construction streams each pivot row through the
+//! corpus's batch kernel ([`Corpus::sims_of_item`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
 
 /// Pivot-table index with triangle-inequality candidate filtering.
-pub struct Laesa<V: SimVector> {
-    items: Vec<V>,
+pub struct Laesa<C: Corpus> {
+    corpus: C,
     /// Pivot item ids.
     pivots: Vec<u32>,
     /// `table[p * n + i]` = sim(pivots[p], items[i]).
@@ -26,12 +26,12 @@ pub struct Laesa<V: SimVector> {
     bound: BoundKind,
 }
 
-impl<V: SimVector> Laesa<V> {
+impl<C: Corpus> Laesa<C> {
     /// Build with `n_pivots` pivots chosen by farthest-first traversal in
     /// angle space (maximize the minimum angle to previous pivots), the
     /// standard "extreme pivots" heuristic.
-    pub fn build(items: Vec<V>, bound: BoundKind, n_pivots: usize) -> Self {
-        let n = items.len();
+    pub fn build(corpus: C, bound: BoundKind, n_pivots: usize) -> Self {
+        let n = corpus.len();
         let p = n_pivots.min(n).max(if n == 0 { 0 } else { 1 });
         let mut pivots: Vec<u32> = Vec::with_capacity(p);
         let mut table: Vec<f64> = Vec::with_capacity(p * n);
@@ -40,23 +40,24 @@ impl<V: SimVector> Laesa<V> {
             // track per-item max similarity to any chosen pivot.
             let mut max_sim = vec![f64::NEG_INFINITY; n];
             let mut next = 0u32; // first pivot: item 0
+            let mut row: Vec<f64> = Vec::new();
             for _ in 0..p {
                 pivots.push(next);
-                let pv = &items[next as usize];
-                let row_start = table.len();
-                for item in items.iter() {
-                    table.push(pv.sim(item));
+                corpus.sims_of_item(next, &mut row);
+                for (m, &s) in max_sim.iter_mut().zip(&row) {
+                    *m = m.max(s);
                 }
-                for i in 0..n {
-                    max_sim[i] = max_sim[i].max(table[row_start + i]);
-                }
+                table.extend_from_slice(&row);
                 // Next pivot: the item least similar to all chosen pivots.
-                next = (0..n)
-                    .min_by(|&a, &b| max_sim[a].partial_cmp(&max_sim[b]).unwrap())
-                    .unwrap() as u32;
+                next = max_sim
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as u32)
+                    .unwrap();
             }
         }
-        Laesa { items, pivots, table, bound }
+        Laesa { corpus, pivots, table, bound }
     }
 
     pub fn n_pivots(&self) -> usize {
@@ -69,7 +70,7 @@ impl<V: SimVector> Laesa<V> {
 
     /// Exact similarity table row for pivot `p` (length = corpus size).
     pub fn table_row(&self, p: usize) -> &[f64] {
-        let n = self.items.len();
+        let n = self.corpus.len();
         &self.table[p * n..(p + 1) * n]
     }
 
@@ -77,7 +78,7 @@ impl<V: SimVector> Laesa<V> {
     /// the query's pivot similarities.
     #[inline]
     pub fn interval_for(&self, q_piv: &[f64], i: usize) -> SimInterval {
-        let n = self.items.len();
+        let n = self.corpus.len();
         let mut iv = SimInterval::full();
         for (p, &sq) in q_piv.iter().enumerate() {
             let sp = self.table[p * n + i];
@@ -89,28 +90,30 @@ impl<V: SimVector> Laesa<V> {
         iv
     }
 
-    fn query_pivot_sims(&self, q: &V, stats: &mut QueryStats) -> Vec<f64> {
+    fn query_pivot_sims(&self, q: &C::Vector, stats: &mut QueryStats) -> Vec<f64> {
         stats.sim_evals += self.pivots.len() as u64;
-        self.pivots.iter().map(|&p| q.sim(&self.items[p as usize])).collect()
+        let mut out = Vec::new();
+        self.corpus.sims(q, &self.pivots, &mut out);
+        out
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for Laesa<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         stats.nodes_visited += 1;
         let q_piv = self.query_pivot_sims(q, stats);
         let mut out = Vec::new();
-        for i in 0..self.items.len() {
+        for i in 0..self.corpus.len() {
             let iv = self.interval_for(&q_piv, i);
             if iv.hi < tau || iv.is_empty() {
                 stats.pruned += 1;
                 continue; // certified non-match
             }
-            let s = q.sim(&self.items[i]);
+            let s = self.corpus.sim_q(q, i as u32);
             stats.sim_evals += 1;
             if s >= tau {
                 out.push((i as u32, s));
@@ -120,10 +123,10 @@ impl<V: SimVector> SimilarityIndex<V> for Laesa<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         stats.nodes_visited += 1;
         let q_piv = self.query_pivot_sims(q, stats);
-        let n = self.items.len();
+        let n = self.corpus.len();
 
         // AESA-style ordering: score candidates in decreasing upper bound so
         // the floor rises as fast as possible; stop when the floor clears
@@ -147,7 +150,7 @@ impl<V: SimVector> SimilarityIndex<V> for Laesa<V> {
             if pivot_set.contains(&id) {
                 continue;
             }
-            let s = q.sim(&self.items[id as usize]);
+            let s = self.corpus.sim_q(q, id);
             stats.sim_evals += 1;
             results.offer(id, s);
         }
@@ -164,6 +167,8 @@ mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
     use crate::index::LinearScan;
+    use crate::metrics::SimVector;
+    use crate::storage::CorpusStore;
 
     #[test]
     fn matches_linear_scan() {
@@ -195,6 +200,18 @@ mod tests {
             let iv = idx.interval_for(&q_piv, i);
             let s = q.sim(&pts[i]);
             assert!(iv.lo <= s + 1e-9 && s <= iv.hi + 1e-9, "item {i}: {iv:?} vs {s}");
+        }
+    }
+
+    #[test]
+    fn view_built_table_matches_per_item_table() {
+        let pts = uniform_sphere(120, 10, 44);
+        let store = CorpusStore::from_rows(pts.clone());
+        let a = Laesa::build(pts.clone(), BoundKind::Mult, 10);
+        let b = Laesa::build(store.view(), BoundKind::Mult, 10);
+        assert_eq!(a.pivots(), b.pivots());
+        for p in 0..a.n_pivots() {
+            assert_eq!(a.table_row(p), b.table_row(p), "pivot row {p}");
         }
     }
 

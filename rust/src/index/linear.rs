@@ -1,51 +1,38 @@
 //! Exhaustive scan — the correctness oracle and pruning-power baseline.
 
-use crate::metrics::SimVector;
+use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
 
-use super::{sort_desc, KnnHeap, QueryStats, SimilarityIndex};
-
-/// Brute-force index: every query evaluates every item.
-pub struct LinearScan<V: SimVector> {
-    items: Vec<V>,
+/// Brute-force index: every query evaluates every item. Built on a
+/// [`crate::storage::CorpusView`] the scan runs through the blocked batch
+/// kernels over the contiguous store; built on a `Vec<V>` it takes the
+/// per-item path.
+pub struct LinearScan<C: Corpus> {
+    corpus: C,
 }
 
-impl<V: SimVector> LinearScan<V> {
-    pub fn build(items: Vec<V>) -> Self {
-        LinearScan { items }
-    }
-
-    pub fn items(&self) -> &[V] {
-        &self.items
+impl<C: Corpus> LinearScan<C> {
+    pub fn build(corpus: C) -> Self {
+        LinearScan { corpus }
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for LinearScan<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         stats.nodes_visited += 1;
         let mut out = Vec::new();
-        for (i, item) in self.items.iter().enumerate() {
-            let s = q.sim(item);
-            stats.sim_evals += 1;
-            if s >= tau {
-                out.push((i as u32, s));
-            }
-        }
+        stats.sim_evals += self.corpus.scan_all_range(q, tau, &mut out);
         sort_desc(&mut out);
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         stats.nodes_visited += 1;
         let mut heap = KnnHeap::new(k);
-        for (i, item) in self.items.iter().enumerate() {
-            let s = q.sim(item);
-            stats.sim_evals += 1;
-            heap.offer(i as u32, s);
-        }
+        stats.sim_evals += self.corpus.scan_all_topk(q, &mut heap);
         heap.into_sorted()
     }
 
@@ -58,6 +45,7 @@ impl<V: SimVector> SimilarityIndex<V> for LinearScan<V> {
 mod tests {
     use super::*;
     use crate::data::uniform_sphere;
+    use crate::storage::CorpusStore;
 
     #[test]
     fn range_returns_sorted_matches() {
@@ -88,5 +76,24 @@ mod tests {
         let idx = LinearScan::build(pts.clone());
         let mut stats = QueryStats::default();
         assert_eq!(idx.knn(&pts[0], 10, &mut stats).len(), 3);
+    }
+
+    #[test]
+    fn view_backed_scan_is_byte_identical_to_per_item() {
+        let pts = uniform_sphere(75, 12, 4);
+        let store = CorpusStore::from_rows(pts.clone());
+        let per_item = LinearScan::build(pts.clone());
+        let zero_copy = LinearScan::build(store.view());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for qi in [0usize, 33, 74] {
+            let q = &pts[qi];
+            assert_eq!(
+                per_item.range(q, 0.2, &mut s1),
+                zero_copy.range(q, 0.2, &mut s2)
+            );
+            assert_eq!(per_item.knn(q, 9, &mut s1), zero_copy.knn(q, 9, &mut s2));
+        }
+        assert_eq!(s1.sim_evals, s2.sim_evals);
     }
 }

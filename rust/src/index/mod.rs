@@ -28,7 +28,175 @@ pub use linear::LinearScan;
 pub use mtree::MTree;
 pub use vptree::VpTree;
 
-use crate::metrics::SimVector;
+use crate::metrics::{DenseVec, SimVector};
+use crate::storage::CorpusView;
+
+/// What an index builds over: a collection of vectors addressed by dense
+/// `u32` ids.
+///
+/// Two implementations exist. `Vec<V>` is the owning per-item path (the
+/// only option for `SparseVec` corpora). [`CorpusView`] is the zero-copy
+/// path: it aliases the shared [`crate::storage::CorpusStore`] buffer and
+/// routes the id-list/full scans through the blocked batch kernels, which
+/// produce bit-identical similarities to the per-item path.
+pub trait Corpus: Send + Sync + 'static {
+    type Vector: SimVector;
+
+    /// Number of items.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Vector-space dimension (0 for an empty corpus).
+    fn dim(&self) -> usize;
+
+    /// Exact similarity between an external query and item `id`.
+    fn sim_q(&self, q: &Self::Vector, id: u32) -> f64;
+
+    /// Exact similarity between two corpus items (build-time pivot math).
+    fn sim_ij(&self, a: u32, b: u32) -> f64;
+
+    /// Similarities of `q` to each of `ids`, replacing `out`'s contents in
+    /// matching order.
+    fn sims(&self, q: &Self::Vector, ids: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(ids.iter().map(|&id| self.sim_q(q, id)));
+    }
+
+    /// Similarities of item `a` to every item, replacing `out`'s contents
+    /// (LAESA table rows).
+    fn sims_of_item(&self, a: u32, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..self.len() as u32).map(|b| self.sim_ij(a, b)));
+    }
+
+    /// Score `ids` against `q`, pushing every `(id, sim)` with `sim >= tau`.
+    /// Returns the number of exact evaluations performed.
+    fn scan_ids_range(
+        &self,
+        q: &Self::Vector,
+        ids: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        for &id in ids {
+            let s = self.sim_q(q, id);
+            if s >= tau {
+                out.push((id, s));
+            }
+        }
+        ids.len() as u64
+    }
+
+    /// Score `ids` against `q`, offering each into `heap`. Returns evals.
+    fn scan_ids_topk(&self, q: &Self::Vector, ids: &[u32], heap: &mut KnnHeap) -> u64 {
+        for &id in ids {
+            heap.offer(id, self.sim_q(q, id));
+        }
+        ids.len() as u64
+    }
+
+    /// Score the whole corpus against `q` with a threshold. Returns evals.
+    fn scan_all_range(&self, q: &Self::Vector, tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
+        for id in 0..self.len() as u32 {
+            let s = self.sim_q(q, id);
+            if s >= tau {
+                out.push((id, s));
+            }
+        }
+        self.len() as u64
+    }
+
+    /// Score the whole corpus against `q` into a heap. Returns evals.
+    fn scan_all_topk(&self, q: &Self::Vector, heap: &mut KnnHeap) -> u64 {
+        for id in 0..self.len() as u32 {
+            heap.offer(id, self.sim_q(q, id));
+        }
+        self.len() as u64
+    }
+}
+
+/// The owning per-item corpus: works for any [`SimVector`], including
+/// sparse vectors.
+impl<V: SimVector> Corpus for Vec<V> {
+    type Vector = V;
+
+    fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    fn dim(&self) -> usize {
+        self.first().map(SimVector::dim).unwrap_or(0)
+    }
+
+    #[inline]
+    fn sim_q(&self, q: &V, id: u32) -> f64 {
+        q.sim(&self[id as usize])
+    }
+
+    #[inline]
+    fn sim_ij(&self, a: u32, b: u32) -> f64 {
+        self[a as usize].sim(&self[b as usize])
+    }
+}
+
+/// The zero-copy corpus: aliases the shared store and scans through the
+/// blocked batch kernels.
+impl Corpus for CorpusView {
+    type Vector = DenseVec;
+
+    fn len(&self) -> usize {
+        CorpusView::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        CorpusView::dim(self)
+    }
+
+    #[inline]
+    fn sim_q(&self, q: &DenseVec, id: u32) -> f64 {
+        crate::storage::dot_slice(q.as_slice(), self.row(id))
+    }
+
+    #[inline]
+    fn sim_ij(&self, a: u32, b: u32) -> f64 {
+        crate::storage::dot_slice(self.row(a), self.row(b))
+    }
+
+    fn sims(&self, q: &DenseVec, ids: &[u32], out: &mut Vec<f64>) {
+        self.dot_batch(q.as_slice(), ids, out);
+    }
+
+    fn sims_of_item(&self, a: u32, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(CorpusView::len(self));
+        self.for_each_sim(self.row(a), |_, s| out.push(s));
+    }
+
+    fn scan_ids_range(
+        &self,
+        q: &DenseVec,
+        ids: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        CorpusView::scan_ids_range(self, q.as_slice(), ids, tau, out)
+    }
+
+    fn scan_ids_topk(&self, q: &DenseVec, ids: &[u32], heap: &mut KnnHeap) -> u64 {
+        CorpusView::scan_ids_topk(self, q.as_slice(), ids, heap)
+    }
+
+    fn scan_all_range(&self, q: &DenseVec, tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
+        CorpusView::scan_range(self, q.as_slice(), tau, out)
+    }
+
+    fn scan_all_topk(&self, q: &DenseVec, heap: &mut KnnHeap) -> u64 {
+        CorpusView::scan_topk(self, q.as_slice(), heap)
+    }
+}
 
 /// Query-time instrumentation: the paper's pruning-power currency is the
 /// number of exact similarity computations avoided.
@@ -96,14 +264,19 @@ impl KnnHeap {
         }
     }
 
+    /// Offer a candidate. Ties in similarity are broken by **ascending id**
+    /// (matching [`sort_desc`]), so the retained set is the top-k under the
+    /// total order `(sim desc, id asc)` regardless of insertion order —
+    /// a candidate equal to the current floor still displaces a larger-id
+    /// incumbent.
     #[inline]
     pub fn offer(&mut self, id: u32, sim: f64) {
-        if self.entries.len() >= self.k && sim <= self.floor() {
+        if self.entries.len() >= self.k && sim < self.floor() {
             return;
         }
         let pos = self
             .entries
-            .partition_point(|&(_, s)| s > sim || (s == sim && true));
+            .partition_point(|&(eid, s)| s > sim || (s == sim && eid < id));
         self.entries.insert(pos, (id, sim));
         self.entries.truncate(self.k);
     }
@@ -175,6 +348,57 @@ mod tests {
         assert!((h.floor() - 0.5).abs() < 1e-15);
         h.offer(2, 0.6);
         assert!((h.floor() - 0.6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn knn_heap_ties_break_by_ascending_id_insertion_order_independent() {
+        // Regression: the old predicate `(s == sim && true)` kept whichever
+        // equal-similarity entry arrived first, making results depend on
+        // traversal order. The heap must retain the top-k under
+        // (sim desc, id asc) for every insertion order.
+        let offers = [(5u32, 0.5f64), (1, 0.5), (3, 0.5), (2, 0.9), (4, 0.5)];
+        let want = vec![(2u32, 0.9f64), (1, 0.5), (3, 0.5)];
+        // All 120 permutations of the 5 offers.
+        let mut perm = [0usize, 1, 2, 3, 4];
+        let mut all = Vec::new();
+        fn heap_result(offers: &[(u32, f64)], order: &[usize]) -> Vec<(u32, f64)> {
+            let mut h = KnnHeap::new(3);
+            for &i in order {
+                let (id, s) = offers[i];
+                h.offer(id, s);
+            }
+            h.into_sorted()
+        }
+        fn permute(
+            k: usize,
+            perm: &mut [usize; 5],
+            all: &mut Vec<[usize; 5]>,
+        ) {
+            if k == perm.len() {
+                all.push(*perm);
+                return;
+            }
+            for i in k..perm.len() {
+                perm.swap(k, i);
+                permute(k + 1, perm, all);
+                perm.swap(k, i);
+            }
+        }
+        permute(0, &mut perm, &mut all);
+        assert_eq!(all.len(), 120);
+        for order in all {
+            assert_eq!(heap_result(&offers, &order), want, "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn knn_heap_floor_tie_still_displaces_larger_id() {
+        let mut h = KnnHeap::new(2);
+        h.offer(7, 0.4);
+        h.offer(9, 0.4);
+        // Equal to the floor but smaller id: must enter, evicting id 9.
+        h.offer(2, 0.4);
+        assert_eq!(h.into_sorted(), vec![(2, 0.4), (7, 0.4)]);
     }
 
     #[test]

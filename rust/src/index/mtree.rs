@@ -9,13 +9,16 @@
 //! `sim(q, route)`; if even the most optimistic value cannot clear the
 //! threshold once widened by the covering interval, the whole entry is
 //! dropped with **zero** similarity evaluations.
+//!
+//! Per-entry pre-checks make leaf scans data-dependent, so this index keeps
+//! per-item scoring (through [`Corpus::sim_q`], zero-copy rows when built
+//! on a view) rather than the blocked bucket kernels.
 
 use std::collections::BinaryHeap;
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
 
 struct Entry {
     /// Routing object (internal) or data item (leaf).
@@ -34,24 +37,24 @@ struct NodeBody {
 }
 
 /// Similarity-native M-tree.
-pub struct MTree<V: SimVector> {
-    items: Vec<V>,
+pub struct MTree<C: Corpus> {
+    corpus: C,
     root: Option<NodeBody>,
     bound: BoundKind,
     capacity: usize,
 }
 
-impl<V: SimVector> MTree<V> {
+impl<C: Corpus> MTree<C> {
     /// Bulk-load an M-tree with node capacity `capacity` (>= 4 recommended).
-    pub fn build(items: Vec<V>, bound: BoundKind, capacity: usize) -> Self {
+    pub fn build(corpus: C, bound: BoundKind, capacity: usize) -> Self {
         let capacity = capacity.max(2);
-        let ids: Vec<u32> = (0..items.len() as u32).collect();
+        let ids: Vec<u32> = (0..corpus.len() as u32).collect();
         let root = if ids.is_empty() {
             None
         } else {
-            Some(Self::bulk_load(&items, ids, capacity, None))
+            Some(Self::bulk_load(&corpus, ids, capacity, None))
         };
-        MTree { items, root, bound, capacity }
+        MTree { corpus, root, bound, capacity }
     }
 
     pub fn capacity(&self) -> usize {
@@ -60,10 +63,10 @@ impl<V: SimVector> MTree<V> {
 
     /// Recursive bulk load: pick `capacity` routing objects (spread by a
     /// farthest-first pass), assign items to the most similar route, recurse.
-    fn bulk_load(items: &[V], ids: Vec<u32>, capacity: usize, parent: Option<u32>) -> NodeBody {
+    fn bulk_load(corpus: &C, ids: Vec<u32>, capacity: usize, parent: Option<u32>) -> NodeBody {
         let parent_sim = |id: u32| -> f64 {
             match parent {
-                Some(p) => items[p as usize].sim(&items[id as usize]),
+                Some(p) => corpus.sim_ij(p, id),
                 None => 1.0,
             }
         };
@@ -78,8 +81,7 @@ impl<V: SimVector> MTree<V> {
 
         // Choose routing objects: farthest-first (min-max-similarity).
         let mut routes: Vec<u32> = vec![ids[0]];
-        let mut max_sim: Vec<f64> =
-            ids.iter().map(|&i| items[ids[0] as usize].sim(&items[i as usize])).collect();
+        let mut max_sim: Vec<f64> = ids.iter().map(|&i| corpus.sim_ij(ids[0], i)).collect();
         while routes.len() < capacity {
             let (pos, _) = max_sim
                 .iter()
@@ -92,7 +94,7 @@ impl<V: SimVector> MTree<V> {
             }
             routes.push(r);
             for (j, &i) in ids.iter().enumerate() {
-                max_sim[j] = max_sim[j].max(items[r as usize].sim(&items[i as usize]));
+                max_sim[j] = max_sim[j].max(corpus.sim_ij(r, i));
             }
         }
 
@@ -115,7 +117,7 @@ impl<V: SimVector> MTree<V> {
             let (g, _) = routes
                 .iter()
                 .enumerate()
-                .map(|(g, &r)| (g, items[r as usize].sim(&items[i as usize])))
+                .map(|(g, &r)| (g, corpus.sim_ij(r, i)))
                 .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
                 .unwrap();
             groups[g].push(i);
@@ -129,13 +131,13 @@ impl<V: SimVector> MTree<V> {
                 group.push(r);
                 let mut cover: Option<SimInterval> = None;
                 for &i in &group {
-                    let s = items[r as usize].sim(&items[i as usize]);
+                    let s = corpus.sim_ij(r, i);
                     match &mut cover {
                         Some(c) => c.extend(s),
                         None => cover = Some(SimInterval::point(s)),
                     }
                 }
-                let child = Self::bulk_load(items, group, capacity, Some(r));
+                let child = Self::bulk_load(corpus, group, capacity, Some(r));
                 Entry {
                     id: r,
                     parent_sim: parent_sim(r),
@@ -153,7 +155,7 @@ impl<V: SimVector> MTree<V> {
     fn range_rec(
         &self,
         node: &NodeBody,
-        q: &V,
+        q: &C::Vector,
         parent_s: Option<f64>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
@@ -185,7 +187,7 @@ impl<V: SimVector> MTree<V> {
                     continue; // dropped without computing sim(q, route)
                 }
             }
-            let s = q.sim(&self.items[entry.id as usize]);
+            let s = self.corpus.sim_q(q, entry.id);
             stats.sim_evals += 1;
             if node.is_leaf {
                 if s >= tau {
@@ -205,12 +207,12 @@ impl<V: SimVector> MTree<V> {
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for MTree<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if let Some(root) = &self.root {
             self.range_rec(root, q, None, tau, &mut out, stats);
@@ -219,7 +221,7 @@ impl<V: SimVector> SimilarityIndex<V> for MTree<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut results = KnnHeap::new(k);
         // Frontier carries (node, sim(q, parent route)); NAN at the root.
         let mut frontier: BinaryHeap<Prioritized<(&NodeBody, f64)>> = BinaryHeap::new();
@@ -253,7 +255,7 @@ impl<V: SimVector> SimilarityIndex<V> for MTree<V> {
                         continue;
                     }
                 }
-                let s = q.sim(&self.items[entry.id as usize]);
+                let s = self.corpus.sim_q(q, entry.id);
                 stats.sim_evals += 1;
                 if node.is_leaf {
                     results.offer(entry.id, s);

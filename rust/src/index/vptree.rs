@@ -5,13 +5,16 @@
 //! inequality: a child subtree whose members' similarity to the vantage
 //! point lies in `[lo, hi]` can only contain matches if
 //! `upper_over(sim(q, vp), [lo, hi]) >= tau` (range) or `> floor` (kNN).
+//!
+//! Built over any [`Corpus`]: a `Vec<V>` (owning, per-item scoring) or a
+//! zero-copy [`crate::storage::CorpusView`], in which case leaf buckets are
+//! scored through the blocked batch kernels.
 
 use std::collections::BinaryHeap;
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::metrics::SimVector;
 
-use super::{sort_desc, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
 
 struct Node {
     /// Vantage point (item id).
@@ -26,29 +29,29 @@ struct Node {
 }
 
 /// Similarity-native vantage-point tree.
-pub struct VpTree<V: SimVector> {
-    items: Vec<V>,
+pub struct VpTree<C: Corpus> {
+    corpus: C,
     root: Option<Node>,
     bound: BoundKind,
     leaf_size: usize,
 }
 
-impl<V: SimVector> VpTree<V> {
+impl<C: Corpus> VpTree<C> {
     /// Build with the given pruning bound; `leaf_size` trades tree depth for
     /// scan width (8–32 is typical).
-    pub fn build(items: Vec<V>, bound: BoundKind, seed: u64) -> Self {
-        Self::with_leaf_size(items, bound, seed, 16)
+    pub fn build(corpus: C, bound: BoundKind, seed: u64) -> Self {
+        Self::with_leaf_size(corpus, bound, seed, 16)
     }
 
-    pub fn with_leaf_size(items: Vec<V>, bound: BoundKind, seed: u64, leaf_size: usize) -> Self {
-        let mut ids: Vec<u32> = (0..items.len() as u32).collect();
+    pub fn with_leaf_size(corpus: C, bound: BoundKind, seed: u64, leaf_size: usize) -> Self {
+        let mut ids: Vec<u32> = (0..corpus.len() as u32).collect();
         let mut rng = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
         let root = if ids.is_empty() {
             None
         } else {
-            Some(Self::build_node(&items, &mut ids, leaf_size.max(1), &mut rng))
+            Some(Self::build_node(&corpus, &mut ids, leaf_size.max(1), &mut rng))
         };
-        VpTree { items, root, bound, leaf_size: leaf_size.max(1) }
+        VpTree { corpus, root, bound, leaf_size: leaf_size.max(1) }
     }
 
     fn next_rand(rng: &mut u64) -> u64 {
@@ -61,7 +64,7 @@ impl<V: SimVector> VpTree<V> {
         x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
-    fn build_node(items: &[V], ids: &mut [u32], leaf_size: usize, rng: &mut u64) -> Node {
+    fn build_node(corpus: &C, ids: &mut [u32], leaf_size: usize, rng: &mut u64) -> Node {
         // Random vantage point; swap it to the front.
         let pick = (Self::next_rand(rng) % ids.len() as u64) as usize;
         ids.swap(0, pick);
@@ -74,7 +77,7 @@ impl<V: SimVector> VpTree<V> {
 
         // Split at the median similarity to the vantage point.
         let mut sims: Vec<(u32, f64)> =
-            rest.iter().map(|&id| (id, items[vp as usize].sim(&items[id as usize]))).collect();
+            rest.iter().map(|&id| (id, corpus.sim_ij(vp, id))).collect();
         sims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let mid = sims.len() / 2;
 
@@ -88,7 +91,7 @@ impl<V: SimVector> VpTree<V> {
                 iv.extend(s);
             }
             let mut child_ids: Vec<u32> = slice.iter().map(|&(id, _)| id).collect();
-            Some((iv, Box::new(Self::build_node(items, &mut child_ids, leaf_size, rng))))
+            Some((iv, Box::new(Self::build_node(corpus, &mut child_ids, leaf_size, rng))))
         };
         let near = make(near_slice, rng);
         let far = make(far_slice, rng);
@@ -106,24 +109,18 @@ impl<V: SimVector> VpTree<V> {
     fn range_node(
         &self,
         node: &Node,
-        q: &V,
+        q: &C::Vector,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
         stats: &mut QueryStats,
     ) {
         stats.nodes_visited += 1;
-        let s = q.sim(&self.items[node.vp as usize]);
+        let s = self.corpus.sim_q(q, node.vp);
         stats.sim_evals += 1;
         if s >= tau {
             out.push((node.vp, s));
         }
-        for &id in &node.bucket {
-            let si = q.sim(&self.items[id as usize]);
-            stats.sim_evals += 1;
-            if si >= tau {
-                out.push((id, si));
-            }
-        }
+        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
         for child in [&node.near, &node.far].into_iter().flatten() {
             let (iv, sub) = child;
             if self.bound.upper_over(s, *iv) >= tau {
@@ -135,12 +132,12 @@ impl<V: SimVector> VpTree<V> {
     }
 }
 
-impl<V: SimVector> SimilarityIndex<V> for VpTree<V> {
+impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
     fn len(&self) -> usize {
-        self.items.len()
+        self.corpus.len()
     }
 
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if let Some(root) = &self.root {
             self.range_node(root, q, tau, &mut out, stats);
@@ -149,7 +146,7 @@ impl<V: SimVector> SimilarityIndex<V> for VpTree<V> {
         out
     }
 
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
         let mut results = KnnHeap::new(k);
         let mut frontier: BinaryHeap<Prioritized<&Node>> = BinaryHeap::new();
         if let Some(root) = &self.root {
@@ -160,14 +157,10 @@ impl<V: SimVector> SimilarityIndex<V> for VpTree<V> {
                 break; // no remaining node can improve the result set
             }
             stats.nodes_visited += 1;
-            let s = q.sim(&self.items[node.vp as usize]);
+            let s = self.corpus.sim_q(q, node.vp);
             stats.sim_evals += 1;
             results.offer(node.vp, s);
-            for &id in &node.bucket {
-                let si = q.sim(&self.items[id as usize]);
-                stats.sim_evals += 1;
-                results.offer(id, si);
-            }
+            stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, &mut results);
             for child in [&node.near, &node.far].into_iter().flatten() {
                 let (iv, sub) = child;
                 let child_ub = self.bound.upper_over(s, *iv);
@@ -191,6 +184,7 @@ mod tests {
     use super::*;
     use crate::data::uniform_sphere;
     use crate::index::LinearScan;
+    use crate::metrics::DenseVec;
 
     fn check_matches_linear(n: usize, d: usize, seed: u64, bound: BoundKind) {
         let pts = uniform_sphere(n, d, seed);
@@ -253,10 +247,9 @@ mod tests {
 
     #[test]
     fn empty_and_singleton() {
-        let empty: VpTree<crate::metrics::DenseVec> =
-            VpTree::build(Vec::new(), BoundKind::Mult, 0);
+        let empty: VpTree<Vec<DenseVec>> = VpTree::build(Vec::new(), BoundKind::Mult, 0);
         let mut stats = QueryStats::default();
-        let q = crate::metrics::DenseVec::new(vec![1.0, 0.0]);
+        let q = DenseVec::new(vec![1.0, 0.0]);
         assert!(empty.range(&q, 0.0, &mut stats).is_empty());
         assert!(empty.knn(&q, 3, &mut stats).is_empty());
 

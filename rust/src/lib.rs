@@ -9,19 +9,39 @@
 //! backed by AOT-compiled JAX/Pallas artifacts over PJRT, wrapped in a
 //! `coordinator` serving engine.
 //!
+//! All dense-vector layers sit on one shared `storage::CorpusStore`: a
+//! single contiguous row-major buffer of the normalized corpus, sliced into
+//! zero-copy `CorpusView` handles by indexes, shards, and the PJRT input
+//! path, and scanned with blocked batch kernels.
+//!
 //! ## Quick start
 //!
 //! ```no_run
 //! use simetra::bounds::BoundKind;
-//! use simetra::data::uniform_sphere;
+//! use simetra::data::uniform_sphere_store;
 //! use simetra::index::{SimilarityIndex, VpTree};
 //!
-//! let corpus = uniform_sphere(10_000, 64, 42);
-//! let index = VpTree::build(corpus.clone(), BoundKind::Mult, 7);
+//! // One contiguous allocation for the whole corpus...
+//! let store = uniform_sphere_store(10_000, 64, 42);
+//! // ...and the index builds over a zero-copy view of it.
+//! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
 //! let mut stats = simetra::index::QueryStats::default();
-//! let hits = index.knn(&corpus[0], 10, &mut stats);
+//! let q = store.vec(0);
+//! let hits = index.knn(&q, 10, &mut stats);
 //! assert_eq!(hits[0].0, 0); // a point's own nearest neighbor is itself
 //! println!("similarity computations: {}", stats.sim_evals);
+//! ```
+//!
+//! Indexes also build from an owning `Vec<V>` for any `SimVector` (the
+//! per-item path sparse corpora use):
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::{zipf_corpus, ZipfSpec};
+//! use simetra::index::Laesa;
+//!
+//! let docs = zipf_corpus(&ZipfSpec::default());
+//! let index = Laesa::build(docs, BoundKind::Mult, 32);
 //! ```
 
 pub mod bounds;
@@ -33,4 +53,5 @@ pub mod index;
 pub mod metrics;
 pub mod runtime;
 pub mod sparse;
+pub mod storage;
 pub mod util;

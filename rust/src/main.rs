@@ -13,7 +13,7 @@ use simetra::bounds::BoundKind;
 use simetra::coordinator::{
     server, BatchConfig, Coordinator, CoordinatorConfig, ExecMode, IndexKind,
 };
-use simetra::data::{uniform_sphere, vmf_mixture, VmfSpec};
+use simetra::data::{uniform_sphere, vmf_mixture_store, VmfSpec};
 use simetra::figures;
 use simetra::index::QueryStats;
 use simetra::metrics::SimVector;
@@ -135,10 +135,12 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let max_wait_us = flags.usize_or("max_wait_us", 2000)? as u64;
 
     eprintln!("generating corpus: n={n} dim={dim} clusters={clusters} kappa={kappa}");
-    let (corpus, _) = vmf_mixture(&VmfSpec { n, dim, clusters, kappa, seed: 42 });
+    // Store-native generation: one contiguous allocation that every shard,
+    // index, and PJRT tile aliases.
+    let (store, _) = vmf_mixture_store(&VmfSpec { n, dim, clusters, kappa, seed: 42 });
     eprintln!("building {index:?} shards={shards} bound={} mode={mode:?}", bound.name());
     let coord = Coordinator::new(
-        corpus,
+        store,
         CoordinatorConfig {
             n_shards: shards,
             index,
@@ -167,14 +169,14 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     let kind =
         IndexKind::parse(&flags.str_or("index", "vp")).context("unknown --index")?;
     let bound = parse_bound(&flags.str_or("bound", "mult"))?;
-    let (corpus, _) = vmf_mixture(&VmfSpec { n, dim, clusters: 32, kappa: 50.0, seed: 42 });
+    let (store, _) = vmf_mixture_store(&VmfSpec { n, dim, clusters: 32, kappa: 50.0, seed: 42 });
     let build0 = std::time::Instant::now();
-    let idx = kind.build(corpus.clone(), bound);
+    let idx = kind.build(store.view(), bound);
     let build_t = build0.elapsed();
-    let q = &corpus[0];
+    let q = store.vec(0);
     let mut stats = QueryStats::default();
     let t0 = std::time::Instant::now();
-    let hits = idx.knn(q, k, &mut stats);
+    let hits = idx.knn(&q, k, &mut stats);
     let dt = t0.elapsed();
     println!("index={} bound={} n={n} dim={dim} (built in {build_t:?})", idx.name(), bound.name());
     println!(

@@ -46,28 +46,18 @@ impl DenseVec {
         &self.data
     }
 
-    /// Dot product with 4-way unrolled f64 accumulation (the scalar hot
-    /// path; the batched hot path goes through the PJRT artifact).
+    /// Dot product via the canonical scalar kernel
+    /// ([`crate::storage::dot_slice`]: 4-way unrolled f64 accumulation,
+    /// clamped to `[-1, 1]`). The batched hot paths go through the
+    /// `storage` blocked kernels or the PJRT artifact, all of which produce
+    /// bit-identical results to this per pair.
+    ///
+    /// # Panics
+    /// Panics on dimension mismatch (no silent truncation, even in release
+    /// builds).
     #[inline]
     pub fn dot(&self, other: &Self) -> f64 {
-        let a = &self.data;
-        let b = &other.data;
-        debug_assert_eq!(a.len(), b.len());
-        let n = a.len().min(b.len());
-        let chunks = n / 4;
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-        for i in 0..chunks {
-            let j = i * 4;
-            s0 += a[j] as f64 * b[j] as f64;
-            s1 += a[j + 1] as f64 * b[j + 1] as f64;
-            s2 += a[j + 2] as f64 * b[j + 2] as f64;
-            s3 += a[j + 3] as f64 * b[j + 3] as f64;
-        }
-        let mut sum = (s0 + s1) + (s2 + s3);
-        for j in chunks * 4..n {
-            sum += a[j] as f64 * b[j] as f64;
-        }
-        sum.clamp(-1.0, 1.0)
+        crate::storage::dot_slice(&self.data, &other.data)
     }
 }
 
@@ -97,6 +87,14 @@ mod tests {
                 .sum();
             assert!((da.dot(&db) - naive.clamp(-1.0, 1.0)).abs() < 1e-9, "n={n}");
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dot_rejects_dimension_mismatch() {
+        let a = DenseVec::new(vec![1.0, 0.0, 0.0]);
+        let b = DenseVec::new(vec![1.0, 0.0]);
+        a.dot(&b);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! The real PJRT engine: compiles AOT HLO-text artifacts on the CPU client
+//! and executes them. Only compiled with the `pjrt` feature, which requires
+//! the `xla` bindings (see rust/Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::{Manifest, PivotBounds, TopKResult};
+
+/// Synchronous PJRT engine owning the compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load the manifest and compile every artifact on the CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        let mut exes = HashMap::new();
+        for art in &manifest.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", art.name))?;
+            exes.insert(art.name.clone(), exe);
+        }
+        Ok(Engine { client, manifest, exes, dir: dir.to_path_buf() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+    }
+
+    /// Batched top-k: `queries` is row-major `(q, d)`, `corpus` row-major
+    /// `(n, d)` (rows need not be normalized — the artifact normalizes).
+    /// Pads to the selected variant and strips padding from the result.
+    pub fn score_topk(
+        &self,
+        queries: &[f32],
+        q: usize,
+        corpus: &[f32],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> Result<TopKResult> {
+        anyhow::ensure!(queries.len() == q * d, "queries shape mismatch");
+        anyhow::ensure!(corpus.len() == n * d, "corpus shape mismatch");
+        let art = self
+            .manifest
+            .pick_score_topk(q, n, d, k)
+            .ok_or_else(|| anyhow!("no score_topk artifact fits q={q} n={n} d={d} k={k}"))?;
+        let (aq, an, ad, ak) = (
+            art.param("q") as usize,
+            art.param("n") as usize,
+            art.param("d") as usize,
+            art.param("k") as usize,
+        );
+        let mut qbuf = vec![0.0f32; aq * ad];
+        for r in 0..q {
+            qbuf[r * ad..r * ad + d].copy_from_slice(&queries[r * d..(r + 1) * d]);
+        }
+        let mut cbuf = vec![0.0f32; an * ad];
+        for r in 0..n {
+            cbuf[r * ad..r * ad + d].copy_from_slice(&corpus[r * d..(r + 1) * d]);
+        }
+        let lq = Self::literal_f32(&qbuf, &[aq as i64, ad as i64])?;
+        let lc = Self::literal_f32(&cbuf, &[an as i64, ad as i64])?;
+        let ln = xla::Literal::scalar(n as i32);
+        let exe = &self.exes[&art.name];
+        let out = exe
+            .execute::<xla::Literal>(&[lq, lc, ln])
+            .map_err(|e| anyhow!("execute {}: {e}", art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let (values_l, indices_l) = out.to_tuple2().map_err(|e| anyhow!("tuple: {e}"))?;
+        let all_values: Vec<f32> = values_l.to_vec().map_err(|e| anyhow!("values: {e}"))?;
+        let all_indices: Vec<i32> = indices_l.to_vec().map_err(|e| anyhow!("indices: {e}"))?;
+        // Strip query padding and clip k.
+        let kk = k.min(ak).min(n);
+        let mut values = Vec::with_capacity(q * kk);
+        let mut indices = Vec::with_capacity(q * kk);
+        for r in 0..q {
+            values.extend_from_slice(&all_values[r * ak..r * ak + kk]);
+            indices.extend_from_slice(&all_indices[r * ak..r * ak + kk]);
+        }
+        Ok(TopKResult { values, indices, k: kk })
+    }
+
+    /// Batched LAESA pivot filtering: `sim_qp` row-major `(q, p)`, `sim_pc`
+    /// row-major `(p, n)`. Returns certified bounds on `sim(q_i, c_j)`.
+    pub fn pivot_filter(
+        &self,
+        sim_qp: &[f32],
+        q: usize,
+        sim_pc: &[f32],
+        p: usize,
+        n: usize,
+    ) -> Result<PivotBounds> {
+        anyhow::ensure!(sim_qp.len() == q * p, "sim_qp shape mismatch");
+        anyhow::ensure!(sim_pc.len() == p * n, "sim_pc shape mismatch");
+        let art = self
+            .manifest
+            .pick_pivot_filter(q, p, n)
+            .ok_or_else(|| anyhow!("no pivot_filter artifact fits q={q} p={p} n={n}"))?;
+        let (aq, ap, an) =
+            (art.param("q") as usize, art.param("p") as usize, art.param("n") as usize);
+        // Padding pivots must certify nothing: a pivot row of s=0 yields the
+        // vacuous interval [-1, 1] per Eq. 10/13 (radical = 1), so zero-fill
+        // is safe. Padded corpus columns produce garbage bounds for j >= n,
+        // which the caller never reads.
+        let mut qp = vec![0.0f32; aq * ap];
+        for r in 0..q {
+            qp[r * ap..r * ap + p].copy_from_slice(&sim_qp[r * p..(r + 1) * p]);
+        }
+        let mut pc = vec![0.0f32; ap * an];
+        for r in 0..p {
+            pc[r * an..r * an + n].copy_from_slice(&sim_pc[r * n..(r + 1) * n]);
+        }
+        let lqp = Self::literal_f32(&qp, &[aq as i64, ap as i64])?;
+        let lpc = Self::literal_f32(&pc, &[ap as i64, an as i64])?;
+        let exe = &self.exes[&art.name];
+        let out = exe
+            .execute::<xla::Literal>(&[lqp, lpc])
+            .map_err(|e| anyhow!("execute {}: {e}", art.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let (lb_l, ub_l) = out.to_tuple2().map_err(|e| anyhow!("tuple: {e}"))?;
+        let lb_all: Vec<f32> = lb_l.to_vec().map_err(|e| anyhow!("lb: {e}"))?;
+        let ub_all: Vec<f32> = ub_l.to_vec().map_err(|e| anyhow!("ub: {e}"))?;
+        let mut lb = Vec::with_capacity(q * n);
+        let mut ub = Vec::with_capacity(q * n);
+        for r in 0..q {
+            lb.extend_from_slice(&lb_all[r * an..r * an + n]);
+            ub.extend_from_slice(&ub_all[r * an..r * an + n]);
+        }
+        Ok(PivotBounds { lb, ub, n })
+    }
+}

@@ -6,17 +6,33 @@
 //! a channel so the multi-threaded coordinator can call it from anywhere —
 //! also serializing device access, which is what a single-device client
 //! wants regardless.
+//!
+//! Corpus inputs cross the channel as [`CorpusView`] handles: the executor
+//! thread reads the shared [`crate::storage::CorpusStore`] buffer directly
+//! (an `Arc` bump per tile, no re-packing) and only the `xla` literal
+//! construction copies bytes, at the FFI boundary where it is unavoidable.
+//!
+//! The real engine needs the `xla` bindings and is gated behind the `pjrt`
+//! feature; without it a stub with the same API reports the missing feature
+//! from [`Engine::load`].
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
+mod engine;
+
+pub use engine::Engine;
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::path::Path;
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::storage::CorpusView;
 
 /// Result of a batched `score_topk` execution (padded rows removed).
 #[derive(Debug, Clone)]
@@ -38,166 +54,15 @@ pub struct PivotBounds {
     pub n: usize,
 }
 
-/// Synchronous PJRT engine owning the compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
-}
-
-impl Engine {
-    /// Load the manifest and compile every artifact on the CPU client.
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
-        let mut exes = HashMap::new();
-        for art in &manifest.artifacts {
-            let path = dir.join(&art.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                client.compile(&comp).map_err(|e| anyhow!("compile {}: {e}", art.name))?;
-            exes.insert(art.name.clone(), exe);
-        }
-        Ok(Engine { client, manifest, exes, dir: dir.to_path_buf() })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        xla::Literal::vec1(data)
-            .reshape(dims)
-            .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
-    }
-
-    /// Batched top-k: `queries` is row-major `(q, d)`, `corpus` row-major
-    /// `(n, d)` (rows need not be normalized — the artifact normalizes).
-    /// Pads to the selected variant and strips padding from the result.
-    pub fn score_topk(
-        &self,
-        queries: &[f32],
-        q: usize,
-        corpus: &[f32],
-        n: usize,
-        d: usize,
-        k: usize,
-    ) -> Result<TopKResult> {
-        anyhow::ensure!(queries.len() == q * d, "queries shape mismatch");
-        anyhow::ensure!(corpus.len() == n * d, "corpus shape mismatch");
-        let art = self
-            .manifest
-            .pick_score_topk(q, n, d, k)
-            .ok_or_else(|| anyhow!("no score_topk artifact fits q={q} n={n} d={d} k={k}"))?;
-        let (aq, an, ad, ak) = (
-            art.param("q") as usize,
-            art.param("n") as usize,
-            art.param("d") as usize,
-            art.param("k") as usize,
-        );
-        let mut qbuf = vec![0.0f32; aq * ad];
-        for r in 0..q {
-            qbuf[r * ad..r * ad + d].copy_from_slice(&queries[r * d..(r + 1) * d]);
-        }
-        let mut cbuf = vec![0.0f32; an * ad];
-        for r in 0..n {
-            cbuf[r * ad..r * ad + d].copy_from_slice(&corpus[r * d..(r + 1) * d]);
-        }
-        let lq = Self::literal_f32(&qbuf, &[aq as i64, ad as i64])?;
-        let lc = Self::literal_f32(&cbuf, &[an as i64, ad as i64])?;
-        let ln = xla::Literal::scalar(n as i32);
-        let exe = &self.exes[&art.name];
-        let out = exe
-            .execute::<xla::Literal>(&[lq, lc, ln])
-            .map_err(|e| anyhow!("execute {}: {e}", art.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        let (values_l, indices_l) = out.to_tuple2().map_err(|e| anyhow!("tuple: {e}"))?;
-        let all_values: Vec<f32> = values_l.to_vec().map_err(|e| anyhow!("values: {e}"))?;
-        let all_indices: Vec<i32> = indices_l.to_vec().map_err(|e| anyhow!("indices: {e}"))?;
-        // Strip query padding and clip k.
-        let kk = k.min(ak).min(n);
-        let mut values = Vec::with_capacity(q * kk);
-        let mut indices = Vec::with_capacity(q * kk);
-        for r in 0..q {
-            values.extend_from_slice(&all_values[r * ak..r * ak + kk]);
-            indices.extend_from_slice(&all_indices[r * ak..r * ak + kk]);
-        }
-        Ok(TopKResult { values, indices, k: kk })
-    }
-
-    /// Batched LAESA pivot filtering: `sim_qp` row-major `(q, p)`, `sim_pc`
-    /// row-major `(p, n)`. Returns certified bounds on `sim(q_i, c_j)`.
-    pub fn pivot_filter(
-        &self,
-        sim_qp: &[f32],
-        q: usize,
-        sim_pc: &[f32],
-        p: usize,
-        n: usize,
-    ) -> Result<PivotBounds> {
-        anyhow::ensure!(sim_qp.len() == q * p, "sim_qp shape mismatch");
-        anyhow::ensure!(sim_pc.len() == p * n, "sim_pc shape mismatch");
-        let art = self
-            .manifest
-            .pick_pivot_filter(q, p, n)
-            .ok_or_else(|| anyhow!("no pivot_filter artifact fits q={q} p={p} n={n}"))?;
-        let (aq, ap, an) =
-            (art.param("q") as usize, art.param("p") as usize, art.param("n") as usize);
-        // Padding pivots must certify nothing: a pivot row of s=0 yields the
-        // vacuous interval [-1, 1] per Eq. 10/13 (radical = 1), so zero-fill
-        // is safe. Padded corpus columns produce garbage bounds for j >= n,
-        // which the caller never reads.
-        let mut qp = vec![0.0f32; aq * ap];
-        for r in 0..q {
-            qp[r * ap..r * ap + p].copy_from_slice(&sim_qp[r * p..(r + 1) * p]);
-        }
-        let mut pc = vec![0.0f32; ap * an];
-        for r in 0..p {
-            pc[r * an..r * an + n].copy_from_slice(&sim_pc[r * n..(r + 1) * n]);
-        }
-        let lqp = Self::literal_f32(&qp, &[aq as i64, ap as i64])?;
-        let lpc = Self::literal_f32(&pc, &[ap as i64, an as i64])?;
-        let exe = &self.exes[&art.name];
-        let out = exe
-            .execute::<xla::Literal>(&[lqp, lpc])
-            .map_err(|e| anyhow!("execute {}: {e}", art.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e}"))?;
-        let (lb_l, ub_l) = out.to_tuple2().map_err(|e| anyhow!("tuple: {e}"))?;
-        let lb_all: Vec<f32> = lb_l.to_vec().map_err(|e| anyhow!("lb: {e}"))?;
-        let ub_all: Vec<f32> = ub_l.to_vec().map_err(|e| anyhow!("ub: {e}"))?;
-        let mut lb = Vec::with_capacity(q * n);
-        let mut ub = Vec::with_capacity(q * n);
-        for r in 0..q {
-            lb.extend_from_slice(&lb_all[r * an..r * an + n]);
-            ub.extend_from_slice(&ub_all[r * an..r * an + n]);
-        }
-        Ok(PivotBounds { lb, ub, n })
-    }
-}
-
 /// A request processed by the engine thread.
 enum EngineRequest {
     ScoreTopK {
-        queries: Vec<f32>,
+        /// Row-major `(q, d)` queries, shared — one flattening per batch,
+        /// reused across corpus tiles.
+        queries: Arc<Vec<f32>>,
         q: usize,
-        corpus: Vec<f32>,
-        n: usize,
-        d: usize,
+        /// Zero-copy window onto the corpus store.
+        corpus: CorpusView,
         k: usize,
         reply: mpsc::SyncSender<Result<TopKResult>>,
     },
@@ -238,8 +103,12 @@ impl EngineHandle {
                 };
                 for req in rx {
                     match req {
-                        EngineRequest::ScoreTopK { queries, q, corpus, n, d, k, reply } => {
-                            let _ = reply.send(engine.score_topk(&queries, q, &corpus, n, d, k));
+                        EngineRequest::ScoreTopK { queries, q, corpus, k, reply } => {
+                            let n = corpus.len();
+                            let d = corpus.dim();
+                            let flat = corpus.contiguous_or_gather();
+                            let _ = reply
+                                .send(engine.score_topk(&queries, q, flat.as_ref(), n, d, k));
                         }
                         EngineRequest::PivotFilter { sim_qp, q, sim_pc, p, n, reply } => {
                             let _ = reply.send(engine.pivot_filter(&sim_qp, q, &sim_pc, p, n));
@@ -260,18 +129,17 @@ impl EngineHandle {
             .map_err(|_| anyhow!("engine thread gone"))
     }
 
-    /// Batched top-k (see [`Engine::score_topk`]); blocks until done.
+    /// Batched top-k over a corpus view (see [`Engine::score_topk`]);
+    /// blocks until done. `n` and `d` come from the view.
     pub fn score_topk(
         &self,
-        queries: Vec<f32>,
+        queries: Arc<Vec<f32>>,
         q: usize,
-        corpus: Vec<f32>,
-        n: usize,
-        d: usize,
+        corpus: CorpusView,
         k: usize,
     ) -> Result<TopKResult> {
         let (reply, rx) = mpsc::sync_channel(1);
-        self.send(EngineRequest::ScoreTopK { queries, q, corpus, n, d, k, reply })?;
+        self.send(EngineRequest::ScoreTopK { queries, q, corpus, k, reply })?;
         rx.recv().map_err(|_| anyhow!("engine dropped request"))?
     }
 

@@ -1,0 +1,79 @@
+//! Stub engine for builds without the `pjrt` feature.
+//!
+//! The offline build has no `xla` bindings, so [`Engine::load`] always
+//! fails with a clear message and the struct itself is uninhabited — the
+//! coordinator's Index mode, every index, and all native benches work
+//! unchanged, while Engine/Hybrid modes report the missing feature at
+//! startup instead of failing mysteriously later.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{Manifest, PivotBounds, TopKResult};
+
+/// Uninhabited placeholder with the same API as the real PJRT engine.
+pub struct Engine {
+    never: std::convert::Infallible,
+}
+
+impl Engine {
+    /// Always fails: enabling the real engine is a two-step change —
+    /// add the `xla` dependency to rust/Cargo.toml (it is not bundled in
+    /// the offline build, so the `pjrt` feature alone will not compile),
+    /// then rebuild with `--features pjrt`.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(
+            "simetra was built without the `pjrt` feature: PJRT artifacts cannot \
+             be compiled or executed. To enable, first add the `xla` dependency \
+             to rust/Cargo.toml (see the [features] comment there — the feature \
+             alone will not compile without it), then rebuild with --features pjrt"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn score_topk(
+        &self,
+        _queries: &[f32],
+        _q: usize,
+        _corpus: &[f32],
+        _n: usize,
+        _d: usize,
+        _k: usize,
+    ) -> Result<TopKResult> {
+        match self.never {}
+    }
+
+    pub fn pivot_filter(
+        &self,
+        _sim_qp: &[f32],
+        _q: usize,
+        _sim_pc: &[f32],
+        _p: usize,
+        _n: usize,
+    ) -> Result<PivotBounds> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = Engine::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -1,0 +1,619 @@
+//! Zero-copy corpus storage: one contiguous SoA buffer under every index,
+//! shard, and the PJRT runtime.
+//!
+//! A [`CorpusStore`] owns the L2-normalized corpus as a single row-major
+//! `f32` buffer behind an `Arc`. Everything downstream — index structures,
+//! coordinator shards, the PJRT engine's input tiles — works on
+//! [`CorpusView`] handles (a contiguous row range or an explicit id list)
+//! that *alias* the buffer instead of cloning vectors. Scoring goes through
+//! batch kernels ([`CorpusView::scan_topk`], [`CorpusView::scan_range`],
+//! [`CorpusView::dot_batch`]) built on a paired row kernel (`dot2`) that
+//! streams the query once per two rows with f64 accumulation — wider
+//! (SIMD/8-row) kernels can slot in behind the same API later.
+//!
+//! Numerical contract: every kernel reduces each row with **exactly** the
+//! same operation order as [`dot_slice`] (4-way unrolled partial sums,
+//! pairwise combine, sequential tail, clamp to `[-1, 1]`), so the same
+//! `(query, row)` pair produces the same `f64` bit pattern no matter which
+//! kernel — or which index — scored it. The exactness tests rely on this to
+//! compare index results byte-for-byte against the linear scan on
+//! tie-free corpora. (With *exact* f64 similarity ties — e.g. duplicate
+//! rows — kNN results are still exact up to tie membership, because an
+//! index may prune a subtree whose upper bound equals the current floor;
+//! see the `index` module's exactness contract.)
+
+use std::borrow::Cow;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::index::KnnHeap;
+use crate::metrics::DenseVec;
+
+/// Dot product of two equal-length slices with 4-way unrolled f64
+/// accumulation, clamped to the cosine range `[-1, 1]`.
+///
+/// This is the canonical scalar kernel: [`DenseVec::dot`] and every blocked
+/// kernel in this module reduce rows in exactly this operation order.
+///
+/// # Panics
+/// Panics on dimension mismatch — silently truncating to the shorter length
+/// would hide data corruption.
+#[inline]
+pub fn dot_slice(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(
+        a.len(),
+        b.len(),
+        "dot_slice: dimension mismatch ({} vs {})",
+        a.len(),
+        b.len()
+    );
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] as f64 * b[j] as f64;
+        s1 += a[j + 1] as f64 * b[j + 1] as f64;
+        s2 += a[j + 2] as f64 * b[j + 2] as f64;
+        s3 += a[j + 3] as f64 * b[j + 3] as f64;
+    }
+    let mut sum = (s0 + s1) + (s2 + s3);
+    for j in chunks * 4..n {
+        sum += a[j] as f64 * b[j] as f64;
+    }
+    sum.clamp(-1.0, 1.0)
+}
+
+/// Two rows against one query in a single pass: the query stream is loaded
+/// once and feeds two independent 4-way accumulator sets, replicating
+/// [`dot_slice`]'s reduction order bit-for-bit for each row.
+#[inline]
+fn dot2(q: &[f32], r0: &[f32], r1: &[f32]) -> (f64, f64) {
+    let n = q.len();
+    debug_assert_eq!(r0.len(), n);
+    debug_assert_eq!(r1.len(), n);
+    let (r0, r1) = (&r0[..n], &r1[..n]);
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (mut b0, mut b1, mut b2, mut b3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        let (q0, q1, q2, q3) =
+            (q[j] as f64, q[j + 1] as f64, q[j + 2] as f64, q[j + 3] as f64);
+        a0 += q0 * r0[j] as f64;
+        a1 += q1 * r0[j + 1] as f64;
+        a2 += q2 * r0[j + 2] as f64;
+        a3 += q3 * r0[j + 3] as f64;
+        b0 += q0 * r1[j] as f64;
+        b1 += q1 * r1[j + 1] as f64;
+        b2 += q2 * r1[j + 2] as f64;
+        b3 += q3 * r1[j + 3] as f64;
+    }
+    let mut sa = (a0 + a1) + (a2 + a3);
+    let mut sb = (b0 + b1) + (b2 + b3);
+    for j in chunks * 4..n {
+        sa += q[j] as f64 * r0[j] as f64;
+        sb += q[j] as f64 * r1[j] as f64;
+    }
+    (sa.clamp(-1.0, 1.0), sb.clamp(-1.0, 1.0))
+}
+
+/// L2-normalize one row in place (zero rows stay all-zero), with the same
+/// arithmetic as [`DenseVec::new`] so store-native generators produce
+/// bit-identical rows to their `Vec<DenseVec>` counterparts.
+pub fn normalize_row(row: &mut [f32]) {
+    let norm: f64 = row.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        let inv = (1.0 / norm) as f32;
+        for v in row {
+            *v *= inv;
+        }
+    }
+}
+
+struct StoreInner {
+    /// Row-major `(n, d)` normalized corpus.
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+/// The shared, contiguous, L2-normalized corpus. Cloning is an `Arc` bump;
+/// the float buffer is allocated exactly once per served corpus.
+#[derive(Clone)]
+pub struct CorpusStore {
+    inner: Arc<StoreInner>,
+}
+
+impl CorpusStore {
+    /// Adopt a row-major buffer whose rows are already unit-norm (or
+    /// intentionally raw). Zero-copy: the buffer becomes the store.
+    ///
+    /// # Panics
+    /// Panics if `data.len()` is not a multiple of `d`, or if `d == 0` while
+    /// `data` is non-empty.
+    pub fn from_flat_normalized(data: Vec<f32>, d: usize) -> Self {
+        if d == 0 {
+            assert!(data.is_empty(), "d=0 store must be empty");
+            return CorpusStore { inner: Arc::new(StoreInner { data, n: 0, d: 0 }) };
+        }
+        assert_eq!(data.len() % d, 0, "flat corpus length {} not a multiple of d={d}", data.len());
+        let n = data.len() / d;
+        CorpusStore { inner: Arc::new(StoreInner { data, n, d }) }
+    }
+
+    /// Adopt a row-major buffer of raw rows, L2-normalizing each in place.
+    pub fn from_flat(mut data: Vec<f32>, d: usize) -> Self {
+        if d > 0 {
+            for row in data.chunks_mut(d) {
+                normalize_row(row);
+            }
+        }
+        Self::from_flat_normalized(data, d)
+    }
+
+    /// Pack already-normalized vectors into one contiguous buffer (the one
+    /// copy at ingest; everything downstream aliases it).
+    ///
+    /// # Panics
+    /// Panics if the rows do not all share one dimension.
+    pub fn from_rows(rows: Vec<DenseVec>) -> Self {
+        let d = rows.first().map(|v| v.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), d, "row {i} has dimension {} != {d}", row.len());
+            data.extend_from_slice(row.as_slice());
+        }
+        Self::from_flat_normalized(data, d)
+    }
+
+    /// Number of corpus rows.
+    pub fn len(&self) -> usize {
+        self.inner.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.n == 0
+    }
+
+    /// Vector-space dimension (0 for an empty store).
+    pub fn dim(&self) -> usize {
+        self.inner.d
+    }
+
+    /// The whole row-major buffer — directly usable as a PJRT input slab.
+    pub fn flat(&self) -> &[f32] {
+        &self.inner.data
+    }
+
+    /// Row `i` as a borrowed slice (zero-copy).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let d = self.inner.d;
+        &self.inner.data[i * d..(i + 1) * d]
+    }
+
+    /// Row `i` as a typed zero-copy handle.
+    pub fn vec_ref(&self, i: usize) -> VecRef<'_> {
+        VecRef { data: self.row(i) }
+    }
+
+    /// Owned copy of row `i` (query extraction, diagnostics).
+    pub fn vec(&self, i: usize) -> DenseVec {
+        DenseVec::from_normalized(self.row(i).to_vec())
+    }
+
+    /// View over every row.
+    pub fn view(&self) -> CorpusView {
+        self.slice(0..self.len())
+    }
+
+    /// View over a contiguous row range (aliases the buffer; the basis of
+    /// shard partitioning).
+    pub fn slice(&self, rows: Range<usize>) -> CorpusView {
+        assert!(rows.start <= rows.end && rows.end <= self.len(), "slice {rows:?} out of bounds");
+        CorpusView { store: self.clone(), sel: Selection::Rows(rows.start, rows.end) }
+    }
+
+    /// View over an explicit list of row ids (aliases the buffer).
+    ///
+    /// # Panics
+    /// Panics if any id is out of range.
+    pub fn select(&self, ids: Vec<u32>) -> CorpusView {
+        for &id in &ids {
+            assert!((id as usize) < self.len(), "id {id} out of range 0..{}", self.len());
+        }
+        CorpusView { store: self.clone(), sel: Selection::Ids(Arc::new(ids)) }
+    }
+}
+
+impl From<Vec<DenseVec>> for CorpusStore {
+    fn from(rows: Vec<DenseVec>) -> Self {
+        CorpusStore::from_rows(rows)
+    }
+}
+
+/// A borrowed, normalized corpus row.
+#[derive(Clone, Copy)]
+pub struct VecRef<'a> {
+    data: &'a [f32],
+}
+
+impl<'a> VecRef<'a> {
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    pub fn dim(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Cosine similarity to another row (both pre-normalized).
+    pub fn dot(&self, other: VecRef<'_>) -> f64 {
+        dot_slice(self.data, other.data)
+    }
+
+    pub fn to_owned(self) -> DenseVec {
+        DenseVec::from_normalized(self.data.to_vec())
+    }
+}
+
+#[derive(Clone)]
+enum Selection {
+    /// Contiguous store rows `[start, end)`; local id `i` is row `start + i`.
+    Rows(usize, usize),
+    /// Explicit store rows; local id `i` is row `ids[i]`.
+    Ids(Arc<Vec<u32>>),
+}
+
+/// A zero-copy window onto a [`CorpusStore`]: the unit indexes build from,
+/// shards own, and the PJRT runtime feeds from. Local ids `0..len` map to
+/// store rows through the selection.
+#[derive(Clone)]
+pub struct CorpusView {
+    store: CorpusStore,
+    sel: Selection,
+}
+
+impl CorpusView {
+    pub fn len(&self) -> usize {
+        match &self.sel {
+            Selection::Rows(lo, hi) => hi - lo,
+            Selection::Ids(ids) => ids.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    pub fn store(&self) -> &CorpusStore {
+        &self.store
+    }
+
+    /// Store row index backing local id `local`.
+    pub fn store_row(&self, local: u32) -> usize {
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let r = *lo + local as usize;
+                assert!(r < *hi, "local id {local} out of view of {} rows", *hi - *lo);
+                r
+            }
+            Selection::Ids(ids) => ids[local as usize] as usize,
+        }
+    }
+
+    /// Local row `local` as a borrowed slice (zero-copy).
+    pub fn row(&self, local: u32) -> &[f32] {
+        self.store.row(self.store_row(local))
+    }
+
+    pub fn vec_ref(&self, local: u32) -> VecRef<'_> {
+        VecRef { data: self.row(local) }
+    }
+
+    /// Owned copy of local row `local`.
+    pub fn vec(&self, local: u32) -> DenseVec {
+        DenseVec::from_normalized(self.row(local).to_vec())
+    }
+
+    /// The view's rows as one contiguous row-major slab, if the selection is
+    /// a row range — the zero-copy path into the PJRT input buffer.
+    pub fn as_contiguous(&self) -> Option<&[f32]> {
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let d = self.dim();
+                Some(&self.store.flat()[lo * d..hi * d])
+            }
+            Selection::Ids(_) => None,
+        }
+    }
+
+    /// Contiguous slab, gathering through the id list only when the view is
+    /// non-contiguous.
+    pub fn contiguous_or_gather(&self) -> Cow<'_, [f32]> {
+        match self.as_contiguous() {
+            Some(slab) => Cow::Borrowed(slab),
+            None => {
+                let d = self.dim();
+                let mut out = Vec::with_capacity(self.len() * d);
+                for i in 0..self.len() as u32 {
+                    out.extend_from_slice(self.row(i));
+                }
+                Cow::Owned(out)
+            }
+        }
+    }
+
+    /// Sub-view over local rows `[lo, hi)` (engine tiling).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> CorpusView {
+        assert!(lo <= hi && hi <= self.len(), "slice_rows {lo}..{hi} out of {}", self.len());
+        let sel = match &self.sel {
+            Selection::Rows(start, _) => Selection::Rows(start + lo, start + hi),
+            Selection::Ids(ids) => Selection::Ids(Arc::new(ids[lo..hi].to_vec())),
+        };
+        CorpusView { store: self.store.clone(), sel }
+    }
+
+    /// Invoke `f(local_id, sim)` for every row of the view, walking the
+    /// contiguous buffer two rows per `dot2` pass (query streamed once
+    /// per pair), scalar tail for an odd final row.
+    pub fn for_each_sim(&self, q: &[f32], mut f: impl FnMut(u32, f64)) {
+        let d = self.dim();
+        assert_eq!(q.len(), d, "query dimension {} != corpus dimension {d}", q.len());
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let (lo, hi) = (*lo, *hi);
+                let flat = &self.store.flat()[lo * d..hi * d];
+                let n = hi - lo;
+                if d == 0 {
+                    for i in 0..n {
+                        f(i as u32, 0.0);
+                    }
+                    return;
+                }
+                let mut i = 0usize;
+                while i + 2 <= n {
+                    let b = i * d;
+                    let (s0, s1) = dot2(q, &flat[b..b + d], &flat[b + d..b + 2 * d]);
+                    f(i as u32, s0);
+                    f((i + 1) as u32, s1);
+                    i += 2;
+                }
+                if i < n {
+                    f(i as u32, dot_slice(q, &flat[i * d..(i + 1) * d]));
+                }
+            }
+            Selection::Ids(ids) => {
+                self.sim_of_rows(q, ids, |pos, s| f(pos as u32, s));
+            }
+        }
+    }
+
+    /// Invoke `f(position, sim)` for the given **local** ids, in order,
+    /// gathering rows through the selection in blocks.
+    fn sim_of_locals(&self, q: &[f32], locals: &[u32], mut f: impl FnMut(usize, f64)) {
+        let d = self.dim();
+        assert_eq!(q.len(), d, "query dimension {} != corpus dimension {d}", q.len());
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let (lo, hi) = (*lo, *hi);
+                let row = |local: u32| {
+                    let r = lo + local as usize;
+                    assert!(r < hi, "local id {local} out of view");
+                    self.store.row(r)
+                };
+                let mut i = 0usize;
+                while i + 2 <= locals.len() {
+                    let (s0, s1) = dot2(q, row(locals[i]), row(locals[i + 1]));
+                    f(i, s0);
+                    f(i + 1, s1);
+                    i += 2;
+                }
+                if i < locals.len() {
+                    f(i, dot_slice(q, row(locals[i])));
+                }
+            }
+            Selection::Ids(ids) => {
+                // One indirection through the selection, then the row kernel.
+                let rows: Vec<u32> = locals.iter().map(|&l| ids[l as usize]).collect();
+                self.sim_of_rows(q, &rows, f);
+            }
+        }
+    }
+
+    /// `f(position, sim)` over absolute store rows (internal).
+    fn sim_of_rows(&self, q: &[f32], rows: &[u32], mut f: impl FnMut(usize, f64)) {
+        let row = |id: u32| self.store.row(id as usize);
+        let mut i = 0usize;
+        while i + 2 <= rows.len() {
+            let (s0, s1) = dot2(q, row(rows[i]), row(rows[i + 1]));
+            f(i, s0);
+            f(i + 1, s1);
+            i += 2;
+        }
+        if i < rows.len() {
+            f(i, dot_slice(q, row(rows[i])));
+        }
+    }
+
+    /// Blocked batch dot: similarities of `q` to the given local ids,
+    /// replacing `out`'s contents in matching order.
+    pub fn dot_batch(&self, q: &[f32], locals: &[u32], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(locals.len());
+        self.sim_of_locals(q, locals, |_, s| out.push(s));
+    }
+
+    /// Blocked full-view top-k scan: offer every row to `heap`. Returns the
+    /// number of exact similarity evaluations (= the view length).
+    pub fn scan_topk(&self, q: &[f32], heap: &mut KnnHeap) -> u64 {
+        self.for_each_sim(q, |local, s| heap.offer(local, s));
+        self.len() as u64
+    }
+
+    /// Blocked full-view range scan: push every `(local, sim)` with
+    /// `sim >= tau`. Returns the number of exact similarity evaluations.
+    pub fn scan_range(&self, q: &[f32], tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
+        self.for_each_sim(q, |local, s| {
+            if s >= tau {
+                out.push((local, s));
+            }
+        });
+        self.len() as u64
+    }
+
+    /// Blocked id-list top-k scan (leaf buckets). Returns evals.
+    pub fn scan_ids_topk(&self, q: &[f32], locals: &[u32], heap: &mut KnnHeap) -> u64 {
+        self.sim_of_locals(q, locals, |pos, s| heap.offer(locals[pos], s));
+        locals.len() as u64
+    }
+
+    /// Blocked id-list range scan (leaf buckets). Returns evals.
+    pub fn scan_ids_range(
+        &self,
+        q: &[f32],
+        locals: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        self.sim_of_locals(q, locals, |pos, s| {
+            if s >= tau {
+                out.push((locals[pos], s));
+            }
+        });
+        locals.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+
+    fn store_of(n: usize, d: usize, seed: u64) -> (CorpusStore, Vec<DenseVec>) {
+        let rows = uniform_sphere(n, d, seed);
+        (CorpusStore::from_rows(rows.clone()), rows)
+    }
+
+    #[test]
+    fn from_rows_is_contiguous_and_aliased_by_views() {
+        let (store, rows) = store_of(10, 6, 1);
+        assert_eq!(store.len(), 10);
+        assert_eq!(store.dim(), 6);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(store.row(i), r.as_slice());
+        }
+        let v = store.slice(3..7);
+        assert_eq!(v.len(), 4);
+        // Views alias the buffer: same pointers, no copies.
+        assert!(std::ptr::eq(v.row(0), &store.flat()[3 * 6..4 * 6]));
+        assert!(std::ptr::eq(
+            v.as_contiguous().unwrap(),
+            &store.flat()[3 * 6..7 * 6]
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension")]
+    fn from_rows_rejects_ragged_rows() {
+        CorpusStore::from_rows(vec![
+            DenseVec::new(vec![1.0, 0.0]),
+            DenseVec::new(vec![1.0, 0.0, 0.0]),
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn dot_slice_rejects_dim_mismatch() {
+        dot_slice(&[1.0, 0.0], &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn blocked_kernels_match_dot_slice_bitwise() {
+        // Sizes straddling the block and pair boundaries, odd dims for tails.
+        for (n, d) in [(1usize, 3usize), (2, 4), (7, 5), (8, 8), (9, 13), (33, 17)] {
+            let (store, rows) = store_of(n, d, 42 + n as u64);
+            let q = uniform_sphere(1, d, 999).pop().unwrap();
+            let view = store.view();
+            let mut got = Vec::new();
+            view.for_each_sim(q.as_slice(), |local, s| got.push((local, s)));
+            assert_eq!(got.len(), n);
+            for (local, s) in got {
+                let want = dot_slice(q.as_slice(), rows[local as usize].as_slice());
+                assert!(
+                    s == want,
+                    "row {local}: blocked {s:?} != scalar {want:?} (n={n} d={d})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn id_selection_and_dot_batch_match_per_row() {
+        let (store, rows) = store_of(20, 9, 7);
+        let q = uniform_sphere(1, 9, 1000).pop().unwrap();
+        let picked = vec![3u32, 17, 0, 11, 5];
+        let view = store.select(picked.clone());
+        assert!(view.as_contiguous().is_none());
+        let gathered = view.contiguous_or_gather();
+        assert_eq!(gathered.len(), picked.len() * 9);
+
+        // Full-view scan over the id selection.
+        let mut sims = Vec::new();
+        view.for_each_sim(q.as_slice(), |local, s| sims.push((local, s)));
+        for (local, s) in sims {
+            let want = dot_slice(q.as_slice(), rows[picked[local as usize] as usize].as_slice());
+            assert!(s == want);
+        }
+
+        // dot_batch over locals of a row-range view.
+        let range_view = store.slice(2..18);
+        let locals = vec![0u32, 15, 7, 3, 3, 8];
+        let mut out = Vec::new();
+        range_view.dot_batch(q.as_slice(), &locals, &mut out);
+        assert_eq!(out.len(), locals.len());
+        for (pos, &s) in out.iter().enumerate() {
+            let want =
+                dot_slice(q.as_slice(), rows[2 + locals[pos] as usize].as_slice());
+            assert!(s == want);
+        }
+    }
+
+    #[test]
+    fn scan_kernels_filter_and_rank() {
+        let (store, rows) = store_of(50, 8, 3);
+        let view = store.view();
+        let q = rows[4].clone();
+        let mut out = Vec::new();
+        let evals = view.scan_range(q.as_slice(), 0.5, &mut out);
+        assert_eq!(evals, 50);
+        assert!(out.iter().any(|&(id, _)| id == 4));
+        assert!(out.iter().all(|&(_, s)| s >= 0.5));
+
+        let mut heap = KnnHeap::new(5);
+        view.scan_topk(q.as_slice(), &mut heap);
+        let top = heap.into_sorted();
+        assert_eq!(top[0].0, 4);
+        assert!((top[0].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn store_clone_shares_the_buffer() {
+        let (store, _) = store_of(5, 4, 11);
+        let clone = store.clone();
+        assert!(std::ptr::eq(store.flat(), clone.flat()));
+    }
+
+    #[test]
+    fn empty_store_is_usable() {
+        let store = CorpusStore::from_flat_normalized(Vec::new(), 0);
+        assert!(store.is_empty());
+        let view = store.view();
+        assert_eq!(view.len(), 0);
+        assert!(view.as_contiguous().unwrap().is_empty());
+    }
+}

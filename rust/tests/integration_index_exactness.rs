@@ -32,7 +32,7 @@ fn build_all(
 
 fn assert_same_range(
     idx: &dyn SimilarityIndex<DenseVec>,
-    lin: &LinearScan<DenseVec>,
+    lin: &LinearScan<Vec<DenseVec>>,
     q: &DenseVec,
     tau: f64,
     ctx: &str,
@@ -46,7 +46,7 @@ fn assert_same_range(
 
 fn assert_same_knn(
     idx: &dyn SimilarityIndex<DenseVec>,
-    lin: &LinearScan<DenseVec>,
+    lin: &LinearScan<Vec<DenseVec>>,
     q: &DenseVec,
     k: usize,
     ctx: &str,

@@ -16,18 +16,32 @@ fn artifact_dir() -> Option<std::path::PathBuf> {
     }
 }
 
+/// Artifacts present AND an engine that can execute them: on the default
+/// (non-`pjrt`) build `Engine::load` is the always-erroring stub, which must
+/// skip these tests, not fail them. Any *other* load error on a real
+/// `pjrt` build is a regression and still fails loudly.
+fn load_engine() -> Option<Engine> {
+    let dir = artifact_dir()?;
+    match Engine::load(&dir) {
+        Ok(engine) => Some(engine),
+        Err(e) if e.to_string().contains("pjrt") => {
+            eprintln!("skipping: {e}");
+            None
+        }
+        Err(e) => panic!("engine failed to load real artifacts: {e}"),
+    }
+}
+
 #[test]
 fn engine_loads_and_reports_platform() {
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     assert_eq!(engine.platform().to_lowercase(), "cpu");
     assert!(engine.manifest().artifacts.len() >= 3);
 }
 
 #[test]
 fn score_topk_matches_native_scoring() {
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     let corpus = uniform_sphere(1000, 128, 21);
     let queries = uniform_sphere(8, 128, 22);
     let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
@@ -59,8 +73,7 @@ fn score_topk_matches_native_scoring() {
 fn score_topk_respects_valid_n_masking() {
     // Ask for a corpus smaller than the artifact tile: padded rows must
     // never appear among the results.
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     let corpus = uniform_sphere(300, 128, 23);
     let queries = uniform_sphere(4, 128, 24);
     let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
@@ -74,8 +87,7 @@ fn score_topk_respects_valid_n_masking() {
 #[test]
 fn score_topk_pads_smaller_d() {
     // d=64 < artifact d=128: zero-padding features preserves cosine.
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     let corpus = uniform_sphere(500, 64, 25);
     let queries = uniform_sphere(4, 64, 26);
     let qflat: Vec<f32> = queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
@@ -92,8 +104,7 @@ fn score_topk_pads_smaller_d() {
 
 #[test]
 fn pivot_filter_intervals_contain_truth() {
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     let corpus = uniform_sphere(800, 64, 27);
     let pivots = uniform_sphere(16, 64, 28);
     let queries = uniform_sphere(8, 64, 29);
@@ -120,19 +131,29 @@ fn pivot_filter_intervals_contain_truth() {
 #[test]
 fn engine_handle_serves_concurrent_callers() {
     let Some(dir) = artifact_dir() else { return };
-    let handle = std::sync::Arc::new(EngineHandle::spawn(&dir).unwrap());
+    let handle = match EngineHandle::spawn(&dir) {
+        Ok(h) => std::sync::Arc::new(h),
+        Err(e) if e.to_string().contains("pjrt") => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+        Err(e) => panic!("engine handle failed to spawn: {e}"),
+    };
     let corpus = uniform_sphere(256, 128, 30);
-    let cflat: Vec<f32> = corpus.iter().flat_map(|c| c.as_slice().to_vec()).collect();
+    // All callers share one store; each request ships a zero-copy view.
+    let store = simetra::storage::CorpusStore::from_rows(corpus.clone());
     let mut threads = Vec::new();
     for t in 0..4u64 {
         let handle = handle.clone();
-        let cflat = cflat.clone();
+        let view = store.view();
         let corpus = corpus.clone();
         threads.push(std::thread::spawn(move || {
             let queries = uniform_sphere(2, 128, 100 + t);
             let qflat: Vec<f32> =
                 queries.iter().flat_map(|q| q.as_slice().to_vec()).collect();
-            let out = handle.score_topk(qflat, 2, cflat, 256, 128, 3).unwrap();
+            let out = handle
+                .score_topk(std::sync::Arc::new(qflat), 2, view, 3)
+                .unwrap();
             for (qi, q) in queries.iter().enumerate() {
                 let best =
                     corpus.iter().map(|c| q.sim(c)).fold(f64::NEG_INFINITY, f64::max);
@@ -147,12 +168,14 @@ fn engine_handle_serves_concurrent_callers() {
 
 #[test]
 fn errors_are_reported_not_panicked() {
-    let Some(dir) = artifact_dir() else { return };
-    let engine = Engine::load(&dir).unwrap();
+    let Some(engine) = load_engine() else { return };
     // Oversized request: no artifact fits.
-    let err = engine.score_topk(&vec![0.0; 128 * 128], 128, &vec![0.0; 128], 1, 128, 5);
+    let big_q = vec![0.0; 128 * 128];
+    let one_row = vec![0.0; 128];
+    let err = engine.score_topk(&big_q, 128, &one_row, 1, 128, 5);
     assert!(err.is_err());
     // Shape mismatch.
-    let err = engine.score_topk(&vec![0.0; 10], 4, &vec![0.0; 128], 1, 128, 5);
+    let short_q = vec![0.0; 10];
+    let err = engine.score_topk(&short_q, 4, &one_row, 1, 128, 5);
     assert!(err.is_err());
 }

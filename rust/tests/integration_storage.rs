@@ -1,0 +1,177 @@
+//! Storage-backbone guarantees, end to end:
+//!
+//! 1. Every index built from the same `CorpusStore` view returns
+//!    **byte-identical** results to the linear scan over that view — not
+//!    just equal-up-to-ties. This works because every scoring path (scalar
+//!    `dot_slice`, blocked kernels, per-item `DenseVec::dot`) reduces a
+//!    `(query, row)` pair in the same operation order, and the kNN heap
+//!    breaks similarity ties by ascending id regardless of insertion order.
+//!    Scope: holds on tie-free corpora (continuous random data, as swept
+//!    here). With exact f64 similarity ties — duplicate rows — an index may
+//!    prune a subtree whose upper bound equals the kNN floor, so results
+//!    are exact only up to tie membership (the general contract in
+//!    `index/mod.rs`; `degenerate_corpora` in the exactness suite covers it).
+//! 2. Shards alias the store's buffer (pointer-equal slices) instead of
+//!    copying it: one allocation per served corpus, no matter how many
+//!    shards and indexes sit on top.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::router::build_shards;
+use simetra::coordinator::IndexKind;
+use simetra::data::{uniform_sphere, uniform_sphere_store, vmf_mixture_store, VmfSpec};
+use simetra::index::{
+    BallTree, CoverTree, Gnat, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex, VpTree,
+};
+use simetra::metrics::DenseVec;
+use simetra::storage::{CorpusStore, CorpusView};
+use simetra::util::Rng;
+
+fn build_all_on_view(
+    view: &CorpusView,
+    bound: BoundKind,
+) -> Vec<Box<dyn SimilarityIndex<DenseVec>>> {
+    vec![
+        Box::new(VpTree::build(view.clone(), bound, 97)),
+        Box::new(BallTree::build(view.clone(), bound, 8)),
+        Box::new(MTree::build(view.clone(), bound, 8)),
+        Box::new(CoverTree::build(view.clone(), bound)),
+        Box::new(Laesa::build(view.clone(), bound, 12)),
+        Box::new(Gnat::build(view.clone(), bound, 6)),
+    ]
+}
+
+/// Randomized sweep (hand-rolled property test; the offline build has no
+/// proptest): random corpus shapes, bounds, taus and ks — view-built
+/// indexes must agree with the view-built linear scan byte-for-byte.
+#[test]
+fn view_built_indexes_match_linear_byte_identical() {
+    let mut rng = Rng::seed_from_u64(2026);
+    for trial in 0..6u64 {
+        let n = 60 + rng.below(300);
+        let d = 2 + rng.below(40);
+        let store = if trial % 2 == 0 {
+            uniform_sphere_store(n, d, 9000 + trial)
+        } else {
+            vmf_mixture_store(&VmfSpec {
+                n,
+                dim: d,
+                clusters: 1 + rng.below(8),
+                kappa: rng.uniform(0.0, 120.0),
+                seed: 9100 + trial,
+            })
+            .0
+        };
+        let view = store.view();
+        let lin = LinearScan::build(view.clone());
+        let bound = BoundKind::ALL[rng.below(BoundKind::ALL.len())];
+        let ctx = format!("trial={trial} n={n} d={d} bound={}", bound.name());
+        let out_of_corpus = uniform_sphere(2, d, 9900 + trial);
+        for idx in build_all_on_view(&view, bound) {
+            for probe in 0..4 {
+                let q = if probe < 2 {
+                    store.vec(rng.below(n))
+                } else {
+                    out_of_corpus[probe - 2].clone()
+                };
+                let tau = rng.uniform(-0.5, 0.95);
+                let mut s1 = QueryStats::default();
+                let mut s2 = QueryStats::default();
+                assert_eq!(
+                    idx.range(&q, tau, &mut s1),
+                    lin.range(&q, tau, &mut s2),
+                    "range mismatch: {ctx} tau={tau} index={}",
+                    idx.name()
+                );
+                let k = 1 + rng.below(15);
+                assert_eq!(
+                    idx.knn(&q, k, &mut s1),
+                    lin.knn(&q, k, &mut s2),
+                    "knn mismatch: {ctx} k={k} index={}",
+                    idx.name()
+                );
+            }
+        }
+    }
+}
+
+/// View-built indexes must also agree byte-for-byte with indexes built the
+/// old way, from owned `Vec<DenseVec>` clones of the same rows.
+#[test]
+fn view_built_matches_vec_built() {
+    let store = uniform_sphere_store(250, 12, 77);
+    let rows: Vec<DenseVec> = (0..store.len()).map(|i| store.vec(i)).collect();
+    let view_idx = VpTree::build(store.view(), BoundKind::Mult, 5);
+    let vec_idx = VpTree::build(rows.clone(), BoundKind::Mult, 5);
+    for qi in [0usize, 100, 249] {
+        let q = &rows[qi];
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        assert_eq!(view_idx.range(q, 0.3, &mut s1), vec_idx.range(q, 0.3, &mut s2));
+        assert_eq!(view_idx.knn(q, 12, &mut s1), vec_idx.knn(q, 12, &mut s2));
+        // Identical trees (same seed, same sims) do identical work.
+        assert_eq!(s1, s2);
+    }
+}
+
+#[test]
+fn shard_views_alias_the_store_buffer() {
+    let store = uniform_sphere_store(103, 8, 7);
+    let d = store.dim();
+    let shards = build_shards(&store, 4, IndexKind::Vp, BoundKind::Mult, 8);
+    assert_eq!(shards.len(), 4);
+    let mut base = 0usize;
+    for shard in &shards {
+        // Pointer equality: the shard's "matrix" IS a window of the store's
+        // one buffer — nothing was copied for the shard, its index, or its
+        // pivot table's corpus access.
+        assert_eq!(
+            shard.flat_corpus().as_ptr(),
+            store.flat()[base * d..].as_ptr(),
+            "shard at base {base} copied its corpus"
+        );
+        assert_eq!(shard.flat_corpus().len(), shard.len() * d);
+        assert!(std::ptr::eq(
+            shard.view().as_contiguous().unwrap(),
+            &store.flat()[base * d..(base + shard.len()) * d]
+        ));
+        base += shard.len();
+    }
+    assert_eq!(base, 103);
+}
+
+#[test]
+fn engine_tiles_alias_the_store_buffer() {
+    let store = uniform_sphere_store(64, 4, 8);
+    let view = store.slice(16..48);
+    let tile = view.slice_rows(8, 24);
+    // Tiling a shard view for the PJRT engine stays zero-copy.
+    assert!(std::ptr::eq(
+        tile.as_contiguous().unwrap(),
+        &store.flat()[24 * 4..40 * 4]
+    ));
+}
+
+#[test]
+fn store_backed_coordinator_matches_view_linear_scan() {
+    use simetra::coordinator::{Coordinator, CoordinatorConfig};
+    let store = uniform_sphere_store(400, 16, 55);
+    let lin = LinearScan::build(store.view());
+    let coord = Coordinator::new(
+        store.clone(),
+        CoordinatorConfig { n_shards: 3, ..Default::default() },
+    )
+    .unwrap();
+    for qi in [0u32, 199, 399] {
+        let q = store.vec(qi as usize);
+        let (hits, _) = coord.knn(q.as_slice().to_vec(), 7).unwrap();
+        let mut st = QueryStats::default();
+        let want = lin.knn(&q, 7, &mut st);
+        assert_eq!(hits.len(), want.len());
+        for (h, (id, s)) in hits.iter().zip(&want) {
+            assert_eq!(h.id, *id as u64);
+            // The coordinator re-normalizes client vectors on ingest, which
+            // can perturb an already-unit query by one f32 ulp per lane.
+            assert!((h.score - s).abs() < 1e-6);
+        }
+    }
+}
