@@ -1,0 +1,135 @@
+//! End-to-end generational-ingest driver: start a *mutable* coordinator
+//! behind the TCP server, then drive the full lifecycle over the wire —
+//! insert -> query -> delete -> compact -> query — validating every
+//! answer against a client-side shadow of the corpus (exact linear scan,
+//! bit-identical similarities).
+//!
+//!     cargo run --release --example ingest_e2e
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use simetra::coordinator::{server, BatchConfig, Coordinator, CoordinatorConfig};
+use simetra::ingest::IngestConfig;
+use simetra::storage::{dot_slice, normalize_row};
+use simetra::util::Rng;
+
+const DIM: usize = 32;
+const N: usize = 4_000;
+const K: usize = 10;
+
+fn oracle_knn(shadow: &BTreeMap<u64, Vec<f32>>, q: &[f32], k: usize) -> Vec<(u64, f64)> {
+    let mut hits: Vec<(u64, f64)> =
+        shadow.iter().map(|(&id, row)| (id, dot_slice(q, row))).collect();
+    hits.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    hits.truncate(k);
+    hits
+}
+
+/// Fire `K`-NN probes for a sample of shadow rows and require the wire
+/// answer to match the oracle exactly (Rust float formatting round-trips
+/// f64 bit-for-bit, so even the scores must be identical).
+fn verify(
+    client: &mut server::Client,
+    shadow: &BTreeMap<u64, Vec<f32>>,
+    label: &str,
+) -> anyhow::Result<()> {
+    let ids: Vec<u64> = shadow.keys().copied().collect();
+    for probe in ids.iter().step_by(ids.len().max(1) / 20 + 1) {
+        let q = shadow[probe].clone();
+        let want = oracle_knn(shadow, &q, K);
+        let got = client.knn(q, K)?;
+        anyhow::ensure!(got.len() == want.len(), "{label}: hit count mismatch");
+        for (g, (wid, wscore)) in got.iter().zip(&want) {
+            anyhow::ensure!(
+                g.id == *wid && g.score == *wscore,
+                "{label}: probe {probe}: got ({}, {}), want ({wid}, {wscore})",
+                g.id,
+                g.score
+            );
+        }
+    }
+    println!("  verified: wire answers == linear-scan oracle ({label})");
+    Ok(())
+}
+
+fn print_stats(client: &mut server::Client, label: &str) -> anyhow::Result<()> {
+    let s = client.stats()?;
+    println!(
+        "  stats [{label}]: live={} generations={} memtable={} tombstones={} \
+         sealed_bytes={} seals={} compactions={}",
+        s.corpus_size,
+        s.generations,
+        s.memtable_items,
+        s.tombstones,
+        s.sealed_bytes,
+        s.seals,
+        s.compactions
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("ingest e2e: mutable corpus over TCP, n={N} dim={DIM} k={K}");
+    let coord = Coordinator::new_mutable(
+        CoordinatorConfig {
+            batch: BatchConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(200),
+                queue_depth: 1024,
+            },
+            ..CoordinatorConfig::default()
+        },
+        IngestConfig { seal_threshold: 512, ..IngestConfig::new(DIM) },
+    )?;
+    let server_handle = server::serve(coord, "127.0.0.1:0")?;
+    let mut client = server::Client::connect(server_handle.addr())?;
+    let mut rng = Rng::seed_from_u64(7);
+    let mut shadow: BTreeMap<u64, Vec<f32>> = BTreeMap::new();
+
+    // Phase 1: insert.
+    let t0 = Instant::now();
+    for _ in 0..N {
+        let raw: Vec<f32> = (0..DIM).map(|_| rng.normal() as f32).collect();
+        let id = client.insert(raw.clone())?;
+        let mut row = raw;
+        normalize_row(&mut row);
+        shadow.insert(id, row);
+    }
+    println!(
+        "inserted {N} vectors in {:?} ({:.0} inserts/s)",
+        t0.elapsed(),
+        N as f64 / t0.elapsed().as_secs_f64()
+    );
+    print_stats(&mut client, "after insert")?;
+
+    // Phase 2: query while the corpus is spread over memtable + sealed
+    // generations.
+    verify(&mut client, &shadow, "after insert")?;
+
+    // Phase 3: delete 10%.
+    let victims: Vec<u64> = shadow.keys().copied().step_by(10).collect();
+    for id in &victims {
+        anyhow::ensure!(client.delete(*id)?, "id {id} was live");
+        shadow.remove(id);
+    }
+    anyhow::ensure!(!client.delete(victims[0])?, "double delete must be a no-op");
+    println!("deleted {} vectors (tombstoned)", victims.len());
+    print_stats(&mut client, "after delete")?;
+    verify(&mut client, &shadow, "tombstones pending")?;
+
+    // Phase 4: compact — tombstones drop out of the physical layout.
+    client.flush()?;
+    client.compact()?;
+    let stats = client.stats()?;
+    anyhow::ensure!(stats.generations == 1, "compaction left {} generations", stats.generations);
+    anyhow::ensure!(stats.tombstones == 0, "compaction left tombstones");
+    anyhow::ensure!(stats.corpus_size == shadow.len() as u64, "live count drifted");
+    print_stats(&mut client, "after compact")?;
+
+    // Phase 5: query again — ids stable, deleted rows gone, still exact.
+    verify(&mut client, &shadow, "after compact")?;
+
+    println!("ok: insert -> query -> delete -> compact -> query, exact at every step");
+    Ok(())
+}

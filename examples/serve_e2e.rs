@@ -46,7 +46,8 @@ fn run_mode(
             hybrid_pivots: 32,
         },
     )?;
-    let addr = server::serve(coord.clone(), "127.0.0.1:0")?;
+    let server_handle = server::serve(coord.clone(), "127.0.0.1:0")?;
+    let addr = server_handle.addr();
 
     let done = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();

@@ -1,0 +1,122 @@
+//! Churn bench: kNN latency/QPS under ~10% concurrent write traffic vs
+//! the identical corpus served statically (one sealed generation, no
+//! writers), plus an exactness check (recall must be 1.0) at quiesce.
+//!
+//!     cargo bench --bench ingest_churn
+//!     SIMETRA_BENCH_QUICK=1 cargo bench --bench ingest_churn   # small sizes
+//!
+//! Reported through `util::bench::Measurement` like every other bench.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use simetra::coordinator::IndexKind;
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::metrics::DenseVec;
+use simetra::storage::dot_slice;
+use simetra::util::bench::{bench, black_box, report, BenchConfig};
+use simetra::util::Rng;
+
+const K: usize = 10;
+
+fn ingest_cfg(d: usize) -> IngestConfig {
+    IngestConfig {
+        index: IndexKind::Vp,
+        seal_threshold: 1024,
+        max_generations: 6,
+        maintenance_interval: Duration::from_micros(500),
+        ..IngestConfig::new(d)
+    }
+}
+
+/// Fraction of the true top-k (by brute force over the corpus's own
+/// snapshot) that the ingest query path returns. Exactness means 1.0.
+fn recall_at_quiesce(corpus: &IngestCorpus, queries: &[DenseVec]) -> f64 {
+    let snap = corpus.snapshot();
+    let mut found = 0usize;
+    let mut wanted = 0usize;
+    for q in queries {
+        let mut truth: Vec<(u64, f64)> = Vec::new();
+        snap.for_each_live_row(|id, row| truth.push((id, dot_slice(q.as_slice(), row))));
+        truth.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        truth.truncate(K);
+        let (got, _) = corpus.knn(q, K);
+        wanted += truth.len();
+        found += truth.iter().filter(|t| got.contains(t)).count();
+    }
+    found as f64 / wanted.max(1) as f64
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
+    let (n, d) = if quick { (5_000, 32) } else { (50_000, 64) };
+    println!("== ingest churn: n={n} d={d} k={K} ==");
+
+    let store = uniform_sphere_store(n, d, 71);
+    let queries = uniform_sphere(64, d, 72);
+
+    // Baseline: the same corpus as one sealed generation, no write traffic.
+    let static_corpus = IngestCorpus::with_initial(ingest_cfg(d), Some(store.clone())).unwrap();
+    let mut qi = 0usize;
+    let m_static = bench(&cfg, &format!("static knn n{n}"), 1, || {
+        qi = (qi + 1) % queries.len();
+        black_box(static_corpus.knn(&queries[qi], K))
+    });
+    report(&m_static);
+
+    // Churn: a writer thread interleaves inserts and deletes (~10% write
+    // traffic by op count at serving rates) while the bench measures the
+    // very same query loop.
+    let churn = Arc::new(IngestCorpus::with_initial(ingest_cfg(d), Some(store)).unwrap());
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let churn = churn.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(99);
+            let mut live: Vec<u64> = (0..n as u64).collect();
+            let mut writes = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for _ in 0..8 {
+                    let raw: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+                    live.push(churn.insert(raw).unwrap());
+                }
+                for _ in 0..2 {
+                    if live.len() > 1 {
+                        let id = live.swap_remove(rng.below(live.len()));
+                        churn.delete(id);
+                    }
+                }
+                writes += 10;
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            writes
+        })
+    };
+    let mut qj = 0usize;
+    let m_churn = bench(&cfg, &format!("churn knn n{n} (10% writes)"), 1, || {
+        qj = (qj + 1) % queries.len();
+        black_box(churn.knn(&queries[qj], K))
+    });
+    report(&m_churn);
+    stop.store(true, Ordering::Relaxed);
+    let writes = writer.join().unwrap();
+
+    // Quiesce and check exactness survived.
+    churn.flush();
+    churn.compact();
+    let recall = recall_at_quiesce(&churn, &queries[..16.min(queries.len())]);
+    let st = churn.stats();
+    println!(
+        "    -> churn/static latency: {:.2}x | {writes} writes applied | \
+         recall@{K} at quiesce = {recall:.3} | final: live={} generations={} seals={}",
+        m_churn.mean_ns / m_static.mean_ns,
+        st.live,
+        st.generations,
+        st.seals
+    );
+    assert!((recall - 1.0).abs() < f64::EPSILON, "recall degraded: {recall}");
+}

@@ -1,10 +1,14 @@
-//! Lock-free serving metrics: counters + a fixed-bucket latency histogram.
+//! Lock-free serving metrics: counters + a fixed-bucket latency histogram,
+//! plus the ingest gauges (generations, memtable, tombstones, sealed
+//! bytes) when the coordinator serves a mutable corpus.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::ingest::IngestStats;
+
 use super::protocol::StatsSnapshot;
 
-/// Exponential histogram buckets in microseconds: 1us .. ~17s.
+/// Exponential histogram buckets in microseconds: sub-1us .. ~17s.
 const BUCKETS: usize = 48;
 
 /// Serving metrics, cheap enough for the per-request hot path.
@@ -35,10 +39,14 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Bucket edges `[0, 1, 2, 4, 8, ...)`: bucket 0 holds exactly 0us
+    /// (sub-microsecond ops), bucket `i >= 1` holds `[2^(i-1), 2^i)`.
     #[inline]
     fn bucket_of(us: u64) -> usize {
-        // One bucket per octave: bucket i holds [2^(i-1), 2^i).
-        ((64 - (us + 1).leading_zeros()) as usize).min(BUCKETS - 1)
+        // Bit width of `us`: 0 -> 0, 1 -> 1, [2,4) -> 2, [4,8) -> 3, ...
+        // (The old `us + 1` form shifted everything up one bucket and made
+        // bucket 0 unreachable.)
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
     }
 
     pub fn record(&self, us: u64) {
@@ -59,8 +67,8 @@ impl LatencyHistogram {
         for (i, &c) in counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                // Upper edge of bucket i.
-                return 1u64 << i.min(63);
+                // Upper edge of bucket i (bucket 0 holds only 0us).
+                return if i == 0 { 0 } else { 1u64 << i.min(63) };
             }
         }
         self.max_us.load(Ordering::Relaxed)
@@ -72,7 +80,16 @@ impl Metrics {
         self.latency.record(us);
     }
 
-    pub fn snapshot(&self, corpus_size: u64, shards: u64) -> StatsSnapshot {
+    /// Point-in-time snapshot. `ingest` carries the mutable-corpus gauges
+    /// and counters when the coordinator serves one (`None` for the
+    /// build-once path: those fields report zero).
+    pub fn snapshot(
+        &self,
+        corpus_size: u64,
+        shards: u64,
+        ingest: Option<&IngestStats>,
+    ) -> StatsSnapshot {
+        let ing = ingest.copied().unwrap_or_default();
         StatsSnapshot {
             queries: self.queries.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -84,14 +101,50 @@ impl Metrics {
             pruned: self.pruned.load(Ordering::Relaxed),
             latency_us_p50: self.latency.percentile(0.50),
             latency_us_p99: self.latency.percentile(0.99),
-            latency_us_max: self.latency.max_us.load(Ordering::Relaxed),
+            latency_us_max: self.max_latency_us(),
+            generations: ing.generations,
+            memtable_items: ing.memtable_items,
+            tombstones: ing.tombstones,
+            sealed_bytes: ing.sealed_bytes,
+            inserts: ing.inserts,
+            deletes: ing.deletes,
+            seals: ing.seals,
+            compactions: ing.compactions,
         }
+    }
+
+    fn max_latency_us(&self) -> u64 {
+        self.latency.max_us.load(Ordering::Relaxed)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bucket_edges_are_pinned() {
+        // Edges [0, 1, 2, 4, 8, ...): bucket_of(0) must hit bucket 0 —
+        // the old `us + 1` form returned 1 and made bucket 0 unreachable.
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 1);
+        assert_eq!(LatencyHistogram::bucket_of(2), 2);
+        assert_eq!(LatencyHistogram::bucket_of(3), 2);
+        assert_eq!(LatencyHistogram::bucket_of(4), 3);
+        assert_eq!(LatencyHistogram::bucket_of(7), 3);
+        assert_eq!(LatencyHistogram::bucket_of(8), 4);
+        assert_eq!(LatencyHistogram::bucket_of(1023), 10);
+        assert_eq!(LatencyHistogram::bucket_of(1024), 11);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn sub_microsecond_ops_land_in_bucket_zero() {
+        let h = LatencyHistogram::default();
+        h.record(0);
+        assert_eq!(h.percentile(0.5), 0);
+        assert_eq!(h.buckets[0].load(Ordering::Relaxed), 1);
+    }
 
     #[test]
     fn histogram_percentiles_are_monotone() {
@@ -114,14 +167,35 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_reflects_counters() {
+    fn snapshot_reflects_counters_and_ingest_gauges() {
         let m = Metrics::default();
         m.queries.fetch_add(3, Ordering::Relaxed);
         m.record_latency_us(120);
-        let s = m.snapshot(100, 2);
+        let s = m.snapshot(100, 2, None);
         assert_eq!(s.queries, 3);
         assert_eq!(s.corpus_size, 100);
         assert_eq!(s.shards, 2);
         assert!(s.latency_us_max >= 120);
+        assert_eq!(s.generations, 0);
+
+        let ing = IngestStats {
+            live: 90,
+            memtable_items: 7,
+            generations: 3,
+            tombstones: 2,
+            sealed_bytes: 4096,
+            inserts: 100,
+            deletes: 10,
+            seals: 4,
+            compactions: 1,
+        };
+        let s = m.snapshot(ing.live, 1, Some(&ing));
+        assert_eq!(s.corpus_size, 90);
+        assert_eq!(s.generations, 3);
+        assert_eq!(s.memtable_items, 7);
+        assert_eq!(s.tombstones, 2);
+        assert_eq!(s.sealed_bytes, 4096);
+        assert_eq!(s.seals, 4);
+        assert_eq!(s.compactions, 1);
     }
 }

@@ -35,6 +35,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::bounds::BoundKind;
+use crate::ingest::{IngestConfig, IngestCorpus};
 use crate::metrics::DenseVec;
 use crate::runtime::EngineHandle;
 use crate::storage::CorpusStore;
@@ -115,6 +116,10 @@ fn spawn_shard_worker(shard: Arc<Shard>) -> ShardWorker {
 pub struct Coordinator {
     submitter: Arc<BatchSubmitter<Query, QueryResult>>,
     metrics: Arc<Metrics>,
+    /// Present for mutable corpora (built with [`Coordinator::new_mutable`]):
+    /// queries fan out across its generations instead of static shards, and
+    /// the insert/delete/flush/compact methods route here.
+    ingest: Option<Arc<IngestCorpus>>,
     corpus_size: u64,
     corpus_dim: usize,
     n_shards: u64,
@@ -166,19 +171,114 @@ impl Coordinator {
         Ok(Coordinator {
             submitter: Arc::new(submitter),
             metrics,
+            ingest: None,
             corpus_size,
             corpus_dim,
             n_shards,
         })
     }
 
+    /// Build a serving engine over an empty *mutable* generational corpus
+    /// (see the `ingest` module / ADR-002): `insert`/`delete`/`flush`/
+    /// `compact` become available, and every query runs against the
+    /// atomically published snapshot — exact, and never blocked by the
+    /// sealer/compactor.
+    pub fn new_mutable(config: CoordinatorConfig, ingest_cfg: IngestConfig) -> Result<Self> {
+        Self::new_mutable_with(None, config, ingest_cfg)
+    }
+
+    /// Like [`Coordinator::new_mutable`], seeded with an existing store as
+    /// generation 0 (ids `0..initial.len()`).
+    ///
+    /// `config.index` and `config.bound` are the source of truth for the
+    /// per-generation index, overriding the corresponding [`IngestConfig`]
+    /// fields — one knob for static and mutable serving alike.
+    pub fn new_mutable_with(
+        initial: Option<CorpusStore>,
+        config: CoordinatorConfig,
+        ingest_cfg: IngestConfig,
+    ) -> Result<Self> {
+        if config.mode != ExecMode::Index {
+            anyhow::bail!(
+                "mutable corpora serve through the index path; mode {:?} is build-once",
+                config.mode
+            );
+        }
+        let ingest_cfg = IngestConfig { index: config.index, bound: config.bound, ..ingest_cfg };
+        let corpus_dim = ingest_cfg.dim;
+        let ingest = Arc::new(IngestCorpus::with_initial(ingest_cfg, initial)?);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let ing2 = ingest.clone();
+        let submitter = batcher::spawn_batcher(
+            config.batch.clone(),
+            move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
+                m2.batches.fetch_add(1, Relaxed);
+                execute_batch_ingest(&ing2, &m2, jobs);
+            },
+        );
+        Ok(Coordinator {
+            submitter: Arc::new(submitter),
+            metrics,
+            ingest: Some(ingest),
+            corpus_size: 0,
+            corpus_dim,
+            n_shards: 1,
+        })
+    }
+
+    fn ingest_handle(&self) -> Result<&Arc<IngestCorpus>> {
+        self.ingest.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "corpus is read-only (built with Coordinator::new); \
+                 use Coordinator::new_mutable for ingest"
+            )
+        })
+    }
+
+    /// Insert a vector into a mutable corpus; returns the assigned id.
+    pub fn insert(&self, vector: Vec<f32>) -> Result<u64> {
+        let ingest = self.ingest_handle()?;
+        self.check_dim(&vector)?;
+        ingest.insert(vector)
+    }
+
+    /// Tombstone an id in a mutable corpus; returns whether it was live.
+    pub fn delete(&self, id: u64) -> Result<bool> {
+        Ok(self.ingest_handle()?.delete(id))
+    }
+
+    /// Seal the memtable into a generation now.
+    pub fn flush(&self) -> Result<()> {
+        self.ingest_handle()?.flush();
+        Ok(())
+    }
+
+    /// Seal, then merge all generations, dropping tombstoned rows.
+    pub fn compact(&self) -> Result<()> {
+        self.ingest_handle()?.compact();
+        Ok(())
+    }
+
+    /// Live (visible) item count: the static corpus size, or the mutable
+    /// corpus's current snapshot count.
+    pub fn live_items(&self) -> u64 {
+        match &self.ingest {
+            Some(ingest) => ingest.stats().live,
+            None => self.corpus_size,
+        }
+    }
+
     /// Reject wrong-dimension client vectors up front: the strict dot
     /// kernels treat a dimension mismatch deep inside a shard worker as a
-    /// bug (panic), so malformed input must never get that far.
+    /// bug (panic), so malformed input must never get that far. Mutable
+    /// corpora fix the dimension at construction, so it is enforced even
+    /// while the corpus is empty.
     fn check_dim(&self, vector: &[f32]) -> Result<()> {
-        if self.corpus_size > 0 && vector.len() != self.corpus_dim {
+        let enforce = self.ingest.is_some() || self.corpus_size > 0;
+        if enforce && vector.len() != self.corpus_dim {
             anyhow::bail!(
-                "query dimension {} does not match corpus dimension {}",
+                "vector dimension {} does not match corpus dimension {}",
                 vector.len(),
                 self.corpus_dim
             );
@@ -221,7 +321,31 @@ impl Coordinator {
     }
 
     pub fn stats(&self) -> StatsSnapshot {
-        self.metrics.snapshot(self.corpus_size, self.n_shards)
+        let ingest = self.ingest.as_ref().map(|i| i.stats());
+        let corpus_size = match &ingest {
+            Some(s) => s.live,
+            None => self.corpus_size,
+        };
+        self.metrics.snapshot(corpus_size, self.n_shards, ingest.as_ref())
+    }
+}
+
+/// Execute one batch against the mutable corpus: each query runs over the
+/// atomically published generation snapshot (no shard scatter — the
+/// generation fan-out happens inside the snapshot).
+fn execute_batch_ingest(
+    ingest: &IngestCorpus,
+    metrics: &Metrics,
+    jobs: Vec<batcher::Job<Query, QueryResult>>,
+) {
+    for job in jobs {
+        let (hits, evals) = match &job.query {
+            Query::Knn { vector, k } => ingest.knn(&DenseVec::new(vector.clone()), *k),
+            Query::Range { vector, tau } => ingest.range(&DenseVec::new(vector.clone()), *tau),
+        };
+        metrics.sim_evals.fetch_add(evals, Relaxed);
+        let hits: Vec<Hit> = hits.into_iter().map(|(id, score)| Hit { id, score }).collect();
+        let _ = job.reply.send(Ok((hits, evals)));
     }
 }
 
@@ -462,6 +586,46 @@ mod tests {
         // The coordinator still works afterwards.
         let (hits, _) = coord.knn(store.vec(0).as_slice().to_vec(), 1).unwrap();
         assert_eq!(hits[0].id, 0);
+    }
+
+    #[test]
+    fn mutable_coordinator_serves_the_ingest_lifecycle() {
+        let coord = Coordinator::new_mutable(
+            CoordinatorConfig::default(),
+            crate::ingest::IngestConfig {
+                seal_threshold: 32,
+                background: false,
+                ..crate::ingest::IngestConfig::new(8)
+            },
+        )
+        .unwrap();
+        let pts = uniform_sphere(100, 8, 105);
+        for p in &pts {
+            coord.insert(p.as_slice().to_vec()).unwrap();
+        }
+        let (hits, _) = coord.knn(pts[11].as_slice().to_vec(), 3).unwrap();
+        assert_eq!(hits[0].id, 11);
+        assert!(coord.delete(11).unwrap());
+        assert!(!coord.delete(11).unwrap());
+        let (hits, _) = coord.knn(pts[11].as_slice().to_vec(), 3).unwrap();
+        assert_ne!(hits[0].id, 11);
+        coord.flush().unwrap();
+        coord.compact().unwrap();
+        assert_eq!(coord.live_items(), 99);
+        let stats = coord.stats();
+        assert_eq!(stats.corpus_size, 99);
+        assert_eq!(stats.generations, 1);
+        assert_eq!(stats.tombstones, 0);
+        assert_eq!(stats.inserts, 100);
+        assert_eq!(stats.deletes, 1);
+        // Wrong-dimension inserts and queries fail cleanly, even though
+        // the mutable corpus started out empty.
+        assert!(coord.insert(vec![1.0; 5]).is_err());
+        assert!(coord.knn(vec![1.0; 5], 2).is_err());
+        // Build-once coordinators reject mutations.
+        let fixed = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+        let err = fixed.insert(vec![0.0; 8]);
+        assert!(err.unwrap_err().to_string().contains("read-only"));
     }
 
     #[test]

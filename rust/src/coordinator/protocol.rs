@@ -15,6 +15,15 @@ pub enum Request {
     Knn { vector: Vec<f32>, k: usize },
     /// All items with `sim >= tau`.
     Range { vector: Vec<f32>, tau: f64 },
+    /// Insert a vector into a mutable corpus; the reply carries the
+    /// assigned id.
+    Insert { vector: Vec<f32> },
+    /// Tombstone an id in a mutable corpus.
+    Delete { id: u64 },
+    /// Seal the memtable into a generation now.
+    Flush,
+    /// Seal, then merge all generations (dropping tombstoned rows).
+    Compact,
     /// Server + query statistics.
     Stats,
     /// Health check.
@@ -34,6 +43,16 @@ impl Request {
                 ("vector", Json::arr_f32(vector.iter().copied())),
                 ("tau", Json::Num(*tau)),
             ]),
+            Request::Insert { vector } => Json::obj(vec![
+                ("op", Json::Str("insert".into())),
+                ("vector", Json::arr_f32(vector.iter().copied())),
+            ]),
+            Request::Delete { id } => Json::obj(vec![
+                ("op", Json::Str("delete".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            Request::Flush => Json::obj(vec![("op", Json::Str("flush".into()))]),
+            Request::Compact => Json::obj(vec![("op", Json::Str("compact".into()))]),
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
         }
@@ -49,6 +68,10 @@ impl Request {
                 vector: v.req("vector")?.as_f32_vec()?,
                 tau: v.req("tau")?.as_f64()?,
             },
+            "insert" => Request::Insert { vector: v.req("vector")?.as_f32_vec()? },
+            "delete" => Request::Delete { id: v.req("id")?.as_usize()? as u64 },
+            "flush" => Request::Flush,
+            "compact" => Request::Compact,
             "stats" => Request::Stats,
             "ping" => Request::Ping,
             other => bail!("unknown op '{other}'"),
@@ -75,6 +98,13 @@ pub enum Response {
         /// Exact similarity evaluations spent on this query (pruning power).
         sim_evals: u64,
     },
+    /// Reply to `insert`: the assigned global id.
+    Inserted { id: u64 },
+    /// Reply to `delete`: whether the id was live (deleting an unknown or
+    /// already-deleted id is a no-op, not an error).
+    Deleted { existed: bool },
+    /// Acknowledgement of `flush` / `compact`.
+    Done,
     Stats(StatsSnapshot),
     Pong,
     Error { message: String },
@@ -100,6 +130,15 @@ impl Response {
                 ),
                 ("sim_evals", Json::Num(*sim_evals as f64)),
             ]),
+            Response::Inserted { id } => Json::obj(vec![
+                ("status", Json::Str("inserted".into())),
+                ("id", Json::Num(*id as f64)),
+            ]),
+            Response::Deleted { existed } => Json::obj(vec![
+                ("status", Json::Str("deleted".into())),
+                ("existed", Json::Bool(*existed)),
+            ]),
+            Response::Done => Json::obj(vec![("status", Json::Str("done".into()))]),
             Response::Stats(s) => Json::obj(vec![
                 ("status", Json::Str("stats".into())),
                 ("queries", Json::Num(s.queries as f64)),
@@ -113,6 +152,14 @@ impl Response {
                 ("latency_us_p50", Json::Num(s.latency_us_p50 as f64)),
                 ("latency_us_p99", Json::Num(s.latency_us_p99 as f64)),
                 ("latency_us_max", Json::Num(s.latency_us_max as f64)),
+                ("generations", Json::Num(s.generations as f64)),
+                ("memtable_items", Json::Num(s.memtable_items as f64)),
+                ("tombstones", Json::Num(s.tombstones as f64)),
+                ("sealed_bytes", Json::Num(s.sealed_bytes as f64)),
+                ("inserts", Json::Num(s.inserts as f64)),
+                ("deletes", Json::Num(s.deletes as f64)),
+                ("seals", Json::Num(s.seals as f64)),
+                ("compactions", Json::Num(s.compactions as f64)),
             ]),
             Response::Pong => Json::obj(vec![("status", Json::Str("pong".into()))]),
             Response::Error { message } => Json::obj(vec![
@@ -138,6 +185,9 @@ impl Response {
                     .collect::<Result<_>>()?,
                 sim_evals: v.req("sim_evals")?.as_f64()? as u64,
             },
+            "inserted" => Response::Inserted { id: v.req("id")?.as_usize()? as u64 },
+            "deleted" => Response::Deleted { existed: v.req("existed")?.as_bool()? },
+            "done" => Response::Done,
             "stats" => {
                 let g = |key: &str| -> Result<u64> { Ok(v.req(key)?.as_f64()? as u64) };
                 Response::Stats(StatsSnapshot {
@@ -152,6 +202,14 @@ impl Response {
                     latency_us_p50: g("latency_us_p50")?,
                     latency_us_p99: g("latency_us_p99")?,
                     latency_us_max: g("latency_us_max")?,
+                    generations: g("generations")?,
+                    memtable_items: g("memtable_items")?,
+                    tombstones: g("tombstones")?,
+                    sealed_bytes: g("sealed_bytes")?,
+                    inserts: g("inserts")?,
+                    deletes: g("deletes")?,
+                    seals: g("seals")?,
+                    compactions: g("compactions")?,
                 })
             }
             "pong" => Response::Pong,
@@ -180,6 +238,17 @@ pub struct StatsSnapshot {
     pub latency_us_p50: u64,
     pub latency_us_p99: u64,
     pub latency_us_max: u64,
+    /// Ingest gauges (zero for build-once corpora): sealed generations,
+    /// staged memtable rows, unresolved tombstones, sealed vector bytes.
+    pub generations: u64,
+    pub memtable_items: u64,
+    pub tombstones: u64,
+    pub sealed_bytes: u64,
+    /// Ingest lifetime counters (zero for build-once corpora).
+    pub inserts: u64,
+    pub deletes: u64,
+    pub seals: u64,
+    pub compactions: u64,
 }
 
 #[cfg(test)]
@@ -191,6 +260,10 @@ mod tests {
         let reqs = vec![
             Request::Knn { vector: vec![1.0, 2.0], k: 5 },
             Request::Range { vector: vec![-0.5], tau: 0.25 },
+            Request::Insert { vector: vec![0.25, -1.5, 0.0] },
+            Request::Delete { id: 123_456 },
+            Request::Flush,
+            Request::Compact,
             Request::Stats,
             Request::Ping,
         ];
@@ -204,7 +277,23 @@ mod tests {
     fn response_round_trips() {
         let resps = vec![
             Response::Ok { hits: vec![Hit { id: 3, score: 0.9 }], sim_evals: 17 },
-            Response::Stats(StatsSnapshot { queries: 5, corpus_size: 100, ..Default::default() }),
+            Response::Inserted { id: 42 },
+            Response::Deleted { existed: true },
+            Response::Deleted { existed: false },
+            Response::Done,
+            Response::Stats(StatsSnapshot {
+                queries: 5,
+                corpus_size: 100,
+                generations: 3,
+                memtable_items: 17,
+                tombstones: 2,
+                sealed_bytes: 8192,
+                inserts: 120,
+                deletes: 4,
+                seals: 6,
+                compactions: 1,
+                ..Default::default()
+            }),
             Response::Pong,
             Response::Error { message: "boom".into() },
         ];
@@ -215,8 +304,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_op() {
+    fn rejects_unknown_op_and_missing_fields() {
         assert!(Request::parse(r#"{"op": "explode"}"#).is_err());
         assert!(Request::parse(r#"{"vector": []}"#).is_err());
+        assert!(Request::parse(r#"{"op": "insert"}"#).is_err());
+        assert!(Request::parse(r#"{"op": "delete"}"#).is_err());
+        assert!(Request::parse(r#"{"op": "delete", "id": -3}"#).is_err());
+        assert!(Request::parse(r#"{"op": "insert", "vector": [NaN]}"#).is_err());
     }
 }

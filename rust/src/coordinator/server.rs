@@ -1,23 +1,83 @@
 //! TCP front end: newline-delimited JSON requests, thread-per-connection,
-//! plus a typed blocking client.
+//! a shutdown handle, plus a typed blocking client.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::protocol::{Hit, Request, Response};
+use super::protocol::{Hit, Request, Response, StatsSnapshot};
 use super::Coordinator;
 
-/// Serve a coordinator on `addr` on a background thread; returns the bound
-/// address (useful with port 0). The listener runs until process exit.
-pub fn serve(coordinator: Coordinator, addr: &str) -> Result<SocketAddr> {
+/// A running TCP server: the bound address plus a shutdown handle.
+///
+/// [`ServeHandle::stop`] (also called on drop) closes the listener and
+/// joins the accept thread, so tests and examples that bind port 0 tear
+/// down cleanly instead of leaking an accept thread until process exit.
+#[must_use = "dropping the handle stops the server"]
+pub struct ServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Close the listener and join the accept thread. Idempotent.
+    /// Established connections keep their per-connection threads until the
+    /// peer disconnects; no new connections are accepted.
+    pub fn stop(&mut self) {
+        if let Some(handle) = self.accept.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Wake the blocking accept with a loopback connection (a
+            // 0.0.0.0 / :: bind is not connectable everywhere). If the
+            // wake cannot land, leave the accept thread parked instead of
+            // blocking this thread on the join forever.
+            let mut wake = self.addr;
+            match wake.ip() {
+                IpAddr::V4(ip) if ip.is_unspecified() => {
+                    wake.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+                }
+                IpAddr::V6(ip) if ip.is_unspecified() => {
+                    wake.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+                }
+                _ => {}
+            }
+            if TcpStream::connect_timeout(&wake, Duration::from_secs(1)).is_ok() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Serve a coordinator on `addr` on a background thread; returns a
+/// [`ServeHandle`] carrying the bound address and the shutdown control.
+pub fn serve(coordinator: Coordinator, addr: &str) -> Result<ServeHandle> {
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
-    std::thread::Builder::new()
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let accept = std::thread::Builder::new()
         .name("simetra-accept".into())
         .spawn(move || {
             for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
                 match stream {
                     Ok(socket) => {
                         let coord = coordinator.clone();
@@ -38,9 +98,10 @@ pub fn serve(coordinator: Coordinator, addr: &str) -> Result<SocketAddr> {
                     }
                 }
             }
+            // The listener drops here, closing the socket.
         })
         .context("spawn accept thread")?;
-    Ok(local)
+    Ok(ServeHandle { addr: local, stop, accept: Some(accept) })
 }
 
 fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
@@ -73,6 +134,22 @@ fn dispatch(coord: &Coordinator, req: Request) -> Response {
         },
         Request::Range { vector, tau } => match coord.range(vector, tau) {
             Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+        Request::Insert { vector } => match coord.insert(vector) {
+            Ok(id) => Response::Inserted { id },
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+        Request::Delete { id } => match coord.delete(id) {
+            Ok(existed) => Response::Deleted { existed },
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+        Request::Flush => match coord.flush() {
+            Ok(()) => Response::Done,
+            Err(e) => Response::Error { message: e.to_string() },
+        },
+        Request::Compact => match coord.compact() {
+            Ok(()) => Response::Done,
             Err(e) => Response::Error { message: e.to_string() },
         },
     }
@@ -116,6 +193,48 @@ impl Client {
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
+
+    /// Insert a vector into a mutable corpus; returns the assigned id.
+    pub fn insert(&mut self, vector: Vec<f32>) -> Result<u64> {
+        match self.request(&Request::Insert { vector })? {
+            Response::Inserted { id } => Ok(id),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Tombstone an id; returns whether it was live.
+    pub fn delete(&mut self, id: u64) -> Result<bool> {
+        match self.request(&Request::Delete { id })? {
+            Response::Deleted { existed } => Ok(existed),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        match self.request(&Request::Flush)? {
+            Response::Done => Ok(()),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    pub fn compact(&mut self) -> Result<()> {
+        match self.request(&Request::Compact)? {
+            Response::Done => Ok(()),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<StatsSnapshot> {
+        match self.request(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -128,8 +247,8 @@ mod tests {
     fn serve_and_query_over_tcp() {
         let pts = uniform_sphere(200, 8, 111);
         let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
-        let addr = serve(coord, "127.0.0.1:0").unwrap();
-        let mut client = Client::connect(addr).unwrap();
+        let server = serve(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
 
         match client.request(&Request::Ping).unwrap() {
             Response::Pong => {}
@@ -159,7 +278,8 @@ mod tests {
     fn multiple_concurrent_clients() {
         let pts = uniform_sphere(100, 8, 112);
         let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
-        let addr = serve(coord, "127.0.0.1:0").unwrap();
+        let server = serve(coord, "127.0.0.1:0").unwrap();
+        let addr = server.addr();
         let mut handles = Vec::new();
         for c in 0..8usize {
             let pts = pts.clone();
@@ -175,5 +295,30 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn stop_closes_listener_and_joins_accept_thread() {
+        let pts = uniform_sphere(50, 8, 113);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let mut server = serve(coord, "127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        {
+            let mut client = Client::connect(addr).unwrap();
+            match client.request(&Request::Ping).unwrap() {
+                Response::Pong => {}
+                other => panic!("{other:?}"),
+            }
+        }
+        server.stop();
+        server.stop(); // idempotent
+        assert!(TcpStream::connect(addr).is_err(), "listener still accepting after stop()");
+        // Mutations against a build-once coordinator fail cleanly.
+        let coord2 = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+        let server2 = serve(coord2, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(server2.addr()).unwrap();
+        let err = client.insert(vec![0.0; 8]);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("read-only"));
     }
 }

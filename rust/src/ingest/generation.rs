@@ -1,0 +1,272 @@
+//! The units of the generational corpus: the mutable staging
+//! [`MemTable`], immutable sealed [`Generation`]s, and the published
+//! [`GenerationSet`] snapshot that queries fan out over.
+//!
+//! Everything in this module is immutable once constructed — mutation in
+//! the ingest layer means building a new snapshot (sharing unchanged parts
+//! by `Arc`) and publishing it with one pointer swap. That is what keeps
+//! the read path lock-free and the exactness argument simple: a query sees
+//! exactly one consistent logical corpus, scored by the same kernels the
+//! linear-scan oracle uses.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::bounds::BoundKind;
+use crate::coordinator::IndexKind;
+use crate::index::{KnnHeap, QueryStats, SimilarityIndex};
+use crate::metrics::DenseVec;
+use crate::storage::CorpusStore;
+
+/// Sort global hits in descending similarity with the crate-wide tie
+/// order (similarity desc, id asc) — the same total order the linear
+/// scan, the shard merge, and [`KnnHeap`] use.
+fn sort_hits(hits: &mut Vec<(u64, f64)>) {
+    hits.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+}
+
+/// The staging buffer: freshly inserted (normalized) rows awaiting a
+/// seal. Copy-on-write — every insert publishes a fresh `MemTable` whose
+/// store holds one more row. The copy is bounded by the seal threshold,
+/// so it stays small; in exchange the read path gets a plain immutable
+/// [`CorpusStore`] it can scan with the existing blocked kernels.
+#[derive(Clone)]
+pub struct MemTable {
+    /// Global id of staged row 0; staged ids are `base .. base + len`.
+    base: u64,
+    store: CorpusStore,
+}
+
+impl MemTable {
+    /// An empty memtable whose next staged row will get global id `base`.
+    pub fn empty(dim: usize, base: u64) -> MemTable {
+        MemTable { base, store: CorpusStore::from_flat_normalized(Vec::new(), dim) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    pub fn store(&self) -> &CorpusStore {
+        &self.store
+    }
+
+    /// A new memtable with `row` (already normalized) appended.
+    pub fn with_row(&self, row: &[f32]) -> MemTable {
+        let d = self.store.dim();
+        assert_eq!(row.len(), d, "memtable row dimension {} != {d}", row.len());
+        let mut flat = Vec::with_capacity(self.store.flat().len() + d);
+        flat.extend_from_slice(self.store.flat());
+        flat.extend_from_slice(row);
+        MemTable { base: self.base, store: CorpusStore::from_flat_normalized(flat, d) }
+    }
+}
+
+/// An immutable sealed generation: a contiguous [`CorpusStore`] of
+/// surviving rows, the global id of each row, and a similarity index
+/// built over the store through the ordinary [`IndexKind`] machinery.
+pub struct Generation {
+    /// `ids[local] = global id`, strictly ascending (seals and compactions
+    /// both emit rows in ascending-id order).
+    ids: Vec<u64>,
+    store: CorpusStore,
+    index: Box<dyn SimilarityIndex<DenseVec>>,
+}
+
+impl Generation {
+    /// Build a generation over `store` rows carrying the given global ids.
+    pub fn build(
+        ids: Vec<u64>,
+        store: CorpusStore,
+        kind: IndexKind,
+        bound: BoundKind,
+    ) -> Generation {
+        debug_assert_eq!(ids.len(), store.len());
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "generation ids not ascending");
+        let index = kind.build(store.view(), bound);
+        Generation { ids, store, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[u64] {
+        &self.ids
+    }
+
+    pub fn store(&self) -> &CorpusStore {
+        &self.store
+    }
+
+    /// Whether this generation physically holds `id` (tombstones are
+    /// tracked in the [`GenerationSet`], not here).
+    pub fn contains(&self, id: u64) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    /// Bytes of sealed vector data.
+    pub fn bytes(&self) -> u64 {
+        (self.store.flat().len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// One immutable snapshot of the whole mutable corpus: the memtable, the
+/// sealed generations, and the tombstone set. Published atomically by the
+/// ingest layer; queries run entirely against one snapshot.
+pub struct GenerationSet {
+    memtable: MemTable,
+    generations: Vec<Arc<Generation>>,
+    /// Deleted-but-not-yet-dropped global ids. Every member refers to
+    /// exactly one physical row (memtable or sealed); seals and
+    /// compactions drop those rows and remove the resolved ids.
+    tombstones: Arc<HashSet<u64>>,
+}
+
+impl GenerationSet {
+    pub(crate) fn new(
+        memtable: MemTable,
+        generations: Vec<Arc<Generation>>,
+        tombstones: Arc<HashSet<u64>>,
+    ) -> GenerationSet {
+        GenerationSet { memtable, generations, tombstones }
+    }
+
+    pub fn memtable(&self) -> &MemTable {
+        &self.memtable
+    }
+
+    pub fn generations(&self) -> &[Arc<Generation>] {
+        &self.generations
+    }
+
+    pub fn tombstones(&self) -> &Arc<HashSet<u64>> {
+        &self.tombstones
+    }
+
+    /// Physical rows across memtable and generations (tombstoned included).
+    pub fn physical_rows(&self) -> usize {
+        self.memtable.len() + self.generations.iter().map(|g| g.len()).sum::<usize>()
+    }
+
+    /// Live (visible) items: physical rows minus unresolved tombstones.
+    pub fn live(&self) -> u64 {
+        (self.physical_rows() - self.tombstones.len()) as u64
+    }
+
+    pub fn sealed_bytes(&self) -> u64 {
+        self.generations.iter().map(|g| g.bytes()).sum()
+    }
+
+    /// Whether `id` is currently visible to queries.
+    pub fn contains_live(&self, id: u64) -> bool {
+        if self.tombstones.contains(&id) {
+            return false;
+        }
+        let mt = &self.memtable;
+        if id >= mt.base() && id < mt.base() + mt.len() as u64 {
+            return true;
+        }
+        self.generations.iter().any(|g| g.contains(id))
+    }
+
+    /// Visit every live row as `(global id, normalized row)`: generations
+    /// in publication order (ascending id within each), then the memtable.
+    pub fn for_each_live_row(&self, mut f: impl FnMut(u64, &[f32])) {
+        for g in &self.generations {
+            for (local, &id) in g.ids().iter().enumerate() {
+                if !self.tombstones.contains(&id) {
+                    f(id, g.store().row(local));
+                }
+            }
+        }
+        let mt = &self.memtable;
+        for local in 0..mt.len() {
+            let id = mt.base() + local as u64;
+            if !self.tombstones.contains(&id) {
+                f(id, mt.store().row(local));
+            }
+        }
+    }
+
+    /// Exact kNN across all generations plus the memtable, tombstones
+    /// filtered, merged under (sim desc, id asc). Returns the hits and the
+    /// number of exact similarity evaluations spent.
+    ///
+    /// Exactness: each source is asked for its top `k + |tombstones|`
+    /// candidates; at most `|tombstones|` of any source's candidates can
+    /// be filtered out afterwards, so each source still contributes its
+    /// true top-k survivors and the global merge is exact (the same
+    /// argument, and the same f64 tie caveat, as the per-index contract
+    /// in `index/mod.rs`).
+    pub fn knn(&self, q: &DenseVec, k: usize) -> (Vec<(u64, f64)>, u64) {
+        let k = k.max(1);
+        let fetch = k.saturating_add(self.tombstones.len());
+        let mut all: Vec<(u64, f64)> = Vec::new();
+        let mut evals = 0u64;
+        for g in &self.generations {
+            let mut stats = QueryStats::default();
+            for (local, s) in g.index.knn(q, fetch, &mut stats) {
+                let id = g.ids[local as usize];
+                if !self.tombstones.contains(&id) {
+                    all.push((id, s));
+                }
+            }
+            evals += stats.sim_evals;
+        }
+        if !self.memtable.is_empty() {
+            let mut heap = KnnHeap::new(fetch);
+            evals += self.memtable.store().view().scan_topk(q.as_slice(), &mut heap);
+            for (local, s) in heap.into_sorted() {
+                let id = self.memtable.base() + local as u64;
+                if !self.tombstones.contains(&id) {
+                    all.push((id, s));
+                }
+            }
+        }
+        sort_hits(&mut all);
+        all.truncate(k);
+        (all, evals)
+    }
+
+    /// Exact range query (`sim >= tau`) across all generations plus the
+    /// memtable, tombstones filtered, sorted under (sim desc, id asc).
+    pub fn range(&self, q: &DenseVec, tau: f64) -> (Vec<(u64, f64)>, u64) {
+        let mut all: Vec<(u64, f64)> = Vec::new();
+        let mut evals = 0u64;
+        for g in &self.generations {
+            let mut stats = QueryStats::default();
+            for (local, s) in g.index.range(q, tau, &mut stats) {
+                let id = g.ids[local as usize];
+                if !self.tombstones.contains(&id) {
+                    all.push((id, s));
+                }
+            }
+            evals += stats.sim_evals;
+        }
+        if !self.memtable.is_empty() {
+            let mut hits = Vec::new();
+            evals += self.memtable.store().view().scan_range(q.as_slice(), tau, &mut hits);
+            for (local, s) in hits {
+                let id = self.memtable.base() + local as u64;
+                if !self.tombstones.contains(&id) {
+                    all.push((id, s));
+                }
+            }
+        }
+        sort_hits(&mut all);
+        (all, evals)
+    }
+}

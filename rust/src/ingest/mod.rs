@@ -1,0 +1,647 @@
+//! Generational ingest: lock-free mutable corpora over the
+//! [`CorpusStore`] backbone (ADR-002).
+//!
+//! The static serving stack is build-once; this subsystem makes a served
+//! corpus mutable under traffic without ever locking the scan path. The
+//! layout is LSM-like:
+//!
+//! ```text
+//! insert ──> MemTable (COW staging, exact linear scan)
+//!               │ seal at threshold (background or inline)
+//!               v
+//!          Generation 0..n  (immutable CorpusStore + SimilarityIndex)
+//!               │ compact: merge generations, drop tombstoned rows
+//!               v
+//!          fewer, larger generations
+//! delete ──> tombstone set (filtered at query time, resolved by
+//!            the next seal/compaction that rewrites the row)
+//! ```
+//!
+//! Every mutation builds a fresh [`GenerationSet`] snapshot (sharing
+//! unchanged generations by `Arc`) and publishes it through a
+//! [`SnapshotCell`] — one atomic pointer swap, hazard-pointer
+//! reclamation, no reader locks. Queries fan out across all generations
+//! plus the memtable, merge under the crate-wide (sim desc, id asc)
+//! order, and filter tombstones; results are exactly what a linear scan
+//! over the surviving logical corpus would return (bit-identical
+//! similarities — every path scores through the same kernels).
+//!
+//! Writers (insert/delete/seal/compact) serialize behind one writer lock;
+//! that lock is never taken on the query path.
+
+pub mod generation;
+pub mod swap;
+
+pub use generation::{Generation, GenerationSet, MemTable};
+pub use swap::SnapshotCell;
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::bounds::BoundKind;
+use crate::coordinator::IndexKind;
+use crate::metrics::DenseVec;
+use crate::storage::{normalize_row, CorpusStore};
+
+/// Configuration of a mutable corpus.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Vector-space dimension (fixed for the corpus lifetime).
+    pub dim: usize,
+    /// Index built over each sealed generation.
+    pub index: IndexKind,
+    pub bound: BoundKind,
+    /// Seal the memtable into a generation at this many staged rows.
+    pub seal_threshold: usize,
+    /// Merge the two smallest generations whenever more than this many
+    /// are sealed (background mode; explicit `compact` merges all).
+    pub max_generations: usize,
+    /// Fully compact when this many tombstones are unresolved. Bounds the
+    /// per-delete set copy and the per-query `k + |tombstones|` over-fetch
+    /// under delete-heavy traffic (deletes alone never trigger a seal, so
+    /// without this cap the set would grow until an explicit `compact`).
+    pub max_tombstones: usize,
+    /// Run the sealer/compactor on a background thread. With `false`,
+    /// sealing and merging happen inline on the inserting thread —
+    /// deterministic, which is what the exactness tests want.
+    pub background: bool,
+    /// Poll interval of the background maintenance thread.
+    pub maintenance_interval: Duration,
+}
+
+impl IngestConfig {
+    /// Defaults for a corpus of the given dimension: VP-tree generations
+    /// under the multiplicative bound, sealed every 512 rows, background
+    /// maintenance on.
+    pub fn new(dim: usize) -> IngestConfig {
+        IngestConfig {
+            dim,
+            index: IndexKind::Vp,
+            bound: BoundKind::Mult,
+            seal_threshold: 512,
+            max_generations: 6,
+            max_tombstones: 1024,
+            background: true,
+            maintenance_interval: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Point-in-time ingest gauges and lifetime counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IngestStats {
+    /// Live (visible) items.
+    pub live: u64,
+    pub memtable_items: u64,
+    pub generations: u64,
+    /// Unresolved tombstones (deleted ids whose rows still exist).
+    pub tombstones: u64,
+    /// Bytes of vector data in sealed generations.
+    pub sealed_bytes: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub seals: u64,
+    pub compactions: u64,
+}
+
+/// State owned by the writer lock. A struct (not a bare counter) so the
+/// lock guards the whole read-modify-publish critical section, not just
+/// the id allocation.
+struct WriterState {
+    next_id: u64,
+}
+
+struct Inner {
+    cfg: IngestConfig,
+    cell: SnapshotCell<GenerationSet>,
+    writer: Mutex<WriterState>,
+    inserts: AtomicU64,
+    deletes: AtomicU64,
+    seals: AtomicU64,
+    compactions: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Inner {
+    fn publish(&self, set: GenerationSet) {
+        self.cell.store(Arc::new(set));
+    }
+
+    /// Seal the memtable into a new generation, dropping tombstoned rows
+    /// and resolving their tombstones. Caller holds the writer lock.
+    /// Returns whether anything was published.
+    fn seal_locked(&self, st: &mut WriterState) -> bool {
+        let cur = self.cell.load();
+        let mt = cur.memtable();
+        if mt.is_empty() {
+            return false;
+        }
+        let d = self.cfg.dim;
+        let mut ids = Vec::with_capacity(mt.len());
+        let mut flat = Vec::with_capacity(mt.len() * d);
+        for local in 0..mt.len() {
+            let id = mt.base() + local as u64;
+            if cur.tombstones().contains(&id) {
+                continue;
+            }
+            ids.push(id);
+            flat.extend_from_slice(mt.store().row(local));
+        }
+        let tombstones = if ids.len() == mt.len() {
+            cur.tombstones().clone()
+        } else {
+            // Staged rows tombstoned before the seal are dropped above;
+            // resolve their tombstones here.
+            let lo = mt.base();
+            let hi = mt.base() + mt.len() as u64;
+            let mut kept = HashSet::new();
+            for &id in cur.tombstones().iter() {
+                if id < lo || id >= hi {
+                    kept.insert(id);
+                }
+            }
+            Arc::new(kept)
+        };
+        let mut generations = cur.generations().to_vec();
+        if !ids.is_empty() {
+            let store = CorpusStore::from_flat_normalized(flat, d);
+            generations.push(Arc::new(Generation::build(
+                ids,
+                store,
+                self.cfg.index,
+                self.cfg.bound,
+            )));
+        }
+        let memtable = MemTable::empty(d, st.next_id);
+        self.publish(GenerationSet::new(memtable, generations, tombstones));
+        self.seals.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Merge the picked generations (by position) into one, dropping
+    /// tombstoned rows and resolving their tombstones. Rows are copied
+    /// byte-for-byte — never re-normalized — so similarities stay
+    /// bit-identical across compactions. Caller holds the writer lock.
+    fn compact_locked(&self, pick: &[usize]) -> bool {
+        let cur = self.cell.load();
+        if pick.is_empty() {
+            return false;
+        }
+        let picked: Vec<&Arc<Generation>> = pick.iter().map(|&i| &cur.generations()[i]).collect();
+        // Gather surviving rows in ascending global-id order.
+        let mut rows: Vec<(u64, usize, u32)> = Vec::new();
+        for (pi, g) in picked.iter().enumerate() {
+            for (local, &id) in g.ids().iter().enumerate() {
+                if !cur.tombstones().contains(&id) {
+                    rows.push((id, pi, local as u32));
+                }
+            }
+        }
+        rows.sort_unstable_by_key(|r| r.0);
+        let d = self.cfg.dim;
+        let mut ids = Vec::with_capacity(rows.len());
+        let mut flat = Vec::with_capacity(rows.len() * d);
+        for (id, pi, local) in rows {
+            ids.push(id);
+            flat.extend_from_slice(picked[pi].store().row(local as usize));
+        }
+        let mut kept = HashSet::new();
+        for &id in cur.tombstones().iter() {
+            if !picked.iter().any(|g| g.contains(id)) {
+                kept.insert(id);
+            }
+        }
+        let tombstones = Arc::new(kept);
+        let mut generations: Vec<Arc<Generation>> = Vec::new();
+        for (i, g) in cur.generations().iter().enumerate() {
+            if !pick.contains(&i) {
+                generations.push(g.clone());
+            }
+        }
+        if !ids.is_empty() {
+            let store = CorpusStore::from_flat_normalized(flat, d);
+            generations.push(Arc::new(Generation::build(
+                ids,
+                store,
+                self.cfg.index,
+                self.cfg.bound,
+            )));
+        }
+        self.publish(GenerationSet::new(cur.memtable().clone(), generations, tombstones));
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Merge the two smallest generations (background compaction step).
+    fn merge_smallest_locked(&self) -> bool {
+        let cur = self.cell.load();
+        if cur.generations().len() < 2 {
+            return false;
+        }
+        let mut order: Vec<usize> = (0..cur.generations().len()).collect();
+        order.sort_by_key(|&i| cur.generations()[i].len());
+        self.compact_locked(&order[..2])
+    }
+
+    /// Seal, then rewrite every generation (the explicit-`compact` body;
+    /// also the tombstone-pressure response). Caller holds the writer lock.
+    fn compact_all_locked(&self, st: &mut WriterState) {
+        self.seal_locked(st);
+        let cur = self.cell.load();
+        let all: Vec<usize> = (0..cur.generations().len()).collect();
+        drop(cur);
+        self.compact_locked(&all);
+    }
+}
+
+/// A mutable, generational corpus with a lock-free exact query path.
+///
+/// Dropping the last handle stops and joins the background maintenance
+/// thread (if configured).
+pub struct IngestCorpus {
+    inner: Arc<Inner>,
+    maintenance: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl IngestCorpus {
+    /// An empty mutable corpus.
+    pub fn new(cfg: IngestConfig) -> Result<IngestCorpus> {
+        Self::with_initial(cfg, None)
+    }
+
+    /// A mutable corpus seeded with an existing store as generation 0
+    /// (ids `0..initial.len()`), e.g. to take a build-once deployment
+    /// live-updatable without re-inserting the corpus row by row.
+    pub fn with_initial(cfg: IngestConfig, initial: Option<CorpusStore>) -> Result<IngestCorpus> {
+        if cfg.dim == 0 {
+            bail!("ingest corpus needs dim >= 1");
+        }
+        if cfg.seal_threshold == 0 {
+            bail!("seal_threshold must be >= 1");
+        }
+        let mut generations = Vec::new();
+        let mut next_id = 0u64;
+        if let Some(store) = initial {
+            if !store.is_empty() {
+                if store.dim() != cfg.dim {
+                    bail!("initial store dim {} != configured dim {}", store.dim(), cfg.dim);
+                }
+                let ids: Vec<u64> = (0..store.len() as u64).collect();
+                next_id = store.len() as u64;
+                generations.push(Arc::new(Generation::build(ids, store, cfg.index, cfg.bound)));
+            }
+        }
+        let set = GenerationSet::new(
+            MemTable::empty(cfg.dim, next_id),
+            generations,
+            Arc::new(HashSet::new()),
+        );
+        let inner = Arc::new(Inner {
+            cfg: cfg.clone(),
+            cell: SnapshotCell::new(Arc::new(set)),
+            writer: Mutex::new(WriterState { next_id }),
+            inserts: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            seals: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let maintenance = if cfg.background {
+            let worker = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("simetra-ingest".into())
+                    .spawn(move || maintenance_loop(&worker))
+                    .map_err(|e| anyhow::anyhow!("spawn ingest maintenance: {e}"))?,
+            )
+        } else {
+            None
+        };
+        Ok(IngestCorpus { inner, maintenance: Mutex::new(maintenance) })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.inner.cfg.dim
+    }
+
+    /// Insert a raw vector (L2-normalized on the way in, like every other
+    /// ingest path). Returns the assigned global id. Ids are monotone and
+    /// never reused, and stay stable across seals and compactions.
+    pub fn insert(&self, vector: Vec<f32>) -> Result<u64> {
+        if vector.len() != self.inner.cfg.dim {
+            bail!(
+                "vector dimension {} does not match corpus dimension {}",
+                vector.len(),
+                self.inner.cfg.dim
+            );
+        }
+        if !vector.iter().all(|v| v.is_finite()) {
+            bail!("vector contains a non-finite component");
+        }
+        let mut row = vector;
+        normalize_row(&mut row);
+        let mut st = self.inner.writer.lock().unwrap();
+        let cur = self.inner.cell.load();
+        let id = st.next_id;
+        st.next_id += 1;
+        debug_assert_eq!(id, cur.memtable().base() + cur.memtable().len() as u64);
+        let memtable = cur.memtable().with_row(&row);
+        self.inner.publish(GenerationSet::new(
+            memtable,
+            cur.generations().to_vec(),
+            cur.tombstones().clone(),
+        ));
+        self.inner.inserts.fetch_add(1, Ordering::Relaxed);
+        if !self.inner.cfg.background {
+            // Synchronous mode: maintain inline, deterministically.
+            let snap = self.inner.cell.load();
+            if snap.memtable().len() >= self.inner.cfg.seal_threshold {
+                self.inner.seal_locked(&mut st);
+                let snap = self.inner.cell.load();
+                if snap.generations().len() > self.inner.cfg.max_generations {
+                    self.inner.merge_smallest_locked();
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Tombstone a live id. Returns `false` (a no-op) for unknown,
+    /// already-deleted, or never-assigned ids.
+    pub fn delete(&self, id: u64) -> bool {
+        let mut st = self.inner.writer.lock().unwrap();
+        let cur = self.inner.cell.load();
+        if !cur.contains_live(id) {
+            return false;
+        }
+        let mut set: HashSet<u64> = cur.tombstones().as_ref().clone();
+        set.insert(id);
+        self.inner.publish(GenerationSet::new(
+            cur.memtable().clone(),
+            cur.generations().to_vec(),
+            Arc::new(set),
+        ));
+        self.inner.deletes.fetch_add(1, Ordering::Relaxed);
+        if !self.inner.cfg.background {
+            // Synchronous mode: resolve tombstone pressure inline.
+            let snap = self.inner.cell.load();
+            if snap.tombstones().len() >= self.inner.cfg.max_tombstones {
+                self.inner.compact_all_locked(&mut st);
+            }
+        }
+        true
+    }
+
+    /// Seal the memtable into a generation now (no-op when empty).
+    pub fn flush(&self) {
+        let mut st = self.inner.writer.lock().unwrap();
+        self.inner.seal_locked(&mut st);
+    }
+
+    /// Full compaction: seal the memtable, then rewrite all generations
+    /// into one, dropping every tombstoned row.
+    pub fn compact(&self) {
+        let mut st = self.inner.writer.lock().unwrap();
+        self.inner.compact_all_locked(&mut st);
+    }
+
+    /// Exact kNN over the current snapshot (lock-free).
+    pub fn knn(&self, q: &DenseVec, k: usize) -> (Vec<(u64, f64)>, u64) {
+        self.inner.cell.load().knn(q, k)
+    }
+
+    /// Exact range query over the current snapshot (lock-free).
+    pub fn range(&self, q: &DenseVec, tau: f64) -> (Vec<(u64, f64)>, u64) {
+        self.inner.cell.load().range(q, tau)
+    }
+
+    /// The current published snapshot (lock-free; holding it pins its
+    /// generations and memtable alive, not the corpus).
+    pub fn snapshot(&self) -> Arc<GenerationSet> {
+        self.inner.cell.load()
+    }
+
+    pub fn stats(&self) -> IngestStats {
+        let snap = self.inner.cell.load();
+        IngestStats {
+            live: snap.live(),
+            memtable_items: snap.memtable().len() as u64,
+            generations: snap.generations().len() as u64,
+            tombstones: snap.tombstones().len() as u64,
+            sealed_bytes: snap.sealed_bytes(),
+            inserts: self.inner.inserts.load(Ordering::Relaxed),
+            deletes: self.inner.deletes.load(Ordering::Relaxed),
+            seals: self.inner.seals.load(Ordering::Relaxed),
+            compactions: self.inner.compactions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for IngestCorpus {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.maintenance.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Background sealer/compactor: seal when the memtable crosses the
+/// threshold, merge the two smallest generations when too many pile up,
+/// otherwise sleep. Every action publishes with one atomic swap; queries
+/// in flight keep their snapshots.
+fn maintenance_loop(inner: &Inner) {
+    while !inner.stop.load(Ordering::SeqCst) {
+        let snap = inner.cell.load();
+        let seal_due = snap.memtable().len() >= inner.cfg.seal_threshold;
+        let compact_due = snap.generations().len() > inner.cfg.max_generations;
+        let tombstones_due = snap.tombstones().len() >= inner.cfg.max_tombstones;
+        drop(snap);
+        if seal_due {
+            let mut st = inner.writer.lock().unwrap();
+            inner.seal_locked(&mut st);
+        } else if compact_due {
+            let _st = inner.writer.lock().unwrap();
+            inner.merge_smallest_locked();
+        } else if tombstones_due {
+            let mut st = inner.writer.lock().unwrap();
+            inner.compact_all_locked(&mut st);
+        } else {
+            std::thread::sleep(inner.cfg.maintenance_interval);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{uniform_sphere, uniform_sphere_store};
+    use std::time::Instant;
+
+    fn sync_cfg(dim: usize) -> IngestConfig {
+        IngestConfig {
+            seal_threshold: 16,
+            max_generations: 2,
+            background: false,
+            ..IngestConfig::new(dim)
+        }
+    }
+
+    #[test]
+    fn empty_corpus_answers_empty() {
+        let corpus = IngestCorpus::new(sync_cfg(4)).unwrap();
+        let q = DenseVec::new(vec![1.0, 0.0, 0.0, 0.0]);
+        assert!(corpus.knn(&q, 5).0.is_empty());
+        assert!(corpus.range(&q, 0.0).0.is_empty());
+        assert_eq!(corpus.stats().live, 0);
+    }
+
+    #[test]
+    fn insert_then_knn_finds_self() {
+        let corpus = IngestCorpus::new(sync_cfg(8)).unwrap();
+        let rows = uniform_sphere(40, 8, 5);
+        let mut ids = Vec::new();
+        for r in &rows {
+            ids.push(corpus.insert(r.as_slice().to_vec()).unwrap());
+        }
+        assert_eq!(ids, (0..40u64).collect::<Vec<_>>());
+        // 40 inserts at threshold 16 -> at least two seals happened inline.
+        let st = corpus.stats();
+        assert!(st.seals >= 2, "{st:?}");
+        assert_eq!(st.live, 40);
+        for (i, r) in rows.iter().enumerate().step_by(7) {
+            let (hits, evals) = corpus.knn(r, 3);
+            assert_eq!(hits[0].0, i as u64);
+            assert!((hits[0].1 - 1.0).abs() < 1e-9);
+            assert!(evals > 0);
+        }
+    }
+
+    #[test]
+    fn delete_hides_rows_and_compact_resolves_tombstones() {
+        let corpus = IngestCorpus::new(sync_cfg(8)).unwrap();
+        let rows = uniform_sphere(30, 8, 6);
+        for r in &rows {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        assert!(corpus.delete(3));
+        assert!(!corpus.delete(3), "double delete must be a no-op");
+        assert!(!corpus.delete(999), "unknown id must be a no-op");
+        let (hits, _) = corpus.knn(&rows[3], 1);
+        assert_ne!(hits[0].0, 3, "tombstoned id surfaced");
+        let st = corpus.stats();
+        assert_eq!(st.live, 29);
+        assert_eq!(st.tombstones, 1);
+        corpus.compact();
+        let st = corpus.stats();
+        assert_eq!(st.live, 29);
+        assert_eq!(st.tombstones, 0, "compaction must resolve tombstones");
+        assert_eq!(st.generations, 1);
+        assert_eq!(st.memtable_items, 0);
+        let (hits, _) = corpus.knn(&rows[3], 30);
+        assert_eq!(hits.len(), 29);
+        assert!(hits.iter().all(|&(id, _)| id != 3));
+    }
+
+    #[test]
+    fn tombstone_pressure_triggers_compaction() {
+        let cfg = IngestConfig { max_tombstones: 4, ..sync_cfg(8) };
+        let corpus = IngestCorpus::new(cfg).unwrap();
+        let rows = uniform_sphere(40, 8, 13);
+        for r in &rows {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        for id in 0..10u64 {
+            assert!(corpus.delete(id));
+            // The unresolved set never reaches the cap at rest.
+            assert!(corpus.stats().tombstones < 4, "{:?}", corpus.stats());
+        }
+        assert_eq!(corpus.stats().live, 30);
+        let (hits, _) = corpus.knn(&rows[0], 40);
+        assert_eq!(hits.len(), 30);
+        assert!(hits.iter().all(|&(id, _)| id >= 10));
+    }
+
+    #[test]
+    fn ids_stay_stable_across_compaction() {
+        let corpus = IngestCorpus::new(sync_cfg(8)).unwrap();
+        let rows = uniform_sphere(50, 8, 7);
+        for r in &rows {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        let (before, _) = corpus.knn(&rows[17], 5);
+        corpus.flush();
+        corpus.compact();
+        let (after, _) = corpus.knn(&rows[17], 5);
+        assert_eq!(before, after, "compaction changed visible results");
+        assert_eq!(after[0].0, 17);
+        // New inserts after compaction continue the id sequence.
+        let id = corpus.insert(rows[0].as_slice().to_vec()).unwrap();
+        assert_eq!(id, 50);
+    }
+
+    #[test]
+    fn initial_store_becomes_generation_zero() {
+        let store = uniform_sphere_store(25, 6, 9);
+        let q = store.vec(9);
+        let corpus = IngestCorpus::with_initial(sync_cfg(6), Some(store)).unwrap();
+        let st = corpus.stats();
+        assert_eq!(st.live, 25);
+        assert_eq!(st.generations, 1);
+        let (hits, _) = corpus.knn(&q, 1);
+        assert_eq!(hits[0].0, 9);
+        let id = corpus.insert(q.as_slice().to_vec()).unwrap();
+        assert_eq!(id, 25);
+    }
+
+    #[test]
+    fn rejects_bad_dim_and_non_finite() {
+        let corpus = IngestCorpus::new(sync_cfg(4)).unwrap();
+        assert!(corpus.insert(vec![1.0; 3]).is_err());
+        assert!(corpus.insert(vec![1.0, f32::NAN, 0.0, 0.0]).is_err());
+        assert!(corpus.insert(vec![1.0, f32::INFINITY, 0.0, 0.0]).is_err());
+        assert!(IngestCorpus::new(IngestConfig::new(0)).is_err());
+    }
+
+    #[test]
+    fn background_thread_seals_and_merges() {
+        let cfg = IngestConfig {
+            seal_threshold: 8,
+            max_generations: 2,
+            maintenance_interval: Duration::from_micros(200),
+            ..IngestConfig::new(8)
+        };
+        let corpus = IngestCorpus::new(cfg).unwrap();
+        let rows = uniform_sphere(400, 8, 11);
+        // Feed batches of one seal's worth and wait for the background
+        // thread to drain them; generations pile up past max_generations
+        // and force a merge. (Feeding everything at once could race the
+        // sealer into one big generation and never compact.)
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let mut next = 0usize;
+        loop {
+            let st = corpus.stats();
+            if st.seals >= 1 && st.compactions >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "maintenance never caught up: {st:?}");
+            if st.memtable_items < 8 && next + 8 <= rows.len() {
+                for r in &rows[next..next + 8] {
+                    corpus.insert(r.as_slice().to_vec()).unwrap();
+                }
+                next += 8;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let st = corpus.stats();
+        assert_eq!(st.live, next as u64);
+        let (hits, _) = corpus.knn(&rows[0], 1);
+        assert_eq!(hits[0].0, 0);
+        // Drop joins the maintenance thread (would hang the test otherwise).
+    }
+}

@@ -43,6 +43,23 @@
 //! let docs = zipf_corpus(&ZipfSpec::default());
 //! let index = Laesa::build(docs, BoundKind::Mult, 32);
 //! ```
+//!
+//! Corpora that change under traffic go through the generational `ingest`
+//! subsystem (ADR-002): inserts stage in a memtable, seal into immutable
+//! indexed generations, deletes tombstone, and a background compactor
+//! folds generations together — queries stay exact and never take a lock:
+//!
+//! ```no_run
+//! use simetra::coordinator::{Coordinator, CoordinatorConfig};
+//! use simetra::ingest::IngestConfig;
+//!
+//! let coord =
+//!     Coordinator::new_mutable(CoordinatorConfig::default(), IngestConfig::new(4)).unwrap();
+//! let id = coord.insert(vec![0.1, 0.2, 0.3, 0.4]).unwrap();
+//! let (hits, _) = coord.knn(vec![0.1, 0.2, 0.3, 0.4], 1).unwrap();
+//! assert_eq!(hits[0].id, id);
+//! coord.delete(id).unwrap();
+//! ```
 
 pub mod bounds;
 pub mod cluster;
@@ -50,6 +67,7 @@ pub mod coordinator;
 pub mod data;
 pub mod figures;
 pub mod index;
+pub mod ingest;
 pub mod metrics;
 pub mod runtime;
 pub mod sparse;

@@ -16,6 +16,7 @@ use simetra::coordinator::{
 use simetra::data::{uniform_sphere, vmf_mixture_store, VmfSpec};
 use simetra::figures;
 use simetra::index::QueryStats;
+use simetra::ingest::IngestConfig;
 use simetra::metrics::SimVector;
 use simetra::runtime::Engine;
 
@@ -31,6 +32,8 @@ COMMANDS:
              --kappa 40  --shards 4  --index vp  --bound mult
              --mode index|engine|hybrid  --artifacts artifacts
              --max-batch 32  --max-wait-us 2000
+             --mutable 1  (generational ingest: insert/delete/flush/compact
+                           ops enabled; requires --mode index)
   search     One-shot kNN on a synthetic corpus (sanity/demo)
              --n 10000  --dim 64  --k 10  --index vp  --bound mult
   figures    Regenerate the paper's figures as CSV + summary
@@ -134,29 +137,38 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let max_batch = flags.usize_or("max_batch", 32)?;
     let max_wait_us = flags.usize_or("max_wait_us", 2000)? as u64;
 
+    let mutable = flags.get("mutable").is_some_and(|v| v != "0" && v != "false");
+
     eprintln!("generating corpus: n={n} dim={dim} clusters={clusters} kappa={kappa}");
     // Store-native generation: one contiguous allocation that every shard,
     // index, and PJRT tile aliases.
     let (store, _) = vmf_mixture_store(&VmfSpec { n, dim, clusters, kappa, seed: 42 });
-    eprintln!("building {index:?} shards={shards} bound={} mode={mode:?}", bound.name());
-    let coord = Coordinator::new(
-        store,
-        CoordinatorConfig {
-            n_shards: shards,
-            index,
-            bound,
-            mode,
-            batch: BatchConfig {
-                max_batch,
-                max_wait: std::time::Duration::from_micros(max_wait_us),
-                queue_depth: 4096,
-            },
-            artifact_dir: artifacts,
-            hybrid_pivots: 32,
+    eprintln!(
+        "building {index:?} shards={shards} bound={} mode={mode:?} mutable={mutable}",
+        bound.name()
+    );
+    let config = CoordinatorConfig {
+        n_shards: shards,
+        index,
+        bound,
+        mode,
+        batch: BatchConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+            queue_depth: 4096,
         },
-    )?;
-    let local = server::serve(coord, &addr)?;
-    eprintln!("serving on {local} — press Ctrl-C to stop");
+        artifact_dir: artifacts,
+        hybrid_pivots: 32,
+    };
+    let coord = if mutable {
+        // The generated corpus seeds generation 0; inserts grow from
+        // there. Index and bound carry over from the coordinator config.
+        Coordinator::new_mutable_with(Some(store), config, IngestConfig::new(dim))?
+    } else {
+        Coordinator::new(store, config)?
+    };
+    let server_handle = server::serve(coord, &addr)?;
+    eprintln!("serving on {} — press Ctrl-C to stop", server_handle.addr());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -140,8 +140,8 @@ fn tcp_server_end_to_end_with_engine() {
     let Some(coord) = engine_coordinator(&pts, config(ExecMode::Engine, Some(dir))) else {
         return;
     };
-    let addr = server::serve(coord, "127.0.0.1:0").unwrap();
-    let mut client = server::Client::connect(addr).unwrap();
+    let server_handle = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = server::Client::connect(server_handle.addr()).unwrap();
     let hits = client.knn(pts[42].as_slice().to_vec(), 3).unwrap();
     assert_eq!(hits[0].id, 42);
     match client.request(&Request::Stats).unwrap() {
