@@ -44,6 +44,7 @@ fn run_mode(
             },
             artifact_dir: artifacts,
             hybrid_pivots: 32,
+            kernel: None,
         },
     )?;
     let server_handle = server::serve(coord.clone(), "127.0.0.1:0")?;

@@ -1,0 +1,70 @@
+//! Kernel-backend throughput: scalar vs simd vs i8-quantized scans
+//! (ADR-003) across d in {64, 256, 768} and n in {10k, 100k}, emitting
+//! `BENCH_kernels.json` so the repo accumulates a perf trajectory.
+//!
+//!     cargo bench --bench kernel_backends
+//!     SIMETRA_BENCH_QUICK=1 cargo bench --bench kernel_backends  # small
+//!
+//! Each measurement is a full top-k scan; `mean_ns` is per corpus row, so
+//! `mops` is millions of similarity evaluations per second and
+//! `vectors_per_s` the row-scan rate. The i8 backend's per-row cost
+//! includes its pre-filter plus the exact re-rank of survivors.
+
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::KnnHeap;
+use simetra::storage::KernelKind;
+use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig};
+use simetra::util::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
+    let sizes: &[usize] = if quick { &[10_000] } else { &[10_000, 100_000] };
+    let dims: &[usize] = if quick { &[64, 768] } else { &[64, 256, 768] };
+    let kinds = [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8];
+    let k = 10usize;
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in sizes {
+        for &d in dims {
+            let store = uniform_sphere_store(n, d, 0xbe9f + d as u64);
+            let queries = uniform_sphere(16, d, 0x5eed + d as u64);
+            let mut scalar_ns = f64::NAN;
+            for kind in kinds {
+                // with_kernel builds the i8 sidecar eagerly, so the
+                // one-time O(n*d) quantization pass stays out of the
+                // measurement below.
+                let s = store.clone().with_kernel(kind);
+                let view = s.view();
+                let mut qi = 0usize;
+                let name = format!("scan_topk {} n{n} d{d}", kind.name());
+                let m = bench(&cfg, &name, n as u64, || {
+                    qi = (qi + 1) % queries.len();
+                    let mut heap = KnnHeap::new(k);
+                    view.scan_topk(queries[qi].as_slice(), &mut heap);
+                    black_box(heap.into_sorted())
+                });
+                report(&m);
+                if kind == KernelKind::Scalar {
+                    scalar_ns = m.mean_ns;
+                }
+                let speedup = scalar_ns / m.mean_ns;
+                println!("    -> {:.2}x vs scalar\n", speedup);
+                let mut row = match m.to_json() {
+                    Json::Obj(fields) => fields,
+                    _ => unreachable!("to_json returns an object"),
+                };
+                row.push(("backend".into(), Json::Str(kind.name().into())));
+                row.push(("n".into(), Json::Num(n as f64)));
+                row.push(("d".into(), Json::Num(d as f64)));
+                row.push(("vectors_per_s".into(), Json::Num(1e9 / m.mean_ns)));
+                row.push(("speedup_vs_scalar".into(), Json::Num(speedup)));
+                rows.push(Json::Obj(row));
+            }
+        }
+    }
+
+    let path = std::path::Path::new("BENCH_kernels.json");
+    write_bench_json(path, "kernel_backends", rows).expect("write BENCH_kernels.json");
+    println!("wrote {}", path.display());
+}

@@ -5,6 +5,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::ingest::IngestStats;
+use crate::storage::KernelBackend;
 
 use super::protocol::StatsSnapshot;
 
@@ -82,15 +83,23 @@ impl Metrics {
 
     /// Point-in-time snapshot. `ingest` carries the mutable-corpus gauges
     /// and counters when the coordinator serves one (`None` for the
-    /// build-once path: those fields report zero).
+    /// build-once path: those fields report zero). `kernel` is the corpus's
+    /// active backend: its name and scan/re-rank counters are reported
+    /// alongside the serving metrics.
     pub fn snapshot(
         &self,
         corpus_size: u64,
         shards: u64,
         ingest: Option<&IngestStats>,
+        kernel: &dyn KernelBackend,
     ) -> StatsSnapshot {
         let ing = ingest.copied().unwrap_or_default();
+        let kc = kernel.counters();
         StatsSnapshot {
+            kernel: kernel.kind().name().to_string(),
+            blocked_scan_rows: kc.blocked_scan_rows(),
+            quant_prefilter_rows: kc.quant_prefilter_rows(),
+            quant_rerank_rows: kc.quant_rerank_rows(),
             queries: self.queries.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
@@ -168,13 +177,15 @@ mod tests {
 
     #[test]
     fn snapshot_reflects_counters_and_ingest_gauges() {
+        let kernel = crate::storage::ScalarKernel::default();
         let m = Metrics::default();
         m.queries.fetch_add(3, Ordering::Relaxed);
         m.record_latency_us(120);
-        let s = m.snapshot(100, 2, None);
+        let s = m.snapshot(100, 2, None, &kernel);
         assert_eq!(s.queries, 3);
         assert_eq!(s.corpus_size, 100);
         assert_eq!(s.shards, 2);
+        assert_eq!(s.kernel, "scalar");
         assert!(s.latency_us_max >= 120);
         assert_eq!(s.generations, 0);
 
@@ -189,7 +200,7 @@ mod tests {
             seals: 4,
             compactions: 1,
         };
-        let s = m.snapshot(ing.live, 1, Some(&ing));
+        let s = m.snapshot(ing.live, 1, Some(&ing), &kernel);
         assert_eq!(s.corpus_size, 90);
         assert_eq!(s.generations, 3);
         assert_eq!(s.memtable_items, 7);

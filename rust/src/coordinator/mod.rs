@@ -24,7 +24,7 @@ pub mod shard;
 
 pub use batcher::{BatchConfig, BatchError, BatchSubmitter};
 pub use metrics::Metrics;
-pub use protocol::{Hit, Request, Response, StatsSnapshot};
+pub use protocol::{ConfigSnapshot, Hit, Request, Response, StatsSnapshot};
 pub use shard::{ExecMode, IndexKind, Shard};
 
 use std::path::PathBuf;
@@ -38,7 +38,7 @@ use crate::bounds::BoundKind;
 use crate::ingest::{IngestConfig, IngestCorpus};
 use crate::metrics::DenseVec;
 use crate::runtime::EngineHandle;
-use crate::storage::CorpusStore;
+use crate::storage::{CorpusStore, KernelBackend, KernelKind};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -52,6 +52,10 @@ pub struct CoordinatorConfig {
     pub artifact_dir: Option<PathBuf>,
     /// Pivots per shard for the hybrid path (0 = default).
     pub hybrid_pivots: usize,
+    /// Kernel backend for every scan under this coordinator (ADR-003).
+    /// `None` keeps whatever the store carries — the `SIMETRA_KERNEL` env
+    /// default for freshly built stores.
+    pub kernel: Option<KernelKind>,
 }
 
 impl Default for CoordinatorConfig {
@@ -64,6 +68,7 @@ impl Default for CoordinatorConfig {
             batch: BatchConfig::default(),
             artifact_dir: None,
             hybrid_pivots: 0,
+            kernel: None,
         }
     }
 }
@@ -120,6 +125,10 @@ pub struct Coordinator {
     /// queries fan out across its generations instead of static shards, and
     /// the insert/delete/flush/compact methods route here.
     ingest: Option<Arc<IngestCorpus>>,
+    /// The corpus's kernel backend (shared with every shard view and
+    /// ingest generation): its counters feed [`Coordinator::stats`].
+    kernel: Arc<dyn KernelBackend>,
+    config: Arc<ConfigSnapshot>,
     corpus_size: u64,
     corpus_dim: usize,
     n_shards: u64,
@@ -132,7 +141,16 @@ impl Coordinator {
     /// become views of the one shared buffer) or anything convertible into
     /// one, e.g. a `Vec<DenseVec>`, which is packed into a store first.
     pub fn new(corpus: impl Into<CorpusStore>, config: CoordinatorConfig) -> Result<Self> {
-        let store: CorpusStore = corpus.into();
+        let mut store: CorpusStore = corpus.into();
+        if let Some(kind) = config.kernel {
+            store = store.with_kernel(kind);
+        }
+        // Validate the *effective* backend — explicit selection or the
+        // env-default the store was built with — then build a quantized
+        // sidecar now (startup), not on the first query.
+        store.kernel_kind().validate_dim(store.dim())?;
+        store.warm_quant_sidecar();
+        let kernel = store.kernel().clone();
         let corpus_size = store.len() as u64;
         let corpus_dim = store.dim();
         let hybrid_pivots =
@@ -168,10 +186,20 @@ impl Coordinator {
                 execute_batch(&shards, &workers, engine.as_deref(), &m2, mode, jobs);
             },
         );
+        let snapshot = ConfigSnapshot {
+            kernel: kernel.kind().name().to_string(),
+            index: config.index.name().to_string(),
+            bound: config.bound.name().to_string(),
+            mode: config.mode.name().to_string(),
+            shards: n_shards,
+            mutable: false,
+        };
         Ok(Coordinator {
             submitter: Arc::new(submitter),
             metrics,
             ingest: None,
+            kernel,
+            config: Arc::new(snapshot),
             corpus_size,
             corpus_dim,
             n_shards,
@@ -204,9 +232,15 @@ impl Coordinator {
                 config.mode
             );
         }
-        let ingest_cfg = IngestConfig { index: config.index, bound: config.bound, ..ingest_cfg };
+        let ingest_cfg = IngestConfig {
+            index: config.index,
+            bound: config.bound,
+            kernel: config.kernel.unwrap_or(ingest_cfg.kernel),
+            ..ingest_cfg
+        };
         let corpus_dim = ingest_cfg.dim;
         let ingest = Arc::new(IngestCorpus::with_initial(ingest_cfg, initial)?);
+        let kernel = ingest.kernel().clone();
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let ing2 = ingest.clone();
@@ -217,10 +251,20 @@ impl Coordinator {
                 execute_batch_ingest(&ing2, &m2, jobs);
             },
         );
+        let snapshot = ConfigSnapshot {
+            kernel: kernel.kind().name().to_string(),
+            index: config.index.name().to_string(),
+            bound: config.bound.name().to_string(),
+            mode: config.mode.name().to_string(),
+            shards: 1,
+            mutable: true,
+        };
         Ok(Coordinator {
             submitter: Arc::new(submitter),
             metrics,
             ingest: Some(ingest),
+            kernel,
+            config: Arc::new(snapshot),
             corpus_size: 0,
             corpus_dim,
             n_shards: 1,
@@ -326,7 +370,13 @@ impl Coordinator {
             Some(s) => s.live,
             None => self.corpus_size,
         };
-        self.metrics.snapshot(corpus_size, self.n_shards, ingest.as_ref())
+        self.metrics.snapshot(corpus_size, self.n_shards, ingest.as_ref(), self.kernel.as_ref())
+    }
+
+    /// The serving configuration (active kernel backend, index, bound,
+    /// mode) — fixed at build time, exposed through the wire `config` op.
+    pub fn describe(&self) -> ConfigSnapshot {
+        (*self.config).clone()
     }
 }
 
@@ -626,6 +676,29 @@ mod tests {
         let fixed = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
         let err = fixed.insert(vec![0.0; 8]);
         assert!(err.unwrap_err().to_string().contains("read-only"));
+    }
+
+    #[test]
+    fn kernel_override_is_reported_in_stats_and_config() {
+        let pts = uniform_sphere(120, 8, 106);
+        let coord = Coordinator::new(
+            pts.clone(),
+            CoordinatorConfig {
+                kernel: Some(crate::storage::KernelKind::Simd),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (hits, _) = coord.knn(pts[3].as_slice().to_vec(), 2).unwrap();
+        assert_eq!(hits[0].id, 3);
+        let stats = coord.stats();
+        assert_eq!(stats.kernel, "simd");
+        assert!(stats.blocked_scan_rows > 0, "{stats:?}");
+        let cfg = coord.describe();
+        assert_eq!(cfg.kernel, "simd");
+        assert_eq!(cfg.index, "vp");
+        assert_eq!(cfg.mode, "index");
+        assert!(!cfg.mutable);
     }
 
     #[test]

@@ -26,6 +26,8 @@ pub enum Request {
     Compact,
     /// Server + query statistics.
     Stats,
+    /// Serving configuration (active kernel backend, index, bound, mode).
+    Config,
     /// Health check.
     Ping,
 }
@@ -54,6 +56,7 @@ impl Request {
             Request::Flush => Json::obj(vec![("op", Json::Str("flush".into()))]),
             Request::Compact => Json::obj(vec![("op", Json::Str("compact".into()))]),
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Config => Json::obj(vec![("op", Json::Str("config".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
         }
     }
@@ -73,6 +76,7 @@ impl Request {
             "flush" => Request::Flush,
             "compact" => Request::Compact,
             "stats" => Request::Stats,
+            "config" => Request::Config,
             "ping" => Request::Ping,
             other => bail!("unknown op '{other}'"),
         })
@@ -106,6 +110,7 @@ pub enum Response {
     /// Acknowledgement of `flush` / `compact`.
     Done,
     Stats(StatsSnapshot),
+    Config(ConfigSnapshot),
     Pong,
     Error { message: String },
 }
@@ -139,8 +144,18 @@ impl Response {
                 ("existed", Json::Bool(*existed)),
             ]),
             Response::Done => Json::obj(vec![("status", Json::Str("done".into()))]),
+            Response::Config(c) => Json::obj(vec![
+                ("status", Json::Str("config".into())),
+                ("kernel", Json::Str(c.kernel.clone())),
+                ("index", Json::Str(c.index.clone())),
+                ("bound", Json::Str(c.bound.clone())),
+                ("mode", Json::Str(c.mode.clone())),
+                ("shards", Json::Num(c.shards as f64)),
+                ("mutable", Json::Bool(c.mutable)),
+            ]),
             Response::Stats(s) => Json::obj(vec![
                 ("status", Json::Str("stats".into())),
+                ("kernel", Json::Str(s.kernel.clone())),
                 ("queries", Json::Num(s.queries as f64)),
                 ("batches", Json::Num(s.batches as f64)),
                 ("errors", Json::Num(s.errors as f64)),
@@ -160,6 +175,9 @@ impl Response {
                 ("deletes", Json::Num(s.deletes as f64)),
                 ("seals", Json::Num(s.seals as f64)),
                 ("compactions", Json::Num(s.compactions as f64)),
+                ("blocked_scan_rows", Json::Num(s.blocked_scan_rows as f64)),
+                ("quant_prefilter_rows", Json::Num(s.quant_prefilter_rows as f64)),
+                ("quant_rerank_rows", Json::Num(s.quant_rerank_rows as f64)),
             ]),
             Response::Pong => Json::obj(vec![("status", Json::Str("pong".into()))]),
             Response::Error { message } => Json::obj(vec![
@@ -188,9 +206,18 @@ impl Response {
             "inserted" => Response::Inserted { id: v.req("id")?.as_usize()? as u64 },
             "deleted" => Response::Deleted { existed: v.req("existed")?.as_bool()? },
             "done" => Response::Done,
+            "config" => Response::Config(ConfigSnapshot {
+                kernel: v.req("kernel")?.as_str()?.to_string(),
+                index: v.req("index")?.as_str()?.to_string(),
+                bound: v.req("bound")?.as_str()?.to_string(),
+                mode: v.req("mode")?.as_str()?.to_string(),
+                shards: v.req("shards")?.as_f64()? as u64,
+                mutable: v.req("mutable")?.as_bool()?,
+            }),
             "stats" => {
                 let g = |key: &str| -> Result<u64> { Ok(v.req(key)?.as_f64()? as u64) };
                 Response::Stats(StatsSnapshot {
+                    kernel: v.req("kernel")?.as_str()?.to_string(),
                     queries: g("queries")?,
                     batches: g("batches")?,
                     errors: g("errors")?,
@@ -210,6 +237,9 @@ impl Response {
                     deletes: g("deletes")?,
                     seals: g("seals")?,
                     compactions: g("compactions")?,
+                    blocked_scan_rows: g("blocked_scan_rows")?,
+                    quant_prefilter_rows: g("quant_prefilter_rows")?,
+                    quant_rerank_rows: g("quant_rerank_rows")?,
                 })
             }
             "pong" => Response::Pong,
@@ -223,9 +253,27 @@ impl Response {
     }
 }
 
+/// The serving configuration, fixed at build time (backends and indexes
+/// are immutable once a corpus is serving; see ADR-003).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ConfigSnapshot {
+    /// Active kernel backend ("scalar", "simd", "i8") for the native scan
+    /// paths: index walks, range queries, and hybrid re-scoring. PJRT
+    /// artifact scoring (`mode = "engine"` top-k) reads the f32 buffer
+    /// directly and bypasses the backend.
+    pub kernel: String,
+    pub index: String,
+    pub bound: String,
+    pub mode: String,
+    pub shards: u64,
+    pub mutable: bool,
+}
+
 /// Point-in-time metrics snapshot.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct StatsSnapshot {
+    /// Active kernel backend ("scalar", "simd", "i8").
+    pub kernel: String,
     pub queries: u64,
     pub batches: u64,
     pub errors: u64,
@@ -249,6 +297,12 @@ pub struct StatsSnapshot {
     pub deletes: u64,
     pub seals: u64,
     pub compactions: u64,
+    /// Kernel counters (ADR-003): rows scored exactly by the blocked scan
+    /// entry points, rows screened by the i8 pre-filter, and pre-filter
+    /// survivors re-ranked through the exact kernel.
+    pub blocked_scan_rows: u64,
+    pub quant_prefilter_rows: u64,
+    pub quant_rerank_rows: u64,
 }
 
 #[cfg(test)]
@@ -265,6 +319,7 @@ mod tests {
             Request::Flush,
             Request::Compact,
             Request::Stats,
+            Request::Config,
             Request::Ping,
         ];
         for r in reqs {
@@ -282,6 +337,7 @@ mod tests {
             Response::Deleted { existed: false },
             Response::Done,
             Response::Stats(StatsSnapshot {
+                kernel: "i8".into(),
                 queries: 5,
                 corpus_size: 100,
                 generations: 3,
@@ -292,7 +348,18 @@ mod tests {
                 deletes: 4,
                 seals: 6,
                 compactions: 1,
+                blocked_scan_rows: 4096,
+                quant_prefilter_rows: 2048,
+                quant_rerank_rows: 77,
                 ..Default::default()
+            }),
+            Response::Config(ConfigSnapshot {
+                kernel: "simd".into(),
+                index: "vp".into(),
+                bound: "mult".into(),
+                mode: "index".into(),
+                shards: 4,
+                mutable: true,
             }),
             Response::Pong,
             Response::Error { message: "boom".into() },

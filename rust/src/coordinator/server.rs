@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::protocol::{Hit, Request, Response, StatsSnapshot};
+use super::protocol::{ConfigSnapshot, Hit, Request, Response, StatsSnapshot};
 use super::Coordinator;
 
 /// A running TCP server: the bound address plus a shutdown handle.
@@ -128,6 +128,7 @@ fn dispatch(coord: &Coordinator, req: Request) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Stats => Response::Stats(coord.stats()),
+        Request::Config => Response::Config(coord.describe()),
         Request::Knn { vector, k } => match coord.knn(vector, k.max(1)) {
             Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
             Err(e) => Response::Error { message: e.to_string() },
@@ -235,6 +236,16 @@ impl Client {
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
+
+    /// The server's fixed serving configuration (kernel backend, index,
+    /// bound, mode).
+    pub fn config(&mut self) -> Result<ConfigSnapshot> {
+        match self.request(&Request::Config)? {
+            Response::Config(c) => Ok(c),
+            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +268,12 @@ mod tests {
         let hits = client.knn(pts[3].as_slice().to_vec(), 4).unwrap();
         assert_eq!(hits.len(), 4);
         assert_eq!(hits[0].id, 3);
+        // The config op reports the build-time serving configuration.
+        let cfg = client.config().unwrap();
+        assert_eq!(cfg.index, "vp");
+        assert_eq!(cfg.mode, "index");
+        assert!(!cfg.mutable);
+        assert!(!cfg.kernel.is_empty());
         match client.request(&Request::Stats).unwrap() {
             Response::Stats(s) => {
                 assert_eq!(s.corpus_size, 200);

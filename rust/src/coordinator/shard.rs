@@ -44,6 +44,19 @@ impl IndexKind {
         })
     }
 
+    /// Canonical name (round-trips through [`IndexKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexKind::Linear => "linear",
+            IndexKind::Vp => "vp",
+            IndexKind::Ball => "ball",
+            IndexKind::MTree => "m-tree",
+            IndexKind::Cover => "cover",
+            IndexKind::Laesa => "laesa",
+            IndexKind::Gnat => "gnat",
+        }
+    }
+
     /// Build this index kind over a zero-copy corpus view (the view is an
     /// `Arc`-backed handle; no vector data is cloned).
     pub fn build(
@@ -84,6 +97,15 @@ impl ExecMode {
             "hybrid" => ExecMode::Hybrid,
             _ => return None,
         })
+    }
+
+    /// Canonical name (round-trips through [`ExecMode::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Index => "index",
+            ExecMode::Engine => "engine",
+            ExecMode::Hybrid => "hybrid",
+        }
     }
 }
 

@@ -37,8 +37,12 @@ use crate::storage::CorpusView;
 /// Two implementations exist. `Vec<V>` is the owning per-item path (the
 /// only option for `SparseVec` corpora). [`CorpusView`] is the zero-copy
 /// path: it aliases the shared [`crate::storage::CorpusStore`] buffer and
-/// routes the id-list/full scans through the blocked batch kernels, which
-/// produce bit-identical similarities to the per-item path.
+/// routes the id-list/full scans through the store's pluggable
+/// [`crate::storage::KernelBackend`] (scalar / SIMD / i8-quantized,
+/// ADR-003). Every backend returns scan results byte-identical to the
+/// per-item path — exact backends bit-for-bit per similarity, the
+/// quantized backend exact-after-re-rank — so indexes inherit whichever
+/// backend their corpus carries without code changes here.
 pub trait Corpus: Send + Sync + 'static {
     type Vector: SimVector;
 
@@ -251,6 +255,13 @@ pub struct KnnHeap {
 impl KnnHeap {
     pub fn new(k: usize) -> Self {
         KnnHeap { k: k.max(1), entries: Vec::with_capacity(k + 1) }
+    }
+
+    /// The `k` this heap retains (the backend pre-filters need it to
+    /// compute a certified pruning floor).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
     }
 
     /// Current pruning floor: the k-th best similarity, or -1 (no pruning)

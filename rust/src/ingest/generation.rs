@@ -16,7 +16,7 @@ use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
 use crate::index::{KnnHeap, QueryStats, SimilarityIndex};
 use crate::metrics::DenseVec;
-use crate::storage::CorpusStore;
+use crate::storage::{CorpusStore, KernelBackend};
 
 /// Sort global hits in descending similarity with the crate-wide tie
 /// order (similarity desc, id asc) — the same total order the linear
@@ -38,9 +38,12 @@ pub struct MemTable {
 }
 
 impl MemTable {
-    /// An empty memtable whose next staged row will get global id `base`.
-    pub fn empty(dim: usize, base: u64) -> MemTable {
-        MemTable { base, store: CorpusStore::from_flat_normalized(Vec::new(), dim) }
+    /// An empty memtable whose next staged row will get global id `base`,
+    /// scanning through the given kernel backend (shared with the corpus's
+    /// generations so every scan feeds one set of counters).
+    pub fn empty(dim: usize, base: u64, kernel: &Arc<dyn KernelBackend>) -> MemTable {
+        let store = CorpusStore::from_flat_normalized_with(Vec::new(), dim, kernel.clone());
+        MemTable { base, store }
     }
 
     pub fn len(&self) -> usize {
@@ -59,14 +62,19 @@ impl MemTable {
         &self.store
     }
 
-    /// A new memtable with `row` (already normalized) appended.
+    /// A new memtable with `row` (already normalized) appended, keeping
+    /// the kernel backend. Memtable stores are never sidecar-warmed, so
+    /// under a quantized backend the per-insert rebuild stays a plain copy
+    /// and memtable scans are exact, whatever the memtable's size.
     pub fn with_row(&self, row: &[f32]) -> MemTable {
         let d = self.store.dim();
         assert_eq!(row.len(), d, "memtable row dimension {} != {d}", row.len());
         let mut flat = Vec::with_capacity(self.store.flat().len() + d);
         flat.extend_from_slice(self.store.flat());
         flat.extend_from_slice(row);
-        MemTable { base: self.base, store: CorpusStore::from_flat_normalized(flat, d) }
+        let kernel = self.store.kernel().clone();
+        let store = CorpusStore::from_flat_normalized_with(flat, d, kernel);
+        MemTable { base: self.base, store }
     }
 }
 
@@ -82,15 +90,27 @@ pub struct Generation {
 }
 
 impl Generation {
-    /// Build a generation over `store` rows carrying the given global ids.
+    /// Build a generation over `store` rows carrying the given global ids,
+    /// scanning through the corpus's shared kernel backend. Quantized
+    /// backends build their i8 sidecar here — on the sealer/compactor
+    /// thread, so the first query never pays the O(n*d) quantization pass.
     pub fn build(
         ids: Vec<u64>,
         store: CorpusStore,
         kind: IndexKind,
         bound: BoundKind,
+        kernel: &Arc<dyn KernelBackend>,
     ) -> Generation {
         debug_assert_eq!(ids.len(), store.len());
         debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "generation ids not ascending");
+        // Keep the store's backend when it already is the shared instance
+        // (re-attaching would discard an existing sidecar).
+        let store = if Arc::ptr_eq(store.kernel(), kernel) {
+            store
+        } else {
+            store.with_backend(kernel.clone())
+        };
+        store.warm_quant_sidecar();
         let index = kind.build(store.view(), bound);
         Generation { ids, store, index }
     }

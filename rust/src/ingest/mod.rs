@@ -46,7 +46,9 @@ use anyhow::{bail, Result};
 use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
 use crate::metrics::DenseVec;
-use crate::storage::{normalize_row, CorpusStore};
+use crate::storage::{
+    backend_for, default_kernel, normalize_row, CorpusStore, KernelBackend, KernelKind,
+};
 
 /// Configuration of a mutable corpus.
 #[derive(Debug, Clone)]
@@ -56,11 +58,19 @@ pub struct IngestConfig {
     /// Index built over each sealed generation.
     pub index: IndexKind,
     pub bound: BoundKind,
+    /// Kernel backend every generation and memtable scan goes through
+    /// (ADR-003); one shared instance per corpus.
+    pub kernel: KernelKind,
     /// Seal the memtable into a generation at this many staged rows.
     pub seal_threshold: usize,
-    /// Merge the two smallest generations whenever more than this many
-    /// are sealed (background mode; explicit `compact` merges all).
+    /// Compact when more generations than this are sealed (background
+    /// mode; explicit `compact` merges all). Which generations merge is
+    /// decided by the size-tiered policy ([`pick_tiered_merge`]).
     pub max_generations: usize,
+    /// Size-tiered compaction ratio: generations whose sizes are within
+    /// this factor of their tier's smallest member merge together. Larger
+    /// ratios merge more aggressively; values below 1 behave as 1.
+    pub tier_ratio: f64,
     /// Fully compact when this many tombstones are unresolved. Bounds the
     /// per-delete set copy and the per-query `k + |tombstones|` over-fetch
     /// under delete-heavy traffic (deletes alone never trigger a seal, so
@@ -83,8 +93,10 @@ impl IngestConfig {
             dim,
             index: IndexKind::Vp,
             bound: BoundKind::Mult,
+            kernel: default_kernel(),
             seal_threshold: 512,
             max_generations: 6,
+            tier_ratio: 4.0,
             max_tombstones: 1024,
             background: true,
             maintenance_interval: Duration::from_millis(2),
@@ -118,6 +130,9 @@ struct WriterState {
 
 struct Inner {
     cfg: IngestConfig,
+    /// One backend instance shared by the memtable and every generation,
+    /// so the whole corpus feeds one set of kernel counters.
+    kernel: Arc<dyn KernelBackend>,
     cell: SnapshotCell<GenerationSet>,
     writer: Mutex<WriterState>,
     inserts: AtomicU64,
@@ -169,15 +184,16 @@ impl Inner {
         };
         let mut generations = cur.generations().to_vec();
         if !ids.is_empty() {
-            let store = CorpusStore::from_flat_normalized(flat, d);
+            let store = CorpusStore::from_flat_normalized_with(flat, d, self.kernel.clone());
             generations.push(Arc::new(Generation::build(
                 ids,
                 store,
                 self.cfg.index,
                 self.cfg.bound,
+                &self.kernel,
             )));
         }
-        let memtable = MemTable::empty(d, st.next_id);
+        let memtable = MemTable::empty(d, st.next_id, &self.kernel);
         self.publish(GenerationSet::new(memtable, generations, tombstones));
         self.seals.fetch_add(1, Ordering::Relaxed);
         true
@@ -224,12 +240,13 @@ impl Inner {
             }
         }
         if !ids.is_empty() {
-            let store = CorpusStore::from_flat_normalized(flat, d);
+            let store = CorpusStore::from_flat_normalized_with(flat, d, self.kernel.clone());
             generations.push(Arc::new(Generation::build(
                 ids,
                 store,
                 self.cfg.index,
                 self.cfg.bound,
+                &self.kernel,
             )));
         }
         self.publish(GenerationSet::new(cur.memtable().clone(), generations, tombstones));
@@ -237,15 +254,25 @@ impl Inner {
         true
     }
 
-    /// Merge the two smallest generations (background compaction step).
-    fn merge_smallest_locked(&self) -> bool {
+    /// Background compaction step: merge one size tier of generations
+    /// (see [`pick_tiered_merge`]), falling back to the two smallest when
+    /// the size ladder is too steep for any tier to qualify — generation
+    /// count must still shrink.
+    fn merge_tiered_locked(&self) -> bool {
         let cur = self.cell.load();
         if cur.generations().len() < 2 {
             return false;
         }
-        let mut order: Vec<usize> = (0..cur.generations().len()).collect();
-        order.sort_by_key(|&i| cur.generations()[i].len());
-        self.compact_locked(&order[..2])
+        let sizes: Vec<usize> = cur.generations().iter().map(|g| g.len()).collect();
+        drop(cur);
+        match pick_tiered_merge(&sizes, self.cfg.tier_ratio, 2) {
+            Some(pick) => self.compact_locked(&pick),
+            None => {
+                let mut order: Vec<usize> = (0..sizes.len()).collect();
+                order.sort_by_key(|&i| sizes[i]);
+                self.compact_locked(&order[..2])
+            }
+        }
     }
 
     /// Seal, then rewrite every generation (the explicit-`compact` body;
@@ -284,6 +311,8 @@ impl IngestCorpus {
         if cfg.seal_threshold == 0 {
             bail!("seal_threshold must be >= 1");
         }
+        cfg.kernel.validate_dim(cfg.dim)?;
+        let kernel = backend_for(cfg.kernel);
         let mut generations = Vec::new();
         let mut next_id = 0u64;
         if let Some(store) = initial {
@@ -293,16 +322,23 @@ impl IngestCorpus {
                 }
                 let ids: Vec<u64> = (0..store.len() as u64).collect();
                 next_id = store.len() as u64;
-                generations.push(Arc::new(Generation::build(ids, store, cfg.index, cfg.bound)));
+                generations.push(Arc::new(Generation::build(
+                    ids,
+                    store,
+                    cfg.index,
+                    cfg.bound,
+                    &kernel,
+                )));
             }
         }
         let set = GenerationSet::new(
-            MemTable::empty(cfg.dim, next_id),
+            MemTable::empty(cfg.dim, next_id, &kernel),
             generations,
             Arc::new(HashSet::new()),
         );
         let inner = Arc::new(Inner {
             cfg: cfg.clone(),
+            kernel,
             cell: SnapshotCell::new(Arc::new(set)),
             writer: Mutex::new(WriterState { next_id }),
             inserts: AtomicU64::new(0),
@@ -327,6 +363,12 @@ impl IngestCorpus {
 
     pub fn dim(&self) -> usize {
         self.inner.cfg.dim
+    }
+
+    /// The backend every memtable and generation scan goes through (one
+    /// shared instance; its counters cover the whole corpus).
+    pub fn kernel(&self) -> &Arc<dyn KernelBackend> {
+        &self.inner.kernel
     }
 
     /// Insert a raw vector (L2-normalized on the way in, like every other
@@ -364,7 +406,7 @@ impl IngestCorpus {
                 self.inner.seal_locked(&mut st);
                 let snap = self.inner.cell.load();
                 if snap.generations().len() > self.inner.cfg.max_generations {
-                    self.inner.merge_smallest_locked();
+                    self.inner.merge_tiered_locked();
                 }
             }
         }
@@ -451,8 +493,41 @@ impl Drop for IngestCorpus {
     }
 }
 
+/// Size-tiered compaction policy: which generations (by position in
+/// `sizes`) should merge. Generations are grouped into tiers by walking
+/// them in ascending size; a tier is a maximal run whose members are all
+/// within `ratio` of the tier's smallest. The smallest tier with at least
+/// `min_run` members merges whole — the classic LSM size-tiered shape,
+/// which keeps write amplification O(log n) instead of the two-smallest
+/// policy's repeated rewriting of the big survivor.
+///
+/// Returns `None` when no tier qualifies (e.g. a strictly geometric size
+/// ladder steeper than `ratio`).
+pub fn pick_tiered_merge(sizes: &[usize], ratio: f64, min_run: usize) -> Option<Vec<usize>> {
+    let min_run = min_run.max(2);
+    if sizes.len() < min_run {
+        return None;
+    }
+    let ratio = ratio.max(1.0);
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by_key(|&i| sizes[i]);
+    let mut start = 0usize;
+    while start < order.len() {
+        let floor = sizes[order[start]].max(1) as f64;
+        let mut end = start + 1;
+        while end < order.len() && sizes[order[end]] as f64 <= floor * ratio {
+            end += 1;
+        }
+        if end - start >= min_run {
+            return Some(order[start..end].to_vec());
+        }
+        start = end;
+    }
+    None
+}
+
 /// Background sealer/compactor: seal when the memtable crosses the
-/// threshold, merge the two smallest generations when too many pile up,
+/// threshold, merge one size tier when too many generations pile up,
 /// otherwise sleep. Every action publishes with one atomic swap; queries
 /// in flight keep their snapshots.
 fn maintenance_loop(inner: &Inner) {
@@ -467,7 +542,7 @@ fn maintenance_loop(inner: &Inner) {
             inner.seal_locked(&mut st);
         } else if compact_due {
             let _st = inner.writer.lock().unwrap();
-            inner.merge_smallest_locked();
+            inner.merge_tiered_locked();
         } else if tombstones_due {
             let mut st = inner.writer.lock().unwrap();
             inner.compact_all_locked(&mut st);
@@ -606,6 +681,49 @@ mod tests {
         assert!(corpus.insert(vec![1.0, f32::NAN, 0.0, 0.0]).is_err());
         assert!(corpus.insert(vec![1.0, f32::INFINITY, 0.0, 0.0]).is_err());
         assert!(IngestCorpus::new(IngestConfig::new(0)).is_err());
+    }
+
+    #[test]
+    fn tiered_merge_picks_the_smallest_qualifying_tier() {
+        // Three near-equal small generations and one huge one: the small
+        // tier merges; the huge generation is left alone.
+        let mut pick = pick_tiered_merge(&[100, 90, 10_000, 110], 4.0, 2).unwrap();
+        pick.sort_unstable();
+        assert_eq!(pick, vec![0, 1, 3]);
+        // A geometric ladder steeper than the ratio: no tier qualifies.
+        assert_eq!(pick_tiered_merge(&[1, 10, 100, 1000], 4.0, 2), None);
+        // Equal sizes all land in one tier.
+        let mut all = pick_tiered_merge(&[64, 64, 64], 2.0, 2).unwrap();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+        // The run is anchored at the tier's smallest member, not chained:
+        // 10 and 30 are within ratio 4, 100 is not (100 > 4 * 10 = 40).
+        let mut low = pick_tiered_merge(&[100, 10, 30, 120], 4.0, 2).unwrap();
+        low.sort_unstable();
+        assert_eq!(low, vec![1, 2]);
+        // Too few generations, or min_run not reached.
+        assert_eq!(pick_tiered_merge(&[512], 4.0, 2), None);
+        assert_eq!(pick_tiered_merge(&[8, 9], 4.0, 3), None);
+        // Zero-size generations cannot divide by zero.
+        assert!(pick_tiered_merge(&[0, 0, 5], 4.0, 2).is_some());
+    }
+
+    #[test]
+    fn inline_compaction_is_size_tiered() {
+        // seal_threshold 16, max_generations 2: after the third seal the
+        // three equal-sized generations form one tier and merge together.
+        let corpus = IngestCorpus::new(sync_cfg(8)).unwrap();
+        let rows = uniform_sphere(64, 8, 23);
+        for r in &rows {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        let st = corpus.stats();
+        assert!(st.compactions >= 1, "{st:?}");
+        assert!(st.generations <= 3, "{st:?}");
+        assert_eq!(st.live, 64);
+        // Results stay exact across tiered merges.
+        let (hits, _) = corpus.knn(&rows[17], 3);
+        assert_eq!(hits[0].0, 17);
     }
 
     #[test]

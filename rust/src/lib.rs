@@ -12,7 +12,8 @@
 //! All dense-vector layers sit on one shared `storage::CorpusStore`: a
 //! single contiguous row-major buffer of the normalized corpus, sliced into
 //! zero-copy `CorpusView` handles by indexes, shards, and the PJRT input
-//! path, and scanned with blocked batch kernels.
+//! path, and scanned through pluggable kernel backends (scalar / SIMD /
+//! i8-quantized; ADR-003).
 //!
 //! ## Quick start
 //!
@@ -30,6 +31,25 @@
 //! let hits = index.knn(&q, 10, &mut stats);
 //! assert_eq!(hits[0].0, 0); // a point's own nearest neighbor is itself
 //! println!("similarity computations: {}", stats.sim_evals);
+//! ```
+//!
+//! Scans default to the scalar backend;
+//! [`storage::CorpusStore::with_kernel`] swaps in the SIMD backend
+//! (bit-identical results, AVX-accelerated) or the i8-quantized pre-filter
+//! (byte-identical results after exact re-rank) — indexes built over the
+//! store's views inherit it untouched:
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::uniform_sphere_store;
+//! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::storage::KernelKind;
+//!
+//! let store = uniform_sphere_store(10_000, 64, 42).with_kernel(KernelKind::Simd);
+//! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
+//! let mut stats = simetra::index::QueryStats::default();
+//! let hits = index.knn(&store.vec(0), 10, &mut stats);
+//! assert_eq!(hits[0].0, 0); // same bytes as the scalar backend returns
 //! ```
 //!
 //! Indexes also build from an owning `Vec<V>` for any `SimVector` (the

@@ -19,6 +19,7 @@ use simetra::index::QueryStats;
 use simetra::ingest::IngestConfig;
 use simetra::metrics::SimVector;
 use simetra::runtime::Engine;
+use simetra::storage::KernelKind;
 
 const USAGE: &str = "\
 simetra — exact cosine-similarity search with a triangle inequality
@@ -30,12 +31,15 @@ COMMANDS:
   serve      Serve a synthetic corpus over TCP (JSON lines protocol)
              --addr 127.0.0.1:7878  --n 100000  --dim 128  --clusters 64
              --kappa 40  --shards 4  --index vp  --bound mult
+             --kernel scalar|simd|i8  (scan backend, ADR-003; default:
+                           SIMETRA_KERNEL env var, else scalar)
              --mode index|engine|hybrid  --artifacts artifacts
              --max-batch 32  --max-wait-us 2000
              --mutable 1  (generational ingest: insert/delete/flush/compact
                            ops enabled; requires --mode index)
   search     One-shot kNN on a synthetic corpus (sanity/demo)
              --n 10000  --dim 64  --k 10  --index vp  --bound mult
+             --kernel scalar|simd|i8
   figures    Regenerate the paper's figures as CSV + summary
              --out figures_out  --steps 401
   selfcheck  Verify the PJRT runtime against native rust scoring
@@ -43,6 +47,7 @@ COMMANDS:
 
 INDEXES: linear vp ball m-tree cover laesa gnat
 BOUNDS:  euclidean eucl-lb arccos arccos-fast mult mult-lb1 mult-lb2
+KERNELS: scalar simd i8
 ";
 
 /// Tiny `--key value` flag parser.
@@ -83,6 +88,25 @@ impl Flags {
             None => Ok(default),
         }
     }
+}
+
+fn parse_kernel(flags: &Flags) -> Result<Option<KernelKind>> {
+    match flags.get("kernel") {
+        Some(v) => Ok(Some(
+            KernelKind::parse(v).with_context(|| format!("unknown --kernel '{v}'"))?,
+        )),
+        None => Ok(None),
+    }
+}
+
+/// The backend the command will run: `--kernel` if given, else the
+/// `SIMETRA_KERNEL` env default. Validated against the corpus dimension
+/// up front — a clean error beats the assert backstop inside store
+/// construction.
+fn effective_kernel(kernel: Option<KernelKind>, dim: usize) -> Result<KernelKind> {
+    let effective = kernel.unwrap_or_else(simetra::storage::default_kernel);
+    effective.validate_dim(dim)?;
+    Ok(effective)
 }
 
 pub fn parse_bound(s: &str) -> Result<BoundKind> {
@@ -133,6 +157,8 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         .context("unknown --index")?;
     let bound = parse_bound(&flags.str_or("bound", "mult"))?;
     let mode = ExecMode::parse(&flags.str_or("mode", "index")).context("unknown --mode")?;
+    let kernel = parse_kernel(flags)?;
+    let effective_k = effective_kernel(kernel, dim)?;
     let artifacts = flags.get("artifacts").map(PathBuf::from);
     let max_batch = flags.usize_or("max_batch", 32)?;
     let max_wait_us = flags.usize_or("max_wait_us", 2000)? as u64;
@@ -144,8 +170,9 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     // index, and PJRT tile aliases.
     let (store, _) = vmf_mixture_store(&VmfSpec { n, dim, clusters, kappa, seed: 42 });
     eprintln!(
-        "building {index:?} shards={shards} bound={} mode={mode:?} mutable={mutable}",
-        bound.name()
+        "building {index:?} shards={shards} bound={} mode={mode:?} kernel={} mutable={mutable}",
+        bound.name(),
+        effective_k.name()
     );
     let config = CoordinatorConfig {
         n_shards: shards,
@@ -159,6 +186,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         },
         artifact_dir: artifacts,
         hybrid_pivots: 32,
+        kernel,
     };
     let coord = if mutable {
         // The generated corpus seeds generation 0; inserts grow from
@@ -181,7 +209,12 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     let kind =
         IndexKind::parse(&flags.str_or("index", "vp")).context("unknown --index")?;
     let bound = parse_bound(&flags.str_or("bound", "mult"))?;
+    let kernel = effective_kernel(parse_kernel(flags)?, dim)?;
     let (store, _) = vmf_mixture_store(&VmfSpec { n, dim, clusters: 32, kappa: 50.0, seed: 42 });
+    // Apply the effective kind unconditionally: with_kernel is also the
+    // warm point that builds the i8 sidecar, including when the backend
+    // came from the SIMETRA_KERNEL env default.
+    let store = store.with_kernel(kernel);
     let build0 = std::time::Instant::now();
     let idx = kind.build(store.view(), bound);
     let build_t = build0.elapsed();
@@ -190,7 +223,12 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     let t0 = std::time::Instant::now();
     let hits = idx.knn(&q, k, &mut stats);
     let dt = t0.elapsed();
-    println!("index={} bound={} n={n} dim={dim} (built in {build_t:?})", idx.name(), bound.name());
+    println!(
+        "index={} bound={} kernel={} n={n} dim={dim} (built in {build_t:?})",
+        idx.name(),
+        bound.name(),
+        store.kernel_kind().name()
+    );
     println!(
         "query took {dt:?}; {} sim evals ({:.1}% of corpus), {} pruned",
         stats.sim_evals,

@@ -107,8 +107,7 @@ impl EngineHandle {
                             let n = corpus.len();
                             let d = corpus.dim();
                             let flat = corpus.contiguous_or_gather();
-                            let _ = reply
-                                .send(engine.score_topk(&queries, q, flat.as_ref(), n, d, k));
+                            let _ = reply.send(engine.score_topk(&queries, q, flat, n, d, k));
                         }
                         EngineRequest::PivotFilter { sim_qp, q, sim_pc, p, n, reply } => {
                             let _ = reply.send(engine.pivot_filter(&sim_qp, q, &sim_pc, p, n));

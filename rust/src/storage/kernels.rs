@@ -1,0 +1,1154 @@
+//! Pluggable compute backends for every [`CorpusView`](super::CorpusView)
+//! scan (ADR-003).
+//!
+//! The hot path of the whole system is "score one query against a block of
+//! corpus rows". This module owns that path behind the [`KernelBackend`]
+//! trait with three implementations:
+//!
+//! - [`ScalarKernel`] — the canonical loops ([`dot_slice`] reduction
+//!   order), the default.
+//! - [`SimdKernel`] — AVX kernels that keep **one f64 lane per scalar
+//!   accumulator** (`s0..s3` of the 4-way unroll map to the four lanes of a
+//!   256-bit register, combined in the same `(s0+s1)+(s2+s3)` order), so
+//!   results are *bit-identical* to [`ScalarKernel`]. Runtime CPU
+//!   detection; scalar fallback on non-AVX hardware and non-x86 targets.
+//! - [`QuantizedI8Kernel`] — scans a per-row symmetric i8 [`QuantSidecar`]
+//!   with i32 accumulation as a *pre-filter*, then re-ranks survivors
+//!   through the exact kernel, so final kNN/range results stay
+//!   byte-identical to the exact backends (the certified error bound is
+//!   derived in `interval_of`; see ADR-003 for the proof).
+//!
+//! Backends are selected per [`CorpusStore`](super::CorpusStore)
+//! (`with_kernel` / `with_backend`), default to [`default_kernel`] (the
+//! `SIMETRA_KERNEL` env var, else scalar), and are inherited by every view,
+//! index, shard, and ingest generation built over the store.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, OnceLock};
+
+use crate::index::KnnHeap;
+
+use super::dot_slice;
+
+/// Which backend a store scans with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The canonical scalar loops (the default).
+    Scalar,
+    /// AVX f64-lane kernels, bit-identical to scalar, scalar fallback.
+    Simd,
+    /// i8 pre-filter + exact re-rank; exact results, fewer exact evals.
+    QuantizedI8,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        Some(match s.to_lowercase().as_str() {
+            "scalar" => KernelKind::Scalar,
+            "simd" => KernelKind::Simd,
+            "i8" | "quantized" | "quantized-i8" => KernelKind::QuantizedI8,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Simd => "simd",
+            KernelKind::QuantizedI8 => "i8",
+        }
+    }
+
+    /// Validate a corpus dimension for this backend: the i8 kernel's i32
+    /// accumulator bounds `d` by [`QUANT_MAX_DIM`]. Every config layer
+    /// (CLI, coordinator, ingest) calls this for a clean error; paths that
+    /// skip it degrade to exact scans (no sidecar is warmed) rather than
+    /// panicking.
+    pub fn validate_dim(self, d: usize) -> anyhow::Result<()> {
+        if self == KernelKind::QuantizedI8 && d >= QUANT_MAX_DIM {
+            anyhow::bail!("kernel i8 needs dim < {QUANT_MAX_DIM} (i32 accumulation); got {d}");
+        }
+        Ok(())
+    }
+}
+
+/// Process-wide default backend kind: `SIMETRA_KERNEL` when set (`scalar`,
+/// `simd`, or `i8` — how CI forces the whole test suite through a
+/// backend), scalar otherwise. Read once and cached.
+///
+/// # Panics
+/// Panics on an unparseable `SIMETRA_KERNEL` value — a misconfigured CI
+/// matrix must fail loudly, not silently test the wrong backend.
+pub fn default_kernel() -> KernelKind {
+    static KIND: OnceLock<KernelKind> = OnceLock::new();
+    *KIND.get_or_init(|| match std::env::var("SIMETRA_KERNEL") {
+        Ok(v) => KernelKind::parse(&v)
+            .unwrap_or_else(|| panic!("SIMETRA_KERNEL='{v}' is not scalar|simd|i8")),
+        Err(_) => KernelKind::Scalar,
+    })
+}
+
+/// A fresh backend instance (own counters) of the given kind.
+pub fn backend_for(kind: KernelKind) -> Arc<dyn KernelBackend> {
+    match kind {
+        KernelKind::Scalar => Arc::new(ScalarKernel::default()),
+        KernelKind::Simd => Arc::new(SimdKernel::new()),
+        KernelKind::QuantizedI8 => Arc::new(QuantizedI8Kernel::new()),
+    }
+}
+
+/// Lifetime counters of one backend instance (shared by every store clone
+/// and view that scans through it; surfaced in `StatsSnapshot`).
+#[derive(Debug, Default)]
+pub struct KernelCounters {
+    exact_rows: AtomicU64,
+    quant_rows: AtomicU64,
+    rerank_rows: AtomicU64,
+}
+
+impl KernelCounters {
+    /// Rows scored exactly by the blocked scan entry points.
+    pub fn blocked_scan_rows(&self) -> u64 {
+        self.exact_rows.load(Relaxed)
+    }
+
+    /// Rows screened by the i8 pre-filter.
+    pub fn quant_prefilter_rows(&self) -> u64 {
+        self.quant_rows.load(Relaxed)
+    }
+
+    /// Pre-filter survivors re-ranked through the exact kernel.
+    pub fn quant_rerank_rows(&self) -> u64 {
+        self.rerank_rows.load(Relaxed)
+    }
+}
+
+/// Sink for per-row similarities; invoked in ascending position order.
+pub type SimSink<'a> = &'a mut dyn FnMut(usize, f64);
+
+/// Borrowed store state a scan needs: the flat buffer, the dimension, and
+/// the quantized sidecar when the store carries one.
+#[derive(Clone, Copy)]
+pub struct StoreRef<'a> {
+    pub flat: &'a [f32],
+    pub d: usize,
+    pub quant: Option<&'a QuantSidecar>,
+}
+
+/// Which store rows a scan covers, and the id reported for each position.
+#[derive(Clone, Copy)]
+pub enum RowSel<'a> {
+    /// Store rows `start..start + n`; position `i` reports id `i`.
+    Block { start: usize, n: usize },
+    /// Store rows `base + rows[i]`; position `i` reports `report[i]`, or
+    /// `i` itself when `report` is `None`.
+    Gather { rows: &'a [u32], base: usize, report: Option<&'a [u32]> },
+}
+
+impl RowSel<'_> {
+    pub fn len(&self) -> usize {
+        match *self {
+            RowSel::Block { n, .. } => n,
+            RowSel::Gather { rows, .. } => rows.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Absolute store row backing position `pos`.
+    pub fn store_row(&self, pos: usize) -> usize {
+        match *self {
+            RowSel::Block { start, .. } => start + pos,
+            RowSel::Gather { rows, base, .. } => base + rows[pos] as usize,
+        }
+    }
+
+    /// Id reported for position `pos`.
+    pub fn report_id(&self, pos: usize) -> u32 {
+        match *self {
+            RowSel::Block { .. } => pos as u32,
+            RowSel::Gather { report, .. } => report.map_or(pos as u32, |r| r[pos]),
+        }
+    }
+}
+
+/// One compute backend. Exactness contract (ADR-003): `sim_block` /
+/// `sim_gather` are always exact and bit-identical to [`dot_slice`];
+/// `scan_topk` / `scan_range` return results byte-identical to what the
+/// exact scan would put in the heap / output vector — quantized backends
+/// may skip rows, but only rows *certified* to miss the result set, and
+/// every reported similarity comes from the exact kernel.
+pub trait KernelBackend: Send + Sync {
+    fn kind(&self) -> KernelKind;
+
+    fn counters(&self) -> &KernelCounters;
+
+    /// Exact sims of `q` against the `n` rows of a contiguous row-major
+    /// `block` (`block.len() == n * d`), in ascending position order.
+    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>);
+
+    /// Exact sims of `q` against store rows `base + rows[pos]` gathered
+    /// from `flat`, in ascending position order.
+    fn sim_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    );
+
+    /// Top-k scan over the selection; exact final results. Returns the
+    /// number of exact similarity evaluations spent.
+    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64;
+
+    /// Range scan (`sim >= tau`) over the selection, pushing `(id, sim)` in
+    /// ascending position order; exact final results. Returns exact evals.
+    fn scan_range(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64;
+}
+
+/// The canonical scalar backend: today's loops, bit-for-bit.
+#[derive(Debug, Default)]
+pub struct ScalarKernel {
+    counters: KernelCounters,
+}
+
+impl KernelBackend for ScalarKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Scalar
+    }
+
+    fn counters(&self) -> &KernelCounters {
+        &self.counters
+    }
+
+    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+        sim_block_isa(Isa::Scalar, q, block, d, n, sink);
+    }
+
+    fn sim_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    ) {
+        sim_gather_isa(Isa::Scalar, q, flat, d, rows, base, sink);
+    }
+
+    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+        exact_topk(Isa::Scalar, &self.counters, q, s, sel, heap)
+    }
+
+    fn scan_range(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        exact_range(Isa::Scalar, &self.counters, q, s, sel, tau, out)
+    }
+}
+
+/// The SIMD backend: AVX f64-lane kernels when the CPU has them, scalar
+/// loops otherwise. Bit-identical to [`ScalarKernel`] either way.
+#[derive(Debug)]
+pub struct SimdKernel {
+    isa: Isa,
+    counters: KernelCounters,
+}
+
+impl SimdKernel {
+    pub fn new() -> SimdKernel {
+        SimdKernel { isa: detect_isa(), counters: KernelCounters::default() }
+    }
+
+    /// Whether the accelerated path is active (false = scalar fallback).
+    pub fn accelerated(&self) -> bool {
+        !matches!(self.isa, Isa::Scalar)
+    }
+}
+
+impl Default for SimdKernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelBackend for SimdKernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Simd
+    }
+
+    fn counters(&self) -> &KernelCounters {
+        &self.counters
+    }
+
+    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+        sim_block_isa(self.isa, q, block, d, n, sink);
+    }
+
+    fn sim_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    ) {
+        sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
+    }
+
+    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+        exact_topk(self.isa, &self.counters, q, s, sel, heap)
+    }
+
+    fn scan_range(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        exact_range(self.isa, &self.counters, q, s, sel, tau, out)
+    }
+}
+
+/// The quantized backend: i8 pre-filter, exact re-rank. Exact primitives
+/// (`sim_block` / `sim_gather`) go straight to the exact ISA path — only
+/// the threshold/top-k scans, where a certified bound can prune, use the
+/// sidecar.
+#[derive(Debug)]
+pub struct QuantizedI8Kernel {
+    isa: Isa,
+    counters: KernelCounters,
+}
+
+impl QuantizedI8Kernel {
+    pub fn new() -> QuantizedI8Kernel {
+        QuantizedI8Kernel { isa: detect_isa(), counters: KernelCounters::default() }
+    }
+}
+
+impl Default for QuantizedI8Kernel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelBackend for QuantizedI8Kernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::QuantizedI8
+    }
+
+    fn counters(&self) -> &KernelCounters {
+        &self.counters
+    }
+
+    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+        sim_block_isa(self.isa, q, block, d, n, sink);
+    }
+
+    fn sim_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    ) {
+        sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
+    }
+
+    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+        let Some(quant) = s.quant else {
+            // Store built without a sidecar: stay exact.
+            return exact_topk(self.isa, &self.counters, q, s, sel, heap);
+        };
+        let n = sel.len();
+        if n == 0 {
+            return 0;
+        }
+        let Some(qq) = QuantQuery::build(q) else {
+            // Non-finite query components make the certified bounds
+            // meaningless; stay byte-identical to the exact backends.
+            return exact_topk(self.isa, &self.counters, q, s, sel, heap);
+        };
+        self.counters.quant_rows.fetch_add(n as u64, Relaxed);
+        // Certified pruning floor: the heap's exact floor, raised to the
+        // k-th largest certified lower bound when enough candidates exist
+        // (with fewer candidates than k the lower bounds can't raise it,
+        // so don't compute them). Any row with ub < floor provably misses
+        // the final top-k (its exact sim is strictly below the k-th best),
+        // so skipping it keeps the heap byte-identical to the exact scan's.
+        let mut floor = heap.floor();
+        let k = heap.k();
+        let ub = if n >= k {
+            let (mut lb, ub) = quant.intervals(&qq, &sel);
+            let (_, kth, _) = lb.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+            floor = floor.max(*kth);
+            ub
+        } else {
+            quant.upper_bounds(&qq, &sel)
+        };
+        let (rows, ids) = survivors(&sel, &ub, floor);
+        sim_gather_isa(self.isa, q, s.flat, s.d, &rows, 0, &mut |i, sim| heap.offer(ids[i], sim));
+        self.counters.rerank_rows.fetch_add(rows.len() as u64, Relaxed);
+        rows.len() as u64
+    }
+
+    fn scan_range(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        let Some(quant) = s.quant else {
+            return exact_range(self.isa, &self.counters, q, s, sel, tau, out);
+        };
+        let n = sel.len();
+        if n == 0 {
+            return 0;
+        }
+        let Some(qq) = QuantQuery::build(q) else {
+            return exact_range(self.isa, &self.counters, q, s, sel, tau, out);
+        };
+        self.counters.quant_rows.fetch_add(n as u64, Relaxed);
+        let ub = quant.upper_bounds(&qq, &sel);
+        let (rows, ids) = survivors(&sel, &ub, tau);
+        sim_gather_isa(self.isa, q, s.flat, s.d, &rows, 0, &mut |i, sim| {
+            if sim >= tau {
+                out.push((ids[i], sim));
+            }
+        });
+        self.counters.rerank_rows.fetch_add(rows.len() as u64, Relaxed);
+        rows.len() as u64
+    }
+}
+
+// --- exact scan plumbing (shared by all backends) --------------------------
+
+fn exact_topk(
+    isa: Isa,
+    counters: &KernelCounters,
+    q: &[f32],
+    s: StoreRef<'_>,
+    sel: RowSel<'_>,
+    heap: &mut KnnHeap,
+) -> u64 {
+    let n = sel.len();
+    counters.exact_rows.fetch_add(n as u64, Relaxed);
+    match sel {
+        RowSel::Block { start, n } => {
+            let block = &s.flat[start * s.d..(start + n) * s.d];
+            sim_block_isa(isa, q, block, s.d, n, &mut |pos, sim| heap.offer(pos as u32, sim));
+        }
+        RowSel::Gather { rows, base, report } => {
+            sim_gather_isa(isa, q, s.flat, s.d, rows, base, &mut |pos, sim| {
+                heap.offer(report.map_or(pos as u32, |r| r[pos]), sim)
+            });
+        }
+    }
+    n as u64
+}
+
+fn exact_range(
+    isa: Isa,
+    counters: &KernelCounters,
+    q: &[f32],
+    s: StoreRef<'_>,
+    sel: RowSel<'_>,
+    tau: f64,
+    out: &mut Vec<(u32, f64)>,
+) -> u64 {
+    let n = sel.len();
+    counters.exact_rows.fetch_add(n as u64, Relaxed);
+    match sel {
+        RowSel::Block { start, n } => {
+            let block = &s.flat[start * s.d..(start + n) * s.d];
+            sim_block_isa(isa, q, block, s.d, n, &mut |pos, sim| {
+                if sim >= tau {
+                    out.push((pos as u32, sim));
+                }
+            });
+        }
+        RowSel::Gather { rows, base, report } => {
+            sim_gather_isa(isa, q, s.flat, s.d, rows, base, &mut |pos, sim| {
+                if sim >= tau {
+                    out.push((report.map_or(pos as u32, |r| r[pos]), sim));
+                }
+            });
+        }
+    }
+    n as u64
+}
+
+// --- ISA dispatch ----------------------------------------------------------
+
+/// Instruction-set level the exact kernels run at.
+#[derive(Debug, Clone, Copy)]
+enum Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx,
+}
+
+fn detect_isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx") {
+            return Isa::Avx;
+        }
+    }
+    Isa::Scalar
+}
+
+fn sim_block_isa(isa: Isa, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+    // Hard asserts, not debug_asserts: the AVX kernels derive loop trip
+    // counts from q.len() and read row pointers d elements at a time, so a
+    // mismatched query length must panic (as the scalar path does) rather
+    // than read out of bounds in release builds.
+    assert_eq!(q.len(), d, "sim_block: query dimension {} != d={d}", q.len());
+    assert_eq!(block.len(), n * d, "sim_block: block length {} != n*d", block.len());
+    match isa {
+        Isa::Scalar => scalar_block(q, block, d, n, sink),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { x86::block_avx(q, block, d, n, sink) },
+    }
+}
+
+fn sim_gather_isa(
+    isa: Isa,
+    q: &[f32],
+    flat: &[f32],
+    d: usize,
+    rows: &[u32],
+    base: usize,
+    sink: SimSink<'_>,
+) {
+    // See sim_block_isa: the row slices are bounds-checked against `flat`,
+    // but the query length must equal d for the AVX loads to stay in-row.
+    assert_eq!(q.len(), d, "sim_gather: query dimension {} != d={d}", q.len());
+    match isa {
+        Isa::Scalar => scalar_gather(q, flat, d, rows, base, sink),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx => unsafe { x86::gather_avx(q, flat, d, rows, base, sink) },
+    }
+}
+
+/// Positions whose certified upper bound clears `threshold`, resolved to
+/// `(absolute store rows, report ids)` so the re-rank can run through the
+/// batched gather kernel (query amortized over row blocks, like every
+/// exact path).
+fn survivors(sel: &RowSel<'_>, ub: &[f64], threshold: f64) -> (Vec<u32>, Vec<u32>) {
+    let mut rows = Vec::new();
+    let mut ids = Vec::new();
+    for (pos, &u) in ub.iter().enumerate() {
+        if u >= threshold {
+            rows.push(sel.store_row(pos) as u32);
+            ids.push(sel.report_id(pos));
+        }
+    }
+    (rows, ids)
+}
+
+// --- scalar kernels --------------------------------------------------------
+
+/// Two rows against one query in a single pass: the query stream is loaded
+/// once and feeds two independent 4-way accumulator sets, replicating
+/// [`dot_slice`]'s reduction order bit-for-bit for each row.
+#[inline]
+pub(crate) fn dot2(q: &[f32], r0: &[f32], r1: &[f32]) -> (f64, f64) {
+    let n = q.len();
+    debug_assert_eq!(r0.len(), n);
+    debug_assert_eq!(r1.len(), n);
+    let (r0, r1) = (&r0[..n], &r1[..n]);
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (mut b0, mut b1, mut b2, mut b3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..chunks {
+        let j = i * 4;
+        let (q0, q1, q2, q3) =
+            (q[j] as f64, q[j + 1] as f64, q[j + 2] as f64, q[j + 3] as f64);
+        a0 += q0 * r0[j] as f64;
+        a1 += q1 * r0[j + 1] as f64;
+        a2 += q2 * r0[j + 2] as f64;
+        a3 += q3 * r0[j + 3] as f64;
+        b0 += q0 * r1[j] as f64;
+        b1 += q1 * r1[j + 1] as f64;
+        b2 += q2 * r1[j + 2] as f64;
+        b3 += q3 * r1[j + 3] as f64;
+    }
+    let mut sa = (a0 + a1) + (a2 + a3);
+    let mut sb = (b0 + b1) + (b2 + b3);
+    for j in chunks * 4..n {
+        sa += q[j] as f64 * r0[j] as f64;
+        sb += q[j] as f64 * r1[j] as f64;
+    }
+    (sa.clamp(-1.0, 1.0), sb.clamp(-1.0, 1.0))
+}
+
+fn scalar_block(q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+    let mut i = 0usize;
+    while i + 2 <= n {
+        let b = i * d;
+        let (s0, s1) = dot2(q, &block[b..b + d], &block[b + d..b + 2 * d]);
+        sink(i, s0);
+        sink(i + 1, s1);
+        i += 2;
+    }
+    if i < n {
+        sink(i, dot_slice(q, &block[i * d..(i + 1) * d]));
+    }
+}
+
+fn scalar_gather(q: &[f32], flat: &[f32], d: usize, rows: &[u32], base: usize, sink: SimSink<'_>) {
+    let row = |pos: usize| {
+        let r = base + rows[pos] as usize;
+        &flat[r * d..(r + 1) * d]
+    };
+    let mut i = 0usize;
+    while i + 2 <= rows.len() {
+        let (s0, s1) = dot2(q, row(i), row(i + 1));
+        sink(i, s0);
+        sink(i + 1, s1);
+        i += 2;
+    }
+    if i < rows.len() {
+        sink(i, dot_slice(q, row(i)));
+    }
+}
+
+// --- AVX kernels (x86_64) --------------------------------------------------
+
+/// Bit-exactness argument: [`dot_slice`](super::dot_slice) keeps four
+/// independent f64 accumulators
+/// `s0..s3`, each summing `q[4i+l] as f64 * r[4i+l] as f64`
+/// sequentially, then combines `(s0+s1)+(s2+s3)`. The AVX kernels map
+/// `s0..s3` onto the four lanes of a `__m256d`: each iteration widens four
+/// f32s exactly (`vcvtps2pd`), multiplies, and adds — the same two IEEE
+/// operations per lane in the same order, with no FMA contraction (the
+/// intrinsics never fuse). The horizontal reduction extracts the lanes and
+/// combines them in the scalar order, and the tail/clamp are shared with
+/// the scalar code, so every similarity is bit-identical.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_cvtps_pd, _mm256_extractf128_pd,
+        _mm256_mul_pd, _mm256_setzero_pd, _mm_cvtsd_f64, _mm_loadu_ps, _mm_unpackhi_pd,
+    };
+
+    use super::SimSink;
+
+    /// Widen 4 f32s at `p[j..j+4]` to f64 lanes. Caller guarantees bounds.
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn load4(p: &[f32], j: usize) -> __m256d {
+        debug_assert!(j + 4 <= p.len());
+        _mm256_cvtps_pd(_mm_loadu_ps(p.as_ptr().add(j)))
+    }
+
+    /// Per-lane `acc + q * r` as separate mul/add (never fused).
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn muladd(acc: __m256d, q: __m256d, r: __m256d) -> __m256d {
+        _mm256_add_pd(acc, _mm256_mul_pd(q, r))
+    }
+
+    /// Combine lanes in the scalar order `(s0 + s1) + (s2 + s3)`.
+    #[inline]
+    #[target_feature(enable = "avx")]
+    unsafe fn hsum(acc: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(acc);
+        let hi = _mm256_extractf128_pd(acc, 1);
+        let s0 = _mm_cvtsd_f64(lo);
+        let s1 = _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo));
+        let s2 = _mm_cvtsd_f64(hi);
+        let s3 = _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi));
+        (s0 + s1) + (s2 + s3)
+    }
+
+    /// One row; bit-identical to [`dot_slice`].
+    #[target_feature(enable = "avx")]
+    pub unsafe fn dot1(q: &[f32], r: &[f32]) -> f64 {
+        let n = q.len();
+        assert_eq!(r.len(), n, "dot1: dimension mismatch ({} vs {})", q.len(), r.len());
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            acc = muladd(acc, load4(q, j), load4(r, j));
+        }
+        let mut sum = hsum(acc);
+        for j in chunks * 4..n {
+            sum += q[j] as f64 * r[j] as f64;
+        }
+        sum.clamp(-1.0, 1.0)
+    }
+
+    /// Two rows, query widened once per chunk.
+    #[target_feature(enable = "avx")]
+    unsafe fn dot2(q: &[f32], r0: &[f32], r1: &[f32]) -> (f64, f64) {
+        let n = q.len();
+        debug_assert_eq!(r0.len(), n);
+        debug_assert_eq!(r1.len(), n);
+        let chunks = n / 4;
+        let mut a = _mm256_setzero_pd();
+        let mut b = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let qv = load4(q, j);
+            a = muladd(a, qv, load4(r0, j));
+            b = muladd(b, qv, load4(r1, j));
+        }
+        let mut sa = hsum(a);
+        let mut sb = hsum(b);
+        for j in chunks * 4..n {
+            sa += q[j] as f64 * r0[j] as f64;
+            sb += q[j] as f64 * r1[j] as f64;
+        }
+        (sa.clamp(-1.0, 1.0), sb.clamp(-1.0, 1.0))
+    }
+
+    /// Four rows, query widened once per chunk.
+    #[target_feature(enable = "avx")]
+    unsafe fn dot4(
+        q: &[f32],
+        r0: &[f32],
+        r1: &[f32],
+        r2: &[f32],
+        r3: &[f32],
+    ) -> (f64, f64, f64, f64) {
+        let n = q.len();
+        let chunks = n / 4;
+        let mut a = _mm256_setzero_pd();
+        let mut b = _mm256_setzero_pd();
+        let mut c = _mm256_setzero_pd();
+        let mut e = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let qv = load4(q, j);
+            a = muladd(a, qv, load4(r0, j));
+            b = muladd(b, qv, load4(r1, j));
+            c = muladd(c, qv, load4(r2, j));
+            e = muladd(e, qv, load4(r3, j));
+        }
+        let mut s0 = hsum(a);
+        let mut s1 = hsum(b);
+        let mut s2 = hsum(c);
+        let mut s3 = hsum(e);
+        for j in chunks * 4..n {
+            let qd = q[j] as f64;
+            s0 += qd * r0[j] as f64;
+            s1 += qd * r1[j] as f64;
+            s2 += qd * r2[j] as f64;
+            s3 += qd * r3[j] as f64;
+        }
+        (s0.clamp(-1.0, 1.0), s1.clamp(-1.0, 1.0), s2.clamp(-1.0, 1.0), s3.clamp(-1.0, 1.0))
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn block_avx(q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let b = i * d;
+            let (s0, s1, s2, s3) = dot4(
+                q,
+                &block[b..b + d],
+                &block[b + d..b + 2 * d],
+                &block[b + 2 * d..b + 3 * d],
+                &block[b + 3 * d..b + 4 * d],
+            );
+            sink(i, s0);
+            sink(i + 1, s1);
+            sink(i + 2, s2);
+            sink(i + 3, s3);
+            i += 4;
+        }
+        while i + 2 <= n {
+            let b = i * d;
+            let (s0, s1) = dot2(q, &block[b..b + d], &block[b + d..b + 2 * d]);
+            sink(i, s0);
+            sink(i + 1, s1);
+            i += 2;
+        }
+        if i < n {
+            sink(i, dot1(q, &block[i * d..(i + 1) * d]));
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gather_avx(
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    ) {
+        let row = |pos: usize| {
+            let r = base + rows[pos] as usize;
+            &flat[r * d..(r + 1) * d]
+        };
+        let mut i = 0usize;
+        while i + 4 <= rows.len() {
+            let (s0, s1, s2, s3) = dot4(q, row(i), row(i + 1), row(i + 2), row(i + 3));
+            sink(i, s0);
+            sink(i + 1, s1);
+            sink(i + 2, s2);
+            sink(i + 3, s3);
+            i += 4;
+        }
+        while i + 2 <= rows.len() {
+            let (s0, s1) = dot2(q, row(i), row(i + 1));
+            sink(i, s0);
+            sink(i + 1, s1);
+            i += 2;
+        }
+        if i < rows.len() {
+            sink(i, dot1(q, row(i)));
+        }
+    }
+}
+
+// --- i8 quantization -------------------------------------------------------
+
+/// Multiplicative and additive slack on the certified error bound,
+/// covering f64 roundoff in the bound computation itself. The analytic
+/// bound is exact in real arithmetic; evaluating it in f64 over d <= 100k
+/// terms has relative error < 1e-11, so this margin is generous.
+const EPS_REL: f64 = 1.0 + 1e-6;
+const EPS_ABS: f64 = 1e-12;
+
+/// Largest dimension the i8 kernel accepts: the i32 dot accumulator needs
+/// `d * 127^2 < i32::MAX`. The CLI and the coordinator/ingest config
+/// layers reject larger dims with a clean error ([`KernelKind::validate_dim`]);
+/// warm points refuse to build an oversized sidecar, so unvalidated paths
+/// degrade to exact scans instead of panicking.
+pub const QUANT_MAX_DIM: usize = 100_000;
+
+/// Stores smaller than this scan exactly even under the i8 backend —
+/// `warm_quant_sidecar` refuses to build. Below this size the pre-filter
+/// cannot save enough exact evaluations to pay for itself. (The ingest
+/// memtable never builds a sidecar at *any* size: sidecars are built only
+/// at explicit warm points, never by a scan.)
+pub const QUANT_MIN_ROWS: usize = 1024;
+
+/// Per-row symmetric i8 quantization of a store buffer: `codes[row*d + j]
+/// = round(flat[row*d + j] / scale[row])` with `scale[row] =
+/// max_j |flat[row*d + j]| / 127`. Stored next to the f32 buffer; the f32
+/// rows remain the source of truth for every reported similarity.
+pub struct QuantSidecar {
+    codes: Vec<i8>,
+    scale: Vec<f64>,
+    /// Per-row L1 norm of the *original* f32 row (for the error bound).
+    l1: Vec<f64>,
+    d: usize,
+}
+
+impl QuantSidecar {
+    pub fn build(flat: &[f32], d: usize) -> QuantSidecar {
+        // i32 accumulation: |code| <= 127, so d products fit while
+        // d * 127^2 < i32::MAX.
+        assert!(d < QUANT_MAX_DIM, "i8 kernel needs d < {QUANT_MAX_DIM} for i32 accumulation");
+        if d == 0 {
+            return QuantSidecar { codes: Vec::new(), scale: Vec::new(), l1: Vec::new(), d };
+        }
+        let n = flat.len() / d;
+        let mut codes = Vec::with_capacity(n * d);
+        let mut scale = Vec::with_capacity(n);
+        let mut l1 = Vec::with_capacity(n);
+        for row in flat.chunks_exact(d) {
+            // A non-finite component would poison the certified bounds
+            // (NaN-absorbing min/max invert the interval); give such rows
+            // an infinite error bound instead, so they always survive the
+            // pre-filter and are scored exactly — byte-identical results,
+            // like the query-side fallback in `QuantQuery::build`.
+            let finite = row.iter().all(|v| v.is_finite());
+            let max = if finite {
+                row.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+            } else {
+                0.0
+            };
+            let s = max / 127.0;
+            let mut a1 = 0.0f64;
+            if s > 0.0 {
+                for &v in row {
+                    a1 += (v as f64).abs();
+                    codes.push((v as f64 / s).round().clamp(-127.0, 127.0) as i8);
+                }
+            } else {
+                codes.resize(codes.len() + d, 0);
+            }
+            scale.push(s);
+            l1.push(if finite { a1 } else { f64::INFINITY });
+        }
+        QuantSidecar { codes, scale, l1, d }
+    }
+
+    /// Dequantization scale of `row`.
+    pub fn scale(&self, row: usize) -> f64 {
+        self.scale[row]
+    }
+
+    /// Quantized codes of `row`.
+    pub fn codes(&self, row: usize) -> &[i8] {
+        &self.codes[row * self.d..(row + 1) * self.d]
+    }
+
+    /// Certified `(approx, eps)` for one store row: the quantized
+    /// similarity estimate and its error bound.
+    ///
+    /// Bound: with `q~ = sq * cq` and `r~ = sr * cr` the dequantized
+    /// vectors, `|q.r - q~.r~| <= (sq/2)*||r||_1 + (sr/2)*||q~||_1`
+    /// (triangle inequality over the per-component rounding errors).
+    fn interval_of(&self, qq: &QuantQuery, row: usize) -> (f64, f64) {
+        let l1r = self.l1[row];
+        if !l1r.is_finite() {
+            // Non-finite row (see `build`): certify nothing — an infinite
+            // bound keeps the row in every survivor set. (Computed inline,
+            // a zero query scale times this infinity would be NaN.)
+            return (0.0, f64::INFINITY);
+        }
+        let codes = self.codes(row);
+        let mut acc = 0i32;
+        for (&a, &b) in qq.codes.iter().zip(codes) {
+            acc += a as i32 * b as i32;
+        }
+        let approx = qq.scale * self.scale[row] * acc as f64;
+        let raw = 0.5 * qq.scale * l1r + 0.5 * self.scale[row] * qq.l1_deq;
+        (approx, raw * EPS_REL + EPS_ABS)
+    }
+
+    /// Certified `[approx - eps, approx + eps]` similarity intervals of the
+    /// quantized query against every selected row. The exact similarity
+    /// additionally clamps to `[-1, 1]`, so the interval edges clamp
+    /// one-sidedly too.
+    fn intervals(&self, qq: &QuantQuery, sel: &RowSel<'_>) -> (Vec<f64>, Vec<f64>) {
+        let n = sel.len();
+        let mut lb = Vec::with_capacity(n);
+        let mut ub = Vec::with_capacity(n);
+        for pos in 0..n {
+            let (approx, eps) = self.interval_of(qq, sel.store_row(pos));
+            lb.push((approx - eps).min(1.0));
+            ub.push((approx + eps).max(-1.0));
+        }
+        (lb, ub)
+    }
+
+    /// Upper interval edges only (range scans never need the lower edge).
+    fn upper_bounds(&self, qq: &QuantQuery, sel: &RowSel<'_>) -> Vec<f64> {
+        let n = sel.len();
+        let mut ub = Vec::with_capacity(n);
+        for pos in 0..n {
+            let (approx, eps) = self.interval_of(qq, sel.store_row(pos));
+            ub.push((approx + eps).max(-1.0));
+        }
+        ub
+    }
+}
+
+/// A query quantized once per scan.
+struct QuantQuery {
+    codes: Vec<i8>,
+    scale: f64,
+    /// L1 norm of the *dequantized* query (for the error bound).
+    l1_deq: f64,
+}
+
+impl QuantQuery {
+    /// Quantize a query, or `None` when any component is non-finite — the
+    /// error bound is meaningless then, and the caller must take the exact
+    /// path to stay byte-identical to the exact backends.
+    fn build(q: &[f32]) -> Option<QuantQuery> {
+        let mut max = 0.0f64;
+        for &v in q {
+            if !v.is_finite() {
+                return None;
+            }
+            max = max.max((v as f64).abs());
+        }
+        let scale = max / 127.0;
+        if scale == 0.0 {
+            return Some(QuantQuery { codes: vec![0; q.len()], scale: 0.0, l1_deq: 0.0 });
+        }
+        let mut codes = Vec::with_capacity(q.len());
+        let mut code_l1 = 0.0f64;
+        for &v in q {
+            let c = (v as f64 / scale).round().clamp(-127.0, 127.0);
+            code_l1 += c.abs();
+            codes.push(c as i8);
+        }
+        Some(QuantQuery { codes, scale, l1_deq: scale * code_l1 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn kernel_kind_parses_and_names() {
+        assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse("SIMD"), Some(KernelKind::Simd));
+        assert_eq!(KernelKind::parse("i8"), Some(KernelKind::QuantizedI8));
+        assert_eq!(KernelKind::parse("quantized"), Some(KernelKind::QuantizedI8));
+        assert_eq!(KernelKind::parse("bogus"), None);
+        assert_eq!(KernelKind::QuantizedI8.name(), "i8");
+    }
+
+    #[test]
+    fn simd_rows_match_scalar_bitwise() {
+        // Straddle the 4-row block, the pair, and the 4-lane chunk
+        // boundaries, with tails.
+        for (n, d) in [(1usize, 3usize), (2, 4), (5, 7), (8, 8), (9, 13), (33, 17), (64, 96)] {
+            let rows = uniform_sphere(n, d, 7 + n as u64);
+            let mut flat = Vec::new();
+            for r in &rows {
+                flat.extend_from_slice(r.as_slice());
+            }
+            let q = uniform_sphere(1, d, 999).pop().unwrap();
+            let scalar = ScalarKernel::default();
+            let simd = SimdKernel::new();
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            scalar.sim_block(q.as_slice(), &flat, d, n, &mut |pos, s| a.push((pos, s)));
+            simd.sim_block(q.as_slice(), &flat, d, n, &mut |pos, s| b.push((pos, s)));
+            assert_eq!(a.len(), b.len());
+            for ((pa, sa), (pb, sb)) in a.iter().zip(&b) {
+                assert_eq!(pa, pb);
+                assert_eq!(sa.to_bits(), sb.to_bits(), "n={n} d={d} pos={pa}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_sidecar_roundtrip_error_is_bounded() {
+        let rows = uniform_sphere(40, 33, 11);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        let side = QuantSidecar::build(&flat, 33);
+        for (i, r) in rows.iter().enumerate() {
+            let s = side.scale(i);
+            let codes = side.codes(i);
+            for (j, &v) in r.as_slice().iter().enumerate() {
+                let deq = s * codes[j] as f64;
+                // Unit-norm rows have max |component| <= 1, so the
+                // per-component rounding error is <= scale/2 <= 1/254.
+                assert!(
+                    (v as f64 - deq).abs() <= 1.0 / 127.0,
+                    "row {i} component {j}: {v} vs {deq}"
+                );
+                assert!((v as f64 - deq).abs() <= s * 0.5 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn quant_intervals_contain_the_exact_similarity() {
+        let d = 19;
+        let rows = uniform_sphere(64, d, 3);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        let side = QuantSidecar::build(&flat, d);
+        for qs in 0..4u64 {
+            let q = uniform_sphere(1, d, 100 + qs).pop().unwrap();
+            let qq = QuantQuery::build(q.as_slice()).unwrap();
+            let sel = RowSel::Block { start: 0, n: rows.len() };
+            let (lb, ub) = side.intervals(&qq, &sel);
+            for (i, r) in rows.iter().enumerate() {
+                let exact = dot_slice(q.as_slice(), r.as_slice());
+                assert!(
+                    lb[i] <= exact && exact <= ub[i],
+                    "row {i}: {exact} not in [{}, {}]",
+                    lb[i],
+                    ub[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_query_and_zero_rows_quantize_safely() {
+        let d = 8;
+        let flat = [0.0f32; 16];
+        let side = QuantSidecar::build(&flat, d);
+        assert_eq!(side.scale(0), 0.0);
+        let zeros = [0.0f32; 8];
+        let qq = QuantQuery::build(&zeros).unwrap();
+        let (lb, ub) = side.intervals(&qq, &RowSel::Block { start: 0, n: 2 });
+        assert!(lb[0] <= 0.0 && 0.0 <= ub[0]);
+        assert!(lb[1] <= 0.0 && 0.0 <= ub[1]);
+    }
+
+    #[test]
+    fn non_finite_rows_always_survive_the_prefilter() {
+        let rows = uniform_sphere(4, 6, 31);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        flat[7] = f32::NAN; // corrupt one component of row 1
+        let side = QuantSidecar::build(&flat, 6);
+        let q = uniform_sphere(1, 6, 99).pop().unwrap();
+        let qq = QuantQuery::build(q.as_slice()).unwrap();
+        let (lb, ub) = side.intervals(&qq, &RowSel::Block { start: 0, n: 4 });
+        // The corrupted row certifies nothing: it can never be pruned and
+        // never raises the floor.
+        assert_eq!(ub[1], f64::INFINITY);
+        assert_eq!(lb[1], f64::NEG_INFINITY);
+        // Finite rows still get finite certified intervals.
+        assert!(ub[0].is_finite() && lb[0].is_finite());
+    }
+
+    #[test]
+    fn non_finite_queries_fall_back_to_the_exact_path() {
+        let rows = uniform_sphere(8, 6, 21);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        let side = QuantSidecar::build(&flat, 6);
+        let q = [1.0f32, f32::NAN, 0.0, 0.0, 0.0, 0.0];
+        assert!(QuantQuery::build(&q).is_none());
+        // Through the backend: byte-identical heap to the scalar backend.
+        let sref = StoreRef { flat: &flat, d: 6, quant: Some(&side) };
+        let sel = RowSel::Block { start: 0, n: 8 };
+        let quant = QuantizedI8Kernel::new();
+        let scalar = ScalarKernel::default();
+        let mut hq = KnnHeap::new(3);
+        let mut hs = KnnHeap::new(3);
+        quant.scan_topk(&q, sref, sel, &mut hq);
+        scalar.scan_topk(&q, sref, sel, &mut hs);
+        let (a, b) = (hq.into_sorted(), hs.into_sorted());
+        assert_eq!(a.len(), b.len());
+        for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib);
+            assert_eq!(sa.to_bits(), sb.to_bits());
+        }
+    }
+}

@@ -1,5 +1,6 @@
 //! Zero-copy corpus storage: one contiguous SoA buffer under every index,
-//! shard, and the PJRT runtime.
+//! shard, and the PJRT runtime — scanned through pluggable kernel
+//! backends.
 //!
 //! A [`CorpusStore`] owns the L2-normalized corpus as a single row-major
 //! `f32` buffer behind an `Arc`. Everything downstream — index structures,
@@ -7,33 +8,46 @@
 //! [`CorpusView`] handles (a contiguous row range or an explicit id list)
 //! that *alias* the buffer instead of cloning vectors. Scoring goes through
 //! batch kernels ([`CorpusView::scan_topk`], [`CorpusView::scan_range`],
-//! [`CorpusView::dot_batch`]) built on a paired row kernel (`dot2`) that
-//! streams the query once per two rows with f64 accumulation — wider
-//! (SIMD/8-row) kernels can slot in behind the same API later.
+//! [`CorpusView::dot_batch`]) that dispatch to the store's
+//! [`KernelBackend`] — scalar, SIMD, or i8-quantized (see the `kernels`
+//! module and ADR-003). The backend is chosen per store
+//! ([`CorpusStore::with_kernel`]) and inherited by every view, index,
+//! shard, and ingest generation built over it.
 //!
-//! Numerical contract: every kernel reduces each row with **exactly** the
-//! same operation order as [`dot_slice`] (4-way unrolled partial sums,
-//! pairwise combine, sequential tail, clamp to `[-1, 1]`), so the same
-//! `(query, row)` pair produces the same `f64` bit pattern no matter which
-//! kernel — or which index — scored it. The exactness tests rely on this to
-//! compare index results byte-for-byte against the linear scan on
-//! tie-free corpora. (With *exact* f64 similarity ties — e.g. duplicate
-//! rows — kNN results are still exact up to tie membership, because an
-//! index may prune a subtree whose upper bound equals the current floor;
-//! see the `index` module's exactness contract.)
+//! Numerical contract (ADR-003's two tiers): the *exact* backends (scalar,
+//! SIMD) reduce each row with **exactly** the same operation order as
+//! [`dot_slice`] (4-way unrolled partial sums, pairwise combine, sequential
+//! tail, clamp to `[-1, 1]`), so the same `(query, row)` pair produces the
+//! same `f64` bit pattern no matter which kernel — or which index — scored
+//! it. The quantized backend pre-filters with a certified error bound and
+//! re-ranks survivors through the exact kernel, so final scan results stay
+//! byte-identical while fewer exact evaluations are spent. The exactness
+//! tests rely on this to compare index results byte-for-byte against the
+//! linear scan on tie-free corpora. (With *exact* f64 similarity ties —
+//! e.g. duplicate rows — kNN results are still exact up to tie membership,
+//! because an index may prune a subtree whose upper bound equals the
+//! current floor; see the `index` module's exactness contract.)
 
-use std::borrow::Cow;
+pub mod kernels;
+
 use std::ops::Range;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::index::KnnHeap;
 use crate::metrics::DenseVec;
+
+pub use kernels::{
+    backend_for, default_kernel, KernelBackend, KernelCounters, KernelKind, QuantSidecar,
+    QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
+};
+pub use kernels::{QUANT_MAX_DIM, QUANT_MIN_ROWS};
 
 /// Dot product of two equal-length slices with 4-way unrolled f64
 /// accumulation, clamped to the cosine range `[-1, 1]`.
 ///
 /// This is the canonical scalar kernel: [`DenseVec::dot`] and every blocked
-/// kernel in this module reduce rows in exactly this operation order.
+/// kernel backend reduce rows in exactly this operation order (the SIMD
+/// backend bit-identically; see `kernels`).
 ///
 /// # Panics
 /// Panics on dimension mismatch — silently truncating to the shorter length
@@ -64,40 +78,6 @@ pub fn dot_slice(a: &[f32], b: &[f32]) -> f64 {
     sum.clamp(-1.0, 1.0)
 }
 
-/// Two rows against one query in a single pass: the query stream is loaded
-/// once and feeds two independent 4-way accumulator sets, replicating
-/// [`dot_slice`]'s reduction order bit-for-bit for each row.
-#[inline]
-fn dot2(q: &[f32], r0: &[f32], r1: &[f32]) -> (f64, f64) {
-    let n = q.len();
-    debug_assert_eq!(r0.len(), n);
-    debug_assert_eq!(r1.len(), n);
-    let (r0, r1) = (&r0[..n], &r1[..n]);
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    let (mut b0, mut b1, mut b2, mut b3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-    for i in 0..chunks {
-        let j = i * 4;
-        let (q0, q1, q2, q3) =
-            (q[j] as f64, q[j + 1] as f64, q[j + 2] as f64, q[j + 3] as f64);
-        a0 += q0 * r0[j] as f64;
-        a1 += q1 * r0[j + 1] as f64;
-        a2 += q2 * r0[j + 2] as f64;
-        a3 += q3 * r0[j + 3] as f64;
-        b0 += q0 * r1[j] as f64;
-        b1 += q1 * r1[j + 1] as f64;
-        b2 += q2 * r1[j + 2] as f64;
-        b3 += q3 * r1[j + 3] as f64;
-    }
-    let mut sa = (a0 + a1) + (a2 + a3);
-    let mut sb = (b0 + b1) + (b2 + b3);
-    for j in chunks * 4..n {
-        sa += q[j] as f64 * r0[j] as f64;
-        sb += q[j] as f64 * r1[j] as f64;
-    }
-    (sa.clamp(-1.0, 1.0), sb.clamp(-1.0, 1.0))
-}
-
 /// L2-normalize one row in place (zero rows stay all-zero), with the same
 /// arithmetic as [`DenseVec::new`] so store-native generators produce
 /// bit-identical rows to their `Vec<DenseVec>` counterparts.
@@ -119,13 +99,26 @@ struct StoreInner {
 }
 
 /// The shared, contiguous, L2-normalized corpus. Cloning is an `Arc` bump;
-/// the float buffer is allocated exactly once per served corpus.
+/// the float buffer is allocated exactly once per served corpus. Each store
+/// carries a [`KernelBackend`] (default: [`default_kernel`], i.e. the
+/// `SIMETRA_KERNEL` env var or scalar) that every view scan dispatches
+/// through, plus the i8 sidecar when the backend is quantized.
 #[derive(Clone)]
 pub struct CorpusStore {
     inner: Arc<StoreInner>,
+    kernel: Arc<dyn KernelBackend>,
+    /// i8 sidecar cell (quantized backends only), shared by every clone of
+    /// the store. Built exclusively at explicit warm points
+    /// ([`CorpusStore::warm_quant_sidecar`]); scans only read it, so plain
+    /// constructors stay O(1) and never-warmed stores scan exactly.
+    quant: Arc<OnceLock<QuantSidecar>>,
 }
 
 impl CorpusStore {
+    fn attach(inner: Arc<StoreInner>, kernel: Arc<dyn KernelBackend>) -> Self {
+        CorpusStore { inner, kernel, quant: Arc::new(OnceLock::new()) }
+    }
+
     /// Adopt a row-major buffer whose rows are already unit-norm (or
     /// intentionally raw). Zero-copy: the buffer becomes the store.
     ///
@@ -133,13 +126,24 @@ impl CorpusStore {
     /// Panics if `data.len()` is not a multiple of `d`, or if `d == 0` while
     /// `data` is non-empty.
     pub fn from_flat_normalized(data: Vec<f32>, d: usize) -> Self {
+        Self::from_flat_normalized_with(data, d, backend_for(default_kernel()))
+    }
+
+    /// Like [`CorpusStore::from_flat_normalized`], adopting the buffer
+    /// straight onto an existing backend instance (the ingest write path's
+    /// constructor — no throwaway default backend is allocated).
+    pub fn from_flat_normalized_with(
+        data: Vec<f32>,
+        d: usize,
+        kernel: Arc<dyn KernelBackend>,
+    ) -> Self {
         if d == 0 {
             assert!(data.is_empty(), "d=0 store must be empty");
-            return CorpusStore { inner: Arc::new(StoreInner { data, n: 0, d: 0 }) };
+            return Self::attach(Arc::new(StoreInner { data, n: 0, d: 0 }), kernel);
         }
         assert_eq!(data.len() % d, 0, "flat corpus length {} not a multiple of d={d}", data.len());
         let n = data.len() / d;
-        CorpusStore { inner: Arc::new(StoreInner { data, n, d }) }
+        Self::attach(Arc::new(StoreInner { data, n, d }), kernel)
     }
 
     /// Adopt a row-major buffer of raw rows, L2-normalizing each in place.
@@ -165,6 +169,64 @@ impl CorpusStore {
             data.extend_from_slice(row.as_slice());
         }
         Self::from_flat_normalized(data, d)
+    }
+
+    /// The same store (same buffer, `Arc` bump) scanned through a fresh
+    /// backend of the given kind. Quantized kinds build the i8 sidecar
+    /// here — an explicit configuration moment, off the query path.
+    pub fn with_kernel(self, kind: KernelKind) -> Self {
+        let store = Self::attach(self.inner, backend_for(kind));
+        store.warm_quant_sidecar();
+        store
+    }
+
+    /// The same store scanned through a *shared* backend instance — how
+    /// the ingest layer gives every generation one set of counters.
+    /// Quantized sidecars build here, like [`CorpusStore::with_kernel`].
+    pub fn with_backend(self, backend: Arc<dyn KernelBackend>) -> Self {
+        let store = Self::attach(self.inner, backend);
+        store.warm_quant_sidecar();
+        store
+    }
+
+    /// The active kernel backend.
+    pub fn kernel(&self) -> &Arc<dyn KernelBackend> {
+        &self.kernel
+    }
+
+    pub fn kernel_kind(&self) -> KernelKind {
+        self.kernel.kind()
+    }
+
+    /// Build the i8 sidecar now. A no-op (returning `None`) unless the
+    /// backend is quantized and the store has at least [`QUANT_MIN_ROWS`]
+    /// rows — below that the pre-filter cannot pay for itself. Runs at
+    /// explicit configuration moments only ([`CorpusStore::with_kernel`] /
+    /// [`CorpusStore::with_backend`], `Generation::build` on the sealer
+    /// thread, `Coordinator::new` at startup); scans read the sidecar
+    /// through [`CorpusStore::quant_sidecar`] and never build one, so a
+    /// store that was never warmed — the copy-on-write ingest memtable —
+    /// always scans exactly, whatever its size.
+    pub fn warm_quant_sidecar(&self) -> Option<&QuantSidecar> {
+        let quantized = self.kernel.kind() == KernelKind::QuantizedI8;
+        // Refuse oversized dims as well as tiny stores: an i8 backend that
+        // cannot quantize simply scans exactly — never a panic. Config
+        // layers reject the oversized case with a clean error
+        // (KernelKind::validate_dim); this guard covers env-default paths.
+        if !quantized || self.len() < QUANT_MIN_ROWS || self.dim() >= QUANT_MAX_DIM {
+            return None;
+        }
+        let inner = &self.inner;
+        Some(self.quant.get_or_init(|| QuantSidecar::build(&inner.data, inner.d)))
+    }
+
+    /// The i8 sidecar, if one was built (read-only; see
+    /// [`CorpusStore::warm_quant_sidecar`]).
+    pub fn quant_sidecar(&self) -> Option<&QuantSidecar> {
+        if self.kernel.kind() != KernelKind::QuantizedI8 {
+            return None;
+        }
+        self.quant.get()
     }
 
     /// Number of corpus rows.
@@ -222,7 +284,7 @@ impl CorpusStore {
         for &id in &ids {
             assert!((id as usize) < self.len(), "id {id} out of range 0..{}", self.len());
         }
-        CorpusView { store: self.clone(), sel: Selection::Ids(Arc::new(ids)) }
+        CorpusView { store: self.clone(), sel: Selection::Ids(Arc::new(IdSelection::new(ids))) }
     }
 }
 
@@ -257,17 +319,33 @@ impl<'a> VecRef<'a> {
     }
 }
 
+/// An explicit id-list selection, with a lazily gathered contiguous copy
+/// of its rows. The cache is shared by every clone of the view, so
+/// repeated [`CorpusView::contiguous_or_gather`] calls (engine tiles,
+/// bucket slabs) gather at most once.
+struct IdSelection {
+    ids: Vec<u32>,
+    gathered: OnceLock<Vec<f32>>,
+}
+
+impl IdSelection {
+    fn new(ids: Vec<u32>) -> Self {
+        IdSelection { ids, gathered: OnceLock::new() }
+    }
+}
+
 #[derive(Clone)]
 enum Selection {
     /// Contiguous store rows `[start, end)`; local id `i` is row `start + i`.
     Rows(usize, usize),
     /// Explicit store rows; local id `i` is row `ids[i]`.
-    Ids(Arc<Vec<u32>>),
+    Ids(Arc<IdSelection>),
 }
 
 /// A zero-copy window onto a [`CorpusStore`]: the unit indexes build from,
 /// shards own, and the PJRT runtime feeds from. Local ids `0..len` map to
-/// store rows through the selection.
+/// store rows through the selection. Every scan dispatches to the store's
+/// [`KernelBackend`].
 #[derive(Clone)]
 pub struct CorpusView {
     store: CorpusStore,
@@ -278,7 +356,7 @@ impl CorpusView {
     pub fn len(&self) -> usize {
         match &self.sel {
             Selection::Rows(lo, hi) => hi - lo,
-            Selection::Ids(ids) => ids.len(),
+            Selection::Ids(sel) => sel.ids.len(),
         }
     }
 
@@ -302,7 +380,7 @@ impl CorpusView {
                 assert!(r < *hi, "local id {local} out of view of {} rows", *hi - *lo);
                 r
             }
-            Selection::Ids(ids) => ids[local as usize] as usize,
+            Selection::Ids(sel) => sel.ids[local as usize] as usize,
         }
     }
 
@@ -332,19 +410,24 @@ impl CorpusView {
         }
     }
 
-    /// Contiguous slab, gathering through the id list only when the view is
-    /// non-contiguous.
-    pub fn contiguous_or_gather(&self) -> Cow<'_, [f32]> {
-        match self.as_contiguous() {
-            Some(slab) => Cow::Borrowed(slab),
-            None => {
+    /// Contiguous slab of the view's rows. Row-range views borrow the
+    /// store buffer; id-list views gather **once** into a cache shared by
+    /// all clones of the view (repeat calls are zero-copy too), so per-query
+    /// consumers stop re-allocating.
+    pub fn contiguous_or_gather(&self) -> &[f32] {
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
                 let d = self.dim();
-                let mut out = Vec::with_capacity(self.len() * d);
-                for i in 0..self.len() as u32 {
-                    out.extend_from_slice(self.row(i));
-                }
-                Cow::Owned(out)
+                &self.store.flat()[lo * d..hi * d]
             }
+            Selection::Ids(sel) => sel.gathered.get_or_init(|| {
+                let d = self.dim();
+                let mut out = Vec::with_capacity(sel.ids.len() * d);
+                for &id in &sel.ids {
+                    out.extend_from_slice(self.store.row(id as usize));
+                }
+                out
+            }),
         }
     }
 
@@ -353,126 +436,146 @@ impl CorpusView {
         assert!(lo <= hi && hi <= self.len(), "slice_rows {lo}..{hi} out of {}", self.len());
         let sel = match &self.sel {
             Selection::Rows(start, _) => Selection::Rows(start + lo, start + hi),
-            Selection::Ids(ids) => Selection::Ids(Arc::new(ids[lo..hi].to_vec())),
+            Selection::Ids(sel) => {
+                Selection::Ids(Arc::new(IdSelection::new(sel.ids[lo..hi].to_vec())))
+            }
         };
         CorpusView { store: self.store.clone(), sel }
     }
 
-    /// Invoke `f(local_id, sim)` for every row of the view, walking the
-    /// contiguous buffer two rows per `dot2` pass (query streamed once
-    /// per pair), scalar tail for an odd final row.
+    fn store_ref(&self) -> StoreRef<'_> {
+        let store = &self.store;
+        StoreRef { flat: store.flat(), d: store.dim(), quant: store.quant_sidecar() }
+    }
+
+    fn check_query(&self, q: &[f32]) {
+        assert_eq!(
+            q.len(),
+            self.dim(),
+            "query dimension {} != corpus dimension {}",
+            q.len(),
+            self.dim()
+        );
+    }
+
+    fn check_locals(&self, locals: &[u32]) {
+        let n = self.len();
+        for &l in locals {
+            assert!((l as usize) < n, "local id {l} out of view of {n} rows");
+        }
+    }
+
+    /// Resolve `locals` into a backend gather: `(mapped_rows, base)` such
+    /// that store row `pos` = `base + rows[pos]`, where `rows` is `locals`
+    /// itself for row-range views (`mapped_rows = None`) or the id-mapped
+    /// copy for id-list views.
+    fn resolve_locals(&self, locals: &[u32]) -> (Option<Vec<u32>>, usize) {
+        match &self.sel {
+            Selection::Rows(lo, _) => {
+                self.check_locals(locals);
+                (None, *lo)
+            }
+            Selection::Ids(sel) => {
+                let rows = locals.iter().map(|&l| sel.ids[l as usize]).collect();
+                (Some(rows), 0)
+            }
+        }
+    }
+
+    /// Invoke `f(local_id, sim)` for every row of the view, through the
+    /// backend's **exact** block/gather kernels (always bit-identical to
+    /// [`dot_slice`], whatever the backend kind).
     pub fn for_each_sim(&self, q: &[f32], mut f: impl FnMut(u32, f64)) {
         let d = self.dim();
-        assert_eq!(q.len(), d, "query dimension {} != corpus dimension {d}", q.len());
+        self.check_query(q);
+        if d == 0 {
+            for i in 0..self.len() as u32 {
+                f(i, 0.0);
+            }
+            return;
+        }
+        let sink = &mut |pos: usize, s: f64| f(pos as u32, s);
         match &self.sel {
             Selection::Rows(lo, hi) => {
                 let (lo, hi) = (*lo, *hi);
-                let flat = &self.store.flat()[lo * d..hi * d];
-                let n = hi - lo;
-                if d == 0 {
-                    for i in 0..n {
-                        f(i as u32, 0.0);
-                    }
-                    return;
-                }
-                let mut i = 0usize;
-                while i + 2 <= n {
-                    let b = i * d;
-                    let (s0, s1) = dot2(q, &flat[b..b + d], &flat[b + d..b + 2 * d]);
-                    f(i as u32, s0);
-                    f((i + 1) as u32, s1);
-                    i += 2;
-                }
-                if i < n {
-                    f(i as u32, dot_slice(q, &flat[i * d..(i + 1) * d]));
-                }
+                let block = &self.store.flat()[lo * d..hi * d];
+                self.store.kernel.sim_block(q, block, d, hi - lo, sink);
             }
-            Selection::Ids(ids) => {
-                self.sim_of_rows(q, ids, |pos, s| f(pos as u32, s));
+            Selection::Ids(sel) => {
+                self.store.kernel.sim_gather(q, self.store.flat(), d, &sel.ids, 0, sink);
             }
         }
     }
 
-    /// Invoke `f(position, sim)` for the given **local** ids, in order,
-    /// gathering rows through the selection in blocks.
-    fn sim_of_locals(&self, q: &[f32], locals: &[u32], mut f: impl FnMut(usize, f64)) {
-        let d = self.dim();
-        assert_eq!(q.len(), d, "query dimension {} != corpus dimension {d}", q.len());
-        match &self.sel {
-            Selection::Rows(lo, hi) => {
-                let (lo, hi) = (*lo, *hi);
-                let row = |local: u32| {
-                    let r = lo + local as usize;
-                    assert!(r < hi, "local id {local} out of view");
-                    self.store.row(r)
-                };
-                let mut i = 0usize;
-                while i + 2 <= locals.len() {
-                    let (s0, s1) = dot2(q, row(locals[i]), row(locals[i + 1]));
-                    f(i, s0);
-                    f(i + 1, s1);
-                    i += 2;
-                }
-                if i < locals.len() {
-                    f(i, dot_slice(q, row(locals[i])));
-                }
-            }
-            Selection::Ids(ids) => {
-                // One indirection through the selection, then the row kernel.
-                let rows: Vec<u32> = locals.iter().map(|&l| ids[l as usize]).collect();
-                self.sim_of_rows(q, &rows, f);
-            }
-        }
-    }
-
-    /// `f(position, sim)` over absolute store rows (internal).
-    fn sim_of_rows(&self, q: &[f32], rows: &[u32], mut f: impl FnMut(usize, f64)) {
-        let row = |id: u32| self.store.row(id as usize);
-        let mut i = 0usize;
-        while i + 2 <= rows.len() {
-            let (s0, s1) = dot2(q, row(rows[i]), row(rows[i + 1]));
-            f(i, s0);
-            f(i + 1, s1);
-            i += 2;
-        }
-        if i < rows.len() {
-            f(i, dot_slice(q, row(rows[i])));
-        }
-    }
-
-    /// Blocked batch dot: similarities of `q` to the given local ids,
-    /// replacing `out`'s contents in matching order.
+    /// Blocked batch dot: **exact** similarities of `q` to the given local
+    /// ids, replacing `out`'s contents in matching order.
     pub fn dot_batch(&self, q: &[f32], locals: &[u32], out: &mut Vec<f64>) {
+        self.check_query(q);
         out.clear();
         out.reserve(locals.len());
-        self.sim_of_locals(q, locals, |_, s| out.push(s));
+        let d = self.dim();
+        let flat = self.store.flat();
+        let (mapped, base) = self.resolve_locals(locals);
+        let rows = mapped.as_deref().unwrap_or(locals);
+        let sink = &mut |_: usize, s: f64| out.push(s);
+        self.store.kernel.sim_gather(q, flat, d, rows, base, sink);
     }
 
-    /// Blocked full-view top-k scan: offer every row to `heap`. Returns the
-    /// number of exact similarity evaluations (= the view length).
+    /// Full-view top-k scan through the backend: offer rows to `heap`
+    /// (quantized backends pre-filter and re-rank, exact backends offer
+    /// every row). Returns the number of exact similarity evaluations.
     pub fn scan_topk(&self, q: &[f32], heap: &mut KnnHeap) -> u64 {
-        self.for_each_sim(q, |local, s| heap.offer(local, s));
-        self.len() as u64
-    }
-
-    /// Blocked full-view range scan: push every `(local, sim)` with
-    /// `sim >= tau`. Returns the number of exact similarity evaluations.
-    pub fn scan_range(&self, q: &[f32], tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
-        self.for_each_sim(q, |local, s| {
-            if s >= tau {
-                out.push((local, s));
+        self.check_query(q);
+        if self.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let sel = RowSel::Block { start: *lo, n: *hi - *lo };
+                self.store.kernel.scan_topk(q, s, sel, heap)
             }
-        });
-        self.len() as u64
+            Selection::Ids(sel) => {
+                let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
+                self.store.kernel.scan_topk(q, s, gather, heap)
+            }
+        }
     }
 
-    /// Blocked id-list top-k scan (leaf buckets). Returns evals.
+    /// Full-view range scan through the backend: push every `(local, sim)`
+    /// with `sim >= tau`, in ascending local order. Returns exact evals.
+    pub fn scan_range(&self, q: &[f32], tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
+        self.check_query(q);
+        if self.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let sel = RowSel::Block { start: *lo, n: *hi - *lo };
+                self.store.kernel.scan_range(q, s, sel, tau, out)
+            }
+            Selection::Ids(sel) => {
+                let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
+                self.store.kernel.scan_range(q, s, gather, tau, out)
+            }
+        }
+    }
+
+    /// Blocked id-list top-k scan (leaf buckets). Returns exact evals.
     pub fn scan_ids_topk(&self, q: &[f32], locals: &[u32], heap: &mut KnnHeap) -> u64 {
-        self.sim_of_locals(q, locals, |pos, s| heap.offer(locals[pos], s));
-        locals.len() as u64
+        self.check_query(q);
+        if locals.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        let (mapped, base) = self.resolve_locals(locals);
+        let rows = mapped.as_deref().unwrap_or(locals);
+        let gather = RowSel::Gather { rows, base, report: Some(locals) };
+        self.store.kernel.scan_topk(q, s, gather, heap)
     }
 
-    /// Blocked id-list range scan (leaf buckets). Returns evals.
+    /// Blocked id-list range scan (leaf buckets). Returns exact evals.
     pub fn scan_ids_range(
         &self,
         q: &[f32],
@@ -480,12 +583,15 @@ impl CorpusView {
         tau: f64,
         out: &mut Vec<(u32, f64)>,
     ) -> u64 {
-        self.sim_of_locals(q, locals, |pos, s| {
-            if s >= tau {
-                out.push((locals[pos], s));
-            }
-        });
-        locals.len() as u64
+        self.check_query(q);
+        if locals.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        let (mapped, base) = self.resolve_locals(locals);
+        let rows = mapped.as_deref().unwrap_or(locals);
+        let gather = RowSel::Gather { rows, base, report: Some(locals) };
+        self.store.kernel.scan_range(q, s, gather, tau, out)
     }
 }
 
@@ -584,6 +690,21 @@ mod tests {
     }
 
     #[test]
+    fn id_list_gather_is_cached_across_calls_and_clones() {
+        let (store, _) = store_of(30, 5, 21);
+        let view = store.select(vec![7, 2, 19, 4]);
+        let first = view.contiguous_or_gather();
+        let second = view.contiguous_or_gather();
+        // The second scan performs zero gathers: same allocation.
+        assert!(std::ptr::eq(first, second));
+        let clone = view.clone();
+        assert!(std::ptr::eq(first, clone.contiguous_or_gather()));
+        // Sub-views get their own (fresh) cache.
+        let sub = view.slice_rows(1, 3);
+        assert_eq!(sub.contiguous_or_gather().len(), 2 * 5);
+    }
+
+    #[test]
     fn scan_kernels_filter_and_rank() {
         let (store, rows) = store_of(50, 8, 3);
         let view = store.view();
@@ -599,6 +720,27 @@ mod tests {
         let top = heap.into_sorted();
         assert_eq!(top[0].0, 4);
         assert!((top[0].1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_kernel_swaps_backend_without_copying_the_buffer() {
+        let (store, _) = store_of(12, 6, 17);
+        let simd = store.clone().with_kernel(KernelKind::Simd);
+        assert!(std::ptr::eq(store.flat(), simd.flat()));
+        assert_eq!(simd.kernel_kind(), KernelKind::Simd);
+        assert!(simd.quant_sidecar().is_none());
+        // Small stores scan exactly even under i8 (no sidecar) — the
+        // memtable-rebuild guarantee; large stores get one, lazily.
+        let quant = store.clone().with_kernel(KernelKind::QuantizedI8);
+        assert!(std::ptr::eq(store.flat(), quant.flat()));
+        assert!(quant.quant_sidecar().is_none());
+        let (big, _) = store_of(QUANT_MIN_ROWS, 4, 18);
+        let big = big.with_kernel(KernelKind::QuantizedI8);
+        assert!(big.quant_sidecar().is_some());
+        // The sidecar is cached: same pointer on the second call.
+        let a = big.quant_sidecar().unwrap() as *const QuantSidecar;
+        let b = big.quant_sidecar().unwrap() as *const QuantSidecar;
+        assert_eq!(a, b);
     }
 
     #[test]

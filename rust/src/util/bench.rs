@@ -6,7 +6,10 @@
 //! the measured work.
 
 use std::hint::black_box as std_black_box;
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::Json;
 
 /// Re-export of the optimizer sink.
 #[inline(always)]
@@ -30,6 +33,32 @@ impl Measurement {
     pub fn throughput_mops(&self) -> f64 {
         1e3 / self.mean_ns
     }
+
+    /// The measurement as a JSON object (the row shape of `BENCH_*.json`
+    /// perf artifacts; callers may append extra fields).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("ops_per_iter", Json::Num(self.ops_per_iter as f64)),
+            ("mops", Json::Num(self.throughput_mops())),
+        ])
+    }
+}
+
+/// Write a `BENCH_*.json` perf artifact: `{"bench": ..., "results":
+/// [...]}`. Benches emit these so the repo accumulates a throughput
+/// trajectory that regressions show up against.
+pub fn write_bench_json(path: &Path, bench: &str, results: Vec<Json>) -> std::io::Result<()> {
+    let doc = Json::obj(vec![
+        ("bench", Json::Str(bench.to_string())),
+        ("results", Json::Arr(results)),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write(path, text)
 }
 
 /// Harness configuration (JMH-flavored).

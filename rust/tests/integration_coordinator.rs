@@ -36,6 +36,7 @@ fn config(mode: ExecMode, artifacts: Option<std::path::PathBuf>) -> CoordinatorC
         },
         artifact_dir: artifacts,
         hybrid_pivots: 16,
+        kernel: None,
     }
 }
 

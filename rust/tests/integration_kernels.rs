@@ -1,0 +1,217 @@
+//! Kernel-backend contract sweep (ADR-003), hand-rolled property style
+//! like `integration_index_exactness.rs` (seeded randomized grid):
+//!
+//! 1. **Tier 1 — bitwise**: the `Simd` backend produces bit-identical
+//!    similarities to `Scalar` on *every* scan entry point (`for_each_sim`,
+//!    `dot_batch`, `scan_topk`, `scan_range`, `scan_ids_topk`,
+//!    `scan_ids_range`), over contiguous, sliced, and id-list views, with
+//!    sizes straddling all block/lane boundaries.
+//! 2. **Tier 2 — exact-after-re-rank**: the `QuantizedI8` backend returns
+//!    *byte-identical* final kNN/range results (3 seeds x 2 index kinds)
+//!    while spending fewer exact evaluations, because its i8 pre-filter
+//!    only skips rows certified to miss the result set.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::{Coordinator, CoordinatorConfig, IndexKind};
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::{KnnHeap, QueryStats, SimilarityIndex};
+use simetra::storage::{CorpusStore, CorpusView, KernelKind};
+
+#[test]
+fn simd_acceleration_is_active_when_required() {
+    // CI's simd matrix leg sets SIMETRA_EXPECT_AVX=1 so the
+    // backend-equivalence coverage cannot silently degrade to
+    // scalar-vs-scalar on a runner without AVX.
+    if std::env::var("SIMETRA_EXPECT_AVX").as_deref() != Ok("1") {
+        return;
+    }
+    let kernel = simetra::storage::SimdKernel::new();
+    assert!(kernel.accelerated(), "SIMETRA_EXPECT_AVX=1 but no AVX path is active");
+}
+
+/// Assert two result lists are byte-identical: same ids, same f64 bits.
+fn assert_bits_eq(a: &[(u32, f64)], b: &[(u32, f64)], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: lengths differ");
+    for (i, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{ctx}: id at {i}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{ctx}: sim bits at {i}");
+    }
+}
+
+/// Views of the same rows under two backends: (contiguous full, interior
+/// slice, id-list selection).
+fn view_pairs(a: &CorpusStore, b: &CorpusStore) -> Vec<(String, CorpusView, CorpusView)> {
+    let n = a.len();
+    let mut ids: Vec<u32> = (0..n as u32).step_by(3).collect();
+    ids.reverse(); // non-monotone id list
+    vec![
+        ("full".into(), a.view(), b.view()),
+        ("slice".into(), a.slice(n / 5..n - n / 7), b.slice(n / 5..n - n / 7)),
+        ("ids".into(), a.select(ids.clone()), b.select(ids)),
+    ]
+}
+
+#[test]
+fn simd_is_bitwise_identical_to_scalar_on_every_entry_point() {
+    for &(n, d) in &[(23usize, 5usize), (64, 8), (100, 17), (257, 96), (400, 64)] {
+        let store = uniform_sphere_store(n, d, 1_000 + n as u64);
+        let scalar = store.clone().with_kernel(KernelKind::Scalar);
+        let simd = store.clone().with_kernel(KernelKind::Simd);
+        let q = uniform_sphere(1, d, 9_000 + d as u64).pop().unwrap();
+        for (name, va, vb) in view_pairs(&scalar, &simd) {
+            let ctx = format!("{name} n={n} d={d}");
+            let m = va.len();
+
+            // for_each_sim
+            let mut sa = Vec::new();
+            let mut sb = Vec::new();
+            va.for_each_sim(q.as_slice(), |id, s| sa.push((id, s)));
+            vb.for_each_sim(q.as_slice(), |id, s| sb.push((id, s)));
+            assert_bits_eq(&sa, &sb, &format!("{ctx} for_each_sim"));
+
+            // dot_batch over a duplicated, shuffled local id list.
+            let locals: Vec<u32> = (0..m as u32).rev().chain([0, m as u32 / 2, 0]).collect();
+            let mut da = Vec::new();
+            let mut db = Vec::new();
+            va.dot_batch(q.as_slice(), &locals, &mut da);
+            vb.dot_batch(q.as_slice(), &locals, &mut db);
+            assert_eq!(da.len(), db.len());
+            for (x, y) in da.iter().zip(&db) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx} dot_batch");
+            }
+
+            // scan_topk
+            let mut ha = KnnHeap::new(7);
+            let mut hb = KnnHeap::new(7);
+            assert_eq!(va.scan_topk(q.as_slice(), &mut ha), vb.scan_topk(q.as_slice(), &mut hb));
+            assert_bits_eq(&ha.into_sorted(), &hb.into_sorted(), &format!("{ctx} topk"));
+
+            // scan_range
+            let mut ra = Vec::new();
+            let mut rb = Vec::new();
+            va.scan_range(q.as_slice(), 0.05, &mut ra);
+            vb.scan_range(q.as_slice(), 0.05, &mut rb);
+            assert_bits_eq(&ra, &rb, &format!("{ctx} range"));
+
+            // scan_ids_topk / scan_ids_range over a bucket-like id list.
+            let bucket: Vec<u32> = (0..m as u32).filter(|i| i % 2 == 0).collect();
+            let mut ba = KnnHeap::new(4);
+            let mut bb = KnnHeap::new(4);
+            va.scan_ids_topk(q.as_slice(), &bucket, &mut ba);
+            vb.scan_ids_topk(q.as_slice(), &bucket, &mut bb);
+            assert_bits_eq(&ba.into_sorted(), &bb.into_sorted(), &format!("{ctx} ids_topk"));
+            let mut ga = Vec::new();
+            let mut gb = Vec::new();
+            va.scan_ids_range(q.as_slice(), &bucket, -0.2, &mut ga);
+            vb.scan_ids_range(q.as_slice(), &bucket, -0.2, &mut gb);
+            assert_bits_eq(&ga, &gb, &format!("{ctx} ids_range"));
+        }
+    }
+}
+
+#[test]
+fn quantized_scans_are_byte_identical_after_rerank() {
+    for seed in [1u64, 2, 3] {
+        // Above QUANT_MIN_ROWS so the i8 pre-filter actually engages.
+        let n = 1200;
+        let d = 32;
+        let store = uniform_sphere_store(n, d, 40 + seed);
+        let exact = store.clone().with_kernel(KernelKind::Scalar);
+        let quant = store.clone().with_kernel(KernelKind::QuantizedI8);
+        for qseed in [7u64, 8] {
+            let q = uniform_sphere(1, d, 900 * seed + qseed).pop().unwrap();
+            let mut he = KnnHeap::new(9);
+            let mut hq = KnnHeap::new(9);
+            let evals_exact = exact.view().scan_topk(q.as_slice(), &mut he);
+            let evals_quant = quant.view().scan_topk(q.as_slice(), &mut hq);
+            assert_bits_eq(
+                &he.into_sorted(),
+                &hq.into_sorted(),
+                &format!("seed={seed} qseed={qseed} topk"),
+            );
+            assert!(evals_quant <= evals_exact, "{evals_quant} > {evals_exact}");
+
+            let mut re = Vec::new();
+            let mut rq = Vec::new();
+            exact.view().scan_range(q.as_slice(), 0.25, &mut re);
+            quant.view().scan_range(q.as_slice(), 0.25, &mut rq);
+            assert_bits_eq(&re, &rq, &format!("seed={seed} qseed={qseed} range"));
+        }
+        // The pre-filter actually ran, and re-ranks never exceed it.
+        let kc = quant.kernel().counters();
+        assert!(kc.quant_prefilter_rows() > 0);
+        assert!(kc.quant_rerank_rows() <= kc.quant_prefilter_rows());
+    }
+}
+
+#[test]
+fn quantized_knn_through_indexes_matches_exact_across_seeds_and_kinds() {
+    for seed in [11u64, 12, 13] {
+        for kind in [IndexKind::Vp, IndexKind::Gnat] {
+            let n = 1100;
+            let d = 24;
+            let store = uniform_sphere_store(n, d, seed * 31);
+            let idx_exact =
+                kind.build(store.clone().with_kernel(KernelKind::Scalar).view(), BoundKind::Mult);
+            let idx_quant = kind.build(
+                store.clone().with_kernel(KernelKind::QuantizedI8).view(),
+                BoundKind::Mult,
+            );
+            for qi in [0usize, 399, 811, 1099] {
+                let q = store.vec(qi);
+                let mut s1 = QueryStats::default();
+                let mut s2 = QueryStats::default();
+                let a = idx_exact.knn(&q, 6, &mut s1);
+                let b = idx_quant.knn(&q, 6, &mut s2);
+                assert_bits_eq(&a, &b, &format!("seed={seed} kind={kind:?} knn qi={qi}"));
+                let a = idx_exact.range(&q, 0.3, &mut s1);
+                let b = idx_quant.range(&q, 0.3, &mut s2);
+                assert_bits_eq(&a, &b, &format!("seed={seed} kind={kind:?} range qi={qi}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_backend_is_exact_through_a_sharded_coordinator() {
+    // Shards give the backend Rows/Gather selections with base > 0 — the
+    // only path where the sidecar's absolute-row indexing meets non-zero
+    // offsets. Results must still be byte-identical to the exact backend.
+    fn cfg(kind: KernelKind) -> CoordinatorConfig {
+        CoordinatorConfig { n_shards: 3, kernel: Some(kind), ..Default::default() }
+    }
+    let store = uniform_sphere_store(1500, 16, 1234);
+    let exact = Coordinator::new(store.clone(), cfg(KernelKind::Scalar)).unwrap();
+    let quant = Coordinator::new(store.clone(), cfg(KernelKind::QuantizedI8)).unwrap();
+    for qi in [0usize, 423, 999, 1499] {
+        let q = store.vec(qi).as_slice().to_vec();
+        let (a, _) = exact.knn(q.clone(), 8).unwrap();
+        let (b, _) = quant.knn(q.clone(), 8).unwrap();
+        assert_eq!(a, b, "knn qi={qi}");
+        let (a, _) = exact.range(q.clone(), 0.4).unwrap();
+        let (b, _) = quant.range(q, 0.4).unwrap();
+        assert_eq!(a, b, "range qi={qi}");
+    }
+    let stats = quant.stats();
+    assert_eq!(stats.kernel, "i8");
+    assert!(stats.quant_prefilter_rows > 0, "{stats:?}");
+    assert!(stats.quant_rerank_rows <= stats.quant_prefilter_rows, "{stats:?}");
+}
+
+#[test]
+fn quantization_roundtrip_error_is_within_one_127th_per_component() {
+    let d = 96;
+    let store = uniform_sphere_store(1100, d, 77).with_kernel(KernelKind::QuantizedI8);
+    let side = store.quant_sidecar().expect("i8 backend builds a sidecar");
+    for row in 0..store.len() {
+        let scale = side.scale(row);
+        let codes = side.codes(row);
+        for (j, &v) in store.row(row).iter().enumerate() {
+            let err = (v as f64 - scale * codes[j] as f64).abs();
+            // Unit-norm rows: max |component| <= 1, so the rounding error
+            // is <= scale/2 <= 1/254 < 1/127.
+            assert!(err <= 1.0 / 127.0, "row {row} comp {j}: err {err}");
+            assert!(err <= scale * 0.5 + 1e-12, "row {row} comp {j}: err {err}");
+        }
+    }
+}
