@@ -1,0 +1,85 @@
+//! Query-pipeline throughput through the unified execution layer
+//! (ADR-004): batched kNN through a reused `QueryContext` vs the
+//! allocate-per-call compatibility path, swept over batch size × index
+//! kind. Emits `BENCH_query.json` so the scratch-arena win is tracked as a
+//! perf trajectory, not a one-off claim.
+//!
+//!     cargo bench --bench query_pipeline
+//!     SIMETRA_BENCH_QUICK=1 cargo bench --bench query_pipeline  # small
+//!
+//! Each measurement executes one whole batch; `mean_ns` is per *query*
+//! (ops = batch size), so rows are comparable across batch sizes and
+//! `mops` is millions of queries per second.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::IndexKind;
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::{QueryStats, SimilarityIndex};
+use simetra::query::QueryContext;
+use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig};
+use simetra::util::Json;
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
+    let n: usize = if quick { 4_000 } else { 20_000 };
+    let d = 32usize;
+    let k = 10usize;
+    let batches: &[usize] = if quick { &[1, 32] } else { &[1, 8, 64, 256] };
+    let kinds: &[IndexKind] = if quick {
+        &[IndexKind::Vp, IndexKind::Linear]
+    } else {
+        &[IndexKind::Vp, IndexKind::Ball, IndexKind::Gnat, IndexKind::Laesa, IndexKind::Linear]
+    };
+
+    let store = uniform_sphere_store(n, d, 0x9a17);
+    let queries = uniform_sphere(256, d, 0x7a11);
+
+    let mut rows: Vec<Json> = Vec::new();
+    for &kind in kinds {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        for &batch in batches {
+            let qs = &queries[..batch];
+
+            // Reused-context batched path.
+            let mut ctx = QueryContext::new();
+            let name = format!("knn_batch {} b{batch}", kind.name());
+            let m_ctx = bench(&cfg, &name, batch as u64, || {
+                black_box(index.knn_batch(qs, k, &mut ctx))
+            });
+            report(&m_ctx);
+
+            // Allocate-per-call compatibility path (the pre-ADR-004 shape).
+            let name = format!("knn_fresh {} b{batch}", kind.name());
+            let m_fresh = bench(&cfg, &name, batch as u64, || {
+                let mut hits = Vec::with_capacity(batch);
+                for q in qs {
+                    let mut st = QueryStats::default();
+                    hits.push(index.knn(q, k, &mut st));
+                }
+                black_box(hits)
+            });
+            report(&m_fresh);
+            let speedup = m_fresh.mean_ns / m_ctx.mean_ns;
+            println!("    -> context reuse is {speedup:.2}x vs fresh\n");
+
+            for (m, path) in [(&m_ctx, "context"), (&m_fresh, "fresh")] {
+                let mut row = match m.to_json() {
+                    Json::Obj(fields) => fields,
+                    _ => unreachable!("to_json returns an object"),
+                };
+                row.push(("index".into(), Json::Str(kind.name().into())));
+                row.push(("path".into(), Json::Str(path.into())));
+                row.push(("batch".into(), Json::Num(batch as f64)));
+                row.push(("n".into(), Json::Num(n as f64)));
+                row.push(("d".into(), Json::Num(d as f64)));
+                row.push(("k".into(), Json::Num(k as f64)));
+                rows.push(Json::Obj(row));
+            }
+        }
+    }
+
+    let path = std::path::Path::new("BENCH_query.json");
+    write_bench_json(path, "query_pipeline", rows).expect("write BENCH_query.json");
+    println!("wrote {}", path.display());
+}

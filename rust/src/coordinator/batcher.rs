@@ -73,11 +73,14 @@ impl<Q: Send + 'static, R: Send + 'static> BatchSubmitter<Q, R> {
 
 /// Spawn the batch loop: `handler` receives full batches on the collector
 /// thread. Returns the submitter; the loop ends when the submitter drops.
-pub fn spawn_batcher<Q, R, F>(config: BatchConfig, handler: F) -> BatchSubmitter<Q, R>
+/// The handler is `FnMut` — it runs on the one collector thread, so it can
+/// own mutable per-worker state (the coordinator parks a reusable
+/// `query::QueryContext` there, ADR-004).
+pub fn spawn_batcher<Q, R, F>(config: BatchConfig, mut handler: F) -> BatchSubmitter<Q, R>
 where
     Q: Send + 'static,
     R: Send + 'static,
-    F: Fn(Vec<Job<Q, R>>) + Send + 'static,
+    F: FnMut(Vec<Job<Q, R>>) + Send + 'static,
 {
     let (tx, rx) = mpsc::sync_channel::<Job<Q, R>>(config.queue_depth.max(1));
     std::thread::Builder::new()

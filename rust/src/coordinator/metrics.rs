@@ -20,7 +20,16 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub sim_evals: AtomicU64,
     pub engine_calls: AtomicU64,
+    /// Candidates (subtrees / regions / pivot-table rows) discarded by a
+    /// certified bound without an exact evaluation, aggregated from every
+    /// worker's per-query [`crate::index::QueryStats`] (ADR-004).
     pub pruned: AtomicU64,
+    /// Tree nodes / pivot tables visited, aggregated like `pruned`.
+    pub nodes_visited: AtomicU64,
+    /// Queries answered on a previously-used worker `QueryContext` — the
+    /// scratch-arena hit rate (steady state: every query but each worker's
+    /// first).
+    pub ctx_reuses: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -95,6 +104,16 @@ impl Metrics {
     ) -> StatsSnapshot {
         let ing = ingest.copied().unwrap_or_default();
         let kc = kernel.counters();
+        let sim_evals = self.sim_evals.load(Ordering::Relaxed);
+        let pruned = self.pruned.load(Ordering::Relaxed);
+        // Bound-tightness gauge: of all candidate decisions the indexes
+        // made (prune by bound vs score exactly), the fraction resolved by
+        // a bound. 0 on an idle server.
+        let pruned_fraction = if pruned + sim_evals > 0 {
+            pruned as f64 / (pruned + sim_evals) as f64
+        } else {
+            0.0
+        };
         StatsSnapshot {
             kernel: kernel.kind().name().to_string(),
             blocked_scan_rows: kc.blocked_scan_rows(),
@@ -105,9 +124,12 @@ impl Metrics {
             errors: self.errors.load(Ordering::Relaxed),
             corpus_size,
             shards,
-            sim_evals: self.sim_evals.load(Ordering::Relaxed),
+            sim_evals,
             engine_calls: self.engine_calls.load(Ordering::Relaxed),
-            pruned: self.pruned.load(Ordering::Relaxed),
+            pruned,
+            nodes_visited: self.nodes_visited.load(Ordering::Relaxed),
+            ctx_reuses: self.ctx_reuses.load(Ordering::Relaxed),
+            pruned_fraction,
             latency_us_p50: self.latency.percentile(0.50),
             latency_us_p99: self.latency.percentile(0.99),
             latency_us_max: self.max_latency_us(),

@@ -35,8 +35,10 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::bounds::BoundKind;
+use crate::index::QueryStats;
 use crate::ingest::{IngestConfig, IngestCorpus};
 use crate::metrics::DenseVec;
+use crate::query::QueryContext;
 use crate::runtime::EngineHandle;
 use crate::storage::{CorpusStore, KernelBackend, KernelKind};
 
@@ -95,20 +97,88 @@ struct ShardWorker {
     tx: std::sync::mpsc::Sender<ShardJob>,
 }
 
-fn spawn_shard_worker(shard: Arc<Shard>) -> ShardWorker {
+/// The one `k` shared by every query of the batch, when the whole batch is
+/// kNN at one `k` — the common shape, served through the batched index API.
+fn uniform_knn_k(queries: &[Query]) -> Option<usize> {
+    let mut k0 = None;
+    for q in queries {
+        match (q, k0) {
+            (Query::Knn { k, .. }, None) => k0 = Some(*k),
+            (Query::Knn { k, .. }, Some(prev)) if *k == prev => {}
+            _ => return None,
+        }
+    }
+    k0
+}
+
+/// The one `tau` shared by every query of an all-range batch (exact bit
+/// match — f64 equality is the right notion for "same threshold").
+fn uniform_range_tau(queries: &[Query]) -> Option<f64> {
+    let mut t0: Option<f64> = None;
+    for q in queries {
+        match (q, t0) {
+            (Query::Range { tau, .. }, None) => t0 = Some(*tau),
+            (Query::Range { tau, .. }, Some(prev)) if tau.to_bits() == prev.to_bits() => {}
+            _ => return None,
+        }
+    }
+    t0
+}
+
+/// Execute one batch on a shard through the worker's reusable context:
+/// uniform batches run through the batched index API
+/// (`knn_batch`/`range_batch`), mixed batches per query — either way every
+/// query of every batch reuses the same scratch arena. Aggregates each
+/// query's pruning stats into `agg` and returns per-job (hits, evals).
+fn run_shard_batch(
+    shard: &Shard,
+    queries: &[Query],
+    parsed: &[DenseVec],
+    ctx: &mut QueryContext,
+    agg: &mut QueryStats,
+) -> Vec<(Vec<(u32, f64)>, u64)> {
+    let mut out = Vec::with_capacity(queries.len());
+    let batched = if let Some(k) = uniform_knn_k(queries) {
+        Some(shard.knn_batch(parsed, k, ctx))
+    } else {
+        uniform_range_tau(queries).map(|tau| shard.range_batch(parsed, tau, ctx))
+    };
+    match batched {
+        Some(results) => {
+            for (hits, stats) in results {
+                agg.merge(&stats);
+                out.push((hits, stats.sim_evals));
+            }
+        }
+        None => {
+            for (q, v) in queries.iter().zip(parsed.iter()) {
+                let (hits, stats) = match q {
+                    Query::Knn { k, .. } => shard.knn_ctx(v, *k, ctx),
+                    Query::Range { tau, .. } => shard.range_ctx(v, *tau, ctx),
+                };
+                agg.merge(&stats);
+                out.push((hits, stats.sim_evals));
+            }
+        }
+    }
+    out
+}
+
+fn spawn_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>) -> ShardWorker {
     let (tx, rx) = std::sync::mpsc::channel::<ShardJob>();
     std::thread::Builder::new()
         .name(format!("simetra-shard-{}", shard.base))
         .spawn(move || {
+            // The worker's scratch arena: one per shard thread, reused by
+            // every query of every batch (ADR-004).
+            let mut ctx = QueryContext::new();
             for job in rx {
-                let mut out = Vec::with_capacity(job.queries.len());
-                for (q, v) in job.queries.iter().zip(job.parsed.iter()) {
-                    let (hits, stats) = match q {
-                        Query::Knn { k, .. } => shard.knn_index(v, *k),
-                        Query::Range { tau, .. } => shard.range_index(v, *tau),
-                    };
-                    out.push((hits, stats.sim_evals));
-                }
+                let q0 = ctx.queries();
+                let mut agg = QueryStats::default();
+                let out = run_shard_batch(&shard, &job.queries, &job.parsed, &mut ctx, &mut agg);
+                metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);
+                metrics.pruned.fetch_add(agg.pruned, Relaxed);
+                metrics.nodes_visited.fetch_add(agg.nodes_visited, Relaxed);
                 let _ = job.reply.send((shard.base, out));
             }
         })
@@ -174,16 +244,21 @@ impl Coordinator {
             (None, ExecMode::Index) => None,
         };
         let metrics = Arc::new(Metrics::default());
-        let workers: Arc<Vec<ShardWorker>> =
-            Arc::new(shards.iter().map(|s| spawn_shard_worker(s.clone())).collect());
+        let workers: Arc<Vec<ShardWorker>> = Arc::new(
+            shards.iter().map(|s| spawn_shard_worker(s.clone(), metrics.clone())).collect(),
+        );
 
         let m2 = metrics.clone();
         let mode = config.mode;
+        // Context for the Engine/Hybrid paths that execute inline on the
+        // collector thread (index-path fallbacks and engine-mode range
+        // queries); Index mode runs on the shard workers' own contexts.
+        let mut ctx = QueryContext::new();
         let submitter = batcher::spawn_batcher(
             config.batch.clone(),
             move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
                 m2.batches.fetch_add(1, Relaxed);
-                execute_batch(&shards, &workers, engine.as_deref(), &m2, mode, jobs);
+                execute_batch(&shards, &workers, engine.as_deref(), &m2, mode, &mut ctx, jobs);
             },
         );
         let snapshot = ConfigSnapshot {
@@ -244,11 +319,16 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::default());
         let m2 = metrics.clone();
         let ing2 = ingest.clone();
+        // The batch collector thread's scratch arena: the mutable path has
+        // no shard fan-out, so one context (owned by the FnMut handler)
+        // serves every query of every batch.
+        let mut ctx = QueryContext::new();
+        let mut hits_buf: Vec<(u64, f64)> = Vec::new();
         let submitter = batcher::spawn_batcher(
             config.batch.clone(),
             move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
                 m2.batches.fetch_add(1, Relaxed);
-                execute_batch_ingest(&ing2, &m2, jobs);
+                execute_batch_ingest(&ing2, &m2, &mut ctx, &mut hits_buf, jobs);
             },
         );
         let snapshot = ConfigSnapshot {
@@ -382,30 +462,44 @@ impl Coordinator {
 
 /// Execute one batch against the mutable corpus: each query runs over the
 /// atomically published generation snapshot (no shard scatter — the
-/// generation fan-out happens inside the snapshot).
+/// generation fan-out happens inside the snapshot), all through the
+/// collector thread's one reusable context and hit buffer.
 fn execute_batch_ingest(
     ingest: &IngestCorpus,
     metrics: &Metrics,
+    ctx: &mut QueryContext,
+    hits_buf: &mut Vec<(u64, f64)>,
     jobs: Vec<batcher::Job<Query, QueryResult>>,
 ) {
+    let q0 = ctx.queries();
     for job in jobs {
-        let (hits, evals) = match &job.query {
-            Query::Knn { vector, k } => ingest.knn(&DenseVec::new(vector.clone()), *k),
-            Query::Range { vector, tau } => ingest.range(&DenseVec::new(vector.clone()), *tau),
+        let evals = match &job.query {
+            Query::Knn { vector, k } => {
+                ingest.knn_ctx(&DenseVec::new(vector.clone()), *k, ctx, hits_buf)
+            }
+            Query::Range { vector, tau } => {
+                ingest.range_ctx(&DenseVec::new(vector.clone()), *tau, ctx, hits_buf)
+            }
         };
         metrics.sim_evals.fetch_add(evals, Relaxed);
-        let hits: Vec<Hit> = hits.into_iter().map(|(id, score)| Hit { id, score }).collect();
+        metrics.pruned.fetch_add(ctx.stats.pruned, Relaxed);
+        metrics.nodes_visited.fetch_add(ctx.stats.nodes_visited, Relaxed);
+        let hits: Vec<Hit> = hits_buf.iter().map(|&(id, score)| Hit { id, score }).collect();
         let _ = job.reply.send(Ok((hits, evals)));
     }
+    metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);
 }
 
-/// Execute one batch: scatter to shards, merge, reply.
+/// Execute one batch: scatter to shards, merge, reply. `ctx` is the
+/// collector thread's reusable context, used by the Engine/Hybrid arms'
+/// inline index-path executions (Index mode runs on the shard workers).
 fn execute_batch(
     shards: &[Arc<Shard>],
     workers: &[ShardWorker],
     engine: Option<&EngineHandle>,
     metrics: &Metrics,
     mode: ExecMode,
+    ctx: &mut QueryContext,
     jobs: Vec<batcher::Job<Query, QueryResult>>,
 ) {
     let queries: Vec<Query> = jobs.iter().map(|j| j.query.clone()).collect();
@@ -462,6 +556,8 @@ fn execute_batch(
         }
         ExecMode::Engine | ExecMode::Hybrid => {
             let engine = engine.expect("engine required (checked in new)");
+            let ctx_q0 = ctx.queries();
+            let mut agg = QueryStats::default();
             let knn_ids: Vec<usize> = queries
                 .iter()
                 .enumerate()
@@ -512,7 +608,8 @@ fn execute_batch(
                             eprintln!("engine batch failed: {e}; falling back to index");
                             for &ji in &knn_ids {
                                 let Query::Knn { k, .. } = &queries[ji] else { continue };
-                                let (hits, stats) = shard.knn_index(&parsed[ji], *k);
+                                let (hits, stats) = shard.knn_ctx(&parsed[ji], *k, ctx);
+                                agg.merge(&stats);
                                 for (id, s) in hits {
                                     results[ji].0.push((shard.base + id as u64, s));
                                 }
@@ -536,7 +633,8 @@ fn execute_batch(
                             }
                             Err(e) => {
                                 eprintln!("hybrid range failed: {e}; index fallback");
-                                let (hits, stats) = shard.range_index(&parsed[ji], *tau);
+                                let (hits, stats) = shard.range_ctx(&parsed[ji], *tau, ctx);
+                                agg.merge(&stats);
                                 for (id, s) in hits {
                                     results[ji].0.push((shard.base + id as u64, s));
                                 }
@@ -544,7 +642,10 @@ fn execute_batch(
                             }
                         }
                     } else {
-                        let (hits, stats) = shard.range_index(&parsed[ji], *tau);
+                        // Engine mode scores top-k only; range queries run
+                        // the index path on the collector's context.
+                        let (hits, stats) = shard.range_ctx(&parsed[ji], *tau, ctx);
+                        agg.merge(&stats);
                         for (id, s) in hits {
                             results[ji].0.push((shard.base + id as u64, s));
                         }
@@ -552,6 +653,9 @@ fn execute_batch(
                     }
                 }
             }
+            metrics.pruned.fetch_add(agg.pruned, Relaxed);
+            metrics.nodes_visited.fetch_add(agg.nodes_visited, Relaxed);
+            metrics.ctx_reuses.fetch_add(ctx.reuses_since(ctx_q0), Relaxed);
         }
     }
 
@@ -563,7 +667,9 @@ fn execute_batch(
             continue;
         }
         metrics.sim_evals.fetch_add(evals, Relaxed);
-        hits.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        // Total order (ids unique): unstable sort, identical permutation,
+        // no merge-buffer allocation on the reply path.
+        hits.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         if let Query::Knn { k, .. } = &job.query {
             hits.truncate(*k);
         }
@@ -600,6 +706,12 @@ mod tests {
         let stats = coord.stats();
         assert_eq!(stats.queries, 3);
         assert!(stats.batches >= 1);
+        // The aggregated traversal stats flow through (ADR-004): every
+        // query visits at least the root node, and from the second query
+        // on, each shard worker's context is a reuse.
+        assert!(stats.nodes_visited > 0, "{stats:?}");
+        assert!(stats.ctx_reuses > 0, "{stats:?}");
+        assert!((0.0..=1.0).contains(&stats.pruned_fraction), "{stats:?}");
     }
 
     #[test]

@@ -164,6 +164,9 @@ impl Response {
                 ("sim_evals", Json::Num(s.sim_evals as f64)),
                 ("engine_calls", Json::Num(s.engine_calls as f64)),
                 ("pruned", Json::Num(s.pruned as f64)),
+                ("nodes_visited", Json::Num(s.nodes_visited as f64)),
+                ("ctx_reuses", Json::Num(s.ctx_reuses as f64)),
+                ("pruned_fraction", Json::Num(s.pruned_fraction)),
                 ("latency_us_p50", Json::Num(s.latency_us_p50 as f64)),
                 ("latency_us_p99", Json::Num(s.latency_us_p99 as f64)),
                 ("latency_us_max", Json::Num(s.latency_us_max as f64)),
@@ -226,6 +229,9 @@ impl Response {
                     sim_evals: g("sim_evals")?,
                     engine_calls: g("engine_calls")?,
                     pruned: g("pruned")?,
+                    nodes_visited: g("nodes_visited")?,
+                    ctx_reuses: g("ctx_reuses")?,
+                    pruned_fraction: v.req("pruned_fraction")?.as_f64()?,
                     latency_us_p50: g("latency_us_p50")?,
                     latency_us_p99: g("latency_us_p99")?,
                     latency_us_max: g("latency_us_max")?,
@@ -281,7 +287,19 @@ pub struct StatsSnapshot {
     pub shards: u64,
     pub sim_evals: u64,
     pub engine_calls: u64,
+    /// Candidates discarded by a certified bound without an exact
+    /// evaluation, totalled across all served queries (ADR-004 aggregates
+    /// every worker's per-query `QueryStats` here).
     pub pruned: u64,
+    /// Tree nodes / pivot tables visited, totalled like `pruned`.
+    pub nodes_visited: u64,
+    /// Queries answered on a reused worker `QueryContext` (scratch-arena
+    /// hit count; steady state = every query but each worker's first).
+    pub ctx_reuses: u64,
+    /// Bound-tightness gauge: `pruned / (pruned + sim_evals)` — the
+    /// fraction of candidate decisions resolved by a bound instead of an
+    /// exact evaluation. 0.0 on an idle server.
+    pub pruned_fraction: f64,
     /// Latency percentiles in microseconds.
     pub latency_us_p50: u64,
     pub latency_us_p99: u64,
@@ -340,6 +358,9 @@ mod tests {
                 kernel: "i8".into(),
                 queries: 5,
                 corpus_size: 100,
+                nodes_visited: 42,
+                ctx_reuses: 4,
+                pruned_fraction: 0.25,
                 generations: 3,
                 memtable_items: 17,
                 tombstones: 2,

@@ -51,7 +51,7 @@ pub fn merge_knn(
             all.push((base + id as u64, s));
         }
     }
-    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
     all.truncate(k);
     all
 }
@@ -64,7 +64,7 @@ pub fn merge_range(per_shard: &[(u64, Vec<(u32, f64)>)]) -> Vec<(u64, f64)> {
             all.push((base + id as u64, s));
         }
     }
-    all.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    all.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
     all
 }
 

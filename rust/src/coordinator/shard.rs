@@ -15,6 +15,7 @@ use crate::index::{
     SimilarityIndex, VpTree,
 };
 use crate::metrics::DenseVec;
+use crate::query::QueryContext;
 use crate::runtime::EngineHandle;
 use crate::storage::CorpusView;
 
@@ -187,18 +188,70 @@ impl Shard {
             .expect("shard view is a non-contiguous id-list; see Shard::new docs")
     }
 
-    /// Per-query kNN through the local index.
+    /// Per-query kNN through the local index (throwaway scratch).
     pub fn knn_index(&self, q: &DenseVec, k: usize) -> (Vec<(u32, f64)>, QueryStats) {
         let mut stats = QueryStats::default();
         let hits = self.index.knn(q, k, &mut stats);
         (hits, stats)
     }
 
-    /// Per-query range through the local index.
+    /// Per-query range through the local index (throwaway scratch).
     pub fn range_index(&self, q: &DenseVec, tau: f64) -> (Vec<(u32, f64)>, QueryStats) {
         let mut stats = QueryStats::default();
         let hits = self.index.range(q, tau, &mut stats);
         (hits, stats)
+    }
+
+    /// Per-query kNN through a borrowed [`QueryContext`] — the worker hot
+    /// path: the traversal reuses the context's heap, frontier, and
+    /// quantized-query cache instead of allocating (ADR-004). Marks the
+    /// query boundary itself.
+    pub fn knn_ctx(
+        &self,
+        q: &DenseVec,
+        k: usize,
+        ctx: &mut QueryContext,
+    ) -> (Vec<(u32, f64)>, QueryStats) {
+        ctx.begin_query();
+        let mut out = Vec::new();
+        self.index.knn_into(q, k, ctx, &mut out);
+        (out, ctx.stats)
+    }
+
+    /// Per-query range through a borrowed [`QueryContext`]; see
+    /// [`Shard::knn_ctx`].
+    pub fn range_ctx(
+        &self,
+        q: &DenseVec,
+        tau: f64,
+        ctx: &mut QueryContext,
+    ) -> (Vec<(u32, f64)>, QueryStats) {
+        ctx.begin_query();
+        let mut out = Vec::new();
+        self.index.range_into(q, tau, ctx, &mut out);
+        (out, ctx.stats)
+    }
+
+    /// A whole kNN batch through one shared context: per-query results and
+    /// stats, byte-identical to per-query [`Shard::knn_index`] calls.
+    pub fn knn_batch(
+        &self,
+        queries: &[DenseVec],
+        k: usize,
+        ctx: &mut QueryContext,
+    ) -> Vec<(Vec<(u32, f64)>, QueryStats)> {
+        self.index.knn_batch(queries, k, ctx)
+    }
+
+    /// A whole range batch through one shared context; see
+    /// [`Shard::knn_batch`].
+    pub fn range_batch(
+        &self,
+        queries: &[DenseVec],
+        tau: f64,
+        ctx: &mut QueryContext,
+    ) -> Vec<(Vec<(u32, f64)>, QueryStats)> {
+        self.index.range_batch(queries, tau, ctx)
     }
 
     /// Batched kNN over the whole shard through the PJRT artifact, tiling
@@ -368,7 +421,9 @@ impl Shard {
                     }
                 }
             }
-            hits.sort_by(|a: &(u32, f64), b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            hits.sort_unstable_by(|a: &(u32, f64), b| {
+                b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+            });
             out.push((hits, evals));
         }
         Ok(out)

@@ -12,11 +12,10 @@
 //! Leaf buckets are scored through the corpus's batch kernels when built on
 //! a zero-copy [`crate::storage::CorpusView`].
 
-use std::collections::BinaryHeap;
-
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::{Frontier, QueryContext};
 
-use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 struct Node {
     /// Routing point id; also a member of the subtree.
@@ -130,22 +129,23 @@ impl<C: Corpus> BallTree<C> {
         s: f64,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
+        ctx.stats.nodes_visited += 1;
         if s >= tau {
             out.push((node.center, s));
         }
         let Some(cover) = node.cover else { return };
         if self.bound.upper_over(s, cover) < tau {
-            stats.pruned += 1;
+            ctx.stats.pruned += 1;
             return; // nothing below can reach tau
         }
-        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
+        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        ctx.stats.sim_evals += n;
         for child in &node.children {
             let sc = self.corpus.sim_q(q, child.center);
-            stats.sim_evals += 1;
-            self.range_rec(child, q, sc, tau, out, stats);
+            ctx.stats.sim_evals += 1;
+            self.range_rec(child, q, sc, tau, out, ctx);
         }
     }
 }
@@ -155,58 +155,67 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.center);
-            stats.sim_evals += 1;
-            self.range_rec(root, q, s, tau, &mut out, stats);
+            ctx.stats.sim_evals += 1;
+            self.range_rec(root, q, s, tau, out, ctx);
         }
-        sort_desc(&mut out);
-        out
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut results = KnnHeap::new(k);
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let mut results = ctx.lease_heap(k);
         // Frontier entries carry the node and its already-computed center
         // similarity; priority is the subtree's upper bound.
-        let mut frontier: BinaryHeap<Prioritized<(&Node, f64)>> = BinaryHeap::new();
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.center);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             results.offer(root.center, s);
             let ub = match root.cover {
                 Some(cover) => self.bound.upper_over(s, cover),
                 None => -1.0,
             };
-            frontier.push(Prioritized { ub, item: (root, s) });
+            frontier.push(ub, root, s);
         }
-        while let Some(Prioritized { ub, item: (node, s) }) = frontier.pop() {
+        while let Some((ub, node, _s)) = frontier.pop() {
             if results.len() >= k && ub <= results.floor() {
                 break;
             }
             if node.cover.is_none() {
                 continue;
             }
-            stats.nodes_visited += 1;
-            let _ = s;
-            stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, &mut results);
+            ctx.stats.nodes_visited += 1;
+            let evals =
+                self.corpus.scan_ids_topk_ctx(q, &node.bucket, &mut results, ctx.kernel_scratch());
+            ctx.stats.sim_evals += evals;
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.center);
-                stats.sim_evals += 1;
+                ctx.stats.sim_evals += 1;
                 results.offer(child.center, sc);
                 let child_ub = match child.cover {
                     Some(cover) => self.bound.upper_over(sc, cover),
                     None => -1.0,
                 };
                 if results.len() < k || child_ub > results.floor() {
-                    frontier.push(Prioritized { ub: child_ub, item: (child, sc) });
+                    frontier.push(child_ub, child, sc);
                 } else {
-                    stats.pruned += 1;
+                    ctx.stats.pruned += 1;
                 }
             }
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
+        ctx.release_frontier(frontier);
     }
 
     fn name(&self) -> &'static str {
@@ -218,7 +227,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
 mod tests {
     use super::*;
     use crate::data::uniform_sphere;
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
 
     #[test]
     fn matches_linear_scan() {

@@ -9,11 +9,10 @@
 //! pruning uses the tracked similarity interval of each node's descendants
 //! together with Eq. 13, exactly like the other trees.
 
-use std::collections::BinaryHeap;
-
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::{Frontier, QueryContext};
 
-use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 /// Geometric base of the level radii (2.0 in the original paper; 1.3 gives
 /// flatter trees on the sphere where all angles are <= pi).
@@ -122,21 +121,21 @@ impl<C: Corpus> CoverTree<C> {
         s: f64,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
+        ctx.stats.nodes_visited += 1;
         if s >= tau {
             out.push((node.id, s));
         }
         let Some(cover) = node.cover else { return };
         if self.bound.upper_over(s, cover) < tau {
-            stats.pruned += 1;
+            ctx.stats.pruned += 1;
             return;
         }
         for child in &node.children {
             let sc = self.corpus.sim_q(q, child.id);
-            stats.sim_evals += 1;
-            self.range_rec(child, q, sc, tau, out, stats);
+            ctx.stats.sim_evals += 1;
+            self.range_rec(child, q, sc, tau, out, ctx);
         }
     }
 }
@@ -146,51 +145,59 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.id);
-            stats.sim_evals += 1;
-            self.range_rec(root, q, s, tau, &mut out, stats);
+            ctx.stats.sim_evals += 1;
+            self.range_rec(root, q, s, tau, out, ctx);
         }
-        sort_desc(&mut out);
-        out
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut results = KnnHeap::new(k);
-        let mut frontier: BinaryHeap<Prioritized<(&Node, f64)>> = BinaryHeap::new();
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let mut results = ctx.lease_heap(k);
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.id);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             results.offer(root.id, s);
             let ub = match root.cover {
                 Some(cover) => self.bound.upper_over(s, cover),
                 None => -1.0,
             };
-            frontier.push(Prioritized { ub, item: (root, s) });
+            frontier.push(ub, root, s);
         }
-        while let Some(Prioritized { ub, item: (node, _s) }) = frontier.pop() {
+        while let Some((ub, node, _s)) = frontier.pop() {
             if results.len() >= k && ub <= results.floor() {
                 break;
             }
-            stats.nodes_visited += 1;
+            ctx.stats.nodes_visited += 1;
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.id);
-                stats.sim_evals += 1;
+                ctx.stats.sim_evals += 1;
                 results.offer(child.id, sc);
                 let child_ub = match child.cover {
                     Some(cover) => self.bound.upper_over(sc, cover),
                     None => -1.0,
                 };
                 if results.len() < k || child_ub > results.floor() {
-                    frontier.push(Prioritized { ub: child_ub, item: (child, sc) });
+                    frontier.push(child_ub, child, sc);
                 } else {
-                    stats.pruned += 1;
+                    ctx.stats.pruned += 1;
                 }
             }
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
+        ctx.release_frontier(frontier);
     }
 
     fn name(&self) -> &'static str {
@@ -202,7 +209,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
 mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
     use crate::metrics::SimVector;
 
     #[test]

@@ -14,8 +14,9 @@
 //! [`crate::storage::CorpusView`]).
 
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::QueryContext;
 
-use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, SimilarityIndex};
 
 struct Node {
     splits: Vec<u32>,
@@ -134,17 +135,21 @@ impl<C: Corpus> Gnat<C> {
         q: &C::Vector,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
-        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
+        ctx.stats.nodes_visited += 1;
+        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        ctx.stats.sim_evals += n;
         if node.splits.is_empty() {
             return;
         }
         let m = node.splits.len();
-        let mut split_sims = Vec::new();
+        // One pooled buffer per recursion level: each level leases its own
+        // and releases it on exit, so the pool's steady state holds at most
+        // tree-depth buffers.
+        let mut split_sims = ctx.lease_sims();
         self.corpus.sims(q, &node.splits, &mut split_sims);
-        stats.sim_evals += m as u64;
+        ctx.stats.sim_evals += m as u64;
         // NOTE: split points live in their own region's subtree; regions
         // are pruned collectively below, and surviving subtrees report them.
         for (j, child) in node.children.iter().enumerate() {
@@ -156,11 +161,12 @@ impl<C: Corpus> Gnat<C> {
                 }
             }
             if alive {
-                self.range_rec(child, q, tau, out, stats);
+                self.range_rec(child, q, tau, out, ctx);
             } else {
-                stats.pruned += 1;
+                ctx.stats.pruned += 1;
             }
         }
+        ctx.release_sims(split_sims);
     }
 
     fn knn_rec(
@@ -169,35 +175,39 @@ impl<C: Corpus> Gnat<C> {
         q: &C::Vector,
         results: &mut KnnHeap,
         k: usize,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
-        stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, results);
+        ctx.stats.nodes_visited += 1;
+        let n = self.corpus.scan_ids_topk_ctx(q, &node.bucket, results, ctx.kernel_scratch());
+        ctx.stats.sim_evals += n;
         if node.splits.is_empty() {
             return;
         }
         let m = node.splits.len();
-        let mut split_sims = Vec::new();
+        let mut split_sims = ctx.lease_sims();
         self.corpus.sims(q, &node.splits, &mut split_sims);
-        stats.sim_evals += m as u64;
+        ctx.stats.sim_evals += m as u64;
         // Visit regions in order of their best upper bound so the floor
-        // rises quickly; skip regions certified below the floor.
-        let mut order: Vec<(usize, f64)> = (0..node.children.len())
-            .map(|j| {
-                let ub = (0..m)
-                    .map(|i| self.bound.upper_over(split_sims[i], node.ranges[i * m + j]))
-                    .fold(f64::INFINITY, f64::min);
-                (j, ub)
-            })
-            .collect();
-        order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        for (j, ub) in order {
+        // rises quickly; skip regions certified below the floor. The (ub
+        // desc, region asc) comparator is total, so the allocation-free
+        // unstable sort is deterministic.
+        let mut order = ctx.lease_pairs();
+        order.extend((0..node.children.len()).map(|j| {
+            let ub = (0..m)
+                .map(|i| self.bound.upper_over(split_sims[i], node.ranges[i * m + j]))
+                .fold(f64::INFINITY, f64::min);
+            (j as u32, ub)
+        }));
+        order.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for &(j, ub) in order.iter() {
             if results.len() >= k && ub <= results.floor() {
-                stats.pruned += 1;
+                ctx.stats.pruned += 1;
                 continue;
             }
-            self.knn_rec(&node.children[j], q, results, k, stats);
+            self.knn_rec(&node.children[j as usize], q, results, k, ctx);
         }
+        ctx.release_pairs(order);
+        ctx.release_sims(split_sims);
     }
 }
 
@@ -206,21 +216,28 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if let Some(root) = &self.root {
-            self.range_rec(root, q, tau, &mut out, stats);
+            self.range_rec(root, q, tau, out, ctx);
         }
-        sort_desc(&mut out);
-        out
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut results = KnnHeap::new(k);
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let mut results = ctx.lease_heap(k);
         if let Some(root) = &self.root {
-            self.knn_rec(root, q, &mut results, k, stats);
+            self.knn_rec(root, q, &mut results, k, ctx);
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
     }
 
     fn name(&self) -> &'static str {
@@ -232,7 +249,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
 mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
 
     #[test]
     fn matches_linear_scan() {

@@ -13,14 +13,18 @@
 //! corpus's batch kernel ([`Corpus::sims_of_item`]).
 
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::QueryContext;
 
-use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 /// Pivot-table index with triangle-inequality candidate filtering.
 pub struct Laesa<C: Corpus> {
     corpus: C,
     /// Pivot item ids.
     pivots: Vec<u32>,
+    /// The pivot ids again, sorted — allocation-free membership checks on
+    /// the query path (a per-query `HashSet` would defeat ADR-004).
+    pivots_sorted: Vec<u32>,
     /// `table[p * n + i]` = sim(pivots[p], items[i]).
     table: Vec<f64>,
     bound: BoundKind,
@@ -57,7 +61,9 @@ impl<C: Corpus> Laesa<C> {
                     .unwrap();
             }
         }
-        Laesa { corpus, pivots, table, bound }
+        let mut pivots_sorted = pivots.clone();
+        pivots_sorted.sort_unstable();
+        Laesa { corpus, pivots, pivots_sorted, table, bound }
     }
 
     pub fn n_pivots(&self) -> usize {
@@ -90,11 +96,10 @@ impl<C: Corpus> Laesa<C> {
         iv
     }
 
-    fn query_pivot_sims(&self, q: &C::Vector, stats: &mut QueryStats) -> Vec<f64> {
-        stats.sim_evals += self.pivots.len() as u64;
-        let mut out = Vec::new();
-        self.corpus.sims(q, &self.pivots, &mut out);
-        out
+    /// Pivot sims into a borrowed buffer (the context query path).
+    fn query_pivot_sims_into(&self, q: &C::Vector, ctx: &mut QueryContext, out: &mut Vec<f64>) {
+        ctx.stats.sim_evals += self.pivots.len() as u64;
+        self.corpus.sims(q, &self.pivots, out);
     }
 }
 
@@ -103,58 +108,69 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        stats.nodes_visited += 1;
-        let q_piv = self.query_pivot_sims(q, stats);
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        ctx.stats.nodes_visited += 1;
+        out.clear();
+        let mut q_piv = ctx.lease_sims();
+        self.query_pivot_sims_into(q, ctx, &mut q_piv);
         for i in 0..self.corpus.len() {
             let iv = self.interval_for(&q_piv, i);
             if iv.hi < tau || iv.is_empty() {
-                stats.pruned += 1;
+                ctx.stats.pruned += 1;
                 continue; // certified non-match
             }
             let s = self.corpus.sim_q(q, i as u32);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             if s >= tau {
                 out.push((i as u32, s));
             }
         }
-        sort_desc(&mut out);
-        out
+        ctx.release_sims(q_piv);
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        stats.nodes_visited += 1;
-        let q_piv = self.query_pivot_sims(q, stats);
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        ctx.stats.nodes_visited += 1;
+        let mut q_piv = ctx.lease_sims();
+        self.query_pivot_sims_into(q, ctx, &mut q_piv);
         let n = self.corpus.len();
 
         // AESA-style ordering: score candidates in decreasing upper bound so
         // the floor rises as fast as possible; stop when the floor clears
-        // the best remaining upper bound.
-        let mut cands: Vec<(u32, f64)> = (0..n)
-            .map(|i| (i as u32, self.interval_for(&q_piv, i).hi))
-            .collect();
-        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // the best remaining upper bound. The (ub desc, id asc) comparator
+        // is total, so the allocation-free unstable sort is deterministic.
+        let mut cands = ctx.lease_pairs();
+        cands.extend((0..n).map(|i| (i as u32, self.interval_for(&q_piv, i).hi)));
+        cands.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 
-        let mut results = KnnHeap::new(k);
+        let mut results = ctx.lease_heap(k);
         // Seed with the pivots (already evaluated — free information).
         for (idx, &p) in self.pivots.iter().enumerate() {
             results.offer(p, q_piv[idx]);
         }
-        let pivot_set: std::collections::HashSet<u32> = self.pivots.iter().copied().collect();
         for (pos, &(id, ub)) in cands.iter().enumerate() {
             if results.len() >= k && ub <= results.floor() {
-                stats.pruned += (cands.len() - pos) as u64;
+                ctx.stats.pruned += (cands.len() - pos) as u64;
                 break;
             }
-            if pivot_set.contains(&id) {
+            if self.pivots_sorted.binary_search(&id).is_ok() {
                 continue;
             }
             let s = self.corpus.sim_q(q, id);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             results.offer(id, s);
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
+        ctx.release_pairs(cands);
+        ctx.release_sims(q_piv);
     }
 
     fn name(&self) -> &'static str {
@@ -166,7 +182,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
 mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
     use crate::metrics::SimVector;
     use crate::storage::CorpusStore;
 
@@ -194,8 +210,9 @@ mod tests {
         let pts = uniform_sphere(100, 8, 43);
         let idx = Laesa::build(pts.clone(), BoundKind::Mult, 8);
         let q = &pts[99];
-        let mut stats = QueryStats::default();
-        let q_piv = idx.query_pivot_sims(q, &mut stats);
+        let mut ctx = QueryContext::new();
+        let mut q_piv = Vec::new();
+        idx.query_pivot_sims_into(q, &mut ctx, &mut q_piv);
         for i in 0..100 {
             let iv = idx.interval_for(&q_piv, i);
             let s = q.sim(&pts[i]);

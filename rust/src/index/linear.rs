@@ -1,6 +1,8 @@
 //! Exhaustive scan — the correctness oracle and pruning-power baseline.
 
-use super::{sort_desc, Corpus, KnnHeap, QueryStats, SimilarityIndex};
+use crate::query::QueryContext;
+
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 /// Brute-force index: every query evaluates every item. Built on a
 /// [`crate::storage::CorpusView`] the scan runs through the blocked batch
@@ -21,19 +23,28 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        stats.nodes_visited += 1;
-        let mut out = Vec::new();
-        stats.sim_evals += self.corpus.scan_all_range(q, tau, &mut out);
-        sort_desc(&mut out);
-        out
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        ctx.stats.nodes_visited += 1;
+        out.clear();
+        let evals = self.corpus.scan_all_range_ctx(q, tau, out, ctx.kernel_scratch());
+        ctx.stats.sim_evals += evals;
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        stats.nodes_visited += 1;
-        let mut heap = KnnHeap::new(k);
-        stats.sim_evals += self.corpus.scan_all_topk(q, &mut heap);
-        heap.into_sorted()
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        ctx.stats.nodes_visited += 1;
+        let mut heap = ctx.lease_heap(k);
+        let evals = self.corpus.scan_all_topk_ctx(q, &mut heap, ctx.kernel_scratch());
+        ctx.stats.sim_evals += evals;
+        out.clear();
+        heap.drain_into(out);
+        ctx.release_heap(heap);
     }
 
     fn name(&self) -> &'static str {
@@ -45,6 +56,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
 mod tests {
     use super::*;
     use crate::data::uniform_sphere;
+    use crate::index::QueryStats;
     use crate::storage::CorpusStore;
 
     #[test]

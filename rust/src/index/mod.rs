@@ -29,7 +29,8 @@ pub use mtree::MTree;
 pub use vptree::VpTree;
 
 use crate::metrics::{DenseVec, SimVector};
-use crate::storage::CorpusView;
+use crate::query::QueryContext;
+use crate::storage::{CorpusView, KernelScratch};
 
 /// What an index builds over: a collection of vectors addressed by dense
 /// `u32` ids.
@@ -120,6 +121,57 @@ pub trait Corpus: Send + Sync + 'static {
         }
         self.len() as u64
     }
+
+    // --- scratch-borrowing scan variants (the context hot path) ------------
+    //
+    // Defaults ignore the scratch (the per-item path has nothing to cache);
+    // the CorpusView impl overrides them to thread the scratch into the
+    // kernel backend, so a quantized backend builds its QuantQuery once per
+    // query instead of once per leaf bucket (ADR-004).
+
+    /// [`Corpus::scan_ids_range`] with a borrowed per-query kernel scratch.
+    fn scan_ids_range_ctx(
+        &self,
+        q: &Self::Vector,
+        ids: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
+        self.scan_ids_range(q, ids, tau, out)
+    }
+
+    /// [`Corpus::scan_ids_topk`] with a borrowed per-query kernel scratch.
+    fn scan_ids_topk_ctx(
+        &self,
+        q: &Self::Vector,
+        ids: &[u32],
+        heap: &mut KnnHeap,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
+        self.scan_ids_topk(q, ids, heap)
+    }
+
+    /// [`Corpus::scan_all_range`] with a borrowed per-query kernel scratch.
+    fn scan_all_range_ctx(
+        &self,
+        q: &Self::Vector,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
+        self.scan_all_range(q, tau, out)
+    }
+
+    /// [`Corpus::scan_all_topk`] with a borrowed per-query kernel scratch.
+    fn scan_all_topk_ctx(
+        &self,
+        q: &Self::Vector,
+        heap: &mut KnnHeap,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
+        self.scan_all_topk(q, heap)
+    }
 }
 
 /// The owning per-item corpus: works for any [`SimVector`], including
@@ -200,6 +252,46 @@ impl Corpus for CorpusView {
     fn scan_all_topk(&self, q: &DenseVec, heap: &mut KnnHeap) -> u64 {
         CorpusView::scan_topk(self, q.as_slice(), heap)
     }
+
+    fn scan_ids_range_ctx(
+        &self,
+        q: &DenseVec,
+        ids: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        CorpusView::scan_ids_range_with(self, q.as_slice(), ids, tau, out, scratch)
+    }
+
+    fn scan_ids_topk_ctx(
+        &self,
+        q: &DenseVec,
+        ids: &[u32],
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        CorpusView::scan_ids_topk_with(self, q.as_slice(), ids, heap, scratch)
+    }
+
+    fn scan_all_range_ctx(
+        &self,
+        q: &DenseVec,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        CorpusView::scan_range_with(self, q.as_slice(), tau, out, scratch)
+    }
+
+    fn scan_all_topk_ctx(
+        &self,
+        q: &DenseVec,
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        CorpusView::scan_topk_with(self, q.as_slice(), heap, scratch)
+    }
 }
 
 /// Query-time instrumentation: the paper's pruning-power currency is the
@@ -223,6 +315,14 @@ impl QueryStats {
 }
 
 /// An exact cosine-similarity search index.
+///
+/// The required entry points (`range_into` / `knn_into`) borrow a
+/// [`QueryContext`] for every piece of traversal scratch and *replace* the
+/// contents of a caller-owned output buffer, so the steady-state query path
+/// allocates nothing (ADR-004). The classic `range` / `knn` signatures are
+/// provided wrappers that spin up a throwaway context, and
+/// `range_batch` / `knn_batch` run a whole query batch through one shared
+/// context (one `begin_query` per query).
 pub trait SimilarityIndex<V: SimVector>: Send + Sync {
     /// Number of indexed items.
     fn len(&self) -> usize;
@@ -231,12 +331,81 @@ pub trait SimilarityIndex<V: SimVector>: Send + Sync {
         self.len() == 0
     }
 
+    /// All `(id, sim)` with `sim(q, item) >= tau`, in descending
+    /// similarity, replacing `out`'s contents. Traversal scratch and
+    /// instrumentation come from `ctx` (whose per-query stats this call
+    /// adds to — the caller owns the query boundary via
+    /// [`QueryContext::begin_query`]).
+    fn range_into(&self, q: &V, tau: f64, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>);
+
+    /// The `k` most similar items, in descending similarity, replacing
+    /// `out`'s contents. Fewer than `k` are returned only when the corpus
+    /// is smaller than `k`. Scratch/stats discipline as in
+    /// [`SimilarityIndex::range_into`].
+    fn knn_into(&self, q: &V, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>);
+
     /// All `(id, sim)` with `sim(q, item) >= tau`, in descending similarity.
-    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)>;
+    /// (Convenience form: one throwaway context per call; hot paths reuse a
+    /// context through [`SimilarityIndex::range_into`] or the batch API.)
+    fn range(&self, q: &V, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut ctx = QueryContext::new();
+        ctx.begin_query();
+        let mut out = Vec::new();
+        self.range_into(q, tau, &mut ctx, &mut out);
+        stats.merge(&ctx.stats);
+        out
+    }
 
     /// The `k` most similar items, in descending similarity. Fewer than `k`
-    /// are returned only when the corpus is smaller than `k`.
-    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)>;
+    /// are returned only when the corpus is smaller than `k`. (Convenience
+    /// form; see [`SimilarityIndex::range`].)
+    fn knn(&self, q: &V, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
+        let mut ctx = QueryContext::new();
+        ctx.begin_query();
+        let mut out = Vec::new();
+        self.knn_into(q, k, &mut ctx, &mut out);
+        stats.merge(&ctx.stats);
+        out
+    }
+
+    /// Run a batch of range queries through one shared context. Results are
+    /// byte-identical to calling [`SimilarityIndex::range`] per query, and
+    /// each query's [`QueryStats`] ride along.
+    fn range_batch(
+        &self,
+        queries: &[V],
+        tau: f64,
+        ctx: &mut QueryContext,
+    ) -> Vec<(Vec<(u32, f64)>, QueryStats)> {
+        queries
+            .iter()
+            .map(|q| {
+                ctx.begin_query();
+                let mut out = Vec::new();
+                self.range_into(q, tau, ctx, &mut out);
+                (out, ctx.stats)
+            })
+            .collect()
+    }
+
+    /// Run a batch of kNN queries through one shared context. Results are
+    /// byte-identical to calling [`SimilarityIndex::knn`] per query.
+    fn knn_batch(
+        &self,
+        queries: &[V],
+        k: usize,
+        ctx: &mut QueryContext,
+    ) -> Vec<(Vec<(u32, f64)>, QueryStats)> {
+        queries
+            .iter()
+            .map(|q| {
+                ctx.begin_query();
+                let mut out = Vec::new();
+                self.knn_into(q, k, ctx, &mut out);
+                (out, ctx.stats)
+            })
+            .collect()
+    }
 
     /// Index name for benchmark tables.
     fn name(&self) -> &'static str;
@@ -252,9 +421,34 @@ pub struct KnnHeap {
     entries: Vec<(u32, f64)>,
 }
 
+impl Default for KnnHeap {
+    /// An empty k=1 heap that has allocated nothing — the rest state a
+    /// [`QueryContext`] holds between leases (`std::mem::take` must not
+    /// allocate).
+    fn default() -> Self {
+        KnnHeap { k: 1, entries: Vec::new() }
+    }
+}
+
 impl KnnHeap {
     pub fn new(k: usize) -> Self {
         KnnHeap { k: k.max(1), entries: Vec::with_capacity(k + 1) }
+    }
+
+    /// Reset for a fresh query retaining `k`, keeping the entry buffer.
+    /// After the first reset at a given `k`, subsequent same-`k` resets
+    /// never allocate (offer inserts before truncating, hence `k + 1`).
+    pub fn reset(&mut self, k: usize) {
+        self.k = k.max(1);
+        self.entries.clear();
+        self.entries.reserve(self.k + 1);
+    }
+
+    /// Append the retained entries (already in `(sim desc, id asc)` order)
+    /// to `out` and clear the heap, keeping its buffer — the
+    /// allocation-free sibling of [`KnnHeap::into_sorted`].
+    pub fn drain_into(&mut self, out: &mut Vec<(u32, f64)>) {
+        out.extend(self.entries.drain(..));
     }
 
     /// The `k` this heap retains (the backend pre-filters need it to
@@ -306,33 +500,12 @@ impl KnnHeap {
 }
 
 /// Sort a result set in descending similarity with deterministic tie order.
-pub(crate) fn sort_desc(results: &mut Vec<(u32, f64)>) {
-    results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-}
-
-/// Max-priority entry for best-first tree searches: orders a node handle by
-/// its similarity upper bound.
-#[derive(Debug, Clone, Copy)]
-pub(crate) struct Prioritized<T> {
-    pub ub: f64,
-    pub item: T,
-}
-
-impl<T> PartialEq for Prioritized<T> {
-    fn eq(&self, other: &Self) -> bool {
-        self.ub == other.ub
-    }
-}
-impl<T> Eq for Prioritized<T> {}
-impl<T> PartialOrd for Prioritized<T> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<T> Ord for Prioritized<T> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.ub.partial_cmp(&other.ub).unwrap_or(std::cmp::Ordering::Equal)
-    }
+/// `(sim desc, id asc)` is a *total* order over entries with unique ids, so
+/// the unstable sort (no allocation, unlike the stable merge sort) yields
+/// exactly the same permutation a stable sort would — this keeps the
+/// zero-allocation guarantee of the context query path.
+pub(crate) fn sort_desc(results: &mut [(u32, f64)]) {
+    results.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 }
 
 #[cfg(test)]
@@ -413,12 +586,21 @@ mod tests {
     }
 
     #[test]
-    fn prioritized_orders_by_ub() {
-        let mut heap = std::collections::BinaryHeap::new();
-        heap.push(Prioritized { ub: 0.2, item: "a" });
-        heap.push(Prioritized { ub: 0.9, item: "b" });
-        heap.push(Prioritized { ub: 0.5, item: "c" });
-        assert_eq!(heap.pop().unwrap().item, "b");
-        assert_eq!(heap.pop().unwrap().item, "c");
+    fn knn_heap_reset_and_drain_reuse_the_buffer() {
+        let mut h = KnnHeap::new(3);
+        for (id, s) in [(0u32, 0.1f64), (1, 0.9), (2, 0.5), (3, 0.7)] {
+            h.offer(id, s);
+        }
+        let mut out = vec![(99u32, 0.0f64)]; // drain_into replaces nothing, appends
+        out.clear();
+        h.drain_into(&mut out);
+        assert_eq!(out.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![1, 3, 2]);
+        assert!(h.is_empty());
+        h.reset(2);
+        assert_eq!(h.k(), 2);
+        h.offer(7, 0.3);
+        h.offer(8, 0.6);
+        h.offer(9, 0.9);
+        assert_eq!(h.into_sorted(), vec![(9, 0.9), (8, 0.6)]);
     }
 }

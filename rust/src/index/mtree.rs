@@ -14,11 +14,10 @@
 //! per-item scoring (through [`Corpus::sim_q`], zero-copy rows when built
 //! on a view) rather than the blocked bucket kernels.
 
-use std::collections::BinaryHeap;
-
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::{Frontier, QueryContext};
 
-use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 struct Entry {
     /// Routing object (internal) or data item (leaf).
@@ -159,9 +158,9 @@ impl<C: Corpus> MTree<C> {
         parent_s: Option<f64>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
+        ctx.stats.nodes_visited += 1;
         for entry in &node.entries {
             // Cheap pre-check (no sim eval): certified interval on
             // sim(q, entry.id) via the parent chain...
@@ -183,12 +182,12 @@ impl<C: Corpus> MTree<C> {
                     None => route_iv.hi,
                 };
                 if reach < tau {
-                    stats.pruned += 1;
+                    ctx.stats.pruned += 1;
                     continue; // dropped without computing sim(q, route)
                 }
             }
             let s = self.corpus.sim_q(q, entry.id);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             if node.is_leaf {
                 if s >= tau {
                     out.push((entry.id, s));
@@ -199,9 +198,9 @@ impl<C: Corpus> MTree<C> {
             // (routes are members of their own subtrees).
             let Some(cover) = entry.cover else { continue };
             if self.bound.upper_over(s, cover) >= tau {
-                self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), tau, out, stats);
+                self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), tau, out, ctx);
             } else {
-                stats.pruned += 1;
+                ctx.stats.pruned += 1;
             }
         }
     }
@@ -212,27 +211,32 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if let Some(root) = &self.root {
-            self.range_rec(root, q, None, tau, &mut out, stats);
+            self.range_rec(root, q, None, tau, out, ctx);
         }
-        sort_desc(&mut out);
-        out
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut results = KnnHeap::new(k);
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let mut results = ctx.lease_heap(k);
         // Frontier carries (node, sim(q, parent route)); NAN at the root.
-        let mut frontier: BinaryHeap<Prioritized<(&NodeBody, f64)>> = BinaryHeap::new();
+        let mut frontier: Frontier<'_, NodeBody> = ctx.lease_frontier();
         if let Some(root) = &self.root {
-            frontier.push(Prioritized { ub: 1.0, item: (root, f64::NAN) });
+            frontier.push(1.0, root, f64::NAN);
         }
-        while let Some(Prioritized { ub, item: (node, parent_s) }) = frontier.pop() {
+        while let Some((ub, node, parent_s)) = frontier.pop() {
             if results.len() >= k && ub <= results.floor() {
                 break;
             }
-            stats.nodes_visited += 1;
+            ctx.stats.nodes_visited += 1;
             for entry in &node.entries {
                 // Cheap pre-check against the current floor (the M-tree's
                 // saved similarity computation).
@@ -251,12 +255,12 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
                         None => route_iv.hi,
                     };
                     if reach <= results.floor() {
-                        stats.pruned += 1;
+                        ctx.stats.pruned += 1;
                         continue;
                     }
                 }
                 let s = self.corpus.sim_q(q, entry.id);
-                stats.sim_evals += 1;
+                ctx.stats.sim_evals += 1;
                 if node.is_leaf {
                     results.offer(entry.id, s);
                 } else {
@@ -265,18 +269,18 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
                     if let Some(cover) = entry.cover {
                         let child_ub = self.bound.upper_over(s, cover);
                         if results.len() < k || child_ub > results.floor() {
-                            frontier.push(Prioritized {
-                                ub: child_ub,
-                                item: (entry.child.as_ref().unwrap(), s),
-                            });
+                            frontier.push(child_ub, entry.child.as_ref().unwrap(), s);
                         } else {
-                            stats.pruned += 1;
+                            ctx.stats.pruned += 1;
                         }
                     }
                 }
             }
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
+        ctx.release_frontier(frontier);
     }
 
     fn name(&self) -> &'static str {
@@ -288,7 +292,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
 mod tests {
     use super::*;
     use crate::data::{uniform_sphere, vmf_mixture, VmfSpec};
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
 
     #[test]
     fn matches_linear_scan() {

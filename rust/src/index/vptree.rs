@@ -10,11 +10,10 @@
 //! zero-copy [`crate::storage::CorpusView`], in which case leaf buckets are
 //! scored through the blocked batch kernels.
 
-use std::collections::BinaryHeap;
-
 use crate::bounds::{BoundKind, SimInterval};
+use crate::query::{Frontier, QueryContext};
 
-use super::{sort_desc, Corpus, KnnHeap, Prioritized, QueryStats, SimilarityIndex};
+use super::{sort_desc, Corpus, SimilarityIndex};
 
 struct Node {
     /// Vantage point (item id).
@@ -112,21 +111,22 @@ impl<C: Corpus> VpTree<C> {
         q: &C::Vector,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        stats: &mut QueryStats,
+        ctx: &mut QueryContext,
     ) {
-        stats.nodes_visited += 1;
+        ctx.stats.nodes_visited += 1;
         let s = self.corpus.sim_q(q, node.vp);
-        stats.sim_evals += 1;
+        ctx.stats.sim_evals += 1;
         if s >= tau {
             out.push((node.vp, s));
         }
-        stats.sim_evals += self.corpus.scan_ids_range(q, &node.bucket, tau, out);
+        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        ctx.stats.sim_evals += n;
         for child in [&node.near, &node.far].into_iter().flatten() {
             let (iv, sub) = child;
             if self.bound.upper_over(s, *iv) >= tau {
-                self.range_node(sub, q, tau, out, stats);
+                self.range_node(sub, q, tau, out, ctx);
             } else {
-                stats.pruned += 1;
+                ctx.stats.pruned += 1;
             }
         }
     }
@@ -137,41 +137,51 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
         self.corpus.len()
     }
 
-    fn range(&self, q: &C::Vector, tau: f64, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut out = Vec::new();
+    fn range_into(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        out.clear();
         if let Some(root) = &self.root {
-            self.range_node(root, q, tau, &mut out, stats);
+            self.range_node(root, q, tau, out, ctx);
         }
-        sort_desc(&mut out);
-        out
+        sort_desc(out);
     }
 
-    fn knn(&self, q: &C::Vector, k: usize, stats: &mut QueryStats) -> Vec<(u32, f64)> {
-        let mut results = KnnHeap::new(k);
-        let mut frontier: BinaryHeap<Prioritized<&Node>> = BinaryHeap::new();
+    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let mut results = ctx.lease_heap(k);
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
-            frontier.push(Prioritized { ub: 1.0, item: root });
+            frontier.push(1.0, root, 0.0);
         }
-        while let Some(Prioritized { ub, item: node }) = frontier.pop() {
+        while let Some((ub, node, _)) = frontier.pop() {
             if results.len() >= k && ub <= results.floor() {
                 break; // no remaining node can improve the result set
             }
-            stats.nodes_visited += 1;
+            ctx.stats.nodes_visited += 1;
             let s = self.corpus.sim_q(q, node.vp);
-            stats.sim_evals += 1;
+            ctx.stats.sim_evals += 1;
             results.offer(node.vp, s);
-            stats.sim_evals += self.corpus.scan_ids_topk(q, &node.bucket, &mut results);
+            let evals =
+                self.corpus.scan_ids_topk_ctx(q, &node.bucket, &mut results, ctx.kernel_scratch());
+            ctx.stats.sim_evals += evals;
             for child in [&node.near, &node.far].into_iter().flatten() {
                 let (iv, sub) = child;
                 let child_ub = self.bound.upper_over(s, *iv);
                 if results.len() < k || child_ub > results.floor() {
-                    frontier.push(Prioritized { ub: child_ub, item: sub });
+                    frontier.push(child_ub, sub.as_ref(), 0.0);
                 } else {
-                    stats.pruned += 1;
+                    ctx.stats.pruned += 1;
                 }
             }
         }
-        results.into_sorted()
+        out.clear();
+        results.drain_into(out);
+        ctx.release_heap(results);
+        ctx.release_frontier(frontier);
     }
 
     fn name(&self) -> &'static str {
@@ -183,7 +193,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
 mod tests {
     use super::*;
     use crate::data::uniform_sphere;
-    use crate::index::LinearScan;
+    use crate::index::{LinearScan, QueryStats};
     use crate::metrics::DenseVec;
 
     fn check_matches_linear(n: usize, d: usize, seed: u64, bound: BoundKind) {

@@ -14,15 +14,18 @@ use std::sync::Arc;
 
 use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
-use crate::index::{KnnHeap, QueryStats, SimilarityIndex};
+use crate::index::{KnnHeap, SimilarityIndex};
 use crate::metrics::DenseVec;
+use crate::query::QueryContext;
 use crate::storage::{CorpusStore, KernelBackend};
 
 /// Sort global hits in descending similarity with the crate-wide tie
 /// order (similarity desc, id asc) — the same total order the linear
-/// scan, the shard merge, and [`KnnHeap`] use.
-fn sort_hits(hits: &mut Vec<(u64, f64)>) {
-    hits.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+/// scan, the shard merge, and [`KnnHeap`] use. The order is total (ids are
+/// unique), so the allocation-free unstable sort is deterministic and
+/// identical to a stable sort.
+fn sort_hits(hits: &mut [(u64, f64)]) {
+    hits.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 }
 
 /// The staging buffer: freshly inserted (normalized) rows awaiting a
@@ -223,7 +226,9 @@ impl GenerationSet {
 
     /// Exact kNN across all generations plus the memtable, tombstones
     /// filtered, merged under (sim desc, id asc). Returns the hits and the
-    /// number of exact similarity evaluations spent.
+    /// number of exact similarity evaluations spent. (Convenience form:
+    /// one throwaway context; the serving path reuses one through
+    /// [`GenerationSet::knn_ctx`].)
     ///
     /// Exactness: each source is asked for its top `k + |tombstones|`
     /// candidates; at most `|tombstones|` of any source's candidates can
@@ -232,61 +237,115 @@ impl GenerationSet {
     /// argument, and the same f64 tie caveat, as the per-index contract
     /// in `index/mod.rs`).
     pub fn knn(&self, q: &DenseVec, k: usize) -> (Vec<(u64, f64)>, u64) {
+        let mut ctx = QueryContext::new();
+        ctx.begin_query();
+        let mut out = Vec::new();
+        let evals = self.knn_ctx(q, k, &mut ctx, &mut out);
+        (out, evals)
+    }
+
+    /// [`GenerationSet::knn`] through a borrowed [`QueryContext`],
+    /// replacing `out`'s contents. One context serves the memtable and
+    /// every generation of the query — the traversal scratch *and* the
+    /// kernels' quantized-query cache are shared across the whole fan-out
+    /// (the cache depends only on the query bytes, not on which store is
+    /// scanned). The caller owns the query boundary
+    /// ([`QueryContext::begin_query`] once per logical query). Returns the
+    /// exact evaluations this query spent.
+    pub fn knn_ctx(
+        &self,
+        q: &DenseVec,
+        k: usize,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> u64 {
         let k = k.max(1);
         let fetch = k.saturating_add(self.tombstones.len());
-        let mut all: Vec<(u64, f64)> = Vec::new();
-        let mut evals = 0u64;
+        let evals_before = ctx.stats.sim_evals;
+        out.clear();
+        let mut buf = ctx.lease_pairs();
         for g in &self.generations {
-            let mut stats = QueryStats::default();
-            for (local, s) in g.index.knn(q, fetch, &mut stats) {
+            g.index.knn_into(q, fetch, ctx, &mut buf);
+            for &(local, s) in buf.iter() {
                 let id = g.ids[local as usize];
                 if !self.tombstones.contains(&id) {
-                    all.push((id, s));
+                    out.push((id, s));
                 }
             }
-            evals += stats.sim_evals;
         }
         if !self.memtable.is_empty() {
-            let mut heap = KnnHeap::new(fetch);
-            evals += self.memtable.store().view().scan_topk(q.as_slice(), &mut heap);
-            for (local, s) in heap.into_sorted() {
+            let mut heap = ctx.lease_heap(fetch);
+            let evals = self
+                .memtable
+                .store()
+                .view()
+                .scan_topk_with(q.as_slice(), &mut heap, ctx.kernel_scratch());
+            ctx.stats.sim_evals += evals;
+            buf.clear();
+            heap.drain_into(&mut buf);
+            ctx.release_heap(heap);
+            for &(local, s) in buf.iter() {
                 let id = self.memtable.base() + local as u64;
                 if !self.tombstones.contains(&id) {
-                    all.push((id, s));
+                    out.push((id, s));
                 }
             }
         }
-        sort_hits(&mut all);
-        all.truncate(k);
-        (all, evals)
+        ctx.release_pairs(buf);
+        sort_hits(out);
+        out.truncate(k);
+        ctx.stats.sim_evals - evals_before
     }
 
     /// Exact range query (`sim >= tau`) across all generations plus the
     /// memtable, tombstones filtered, sorted under (sim desc, id asc).
+    /// (Convenience form; see [`GenerationSet::knn`].)
     pub fn range(&self, q: &DenseVec, tau: f64) -> (Vec<(u64, f64)>, u64) {
-        let mut all: Vec<(u64, f64)> = Vec::new();
-        let mut evals = 0u64;
+        let mut ctx = QueryContext::new();
+        ctx.begin_query();
+        let mut out = Vec::new();
+        let evals = self.range_ctx(q, tau, &mut ctx, &mut out);
+        (out, evals)
+    }
+
+    /// [`GenerationSet::range`] through a borrowed [`QueryContext`]; same
+    /// contract as [`GenerationSet::knn_ctx`].
+    pub fn range_ctx(
+        &self,
+        q: &DenseVec,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> u64 {
+        let evals_before = ctx.stats.sim_evals;
+        out.clear();
+        let mut buf = ctx.lease_pairs();
         for g in &self.generations {
-            let mut stats = QueryStats::default();
-            for (local, s) in g.index.range(q, tau, &mut stats) {
+            g.index.range_into(q, tau, ctx, &mut buf);
+            for &(local, s) in buf.iter() {
                 let id = g.ids[local as usize];
                 if !self.tombstones.contains(&id) {
-                    all.push((id, s));
+                    out.push((id, s));
                 }
             }
-            evals += stats.sim_evals;
         }
         if !self.memtable.is_empty() {
-            let mut hits = Vec::new();
-            evals += self.memtable.store().view().scan_range(q.as_slice(), tau, &mut hits);
-            for (local, s) in hits {
+            buf.clear();
+            let evals = self
+                .memtable
+                .store()
+                .view()
+                .scan_range_with(q.as_slice(), tau, &mut buf, ctx.kernel_scratch());
+            ctx.stats.sim_evals += evals;
+            for &(local, s) in buf.iter() {
                 let id = self.memtable.base() + local as u64;
                 if !self.tombstones.contains(&id) {
-                    all.push((id, s));
+                    out.push((id, s));
                 }
             }
         }
-        sort_hits(&mut all);
-        (all, evals)
+        ctx.release_pairs(buf);
+        sort_hits(out);
+        ctx.stats.sim_evals - evals_before
     }
 }

@@ -46,6 +46,7 @@ use anyhow::{bail, Result};
 use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
 use crate::metrics::DenseVec;
+use crate::query::QueryContext;
 use crate::storage::{
     backend_for, default_kernel, normalize_row, CorpusStore, KernelBackend, KernelKind,
 };
@@ -460,6 +461,35 @@ impl IngestCorpus {
     /// Exact range query over the current snapshot (lock-free).
     pub fn range(&self, q: &DenseVec, tau: f64) -> (Vec<(u64, f64)>, u64) {
         self.inner.cell.load().range(q, tau)
+    }
+
+    /// Exact kNN over the current snapshot through a borrowed
+    /// [`QueryContext`] (the serving hot path: the coordinator's batch
+    /// worker reuses one context across every query of every batch).
+    /// Marks the query boundary itself; replaces `out`; returns the exact
+    /// evaluations spent.
+    pub fn knn_ctx(
+        &self,
+        q: &DenseVec,
+        k: usize,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> u64 {
+        ctx.begin_query();
+        self.inner.cell.load().knn_ctx(q, k, ctx, out)
+    }
+
+    /// Exact range query over the current snapshot through a borrowed
+    /// [`QueryContext`]; same contract as [`IngestCorpus::knn_ctx`].
+    pub fn range_ctx(
+        &self,
+        q: &DenseVec,
+        tau: f64,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> u64 {
+        ctx.begin_query();
+        self.inner.cell.load().range_ctx(q, tau, ctx, out)
     }
 
     /// The current published snapshot (lock-free; holding it pins its

@@ -52,6 +52,29 @@
 //! assert_eq!(hits[0].0, 0); // same bytes as the scalar backend returns
 //! ```
 //!
+//! The steady-state query path allocates nothing: a reusable
+//! [`query::QueryContext`] owns every traversal buffer (result heap,
+//! frontier, candidate pools, the i8 backend's per-query quantized-query
+//! cache), and `knn_batch` / `range_batch` run whole query batches through
+//! one context with results byte-identical to one-at-a-time calls
+//! (ADR-004):
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::{uniform_sphere, uniform_sphere_store};
+//! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::query::QueryContext;
+//!
+//! let store = uniform_sphere_store(10_000, 64, 42);
+//! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
+//! let queries = uniform_sphere(32, 64, 43);
+//! let mut ctx = QueryContext::new(); // one per worker thread, reused forever
+//! for (hits, stats) in index.knn_batch(&queries, 10, &mut ctx) {
+//!     assert!(hits.len() == 10 && stats.sim_evals > 0);
+//! }
+//! println!("quantized-query builds: {}", ctx.quant_builds());
+//! ```
+//!
 //! Indexes also build from an owning `Vec<V>` for any `SimVector` (the
 //! per-item path sparse corpora use):
 //!
@@ -89,6 +112,7 @@ pub mod figures;
 pub mod index;
 pub mod ingest;
 pub mod metrics;
+pub mod query;
 pub mod runtime;
 pub mod sparse;
 pub mod storage;

@@ -1,0 +1,340 @@
+//! The unified query-execution layer: a reusable per-worker scratch arena
+//! (ADR-004).
+//!
+//! With the paper's bounds making each node visit cheap, the steady-state
+//! cost of a query is increasingly the *bookkeeping around* the traversal:
+//! every index used to allocate a fresh [`KnnHeap`], a fresh `BinaryHeap`
+//! frontier, and fresh candidate/similarity buffers per call, and the i8
+//! kernel re-quantized the query once per leaf bucket. A [`QueryContext`]
+//! owns all of that scratch once per worker thread and lends it out query
+//! after query:
+//!
+//! ```text
+//! worker thread ── owns ──> QueryContext
+//!                             ├─ KnnHeap            (lease_heap/release_heap)
+//!                             ├─ frontier buffer    (lease_frontier/release_frontier)
+//!                             ├─ Vec<f64> pool      (lease_sims/release_sims)
+//!                             ├─ Vec<(u32,f64)> pool(lease_pairs/release_pairs)
+//!                             ├─ KernelScratch      (cached QuantQuery + bound buffers)
+//!                             └─ QueryStats         (per-query window + lifetime totals)
+//! ```
+//!
+//! Exactness: a leased buffer is always cleared/reset before use, and the
+//! cached quantized query is rebuilt from the same bytes it would be built
+//! from inline, so results through a reused context are byte-identical to
+//! the fresh-allocation path (enforced by `tests/integration_query.rs`).
+//!
+//! Ownership contract: callers that drive *multiple* index executions per
+//! logical query (the generation fan-out, shard batches) call
+//! [`QueryContext::begin_query`] exactly once per logical query; the
+//! per-index entry points (`knn_into` / `range_into`) never call it, so one
+//! query can share the quantized-query cache across the memtable and every
+//! generation. `SimilarityIndex::knn_batch` / `range_batch` and the
+//! compatibility wrappers call it for you.
+
+use std::collections::BinaryHeap;
+use std::marker::PhantomData;
+
+use crate::index::{KnnHeap, QueryStats};
+use crate::storage::KernelScratch;
+
+/// A type-erased frontier entry: the upper bound (the heap priority), a
+/// node pointer, and one auxiliary float (the already-computed center/parent
+/// similarity some trees carry alongside the node).
+#[derive(Debug, Clone, Copy)]
+struct FrontierEntry {
+    ub: f64,
+    ptr: usize,
+    aux: f64,
+}
+
+impl PartialEq for FrontierEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.ub == other.ub
+    }
+}
+impl Eq for FrontierEntry {}
+impl PartialOrd for FrontierEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for FrontierEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Same comparison as `index::Prioritized`: by upper bound, ties
+        // Equal — so a reused frontier pops in exactly the order the old
+        // per-query BinaryHeap<Prioritized<_>> did.
+        self.ub.partial_cmp(&other.ub).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// A best-first frontier over borrowed tree nodes whose backing buffer
+/// comes from (and returns to) a [`QueryContext`].
+///
+/// The entries store `&'t T` type-erased as a pointer so one buffer can
+/// serve every index's node type. Soundness: pointers enter only through
+/// [`Frontier::push`], which demands a `&'t T`; the buffer is cleared when
+/// leased, so no entry from a previous query (with a different `T` or a
+/// dead lifetime) can ever be popped.
+pub struct Frontier<'t, T> {
+    heap: BinaryHeap<FrontierEntry>,
+    _nodes: PhantomData<&'t T>,
+}
+
+impl<'t, T> Frontier<'t, T> {
+    fn from_buf(mut buf: Vec<FrontierEntry>) -> Frontier<'t, T> {
+        buf.clear();
+        Frontier { heap: BinaryHeap::from(buf), _nodes: PhantomData }
+    }
+
+    fn into_buf(self) -> Vec<FrontierEntry> {
+        self.heap.into_vec()
+    }
+
+    /// Push a node with its priority (`ub`) and auxiliary float.
+    #[inline]
+    pub fn push(&mut self, ub: f64, node: &'t T, aux: f64) {
+        self.heap.push(FrontierEntry { ub, ptr: node as *const T as usize, aux });
+    }
+
+    /// Pop the highest-upper-bound node.
+    #[inline]
+    pub fn pop(&mut self) -> Option<(f64, &'t T, f64)> {
+        self.heap.pop().map(|e| {
+            // SAFETY: `e.ptr` was produced by `push` from a `&'t T` (the
+            // buffer was cleared on lease, so no stale entries exist), and
+            // `'t` is still live because `self` is parameterized by it.
+            let node = unsafe { &*(e.ptr as *const T) };
+            (e.ub, node, e.aux)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+/// Reusable per-worker query scratch: every buffer a traversal needs, plus
+/// per-query instrumentation and the kernel-level quantized-query cache.
+///
+/// Not `Sync`/shared: each worker thread owns one and lends pieces to the
+/// traversal at hand. All leases hand back *owned* values (`std::mem::take`
+/// under the hood), so a traversal can hold the result heap, the frontier,
+/// and pooled buffers simultaneously without fighting the borrow checker,
+/// and recursive traversals can lease one buffer per recursion level.
+#[derive(Default)]
+pub struct QueryContext {
+    /// Reusable kNN collector (leased via [`QueryContext::lease_heap`]).
+    heap: KnnHeap,
+    /// Reusable frontier storage (leased via [`QueryContext::lease_frontier`]).
+    frontier: Vec<FrontierEntry>,
+    /// Pool of similarity buffers (pivot sims, split sims).
+    sims_pool: Vec<Vec<f64>>,
+    /// Pool of `(id, value)` buffers (candidate lists, visit orders,
+    /// per-generation hit staging).
+    pairs_pool: Vec<Vec<(u32, f64)>>,
+    /// Kernel-level scratch: cached [`crate::storage::KernelScratch`]
+    /// quantized query + certified-bound buffers.
+    scratch: KernelScratch,
+    /// Instrumentation for the query in flight (since the last
+    /// [`QueryContext::begin_query`]).
+    pub stats: QueryStats,
+    /// Stats of all *finished* queries (folded in at `begin_query`).
+    totals: QueryStats,
+    /// Queries started on this context.
+    queries: u64,
+}
+
+impl QueryContext {
+    pub fn new() -> QueryContext {
+        QueryContext::default()
+    }
+
+    /// Mark a logical query boundary: fold the previous query's stats into
+    /// the lifetime totals, reset the per-query window, and invalidate the
+    /// cached quantized query. Returns `true` when this context has served
+    /// a query before (the context-reuse signal the serving metrics count).
+    ///
+    /// Call exactly once per logical query, *before* the first index
+    /// execution — even when that query then fans out over many indexes
+    /// (generations, or several scans of one shard batch): the quantized
+    /// query is valid across all of them.
+    pub fn begin_query(&mut self) -> bool {
+        let reused = self.queries > 0;
+        self.totals.merge(&self.stats);
+        self.stats = QueryStats::default();
+        self.scratch.invalidate();
+        self.queries += 1;
+        reused
+    }
+
+    /// Queries started on this context (reuses = `queries() - 1`).
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    /// Reuse events since a [`QueryContext::queries`] snapshot `q0`: every
+    /// query begun on this context after its very first counts as a reuse.
+    /// The one formula for every worker that reports the context-reuse
+    /// gauge per batch (snapshot before, report after).
+    pub fn reuses_since(&self, q0: u64) -> u64 {
+        self.queries.saturating_sub(1) - q0.saturating_sub(1)
+    }
+
+    /// Lifetime stats: every finished query plus the one in flight.
+    pub fn totals(&self) -> QueryStats {
+        let mut t = self.totals;
+        t.merge(&self.stats);
+        t
+    }
+
+    /// Lifetime number of quantized-query builds (one per query that
+    /// touched a quantized scan, when the context is reused correctly).
+    pub fn quant_builds(&self) -> u64 {
+        self.scratch.quant_builds()
+    }
+
+    /// The kernel-level scratch, for threading into the `*_with` scan entry
+    /// points of [`crate::storage::CorpusView`].
+    #[inline]
+    pub fn kernel_scratch(&mut self) -> &mut KernelScratch {
+        &mut self.scratch
+    }
+
+    /// Lease the result heap, reset to retain `k`. Pair with
+    /// [`QueryContext::release_heap`].
+    #[inline]
+    pub fn lease_heap(&mut self, k: usize) -> KnnHeap {
+        let mut heap = std::mem::take(&mut self.heap);
+        heap.reset(k);
+        heap
+    }
+
+    #[inline]
+    pub fn release_heap(&mut self, heap: KnnHeap) {
+        self.heap = heap;
+    }
+
+    /// Lease the (cleared) frontier for a best-first traversal over nodes
+    /// of type `T`. Pair with [`QueryContext::release_frontier`].
+    #[inline]
+    pub fn lease_frontier<'t, T>(&mut self) -> Frontier<'t, T> {
+        Frontier::from_buf(std::mem::take(&mut self.frontier))
+    }
+
+    #[inline]
+    pub fn release_frontier<T>(&mut self, frontier: Frontier<'_, T>) {
+        self.frontier = frontier.into_buf();
+    }
+
+    /// Lease a cleared `Vec<f64>` from the pool (allocates only until the
+    /// pool has grown to the traversal's maximum recursion depth). Pair
+    /// with [`QueryContext::release_sims`].
+    #[inline]
+    pub fn lease_sims(&mut self) -> Vec<f64> {
+        let mut v = self.sims_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    #[inline]
+    pub fn release_sims(&mut self, v: Vec<f64>) {
+        self.sims_pool.push(v);
+    }
+
+    /// Lease a cleared `Vec<(u32, f64)>` from the pool. Pair with
+    /// [`QueryContext::release_pairs`].
+    #[inline]
+    pub fn lease_pairs(&mut self) -> Vec<(u32, f64)> {
+        let mut v = self.pairs_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    #[inline]
+    pub fn release_pairs(&mut self, v: Vec<(u32, f64)>) {
+        self.pairs_pool.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_query_rolls_stats_and_counts_reuse() {
+        let mut ctx = QueryContext::new();
+        assert!(!ctx.begin_query(), "first query is not a reuse");
+        ctx.stats.sim_evals = 10;
+        ctx.stats.pruned = 3;
+        assert!(ctx.begin_query());
+        assert_eq!(ctx.stats, QueryStats::default());
+        assert_eq!(ctx.totals().sim_evals, 10);
+        ctx.stats.sim_evals = 5;
+        assert_eq!(ctx.totals().sim_evals, 15, "totals include the in-flight query");
+        assert_eq!(ctx.queries(), 2);
+        // The reuse gauge: the context's very first query is not a reuse.
+        assert_eq!(ctx.reuses_since(0), 1);
+        assert_eq!(ctx.reuses_since(1), 1);
+        assert_eq!(ctx.reuses_since(2), 0);
+        ctx.begin_query();
+        assert_eq!(ctx.reuses_since(2), 1);
+        assert_eq!(QueryContext::new().reuses_since(0), 0, "idle context reports none");
+    }
+
+    #[test]
+    fn heap_lease_resets_and_keeps_capacity() {
+        let mut ctx = QueryContext::new();
+        let mut h = ctx.lease_heap(3);
+        for (id, s) in [(5u32, 0.9f64), (1, 0.8), (2, 0.7), (9, 0.6)] {
+            h.offer(id, s);
+        }
+        assert_eq!(h.len(), 3);
+        ctx.release_heap(h);
+        let h = ctx.lease_heap(2);
+        assert!(h.is_empty(), "leased heap must start empty");
+        assert_eq!(h.k(), 2);
+        ctx.release_heap(h);
+    }
+
+    #[test]
+    fn frontier_pops_best_first_and_reuses_buffer() {
+        let nodes = [10u64, 20, 30];
+        let mut ctx = QueryContext::new();
+        let mut f: Frontier<'_, u64> = ctx.lease_frontier();
+        f.push(0.2, &nodes[0], 1.0);
+        f.push(0.9, &nodes[1], 2.0);
+        f.push(0.5, &nodes[2], 3.0);
+        let (ub, node, aux) = f.pop().unwrap();
+        assert_eq!((ub, *node, aux), (0.9, 20, 2.0));
+        assert_eq!(*f.pop().unwrap().1, 30);
+        ctx.release_frontier(f);
+        // A fresh lease over a *different* node type starts empty: the
+        // leftover entry for nodes[0] must be unreachable.
+        let f2: Frontier<'_, String> = ctx.lease_frontier();
+        assert!(f2.is_empty());
+        ctx.release_frontier(f2);
+    }
+
+    #[test]
+    fn pools_recycle_buffers() {
+        let mut ctx = QueryContext::new();
+        let mut a = ctx.lease_sims();
+        a.extend([1.0, 2.0]);
+        let cap = a.capacity();
+        let b = ctx.lease_sims(); // nested lease: a second, distinct buffer
+        assert!(b.is_empty());
+        ctx.release_sims(b);
+        ctx.release_sims(a);
+        let c = ctx.lease_sims();
+        assert!(c.is_empty() && c.capacity() >= cap, "recycled buffer keeps capacity");
+        ctx.release_sims(c);
+        let p = ctx.lease_pairs();
+        assert!(p.is_empty());
+        ctx.release_pairs(p);
+    }
+}

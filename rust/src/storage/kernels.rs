@@ -126,6 +126,114 @@ impl KernelCounters {
 /// Sink for per-row similarities; invoked in ascending position order.
 pub type SimSink<'a> = &'a mut dyn FnMut(usize, f64);
 
+/// Quantized-query cache state of a [`KernelScratch`]. The `QuantQuery`
+/// storage itself lives outside this tag so invalidation keeps the codes
+/// buffer — a rebuilt query reuses it, and the steady-state query path
+/// allocates nothing even under the i8 backend.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+enum QuantState {
+    /// Nothing cached (fresh scratch, or invalidated by a new query).
+    #[default]
+    Empty,
+    /// The scratch's `QuantQuery` holds the current query's quantized form.
+    Built,
+    /// The current query has a non-finite component: certified bounds are
+    /// meaningless, every scan must take the exact path. Cached so the
+    /// finiteness check also runs once per query, not once per leaf bucket.
+    NonFinite,
+}
+
+/// Borrowed per-query scan scratch: the cached [`QuantQuery`] plus the
+/// bound/survivor buffers the i8 pre-filter fills on every scan call.
+///
+/// One scratch lives in each `query::QueryContext` and is invalidated at
+/// `begin_query`; the plain [`CorpusView`](super::CorpusView) scan entry
+/// points construct a throwaway one per call (self-build, the pre-PR-4
+/// behavior). The cache turns the i8 backend's per-leaf-bucket
+/// re-quantization (O(d) + two allocations per scan call — the ROADMAP
+/// follow-on) into one build per query regardless of how many buckets the
+/// traversal scans.
+///
+/// Ownership contract (ADR-004): the cache is keyed by the query's
+/// `(pointer, length)` identity *between invalidations*. A driver that
+/// reuses a scratch across logical queries MUST call
+/// `query::QueryContext::begin_query` (which calls [`KernelScratch::invalidate`])
+/// at each query boundary; within one logical query the query slice must
+/// stay alive and unmoved (true everywhere in this crate: the `DenseVec`
+/// owning the query outlives the traversal).
+#[derive(Default)]
+pub struct KernelScratch {
+    state: QuantState,
+    /// Quantized-query storage, valid only while `state == Built`; its
+    /// codes buffer survives invalidation, so rebuilds are allocation-free
+    /// once warmed.
+    qq: QuantQuery,
+    /// `(ptr, len)` identity of the cached query.
+    key: (usize, usize),
+    /// Lifetime count of [`QuantQuery`] builds (the satellite's
+    /// one-build-per-query assertion hangs off this).
+    builds: u64,
+    /// Certified bound buffers (i8 pre-filter).
+    lb: Vec<f64>,
+    ub: Vec<f64>,
+    /// Survivor store rows + report ids (i8 re-rank gather).
+    rows: Vec<u32>,
+    ids: Vec<u32>,
+    /// Debug builds keep the cached query's bytes so a cache hit can
+    /// verify the `(ptr, len)` key really denotes the same query — an
+    /// ABA'd address after a missed `invalidate` fails loudly in tests
+    /// instead of silently pruning with another query's bounds.
+    #[cfg(debug_assertions)]
+    dbg_query: Vec<f32>,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        KernelScratch::default()
+    }
+
+    /// Drop the cached quantized query (a new logical query begins). The
+    /// underlying buffers are kept for reuse.
+    pub fn invalidate(&mut self) {
+        self.state = QuantState::Empty;
+        self.key = (0, 0);
+    }
+
+    /// Lifetime number of quantized-query builds performed through this
+    /// scratch. With a context reused correctly this is exactly one per
+    /// distinct query that hit a quantized scan, however many leaf buckets
+    /// each traversal scanned.
+    pub fn quant_builds(&self) -> u64 {
+        self.builds
+    }
+
+    /// Make sure the cache holds the quantized form of `q`, building it if
+    /// the scratch is empty or holds a different query.
+    fn ensure_quant(&mut self, q: &[f32]) {
+        let key = (q.as_ptr() as usize, q.len());
+        if self.state == QuantState::Empty || self.key != key {
+            self.builds += 1;
+            if self.qq.rebuild(q) {
+                self.state = QuantState::Built;
+            } else {
+                self.state = QuantState::NonFinite;
+            }
+            self.key = key;
+            #[cfg(debug_assertions)]
+            {
+                self.dbg_query.clear();
+                self.dbg_query.extend_from_slice(q);
+            }
+        }
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            self.dbg_query.iter().map(|v| v.to_bits()).eq(q.iter().map(|v| v.to_bits())),
+            "KernelScratch cache hit for a different query: a driver reused \
+             this scratch across logical queries without invalidate()/begin_query()"
+        );
+    }
+}
+
 /// Borrowed store state a scan needs: the flat buffer, the dimension, and
 /// the quantized sidecar when the store carries one.
 #[derive(Clone, Copy)]
@@ -202,8 +310,17 @@ pub trait KernelBackend: Send + Sync {
     );
 
     /// Top-k scan over the selection; exact final results. Returns the
-    /// number of exact similarity evaluations spent.
-    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64;
+    /// number of exact similarity evaluations spent. `scratch` carries the
+    /// per-query quantized-query cache and bound buffers (exact backends
+    /// ignore it).
+    fn scan_topk(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64;
 
     /// Range scan (`sim >= tau`) over the selection, pushing `(id, sim)` in
     /// ascending position order; exact final results. Returns exact evals.
@@ -214,6 +331,7 @@ pub trait KernelBackend: Send + Sync {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
     ) -> u64;
 }
 
@@ -248,7 +366,14 @@ impl KernelBackend for ScalarKernel {
         sim_gather_isa(Isa::Scalar, q, flat, d, rows, base, sink);
     }
 
-    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+    fn scan_topk(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        heap: &mut KnnHeap,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
         exact_topk(Isa::Scalar, &self.counters, q, s, sel, heap)
     }
 
@@ -259,6 +384,7 @@ impl KernelBackend for ScalarKernel {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
+        _scratch: &mut KernelScratch,
     ) -> u64 {
         exact_range(Isa::Scalar, &self.counters, q, s, sel, tau, out)
     }
@@ -314,7 +440,14 @@ impl KernelBackend for SimdKernel {
         sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
     }
 
-    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+    fn scan_topk(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        heap: &mut KnnHeap,
+        _scratch: &mut KernelScratch,
+    ) -> u64 {
         exact_topk(self.isa, &self.counters, q, s, sel, heap)
     }
 
@@ -325,6 +458,7 @@ impl KernelBackend for SimdKernel {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
+        _scratch: &mut KernelScratch,
     ) -> u64 {
         exact_range(self.isa, &self.counters, q, s, sel, tau, out)
     }
@@ -377,7 +511,14 @@ impl KernelBackend for QuantizedI8Kernel {
         sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
     }
 
-    fn scan_topk(&self, q: &[f32], s: StoreRef<'_>, sel: RowSel<'_>, heap: &mut KnnHeap) -> u64 {
+    fn scan_topk(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
         let Some(quant) = s.quant else {
             // Store built without a sidecar: stay exact.
             return exact_topk(self.isa, &self.counters, q, s, sel, heap);
@@ -386,11 +527,20 @@ impl KernelBackend for QuantizedI8Kernel {
         if n == 0 {
             return 0;
         }
-        let Some(qq) = QuantQuery::build(q) else {
+        // One quantization per query, not per leaf bucket: reuse the
+        // scratch's cached QuantQuery (built on the first scan this query
+        // touches, identical bytes on every reuse).
+        scratch.ensure_quant(q);
+        let KernelScratch { state, qq, lb, ub, rows, ids, .. } = scratch;
+        match state {
+            QuantState::Built => {}
             // Non-finite query components make the certified bounds
             // meaningless; stay byte-identical to the exact backends.
-            return exact_topk(self.isa, &self.counters, q, s, sel, heap);
-        };
+            QuantState::NonFinite => {
+                return exact_topk(self.isa, &self.counters, q, s, sel, heap)
+            }
+            QuantState::Empty => unreachable!("ensure_quant always fills the cache"),
+        }
         self.counters.quant_rows.fetch_add(n as u64, Relaxed);
         // Certified pruning floor: the heap's exact floor, raised to the
         // k-th largest certified lower bound when enough candidates exist
@@ -400,16 +550,15 @@ impl KernelBackend for QuantizedI8Kernel {
         // so skipping it keeps the heap byte-identical to the exact scan's.
         let mut floor = heap.floor();
         let k = heap.k();
-        let ub = if n >= k {
-            let (mut lb, ub) = quant.intervals(&qq, &sel);
+        if n >= k {
+            quant.intervals_into(qq, &sel, lb, ub);
             let (_, kth, _) = lb.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
             floor = floor.max(*kth);
-            ub
         } else {
-            quant.upper_bounds(&qq, &sel)
-        };
-        let (rows, ids) = survivors(&sel, &ub, floor);
-        sim_gather_isa(self.isa, q, s.flat, s.d, &rows, 0, &mut |i, sim| heap.offer(ids[i], sim));
+            quant.upper_bounds_into(qq, &sel, ub);
+        }
+        survivors_into(&sel, ub, floor, rows, ids);
+        sim_gather_isa(self.isa, q, s.flat, s.d, rows, 0, &mut |i, sim| heap.offer(ids[i], sim));
         self.counters.rerank_rows.fetch_add(rows.len() as u64, Relaxed);
         rows.len() as u64
     }
@@ -421,6 +570,7 @@ impl KernelBackend for QuantizedI8Kernel {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
     ) -> u64 {
         let Some(quant) = s.quant else {
             return exact_range(self.isa, &self.counters, q, s, sel, tau, out);
@@ -429,13 +579,19 @@ impl KernelBackend for QuantizedI8Kernel {
         if n == 0 {
             return 0;
         }
-        let Some(qq) = QuantQuery::build(q) else {
-            return exact_range(self.isa, &self.counters, q, s, sel, tau, out);
-        };
+        scratch.ensure_quant(q);
+        let KernelScratch { state, qq, ub, rows, ids, .. } = scratch;
+        match state {
+            QuantState::Built => {}
+            QuantState::NonFinite => {
+                return exact_range(self.isa, &self.counters, q, s, sel, tau, out)
+            }
+            QuantState::Empty => unreachable!("ensure_quant always fills the cache"),
+        }
         self.counters.quant_rows.fetch_add(n as u64, Relaxed);
-        let ub = quant.upper_bounds(&qq, &sel);
-        let (rows, ids) = survivors(&sel, &ub, tau);
-        sim_gather_isa(self.isa, q, s.flat, s.d, &rows, 0, &mut |i, sim| {
+        quant.upper_bounds_into(qq, &sel, ub);
+        survivors_into(&sel, ub, tau, rows, ids);
+        sim_gather_isa(self.isa, q, s.flat, s.d, rows, 0, &mut |i, sim| {
             if sim >= tau {
                 out.push((ids[i], sim));
             }
@@ -555,20 +711,25 @@ fn sim_gather_isa(
     }
 }
 
-/// Positions whose certified upper bound clears `threshold`, resolved to
-/// `(absolute store rows, report ids)` so the re-rank can run through the
-/// batched gather kernel (query amortized over row blocks, like every
-/// exact path).
-fn survivors(sel: &RowSel<'_>, ub: &[f64], threshold: f64) -> (Vec<u32>, Vec<u32>) {
-    let mut rows = Vec::new();
-    let mut ids = Vec::new();
+/// Positions whose certified upper bound clears `threshold`, resolved into
+/// the scratch's `(absolute store rows, report ids)` buffers so the re-rank
+/// can run through the batched gather kernel (query amortized over row
+/// blocks, like every exact path) without allocating per scan.
+fn survivors_into(
+    sel: &RowSel<'_>,
+    ub: &[f64],
+    threshold: f64,
+    rows: &mut Vec<u32>,
+    ids: &mut Vec<u32>,
+) {
+    rows.clear();
+    ids.clear();
     for (pos, &u) in ub.iter().enumerate() {
         if u >= threshold {
             rows.push(sel.store_row(pos) as u32);
             ids.push(sel.report_id(pos));
         }
     }
-    (rows, ids)
 }
 
 // --- scalar kernels --------------------------------------------------------
@@ -940,34 +1101,44 @@ impl QuantSidecar {
     }
 
     /// Certified `[approx - eps, approx + eps]` similarity intervals of the
-    /// quantized query against every selected row. The exact similarity
-    /// additionally clamps to `[-1, 1]`, so the interval edges clamp
-    /// one-sidedly too.
-    fn intervals(&self, qq: &QuantQuery, sel: &RowSel<'_>) -> (Vec<f64>, Vec<f64>) {
+    /// quantized query against every selected row, replacing the contents
+    /// of the borrowed scratch buffers. The exact similarity additionally
+    /// clamps to `[-1, 1]`, so the interval edges clamp one-sidedly too.
+    fn intervals_into(
+        &self,
+        qq: &QuantQuery,
+        sel: &RowSel<'_>,
+        lb: &mut Vec<f64>,
+        ub: &mut Vec<f64>,
+    ) {
         let n = sel.len();
-        let mut lb = Vec::with_capacity(n);
-        let mut ub = Vec::with_capacity(n);
+        lb.clear();
+        ub.clear();
+        lb.reserve(n);
+        ub.reserve(n);
         for pos in 0..n {
             let (approx, eps) = self.interval_of(qq, sel.store_row(pos));
             lb.push((approx - eps).min(1.0));
             ub.push((approx + eps).max(-1.0));
         }
-        (lb, ub)
     }
 
     /// Upper interval edges only (range scans never need the lower edge).
-    fn upper_bounds(&self, qq: &QuantQuery, sel: &RowSel<'_>) -> Vec<f64> {
+    fn upper_bounds_into(&self, qq: &QuantQuery, sel: &RowSel<'_>, ub: &mut Vec<f64>) {
         let n = sel.len();
-        let mut ub = Vec::with_capacity(n);
+        ub.clear();
+        ub.reserve(n);
         for pos in 0..n {
             let (approx, eps) = self.interval_of(qq, sel.store_row(pos));
             ub.push((approx + eps).max(-1.0));
         }
-        ub
     }
 }
 
-/// A query quantized once per scan.
+/// A query quantized once per query (cached in [`KernelScratch`]; the
+/// storage is reused across queries, so rebuilds stop allocating once the
+/// codes buffer has grown to the corpus dimension).
+#[derive(Default)]
 struct QuantQuery {
     codes: Vec<i8>,
     scale: f64,
@@ -976,29 +1147,44 @@ struct QuantQuery {
 }
 
 impl QuantQuery {
-    /// Quantize a query, or `None` when any component is non-finite — the
-    /// error bound is meaningless then, and the caller must take the exact
-    /// path to stay byte-identical to the exact backends.
-    fn build(q: &[f32]) -> Option<QuantQuery> {
+    /// Re-quantize in place for a new query, reusing the codes buffer.
+    /// Returns `false` when any component is non-finite — the error bound
+    /// is meaningless then, and the caller must take the exact path to
+    /// stay byte-identical to the exact backends (`self` is left cleared).
+    fn rebuild(&mut self, q: &[f32]) -> bool {
+        self.codes.clear();
+        self.scale = 0.0;
+        self.l1_deq = 0.0;
         let mut max = 0.0f64;
         for &v in q {
             if !v.is_finite() {
-                return None;
+                return false;
             }
             max = max.max((v as f64).abs());
         }
         let scale = max / 127.0;
         if scale == 0.0 {
-            return Some(QuantQuery { codes: vec![0; q.len()], scale: 0.0, l1_deq: 0.0 });
+            self.codes.resize(q.len(), 0);
+            return true;
         }
-        let mut codes = Vec::with_capacity(q.len());
         let mut code_l1 = 0.0f64;
+        self.codes.reserve(q.len());
         for &v in q {
             let c = (v as f64 / scale).round().clamp(-127.0, 127.0);
             code_l1 += c.abs();
-            codes.push(c as i8);
+            self.codes.push(c as i8);
         }
-        Some(QuantQuery { codes, scale, l1_deq: scale * code_l1 })
+        self.scale = scale;
+        self.l1_deq = scale * code_l1;
+        true
+    }
+
+    /// Owned build, `None` on a non-finite component (test helper; the
+    /// production path goes through [`KernelScratch::ensure_quant`]).
+    #[cfg(test)]
+    fn build(q: &[f32]) -> Option<QuantQuery> {
+        let mut qq = QuantQuery::default();
+        if qq.rebuild(q) { Some(qq) } else { None }
     }
 }
 
@@ -1079,7 +1265,8 @@ mod tests {
             let q = uniform_sphere(1, d, 100 + qs).pop().unwrap();
             let qq = QuantQuery::build(q.as_slice()).unwrap();
             let sel = RowSel::Block { start: 0, n: rows.len() };
-            let (lb, ub) = side.intervals(&qq, &sel);
+            let (mut lb, mut ub) = (Vec::new(), Vec::new());
+            side.intervals_into(&qq, &sel, &mut lb, &mut ub);
             for (i, r) in rows.iter().enumerate() {
                 let exact = dot_slice(q.as_slice(), r.as_slice());
                 assert!(
@@ -1100,7 +1287,8 @@ mod tests {
         assert_eq!(side.scale(0), 0.0);
         let zeros = [0.0f32; 8];
         let qq = QuantQuery::build(&zeros).unwrap();
-        let (lb, ub) = side.intervals(&qq, &RowSel::Block { start: 0, n: 2 });
+        let (mut lb, mut ub) = (Vec::new(), Vec::new());
+        side.intervals_into(&qq, &RowSel::Block { start: 0, n: 2 }, &mut lb, &mut ub);
         assert!(lb[0] <= 0.0 && 0.0 <= ub[0]);
         assert!(lb[1] <= 0.0 && 0.0 <= ub[1]);
     }
@@ -1116,13 +1304,68 @@ mod tests {
         let side = QuantSidecar::build(&flat, 6);
         let q = uniform_sphere(1, 6, 99).pop().unwrap();
         let qq = QuantQuery::build(q.as_slice()).unwrap();
-        let (lb, ub) = side.intervals(&qq, &RowSel::Block { start: 0, n: 4 });
+        let (mut lb, mut ub) = (Vec::new(), Vec::new());
+        side.intervals_into(&qq, &RowSel::Block { start: 0, n: 4 }, &mut lb, &mut ub);
         // The corrupted row certifies nothing: it can never be pruned and
         // never raises the floor.
         assert_eq!(ub[1], f64::INFINITY);
         assert_eq!(lb[1], f64::NEG_INFINITY);
         // Finite rows still get finite certified intervals.
         assert!(ub[0].is_finite() && lb[0].is_finite());
+    }
+
+    #[test]
+    fn shared_scratch_quantizes_once_per_query_across_scan_calls() {
+        // One QuantQuery build per query however many leaf-bucket scans the
+        // traversal issues (the ROADMAP follow-on this PR closes), and the
+        // results stay byte-identical to per-call self-building.
+        let d = 12;
+        let rows = uniform_sphere(64, d, 51);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        let side = QuantSidecar::build(&flat, d);
+        let sref = StoreRef { flat: &flat, d, quant: Some(&side) };
+        let kernel = QuantizedI8Kernel::new();
+        let q = uniform_sphere(1, d, 77).pop().unwrap();
+
+        let mut shared = KernelScratch::new();
+        let mut h_shared = KnnHeap::new(4);
+        let mut h_fresh = KnnHeap::new(4);
+        let mut out_shared = Vec::new();
+        let mut out_fresh = Vec::new();
+        // 16 bucket-like scans of 4 rows each, alternating topk and range.
+        for b in 0..16usize {
+            let sel = RowSel::Block { start: b * 4, n: 4 };
+            kernel.scan_topk(q.as_slice(), sref, sel, &mut h_shared, &mut shared);
+            kernel.scan_topk(q.as_slice(), sref, sel, &mut h_fresh, &mut KernelScratch::new());
+            kernel.scan_range(q.as_slice(), sref, sel, 0.1, &mut out_shared, &mut shared);
+            kernel.scan_range(
+                q.as_slice(),
+                sref,
+                sel,
+                0.1,
+                &mut out_fresh,
+                &mut KernelScratch::new(),
+            );
+        }
+        assert_eq!(shared.quant_builds(), 1, "one build per query, not per scan call");
+        assert_eq!(out_shared, out_fresh);
+        let (a, b) = (h_shared.into_sorted(), h_fresh.into_sorted());
+        assert_eq!(a, b);
+
+        // A new query through the same scratch re-builds exactly once; an
+        // explicit invalidate (the begin_query hook) also forces a build.
+        let q2 = uniform_sphere(1, d, 78).pop().unwrap();
+        let mut h2 = KnnHeap::new(4);
+        let sel = RowSel::Block { start: 0, n: 64 };
+        kernel.scan_topk(q2.as_slice(), sref, sel, &mut h2, &mut shared);
+        kernel.scan_topk(q2.as_slice(), sref, sel, &mut h2, &mut shared);
+        assert_eq!(shared.quant_builds(), 2);
+        shared.invalidate();
+        kernel.scan_topk(q2.as_slice(), sref, sel, &mut h2, &mut shared);
+        assert_eq!(shared.quant_builds(), 3);
     }
 
     #[test]
@@ -1142,8 +1385,8 @@ mod tests {
         let scalar = ScalarKernel::default();
         let mut hq = KnnHeap::new(3);
         let mut hs = KnnHeap::new(3);
-        quant.scan_topk(&q, sref, sel, &mut hq);
-        scalar.scan_topk(&q, sref, sel, &mut hs);
+        quant.scan_topk(&q, sref, sel, &mut hq, &mut KernelScratch::new());
+        scalar.scan_topk(&q, sref, sel, &mut hs, &mut KernelScratch::new());
         let (a, b) = (hq.into_sorted(), hs.into_sorted());
         assert_eq!(a.len(), b.len());
         for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {

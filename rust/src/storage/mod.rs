@@ -37,8 +37,8 @@ use crate::index::KnnHeap;
 use crate::metrics::DenseVec;
 
 pub use kernels::{
-    backend_for, default_kernel, KernelBackend, KernelCounters, KernelKind, QuantSidecar,
-    QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
+    backend_for, default_kernel, KernelBackend, KernelCounters, KernelKind, KernelScratch,
+    QuantSidecar, QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
 };
 pub use kernels::{QUANT_MAX_DIM, QUANT_MIN_ROWS};
 
@@ -524,7 +524,23 @@ impl CorpusView {
     /// Full-view top-k scan through the backend: offer rows to `heap`
     /// (quantized backends pre-filter and re-rank, exact backends offer
     /// every row). Returns the number of exact similarity evaluations.
+    ///
+    /// Self-contained form: builds a throwaway [`KernelScratch`], so a
+    /// quantized backend re-quantizes the query here. Steady-state callers
+    /// thread a context's scratch through [`CorpusView::scan_topk_with`].
     pub fn scan_topk(&self, q: &[f32], heap: &mut KnnHeap) -> u64 {
+        self.scan_topk_with(q, heap, &mut KernelScratch::new())
+    }
+
+    /// [`CorpusView::scan_topk`] with a borrowed per-query scratch: the
+    /// quantized query is built at most once per query however many scans
+    /// share the scratch (ADR-004).
+    pub fn scan_topk_with(
+        &self,
+        q: &[f32],
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
         self.check_query(q);
         if self.is_empty() {
             return 0;
@@ -533,18 +549,30 @@ impl CorpusView {
         match &self.sel {
             Selection::Rows(lo, hi) => {
                 let sel = RowSel::Block { start: *lo, n: *hi - *lo };
-                self.store.kernel.scan_topk(q, s, sel, heap)
+                self.store.kernel.scan_topk(q, s, sel, heap, scratch)
             }
             Selection::Ids(sel) => {
                 let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
-                self.store.kernel.scan_topk(q, s, gather, heap)
+                self.store.kernel.scan_topk(q, s, gather, heap, scratch)
             }
         }
     }
 
     /// Full-view range scan through the backend: push every `(local, sim)`
     /// with `sim >= tau`, in ascending local order. Returns exact evals.
+    /// (Throwaway scratch; see [`CorpusView::scan_topk`].)
     pub fn scan_range(&self, q: &[f32], tau: f64, out: &mut Vec<(u32, f64)>) -> u64 {
+        self.scan_range_with(q, tau, out, &mut KernelScratch::new())
+    }
+
+    /// [`CorpusView::scan_range`] with a borrowed per-query scratch.
+    pub fn scan_range_with(
+        &self,
+        q: &[f32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
         self.check_query(q);
         if self.is_empty() {
             return 0;
@@ -553,35 +581,31 @@ impl CorpusView {
         match &self.sel {
             Selection::Rows(lo, hi) => {
                 let sel = RowSel::Block { start: *lo, n: *hi - *lo };
-                self.store.kernel.scan_range(q, s, sel, tau, out)
+                self.store.kernel.scan_range(q, s, sel, tau, out, scratch)
             }
             Selection::Ids(sel) => {
                 let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
-                self.store.kernel.scan_range(q, s, gather, tau, out)
+                self.store.kernel.scan_range(q, s, gather, tau, out, scratch)
             }
         }
     }
 
     /// Blocked id-list top-k scan (leaf buckets). Returns exact evals.
+    /// (Throwaway scratch; see [`CorpusView::scan_topk`].)
     pub fn scan_ids_topk(&self, q: &[f32], locals: &[u32], heap: &mut KnnHeap) -> u64 {
-        self.check_query(q);
-        if locals.is_empty() {
-            return 0;
-        }
-        let s = self.store_ref();
-        let (mapped, base) = self.resolve_locals(locals);
-        let rows = mapped.as_deref().unwrap_or(locals);
-        let gather = RowSel::Gather { rows, base, report: Some(locals) };
-        self.store.kernel.scan_topk(q, s, gather, heap)
+        self.scan_ids_topk_with(q, locals, heap, &mut KernelScratch::new())
     }
 
-    /// Blocked id-list range scan (leaf buckets). Returns exact evals.
-    pub fn scan_ids_range(
+    /// [`CorpusView::scan_ids_topk`] with a borrowed per-query scratch —
+    /// the leaf-bucket hot path of every tree index: with a reused scratch,
+    /// a quantized backend quantizes the query once per query, not once
+    /// per bucket.
+    pub fn scan_ids_topk_with(
         &self,
         q: &[f32],
         locals: &[u32],
-        tau: f64,
-        out: &mut Vec<(u32, f64)>,
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
     ) -> u64 {
         self.check_query(q);
         if locals.is_empty() {
@@ -591,7 +615,39 @@ impl CorpusView {
         let (mapped, base) = self.resolve_locals(locals);
         let rows = mapped.as_deref().unwrap_or(locals);
         let gather = RowSel::Gather { rows, base, report: Some(locals) };
-        self.store.kernel.scan_range(q, s, gather, tau, out)
+        self.store.kernel.scan_topk(q, s, gather, heap, scratch)
+    }
+
+    /// Blocked id-list range scan (leaf buckets). Returns exact evals.
+    /// (Throwaway scratch; see [`CorpusView::scan_topk`].)
+    pub fn scan_ids_range(
+        &self,
+        q: &[f32],
+        locals: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+    ) -> u64 {
+        self.scan_ids_range_with(q, locals, tau, out, &mut KernelScratch::new())
+    }
+
+    /// [`CorpusView::scan_ids_range`] with a borrowed per-query scratch.
+    pub fn scan_ids_range_with(
+        &self,
+        q: &[f32],
+        locals: &[u32],
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        self.check_query(q);
+        if locals.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        let (mapped, base) = self.resolve_locals(locals);
+        let rows = mapped.as_deref().unwrap_or(locals);
+        let gather = RowSel::Gather { rows, base, report: Some(locals) };
+        self.store.kernel.scan_range(q, s, gather, tau, out, scratch)
     }
 }
 

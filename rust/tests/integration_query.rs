@@ -1,0 +1,307 @@
+//! The unified query-execution layer's exactness and allocation contracts
+//! (ADR-004):
+//!
+//!  1. `knn_batch` / `range_batch` through one shared `QueryContext` are
+//!     byte-identical to one-at-a-time `knn` / `range` calls, across all
+//!     7 indexes × {scalar, simd, i8} kernels × static, sharded, and
+//!     mutable (ingest) corpora.
+//!  2. One context survives 100 mixed queries across *different* index
+//!     types with results unchanged (the frontier type-erasure contract).
+//!  3. The steady-state query path performs **zero heap allocations** per
+//!     query (counting global allocator, thread-local so parallel tests
+//!     don't interfere).
+//!  4. A quantized traversal builds its `QuantQuery` once per query, no
+//!     matter how many leaf buckets it scans (the ROADMAP follow-on).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::router::build_shards;
+use simetra::coordinator::IndexKind;
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::{QueryStats, SimilarityIndex};
+use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::metrics::DenseVec;
+use simetra::query::QueryContext;
+use simetra::storage::{CorpusStore, KernelKind};
+
+// --- counting allocator ----------------------------------------------------
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator that counts allocations made by the *current thread*
+/// while that thread has counting enabled — the zero-allocation assertion
+/// stays exact even with other tests running in parallel threads.
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn note(&self) {
+        // try_with: allocation during TLS teardown must not panic.
+        let _ = COUNTING.try_with(|c| {
+            if c.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.note();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    COUNTING.with(|c| c.set(true));
+    ALLOCS.with(|a| a.set(0));
+    f();
+    COUNTING.with(|c| c.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+// --- helpers ---------------------------------------------------------------
+
+const ALL_KINDS: [IndexKind; 7] = [
+    IndexKind::Linear,
+    IndexKind::Vp,
+    IndexKind::Ball,
+    IndexKind::MTree,
+    IndexKind::Cover,
+    IndexKind::Laesa,
+    IndexKind::Gnat,
+];
+
+const ALL_KERNELS: [KernelKind; 3] =
+    [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8];
+
+/// Bitwise equality of two result lists: same ids, same f64 bit patterns.
+fn assert_bits_eq(a: &[(u32, f64)], b: &[(u32, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+fn assert_bits_eq64(a: &[(u64, f64)], b: &[(u64, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+// --- 1. batch == sequential, all indexes × kernels -------------------------
+
+#[test]
+fn batch_matches_sequential_across_indexes_and_kernels() {
+    // Hand-rolled proptest sweep (the repo has no proptest dep): multiple
+    // data/query seeds per index × kernel cell. Corpus size stays
+    // >= QUANT_MIN_ROWS so the i8 leg really builds a sidecar and takes
+    // the pre-filter + re-rank path, not the exact fallback.
+    for seed in [99u64, 1234] {
+        let rows = uniform_sphere(1200, 16, seed);
+        let queries: Vec<DenseVec> = uniform_sphere(10, 16, seed.wrapping_add(7));
+        for kernel in ALL_KERNELS {
+            let store = CorpusStore::from_rows(rows.clone()).with_kernel(kernel);
+            for kind in ALL_KINDS {
+                let index = kind.build(store.view(), BoundKind::Mult);
+                let what = format!("{} / {} / seed {seed}", kind.name(), kernel.name());
+                let mut ctx = QueryContext::new();
+                let knn_b = index.knn_batch(&queries, 8, &mut ctx);
+                let rng_b = index.range_batch(&queries, 0.15, &mut ctx);
+                for (qi, q) in queries.iter().enumerate() {
+                    let mut st = QueryStats::default();
+                    let a = index.knn(q, 8, &mut st);
+                    assert_bits_eq(&a, &knn_b[qi].0, &format!("{what} knn q{qi}"));
+                    assert_eq!(st.sim_evals, knn_b[qi].1.sim_evals, "{what} knn evals q{qi}");
+                    let r = index.range(q, 0.15, &mut st);
+                    assert_bits_eq(&r, &rng_b[qi].0, &format!("{what} range q{qi}"));
+                }
+            }
+        }
+    }
+}
+
+// --- sharded corpora -------------------------------------------------------
+
+#[test]
+fn sharded_batches_match_per_query_results() {
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(1500, 12, 5).with_kernel(kernel);
+        let shards = build_shards(&store, 3, IndexKind::Vp, BoundKind::Mult, 0);
+        assert_eq!(shards.len(), 3);
+        let queries: Vec<DenseVec> = uniform_sphere(6, 12, 8);
+        for shard in &shards {
+            let mut ctx = QueryContext::new();
+            let kb = shard.knn_batch(&queries, 5, &mut ctx);
+            let rb = shard.range_batch(&queries, 0.2, &mut ctx);
+            for (qi, q) in queries.iter().enumerate() {
+                let (hits, _) = shard.knn_index(q, 5);
+                assert_bits_eq(&hits, &kb[qi].0, &format!("shard {} knn", shard.base));
+                let (hits, _) = shard.range_index(q, 0.2);
+                assert_bits_eq(&hits, &rb[qi].0, &format!("shard {} range", shard.base));
+            }
+        }
+    }
+}
+
+// --- mutable (ingest) corpora ----------------------------------------------
+
+#[test]
+fn ingest_context_queries_match_fresh_context_queries() {
+    for kernel in ALL_KERNELS {
+        // One sealed generation above QUANT_MIN_ROWS (so i8 builds its
+        // sidecar on the sealer path) plus staged memtable rows plus
+        // tombstones: the whole fan-out runs through one context.
+        let cfg = IngestConfig {
+            seal_threshold: 1150,
+            background: false,
+            kernel,
+            ..IngestConfig::new(12)
+        };
+        let corpus = IngestCorpus::new(cfg).unwrap();
+        let rows = uniform_sphere(1200, 12, 31);
+        for r in &rows {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        for id in (0..1200u64).step_by(97) {
+            assert!(corpus.delete(id));
+        }
+        let st = corpus.stats();
+        assert!(st.generations >= 1 && st.memtable_items > 0, "{st:?}");
+
+        let queries: Vec<DenseVec> = uniform_sphere(8, 12, 32);
+        let mut ctx = QueryContext::new();
+        let mut out = Vec::new();
+        for q in &queries {
+            let (a, evals_a) = corpus.knn(q, 9);
+            let evals_b = corpus.knn_ctx(q, 9, &mut ctx, &mut out);
+            assert_bits_eq64(&a, &out, &format!("ingest knn / {}", kernel.name()));
+            assert_eq!(evals_a, evals_b, "ingest knn evals / {}", kernel.name());
+
+            let (a, evals_a) = corpus.range(q, 0.1);
+            let evals_b = corpus.range_ctx(q, 0.1, &mut ctx, &mut out);
+            assert_bits_eq64(&a, &out, &format!("ingest range / {}", kernel.name()));
+            assert_eq!(evals_a, evals_b, "ingest range evals / {}", kernel.name());
+        }
+        assert_eq!(ctx.queries(), 16);
+    }
+}
+
+// --- 2. one context, 100 mixed queries, mixed index types ------------------
+
+#[test]
+fn one_context_survives_100_mixed_queries_across_index_types() {
+    let store = uniform_sphere_store(800, 10, 3);
+    let indexes: Vec<_> =
+        ALL_KINDS.iter().map(|k| k.build(store.view(), BoundKind::Mult)).collect();
+    let queries: Vec<DenseVec> = uniform_sphere(100, 10, 4);
+    let mut ctx = QueryContext::new();
+    let mut out = Vec::new();
+    for (qi, q) in queries.iter().enumerate() {
+        let index = &indexes[qi % indexes.len()];
+        let mut st = QueryStats::default();
+        ctx.begin_query();
+        if qi % 2 == 0 {
+            index.knn_into(q, 7, &mut ctx, &mut out);
+            let want = index.knn(q, 7, &mut st);
+            assert_bits_eq(&want, &out, &format!("mixed knn q{qi} ({})", index.name()));
+        } else {
+            let tau = if qi % 3 == 0 { -0.2 } else { 0.25 };
+            index.range_into(q, tau, &mut ctx, &mut out);
+            let want = index.range(q, tau, &mut st);
+            assert_bits_eq(&want, &out, &format!("mixed range q{qi} ({})", index.name()));
+        }
+    }
+    assert_eq!(ctx.queries(), 100);
+    let totals = ctx.totals();
+    assert!(totals.sim_evals > 0 && totals.nodes_visited >= 100);
+}
+
+// --- 3. zero allocations in the steady state -------------------------------
+
+#[test]
+fn steady_state_queries_allocate_nothing() {
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(2048, 32, 17).with_kernel(kernel);
+        if kernel == KernelKind::QuantizedI8 {
+            assert!(store.quant_sidecar().is_some(), "sidecar must be live for this leg");
+        }
+        let queries: Vec<DenseVec> = (0..6usize).map(|i| store.vec(i * 311)).collect();
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let mut ctx = QueryContext::new();
+            let mut out = Vec::new();
+            let mut run = |ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>| {
+                for q in &queries {
+                    ctx.begin_query();
+                    index.knn_into(q, 10, ctx, out);
+                    ctx.begin_query();
+                    index.range_into(q, 0.2, ctx, out);
+                }
+            };
+            // Warm every pooled buffer to its steady-state capacity (two
+            // rounds: the second round's lease order is the one the
+            // measured round repeats exactly).
+            run(&mut ctx, &mut out);
+            run(&mut ctx, &mut out);
+            let allocs = count_allocs(|| run(&mut ctx, &mut out));
+            assert_eq!(
+                allocs,
+                0,
+                "steady-state {} / {} allocated {} times per 12 queries",
+                kind.name(),
+                kernel.name(),
+                allocs
+            );
+        }
+    }
+}
+
+// --- 4. one QuantQuery build per query -------------------------------------
+
+#[test]
+fn quantized_traversal_builds_one_quant_query_per_query() {
+    let store = uniform_sphere_store(2048, 16, 21).with_kernel(KernelKind::QuantizedI8);
+    assert!(store.quant_sidecar().is_some());
+    // Small leaves => many bucket scans per traversal.
+    let tree = simetra::index::VpTree::with_leaf_size(store.view(), BoundKind::Mult, 5, 8);
+    let queries: Vec<DenseVec> = uniform_sphere(6, 16, 22);
+    let mut ctx = QueryContext::new();
+    // tau -1.0: every leaf bucket of every traversal is scanned.
+    let results = tree.range_batch(&queries, -1.0, &mut ctx);
+    assert_eq!(results.len(), 6);
+    for (hits, _) in &results {
+        assert_eq!(hits.len(), 2048, "tau=-1 returns the whole corpus");
+    }
+    assert_eq!(
+        ctx.quant_builds(),
+        6,
+        "one QuantQuery build per query, independent of leaf-bucket count"
+    );
+    // The pre-filter really ran (scan calls far outnumber the 6 builds).
+    assert!(store.kernel().counters().quant_prefilter_rows() > 0);
+}
