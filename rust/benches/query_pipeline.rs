@@ -15,7 +15,7 @@ use simetra::bounds::BoundKind;
 use simetra::coordinator::IndexKind;
 use simetra::data::{uniform_sphere, uniform_sphere_store};
 use simetra::index::{QueryStats, SimilarityIndex};
-use simetra::query::QueryContext;
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
 use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig};
 use simetra::util::Json;
 
@@ -76,6 +76,81 @@ fn main() {
                 row.push(("k".into(), Json::Num(k as f64)));
                 rows.push(Json::Obj(row));
             }
+        }
+    }
+
+    // --- filtered legs (ADR-005): allow-lists at three selectivities ------
+    //
+    // The filter is applied before exact evaluation inside the kernel
+    // scans, so lower selectivity should mean proportionally fewer exact
+    // evals — this leg tracks that as a perf trajectory.
+    let fkinds: &[IndexKind] = if quick {
+        &[IndexKind::Vp, IndexKind::Linear]
+    } else {
+        &[IndexKind::Vp, IndexKind::Gnat, IndexKind::Linear]
+    };
+    let fbatch = if quick { 16usize } else { 64 };
+    for &kind in fkinds {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        for &selectivity in &[0.1f64, 0.5, 0.9] {
+            // keep `selectivity * 10` of every 10 ids: exact 10% / 50% /
+            // 90% admission (a step_by(1/sel) stride would round 0.9 to
+            // a stride of 1, i.e. 100% selectivity).
+            let keep = (selectivity * 10.0).round() as u64;
+            let allow: Vec<u64> = (0..n as u64).filter(|id| id % 10 < keep).collect();
+            let req = SearchRequest::knn(k).allow(allow.clone()).build();
+            let mut ctx = QueryContext::new();
+            let mut resp = SearchResponse::default();
+            let name = format!("knn_filtered {} sel{selectivity} b{fbatch}", kind.name());
+            let m = bench(&cfg, &name, fbatch as u64, || {
+                for q in &queries[..fbatch] {
+                    ctx.begin_query();
+                    index.search_into(q, &req, &mut ctx, &mut resp);
+                    black_box(resp.hits.len());
+                }
+            });
+            report(&m);
+            let mut row = match m.to_json() {
+                Json::Obj(fields) => fields,
+                _ => unreachable!("to_json returns an object"),
+            };
+            row.push(("index".into(), Json::Str(kind.name().into())));
+            row.push(("path".into(), Json::Str("filtered".into())));
+            row.push(("selectivity".into(), Json::Num(selectivity)));
+            row.push(("batch".into(), Json::Num(fbatch as f64)));
+            row.push(("n".into(), Json::Num(n as f64)));
+            row.push(("d".into(), Json::Num(d as f64)));
+            row.push(("k".into(), Json::Num(k as f64)));
+            rows.push(Json::Obj(row));
+        }
+
+        // --- budgeted legs: sim-eval budgets at 10% / 50% of the corpus --
+        for &frac in &[0.1f64, 0.5] {
+            let budget = (n as f64 * frac) as u64;
+            let req = SearchRequest::knn(k).budget(budget).build();
+            let mut ctx = QueryContext::new();
+            let mut resp = SearchResponse::default();
+            let name = format!("knn_budgeted {} budget{frac} b{fbatch}", kind.name());
+            let m = bench(&cfg, &name, fbatch as u64, || {
+                for q in &queries[..fbatch] {
+                    ctx.begin_query();
+                    index.search_into(q, &req, &mut ctx, &mut resp);
+                    black_box((resp.hits.len(), resp.truncated));
+                }
+            });
+            report(&m);
+            let mut row = match m.to_json() {
+                Json::Obj(fields) => fields,
+                _ => unreachable!("to_json returns an object"),
+            };
+            row.push(("index".into(), Json::Str(kind.name().into())));
+            row.push(("path".into(), Json::Str("budgeted".into())));
+            row.push(("budget".into(), Json::Num(budget as f64)));
+            row.push(("batch".into(), Json::Num(fbatch as f64)));
+            row.push(("n".into(), Json::Num(n as f64)));
+            row.push(("d".into(), Json::Num(d as f64)));
+            row.push(("k".into(), Json::Num(k as f64)));
+            rows.push(Json::Obj(row));
         }
     }
 

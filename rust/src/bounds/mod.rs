@@ -66,6 +66,36 @@ impl BoundKind {
         BoundKind::MultLb2,
     ];
 
+    /// Parse a bound name: the lowercase wire tokens ([`BoundKind::token`]),
+    /// the Table-1 display names ([`BoundKind::name`], case-insensitive),
+    /// and the CLI short aliases all round-trip.
+    pub fn parse(s: &str) -> Option<BoundKind> {
+        Some(match s.to_lowercase().as_str() {
+            "euclidean" | "eucl" => BoundKind::Euclidean,
+            "eucl-lb" | "eucllb" => BoundKind::EuclLb,
+            "arccos" => BoundKind::Arccos,
+            "arccos-fast" | "fast" => BoundKind::ArccosFast,
+            "mult" => BoundKind::Mult,
+            "mult-lb1" | "lb1" => BoundKind::MultLb1,
+            "mult-lb2" | "lb2" => BoundKind::MultLb2,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase wire token (round-trips through
+    /// [`BoundKind::parse`]).
+    pub fn token(self) -> &'static str {
+        match self {
+            BoundKind::Euclidean => "euclidean",
+            BoundKind::EuclLb => "eucl-lb",
+            BoundKind::Arccos => "arccos",
+            BoundKind::ArccosFast => "arccos-fast",
+            BoundKind::Mult => "mult",
+            BoundKind::MultLb1 => "mult-lb1",
+            BoundKind::MultLb2 => "mult-lb2",
+        }
+    }
+
     /// Stable display name matching the paper's Table 1.
     pub fn name(self) -> &'static str {
         match self {
@@ -142,6 +172,16 @@ mod tests {
         assert_eq!(rows[4], ("Mult", "10"));
         assert_eq!(rows[5], ("Mult-LB1", "11"));
         assert_eq!(rows[6], ("Mult-LB2", "12"));
+    }
+
+    #[test]
+    fn tokens_round_trip_through_parse() {
+        for kind in BoundKind::ALL {
+            assert_eq!(BoundKind::parse(kind.token()), Some(kind));
+            assert_eq!(BoundKind::parse(kind.name()), Some(kind), "{}", kind.name());
+        }
+        assert_eq!(BoundKind::parse("lb1"), Some(BoundKind::MultLb1));
+        assert_eq!(BoundKind::parse("bogus"), None);
     }
 
     #[test]

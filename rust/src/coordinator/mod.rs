@@ -24,7 +24,7 @@ pub mod shard;
 
 pub use batcher::{BatchConfig, BatchError, BatchSubmitter};
 pub use metrics::Metrics;
-pub use protocol::{ConfigSnapshot, Hit, Request, Response, StatsSnapshot};
+pub use protocol::{ConfigSnapshot, Hit, Request, Response, SearchResult, StatsSnapshot};
 pub use shard::{ExecMode, IndexKind, Shard};
 
 use std::path::PathBuf;
@@ -35,10 +35,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::bounds::BoundKind;
+use crate::error::SimetraError;
 use crate::index::QueryStats;
 use crate::ingest::{IngestConfig, IngestCorpus};
 use crate::metrics::DenseVec;
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchMode, SearchRequest};
 use crate::runtime::EngineHandle;
 use crate::storage::{CorpusStore, KernelBackend, KernelKind};
 
@@ -75,22 +76,28 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// One query travelling through the batcher.
+/// One query travelling through the batcher: the raw vector plus its
+/// typed plan (ADR-005). Legacy `knn`/`range` entry points build plain
+/// plans, so the uniform-batch fast paths below still recognize them.
 #[derive(Debug, Clone)]
-enum Query {
-    Knn { vector: Vec<f32>, k: usize },
-    Range { vector: Vec<f32>, tau: f64 },
+struct Query {
+    vector: Vec<f32>,
+    req: SearchRequest,
 }
 
-type QueryResult = Result<(Vec<Hit>, u64), String>;
+type QueryResult = Result<SearchResult, String>;
+
+/// Per-job answer from one shard: local-id hits, the query's stats
+/// window, and the budget-truncation flag.
+type ShardAnswer = (Vec<(u32, f64)>, QueryStats, bool);
 
 /// Work sent to a persistent per-shard worker thread (Index mode): the
-/// whole batch, answered with per-job (hits, evals). Long-lived workers
+/// whole batch, answered with per-job [`ShardAnswer`]s. Long-lived workers
 /// avoid per-batch thread-spawn latency on the hot path.
 struct ShardJob {
     queries: Arc<Vec<Query>>,
     parsed: Arc<Vec<DenseVec>>,
-    reply: std::sync::mpsc::SyncSender<(u64, Vec<(Vec<(u32, f64)>, u64)>)>,
+    reply: std::sync::mpsc::SyncSender<(u64, Vec<ShardAnswer>)>,
 }
 
 struct ShardWorker {
@@ -98,27 +105,34 @@ struct ShardWorker {
 }
 
 /// The one `k` shared by every query of the batch, when the whole batch is
-/// kNN at one `k` — the common shape, served through the batched index API.
+/// *plain* kNN at one `k` — the common shape, served through the batched
+/// index API. Any per-request option opts the batch out.
 fn uniform_knn_k(queries: &[Query]) -> Option<usize> {
     let mut k0 = None;
     for q in queries {
-        match (q, k0) {
-            (Query::Knn { k, .. }, None) => k0 = Some(*k),
-            (Query::Knn { k, .. }, Some(prev)) if *k == prev => {}
+        if !q.req.is_plain() {
+            return None;
+        }
+        match (q.req.mode, k0) {
+            (SearchMode::Knn { k }, None) => k0 = Some(k),
+            (SearchMode::Knn { k }, Some(prev)) if k == prev => {}
             _ => return None,
         }
     }
     k0
 }
 
-/// The one `tau` shared by every query of an all-range batch (exact bit
-/// match — f64 equality is the right notion for "same threshold").
+/// The one `tau` shared by every query of an all-plain-range batch (exact
+/// bit match — f64 equality is the right notion for "same threshold").
 fn uniform_range_tau(queries: &[Query]) -> Option<f64> {
     let mut t0: Option<f64> = None;
     for q in queries {
-        match (q, t0) {
-            (Query::Range { tau, .. }, None) => t0 = Some(*tau),
-            (Query::Range { tau, .. }, Some(prev)) if tau.to_bits() == prev.to_bits() => {}
+        if !q.req.is_plain() {
+            return None;
+        }
+        match (q.req.mode, t0) {
+            (SearchMode::Range { tau }, None) => t0 = Some(tau),
+            (SearchMode::Range { tau }, Some(prev)) if tau.to_bits() == prev.to_bits() => {}
             _ => return None,
         }
     }
@@ -126,17 +140,18 @@ fn uniform_range_tau(queries: &[Query]) -> Option<f64> {
 }
 
 /// Execute one batch on a shard through the worker's reusable context:
-/// uniform batches run through the batched index API
-/// (`knn_batch`/`range_batch`), mixed batches per query — either way every
-/// query of every batch reuses the same scratch arena. Aggregates each
-/// query's pruning stats into `agg` and returns per-job (hits, evals).
+/// uniform plain batches run through the batched index API
+/// (`knn_batch`/`range_batch`), everything else per query through
+/// [`Shard::search_ctx`] — either way every query of every batch reuses
+/// the same scratch arena. Aggregates each query's pruning stats into
+/// `agg` and returns per-job answers.
 fn run_shard_batch(
     shard: &Shard,
     queries: &[Query],
     parsed: &[DenseVec],
     ctx: &mut QueryContext,
     agg: &mut QueryStats,
-) -> Vec<(Vec<(u32, f64)>, u64)> {
+) -> Vec<ShardAnswer> {
     let mut out = Vec::with_capacity(queries.len());
     let batched = if let Some(k) = uniform_knn_k(queries) {
         Some(shard.knn_batch(parsed, k, ctx))
@@ -147,17 +162,14 @@ fn run_shard_batch(
         Some(results) => {
             for (hits, stats) in results {
                 agg.merge(&stats);
-                out.push((hits, stats.sim_evals));
+                out.push((hits, stats, false));
             }
         }
         None => {
             for (q, v) in queries.iter().zip(parsed.iter()) {
-                let (hits, stats) = match q {
-                    Query::Knn { k, .. } => shard.knn_ctx(v, *k, ctx),
-                    Query::Range { tau, .. } => shard.range_ctx(v, *tau, ctx),
-                };
+                let (hits, stats, truncated) = shard.search_ctx(v, &q.req, ctx);
                 agg.merge(&stats);
-                out.push((hits, stats.sim_evals));
+                out.push((hits, stats, truncated));
             }
         }
     }
@@ -351,35 +363,36 @@ impl Coordinator {
         })
     }
 
-    fn ingest_handle(&self) -> Result<&Arc<IngestCorpus>> {
+    fn ingest_handle(&self) -> Result<&Arc<IngestCorpus>, SimetraError> {
         self.ingest.as_ref().ok_or_else(|| {
-            anyhow::anyhow!(
+            SimetraError::BadRequest(
                 "corpus is read-only (built with Coordinator::new); \
                  use Coordinator::new_mutable for ingest"
+                    .into(),
             )
         })
     }
 
     /// Insert a vector into a mutable corpus; returns the assigned id.
-    pub fn insert(&self, vector: Vec<f32>) -> Result<u64> {
+    pub fn insert(&self, vector: Vec<f32>) -> Result<u64, SimetraError> {
         let ingest = self.ingest_handle()?;
         self.check_dim(&vector)?;
-        ingest.insert(vector)
+        ingest.insert(vector).map_err(|e| SimetraError::BadRequest(e.to_string()))
     }
 
     /// Tombstone an id in a mutable corpus; returns whether it was live.
-    pub fn delete(&self, id: u64) -> Result<bool> {
+    pub fn delete(&self, id: u64) -> Result<bool, SimetraError> {
         Ok(self.ingest_handle()?.delete(id))
     }
 
     /// Seal the memtable into a generation now.
-    pub fn flush(&self) -> Result<()> {
+    pub fn flush(&self) -> Result<(), SimetraError> {
         self.ingest_handle()?.flush();
         Ok(())
     }
 
     /// Seal, then merge all generations, dropping tombstoned rows.
-    pub fn compact(&self) -> Result<()> {
+    pub fn compact(&self) -> Result<(), SimetraError> {
         self.ingest_handle()?.compact();
         Ok(())
     }
@@ -398,45 +411,88 @@ impl Coordinator {
     /// bug (panic), so malformed input must never get that far. Mutable
     /// corpora fix the dimension at construction, so it is enforced even
     /// while the corpus is empty.
-    fn check_dim(&self, vector: &[f32]) -> Result<()> {
+    fn check_dim(&self, vector: &[f32]) -> Result<(), SimetraError> {
         let enforce = self.ingest.is_some() || self.corpus_size > 0;
         if enforce && vector.len() != self.corpus_dim {
-            anyhow::bail!(
-                "vector dimension {} does not match corpus dimension {}",
-                vector.len(),
-                self.corpus_dim
-            );
+            return Err(SimetraError::DimMismatch { got: vector.len(), want: self.corpus_dim });
         }
         Ok(())
     }
 
-    /// kNN query (batched behind the scenes); blocks until answered.
-    pub fn knn(&self, vector: Vec<f32>, k: usize) -> Result<(Vec<Hit>, u64)> {
+    /// Validate a typed plan against this serving corpus (ADR-005): mode
+    /// parameters must be sane, filter lists sorted, and a kernel override
+    /// resolvable against the corpus's available backends.
+    fn check_request(&self, req: &SearchRequest) -> Result<(), SimetraError> {
+        match req.mode {
+            SearchMode::Knn { k } | SearchMode::KnnWithin { k, .. } if k == 0 => {
+                return Err(SimetraError::BadRequest("k must be >= 1".into()));
+            }
+            _ => {}
+        }
+        if let Some(tau) = req.mode.tau() {
+            if tau.is_nan() {
+                return Err(SimetraError::BadRequest("tau must not be NaN".into()));
+            }
+        }
+        if !req.filter.is_sorted() {
+            return Err(SimetraError::BadRequest("filter ids must be sorted ascending".into()));
+        }
+        if let Some(kind) = req.kernel {
+            kind.validate_dim(self.corpus_dim)
+                .map_err(|e| SimetraError::KernelUnavailable(e.to_string()))?;
+            // The i8 pre-filter needs the corpus's sidecar, which only an
+            // i8-primary store builds; exact kinds are always available.
+            if kind == KernelKind::QuantizedI8 && self.kernel.kind() != KernelKind::QuantizedI8 {
+                return Err(SimetraError::KernelUnavailable(format!(
+                    "kernel override 'i8' unavailable: corpus serves through '{}' \
+                     and carries no quantized sidecar",
+                    self.kernel.kind().name()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one typed search plan (batched behind the scenes); blocks
+    /// until answered. The single search entry point — `knn` and `range`
+    /// are plain-plan wrappers over it.
+    pub fn search(
+        &self,
+        vector: Vec<f32>,
+        req: SearchRequest,
+    ) -> Result<SearchResult, SimetraError> {
         let started = Instant::now();
-        let out = self.check_dim(&vector).and_then(|()| {
-            self.submitter
-                .submit(Query::Knn { vector, k })
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .map_err(|e| anyhow::anyhow!(e))
-        });
+        let out = self
+            .check_dim(&vector)
+            .and_then(|()| self.check_request(&req))
+            .and_then(|()| {
+                self.submitter
+                    .submit(Query { vector, req })
+                    .map_err(|e| SimetraError::Io(e.to_string()))?
+                    .map_err(SimetraError::Io)
+            });
         self.finish(started, &out);
         out
     }
 
-    /// Range query (`sim >= tau`); blocks until answered.
-    pub fn range(&self, vector: Vec<f32>, tau: f64) -> Result<(Vec<Hit>, u64)> {
-        let started = Instant::now();
-        let out = self.check_dim(&vector).and_then(|()| {
-            self.submitter
-                .submit(Query::Range { vector, tau })
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .map_err(|e| anyhow::anyhow!(e))
-        });
-        self.finish(started, &out);
-        out
+    /// kNN query; blocks until answered. (Plain-plan wrapper over
+    /// [`Coordinator::search`], byte-identical results — including the
+    /// legacy `k = 0` behavior: the query executes and returns no hits,
+    /// where the stricter `search` surface rejects `k = 0` outright.)
+    pub fn knn(&self, vector: Vec<f32>, k: usize) -> Result<(Vec<Hit>, u64), SimetraError> {
+        self.search(vector, SearchRequest::knn(k.max(1)).build()).map(|mut r| {
+            r.hits.truncate(k);
+            (r.hits, r.sim_evals)
+        })
     }
 
-    fn finish(&self, started: Instant, out: &Result<(Vec<Hit>, u64)>) {
+    /// Range query (`sim >= tau`); blocks until answered. (Plain-plan
+    /// wrapper over [`Coordinator::search`].)
+    pub fn range(&self, vector: Vec<f32>, tau: f64) -> Result<(Vec<Hit>, u64), SimetraError> {
+        self.search(vector, SearchRequest::range(tau).build()).map(|r| (r.hits, r.sim_evals))
+    }
+
+    fn finish(&self, started: Instant, out: &Result<SearchResult, SimetraError>) {
         self.metrics.queries.fetch_add(1, Relaxed);
         if out.is_err() {
             self.metrics.errors.fetch_add(1, Relaxed);
@@ -473,19 +529,19 @@ fn execute_batch_ingest(
 ) {
     let q0 = ctx.queries();
     for job in jobs {
-        let evals = match &job.query {
-            Query::Knn { vector, k } => {
-                ingest.knn_ctx(&DenseVec::new(vector.clone()), *k, ctx, hits_buf)
-            }
-            Query::Range { vector, tau } => {
-                ingest.range_ctx(&DenseVec::new(vector.clone()), *tau, ctx, hits_buf)
-            }
-        };
+        let q = DenseVec::new(job.query.vector.clone());
+        let (evals, truncated) = ingest.search_ctx(&q, &job.query.req, ctx, hits_buf);
         metrics.sim_evals.fetch_add(evals, Relaxed);
         metrics.pruned.fetch_add(ctx.stats.pruned, Relaxed);
         metrics.nodes_visited.fetch_add(ctx.stats.nodes_visited, Relaxed);
         let hits: Vec<Hit> = hits_buf.iter().map(|&(id, score)| Hit { id, score }).collect();
-        let _ = job.reply.send(Ok((hits, evals)));
+        let _ = job.reply.send(Ok(SearchResult {
+            hits,
+            truncated,
+            sim_evals: evals,
+            nodes_visited: ctx.stats.nodes_visited,
+            pruned: ctx.stats.pruned,
+        }));
     }
     metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);
 }
@@ -503,20 +559,19 @@ fn execute_batch(
     jobs: Vec<batcher::Job<Query, QueryResult>>,
 ) {
     let queries: Vec<Query> = jobs.iter().map(|j| j.query.clone()).collect();
-    let parsed: Arc<Vec<DenseVec>> = Arc::new(
-        queries
-            .iter()
-            .map(|q| match q {
-                Query::Knn { vector, .. } | Query::Range { vector, .. } => {
-                    DenseVec::new(vector.clone())
-                }
-            })
-            .collect(),
-    );
+    let parsed: Arc<Vec<DenseVec>> =
+        Arc::new(queries.iter().map(|q| DenseVec::new(q.vector.clone())).collect());
     let queries = Arc::new(queries);
 
-    // Per-job accumulators: (global hits, sim_evals).
-    let mut results: Vec<(Vec<(u64, f64)>, u64)> = vec![(Vec::new(), 0); jobs.len()];
+    /// Per-job accumulator: global hits, stats, truncated.
+    #[derive(Default, Clone)]
+    struct Acc {
+        hits: Vec<(u64, f64)>,
+        stats: QueryStats,
+        truncated: bool,
+    }
+    let mut results: Vec<Acc> = vec![Acc::default(); jobs.len()];
+    let mut poisoned = false;
 
     match mode {
         ExecMode::Index => {
@@ -541,45 +596,36 @@ fn execute_batch(
             let mut answered = 0usize;
             for (base, per_shard) in rx {
                 answered += 1;
-                for (ji, (hits, evals)) in per_shard.into_iter().enumerate() {
+                for (ji, (hits, stats, truncated)) in per_shard.into_iter().enumerate() {
                     for (id, s) in hits {
-                        results[ji].0.push((base + id as u64, s));
+                        results[ji].hits.push((base + id as u64, s));
                     }
-                    results[ji].1 += evals;
+                    results[ji].stats.merge(&stats);
+                    results[ji].truncated |= truncated;
                 }
             }
             if answered != sent {
-                for r in &mut results {
-                    r.1 = u64::MAX; // a worker died mid-batch; poisoned
-                }
+                poisoned = true; // a worker died mid-batch
             }
         }
         ExecMode::Engine | ExecMode::Hybrid => {
             let engine = engine.expect("engine required (checked in new)");
             let ctx_q0 = ctx.queries();
             let mut agg = QueryStats::default();
-            let knn_ids: Vec<usize> = queries
-                .iter()
-                .enumerate()
-                .filter(|(_, q)| matches!(q, Query::Knn { .. }))
-                .map(|(i, _)| i)
-                .collect();
-            let range_ids: Vec<usize> = queries
-                .iter()
-                .enumerate()
-                .filter(|(_, q)| matches!(q, Query::Range { .. }))
-                .map(|(i, _)| i)
-                .collect();
-            let kmax = knn_ids
-                .iter()
-                .map(|&i| match &queries[i] {
-                    Query::Knn { k, .. } => *k,
-                    _ => 0,
-                })
-                .max()
-                .unwrap_or(0);
-            let knn_vecs: Vec<DenseVec> =
-                knn_ids.iter().map(|&i| parsed[i].clone()).collect();
+            // Plain kNN queries take the batched engine path; everything
+            // else (range, KnnWithin, any per-request option) runs the
+            // index path per query on the collector's context.
+            let mut knn_ids: Vec<usize> = Vec::new();
+            let mut other_ids: Vec<usize> = Vec::new();
+            for (i, q) in queries.iter().enumerate() {
+                if q.req.is_plain() && matches!(q.req.mode, SearchMode::Knn { .. }) {
+                    knn_ids.push(i);
+                } else {
+                    other_ids.push(i);
+                }
+            }
+            let kmax = knn_ids.iter().filter_map(|&i| queries[i].req.mode.k()).max().unwrap_or(0);
+            let knn_vecs: Vec<DenseVec> = knn_ids.iter().map(|&i| parsed[i].clone()).collect();
 
             for shard in shards {
                 if !knn_ids.is_empty() {
@@ -599,57 +645,64 @@ fn execute_batch(
                             for (pos, (hits, evals)) in per_query.into_iter().enumerate() {
                                 let ji = knn_ids[pos];
                                 for (id, s) in hits {
-                                    results[ji].0.push((shard.base + id as u64, s));
+                                    results[ji].hits.push((shard.base + id as u64, s));
                                 }
-                                results[ji].1 += evals;
+                                results[ji].stats.sim_evals += evals;
                             }
                         }
                         Err(e) => {
                             eprintln!("engine batch failed: {e}; falling back to index");
                             for &ji in &knn_ids {
-                                let Query::Knn { k, .. } = &queries[ji] else { continue };
-                                let (hits, stats) = shard.knn_ctx(&parsed[ji], *k, ctx);
+                                let (hits, stats, _) =
+                                    shard.search_ctx(&parsed[ji], &queries[ji].req, ctx);
                                 agg.merge(&stats);
                                 for (id, s) in hits {
-                                    results[ji].0.push((shard.base + id as u64, s));
+                                    results[ji].hits.push((shard.base + id as u64, s));
                                 }
-                                results[ji].1 += stats.sim_evals;
+                                results[ji].stats.merge(&stats);
                             }
                         }
                     }
                 }
-                for &ji in &range_ids {
-                    let Query::Range { tau, .. } = &queries[ji] else { continue };
-                    if mode == ExecMode::Hybrid {
+                for &ji in &other_ids {
+                    let req = &queries[ji].req;
+                    let plain_range_tau = match req.mode {
+                        SearchMode::Range { tau } if req.is_plain() => Some(tau),
+                        _ => None,
+                    };
+                    if let (ExecMode::Hybrid, Some(tau)) = (mode, plain_range_tau) {
                         metrics.engine_calls.fetch_add(1, Relaxed);
-                        match shard.range_hybrid(engine, std::slice::from_ref(&parsed[ji]), *tau)
-                        {
+                        match shard.range_hybrid(engine, std::slice::from_ref(&parsed[ji]), tau) {
                             Ok(mut per_query) => {
                                 let (hits, evals) = per_query.remove(0);
                                 for (id, s) in hits {
-                                    results[ji].0.push((shard.base + id as u64, s));
+                                    results[ji].hits.push((shard.base + id as u64, s));
                                 }
-                                results[ji].1 += evals;
+                                results[ji].stats.sim_evals += evals;
                             }
                             Err(e) => {
                                 eprintln!("hybrid range failed: {e}; index fallback");
-                                let (hits, stats) = shard.range_ctx(&parsed[ji], *tau, ctx);
+                                let (hits, stats, truncated) =
+                                    shard.search_ctx(&parsed[ji], req, ctx);
                                 agg.merge(&stats);
                                 for (id, s) in hits {
-                                    results[ji].0.push((shard.base + id as u64, s));
+                                    results[ji].hits.push((shard.base + id as u64, s));
                                 }
-                                results[ji].1 += stats.sim_evals;
+                                results[ji].stats.merge(&stats);
+                                results[ji].truncated |= truncated;
                             }
                         }
                     } else {
-                        // Engine mode scores top-k only; range queries run
-                        // the index path on the collector's context.
-                        let (hits, stats) = shard.range_ctx(&parsed[ji], *tau, ctx);
+                        // The engine scores plain top-k only; every other
+                        // plan shape runs the index path on the
+                        // collector's context.
+                        let (hits, stats, truncated) = shard.search_ctx(&parsed[ji], req, ctx);
                         agg.merge(&stats);
                         for (id, s) in hits {
-                            results[ji].0.push((shard.base + id as u64, s));
+                            results[ji].hits.push((shard.base + id as u64, s));
                         }
-                        results[ji].1 += stats.sim_evals;
+                        results[ji].stats.merge(&stats);
+                        results[ji].truncated |= truncated;
                     }
                 }
             }
@@ -660,21 +713,27 @@ fn execute_batch(
     }
 
     // Merge + reply.
-    for (job, (mut hits, evals)) in jobs.into_iter().zip(results) {
-        if evals == u64::MAX {
+    for (job, mut acc) in jobs.into_iter().zip(results) {
+        if poisoned {
             metrics.errors.fetch_add(1, Relaxed);
             let _ = job.reply.send(Err("internal shard failure".into()));
             continue;
         }
-        metrics.sim_evals.fetch_add(evals, Relaxed);
+        metrics.sim_evals.fetch_add(acc.stats.sim_evals, Relaxed);
         // Total order (ids unique): unstable sort, identical permutation,
         // no merge-buffer allocation on the reply path.
-        hits.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        if let Query::Knn { k, .. } = &job.query {
-            hits.truncate(*k);
+        acc.hits.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        if let Some(k) = job.query.req.mode.k() {
+            acc.hits.truncate(k);
         }
-        let hits: Vec<Hit> = hits.into_iter().map(|(id, score)| Hit { id, score }).collect();
-        let _ = job.reply.send(Ok((hits, evals)));
+        let hits: Vec<Hit> = acc.hits.into_iter().map(|(id, score)| Hit { id, score }).collect();
+        let _ = job.reply.send(Ok(SearchResult {
+            hits,
+            truncated: acc.truncated,
+            sim_evals: acc.stats.sim_evals,
+            nodes_visited: acc.stats.nodes_visited,
+            pruned: acc.stats.pruned,
+        }));
     }
 }
 

@@ -3,18 +3,36 @@
 //! Hand-rolled (de)serialization over `util::Json` (serde is unavailable in
 //! this offline build); the shapes mirror what a serde-tagged enum would
 //! produce: `{"op": "knn", "vector": [...], "k": 10}`.
+//!
+//! The one search surface (ADR-005) is the versioned `search` op: an
+//! envelope carrying the query mode (`knn` / `range` / `knn_within`) plus
+//! the per-request options of a [`SearchRequest`] (bound/kernel override,
+//! allow/deny filter, evaluation budget), answered by a `search` status
+//! with hits, stats, and the truncation flag. The legacy `knn` / `range`
+//! ops remain accepted — they parse into plain [`SearchRequest`]s
+//! internally and are answered with the original `ok` envelope, byte for
+//! byte.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
 
+use anyhow::Result;
+
+use crate::bounds::BoundKind;
+use crate::error::SimetraError;
+use crate::query::{IdFilter, SearchMode, SearchRequest};
+use crate::storage::KernelKind;
 use crate::util::Json;
 
 /// A client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// k nearest neighbors by cosine similarity.
+    /// k nearest neighbors by cosine similarity (legacy op; served through
+    /// the `search` path as a plain plan, byte-identical reply).
     Knn { vector: Vec<f32>, k: usize },
-    /// All items with `sim >= tau`.
+    /// All items with `sim >= tau` (legacy op; see [`Request::Knn`]).
     Range { vector: Vec<f32>, tau: f64 },
+    /// One typed search plan (ADR-005): mode + per-request options.
+    Search { vector: Vec<f32>, req: SearchRequest },
     /// Insert a vector into a mutable corpus; the reply carries the
     /// assigned id.
     Insert { vector: Vec<f32> },
@@ -32,6 +50,9 @@ pub enum Request {
     Ping,
 }
 
+/// Wire version of the `search` op envelope.
+const SEARCH_VERSION: usize = 1;
+
 impl Request {
     pub fn to_json(&self) -> Json {
         match self {
@@ -45,6 +66,47 @@ impl Request {
                 ("vector", Json::arr_f32(vector.iter().copied())),
                 ("tau", Json::Num(*tau)),
             ]),
+            Request::Search { vector, req } => {
+                let mut fields: Vec<(&str, Json)> = vec![
+                    ("op", Json::Str("search".into())),
+                    ("v", Json::Num(SEARCH_VERSION as f64)),
+                    ("vector", Json::arr_f32(vector.iter().copied())),
+                ];
+                match req.mode {
+                    SearchMode::Knn { k } => {
+                        fields.push(("mode", Json::Str("knn".into())));
+                        fields.push(("k", Json::Num(k as f64)));
+                    }
+                    SearchMode::Range { tau } => {
+                        fields.push(("mode", Json::Str("range".into())));
+                        fields.push(("tau", Json::Num(tau)));
+                    }
+                    SearchMode::KnnWithin { k, tau } => {
+                        fields.push(("mode", Json::Str("knn_within".into())));
+                        fields.push(("k", Json::Num(k as f64)));
+                        fields.push(("tau", Json::Num(tau)));
+                    }
+                }
+                if let Some(bound) = req.bound {
+                    fields.push(("bound", Json::Str(bound.token().into())));
+                }
+                if let Some(kernel) = req.kernel {
+                    fields.push(("kernel", Json::Str(kernel.name().into())));
+                }
+                match &req.filter {
+                    IdFilter::None => {}
+                    IdFilter::Allow(ids) => {
+                        fields.push(("allow", Json::arr_f64(ids.iter().map(|&i| i as f64))));
+                    }
+                    IdFilter::Deny(ids) => {
+                        fields.push(("deny", Json::arr_f64(ids.iter().map(|&i| i as f64))));
+                    }
+                }
+                if let Some(budget) = req.budget {
+                    fields.push(("budget", Json::Num(budget as f64)));
+                }
+                Json::obj(fields)
+            }
             Request::Insert { vector } => Json::obj(vec![
                 ("op", Json::Str("insert".into())),
                 ("vector", Json::arr_f32(vector.iter().copied())),
@@ -61,8 +123,20 @@ impl Request {
         }
     }
 
-    pub fn from_json(v: &Json) -> Result<Request> {
-        Ok(match v.req("op")?.as_str()? {
+    pub fn from_json(v: &Json) -> Result<Request, SimetraError> {
+        let bad = |e: anyhow::Error| SimetraError::BadRequest(e.to_string());
+        let op = v.req("op").map_err(bad)?.as_str().map_err(bad)?.to_string();
+        match Self::parse_known(&op, v) {
+            Ok(Some(req)) => Ok(req),
+            Ok(None) => Err(SimetraError::UnknownOp(op)),
+            Err(e) => Err(bad(e)),
+        }
+    }
+
+    /// Parse a known op (`Ok(None)` for an unknown one; field errors are
+    /// `Err`).
+    fn parse_known(op: &str, v: &Json) -> Result<Option<Request>> {
+        Ok(Some(match op {
             "knn" => Request::Knn {
                 vector: v.req("vector")?.as_f32_vec()?,
                 k: v.req("k")?.as_usize()?,
@@ -71,20 +145,82 @@ impl Request {
                 vector: v.req("vector")?.as_f32_vec()?,
                 tau: v.req("tau")?.as_f64()?,
             },
+            "search" => Request::Search {
+                vector: v.req("vector")?.as_f32_vec()?,
+                req: parse_search_plan(v)?,
+            },
             "insert" => Request::Insert { vector: v.req("vector")?.as_f32_vec()? },
-            "delete" => Request::Delete { id: v.req("id")?.as_usize()? as u64 },
+            "delete" => Request::Delete { id: v.req("id")?.as_u64()? },
             "flush" => Request::Flush,
             "compact" => Request::Compact,
             "stats" => Request::Stats,
             "config" => Request::Config,
             "ping" => Request::Ping,
-            other => bail!("unknown op '{other}'"),
-        })
+            _ => return Ok(None),
+        }))
     }
 
-    pub fn parse(line: &str) -> Result<Request> {
-        Self::from_json(&Json::parse(line)?)
+    pub fn parse(line: &str) -> Result<Request, SimetraError> {
+        let v = Json::parse(line).map_err(|e| SimetraError::BadRequest(e.to_string()))?;
+        Self::from_json(&v)
     }
+}
+
+/// Parse the plan fields of a `search` envelope.
+fn parse_search_plan(v: &Json) -> Result<SearchRequest> {
+    if let Some(ver) = v.get("v") {
+        let ver = ver.as_usize()?;
+        anyhow::ensure!(ver == SEARCH_VERSION, "unsupported search version {ver}");
+    }
+    let tau = |v: &Json| -> Result<f64> {
+        let tau = v.req("tau")?.as_f64()?;
+        anyhow::ensure!(tau.is_finite(), "tau must be finite, got {tau}");
+        Ok(tau)
+    };
+    let mode = match v.req("mode")?.as_str()? {
+        "knn" => SearchMode::Knn { k: v.req("k")?.as_usize()? },
+        "range" => SearchMode::Range { tau: tau(v)? },
+        "knn_within" => SearchMode::KnnWithin { k: v.req("k")?.as_usize()?, tau: tau(v)? },
+        other => anyhow::bail!("unknown search mode '{other}'"),
+    };
+    let bound = match v.get("bound") {
+        Some(b) => {
+            let name = b.as_str()?;
+            Some(
+                BoundKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown bound '{name}'"))?,
+            )
+        }
+        None => None,
+    };
+    let kernel = match v.get("kernel") {
+        Some(k) => {
+            let name = k.as_str()?;
+            Some(
+                KernelKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown kernel '{name}'"))?,
+            )
+        }
+        None => None,
+    };
+    let sorted_ids = |field: &Json| -> Result<Vec<u64>> {
+        let mut ids =
+            field.as_arr()?.iter().map(|x| x.as_u64()).collect::<Result<Vec<u64>>>()?;
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(ids)
+    };
+    let filter = match (v.get("allow"), v.get("deny")) {
+        (Some(_), Some(_)) => anyhow::bail!("allow and deny are mutually exclusive"),
+        (Some(a), None) => IdFilter::Allow(Arc::new(sorted_ids(a)?)),
+        (None, Some(d)) => IdFilter::Deny(Arc::new(sorted_ids(d)?)),
+        (None, None) => IdFilter::None,
+    };
+    let budget = match v.get("budget") {
+        Some(b) => Some(b.as_u64()?),
+        None => None,
+    };
+    Ok(SearchRequest { mode, bound, kernel, filter, budget })
 }
 
 /// One scored hit.
@@ -92,6 +228,24 @@ impl Request {
 pub struct Hit {
     pub id: u64,
     pub score: f64,
+}
+
+/// The reply of one `search` op: hits, the truncation flag, and the
+/// query's traversal stats. Also the return type of
+/// `Coordinator::search`, so library and wire callers see one shape.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchResult {
+    pub hits: Vec<Hit>,
+    /// Whether an evaluation budget stopped the traversal early (hits are
+    /// then exact over the evaluated subset; ADR-005).
+    pub truncated: bool,
+    /// Exact similarity evaluations spent on this query (pruning power).
+    pub sim_evals: u64,
+    /// Tree nodes / pivot tables visited.
+    pub nodes_visited: u64,
+    /// Candidates discarded by a certified bound without an exact
+    /// evaluation.
+    pub pruned: u64,
 }
 
 /// A server response.
@@ -102,6 +256,8 @@ pub enum Response {
         /// Exact similarity evaluations spent on this query (pruning power).
         sim_evals: u64,
     },
+    /// Reply to the `search` op: hits + stats + truncation envelope.
+    Search(SearchResult),
     /// Reply to `insert`: the assigned global id.
     Inserted { id: u64 },
     /// Reply to `delete`: whether the id was live (deleting an unknown or
@@ -112,7 +268,30 @@ pub enum Response {
     Stats(StatsSnapshot),
     Config(ConfigSnapshot),
     Pong,
-    Error { message: String },
+    Error {
+        /// Stable machine-readable code (`crate::error::SimetraError::code`;
+        /// empty when talking to a pre-ADR-005 server).
+        code: String,
+        message: String,
+    },
+}
+
+/// Hits as a JSON array (shared by the `ok` and `search` envelopes).
+fn hits_to_json(hits: &[Hit]) -> Json {
+    Json::Arr(
+        hits.iter()
+            .map(|h| {
+                Json::obj(vec![("id", Json::Num(h.id as f64)), ("score", Json::Num(h.score))])
+            })
+            .collect(),
+    )
+}
+
+fn hits_from_json(v: &Json) -> Result<Vec<Hit>> {
+    v.as_arr()?
+        .iter()
+        .map(|h| Ok(Hit { id: h.req("id")?.as_u64()?, score: h.req("score")?.as_f64()? }))
+        .collect()
 }
 
 impl Response {
@@ -120,20 +299,16 @@ impl Response {
         match self {
             Response::Ok { hits, sim_evals } => Json::obj(vec![
                 ("status", Json::Str("ok".into())),
-                (
-                    "hits",
-                    Json::Arr(
-                        hits.iter()
-                            .map(|h| {
-                                Json::obj(vec![
-                                    ("id", Json::Num(h.id as f64)),
-                                    ("score", Json::Num(h.score)),
-                                ])
-                            })
-                            .collect(),
-                    ),
-                ),
+                ("hits", hits_to_json(hits)),
                 ("sim_evals", Json::Num(*sim_evals as f64)),
+            ]),
+            Response::Search(r) => Json::obj(vec![
+                ("status", Json::Str("search".into())),
+                ("hits", hits_to_json(&r.hits)),
+                ("truncated", Json::Bool(r.truncated)),
+                ("sim_evals", Json::Num(r.sim_evals as f64)),
+                ("nodes_visited", Json::Num(r.nodes_visited as f64)),
+                ("pruned", Json::Num(r.pruned as f64)),
             ]),
             Response::Inserted { id } => Json::obj(vec![
                 ("status", Json::Str("inserted".into())),
@@ -183,8 +358,9 @@ impl Response {
                 ("quant_rerank_rows", Json::Num(s.quant_rerank_rows as f64)),
             ]),
             Response::Pong => Json::obj(vec![("status", Json::Str("pong".into()))]),
-            Response::Error { message } => Json::obj(vec![
+            Response::Error { code, message } => Json::obj(vec![
                 ("status", Json::Str("error".into())),
+                ("code", Json::Str(code.clone())),
                 ("message", Json::Str(message.clone())),
             ]),
         }
@@ -193,20 +369,17 @@ impl Response {
     pub fn from_json(v: &Json) -> Result<Response> {
         Ok(match v.req("status")?.as_str()? {
             "ok" => Response::Ok {
-                hits: v
-                    .req("hits")?
-                    .as_arr()?
-                    .iter()
-                    .map(|h| {
-                        Ok(Hit {
-                            id: h.req("id")?.as_f64()? as u64,
-                            score: h.req("score")?.as_f64()?,
-                        })
-                    })
-                    .collect::<Result<_>>()?,
+                hits: hits_from_json(v.req("hits")?)?,
                 sim_evals: v.req("sim_evals")?.as_f64()? as u64,
             },
-            "inserted" => Response::Inserted { id: v.req("id")?.as_usize()? as u64 },
+            "search" => Response::Search(SearchResult {
+                hits: hits_from_json(v.req("hits")?)?,
+                truncated: v.req("truncated")?.as_bool()?,
+                sim_evals: v.req("sim_evals")?.as_f64()? as u64,
+                nodes_visited: v.req("nodes_visited")?.as_f64()? as u64,
+                pruned: v.req("pruned")?.as_f64()? as u64,
+            }),
+            "inserted" => Response::Inserted { id: v.req("id")?.as_u64()? },
             "deleted" => Response::Deleted { existed: v.req("existed")?.as_bool()? },
             "done" => Response::Done,
             "config" => Response::Config(ConfigSnapshot {
@@ -249,8 +422,12 @@ impl Response {
                 })
             }
             "pong" => Response::Pong,
-            "error" => Response::Error { message: v.req("message")?.as_str()?.to_string() },
-            other => bail!("unknown status '{other}'"),
+            "error" => Response::Error {
+                // `code` is absent in pre-ADR-005 server output.
+                code: v.get("code").and_then(|c| c.as_str().ok()).unwrap_or("").to_string(),
+                message: v.req("message")?.as_str()?.to_string(),
+            },
+            other => anyhow::bail!("unknown status '{other}'"),
         })
     }
 
@@ -347,9 +524,125 @@ mod tests {
     }
 
     #[test]
+    fn search_round_trips_every_mode_and_option_combination() {
+        let modes = [
+            SearchMode::Knn { k: 7 },
+            SearchMode::Range { tau: 0.3 },
+            SearchMode::KnnWithin { k: 4, tau: 0.6 },
+        ];
+        let bounds = [None, Some(BoundKind::Mult), Some(BoundKind::EuclLb)];
+        let kernels = [None, Some(KernelKind::Simd), Some(KernelKind::QuantizedI8)];
+        let filters = [
+            IdFilter::None,
+            IdFilter::Allow(Arc::new(vec![1, 5, 9])),
+            IdFilter::Deny(Arc::new(vec![0, 2, 4_294_967_296])),
+        ];
+        let budgets = [None, Some(0u64), Some(123_456)];
+        for mode in modes {
+            for bound in bounds {
+                for kernel in kernels {
+                    for filter in &filters {
+                        for budget in budgets {
+                            let req = SearchRequest {
+                                mode,
+                                bound,
+                                kernel,
+                                filter: filter.clone(),
+                                budget,
+                            };
+                            let wire =
+                                Request::Search { vector: vec![0.5, -0.5], req: req.clone() };
+                            let line = wire.to_json().to_string();
+                            let back = Request::parse(&line).unwrap();
+                            assert_eq!(back, wire, "line: {line}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn search_rejects_malformed_plans() {
+        let base = r#""vector": [1.0]"#;
+        for (line, why) in [
+            (format!(r#"{{"op": "search", {base}, "mode": "warp", "k": 3}}"#), "unknown mode"),
+            (format!(r#"{{"op": "search", {base}, "mode": "knn"}}"#), "missing k"),
+            (format!(r#"{{"op": "search", {base}, "mode": "range"}}"#), "missing tau"),
+            (
+                format!(r#"{{"op": "search", "v": 2, {base}, "mode": "knn", "k": 3}}"#),
+                "unsupported version",
+            ),
+            (
+                format!(r#"{{"op": "search", {base}, "mode": "range", "tau": 1e999}}"#),
+                "non-finite tau",
+            ),
+            (
+                format!(
+                    r#"{{"op": "search", {base}, "mode": "knn", "k": 3, "allow": [1], "deny": [2]}}"#
+                ),
+                "allow+deny",
+            ),
+            (
+                format!(r#"{{"op": "search", {base}, "mode": "knn", "k": 3, "kernel": "gpu"}}"#),
+                "unknown kernel",
+            ),
+            (
+                format!(r#"{{"op": "search", {base}, "mode": "knn", "k": 3, "bound": "best"}}"#),
+                "unknown bound",
+            ),
+        ] {
+            let got = Request::parse(&line);
+            assert!(got.is_err(), "{why}: {line} parsed as {got:?}");
+            assert_eq!(got.unwrap_err().code(), "bad_request", "{why}");
+        }
+    }
+
+    #[test]
+    fn delete_ids_parse_as_u64_with_boundary_checks() {
+        // Round-trip at the exactly-representable boundary values.
+        for id in [0u64, 1, u32::MAX as u64 + 1, (1u64 << 53) - 1] {
+            let r = Request::Delete { id };
+            let line = r.to_json().to_string();
+            assert_eq!(Request::parse(&line).unwrap(), r, "id {id}");
+        }
+        // From 2^53 a JSON double no longer represents ids unambiguously
+        // (2^53+1 arrives as exactly 2^53): reject instead of silently
+        // acting on a neighboring id (and never truncate through usize,
+        // which is 32 bits on 32-bit targets).
+        for line in [
+            r#"{"op": "delete", "id": 9007199254740992}"#, // 2^53
+            r#"{"op": "delete", "id": 9007199254740993}"#, // 2^53 + 1: rounds to 2^53
+            r#"{"op": "delete", "id": 9007199254740994}"#, // 2^53 + 2
+            r#"{"op": "delete", "id": 1e300}"#,
+            r#"{"op": "delete", "id": -3}"#,
+            r#"{"op": "delete", "id": 1.5}"#,
+        ] {
+            assert!(Request::parse(line).is_err(), "{line}");
+        }
+    }
+
+    #[test]
+    fn unknown_op_gets_the_typed_code() {
+        let err = Request::parse(r#"{"op": "explode"}"#).unwrap_err();
+        assert_eq!(err.code(), "unknown_op");
+        assert_eq!(err.to_string(), "unknown op 'explode'");
+        let err = Request::parse(r#"{"k": 3}"#).unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+    }
+
+    #[test]
     fn response_round_trips() {
         let resps = vec![
             Response::Ok { hits: vec![Hit { id: 3, score: 0.9 }], sim_evals: 17 },
+            Response::Search(SearchResult {
+                hits: vec![Hit { id: 9, score: 0.75 }, Hit { id: 2, score: 0.5 }],
+                truncated: true,
+                sim_evals: 321,
+                nodes_visited: 17,
+                pruned: 44,
+            }),
+            Response::Search(SearchResult::default()),
             Response::Inserted { id: 42 },
             Response::Deleted { existed: true },
             Response::Deleted { existed: false },
@@ -383,12 +676,15 @@ mod tests {
                 mutable: true,
             }),
             Response::Pong,
-            Response::Error { message: "boom".into() },
+            Response::Error { code: "bad_request".into(), message: "boom".into() },
         ];
         for r in resps {
             let line = r.to_json().to_string();
             assert_eq!(Response::parse(&line).unwrap(), r);
         }
+        // Pre-ADR-005 error envelopes (no code field) still parse.
+        let old = Response::parse(r#"{"status": "error", "message": "boom"}"#).unwrap();
+        assert_eq!(old, Response::Error { code: String::new(), message: "boom".into() });
     }
 
     #[test]

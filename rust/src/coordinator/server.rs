@@ -10,8 +10,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::protocol::{ConfigSnapshot, Hit, Request, Response, StatsSnapshot};
+use super::protocol::{ConfigSnapshot, Hit, Request, Response, SearchResult, StatsSnapshot};
 use super::Coordinator;
+use crate::error::SimetraError;
+use crate::query::SearchRequest;
 
 /// A running TCP server: the bound address plus a shutdown handle.
 ///
@@ -115,7 +117,10 @@ fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
         }
         let response = match Request::parse(&line) {
             Ok(req) => dispatch(&coord, req),
-            Err(e) => Response::Error { message: format!("bad request: {e}") },
+            Err(e) => Response::Error {
+                code: e.code().to_string(),
+                message: format!("bad request: {e}"),
+            },
         };
         let mut out = response.to_json().to_string().into_bytes();
         out.push(b'\n');
@@ -124,36 +129,72 @@ fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
     Ok(())
 }
 
+fn err_response(e: SimetraError) -> Response {
+    Response::Error { code: e.code().to_string(), message: e.to_string() }
+}
+
 fn dispatch(coord: &Coordinator, req: Request) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Stats => Response::Stats(coord.stats()),
         Request::Config => Response::Config(coord.describe()),
+        // Legacy ops stay byte-identical: served through the one search
+        // path as plain plans, answered with the original `ok` envelope.
         Request::Knn { vector, k } => match coord.knn(vector, k.max(1)) {
             Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
         },
         Request::Range { vector, tau } => match coord.range(vector, tau) {
             Ok((hits, sim_evals)) => Response::Ok { hits, sim_evals },
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
+        },
+        Request::Search { vector, req } => match coord.search(vector, req) {
+            Ok(result) => Response::Search(result),
+            Err(e) => err_response(e),
         },
         Request::Insert { vector } => match coord.insert(vector) {
             Ok(id) => Response::Inserted { id },
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
         },
         Request::Delete { id } => match coord.delete(id) {
             Ok(existed) => Response::Deleted { existed },
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
         },
         Request::Flush => match coord.flush() {
             Ok(()) => Response::Done,
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
         },
         Request::Compact => match coord.compact() {
             Ok(()) => Response::Done,
-            Err(e) => Response::Error { message: e.to_string() },
+            Err(e) => err_response(e),
         },
     }
+}
+
+/// Reject filter ids a JSON double cannot carry unambiguously (>= 2^53)
+/// *before* serialization: `Json::Num` would silently round them to a
+/// neighboring id — the same corruption class the `Json::as_u64`
+/// parse-side guard exists for, caught here on the way out instead (both
+/// sides share `util::json::MAX_EXACT_JSON_INT`).
+fn check_wire_filter(req: &SearchRequest) -> Result<()> {
+    if let Some(ids) = req.filter.ids() {
+        if let Some(&id) = ids.iter().find(|&&id| id >= crate::util::json::MAX_EXACT_JSON_INT) {
+            anyhow::bail!("filter id {id} exceeds 2^53 and cannot be sent exactly over the wire");
+        }
+    }
+    Ok(())
+}
+
+/// Rebuild [`SimetraError::DimMismatch`] from its stable wire message
+/// ("vector dimension {got} does not match corpus dimension {want}").
+fn parse_dim_mismatch(message: &str) -> Option<SimetraError> {
+    let mut nums = message
+        .split(|c: char| !c.is_ascii_digit())
+        .filter(|s| !s.is_empty())
+        .map(str::parse::<usize>);
+    let got = nums.next()?.ok()?;
+    let want = nums.next()?.ok()?;
+    Some(SimetraError::DimMismatch { got, want })
 }
 
 /// Blocking line-protocol client for examples, tests and load generators.
@@ -171,6 +212,13 @@ impl Client {
     }
 
     pub fn request(&mut self, req: &Request) -> Result<Response> {
+        // Guard the one op that carries raw u64 id lists before the
+        // infallible JSON serialization can round them (see
+        // check_wire_filter) — so every sender is covered, not just the
+        // typed `search` wrappers.
+        if let Request::Search { req: plan, .. } = req {
+            check_wire_filter(plan)?;
+        }
         let mut line = req.to_json().to_string().into_bytes();
         line.push(b'\n');
         self.writer.write_all(&line)?;
@@ -190,8 +238,44 @@ impl Client {
     pub fn knn(&mut self, vector: Vec<f32>, k: usize) -> Result<Vec<Hit>> {
         match self.request(&Request::Knn { vector, k })? {
             Response::Ok { hits, .. } => Ok(hits),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Execute one typed search plan (ADR-005) over the wire `search` op.
+    pub fn search(&mut self, vector: Vec<f32>, req: SearchRequest) -> Result<SearchResult> {
+        match self.request(&Request::Search { vector, req })? {
+            Response::Search(result) => Ok(result),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Like [`Client::search`], surfacing the server's typed error code on
+    /// failure (the `Response::Error` envelope's `code` field).
+    pub fn search_checked(
+        &mut self,
+        vector: Vec<f32>,
+        req: SearchRequest,
+    ) -> Result<SearchResult, SimetraError> {
+        check_wire_filter(&req).map_err(|e| SimetraError::BadRequest(e.to_string()))?;
+        let resp = self
+            .request(&Request::Search { vector, req })
+            .map_err(|e| SimetraError::Io(e.to_string()))?;
+        match resp {
+            Response::Search(result) => Ok(result),
+            Response::Error { code, message } => Err(match code.as_str() {
+                "unknown_op" => SimetraError::UnknownOp(message),
+                "kernel_unavailable" => SimetraError::KernelUnavailable(message),
+                "io" => SimetraError::Io(message),
+                // The structured fields are not on the wire; rebuild them
+                // from the (stable) message so `code()` stays faithful.
+                "dim_mismatch" => parse_dim_mismatch(&message)
+                    .unwrap_or(SimetraError::BadRequest(message)),
+                _ => SimetraError::BadRequest(message),
+            }),
+            other => Err(SimetraError::Io(format!("unexpected response: {other:?}"))),
         }
     }
 
@@ -199,7 +283,7 @@ impl Client {
     pub fn insert(&mut self, vector: Vec<f32>) -> Result<u64> {
         match self.request(&Request::Insert { vector })? {
             Response::Inserted { id } => Ok(id),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
@@ -208,7 +292,7 @@ impl Client {
     pub fn delete(&mut self, id: u64) -> Result<bool> {
         match self.request(&Request::Delete { id })? {
             Response::Deleted { existed } => Ok(existed),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
@@ -216,7 +300,7 @@ impl Client {
     pub fn flush(&mut self) -> Result<()> {
         match self.request(&Request::Flush)? {
             Response::Done => Ok(()),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
@@ -224,7 +308,7 @@ impl Client {
     pub fn compact(&mut self) -> Result<()> {
         match self.request(&Request::Compact)? {
             Response::Done => Ok(()),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
@@ -232,7 +316,7 @@ impl Client {
     pub fn stats(&mut self) -> Result<StatsSnapshot> {
         match self.request(&Request::Stats)? {
             Response::Stats(s) => Ok(s),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
@@ -242,7 +326,7 @@ impl Client {
     pub fn config(&mut self) -> Result<ConfigSnapshot> {
         match self.request(&Request::Config)? {
             Response::Config(c) => Ok(c),
-            Response::Error { message } => anyhow::bail!("server error: {message}"),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }

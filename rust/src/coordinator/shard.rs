@@ -15,7 +15,7 @@ use crate::index::{
     SimilarityIndex, VpTree,
 };
 use crate::metrics::DenseVec;
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchRequest, SearchResponse};
 use crate::runtime::EngineHandle;
 use crate::storage::CorpusView;
 
@@ -202,34 +202,64 @@ impl Shard {
         (hits, stats)
     }
 
-    /// Per-query kNN through a borrowed [`QueryContext`] — the worker hot
-    /// path: the traversal reuses the context's heap, frontier, and
-    /// quantized-query cache instead of allocating (ADR-004). Marks the
-    /// query boundary itself.
+    /// Execute one typed search plan against this shard through a borrowed
+    /// [`QueryContext`] — the worker hot path: the traversal reuses the
+    /// context's heap, frontier, and quantized-query cache instead of
+    /// allocating (ADR-004/ADR-005). Marks the query boundary itself.
+    /// The request's filter ids are *global*; they are translated into
+    /// this shard's local id space (its contiguous block) before the index
+    /// runs. Returns local-id hits, the per-query stats window, and the
+    /// budget-truncation flag.
+    pub fn search_ctx(
+        &self,
+        q: &DenseVec,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+    ) -> (Vec<(u32, f64)>, QueryStats, bool) {
+        ctx.begin_query();
+        let mut resp = SearchResponse::default();
+        if req.filter.is_none() || self.base == 0 {
+            // base == 0 means global ids ARE this shard's local ids
+            // (entries beyond the shard's range match nothing and
+            // constrain nothing), so the filter is shared as-is — no
+            // per-query translation copy for the first/only shard.
+            self.index.search_into(q, req, ctx, &mut resp);
+        } else {
+            let hi = self.base + self.len() as u64;
+            let local = req.localized(req.mode, |id| {
+                if (self.base..hi).contains(&id) {
+                    Some(id - self.base)
+                } else {
+                    None
+                }
+            });
+            self.index.search_into(q, &local, ctx, &mut resp);
+        }
+        (resp.hits, ctx.stats, resp.truncated)
+    }
+
+    /// Per-query kNN through a borrowed [`QueryContext`] (plain-plan shim
+    /// over [`Shard::search_ctx`]).
     pub fn knn_ctx(
         &self,
         q: &DenseVec,
         k: usize,
         ctx: &mut QueryContext,
     ) -> (Vec<(u32, f64)>, QueryStats) {
-        ctx.begin_query();
-        let mut out = Vec::new();
-        self.index.knn_into(q, k, ctx, &mut out);
-        (out, ctx.stats)
+        let (hits, stats, _) = self.search_ctx(q, &SearchRequest::knn(k).build(), ctx);
+        (hits, stats)
     }
 
-    /// Per-query range through a borrowed [`QueryContext`]; see
-    /// [`Shard::knn_ctx`].
+    /// Per-query range through a borrowed [`QueryContext`] (plain-plan
+    /// shim over [`Shard::search_ctx`]).
     pub fn range_ctx(
         &self,
         q: &DenseVec,
         tau: f64,
         ctx: &mut QueryContext,
     ) -> (Vec<(u32, f64)>, QueryStats) {
-        ctx.begin_query();
-        let mut out = Vec::new();
-        self.index.range_into(q, tau, ctx, &mut out);
-        (out, ctx.stats)
+        let (hits, stats, _) = self.search_ctx(q, &SearchRequest::range(tau).build(), ctx);
+        (hits, stats)
     }
 
     /// A whole kNN batch through one shared context: per-query results and

@@ -1,0 +1,91 @@
+//! Typed errors of the serving surface (ADR-005).
+//!
+//! The coordinator's request path and the wire protocol used to produce
+//! stringly `anyhow!` errors; clients could only substring-match messages.
+//! [`SimetraError`] names the failure classes instead, `Display`s to the
+//! exact wire messages the stringly errors produced (so existing clients
+//! and tests keep working), and carries a stable machine-readable
+//! [`SimetraError::code`] that the wire `Response::Error` envelope exposes
+//! as its `code` field.
+
+use std::fmt;
+
+/// A typed error of the coordinator/protocol public surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimetraError {
+    /// A query/insert vector whose dimension does not match the corpus.
+    DimMismatch { got: usize, want: usize },
+    /// A structurally valid request the server refuses (bad field values,
+    /// mutations against a read-only corpus, malformed JSON, ...).
+    BadRequest(String),
+    /// An `op` the protocol does not know.
+    UnknownOp(String),
+    /// A per-request kernel override the serving corpus cannot honor.
+    KernelUnavailable(String),
+    /// Transport/queueing failure (batcher shut down, shard worker died).
+    Io(String),
+}
+
+impl SimetraError {
+    /// Stable machine-readable code, carried in the wire error envelope.
+    /// Codes are part of the protocol contract: new variants may be added,
+    /// existing codes never change meaning.
+    pub fn code(&self) -> &'static str {
+        match self {
+            SimetraError::DimMismatch { .. } => "dim_mismatch",
+            SimetraError::BadRequest(_) => "bad_request",
+            SimetraError::UnknownOp(_) => "unknown_op",
+            SimetraError::KernelUnavailable(_) => "kernel_unavailable",
+            SimetraError::Io(_) => "io",
+        }
+    }
+
+}
+
+impl fmt::Display for SimetraError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Exactly the message the stringly error produced, so clients
+            // substring-matching "dimension" keep working.
+            SimetraError::DimMismatch { got, want } => write!(
+                f,
+                "vector dimension {got} does not match corpus dimension {want}"
+            ),
+            SimetraError::BadRequest(msg) => f.write_str(msg),
+            SimetraError::UnknownOp(op) => write!(f, "unknown op '{op}'"),
+            SimetraError::KernelUnavailable(msg) => f.write_str(msg),
+            SimetraError::Io(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for SimetraError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_match_the_wire_messages() {
+        let e = SimetraError::DimMismatch { got: 7, want: 128 };
+        assert_eq!(
+            e.to_string(),
+            "vector dimension 7 does not match corpus dimension 128"
+        );
+        assert_eq!(SimetraError::UnknownOp("explode".into()).to_string(), "unknown op 'explode'");
+        assert_eq!(SimetraError::BadRequest("k must be >= 1".into()).to_string(), "k must be >= 1");
+    }
+
+    #[test]
+    fn codes_are_stable() {
+        for (e, code) in [
+            (SimetraError::DimMismatch { got: 1, want: 2 }, "dim_mismatch"),
+            (SimetraError::BadRequest("x".into()), "bad_request"),
+            (SimetraError::UnknownOp("x".into()), "unknown_op"),
+            (SimetraError::KernelUnavailable("x".into()), "kernel_unavailable"),
+            (SimetraError::Io("x".into()), "io"),
+        ] {
+            assert_eq!(e.code(), code);
+        }
+    }
+}

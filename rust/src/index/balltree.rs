@@ -13,9 +13,9 @@
 //! a zero-copy [`crate::storage::CorpusView`].
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext};
+use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
 struct Node {
     /// Routing point id; also a member of the subtree.
@@ -127,71 +127,69 @@ impl<C: Corpus> BallTree<C> {
         node: &Node,
         q: &C::Vector,
         s: f64,
-        tau: f64,
+        plan: &RangePlan,
         out: &mut Vec<(u32, f64)>,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
-        if s >= tau {
+        if s >= plan.tau && ctx.admits(node.center) {
             out.push((node.center, s));
         }
         let Some(cover) = node.cover else { return };
-        if self.bound.upper_over(s, cover) < tau {
+        if plan.bound.upper_over(s, cover) < plan.tau {
             ctx.stats.pruned += 1;
             return; // nothing below can reach tau
         }
-        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        let n =
+            self.corpus.scan_ids_range_ctx(q, &node.bucket, plan.tau, out, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
         for child in &node.children {
             let sc = self.corpus.sim_q(q, child.center);
             ctx.stats.sim_evals += 1;
-            self.range_rec(child, q, sc, tau, out, ctx);
+            self.range_rec(child, q, sc, plan, out, ctx);
         }
     }
-}
 
-impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
-    fn len(&self) -> usize {
-        self.corpus.len()
-    }
-
-    fn range_into(
+    fn topk_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        plan: &TopkPlan,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
-        out.clear();
-        if let Some(root) = &self.root {
-            let s = self.corpus.sim_q(q, root.center);
-            ctx.stats.sim_evals += 1;
-            self.range_rec(root, q, s, tau, out, ctx);
-        }
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        let mut results = ctx.lease_heap(k);
+        let mut results = plan.lease_heap(ctx);
         // Frontier entries carry the node and its already-computed center
         // similarity; priority is the subtree's upper bound.
         let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.center);
             ctx.stats.sim_evals += 1;
-            results.offer(root.center, s);
+            if ctx.admits(root.center) {
+                results.offer(root.center, s);
+            }
             let ub = match root.cover {
-                Some(cover) => self.bound.upper_over(s, cover),
+                Some(cover) => plan.bound.upper_over(s, cover),
                 None => -1.0,
             };
             frontier.push(ub, root, s);
         }
         while let Some((ub, node, _s)) = frontier.pop() {
-            if results.len() >= k && ub <= results.floor() {
+            if results.len() >= plan.k && ub <= results.floor() {
+                break;
+            }
+            if plan.dead_below_floor(ub) {
                 break;
             }
             if node.cover.is_none() {
                 continue;
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
+                break;
             }
             ctx.stats.nodes_visited += 1;
             let evals =
@@ -200,12 +198,16 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.center);
                 ctx.stats.sim_evals += 1;
-                results.offer(child.center, sc);
+                if ctx.admits(child.center) {
+                    results.offer(child.center, sc);
+                }
                 let child_ub = match child.cover {
-                    Some(cover) => self.bound.upper_over(sc, cover),
+                    Some(cover) => plan.bound.upper_over(sc, cover),
                     None => -1.0,
                 };
-                if results.len() < k || child_ub > results.floor() {
+                if !plan.dead_below_floor(child_ub)
+                    && (results.len() < plan.k || child_ub > results.floor())
+                {
                     frontier.push(child_ub, child, sc);
                 } else {
                     ctx.stats.pruned += 1;
@@ -216,6 +218,36 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
         results.drain_into(out);
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
+    }
+}
+
+impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
+    fn len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn search_into(
+        &self,
+        q: &C::Vector,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    ) {
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| {
+                if let Some(root) = &self.root {
+                    let s = self.corpus.sim_q(q, root.center);
+                    ctx.stats.sim_evals += 1;
+                    self.range_rec(root, q, s, plan, out, ctx);
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
     }
 
     fn name(&self) -> &'static str {

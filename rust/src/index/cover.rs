@@ -10,9 +10,9 @@
 //! together with Eq. 13, exactly like the other trees.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext};
+use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
 /// Geometric base of the level radii (2.0 in the original paper; 1.3 gives
 /// flatter trees on the sphere where all angles are <= pi).
@@ -119,75 +119,76 @@ impl<C: Corpus> CoverTree<C> {
         node: &Node,
         q: &C::Vector,
         s: f64,
-        tau: f64,
+        plan: &RangePlan,
         out: &mut Vec<(u32, f64)>,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
-        if s >= tau {
+        if s >= plan.tau && ctx.admits(node.id) {
             out.push((node.id, s));
         }
         let Some(cover) = node.cover else { return };
-        if self.bound.upper_over(s, cover) < tau {
+        if plan.bound.upper_over(s, cover) < plan.tau {
             ctx.stats.pruned += 1;
             return;
         }
         for child in &node.children {
             let sc = self.corpus.sim_q(q, child.id);
             ctx.stats.sim_evals += 1;
-            self.range_rec(child, q, sc, tau, out, ctx);
+            self.range_rec(child, q, sc, plan, out, ctx);
         }
     }
-}
 
-impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
-    fn len(&self) -> usize {
-        self.corpus.len()
-    }
-
-    fn range_into(
+    fn topk_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        plan: &TopkPlan,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
-        out.clear();
-        if let Some(root) = &self.root {
-            let s = self.corpus.sim_q(q, root.id);
-            ctx.stats.sim_evals += 1;
-            self.range_rec(root, q, s, tau, out, ctx);
-        }
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        let mut results = ctx.lease_heap(k);
+        let mut results = plan.lease_heap(ctx);
         let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.id);
             ctx.stats.sim_evals += 1;
-            results.offer(root.id, s);
+            if ctx.admits(root.id) {
+                results.offer(root.id, s);
+            }
             let ub = match root.cover {
-                Some(cover) => self.bound.upper_over(s, cover),
+                Some(cover) => plan.bound.upper_over(s, cover),
                 None => -1.0,
             };
             frontier.push(ub, root, s);
         }
         while let Some((ub, node, _s)) = frontier.pop() {
-            if results.len() >= k && ub <= results.floor() {
+            if results.len() >= plan.k && ub <= results.floor() {
+                break;
+            }
+            if plan.dead_below_floor(ub) {
+                break;
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
                 break;
             }
             ctx.stats.nodes_visited += 1;
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.id);
                 ctx.stats.sim_evals += 1;
-                results.offer(child.id, sc);
+                if ctx.admits(child.id) {
+                    results.offer(child.id, sc);
+                }
                 let child_ub = match child.cover {
-                    Some(cover) => self.bound.upper_over(sc, cover),
+                    Some(cover) => plan.bound.upper_over(sc, cover),
                     None => -1.0,
                 };
-                if results.len() < k || child_ub > results.floor() {
+                if !plan.dead_below_floor(child_ub)
+                    && (results.len() < plan.k || child_ub > results.floor())
+                {
                     frontier.push(child_ub, child, sc);
                 } else {
                     ctx.stats.pruned += 1;
@@ -198,6 +199,36 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
         results.drain_into(out);
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
+    }
+}
+
+impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
+    fn len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn search_into(
+        &self,
+        q: &C::Vector,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    ) {
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| {
+                if let Some(root) = &self.root {
+                    let s = self.corpus.sim_q(q, root.id);
+                    ctx.stats.sim_evals += 1;
+                    self.range_rec(root, q, s, plan, out, ctx);
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -14,9 +14,9 @@
 //! [`crate::storage::CorpusView`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, KnnHeap, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, RangePlan, SimilarityIndex, TopkPlan};
 
 struct Node {
     splits: Vec<u32>,
@@ -133,12 +133,17 @@ impl<C: Corpus> Gnat<C> {
         &self,
         node: &Node,
         q: &C::Vector,
-        tau: f64,
+        plan: &RangePlan,
         out: &mut Vec<(u32, f64)>,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
-        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        let n =
+            self.corpus.scan_ids_range_ctx(q, &node.bucket, plan.tau, out, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
         if node.splits.is_empty() {
             return;
@@ -155,13 +160,13 @@ impl<C: Corpus> Gnat<C> {
         for (j, child) in node.children.iter().enumerate() {
             let mut alive = true;
             for i in 0..m {
-                if self.bound.upper_over(split_sims[i], node.ranges[i * m + j]) < tau {
+                if plan.bound.upper_over(split_sims[i], node.ranges[i * m + j]) < plan.tau {
                     alive = false;
                     break;
                 }
             }
             if alive {
-                self.range_rec(child, q, tau, out, ctx);
+                self.range_rec(child, q, plan, out, ctx);
             } else {
                 ctx.stats.pruned += 1;
             }
@@ -174,9 +179,13 @@ impl<C: Corpus> Gnat<C> {
         node: &Node,
         q: &C::Vector,
         results: &mut KnnHeap,
-        k: usize,
+        plan: &TopkPlan,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
         let n = self.corpus.scan_ids_topk_ctx(q, &node.bucket, results, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
@@ -188,23 +197,24 @@ impl<C: Corpus> Gnat<C> {
         self.corpus.sims(q, &node.splits, &mut split_sims);
         ctx.stats.sim_evals += m as u64;
         // Visit regions in order of their best upper bound so the floor
-        // rises quickly; skip regions certified below the floor. The (ub
-        // desc, region asc) comparator is total, so the allocation-free
-        // unstable sort is deterministic.
+        // rises quickly; skip regions certified below the floor (or below
+        // the KnnWithin similarity floor — both bounds prune this one
+        // pass). The (ub desc, region asc) comparator is total, so the
+        // allocation-free unstable sort is deterministic.
         let mut order = ctx.lease_pairs();
         order.extend((0..node.children.len()).map(|j| {
             let ub = (0..m)
-                .map(|i| self.bound.upper_over(split_sims[i], node.ranges[i * m + j]))
+                .map(|i| plan.bound.upper_over(split_sims[i], node.ranges[i * m + j]))
                 .fold(f64::INFINITY, f64::min);
             (j as u32, ub)
         }));
         order.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         for &(j, ub) in order.iter() {
-            if results.len() >= k && ub <= results.floor() {
+            if plan.dead_below_floor(ub) || (results.len() >= plan.k && ub <= results.floor()) {
                 ctx.stats.pruned += 1;
                 continue;
             }
-            self.knn_rec(&node.children[j as usize], q, results, k, ctx);
+            self.knn_rec(&node.children[j as usize], q, results, plan, ctx);
         }
         ctx.release_pairs(order);
         ctx.release_sims(split_sims);
@@ -216,28 +226,34 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
         self.corpus.len()
     }
 
-    fn range_into(
+    fn search_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        req: &SearchRequest,
         ctx: &mut QueryContext,
-        out: &mut Vec<(u32, f64)>,
+        resp: &mut SearchResponse,
     ) {
-        out.clear();
-        if let Some(root) = &self.root {
-            self.range_rec(root, q, tau, out, ctx);
-        }
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        let mut results = ctx.lease_heap(k);
-        if let Some(root) = &self.root {
-            self.knn_rec(root, q, &mut results, k, ctx);
-        }
-        out.clear();
-        results.drain_into(out);
-        ctx.release_heap(results);
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| {
+                if let Some(root) = &self.root {
+                    self.range_rec(root, q, plan, out, ctx);
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| {
+                let mut results = plan.lease_heap(ctx);
+                if let Some(root) = &self.root {
+                    self.knn_rec(root, q, &mut results, plan, ctx);
+                }
+                out.clear();
+                results.drain_into(out);
+                ctx.release_heap(results);
+            },
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -13,9 +13,9 @@
 //! corpus's batch kernel ([`Corpus::sims_of_item`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
 /// Pivot-table index with triangle-inequality candidate filtering.
 pub struct Laesa<C: Corpus> {
@@ -84,11 +84,18 @@ impl<C: Corpus> Laesa<C> {
     /// the query's pivot similarities.
     #[inline]
     pub fn interval_for(&self, q_piv: &[f64], i: usize) -> SimInterval {
+        self.interval_with(self.bound, q_piv, i)
+    }
+
+    /// [`Laesa::interval_for`] under an explicit bound (the per-request
+    /// override path).
+    #[inline]
+    fn interval_with(&self, bound: BoundKind, q_piv: &[f64], i: usize) -> SimInterval {
         let n = self.corpus.len();
         let mut iv = SimInterval::full();
         for (p, &sq) in q_piv.iter().enumerate() {
             let sp = self.table[p * n + i];
-            iv = iv.intersect(&self.bound.interval(sq, sp));
+            iv = iv.intersect(&bound.interval(sq, sp));
             if iv.is_empty() {
                 break;
             }
@@ -103,15 +110,11 @@ impl<C: Corpus> Laesa<C> {
     }
 }
 
-impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
-    fn len(&self) -> usize {
-        self.corpus.len()
-    }
-
-    fn range_into(
+impl<C: Corpus> Laesa<C> {
+    fn range_search(
         &self,
         q: &C::Vector,
-        tau: f64,
+        plan: &RangePlan,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
@@ -120,14 +123,21 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         let mut q_piv = ctx.lease_sims();
         self.query_pivot_sims_into(q, ctx, &mut q_piv);
         for i in 0..self.corpus.len() {
-            let iv = self.interval_for(&q_piv, i);
-            if iv.hi < tau || iv.is_empty() {
+            if !ctx.admits(i as u32) {
+                continue; // denied: no interval, no exact evaluation
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
+                break;
+            }
+            let iv = self.interval_with(plan.bound, &q_piv, i);
+            if iv.hi < plan.tau || iv.is_empty() {
                 ctx.stats.pruned += 1;
                 continue; // certified non-match
             }
             let s = self.corpus.sim_q(q, i as u32);
             ctx.stats.sim_evals += 1;
-            if s >= tau {
+            if s >= plan.tau {
                 out.push((i as u32, s));
             }
         }
@@ -135,7 +145,13 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         sort_desc(out);
     }
 
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+    fn topk_search(
+        &self,
+        q: &C::Vector,
+        plan: &TopkPlan,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
         ctx.stats.nodes_visited += 1;
         let mut q_piv = ctx.lease_sims();
         self.query_pivot_sims_into(q, ctx, &mut q_piv);
@@ -146,21 +162,28 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         // the best remaining upper bound. The (ub desc, id asc) comparator
         // is total, so the allocation-free unstable sort is deterministic.
         let mut cands = ctx.lease_pairs();
-        cands.extend((0..n).map(|i| (i as u32, self.interval_for(&q_piv, i).hi)));
+        cands.extend((0..n).map(|i| (i as u32, self.interval_with(plan.bound, &q_piv, i).hi)));
         cands.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
 
-        let mut results = ctx.lease_heap(k);
+        let mut results = plan.lease_heap(ctx);
         // Seed with the pivots (already evaluated — free information).
         for (idx, &p) in self.pivots.iter().enumerate() {
-            results.offer(p, q_piv[idx]);
+            if ctx.admits(p) {
+                results.offer(p, q_piv[idx]);
+            }
         }
         for (pos, &(id, ub)) in cands.iter().enumerate() {
-            if results.len() >= k && ub <= results.floor() {
+            if plan.dead_below_floor(ub) || (results.len() >= plan.k && ub <= results.floor()) {
+                // Sorted by ub desc: everything remaining is certified out.
                 ctx.stats.pruned += (cands.len() - pos) as u64;
                 break;
             }
-            if self.pivots_sorted.binary_search(&id).is_ok() {
+            if self.pivots_sorted.binary_search(&id).is_ok() || !ctx.admits(id) {
                 continue;
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
+                break;
             }
             let s = self.corpus.sim_q(q, id);
             ctx.stats.sim_evals += 1;
@@ -171,6 +194,29 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         ctx.release_heap(results);
         ctx.release_pairs(cands);
         ctx.release_sims(q_piv);
+    }
+}
+
+impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
+    fn len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn search_into(
+        &self,
+        q: &C::Vector,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    ) {
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| self.range_search(q, plan, ctx, out),
+            |plan, ctx, out| self.topk_search(q, plan, ctx, out),
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -1,8 +1,12 @@
 //! Exhaustive scan — the correctness oracle and pruning-power baseline.
 
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, KnnHeap, SimilarityIndex};
+
+/// Rows per chunk on the budgeted scan path: small enough that a budget
+/// overshoots by at most one chunk, large enough to amortize the gather.
+const BUDGET_CHUNK: u32 = 1024;
 
 /// Brute-force index: every query evaluates every item. Built on a
 /// [`crate::storage::CorpusView`] the scan runs through the blocked batch
@@ -16,6 +20,38 @@ impl<C: Corpus> LinearScan<C> {
     pub fn build(corpus: C) -> Self {
         LinearScan { corpus }
     }
+
+    /// Budgeted full scan: chunked so the traversal can stop once the
+    /// evaluation budget is spent (the unbudgeted path scans in one blocked
+    /// kernel call). `heap` set means top-k, else range at `tau`.
+    fn scan_budgeted(
+        &self,
+        q: &C::Vector,
+        tau: f64,
+        mut heap: Option<&mut KnnHeap>,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        let n = self.corpus.len() as u32;
+        let mut ids = ctx.lease_ids();
+        let mut start = 0u32;
+        while start < n {
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
+                break;
+            }
+            let end = start.saturating_add(BUDGET_CHUNK).min(n);
+            ids.clear();
+            ids.extend(start..end);
+            let evals = match heap.as_deref_mut() {
+                Some(heap) => self.corpus.scan_ids_topk_ctx(q, &ids, heap, ctx.kernel_scratch()),
+                None => self.corpus.scan_ids_range_ctx(q, &ids, tau, out, ctx.kernel_scratch()),
+            };
+            ctx.stats.sim_evals += evals;
+            start = end;
+        }
+        ctx.release_ids(ids);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
@@ -23,28 +59,44 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
         self.corpus.len()
     }
 
-    fn range_into(
+    fn search_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        req: &SearchRequest,
         ctx: &mut QueryContext,
-        out: &mut Vec<(u32, f64)>,
+        resp: &mut SearchResponse,
     ) {
-        ctx.stats.nodes_visited += 1;
-        out.clear();
-        let evals = self.corpus.scan_all_range_ctx(q, tau, out, ctx.kernel_scratch());
-        ctx.stats.sim_evals += evals;
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        ctx.stats.nodes_visited += 1;
-        let mut heap = ctx.lease_heap(k);
-        let evals = self.corpus.scan_all_topk_ctx(q, &mut heap, ctx.kernel_scratch());
-        ctx.stats.sim_evals += evals;
-        out.clear();
-        heap.drain_into(out);
-        ctx.release_heap(heap);
+        // No build-time bound to override: the scan is exhaustive, so the
+        // default passed to the frame is inert.
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            crate::bounds::BoundKind::Mult,
+            |plan, ctx, out| {
+                ctx.stats.nodes_visited += 1;
+                if req.budget.is_some() {
+                    self.scan_budgeted(q, plan.tau, None, ctx, out);
+                } else {
+                    let evals =
+                        self.corpus.scan_all_range_ctx(q, plan.tau, out, ctx.kernel_scratch());
+                    ctx.stats.sim_evals += evals;
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| {
+                ctx.stats.nodes_visited += 1;
+                let mut heap = plan.lease_heap(ctx);
+                if req.budget.is_some() {
+                    self.scan_budgeted(q, 0.0, Some(&mut heap), ctx, out);
+                } else {
+                    let evals = self.corpus.scan_all_topk_ctx(q, &mut heap, ctx.kernel_scratch());
+                    ctx.stats.sim_evals += evals;
+                }
+                heap.drain_into(out);
+                ctx.release_heap(heap);
+            },
+        );
     }
 
     fn name(&self) -> &'static str {

@@ -28,8 +28,9 @@ pub use linear::LinearScan;
 pub use mtree::MTree;
 pub use vptree::VpTree;
 
+use crate::bounds::BoundKind;
 use crate::metrics::{DenseVec, SimVector};
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchMode, SearchRequest, SearchResponse};
 use crate::storage::{CorpusView, KernelScratch};
 
 /// What an index builds over: a collection of vectors addressed by dense
@@ -124,10 +125,12 @@ pub trait Corpus: Send + Sync + 'static {
 
     // --- scratch-borrowing scan variants (the context hot path) ------------
     //
-    // Defaults ignore the scratch (the per-item path has nothing to cache);
-    // the CorpusView impl overrides them to thread the scratch into the
-    // kernel backend, so a quantized backend builds its QuantQuery once per
-    // query instead of once per leaf bucket (ADR-004).
+    // The per-item defaults have nothing to cache, but they do honor the
+    // scratch's armed id filter (ADR-005): denied ids are skipped *before*
+    // the exact evaluation, mirroring what the kernel backends do on the
+    // CorpusView path. The CorpusView impl overrides them to thread the
+    // scratch into the kernel backend, so a quantized backend builds its
+    // QuantQuery once per query instead of once per leaf bucket (ADR-004).
 
     /// [`Corpus::scan_ids_range`] with a borrowed per-query kernel scratch.
     fn scan_ids_range_ctx(
@@ -136,9 +139,23 @@ pub trait Corpus: Send + Sync + 'static {
         ids: &[u32],
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        self.scan_ids_range(q, ids, tau, out)
+        if !scratch.has_filter() {
+            return self.scan_ids_range(q, ids, tau, out);
+        }
+        let mut evals = 0;
+        for &id in ids {
+            if !scratch.filter_admits(id) {
+                continue;
+            }
+            let s = self.sim_q(q, id);
+            evals += 1;
+            if s >= tau {
+                out.push((id, s));
+            }
+        }
+        evals
     }
 
     /// [`Corpus::scan_ids_topk`] with a borrowed per-query kernel scratch.
@@ -147,9 +164,19 @@ pub trait Corpus: Send + Sync + 'static {
         q: &Self::Vector,
         ids: &[u32],
         heap: &mut KnnHeap,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        self.scan_ids_topk(q, ids, heap)
+        if !scratch.has_filter() {
+            return self.scan_ids_topk(q, ids, heap);
+        }
+        let mut evals = 0;
+        for &id in ids {
+            if scratch.filter_admits(id) {
+                heap.offer(id, self.sim_q(q, id));
+                evals += 1;
+            }
+        }
+        evals
     }
 
     /// [`Corpus::scan_all_range`] with a borrowed per-query kernel scratch.
@@ -158,9 +185,23 @@ pub trait Corpus: Send + Sync + 'static {
         q: &Self::Vector,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        self.scan_all_range(q, tau, out)
+        if !scratch.has_filter() {
+            return self.scan_all_range(q, tau, out);
+        }
+        let mut evals = 0;
+        for id in 0..self.len() as u32 {
+            if !scratch.filter_admits(id) {
+                continue;
+            }
+            let s = self.sim_q(q, id);
+            evals += 1;
+            if s >= tau {
+                out.push((id, s));
+            }
+        }
+        evals
     }
 
     /// [`Corpus::scan_all_topk`] with a borrowed per-query kernel scratch.
@@ -168,9 +209,19 @@ pub trait Corpus: Send + Sync + 'static {
         &self,
         q: &Self::Vector,
         heap: &mut KnnHeap,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        self.scan_all_topk(q, heap)
+        if !scratch.has_filter() {
+            return self.scan_all_topk(q, heap);
+        }
+        let mut evals = 0;
+        for id in 0..self.len() as u32 {
+            if scratch.filter_admits(id) {
+                heap.offer(id, self.sim_q(q, id));
+                evals += 1;
+            }
+        }
+        evals
     }
 }
 
@@ -316,13 +367,16 @@ impl QueryStats {
 
 /// An exact cosine-similarity search index.
 ///
-/// The required entry points (`range_into` / `knn_into`) borrow a
-/// [`QueryContext`] for every piece of traversal scratch and *replace* the
-/// contents of a caller-owned output buffer, so the steady-state query path
-/// allocates nothing (ADR-004). The classic `range` / `knn` signatures are
-/// provided wrappers that spin up a throwaway context, and
-/// `range_batch` / `knn_batch` run a whole query batch through one shared
-/// context (one `begin_query` per query).
+/// The single required entry point is [`SimilarityIndex::search_into`]
+/// (ADR-005): it executes one typed [`SearchRequest`] plan — kNN, range,
+/// or kNN-within-a-floor, with optional per-request bound/kernel
+/// overrides, id filter, and evaluation budget — borrowing a
+/// [`QueryContext`] for every piece of traversal scratch, so the
+/// steady-state query path allocates nothing (ADR-004). Every classic
+/// signature (`knn` / `knn_into` / `range` / `range_into` /
+/// `knn_batch` / `range_batch`) is a provided shim that builds the
+/// equivalent plain plan, so existing call sites keep compiling and keep
+/// returning byte-identical results.
 pub trait SimilarityIndex<V: SimVector>: Send + Sync {
     /// Number of indexed items.
     fn len(&self) -> usize;
@@ -331,18 +385,55 @@ pub trait SimilarityIndex<V: SimVector>: Send + Sync {
         self.len() == 0
     }
 
+    /// Execute one typed search plan, replacing `resp`'s contents: hits in
+    /// `(sim desc, id asc)` order, the per-query stats window, and the
+    /// budget-truncation flag. Traversal scratch and instrumentation come
+    /// from `ctx` (whose per-query stats this call adds to — the caller
+    /// owns the query boundary via [`QueryContext::begin_query`]).
+    /// Implementations delegate to the crate-internal `search_frame`,
+    /// which arms the plan with [`QueryContext::apply_plan`] at entry and
+    /// disarms at exit; the request's filter ids are interpreted in this
+    /// index's local id space.
+    fn search_into(
+        &self,
+        q: &V,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    );
+
+    /// [`SimilarityIndex::search_into`] with a throwaway context — the
+    /// convenience form for one-off plans.
+    fn search(&self, q: &V, req: &SearchRequest) -> SearchResponse {
+        let mut ctx = QueryContext::new();
+        ctx.begin_query();
+        let mut resp = SearchResponse::default();
+        self.search_into(q, req, &mut ctx, &mut resp);
+        resp
+    }
+
     /// All `(id, sim)` with `sim(q, item) >= tau`, in descending
-    /// similarity, replacing `out`'s contents. Traversal scratch and
-    /// instrumentation come from `ctx` (whose per-query stats this call
-    /// adds to — the caller owns the query boundary via
-    /// [`QueryContext::begin_query`]).
-    fn range_into(&self, q: &V, tau: f64, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>);
+    /// similarity, replacing `out`'s contents. (Compat shim over
+    /// [`SimilarityIndex::search_into`] with a plain range plan.)
+    fn range_into(&self, q: &V, tau: f64, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let req = SearchRequest::range(tau).build();
+        let mut resp = SearchResponse::default();
+        std::mem::swap(&mut resp.hits, out);
+        self.search_into(q, &req, ctx, &mut resp);
+        std::mem::swap(&mut resp.hits, out);
+    }
 
     /// The `k` most similar items, in descending similarity, replacing
     /// `out`'s contents. Fewer than `k` are returned only when the corpus
-    /// is smaller than `k`. Scratch/stats discipline as in
-    /// [`SimilarityIndex::range_into`].
-    fn knn_into(&self, q: &V, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>);
+    /// is smaller than `k`. (Compat shim over
+    /// [`SimilarityIndex::search_into`] with a plain kNN plan.)
+    fn knn_into(&self, q: &V, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
+        let req = SearchRequest::knn(k).build();
+        let mut resp = SearchResponse::default();
+        std::mem::swap(&mut resp.hits, out);
+        self.search_into(q, &req, ctx, &mut resp);
+        std::mem::swap(&mut resp.hits, out);
+    }
 
     /// All `(id, sim)` with `sim(q, item) >= tau`, in descending similarity.
     /// (Convenience form: one throwaway context per call; hot paths reuse a
@@ -411,7 +502,8 @@ pub trait SimilarityIndex<V: SimVector>: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Bounded max-similarity result collector for kNN searches.
+/// Bounded max-similarity result collector for kNN searches, with an
+/// optional hard similarity floor (the `KnnWithin` mode's `tau`).
 #[derive(Debug)]
 pub struct KnnHeap {
     k: usize,
@@ -419,6 +511,11 @@ pub struct KnnHeap {
     /// Vec kept small: k is small in practice, so O(k) insert is fine and
     /// avoids float-ordering wrappers.
     entries: Vec<(u32, f64)>,
+    /// Hard admission floor: candidates below it are rejected outright,
+    /// and [`KnnHeap::floor`] never reports below it. `-1.0` (the cosine
+    /// minimum) for plain kNN — behaviorally identical to no floor, since
+    /// every similarity is clamped to `[-1, 1]`.
+    min: f64,
 }
 
 impl Default for KnnHeap {
@@ -426,22 +523,34 @@ impl Default for KnnHeap {
     /// [`QueryContext`] holds between leases (`std::mem::take` must not
     /// allocate).
     fn default() -> Self {
-        KnnHeap { k: 1, entries: Vec::new() }
+        KnnHeap { k: 1, entries: Vec::new(), min: -1.0 }
     }
 }
 
 impl KnnHeap {
     pub fn new(k: usize) -> Self {
-        KnnHeap { k: k.max(1), entries: Vec::with_capacity(k + 1) }
+        KnnHeap { k: k.max(1), entries: Vec::with_capacity(k + 1), min: -1.0 }
     }
 
-    /// Reset for a fresh query retaining `k`, keeping the entry buffer.
-    /// After the first reset at a given `k`, subsequent same-`k` resets
-    /// never allocate (offer inserts before truncating, hence `k + 1`).
+    /// Reset for a fresh query retaining `k`, keeping the entry buffer and
+    /// clearing any similarity floor. After the first reset at a given
+    /// `k`, subsequent same-`k` resets never allocate (offer inserts
+    /// before truncating, hence `k + 1`).
     pub fn reset(&mut self, k: usize) {
         self.k = k.max(1);
         self.entries.clear();
         self.entries.reserve(self.k + 1);
+        self.min = -1.0;
+    }
+
+    /// Arm a hard similarity floor (call right after [`KnnHeap::reset`] /
+    /// [`KnnHeap::new`], before the first offer): candidates with
+    /// `sim < tau` are rejected, and [`KnnHeap::floor`] reports at least
+    /// `tau` — so certified pre-filters prune below it immediately, even
+    /// while the heap is not full.
+    pub fn set_min(&mut self, tau: f64) {
+        debug_assert!(self.entries.is_empty(), "set_min on a non-empty heap");
+        self.min = tau;
     }
 
     /// Append the retained entries (already in `(sim desc, id asc)` order)
@@ -458,14 +567,15 @@ impl KnnHeap {
         self.k
     }
 
-    /// Current pruning floor: the k-th best similarity, or -1 (no pruning)
-    /// while the heap is not full.
+    /// Current pruning floor: the k-th best similarity (or the armed
+    /// similarity floor while the heap is not full — `-1.0`, i.e. no
+    /// pruning, for a plain kNN heap).
     #[inline]
     pub fn floor(&self) -> f64 {
         if self.entries.len() < self.k {
-            -1.0
+            self.min
         } else {
-            self.entries.last().map(|&(_, s)| s).unwrap_or(-1.0)
+            self.entries.last().map(|&(_, s)| s.max(self.min)).unwrap_or(self.min)
         }
     }
 
@@ -476,6 +586,9 @@ impl KnnHeap {
     /// incumbent.
     #[inline]
     pub fn offer(&mut self, id: u32, sim: f64) {
+        if sim < self.min {
+            return; // below the armed similarity floor (KnnWithin)
+        }
         if self.entries.len() >= self.k && sim < self.floor() {
             return;
         }
@@ -497,6 +610,72 @@ impl KnnHeap {
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+}
+
+/// Mode-resolved top-k traversal parameters the tree indexes share: the
+/// result count, the optional `KnnWithin` similarity floor, and the
+/// effective pruning bound (the per-request override, else the build-time
+/// bound).
+pub(crate) struct TopkPlan {
+    pub k: usize,
+    /// `Some(tau)` for `KnnWithin`: subtrees whose certified upper bound
+    /// is strictly below `tau` are pruned even while the heap is not full,
+    /// and the heap rejects candidates below `tau`.
+    pub within: Option<f64>,
+    pub bound: BoundKind,
+}
+
+impl TopkPlan {
+    /// Lease the result heap for this plan (floored at `tau` for
+    /// `KnnWithin`).
+    pub fn lease_heap(&self, ctx: &mut QueryContext) -> KnnHeap {
+        let mut heap = ctx.lease_heap(self.k);
+        if let Some(tau) = self.within {
+            heap.set_min(tau);
+        }
+        heap
+    }
+
+    /// Whether a subtree with certified upper bound `ub` is dead on the
+    /// `KnnWithin` floor alone (plain kNN never prunes here).
+    #[inline]
+    pub fn dead_below_floor(&self, ub: f64) -> bool {
+        self.within.is_some_and(|tau| ub < tau)
+    }
+}
+
+/// Mode-resolved range traversal parameters (threshold + effective bound).
+pub(crate) struct RangePlan {
+    pub tau: f64,
+    pub bound: BoundKind,
+}
+
+/// The shared `search_into` frame (ADR-005): arm the plan on the context,
+/// resolve the effective bound, dispatch the mode to the index's two
+/// traversal closures, then publish truncation/stats into the response
+/// and disarm. One place — so no index implementation can forget to
+/// disarm an armed filter or budget before the context serves the next
+/// query.
+pub(crate) fn search_frame(
+    req: &SearchRequest,
+    ctx: &mut QueryContext,
+    resp: &mut SearchResponse,
+    default_bound: BoundKind,
+    range: impl FnOnce(&RangePlan, &mut QueryContext, &mut Vec<(u32, f64)>),
+    topk: impl FnOnce(&TopkPlan, &mut QueryContext, &mut Vec<(u32, f64)>),
+) {
+    ctx.apply_plan(req);
+    let bound = req.bound.unwrap_or(default_bound);
+    resp.hits.clear();
+    match req.mode {
+        SearchMode::Range { tau } => range(&RangePlan { tau, bound }, ctx, &mut resp.hits),
+        SearchMode::Knn { k } | SearchMode::KnnWithin { k, .. } => {
+            topk(&TopkPlan { k, within: req.mode.tau(), bound }, ctx, &mut resp.hits)
+        }
+    }
+    resp.truncated = ctx.truncated;
+    resp.stats = ctx.stats;
+    ctx.clear_plan();
 }
 
 /// Sort a result set in descending similarity with deterministic tie order.

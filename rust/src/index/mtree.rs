@@ -15,9 +15,9 @@
 //! on a view) rather than the blocked bucket kernels.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext};
+use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
 struct Entry {
     /// Routing object (internal) or data item (leaf).
@@ -148,6 +148,25 @@ impl<C: Corpus> MTree<C> {
         NodeBody { entries, is_leaf: false }
     }
 
+    /// Certified reach of an entry's subtree: upper bound on `sim(q, y)`
+    /// over every subtree member `y`, from the parent-chain interval on
+    /// `sim(q, route)` alone — no similarity evaluation.
+    fn entry_reach(bound: BoundKind, parent_s: f64, entry: &Entry) -> f64 {
+        let route_iv = bound.interval(parent_s, entry.parent_sim);
+        match entry.cover {
+            Some(cover) => {
+                if !route_iv.intersect(&cover).is_empty() {
+                    1.0
+                } else {
+                    bound
+                        .upper_over(route_iv.lo, cover)
+                        .max(bound.upper_over(route_iv.hi, cover))
+                }
+            }
+            None => route_iv.hi,
+        }
+    }
+
     /// Range search over a node; `parent_s` = sim(q, parent route), or None
     /// at the root (parent_sim fields are then vacuous 1.0 and the cheap
     /// pre-check is skipped).
@@ -156,32 +175,27 @@ impl<C: Corpus> MTree<C> {
         node: &NodeBody,
         q: &C::Vector,
         parent_s: Option<f64>,
-        tau: f64,
+        plan: &RangePlan,
         out: &mut Vec<(u32, f64)>,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
         for entry in &node.entries {
+            // Denied leaf entries are the data items themselves: skip them
+            // before any exact evaluation. (Internal routes still need
+            // their similarity for pruning, whatever the filter says.)
+            if node.is_leaf && !ctx.admits(entry.id) {
+                continue;
+            }
             // Cheap pre-check (no sim eval): certified interval on
-            // sim(q, entry.id) via the parent chain...
+            // sim(q, entry.id) via the parent chain, widened over the
+            // covering interval: can anything in the subtree reach tau?
             if let Some(ps) = parent_s {
-                let route_iv = self.bound.interval(ps, entry.parent_sim);
-                // ...widened over the covering interval: can anything in the
-                // subtree reach tau?
-                let reach = match entry.cover {
-                    Some(cover) => {
-                        let a = self.bound.upper_over(route_iv.lo, cover);
-                        let b = self.bound.upper_over(route_iv.hi, cover);
-                        let inside = !route_iv.intersect(&cover).is_empty();
-                        if inside {
-                            1.0
-                        } else {
-                            a.max(b)
-                        }
-                    }
-                    None => route_iv.hi,
-                };
-                if reach < tau {
+                if Self::entry_reach(plan.bound, ps, entry) < plan.tau {
                     ctx.stats.pruned += 1;
                     continue; // dropped without computing sim(q, route)
                 }
@@ -189,7 +203,7 @@ impl<C: Corpus> MTree<C> {
             let s = self.corpus.sim_q(q, entry.id);
             ctx.stats.sim_evals += 1;
             if node.is_leaf {
-                if s >= tau {
+                if s >= plan.tau {
                     out.push((entry.id, s));
                 }
                 continue;
@@ -197,64 +211,54 @@ impl<C: Corpus> MTree<C> {
             // Internal entry: the route itself is reported by its subtree
             // (routes are members of their own subtrees).
             let Some(cover) = entry.cover else { continue };
-            if self.bound.upper_over(s, cover) >= tau {
-                self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), tau, out, ctx);
+            if plan.bound.upper_over(s, cover) >= plan.tau {
+                self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), plan, out, ctx);
             } else {
                 ctx.stats.pruned += 1;
             }
         }
     }
-}
 
-impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
-    fn len(&self) -> usize {
-        self.corpus.len()
-    }
-
-    fn range_into(
+    fn topk_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        plan: &TopkPlan,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
-        out.clear();
-        if let Some(root) = &self.root {
-            self.range_rec(root, q, None, tau, out, ctx);
-        }
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        let mut results = ctx.lease_heap(k);
+        let mut results = plan.lease_heap(ctx);
         // Frontier carries (node, sim(q, parent route)); NAN at the root.
         let mut frontier: Frontier<'_, NodeBody> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             frontier.push(1.0, root, f64::NAN);
         }
         while let Some((ub, node, parent_s)) = frontier.pop() {
-            if results.len() >= k && ub <= results.floor() {
+            if results.len() >= plan.k && ub <= results.floor() {
+                break;
+            }
+            if plan.dead_below_floor(ub) {
+                break;
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
                 break;
             }
             ctx.stats.nodes_visited += 1;
             for entry in &node.entries {
+                if node.is_leaf && !ctx.admits(entry.id) {
+                    continue; // denied data item: no exact evaluation
+                }
                 // Cheap pre-check against the current floor (the M-tree's
-                // saved similarity computation).
-                if !parent_s.is_nan() && results.len() >= k {
-                    let route_iv = self.bound.interval(parent_s, entry.parent_sim);
-                    let reach = match entry.cover {
-                        Some(cover) => {
-                            if !route_iv.intersect(&cover).is_empty() {
-                                1.0
-                            } else {
-                                self.bound
-                                    .upper_over(route_iv.lo, cover)
-                                    .max(self.bound.upper_over(route_iv.hi, cover))
-                            }
-                        }
-                        None => route_iv.hi,
+                // saved similarity computation); with a KnnWithin floor it
+                // also fires while the heap is not yet full.
+                if !parent_s.is_nan() && (results.len() >= plan.k || plan.within.is_some()) {
+                    let reach = Self::entry_reach(plan.bound, parent_s, entry);
+                    let dead = if results.len() >= plan.k {
+                        reach <= results.floor()
+                    } else {
+                        plan.dead_below_floor(reach)
                     };
-                    if reach <= results.floor() {
+                    if dead {
                         ctx.stats.pruned += 1;
                         continue;
                     }
@@ -267,8 +271,10 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
                     // Routes are members of their own subtrees; the leaf
                     // level reports them (avoids duplicate result entries).
                     if let Some(cover) = entry.cover {
-                        let child_ub = self.bound.upper_over(s, cover);
-                        if results.len() < k || child_ub > results.floor() {
+                        let child_ub = plan.bound.upper_over(s, cover);
+                        if !plan.dead_below_floor(child_ub)
+                            && (results.len() < plan.k || child_ub > results.floor())
+                        {
                             frontier.push(child_ub, entry.child.as_ref().unwrap(), s);
                         } else {
                             ctx.stats.pruned += 1;
@@ -281,6 +287,34 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
         results.drain_into(out);
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
+    }
+}
+
+impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
+    fn len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn search_into(
+        &self,
+        q: &C::Vector,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    ) {
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| {
+                if let Some(root) = &self.root {
+                    self.range_rec(root, q, None, plan, out, ctx);
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
     }
 
     fn name(&self) -> &'static str {

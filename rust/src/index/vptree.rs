@@ -11,9 +11,9 @@
 //! scored through the blocked batch kernels.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext};
+use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
 
-use super::{sort_desc, Corpus, SimilarityIndex};
+use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
 struct Node {
     /// Vantage point (item id).
@@ -109,69 +109,71 @@ impl<C: Corpus> VpTree<C> {
         &self,
         node: &Node,
         q: &C::Vector,
-        tau: f64,
+        plan: &RangePlan,
         out: &mut Vec<(u32, f64)>,
         ctx: &mut QueryContext,
     ) {
+        if ctx.budget_exhausted() {
+            ctx.truncated = true;
+            return;
+        }
         ctx.stats.nodes_visited += 1;
         let s = self.corpus.sim_q(q, node.vp);
         ctx.stats.sim_evals += 1;
-        if s >= tau {
+        if s >= plan.tau && ctx.admits(node.vp) {
             out.push((node.vp, s));
         }
-        let n = self.corpus.scan_ids_range_ctx(q, &node.bucket, tau, out, ctx.kernel_scratch());
+        let n =
+            self.corpus.scan_ids_range_ctx(q, &node.bucket, plan.tau, out, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
         for child in [&node.near, &node.far].into_iter().flatten() {
             let (iv, sub) = child;
-            if self.bound.upper_over(s, *iv) >= tau {
-                self.range_node(sub, q, tau, out, ctx);
+            if plan.bound.upper_over(s, *iv) >= plan.tau {
+                self.range_node(sub, q, plan, out, ctx);
             } else {
                 ctx.stats.pruned += 1;
             }
         }
     }
-}
 
-impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
-    fn len(&self) -> usize {
-        self.corpus.len()
-    }
-
-    fn range_into(
+    fn topk_into(
         &self,
         q: &C::Vector,
-        tau: f64,
+        plan: &TopkPlan,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
-        out.clear();
-        if let Some(root) = &self.root {
-            self.range_node(root, q, tau, out, ctx);
-        }
-        sort_desc(out);
-    }
-
-    fn knn_into(&self, q: &C::Vector, k: usize, ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>) {
-        let mut results = ctx.lease_heap(k);
+        let mut results = plan.lease_heap(ctx);
         let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
         if let Some(root) = &self.root {
             frontier.push(1.0, root, 0.0);
         }
         while let Some((ub, node, _)) = frontier.pop() {
-            if results.len() >= k && ub <= results.floor() {
+            if results.len() >= plan.k && ub <= results.floor() {
                 break; // no remaining node can improve the result set
+            }
+            if plan.dead_below_floor(ub) {
+                break; // best-first: everything remaining is below tau too
+            }
+            if ctx.budget_exhausted() {
+                ctx.truncated = true;
+                break;
             }
             ctx.stats.nodes_visited += 1;
             let s = self.corpus.sim_q(q, node.vp);
             ctx.stats.sim_evals += 1;
-            results.offer(node.vp, s);
+            if ctx.admits(node.vp) {
+                results.offer(node.vp, s);
+            }
             let evals =
                 self.corpus.scan_ids_topk_ctx(q, &node.bucket, &mut results, ctx.kernel_scratch());
             ctx.stats.sim_evals += evals;
             for child in [&node.near, &node.far].into_iter().flatten() {
                 let (iv, sub) = child;
-                let child_ub = self.bound.upper_over(s, *iv);
-                if results.len() < k || child_ub > results.floor() {
+                let child_ub = plan.bound.upper_over(s, *iv);
+                if !plan.dead_below_floor(child_ub)
+                    && (results.len() < plan.k || child_ub > results.floor())
+                {
                     frontier.push(child_ub, sub.as_ref(), 0.0);
                 } else {
                     ctx.stats.pruned += 1;
@@ -182,6 +184,34 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
         results.drain_into(out);
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
+    }
+}
+
+impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
+    fn len(&self) -> usize {
+        self.corpus.len()
+    }
+
+    fn search_into(
+        &self,
+        q: &C::Vector,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        resp: &mut SearchResponse,
+    ) {
+        super::search_frame(
+            req,
+            ctx,
+            resp,
+            self.bound,
+            |plan, ctx, out| {
+                if let Some(root) = &self.root {
+                    self.range_node(root, q, plan, out, ctx);
+                }
+                sort_desc(out);
+            },
+            |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
     }
 
     fn name(&self) -> &'static str {

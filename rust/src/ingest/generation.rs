@@ -14,9 +14,9 @@ use std::sync::Arc;
 
 use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
-use crate::index::{KnnHeap, SimilarityIndex};
+use crate::index::{LinearScan, SimilarityIndex};
 use crate::metrics::DenseVec;
-use crate::query::QueryContext;
+use crate::query::{QueryContext, SearchMode, SearchRequest, SearchResponse};
 use crate::storage::{CorpusStore, KernelBackend};
 
 /// Sort global hits in descending similarity with the crate-wide tie
@@ -144,6 +144,29 @@ impl Generation {
     pub fn bytes(&self) -> u64 {
         (self.store.flat().len() * std::mem::size_of::<f32>()) as u64
     }
+
+    /// Localize a plan for this generation: filter ids translate from
+    /// global to row-local (via binary search over the ascending id
+    /// column), and the mode is replaced by the tombstone-over-fetching
+    /// `mode`. Returns `None` when `req` can run as-is (range mode, no
+    /// filter) — the zero-copy fast path. A generation whose id column is
+    /// exactly `0..len` (generation 0, or the survivor of a gapless full
+    /// compaction) shares the filter by `Arc` instead of copying it.
+    fn localize(&self, req: &SearchRequest, mode: SearchMode) -> Option<SearchRequest> {
+        let needs_mode_rewrite = !matches!(mode, SearchMode::Range { .. });
+        // Strictly ascending ids filling [0, len) are exactly 0..len:
+        // global ids ARE local ids (out-of-range filter entries match
+        // nothing), so the filter needs no translation.
+        let identity_ids = self.ids.first() == Some(&0)
+            && self.ids.last() == Some(&(self.ids.len() as u64 - 1));
+        if req.filter.is_none() || identity_ids {
+            if !needs_mode_rewrite {
+                return None;
+            }
+            return Some(SearchRequest { mode, ..req.clone() });
+        }
+        Some(req.localized(mode, |id| self.ids.binary_search(&id).ok().map(|l| l as u64)))
+    }
 }
 
 /// One immutable snapshot of the whole mutable corpus: the memtable, the
@@ -228,14 +251,7 @@ impl GenerationSet {
     /// filtered, merged under (sim desc, id asc). Returns the hits and the
     /// number of exact similarity evaluations spent. (Convenience form:
     /// one throwaway context; the serving path reuses one through
-    /// [`GenerationSet::knn_ctx`].)
-    ///
-    /// Exactness: each source is asked for its top `k + |tombstones|`
-    /// candidates; at most `|tombstones|` of any source's candidates can
-    /// be filtered out afterwards, so each source still contributes its
-    /// true top-k survivors and the global merge is exact (the same
-    /// argument, and the same f64 tie caveat, as the per-index contract
-    /// in `index/mod.rs`).
+    /// [`GenerationSet::search_ctx`].)
     pub fn knn(&self, q: &DenseVec, k: usize) -> (Vec<(u64, f64)>, u64) {
         let mut ctx = QueryContext::new();
         ctx.begin_query();
@@ -244,14 +260,7 @@ impl GenerationSet {
         (out, evals)
     }
 
-    /// [`GenerationSet::knn`] through a borrowed [`QueryContext`],
-    /// replacing `out`'s contents. One context serves the memtable and
-    /// every generation of the query — the traversal scratch *and* the
-    /// kernels' quantized-query cache are shared across the whole fan-out
-    /// (the cache depends only on the query bytes, not on which store is
-    /// scanned). The caller owns the query boundary
-    /// ([`QueryContext::begin_query`] once per logical query). Returns the
-    /// exact evaluations this query spent.
+    /// Plain-kNN shim over [`GenerationSet::search_ctx`].
     pub fn knn_ctx(
         &self,
         q: &DenseVec,
@@ -259,42 +268,7 @@ impl GenerationSet {
         ctx: &mut QueryContext,
         out: &mut Vec<(u64, f64)>,
     ) -> u64 {
-        let k = k.max(1);
-        let fetch = k.saturating_add(self.tombstones.len());
-        let evals_before = ctx.stats.sim_evals;
-        out.clear();
-        let mut buf = ctx.lease_pairs();
-        for g in &self.generations {
-            g.index.knn_into(q, fetch, ctx, &mut buf);
-            for &(local, s) in buf.iter() {
-                let id = g.ids[local as usize];
-                if !self.tombstones.contains(&id) {
-                    out.push((id, s));
-                }
-            }
-        }
-        if !self.memtable.is_empty() {
-            let mut heap = ctx.lease_heap(fetch);
-            let evals = self
-                .memtable
-                .store()
-                .view()
-                .scan_topk_with(q.as_slice(), &mut heap, ctx.kernel_scratch());
-            ctx.stats.sim_evals += evals;
-            buf.clear();
-            heap.drain_into(&mut buf);
-            ctx.release_heap(heap);
-            for &(local, s) in buf.iter() {
-                let id = self.memtable.base() + local as u64;
-                if !self.tombstones.contains(&id) {
-                    out.push((id, s));
-                }
-            }
-        }
-        ctx.release_pairs(buf);
-        sort_hits(out);
-        out.truncate(k);
-        ctx.stats.sim_evals - evals_before
+        self.search_ctx(q, &SearchRequest::knn(k).build(), ctx, out).0
     }
 
     /// Exact range query (`sim >= tau`) across all generations plus the
@@ -308,8 +282,7 @@ impl GenerationSet {
         (out, evals)
     }
 
-    /// [`GenerationSet::range`] through a borrowed [`QueryContext`]; same
-    /// contract as [`GenerationSet::knn_ctx`].
+    /// Plain-range shim over [`GenerationSet::search_ctx`].
     pub fn range_ctx(
         &self,
         q: &DenseVec,
@@ -317,35 +290,101 @@ impl GenerationSet {
         ctx: &mut QueryContext,
         out: &mut Vec<(u64, f64)>,
     ) -> u64 {
+        self.search_ctx(q, &SearchRequest::range(tau).build(), ctx, out).0
+    }
+
+    /// Execute one typed search plan (ADR-005) across all generations plus
+    /// the memtable, through one borrowed [`QueryContext`]: the traversal
+    /// scratch *and* the kernels' quantized-query cache are shared across
+    /// the whole fan-out (the cache depends only on the query bytes, not
+    /// on which store is scanned). The caller owns the query boundary
+    /// ([`QueryContext::begin_query`] once per logical query); the
+    /// request's filter ids are *global* and are translated per source.
+    /// Returns `(exact evaluations spent, budget-truncated)`.
+    ///
+    /// Exactness (kNN modes): each source is asked for its top
+    /// `k + |tombstones|` candidates; at most `|tombstones|` of any
+    /// source's candidates can be filtered out afterwards, so each source
+    /// still contributes its true top-k survivors and the global merge is
+    /// exact (the same argument, and the same f64 tie caveat, as the
+    /// per-index contract in `index/mod.rs`). The user filter needs no
+    /// over-fetch: it is applied *inside* each source's scan.
+    pub fn search_ctx(
+        &self,
+        q: &DenseVec,
+        req: &SearchRequest,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> (u64, bool) {
         let evals_before = ctx.stats.sim_evals;
+        let mut truncated = false;
         out.clear();
-        let mut buf = ctx.lease_pairs();
+        // Per-source mode: kNN modes over-fetch for the tombstone filter.
+        let (k, fetch_mode) = match req.mode {
+            SearchMode::Knn { k } => {
+                let k = k.max(1);
+                (Some(k), SearchMode::Knn { k: k.saturating_add(self.tombstones.len()) })
+            }
+            SearchMode::KnnWithin { k, tau } => {
+                let k = k.max(1);
+                (
+                    Some(k),
+                    SearchMode::KnnWithin { k: k.saturating_add(self.tombstones.len()), tau },
+                )
+            }
+            SearchMode::Range { tau } => (None, SearchMode::Range { tau }),
+        };
+        let mut resp = SearchResponse { hits: ctx.lease_pairs(), ..SearchResponse::default() };
         for g in &self.generations {
-            g.index.range_into(q, tau, ctx, &mut buf);
-            for &(local, s) in buf.iter() {
-                let id = g.ids[local as usize];
+            let local = g.localize(req, fetch_mode);
+            g.index.search_into(q, local.as_ref().unwrap_or(req), ctx, &mut resp);
+            truncated |= resp.truncated;
+            for &(local_id, s) in resp.hits.iter() {
+                let id = g.ids[local_id as usize];
                 if !self.tombstones.contains(&id) {
                     out.push((id, s));
                 }
             }
         }
         if !self.memtable.is_empty() {
-            buf.clear();
-            let evals = self
-                .memtable
-                .store()
-                .view()
-                .scan_range_with(q.as_slice(), tau, &mut buf, ctx.kernel_scratch());
-            ctx.stats.sim_evals += evals;
-            for &(local, s) in buf.iter() {
-                let id = self.memtable.base() + local as u64;
+            // The memtable scans as a throwaway LinearScan over its store
+            // view (a handful of Arc bumps, no heap allocation): one code
+            // path arms the filter/budget/override exactly like every
+            // other source — in particular the budget keeps working here
+            // even though each generation's `search_into` disarmed the
+            // plan at its exit, and a budgeted scan chunks so truncation
+            // still overshoots by at most one chunk.
+            let base = self.memtable.base();
+            let hi = base + self.memtable.len() as u64;
+            let local = if req.filter.is_none() || base == 0 {
+                // Identity id space (fresh corpus, nothing sealed yet):
+                // share the filter by Arc, only the mode changes.
+                SearchRequest { mode: fetch_mode, ..req.clone() }
+            } else {
+                req.localized(fetch_mode, |id| {
+                    if (base..hi).contains(&id) {
+                        Some(id - base)
+                    } else {
+                        None
+                    }
+                })
+            };
+            let scan = LinearScan::build(self.memtable.store().view());
+            scan.search_into(q, &local, ctx, &mut resp);
+            truncated |= resp.truncated;
+            for &(local_id, s) in resp.hits.iter() {
+                let id = base + local_id as u64;
                 if !self.tombstones.contains(&id) {
                     out.push((id, s));
                 }
             }
         }
-        ctx.release_pairs(buf);
+        ctx.release_pairs(resp.hits);
         sort_hits(out);
-        ctx.stats.sim_evals - evals_before
+        if let Some(k) = k {
+            out.truncate(k);
+        }
+        (ctx.stats.sim_evals - evals_before, truncated)
     }
+
 }

@@ -463,11 +463,24 @@ impl IngestCorpus {
         self.inner.cell.load().range(q, tau)
     }
 
+    /// Execute one typed search plan (ADR-005) over the current snapshot
+    /// through a borrowed [`QueryContext`] (the serving hot path: the
+    /// coordinator's batch worker reuses one context across every query of
+    /// every batch). Marks the query boundary itself; replaces `out`;
+    /// returns `(exact evaluations spent, budget-truncated)`.
+    pub fn search_ctx(
+        &self,
+        q: &DenseVec,
+        req: &crate::query::SearchRequest,
+        ctx: &mut QueryContext,
+        out: &mut Vec<(u64, f64)>,
+    ) -> (u64, bool) {
+        ctx.begin_query();
+        self.inner.cell.load().search_ctx(q, req, ctx, out)
+    }
+
     /// Exact kNN over the current snapshot through a borrowed
-    /// [`QueryContext`] (the serving hot path: the coordinator's batch
-    /// worker reuses one context across every query of every batch).
-    /// Marks the query boundary itself; replaces `out`; returns the exact
-    /// evaluations spent.
+    /// [`QueryContext`] (plain-plan shim over [`IngestCorpus::search_ctx`]).
     pub fn knn_ctx(
         &self,
         q: &DenseVec,

@@ -17,47 +17,74 @@
 //!
 //! ## Quick start
 //!
+//! Every layer answers one typed plan, a [`query::SearchRequest`]
+//! (ADR-005): the query mode — kNN, range, or kNN restricted to a
+//! similarity floor — plus per-request options (bound/kernel override,
+//! allow/deny id filter, similarity-evaluation budget):
+//!
 //! ```no_run
 //! use simetra::bounds::BoundKind;
 //! use simetra::data::uniform_sphere_store;
 //! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::query::SearchRequest;
 //!
 //! // One contiguous allocation for the whole corpus...
 //! let store = uniform_sphere_store(10_000, 64, 42);
 //! // ...and the index builds over a zero-copy view of it.
 //! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
-//! let mut stats = simetra::index::QueryStats::default();
-//! let q = store.vec(0);
-//! let hits = index.knn(&q, 10, &mut stats);
-//! assert_eq!(hits[0].0, 0); // a point's own nearest neighbor is itself
-//! println!("similarity computations: {}", stats.sim_evals);
+//!
+//! // Top-10 restricted to sim >= 0.7, both bounds pruning one traversal.
+//! let req = SearchRequest::knn(10).within(0.7).build();
+//! let resp = index.search(&store.vec(0), &req);
+//! assert_eq!(resp.hits[0].0, 0); // a point's own nearest neighbor is itself
+//! assert!(resp.hits.iter().all(|&(_, s)| s >= 0.7));
+//! println!("similarity computations: {}", resp.stats.sim_evals);
+//!
+//! // Filters are applied before exact evaluation inside the kernels, and
+//! // budgets degrade to certified partial results (flagged `truncated`).
+//! let req = SearchRequest::knn(10)
+//!     .deny(vec![17, 23])
+//!     .budget(50_000)
+//!     .build();
+//! let resp = index.search(&store.vec(0), &req);
+//! assert!(resp.hits.iter().all(|&(id, _)| id != 17 && id != 23));
+//! if resp.truncated {
+//!     println!("budget hit: results are exact over the evaluated subset");
+//! }
 //! ```
+//!
+//! The classic signatures (`knn`, `range`, `knn_into`, `range_into`,
+//! `knn_batch`, `range_batch`) still exist on every index as provided
+//! shims over [`index::SimilarityIndex::search_into`] — byte-identical to
+//! plain plans.
 //!
 //! Scans default to the scalar backend;
 //! [`storage::CorpusStore::with_kernel`] swaps in the SIMD backend
 //! (bit-identical results, AVX-accelerated) or the i8-quantized pre-filter
 //! (byte-identical results after exact re-rank) — indexes built over the
-//! store's views inherit it untouched:
+//! store's views inherit it untouched, and a `SearchRequest` can override
+//! the backend per query:
 //!
 //! ```no_run
 //! use simetra::bounds::BoundKind;
 //! use simetra::data::uniform_sphere_store;
 //! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::query::SearchRequest;
 //! use simetra::storage::KernelKind;
 //!
 //! let store = uniform_sphere_store(10_000, 64, 42).with_kernel(KernelKind::Simd);
 //! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
-//! let mut stats = simetra::index::QueryStats::default();
-//! let hits = index.knn(&store.vec(0), 10, &mut stats);
-//! assert_eq!(hits[0].0, 0); // same bytes as the scalar backend returns
+//! let req = SearchRequest::knn(10).kernel(KernelKind::Scalar).build();
+//! let resp = index.search(&store.vec(0), &req);
+//! assert_eq!(resp.hits[0].0, 0); // same bytes whatever the backend
 //! ```
 //!
 //! The steady-state query path allocates nothing: a reusable
 //! [`query::QueryContext`] owns every traversal buffer (result heap,
 //! frontier, candidate pools, the i8 backend's per-query quantized-query
-//! cache), and `knn_batch` / `range_batch` run whole query batches through
-//! one context with results byte-identical to one-at-a-time calls
-//! (ADR-004):
+//! cache, the armed filter), and `knn_batch` / `range_batch` run whole
+//! query batches through one context with results byte-identical to
+//! one-at-a-time calls (ADR-004):
 //!
 //! ```no_run
 //! use simetra::bounds::BoundKind;
@@ -108,6 +135,7 @@ pub mod bounds;
 pub mod cluster;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod figures;
 pub mod index;
 pub mod ingest;
@@ -117,3 +145,5 @@ pub mod runtime;
 pub mod sparse;
 pub mod storage;
 pub mod util;
+
+pub use error::SimetraError;

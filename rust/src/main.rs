@@ -15,9 +15,10 @@ use simetra::coordinator::{
 };
 use simetra::data::{uniform_sphere, vmf_mixture_store, VmfSpec};
 use simetra::figures;
-use simetra::index::QueryStats;
+use simetra::index::SimilarityIndex;
 use simetra::ingest::IngestConfig;
 use simetra::metrics::SimVector;
+use simetra::query::SearchRequest;
 use simetra::runtime::Engine;
 use simetra::storage::KernelKind;
 
@@ -37,9 +38,20 @@ COMMANDS:
              --max-batch 32  --max-wait-us 2000
              --mutable 1  (generational ingest: insert/delete/flush/compact
                            ops enabled; requires --mode index)
-  search     One-shot kNN on a synthetic corpus (sanity/demo)
+             Wire ops: knn/range (legacy) plus the versioned 'search' op
+             carrying mode knn|range|knn_within, bound/kernel overrides,
+             allow/deny filters and a sim-eval budget (ADR-005)
+  search     One-shot search on a synthetic corpus (sanity/demo); the flag
+             surface mirrors the typed SearchRequest plan (ADR-005)
              --n 10000  --dim 64  --k 10  --index vp  --bound mult
              --kernel scalar|simd|i8
+             --within 0.7        (top-k restricted to sim >= tau)
+             --budget 50000      (sim-eval budget; partial results are
+                                  flagged truncated)
+             --allow 1,2,3 | --deny 4,5  (sorted id filter, applied
+                                  before exact evaluation in the kernels)
+             --bound-override mult  (per-request pruning bound; --bound
+                                  stays the build-time bound)
   figures    Regenerate the paper's figures as CSV + summary
              --out figures_out  --steps 401
   selfcheck  Verify the PJRT runtime against native rust scoring
@@ -110,16 +122,16 @@ fn effective_kernel(kernel: Option<KernelKind>, dim: usize) -> Result<KernelKind
 }
 
 pub fn parse_bound(s: &str) -> Result<BoundKind> {
-    Ok(match s.to_lowercase().as_str() {
-        "euclidean" | "eucl" => BoundKind::Euclidean,
-        "eucl-lb" | "eucllb" => BoundKind::EuclLb,
-        "arccos" => BoundKind::Arccos,
-        "arccos-fast" | "fast" => BoundKind::ArccosFast,
-        "mult" => BoundKind::Mult,
-        "mult-lb1" | "lb1" => BoundKind::MultLb1,
-        "mult-lb2" | "lb2" => BoundKind::MultLb2,
-        other => bail!("unknown bound '{other}'"),
-    })
+    BoundKind::parse(s).ok_or_else(|| anyhow::anyhow!("unknown bound '{s}'"))
+}
+
+/// Parse a comma-separated id list flag (`--allow 1,2,3`).
+fn parse_id_list(value: &str) -> Result<Vec<u64>> {
+    value
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<u64>().with_context(|| format!("bad id '{s}'")))
+        .collect()
 }
 
 fn main() -> Result<()> {
@@ -218,10 +230,32 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     let build0 = std::time::Instant::now();
     let idx = kind.build(store.view(), bound);
     let build_t = build0.elapsed();
+
+    // Assemble the typed plan from the flag surface (ADR-005).
+    let mut builder = SearchRequest::knn(k);
+    if let Some(tau) = flags.get("within") {
+        builder = builder.within(tau.parse().context("--within must be a number")?);
+    }
+    if let Some(b) = flags.get("bound_override") {
+        builder = builder.bound(parse_bound(b)?);
+    }
+    if let Some(budget) = flags.get("budget") {
+        builder = builder.budget(budget.parse().context("--budget must be an integer")?);
+    }
+    if let Some(ids) = flags.get("allow") {
+        builder = builder.allow(parse_id_list(ids)?);
+    }
+    if let Some(ids) = flags.get("deny") {
+        if flags.get("allow").is_some() {
+            bail!("--allow and --deny are mutually exclusive");
+        }
+        builder = builder.deny(parse_id_list(ids)?);
+    }
+    let req = builder.build();
+
     let q = store.vec(0);
-    let mut stats = QueryStats::default();
     let t0 = std::time::Instant::now();
-    let hits = idx.knn(&q, k, &mut stats);
+    let resp = idx.search(&q, &req);
     let dt = t0.elapsed();
     println!(
         "index={} bound={} kernel={} n={n} dim={dim} (built in {build_t:?})",
@@ -230,12 +264,13 @@ fn cmd_search(flags: &Flags) -> Result<()> {
         store.kernel_kind().name()
     );
     println!(
-        "query took {dt:?}; {} sim evals ({:.1}% of corpus), {} pruned",
-        stats.sim_evals,
-        100.0 * stats.sim_evals as f64 / n as f64,
-        stats.pruned
+        "query took {dt:?}; {} sim evals ({:.1}% of corpus), {} pruned{}",
+        resp.stats.sim_evals,
+        100.0 * resp.stats.sim_evals as f64 / n as f64,
+        resp.stats.pruned,
+        if resp.truncated { " [truncated: sim-eval budget hit]" } else { "" }
     );
-    for (rank, (id, s)) in hits.iter().enumerate() {
+    for (rank, (id, s)) in resp.hits.iter().enumerate() {
         println!("  #{rank}: id={id} sim={s:.6}");
     }
     Ok(())

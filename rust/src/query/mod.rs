@@ -32,11 +32,15 @@
 //! generation. `SimilarityIndex::knn_batch` / `range_batch` and the
 //! compatibility wrappers call it for you.
 
+pub mod plan;
+
+pub use plan::{IdFilter, SearchMode, SearchRequest, SearchRequestBuilder, SearchResponse};
+
 use std::collections::BinaryHeap;
 use std::marker::PhantomData;
 
 use crate::index::{KnnHeap, QueryStats};
-use crate::storage::KernelScratch;
+use crate::storage::{FilterMode, KernelScratch};
 
 /// A type-erased frontier entry: the upper bound (the heap priority), a
 /// node pointer, and one auxiliary float (the already-computed center/parent
@@ -137,6 +141,15 @@ pub struct QueryContext {
     /// Pool of `(id, value)` buffers (candidate lists, visit orders,
     /// per-generation hit staging).
     pairs_pool: Vec<Vec<(u32, f64)>>,
+    /// Pool of raw id buffers (budgeted chunk scans).
+    ids_pool: Vec<Vec<u32>>,
+    /// Per-query exact-evaluation budget (ADR-005), armed by
+    /// [`QueryContext::apply_plan`]; measured against the current window's
+    /// `stats.sim_evals`.
+    budget: Option<u64>,
+    /// Set by a traversal that stopped early on budget exhaustion; copied
+    /// into [`SearchResponse::truncated`] by `search_into`.
+    pub truncated: bool,
     /// Kernel-level scratch: cached [`crate::storage::KernelScratch`]
     /// quantized query + certified-bound buffers.
     scratch: KernelScratch,
@@ -168,8 +181,54 @@ impl QueryContext {
         self.totals.merge(&self.stats);
         self.stats = QueryStats::default();
         self.scratch.invalidate();
+        self.clear_plan();
+        self.truncated = false;
         self.queries += 1;
         reused
+    }
+
+    /// Arm the per-request plan (ADR-005): evaluation budget, kernel
+    /// override, and the id filter (copied into the kernel scratch's
+    /// reused buffer — ids are interpreted in the *caller's local* id
+    /// space, which is why layers translate via
+    /// [`SearchRequest::localized`] before delegating). Every
+    /// `search_into` implementation calls this at entry and
+    /// [`QueryContext::clear_plan`] at exit, so legacy `knn_into` /
+    /// `range_into` calls interleaved on the same context are unaffected.
+    pub fn apply_plan(&mut self, req: &SearchRequest) {
+        self.budget = req.budget;
+        self.truncated = false;
+        self.scratch.set_kernel_override(req.kernel);
+        match &req.filter {
+            IdFilter::None => self.scratch.clear_filter(),
+            IdFilter::Allow(ids) => self.scratch.set_filter(FilterMode::Allow, local_ids(ids)),
+            IdFilter::Deny(ids) => self.scratch.set_filter(FilterMode::Deny, local_ids(ids)),
+        }
+    }
+
+    /// Disarm the plan armed by [`QueryContext::apply_plan`] (buffers are
+    /// kept; `truncated` is left for the caller to read).
+    pub fn clear_plan(&mut self) {
+        self.budget = None;
+        self.scratch.set_kernel_override(None);
+        self.scratch.clear_filter();
+    }
+
+    /// Whether the armed evaluation budget is spent (always `false`
+    /// without a budget). Traversals check this at node granularity and
+    /// set [`QueryContext::truncated`] when they stop early.
+    #[inline]
+    pub fn budget_exhausted(&self) -> bool {
+        self.budget.is_some_and(|b| self.stats.sim_evals >= b)
+    }
+
+    /// Whether the armed id filter admits local id `id` (always `true`
+    /// without a filter). Kernel scans apply the same filter *before*
+    /// exact evaluation; this entry point is for the per-node offers
+    /// (vantage points, routing objects) tree traversals make directly.
+    #[inline]
+    pub fn admits(&self, id: u32) -> bool {
+        self.scratch.filter_admits(id)
     }
 
     /// Queries started on this context (reuses = `queries() - 1`).
@@ -259,6 +318,27 @@ impl QueryContext {
     pub fn release_pairs(&mut self, v: Vec<(u32, f64)>) {
         self.pairs_pool.push(v);
     }
+
+    /// Lease a cleared `Vec<u32>` from the pool (budgeted chunk scans).
+    /// Pair with [`QueryContext::release_ids`].
+    #[inline]
+    pub fn lease_ids(&mut self) -> Vec<u32> {
+        let mut v = self.ids_pool.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    #[inline]
+    pub fn release_ids(&mut self, v: Vec<u32>) {
+        self.ids_pool.push(v);
+    }
+}
+
+/// Filter ids that fit the index-local `u32` id space (larger ids cannot
+/// name any local row: an allow entry excludes nothing extra by dropping,
+/// a deny entry constrains nothing).
+fn local_ids(ids: &[u64]) -> impl Iterator<Item = u32> + '_ {
+    ids.iter().filter(|&&id| id <= u32::MAX as u64).map(|&id| id as u32)
 }
 
 #[cfg(test)]

@@ -1,0 +1,308 @@
+//! The typed search plan (ADR-005): one declarative request that flows
+//! unchanged from the wire protocol through the coordinator, shards,
+//! ingest generations, and into every index traversal and kernel scan.
+//!
+//! The paper's contribution is a *family* of certified bounds; a family is
+//! only usable if the query — not seven method signatures — carries the
+//! per-query choices. A [`SearchRequest`] names the query mode
+//! ([`SearchMode`]: kNN, range, or kNN-within-a-floor) plus the options
+//! the theory supports per query: a pruning-bound override, a kernel
+//! backend override, a sorted allow/deny [`IdFilter`] applied *before*
+//! exact evaluation inside kernel scans, and a similarity-evaluation
+//! budget that degrades to a certified partial result (flagged in
+//! [`SearchResponse::truncated`]).
+
+use std::sync::Arc;
+
+use crate::bounds::BoundKind;
+use crate::index::QueryStats;
+use crate::storage::KernelKind;
+
+/// The query mode of a [`SearchRequest`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SearchMode {
+    /// The `k` most similar items.
+    Knn { k: usize },
+    /// Every item with `sim >= tau`.
+    Range { tau: f64 },
+    /// The `k` most similar items *among those with `sim >= tau`*: both
+    /// bounds prune one traversal (the kNN floor and the range threshold),
+    /// and the result equals a post-filtered [`SearchMode::Knn`] exactly
+    /// (see ADR-005 for the argument).
+    KnnWithin { k: usize, tau: f64 },
+}
+
+impl SearchMode {
+    /// The `k` of a kNN-flavored mode.
+    pub fn k(&self) -> Option<usize> {
+        match *self {
+            SearchMode::Knn { k } | SearchMode::KnnWithin { k, .. } => Some(k),
+            SearchMode::Range { .. } => None,
+        }
+    }
+
+    /// The similarity threshold of a range-flavored mode.
+    pub fn tau(&self) -> Option<f64> {
+        match *self {
+            SearchMode::Range { tau } | SearchMode::KnnWithin { tau, .. } => Some(tau),
+            SearchMode::Knn { .. } => None,
+        }
+    }
+}
+
+/// A sorted id allow/deny list. Ids are in the id space of the layer the
+/// request is handed to: global (`u64`) at the coordinator/wire level,
+/// index-local at the index level; layers with a non-identity id mapping
+/// translate via [`IdFilter::localize`] before delegating. Shared behind
+/// an `Arc` so fanning a request out across shards never copies the list.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub enum IdFilter {
+    /// Every id is admitted.
+    #[default]
+    None,
+    /// Only the listed ids are admitted. Must be sorted ascending.
+    Allow(Arc<Vec<u64>>),
+    /// The listed ids are excluded. Must be sorted ascending.
+    Deny(Arc<Vec<u64>>),
+}
+
+impl IdFilter {
+    pub fn is_none(&self) -> bool {
+        matches!(self, IdFilter::None)
+    }
+
+    /// The sorted id list, if any.
+    pub fn ids(&self) -> Option<&[u64]> {
+        match self {
+            IdFilter::None => None,
+            IdFilter::Allow(ids) | IdFilter::Deny(ids) => Some(ids),
+        }
+    }
+
+    /// Whether the id list is sorted ascending (vacuously true for `None`).
+    /// The builder and the wire parser always produce sorted lists; the
+    /// coordinator validates hand-built requests with this.
+    pub fn is_sorted(&self) -> bool {
+        self.ids().is_none_or(|ids| ids.windows(2).all(|w| w[0] <= w[1]))
+    }
+
+    /// Translate the filter into another id space: each id maps through
+    /// `map` (`None` drops it — an allow/deny entry for an id a partition
+    /// does not hold constrains nothing there). The output is re-sorted
+    /// only when `map` was non-monotone; the serving layers' maps
+    /// (subtract-a-base, binary-search over an ascending id column) keep
+    /// order, so they pay one linear is-sorted check instead of a sort.
+    pub fn localize(&self, mut map: impl FnMut(u64) -> Option<u64>) -> IdFilter {
+        let translate = |ids: &Arc<Vec<u64>>, map: &mut dyn FnMut(u64) -> Option<u64>| {
+            let mut out: Vec<u64> = ids.iter().filter_map(|&id| map(id)).collect();
+            if !out.windows(2).all(|w| w[0] <= w[1]) {
+                out.sort_unstable();
+            }
+            Arc::new(out)
+        };
+        match self {
+            IdFilter::None => IdFilter::None,
+            IdFilter::Allow(ids) => IdFilter::Allow(translate(ids, &mut map)),
+            IdFilter::Deny(ids) => IdFilter::Deny(translate(ids, &mut map)),
+        }
+    }
+}
+
+/// A typed, declarative search plan — the one argument every layer's
+/// `search` entry point takes (ADR-005). Build with [`SearchRequest::knn`]
+/// / [`SearchRequest::range`] / [`SearchRequest::knn_within`]:
+///
+/// ```
+/// use simetra::query::SearchRequest;
+/// let req = SearchRequest::knn(10).within(0.7).budget(50_000).build();
+/// assert_eq!(req.mode.k(), Some(10));
+/// assert_eq!(req.mode.tau(), Some(0.7));
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRequest {
+    pub mode: SearchMode,
+    /// Per-request pruning-bound override; `None` keeps the bound the
+    /// index was built with. Sound for every [`BoundKind`]: tree shapes
+    /// store exact similarity intervals, so any certified bound prunes
+    /// them correctly (looser bounds cost evaluations, never results).
+    pub bound: Option<BoundKind>,
+    /// Per-request kernel backend override, resolved against the serving
+    /// store's available backends (exact kinds are always available; the
+    /// i8 pre-filter only where a sidecar is live — otherwise the
+    /// coordinator rejects with `KernelUnavailable`).
+    pub kernel: Option<KernelKind>,
+    /// Sorted allow/deny id list, applied before exact evaluation inside
+    /// kernel scans: filtered-out rows never cost a similarity evaluation.
+    pub filter: IdFilter,
+    /// Budget of exact similarity evaluations. When a traversal exhausts
+    /// it, the search stops early and returns a certified partial result
+    /// (exact over the evaluated subset) with
+    /// [`SearchResponse::truncated`] set. Applied per partition (shard /
+    /// generation-set window).
+    pub budget: Option<u64>,
+}
+
+impl SearchRequest {
+    /// A plain kNN plan (returns a builder).
+    pub fn knn(k: usize) -> SearchRequestBuilder {
+        SearchRequestBuilder::new(SearchMode::Knn { k })
+    }
+
+    /// A plain range plan (returns a builder).
+    pub fn range(tau: f64) -> SearchRequestBuilder {
+        SearchRequestBuilder::new(SearchMode::Range { tau })
+    }
+
+    /// A kNN plan restricted to `sim >= tau` (returns a builder).
+    pub fn knn_within(k: usize, tau: f64) -> SearchRequestBuilder {
+        SearchRequestBuilder::new(SearchMode::KnnWithin { k, tau })
+    }
+
+    /// Whether the request carries no per-request options — the shape the
+    /// coordinator's uniform-batch fast paths accept.
+    pub fn is_plain(&self) -> bool {
+        self.bound.is_none()
+            && self.kernel.is_none()
+            && self.budget.is_none()
+            && self.filter.is_none()
+    }
+
+    /// The same plan with `mode` and a translated filter — how layers with
+    /// a non-identity id mapping (shards, generations) delegate downward.
+    pub fn localized(
+        &self,
+        mode: SearchMode,
+        map: impl FnMut(u64) -> Option<u64>,
+    ) -> SearchRequest {
+        SearchRequest {
+            mode,
+            bound: self.bound,
+            kernel: self.kernel,
+            filter: self.filter.localize(map),
+            budget: self.budget,
+        }
+    }
+}
+
+/// Builder for [`SearchRequest`] (all options default to off).
+#[derive(Debug, Clone)]
+pub struct SearchRequestBuilder {
+    req: SearchRequest,
+}
+
+impl SearchRequestBuilder {
+    fn new(mode: SearchMode) -> SearchRequestBuilder {
+        SearchRequestBuilder {
+            req: SearchRequest {
+                mode,
+                bound: None,
+                kernel: None,
+                filter: IdFilter::None,
+                budget: None,
+            },
+        }
+    }
+
+    /// Restrict the result set to `sim >= tau` ([`SearchMode::Knn`]
+    /// becomes [`SearchMode::KnnWithin`]; on range modes this replaces the
+    /// threshold).
+    pub fn within(mut self, tau: f64) -> Self {
+        self.req.mode = match self.req.mode {
+            SearchMode::Knn { k } | SearchMode::KnnWithin { k, .. } => {
+                SearchMode::KnnWithin { k, tau }
+            }
+            SearchMode::Range { .. } => SearchMode::Range { tau },
+        };
+        self
+    }
+
+    /// Override the pruning bound for this request.
+    pub fn bound(mut self, bound: BoundKind) -> Self {
+        self.req.bound = Some(bound);
+        self
+    }
+
+    /// Override the kernel backend for this request.
+    pub fn kernel(mut self, kernel: KernelKind) -> Self {
+        self.req.kernel = Some(kernel);
+        self
+    }
+
+    /// Admit only these ids (sorted and deduplicated here).
+    pub fn allow(mut self, mut ids: Vec<u64>) -> Self {
+        ids.sort_unstable();
+        ids.dedup();
+        self.req.filter = IdFilter::Allow(Arc::new(ids));
+        self
+    }
+
+    /// Exclude these ids (sorted and deduplicated here).
+    pub fn deny(mut self, mut ids: Vec<u64>) -> Self {
+        ids.sort_unstable();
+        ids.dedup();
+        self.req.filter = IdFilter::Deny(Arc::new(ids));
+        self
+    }
+
+    /// Cap the exact similarity evaluations spent on this request.
+    pub fn budget(mut self, sim_evals: u64) -> Self {
+        self.req.budget = Some(sim_evals);
+        self
+    }
+
+    pub fn build(self) -> SearchRequest {
+        self.req
+    }
+}
+
+/// The result of one index-level search: hits in `(sim desc, id asc)`
+/// order, the per-query instrumentation window, and whether an evaluation
+/// budget truncated the traversal (hits are then exact over the evaluated
+/// subset). Reusable: every `search_into` replaces the contents.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SearchResponse {
+    pub hits: Vec<(u32, f64)>,
+    pub stats: QueryStats,
+    pub truncated: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_covers_every_option() {
+        let req = SearchRequest::knn(10)
+            .within(0.7)
+            .bound(BoundKind::Euclidean)
+            .kernel(KernelKind::Simd)
+            .allow(vec![9, 3, 3, 7])
+            .budget(1000)
+            .build();
+        assert_eq!(req.mode, SearchMode::KnnWithin { k: 10, tau: 0.7 });
+        assert_eq!(req.bound, Some(BoundKind::Euclidean));
+        assert_eq!(req.kernel, Some(KernelKind::Simd));
+        assert_eq!(req.filter.ids(), Some(&[3u64, 7, 9][..]));
+        assert!(req.filter.is_sorted());
+        assert_eq!(req.budget, Some(1000));
+        assert!(!req.is_plain());
+        assert!(SearchRequest::range(0.5).build().is_plain());
+    }
+
+    #[test]
+    fn mode_accessors() {
+        assert_eq!(SearchMode::Knn { k: 3 }.k(), Some(3));
+        assert_eq!(SearchMode::Knn { k: 3 }.tau(), None);
+        assert_eq!(SearchMode::Range { tau: 0.2 }.tau(), Some(0.2));
+        assert_eq!(SearchMode::KnnWithin { k: 2, tau: 0.5 }.k(), Some(2));
+    }
+
+    #[test]
+    fn localize_translates_and_drops() {
+        let f = SearchRequest::knn(1).deny(vec![5, 10, 15]).build().filter;
+        let local = f.localize(|id| if id >= 10 { Some(id - 10) } else { None });
+        assert_eq!(local.ids(), Some(&[0u64, 5][..]));
+        assert!(matches!(local, IdFilter::Deny(_)));
+        assert!(IdFilter::None.localize(Some).is_none());
+    }
+}

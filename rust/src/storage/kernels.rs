@@ -126,6 +126,20 @@ impl KernelCounters {
 /// Sink for per-row similarities; invoked in ascending position order.
 pub type SimSink<'a> = &'a mut dyn FnMut(usize, f64);
 
+/// How the armed id filter of a [`KernelScratch`] interprets its id list
+/// (ADR-005). Ids are in the *report-id* space of the scan — the same ids
+/// a scan's heap offers / output pairs carry.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum FilterMode {
+    /// No filter armed: every row is admitted.
+    #[default]
+    None,
+    /// Only listed ids are admitted.
+    Allow,
+    /// Listed ids are excluded.
+    Deny,
+}
+
 /// Quantized-query cache state of a [`KernelScratch`]. The `QuantQuery`
 /// storage itself lives outside this tag so invalidation keeps the codes
 /// buffer — a rebuilt query reuses it, and the steady-state query path
@@ -179,6 +193,18 @@ pub struct KernelScratch {
     /// Survivor store rows + report ids (i8 re-rank gather).
     rows: Vec<u32>,
     ids: Vec<u32>,
+    /// Armed per-request id filter (ADR-005): scans resolve their
+    /// selection against it *before* any exact or quantized work, so
+    /// filtered-out rows never cost an evaluation.
+    filter_mode: FilterMode,
+    filter_ids: Vec<u32>,
+    /// Filtered-selection staging (store rows + report ids of admitted
+    /// positions), reused across scan calls.
+    frows: Vec<u32>,
+    fids: Vec<u32>,
+    /// Per-request kernel-backend override (ADR-005): `CorpusView` scans
+    /// dispatch through this kind instead of the store's primary backend.
+    kernel_override: Option<KernelKind>,
     /// Debug builds keep the cached query's bytes so a cache hit can
     /// verify the `(ptr, len)` key really denotes the same query — an
     /// ABA'd address after a missed `invalidate` fails loudly in tests
@@ -205,6 +231,75 @@ impl KernelScratch {
     /// each traversal scanned.
     pub fn quant_builds(&self) -> u64 {
         self.builds
+    }
+
+    /// Arm a per-request id filter for subsequent scans through this
+    /// scratch. `ids` must arrive sorted ascending (the plan layer
+    /// guarantees it); the list is copied into a reused buffer, so
+    /// re-arming in the steady state allocates nothing.
+    pub fn set_filter(&mut self, mode: FilterMode, ids: impl IntoIterator<Item = u32>) {
+        self.filter_ids.clear();
+        self.filter_ids.extend(ids);
+        debug_assert!(self.filter_ids.windows(2).all(|w| w[0] <= w[1]), "filter ids not sorted");
+        self.filter_mode = mode;
+    }
+
+    /// Disarm the id filter (the buffer is kept).
+    pub fn clear_filter(&mut self) {
+        self.filter_mode = FilterMode::None;
+    }
+
+    pub fn has_filter(&self) -> bool {
+        self.filter_mode != FilterMode::None
+    }
+
+    /// Whether the armed filter admits report id `id` (`true` when no
+    /// filter is armed).
+    #[inline]
+    pub fn filter_admits(&self, id: u32) -> bool {
+        match self.filter_mode {
+            FilterMode::None => true,
+            FilterMode::Allow => self.filter_ids.binary_search(&id).is_ok(),
+            FilterMode::Deny => self.filter_ids.binary_search(&id).is_err(),
+        }
+    }
+
+    /// Arm / disarm the per-request kernel-backend override.
+    pub fn set_kernel_override(&mut self, kind: Option<KernelKind>) {
+        self.kernel_override = kind;
+    }
+
+    pub fn kernel_override(&self) -> Option<KernelKind> {
+        self.kernel_override
+    }
+
+    /// Resolve `sel` against the armed filter: admitted positions are
+    /// staged as `(absolute store rows, report ids)` in the scratch's
+    /// reused buffers (taken, so the caller can hold a [`RowSel::Gather`]
+    /// over them while still passing the scratch on mutably — pair with
+    /// [`KernelScratch::restore_filter_bufs`]). `None` when no filter is
+    /// armed.
+    fn stage_filtered(&mut self, sel: &RowSel<'_>) -> Option<(Vec<u32>, Vec<u32>)> {
+        if self.filter_mode == FilterMode::None {
+            return None;
+        }
+        let mut rows = std::mem::take(&mut self.frows);
+        let mut ids = std::mem::take(&mut self.fids);
+        rows.clear();
+        ids.clear();
+        for pos in 0..sel.len() {
+            let id = sel.report_id(pos);
+            if self.filter_admits(id) {
+                rows.push(sel.store_row(pos) as u32);
+                ids.push(id);
+            }
+        }
+        Some((rows, ids))
+    }
+
+    fn restore_filter_bufs(&mut self, (rows, ids): (Vec<u32>, Vec<u32>)) {
+        self.frows = rows;
+        self.fids = ids;
     }
 
     /// Make sure the cache holds the quantized form of `q`, building it if
@@ -372,9 +467,11 @@ impl KernelBackend for ScalarKernel {
         s: StoreRef<'_>,
         sel: RowSel<'_>,
         heap: &mut KnnHeap,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        exact_topk(Isa::Scalar, &self.counters, q, s, sel, heap)
+        with_filtered_sel(scratch, sel, |_, sel| {
+            exact_topk(Isa::Scalar, &self.counters, q, s, sel, heap)
+        })
     }
 
     fn scan_range(
@@ -384,9 +481,11 @@ impl KernelBackend for ScalarKernel {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        exact_range(Isa::Scalar, &self.counters, q, s, sel, tau, out)
+        with_filtered_sel(scratch, sel, |_, sel| {
+            exact_range(Isa::Scalar, &self.counters, q, s, sel, tau, out)
+        })
     }
 }
 
@@ -446,9 +545,11 @@ impl KernelBackend for SimdKernel {
         s: StoreRef<'_>,
         sel: RowSel<'_>,
         heap: &mut KnnHeap,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        exact_topk(self.isa, &self.counters, q, s, sel, heap)
+        with_filtered_sel(scratch, sel, |_, sel| {
+            exact_topk(self.isa, &self.counters, q, s, sel, heap)
+        })
     }
 
     fn scan_range(
@@ -458,9 +559,11 @@ impl KernelBackend for SimdKernel {
         sel: RowSel<'_>,
         tau: f64,
         out: &mut Vec<(u32, f64)>,
-        _scratch: &mut KernelScratch,
+        scratch: &mut KernelScratch,
     ) -> u64 {
-        exact_range(self.isa, &self.counters, q, s, sel, tau, out)
+        with_filtered_sel(scratch, sel, |_, sel| {
+            exact_range(self.isa, &self.counters, q, s, sel, tau, out)
+        })
     }
 }
 
@@ -486,32 +589,9 @@ impl Default for QuantizedI8Kernel {
     }
 }
 
-impl KernelBackend for QuantizedI8Kernel {
-    fn kind(&self) -> KernelKind {
-        KernelKind::QuantizedI8
-    }
-
-    fn counters(&self) -> &KernelCounters {
-        &self.counters
-    }
-
-    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
-        sim_block_isa(self.isa, q, block, d, n, sink);
-    }
-
-    fn sim_gather(
-        &self,
-        q: &[f32],
-        flat: &[f32],
-        d: usize,
-        rows: &[u32],
-        base: usize,
-        sink: SimSink<'_>,
-    ) {
-        sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
-    }
-
-    fn scan_topk(
+impl QuantizedI8Kernel {
+    /// [`KernelBackend::scan_topk`] body after filter resolution.
+    fn scan_topk_unfiltered(
         &self,
         q: &[f32],
         s: StoreRef<'_>,
@@ -563,7 +643,8 @@ impl KernelBackend for QuantizedI8Kernel {
         rows.len() as u64
     }
 
-    fn scan_range(
+    /// [`KernelBackend::scan_range`] body after filter resolution.
+    fn scan_range_unfiltered(
         &self,
         q: &[f32],
         s: StoreRef<'_>,
@@ -601,7 +682,81 @@ impl KernelBackend for QuantizedI8Kernel {
     }
 }
 
+impl KernelBackend for QuantizedI8Kernel {
+    fn kind(&self) -> KernelKind {
+        KernelKind::QuantizedI8
+    }
+
+    fn counters(&self) -> &KernelCounters {
+        &self.counters
+    }
+
+    fn sim_block(&self, q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
+        sim_block_isa(self.isa, q, block, d, n, sink);
+    }
+
+    fn sim_gather(
+        &self,
+        q: &[f32],
+        flat: &[f32],
+        d: usize,
+        rows: &[u32],
+        base: usize,
+        sink: SimSink<'_>,
+    ) {
+        sim_gather_isa(self.isa, q, flat, d, rows, base, sink);
+    }
+
+    fn scan_topk(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        heap: &mut KnnHeap,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        with_filtered_sel(scratch, sel, |scratch, sel| {
+            self.scan_topk_unfiltered(q, s, sel, heap, scratch)
+        })
+    }
+
+    fn scan_range(
+        &self,
+        q: &[f32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        tau: f64,
+        out: &mut Vec<(u32, f64)>,
+        scratch: &mut KernelScratch,
+    ) -> u64 {
+        with_filtered_sel(scratch, sel, |scratch, sel| {
+            self.scan_range_unfiltered(q, s, sel, tau, out, scratch)
+        })
+    }
+}
+
 // --- exact scan plumbing (shared by all backends) --------------------------
+
+/// Resolve the scratch's armed id filter before running a scan body: with
+/// no filter armed, `f` runs on `sel` unchanged; otherwise admitted
+/// positions are staged as an explicit gather (absolute store rows +
+/// report ids) and `f` scans only those — denied rows never reach an
+/// exact or quantized evaluation, and every backend shares this one
+/// resolution path.
+fn with_filtered_sel<R>(
+    scratch: &mut KernelScratch,
+    sel: RowSel<'_>,
+    f: impl FnOnce(&mut KernelScratch, RowSel<'_>) -> R,
+) -> R {
+    match scratch.stage_filtered(&sel) {
+        None => f(scratch, sel),
+        Some((rows, ids)) => {
+            let out = f(scratch, RowSel::Gather { rows: &rows, base: 0, report: Some(&ids) });
+            scratch.restore_filter_bufs((rows, ids));
+            out
+        }
+    }
+}
 
 fn exact_topk(
     isa: Isa,

@@ -37,8 +37,8 @@ use crate::index::KnnHeap;
 use crate::metrics::DenseVec;
 
 pub use kernels::{
-    backend_for, default_kernel, KernelBackend, KernelCounters, KernelKind, KernelScratch,
-    QuantSidecar, QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
+    backend_for, default_kernel, FilterMode, KernelBackend, KernelCounters, KernelKind,
+    KernelScratch, QuantSidecar, QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
 };
 pub use kernels::{QUANT_MAX_DIM, QUANT_MIN_ROWS};
 
@@ -112,11 +112,20 @@ pub struct CorpusStore {
     /// ([`CorpusStore::warm_quant_sidecar`]); scans only read it, so plain
     /// constructors stay O(1) and never-warmed stores scan exactly.
     quant: Arc<OnceLock<QuantSidecar>>,
+    /// Lazily built per-request override backends (ADR-005), one slot per
+    /// [`KernelKind`], shared by every clone so each override kind keeps
+    /// one stable set of counters per served corpus.
+    alt: Arc<[OnceLock<Arc<dyn KernelBackend>>; 3]>,
 }
 
 impl CorpusStore {
     fn attach(inner: Arc<StoreInner>, kernel: Arc<dyn KernelBackend>) -> Self {
-        CorpusStore { inner, kernel, quant: Arc::new(OnceLock::new()) }
+        CorpusStore {
+            inner,
+            kernel,
+            quant: Arc::new(OnceLock::new()),
+            alt: Arc::new([OnceLock::new(), OnceLock::new(), OnceLock::new()]),
+        }
     }
 
     /// Adopt a row-major buffer whose rows are already unit-norm (or
@@ -196,6 +205,25 @@ impl CorpusStore {
 
     pub fn kernel_kind(&self) -> KernelKind {
         self.kernel.kind()
+    }
+
+    /// The backend a per-request kernel override resolves to (ADR-005):
+    /// the primary backend when `kind` matches it, otherwise a lazily
+    /// built per-store instance of `kind` (with its own counters). Exact
+    /// kinds always scan correctly; an i8 override on a store without a
+    /// sidecar degrades to exact scans inside the quantized backend — the
+    /// coordinator rejects that combination up front with
+    /// `KernelUnavailable` so it never reaches a scan in serving.
+    pub fn kernel_for(&self, kind: KernelKind) -> Arc<dyn KernelBackend> {
+        if kind == self.kernel.kind() {
+            return self.kernel.clone();
+        }
+        let slot = match kind {
+            KernelKind::Scalar => &self.alt[0],
+            KernelKind::Simd => &self.alt[1],
+            KernelKind::QuantizedI8 => &self.alt[2],
+        };
+        slot.get_or_init(|| backend_for(kind)).clone()
     }
 
     /// Build the i8 sidecar now. A no-op (returning `None`) unless the
@@ -448,6 +476,15 @@ impl CorpusView {
         StoreRef { flat: store.flat(), d: store.dim(), quant: store.quant_sidecar() }
     }
 
+    /// The backend this scan dispatches through: the scratch's per-request
+    /// override when armed (ADR-005), else the store's primary backend.
+    fn scan_kernel(&self, scratch: &KernelScratch) -> Arc<dyn KernelBackend> {
+        match scratch.kernel_override() {
+            Some(kind) => self.store.kernel_for(kind),
+            None => self.store.kernel.clone(),
+        }
+    }
+
     fn check_query(&self, q: &[f32]) {
         assert_eq!(
             q.len(),
@@ -546,14 +583,15 @@ impl CorpusView {
             return 0;
         }
         let s = self.store_ref();
+        let kernel = self.scan_kernel(scratch);
         match &self.sel {
             Selection::Rows(lo, hi) => {
                 let sel = RowSel::Block { start: *lo, n: *hi - *lo };
-                self.store.kernel.scan_topk(q, s, sel, heap, scratch)
+                kernel.scan_topk(q, s, sel, heap, scratch)
             }
             Selection::Ids(sel) => {
                 let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
-                self.store.kernel.scan_topk(q, s, gather, heap, scratch)
+                kernel.scan_topk(q, s, gather, heap, scratch)
             }
         }
     }
@@ -578,14 +616,15 @@ impl CorpusView {
             return 0;
         }
         let s = self.store_ref();
+        let kernel = self.scan_kernel(scratch);
         match &self.sel {
             Selection::Rows(lo, hi) => {
                 let sel = RowSel::Block { start: *lo, n: *hi - *lo };
-                self.store.kernel.scan_range(q, s, sel, tau, out, scratch)
+                kernel.scan_range(q, s, sel, tau, out, scratch)
             }
             Selection::Ids(sel) => {
                 let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
-                self.store.kernel.scan_range(q, s, gather, tau, out, scratch)
+                kernel.scan_range(q, s, gather, tau, out, scratch)
             }
         }
     }
@@ -612,10 +651,11 @@ impl CorpusView {
             return 0;
         }
         let s = self.store_ref();
+        let kernel = self.scan_kernel(scratch);
         let (mapped, base) = self.resolve_locals(locals);
         let rows = mapped.as_deref().unwrap_or(locals);
         let gather = RowSel::Gather { rows, base, report: Some(locals) };
-        self.store.kernel.scan_topk(q, s, gather, heap, scratch)
+        kernel.scan_topk(q, s, gather, heap, scratch)
     }
 
     /// Blocked id-list range scan (leaf buckets). Returns exact evals.
@@ -644,10 +684,11 @@ impl CorpusView {
             return 0;
         }
         let s = self.store_ref();
+        let kernel = self.scan_kernel(scratch);
         let (mapped, base) = self.resolve_locals(locals);
         let rows = mapped.as_deref().unwrap_or(locals);
         let gather = RowSel::Gather { rows, base, report: Some(locals) };
-        self.store.kernel.scan_range(q, s, gather, tau, out, scratch)
+        kernel.scan_range(q, s, gather, tau, out, scratch)
     }
 }
 

@@ -10,6 +10,12 @@ use std::fmt::Write as _;
 
 use anyhow::{anyhow, bail, Result};
 
+/// First integer a JSON double can no longer represent unambiguously
+/// (2^53: a sender's 2^53+1 rounds to it). The one source of truth for
+/// the wire id range: [`Json::as_u64`] rejects ids at or above it on
+/// parse, and the protocol client refuses to serialize them.
+pub const MAX_EXACT_JSON_INT: u64 = 1 << 53;
+
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -60,6 +66,23 @@ impl Json {
             bail!("expected non-negative integer, got {v}");
         }
         Ok(v as usize)
+    }
+
+    /// Parse a `u64` id directly — NOT via `as_usize` (which would
+    /// silently truncate above `usize::MAX` on 32-bit targets). JSON
+    /// numbers are f64, so integers above [`MAX_EXACT_JSON_INT`] are not
+    /// exactly representable; values **at or above** the boundary are
+    /// rejected rather than silently rounded — 2^53 itself is ambiguous,
+    /// because a sender's 2^53+1 arrives as exactly 2^53.
+    pub fn as_u64(&self) -> Result<u64> {
+        let v = self.as_f64()?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("expected non-negative integer, got {v}");
+        }
+        if v >= MAX_EXACT_JSON_INT as f64 {
+            bail!("integer {v} is not exactly representable in JSON (>= 2^53)");
+        }
+        Ok(v as u64)
     }
 
     pub fn as_i64(&self) -> Result<i64> {

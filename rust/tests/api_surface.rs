@@ -1,0 +1,100 @@
+//! Public-API surface snapshot (ADR-005 satellite): the compat layer the
+//! search redesign promised must keep existing. This file is a
+//! compile-time contract — if a future refactor drops or re-types one of
+//! the legacy shim signatures (`knn` / `knn_into` / `range` / `range_into`
+//! / `knn_batch` / `range_batch`, the layer-level `*_ctx` pairs, or the
+//! wire ops), this test stops compiling instead of silently breaking
+//! downstream users. Paired with the CI `cargo doc` warnings-as-errors
+//! step, which catches broken intra-doc links to renamed items.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::{Coordinator, CoordinatorConfig, Hit, Request, SearchResult, Shard};
+use simetra::data::uniform_sphere;
+use simetra::error::SimetraError;
+use simetra::index::{LinearScan, QueryStats, SimilarityIndex, VpTree};
+use simetra::ingest::IngestCorpus;
+use simetra::metrics::DenseVec;
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
+
+/// The full legacy `SimilarityIndex` shim surface, exercised generically:
+/// any index must expose every pre-redesign entry point as a provided
+/// method over `search_into`.
+fn legacy_index_surface<I: SimilarityIndex<DenseVec> + ?Sized>(index: &I, q: &DenseVec) {
+    let mut stats = QueryStats::default();
+    let _hits: Vec<(u32, f64)> = index.knn(q, 3, &mut stats);
+    let _hits: Vec<(u32, f64)> = index.range(q, 0.5, &mut stats);
+
+    let mut ctx = QueryContext::new();
+    let mut out: Vec<(u32, f64)> = Vec::new();
+    ctx.begin_query();
+    index.knn_into(q, 3, &mut ctx, &mut out);
+    ctx.begin_query();
+    index.range_into(q, 0.5, &mut ctx, &mut out);
+
+    let queries = vec![q.clone()];
+    let _batch: Vec<(Vec<(u32, f64)>, QueryStats)> = index.knn_batch(&queries, 3, &mut ctx);
+    let _batch: Vec<(Vec<(u32, f64)>, QueryStats)> = index.range_batch(&queries, 0.5, &mut ctx);
+
+    // And the one required entry point itself.
+    let mut resp = SearchResponse::default();
+    ctx.begin_query();
+    index.search_into(q, &SearchRequest::knn(3).build(), &mut ctx, &mut resp);
+    let _resp: SearchResponse = index.search(q, &SearchRequest::range(0.5).build());
+
+    let _n: usize = index.len();
+    let _name: &'static str = index.name();
+}
+
+#[test]
+fn similarity_index_legacy_shims_still_exist() {
+    let pts = uniform_sphere(64, 8, 1);
+    let q = pts[0].clone();
+    legacy_index_surface(&LinearScan::build(pts.clone()), &q);
+    legacy_index_surface(&VpTree::build(pts.clone(), BoundKind::Mult, 1), &q);
+    // Trait-object form (the coordinator's shape) keeps working too.
+    let boxed: Box<dyn SimilarityIndex<DenseVec>> = Box::new(LinearScan::build(pts));
+    legacy_index_surface(boxed.as_ref(), &q);
+}
+
+#[test]
+fn coordinator_and_shard_surfaces_are_stable() {
+    // Signature pins (compile-time): the request-path methods and their
+    // typed error, plus the shard-level pair of shims.
+    let _: fn(&Coordinator, Vec<f32>, usize) -> Result<(Vec<Hit>, u64), SimetraError> =
+        Coordinator::knn;
+    let _: fn(&Coordinator, Vec<f32>, f64) -> Result<(Vec<Hit>, u64), SimetraError> =
+        Coordinator::range;
+    let _: fn(&Coordinator, Vec<f32>, SearchRequest) -> Result<SearchResult, SimetraError> =
+        Coordinator::search;
+    let _: fn(&Coordinator, Vec<f32>) -> Result<u64, SimetraError> = Coordinator::insert;
+    let _: fn(&Coordinator, u64) -> Result<bool, SimetraError> = Coordinator::delete;
+
+    let _: fn(&Shard, &DenseVec, usize, &mut QueryContext) -> (Vec<(u32, f64)>, QueryStats) =
+        Shard::knn_ctx;
+    let _: fn(&Shard, &DenseVec, f64, &mut QueryContext) -> (Vec<(u32, f64)>, QueryStats) =
+        Shard::range_ctx;
+
+    let _: fn(&IngestCorpus, &DenseVec, usize) -> (Vec<(u64, f64)>, u64) = IngestCorpus::knn;
+    let _: fn(&IngestCorpus, &DenseVec, f64) -> (Vec<(u64, f64)>, u64) = IngestCorpus::range;
+}
+
+#[test]
+fn wire_ops_are_stable() {
+    // The legacy wire ops and the versioned search op all keep parsing.
+    let lines = [
+        r#"{"op": "knn", "vector": [1.0], "k": 3}"#,
+        r#"{"op": "range", "vector": [1.0], "tau": 0.5}"#,
+        r#"{"op": "search", "v": 1, "vector": [1.0], "mode": "knn", "k": 3}"#,
+        r#"{"op": "insert", "vector": [1.0]}"#,
+        r#"{"op": "delete", "id": 7}"#,
+        r#"{"op": "flush"}"#,
+        r#"{"op": "compact"}"#,
+        r#"{"op": "stats"}"#,
+        r#"{"op": "config"}"#,
+        r#"{"op": "ping"}"#,
+    ];
+    for line in lines {
+        assert!(Request::parse(line).is_ok(), "{line}");
+    }
+    let _ = CoordinatorConfig::default();
+}

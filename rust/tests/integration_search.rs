@@ -1,0 +1,551 @@
+//! The one-search-surface contracts (ADR-005):
+//!
+//!  1. `search(Knn)` is bitwise-equal to the legacy `knn` path across all
+//!     7 indexes × 3 kernels × static / sharded / mutable corpora (the
+//!     legacy entry points are shims over `search_into`, and both must be
+//!     byte-identical to the pre-redesign results the exactness suite
+//!     pins to the linear scan).
+//!  2. `KnnWithin { k, tau }` equals post-filtered `Knn { k }`, bitwise.
+//!  3. A filtered search never spends an exact evaluation on a denied row
+//!     (kernel counters prove it) and equals the brute-force oracle over
+//!     the admitted subset.
+//!  4. A `sim_evals` budget always sets the `truncated` flag when it
+//!     stops a traversal, and the partial result is exact over the
+//!     evaluated subset; a generous budget changes nothing.
+//!  5. Steady-state `search_into` calls — plain, within, and filtered —
+//!     allocate zero heap memory (counting global allocator).
+//!  6. The wire `search` op round-trips and serves results byte-identical
+//!     to the legacy `knn`/`range` ops; typed error codes come back on
+//!     the error envelope.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::router::build_shards;
+use simetra::coordinator::{
+    server, Coordinator, CoordinatorConfig, IndexKind, Request, Response,
+};
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::{LinearScan, QueryStats, SimilarityIndex};
+use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::metrics::DenseVec;
+use simetra::query::{QueryContext, SearchRequest};
+use simetra::storage::{CorpusStore, KernelKind};
+
+// --- counting allocator (thread-local; see integration_query.rs) -----------
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn note(&self) {
+        let _ = COUNTING.try_with(|c| {
+            if c.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.note();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    COUNTING.with(|c| c.set(true));
+    ALLOCS.with(|a| a.set(0));
+    f();
+    COUNTING.with(|c| c.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+// --- helpers ---------------------------------------------------------------
+
+const ALL_KINDS: [IndexKind; 7] = [
+    IndexKind::Linear,
+    IndexKind::Vp,
+    IndexKind::Ball,
+    IndexKind::MTree,
+    IndexKind::Cover,
+    IndexKind::Laesa,
+    IndexKind::Gnat,
+];
+
+const ALL_KERNELS: [KernelKind; 3] =
+    [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8];
+
+fn assert_bits_eq(a: &[(u32, f64)], b: &[(u32, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ ({} vs {})", a.len(), b.len());
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+// --- 1. search(Knn/Range) == legacy knn/range, every index × kernel --------
+
+#[test]
+fn search_matches_legacy_bitwise_across_indexes_and_kernels() {
+    let rows = uniform_sphere(1200, 16, 4242);
+    let queries: Vec<DenseVec> = uniform_sphere(6, 16, 4243);
+    for kernel in ALL_KERNELS {
+        let store = CorpusStore::from_rows(rows.clone()).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let what = format!("{} / {}", kind.name(), kernel.name());
+            for q in &queries {
+                let mut st = QueryStats::default();
+                let legacy = index.knn(q, 9, &mut st);
+                let resp = index.search(q, &SearchRequest::knn(9).build());
+                assert_bits_eq(&legacy, &resp.hits, &format!("{what} knn"));
+                assert!(!resp.truncated);
+                assert_eq!(st.sim_evals, resp.stats.sim_evals, "{what} knn evals");
+
+                let legacy = index.range(q, 0.2, &mut st);
+                let resp = index.search(q, &SearchRequest::range(0.2).build());
+                assert_bits_eq(&legacy, &resp.hits, &format!("{what} range"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_and_mutable_search_matches_legacy() {
+    // Sharded: every shard answers search(Knn) == knn_ctx bitwise.
+    let store = uniform_sphere_store(900, 12, 77);
+    let shards = build_shards(&store, 3, IndexKind::Vp, BoundKind::Mult, 0);
+    let queries: Vec<DenseVec> = uniform_sphere(4, 12, 78);
+    for shard in &shards {
+        let mut ctx = QueryContext::new();
+        for q in &queries {
+            let (legacy, _) = shard.knn_ctx(q, 5, &mut ctx);
+            let req = SearchRequest::knn(5).build();
+            let (hits, _, truncated) = shard.search_ctx(q, &req, &mut ctx);
+            assert_bits_eq(&legacy, &hits, "shard knn");
+            assert!(!truncated);
+        }
+    }
+
+    // Mutable: search over the generation fan-out == legacy knn/range.
+    let cfg = IngestConfig { seal_threshold: 300, background: false, ..IngestConfig::new(12) };
+    let corpus = IngestCorpus::new(cfg).unwrap();
+    let rows = uniform_sphere(700, 12, 79);
+    for r in &rows {
+        corpus.insert(r.as_slice().to_vec()).unwrap();
+    }
+    for id in (0..700u64).step_by(111) {
+        assert!(corpus.delete(id));
+    }
+    let mut ctx = QueryContext::new();
+    let mut legacy = Vec::new();
+    let mut new = Vec::new();
+    for q in &queries {
+        let e1 = corpus.knn_ctx(q, 8, &mut ctx, &mut legacy);
+        let (e2, truncated) =
+            corpus.search_ctx(q, &SearchRequest::knn(8).build(), &mut ctx, &mut new);
+        assert_eq!(legacy, new, "mutable knn");
+        assert_eq!(e1, e2);
+        assert!(!truncated);
+
+        let e1 = corpus.range_ctx(q, 0.15, &mut ctx, &mut legacy);
+        let (e2, _) = corpus.search_ctx(q, &SearchRequest::range(0.15).build(), &mut ctx, &mut new);
+        assert_eq!(legacy, new, "mutable range");
+        assert_eq!(e1, e2);
+    }
+}
+
+// --- 2. KnnWithin == post-filtered Knn -------------------------------------
+
+#[test]
+fn knn_within_equals_post_filtered_knn() {
+    let rows = uniform_sphere(1200, 16, 555);
+    let queries: Vec<DenseVec> = uniform_sphere(5, 16, 556);
+    for kernel in [KernelKind::Scalar, KernelKind::QuantizedI8] {
+        let store = CorpusStore::from_rows(rows.clone()).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            for q in &queries {
+                for tau in [-0.5, 0.05, 0.3, 0.99] {
+                    let plain = index.search(q, &SearchRequest::knn(10).build());
+                    let want: Vec<(u32, f64)> =
+                        plain.hits.iter().copied().filter(|&(_, s)| s >= tau).collect();
+                    let within = index.search(q, &SearchRequest::knn(10).within(tau).build());
+                    assert_bits_eq(
+                        &want,
+                        &within.hits,
+                        &format!("{} / {} tau={tau}", kind.name(), kernel.name()),
+                    );
+                    // The restricted traversal never spends more.
+                    assert!(
+                        within.stats.sim_evals <= plain.stats.sim_evals,
+                        "{}: within spent more evals than plain knn",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --- 3. filters: denied rows cost nothing, results match the oracle --------
+
+#[test]
+fn filtered_search_matches_oracle_and_skips_denied_rows() {
+    let rows = uniform_sphere(1500, 12, 91);
+    let queries: Vec<DenseVec> = uniform_sphere(4, 12, 92);
+    let allow: Vec<u64> = (0..1500u64).filter(|id| id % 3 == 0).collect();
+    let deny: Vec<u64> = (0..1500u64).filter(|id| id % 4 == 1).collect();
+
+    for kernel in ALL_KERNELS {
+        let store = CorpusStore::from_rows(rows.clone()).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let what = format!("{} / {}", kind.name(), kernel.name());
+            for q in &queries {
+                // Oracle: exhaustive scan post-filtered to the admitted set.
+                let full = index.search(q, &SearchRequest::knn(1500).build());
+                let top_allowed = |admit: &dyn Fn(u64) -> bool, k: usize| -> Vec<(u32, f64)> {
+                    full.hits
+                        .iter()
+                        .copied()
+                        .filter(|&(id, _)| admit(id as u64))
+                        .take(k)
+                        .collect()
+                };
+                let admit_allow = |id: u64| allow.binary_search(&id).is_ok();
+                let admit_deny = |id: u64| deny.binary_search(&id).is_err();
+
+                let got = index.search(q, &SearchRequest::knn(7).allow(allow.clone()).build());
+                assert_bits_eq(&top_allowed(&admit_allow, 7), &got.hits, &format!("{what} allow"));
+
+                let got = index.search(q, &SearchRequest::knn(7).deny(deny.clone()).build());
+                assert_bits_eq(&top_allowed(&admit_deny, 7), &got.hits, &format!("{what} deny"));
+
+                // Range under a deny filter: no denied id ever surfaces.
+                let got = index.search(q, &SearchRequest::range(0.1).deny(deny.clone()).build());
+                assert!(
+                    got.hits.iter().all(|&(id, _)| admit_deny(id as u64)),
+                    "{what}: denied id in range results"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn filtered_linear_scan_never_evaluates_denied_rows_counter_asserted() {
+    // LinearScan evaluates exactly the admitted rows — provable from the
+    // kernel's own counters (blocked_scan_rows counts rows that reached
+    // an exact evaluation) and from the per-query eval count.
+    let store = uniform_sphere_store(2000, 8, 93);
+    let index = LinearScan::build(store.view());
+    let q = store.vec(0);
+    let allow: Vec<u64> = (0..2000u64).filter(|id| id % 10 == 0).collect(); // 200 rows
+
+    let before = store.kernel().counters().blocked_scan_rows();
+    let resp = index.search(&q, &SearchRequest::knn(5).allow(allow.clone()).build());
+    let after = store.kernel().counters().blocked_scan_rows();
+
+    assert_eq!(resp.stats.sim_evals, allow.len() as u64, "evals != admitted rows");
+    assert_eq!(after - before, allow.len() as u64, "kernel scanned a denied row");
+    assert!(resp.hits.iter().all(|&(id, _)| id % 10 == 0));
+
+    // Same through the i8 pre-filter: denied rows neither pre-filtered
+    // nor re-ranked.
+    let store = uniform_sphere_store(2000, 8, 93).with_kernel(KernelKind::QuantizedI8);
+    assert!(store.quant_sidecar().is_some());
+    let index = LinearScan::build(store.view());
+    let before = store.kernel().counters().quant_prefilter_rows();
+    let resp = index.search(&q, &SearchRequest::knn(5).allow(allow.clone()).build());
+    let after = store.kernel().counters().quant_prefilter_rows();
+    assert_eq!(after - before, allow.len() as u64, "i8 pre-filtered a denied row");
+    assert!(resp.stats.sim_evals <= allow.len() as u64);
+}
+
+// --- 4. budgets ------------------------------------------------------------
+
+#[test]
+fn budget_truncation_always_sets_the_flag() {
+    let store = uniform_sphere_store(2000, 8, 94);
+    let q = store.vec(17);
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let free = index.search(&q, &SearchRequest::knn(10).build());
+        assert!(!free.truncated, "{}: unbudgeted search claimed truncation", kind.name());
+
+        // A generous budget changes nothing.
+        let roomy = index.search(&q, &SearchRequest::knn(10).budget(1_000_000).build());
+        assert!(!roomy.truncated, "{}", kind.name());
+        assert_bits_eq(&free.hits, &roomy.hits, &format!("{} roomy budget", kind.name()));
+
+        // A starving budget must truncate (every index spends >= 1 eval
+        // per item it returns, so 3 evals cannot finish 2000 rows).
+        let starved = index.search(&q, &SearchRequest::knn(10).budget(3).build());
+        assert!(starved.truncated, "{}: budget 3 did not truncate", kind.name());
+        assert!(
+            starved.stats.sim_evals < free.stats.sim_evals,
+            "{}: budget did not reduce work",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn budgeted_partial_results_are_exact_over_the_evaluated_subset() {
+    // Linear scans chunk deterministically front-to-back, so a budget of
+    // ~b rows returns the true top-k of the first ceil(b/1024)*1024 rows.
+    let store = uniform_sphere_store(4096, 8, 95);
+    let q = store.vec(1);
+    let index = LinearScan::build(store.view());
+    let resp = index.search(&q, &SearchRequest::knn(5).budget(2048).build());
+    assert!(resp.truncated);
+    assert_eq!(resp.stats.sim_evals, 2048);
+    let prefix = LinearScan::build(store.slice(0..2048));
+    let mut st = QueryStats::default();
+    let want = prefix.knn(&q, 5, &mut st);
+    assert_bits_eq(&want, &resp.hits, "budgeted linear prefix");
+}
+
+#[test]
+fn budget_truncates_mutable_corpora_including_the_memtable() {
+    // Regression: the memtable path must honor the budget even though
+    // each generation's search_into disarms the plan at its exit — and
+    // a memtable-only corpus (nothing sealed yet) must truncate too.
+    let cfg = IngestConfig { seal_threshold: 100_000, background: false, ..IngestConfig::new(8) };
+    let corpus = IngestCorpus::new(cfg).unwrap();
+    let rows = uniform_sphere(3000, 8, 101);
+    for r in &rows {
+        corpus.insert(r.as_slice().to_vec()).unwrap();
+    }
+    assert_eq!(corpus.stats().generations, 0, "memtable-only by construction");
+    let mut ctx = QueryContext::new();
+    let mut out = Vec::new();
+    let (evals, truncated) =
+        corpus.search_ctx(&rows[0], &SearchRequest::knn(5).budget(3).build(), &mut ctx, &mut out);
+    assert!(truncated, "memtable-only budget ignored");
+    assert!(evals < 3000, "budget did not reduce memtable work (spent {evals})");
+
+    // Sealed generations + staged memtable: still truncates, still exact
+    // over what was evaluated; a generous budget changes nothing.
+    corpus.flush();
+    for r in &rows[..50] {
+        corpus.insert(r.as_slice().to_vec()).unwrap();
+    }
+    let (_, truncated) =
+        corpus.search_ctx(&rows[1], &SearchRequest::knn(5).budget(3).build(), &mut ctx, &mut out);
+    assert!(truncated);
+    let mut free = Vec::new();
+    corpus.knn_ctx(&rows[1], 5, &mut ctx, &mut free);
+    let (_, truncated) = corpus.search_ctx(
+        &rows[1],
+        &SearchRequest::knn(5).budget(10_000_000).build(),
+        &mut ctx,
+        &mut out,
+    );
+    assert!(!truncated);
+    assert_eq!(out, free, "roomy budget changed mutable results");
+}
+
+// --- 5. zero allocations in the steady state -------------------------------
+
+#[test]
+fn steady_state_search_allocates_nothing() {
+    let store = uniform_sphere_store(2048, 16, 96);
+    let allow: Vec<u64> = (0..2048u64).step_by(2).collect();
+    let reqs = [
+        SearchRequest::knn(10).build(),
+        SearchRequest::range(0.2).build(),
+        SearchRequest::knn(10).within(0.1).build(),
+        SearchRequest::knn(10).allow(allow).build(),
+    ];
+    let queries: Vec<DenseVec> = (0..4usize).map(|i| store.vec(i * 500)).collect();
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let mut ctx = QueryContext::new();
+        let mut resp = simetra::query::SearchResponse::default();
+        let mut run = |ctx: &mut QueryContext, resp: &mut simetra::query::SearchResponse| {
+            for q in &queries {
+                for req in &reqs {
+                    ctx.begin_query();
+                    index.search_into(q, req, ctx, resp);
+                }
+            }
+        };
+        run(&mut ctx, &mut resp);
+        run(&mut ctx, &mut resp);
+        let allocs = count_allocs(|| run(&mut ctx, &mut resp));
+        assert_eq!(allocs, 0, "steady-state {} allocated {} times", kind.name(), allocs);
+    }
+}
+
+// --- 6. wire surface -------------------------------------------------------
+
+#[test]
+fn wire_search_serves_byte_identical_results_to_legacy_ops() {
+    let pts = uniform_sphere(400, 8, 97);
+    let coord = Coordinator::new(
+        pts.clone(),
+        CoordinatorConfig { n_shards: 2, ..CoordinatorConfig::default() },
+    )
+    .unwrap();
+    let handle = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = server::Client::connect(handle.addr()).unwrap();
+
+    for qi in [0usize, 123, 399] {
+        let v = pts[qi].as_slice().to_vec();
+        // Legacy knn op vs search op with a plain knn plan: same bytes.
+        let legacy = client.knn(v.clone(), 6).unwrap();
+        let new = client.search(v.clone(), SearchRequest::knn(6).build()).unwrap();
+        assert_eq!(legacy.len(), new.hits.len());
+        for (a, b) in legacy.iter().zip(&new.hits) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        assert!(!new.truncated);
+        assert!(new.nodes_visited > 0);
+
+        // Legacy range op vs plain range plan.
+        let range_req = Request::Range { vector: v.clone(), tau: 0.3 };
+        let legacy = match client.request(&range_req).unwrap() {
+            Response::Ok { hits, .. } => hits,
+            other => panic!("{other:?}"),
+        };
+        let new = client.search(v.clone(), SearchRequest::range(0.3).build()).unwrap();
+        assert_eq!(legacy, new.hits);
+
+        // KnnWithin over the wire == post-filtered knn.
+        let within = client.search(v.clone(), SearchRequest::knn(6).within(0.3).build()).unwrap();
+        let want: Vec<_> = new.hits.iter().filter(|h| h.score >= 0.3).take(6).collect();
+        assert_eq!(within.hits.len(), want.len());
+
+        // Budgeted search over the wire reports truncation.
+        let starved = client.search(v.clone(), SearchRequest::knn(6).budget(1).build()).unwrap();
+        assert!(starved.truncated);
+
+        // Filtered search over the wire never returns a denied id.
+        let deny: Vec<u64> = (0..400).step_by(2).collect();
+        let filtered = client.search(v, SearchRequest::knn(6).deny(deny).build()).unwrap();
+        assert!(filtered.hits.iter().all(|h| h.id % 2 == 1));
+    }
+}
+
+#[test]
+fn wire_errors_carry_typed_codes() {
+    let pts = uniform_sphere(100, 8, 98);
+    let coord = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+    let handle = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = server::Client::connect(handle.addr()).unwrap();
+
+    // Wrong dimension -> dim_mismatch, faithfully reconstructed client
+    // side (structured fields rebuilt from the stable wire message).
+    let err = client
+        .search_checked(vec![1.0; 3], SearchRequest::knn(3).build())
+        .unwrap_err();
+    assert_eq!(err.code(), "dim_mismatch");
+    assert_eq!(err, simetra::SimetraError::DimMismatch { got: 3, want: 8 });
+    assert!(err.to_string().contains("dimension"));
+    match client
+        .request(&Request::Search { vector: vec![1.0; 3], req: SearchRequest::knn(3).build() })
+        .unwrap()
+    {
+        Response::Error { code, message } => {
+            assert_eq!(code, "dim_mismatch");
+            assert!(message.contains("dimension"));
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // i8 kernel override on a scalar-serving corpus -> kernel_unavailable
+    // (the corpus carries no quantized sidecar).
+    match client
+        .request(&Request::Search {
+            vector: vec![0.0; 8],
+            req: SearchRequest::knn(3).kernel(KernelKind::QuantizedI8).build(),
+        })
+        .unwrap()
+    {
+        Response::Error { code, .. } => assert_eq!(code, "kernel_unavailable"),
+        // Under SIMETRA_KERNEL=i8 the corpus *does* carry a sidecar and
+        // the override is legitimately available.
+        Response::Search(_) => {
+            assert_eq!(simetra::storage::default_kernel(), KernelKind::QuantizedI8)
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // k = 0 -> bad_request.
+    match client
+        .request(&Request::Search { vector: vec![0.0; 8], req: SearchRequest::knn(0).build() })
+        .unwrap()
+    {
+        Response::Error { code, .. } => assert_eq!(code, "bad_request"),
+        other => panic!("{other:?}"),
+    }
+
+    // Unknown op -> unknown_op.
+    match client.request_raw(b"{\"op\": \"teleport\"}\n").unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, "unknown_op"),
+        other => panic!("{other:?}"),
+    }
+
+    // Filter ids a JSON double cannot carry exactly are rejected client
+    // side instead of silently rounding to a neighboring id.
+    let huge = (1u64 << 53) + 2;
+    let err = client
+        .search(vec![0.0; 8], SearchRequest::knn(3).deny(vec![huge]).build())
+        .unwrap_err();
+    assert!(err.to_string().contains("2^53"), "{err}");
+}
+
+#[test]
+fn bound_and_kernel_overrides_return_identical_results() {
+    // Every bound is exact; kernels are byte-identical: overrides may only
+    // change evaluation counts, never results.
+    let store = uniform_sphere_store(1100, 8, 99);
+    let q = store.vec(3);
+    for kind in [IndexKind::Vp, IndexKind::MTree, IndexKind::Laesa] {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let base = index.search(&q, &SearchRequest::knn(8).build());
+        for bound in BoundKind::ALL {
+            let got = index.search(&q, &SearchRequest::knn(8).bound(bound).build());
+            assert_bits_eq(
+                &base.hits,
+                &got.hits,
+                &format!("{} bound={}", kind.name(), bound.name()),
+            );
+        }
+        for kernel in [KernelKind::Scalar, KernelKind::Simd] {
+            let got = index.search(&q, &SearchRequest::knn(8).kernel(kernel).build());
+            assert_bits_eq(
+                &base.hits,
+                &got.hits,
+                &format!("{} kernel={}", kind.name(), kernel.name()),
+            );
+        }
+    }
+}
