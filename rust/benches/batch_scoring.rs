@@ -1,9 +1,11 @@
 //! Batch-scoring bench, two layers:
 //!
-//! 1. Native (always runs): the `CorpusStore` blocked kernels
-//!    (`scan_topk` / `scan_range`) vs the per-item `DenseVec::dot` loop on
-//!    the same corpus — the cache-layout + query-reuse win the storage
-//!    refactor exists for, measured on a serving-sized 100k x 128 corpus.
+//! 1. Native (always runs): the real serving path — a whole query batch
+//!    through `search_batch_into` (ADR-006 multi-query traversal, the
+//!    (query-block × row-block) `sim_block_multi` kernels) vs the same
+//!    batch as per-query descents through `search_into`, on a
+//!    serving-sized 100k x 128 corpus. This measures what the coordinator
+//!    actually runs, not a hand-rolled scoring loop.
 //! 2. PJRT (skipped with a note when artifacts/ or the `pjrt` feature is
 //!    missing): batched artifact scoring vs the native scalar loop, plus
 //!    the pivot_filter artifact.
@@ -14,60 +16,60 @@
 //!     make artifacts && cargo bench --bench batch_scoring --features pjrt
 
 use simetra::data::{uniform_sphere, uniform_sphere_store};
-use simetra::index::KnnHeap;
+use simetra::index::{KnnHeap, LinearScan, SimilarityIndex};
 use simetra::metrics::{DenseVec, SimVector};
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
 use simetra::runtime::Engine;
 use simetra::storage::CorpusStore;
 use simetra::util::bench::{bench, black_box, report, BenchConfig};
 
-fn native_blocked_vs_per_item(cfg: &BenchConfig) {
-    println!("== native: blocked CorpusStore kernels vs per-item DenseVec::dot ==");
+fn native_multi_vs_per_query(cfg: &BenchConfig) {
+    println!("== native: search_batch_into multi-traversal vs per-query descent ==");
     let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
     let sizes: &[(usize, usize)] =
         if quick { &[(10_000, 128)] } else { &[(10_000, 128), (100_000, 128)] };
     for &(n, d) in sizes {
         let k = 10usize;
+        let q = 16usize;
         let store: CorpusStore = uniform_sphere_store(n, d, 31);
-        // The per-item baseline pays the layout it measures: one heap
-        // allocation per vector, pointer-chased on every scan.
-        let rows: Vec<DenseVec> = (0..n).map(|i| store.vec(i)).collect();
-        let queries = uniform_sphere(16, d, 32);
-        let view = store.view();
+        let index = LinearScan::build(store.view());
+        let queries = uniform_sphere(q, d, 32);
+        let reqs: Vec<SearchRequest> = (0..q).map(|_| SearchRequest::knn(k).build()).collect();
+        let ops = (q * n) as u64; // similarity evaluations per batch
 
-        let ops = n as u64; // similarity evaluations per scan
-        let mut qi = 0usize;
-        let per_item = bench(cfg, &format!("per-item dot n{n} d{d}"), ops, || {
-            qi = (qi + 1) % queries.len();
-            let q = &queries[qi];
-            let mut heap = KnnHeap::new(k);
-            for (i, c) in rows.iter().enumerate() {
-                heap.offer(i as u32, q.sim(c));
+        let mut ctx = QueryContext::new();
+        let mut resps: Vec<SearchResponse> = Vec::new();
+        let multi = bench(cfg, &format!("search_batch_into q{q} n{n} d{d}"), ops, || {
+            index.search_batch_into(&queries, &reqs, &mut ctx, &mut resps);
+            black_box(resps.len())
+        });
+        report(&multi);
+
+        let mut ctx2 = QueryContext::new();
+        let mut resp = SearchResponse::default();
+        let per_query = bench(cfg, &format!("search_into x{q} n{n} d{d}"), ops, || {
+            for (qv, req) in queries.iter().zip(&reqs) {
+                ctx2.begin_query();
+                index.search_into(qv, req, &mut ctx2, &mut resp);
+                black_box(resp.hits.len());
             }
-            black_box(heap.into_sorted())
         });
-        report(&per_item);
-
-        let mut qj = 0usize;
-        let blocked = bench(cfg, &format!("scan_topk blocked n{n} d{d}"), ops, || {
-            qj = (qj + 1) % queries.len();
-            let mut heap = KnnHeap::new(k);
-            view.scan_topk(queries[qj].as_slice(), &mut heap);
-            black_box(heap.into_sorted())
-        });
-        report(&blocked);
+        report(&per_query);
 
         let mut qr = 0usize;
-        let blocked_range = bench(cfg, &format!("scan_range blocked n{n} d{d}"), ops, || {
+        let mut rctx = QueryContext::new();
+        let mut rout: Vec<(u32, f64)> = Vec::new();
+        let blocked_range = bench(cfg, &format!("range_into blocked n{n} d{d}"), n as u64, || {
             qr = (qr + 1) % queries.len();
-            let mut out = Vec::new();
-            view.scan_range(queries[qr].as_slice(), 0.3, &mut out);
-            black_box(out)
+            rctx.begin_query();
+            index.range_into(&queries[qr], 0.3, &mut rctx, &mut rout);
+            black_box(rout.len())
         });
         report(&blocked_range);
 
         println!(
-            "    -> blocked scan_topk is {:.2}x faster than the per-item loop\n",
-            per_item.mean_ns / blocked.mean_ns
+            "    -> multi-traversal batch is {:.2}x vs per-query descent\n",
+            per_query.mean_ns / multi.mean_ns
         );
     }
 }
@@ -168,6 +170,6 @@ fn pjrt_sections(cfg: &BenchConfig) {
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    native_blocked_vs_per_item(&cfg);
+    native_multi_vs_per_query(&cfg);
     pjrt_sections(&cfg);
 }

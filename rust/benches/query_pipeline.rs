@@ -16,6 +16,7 @@ use simetra::coordinator::IndexKind;
 use simetra::data::{uniform_sphere, uniform_sphere_store};
 use simetra::index::{QueryStats, SimilarityIndex};
 use simetra::query::{QueryContext, SearchRequest, SearchResponse};
+use simetra::storage::KernelKind;
 use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig};
 use simetra::util::Json;
 
@@ -75,6 +76,87 @@ fn main() {
                 row.push(("d".into(), Json::Num(d as f64)));
                 row.push(("k".into(), Json::Num(k as f64)));
                 rows.push(Json::Obj(row));
+            }
+        }
+    }
+
+    // --- ADR-006 multi-query traversal: kernel × batch-size sweep ---------
+    //
+    // The shared-frontier path (`search_batch_into`) vs the same plans as
+    // independent per-query descents, per kernel backend. `mean_ns` stays
+    // per query; the emitted rows also carry summed `nodes_visited` so the
+    // "one descent instead of q" claim is tracked as data, not prose.
+    let mkernels: &[KernelKind] = if quick {
+        &[KernelKind::Simd]
+    } else {
+        &[KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8]
+    };
+    let mkinds: &[IndexKind] = if quick {
+        &[IndexKind::Vp]
+    } else {
+        &[IndexKind::Vp, IndexKind::Ball]
+    };
+    let mbatches: &[usize] = if quick { &[1, 16] } else { &[1, 4, 16, 64] };
+    for &kernel in mkernels {
+        let kstore = uniform_sphere_store(n, d, 0x9a17).with_kernel(kernel);
+        for &kind in mkinds {
+            let index = kind.build(kstore.view(), BoundKind::Mult);
+            for &batch in mbatches {
+                let qs = &queries[..batch];
+                let reqs: Vec<SearchRequest> =
+                    (0..batch).map(|_| SearchRequest::knn(k).build()).collect();
+
+                let mut ctx = QueryContext::new();
+                let mut resps: Vec<SearchResponse> = Vec::new();
+                let name = format!("knn_multi {} {} b{batch}", kind.name(), kernel.name());
+                let m_multi = bench(&cfg, &name, batch as u64, || {
+                    index.search_batch_into(qs, &reqs, &mut ctx, &mut resps);
+                    black_box(resps.len())
+                });
+                report(&m_multi);
+                index.search_batch_into(qs, &reqs, &mut ctx, &mut resps);
+                let multi_nodes: u64 = resps.iter().map(|r| r.stats.nodes_visited).sum();
+
+                let mut ctx2 = QueryContext::new();
+                let mut resp = SearchResponse::default();
+                let name = format!("knn_per_query {} {} b{batch}", kind.name(), kernel.name());
+                let m_seq = bench(&cfg, &name, batch as u64, || {
+                    for (q, req) in qs.iter().zip(&reqs) {
+                        ctx2.begin_query();
+                        index.search_into(q, req, &mut ctx2, &mut resp);
+                        black_box(resp.hits.len());
+                    }
+                });
+                report(&m_seq);
+                let mut seq_nodes = 0u64;
+                for (q, req) in qs.iter().zip(&reqs) {
+                    ctx2.begin_query();
+                    index.search_into(q, req, &mut ctx2, &mut resp);
+                    seq_nodes += resp.stats.nodes_visited;
+                }
+                println!(
+                    "    -> multi is {:.2}x vs per-query ({multi_nodes} vs {seq_nodes} nodes)\n",
+                    m_seq.mean_ns / m_multi.mean_ns
+                );
+
+                for (m, path, nodes) in [
+                    (&m_multi, "multi", multi_nodes),
+                    (&m_seq, "per_query", seq_nodes),
+                ] {
+                    let mut row = match m.to_json() {
+                        Json::Obj(fields) => fields,
+                        _ => unreachable!("to_json returns an object"),
+                    };
+                    row.push(("index".into(), Json::Str(kind.name().into())));
+                    row.push(("kernel".into(), Json::Str(kernel.name().into())));
+                    row.push(("path".into(), Json::Str(path.into())));
+                    row.push(("batch".into(), Json::Num(batch as f64)));
+                    row.push(("nodes_visited".into(), Json::Num(nodes as f64)));
+                    row.push(("n".into(), Json::Num(n as f64)));
+                    row.push(("d".into(), Json::Num(d as f64)));
+                    row.push(("k".into(), Json::Num(k as f64)));
+                    rows.push(Json::Obj(row));
+                }
             }
         }
     }

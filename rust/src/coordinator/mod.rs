@@ -104,47 +104,13 @@ struct ShardWorker {
     tx: std::sync::mpsc::Sender<ShardJob>,
 }
 
-/// The one `k` shared by every query of the batch, when the whole batch is
-/// *plain* kNN at one `k` — the common shape, served through the batched
-/// index API. Any per-request option opts the batch out.
-fn uniform_knn_k(queries: &[Query]) -> Option<usize> {
-    let mut k0 = None;
-    for q in queries {
-        if !q.req.is_plain() {
-            return None;
-        }
-        match (q.req.mode, k0) {
-            (SearchMode::Knn { k }, None) => k0 = Some(k),
-            (SearchMode::Knn { k }, Some(prev)) if k == prev => {}
-            _ => return None,
-        }
-    }
-    k0
-}
-
-/// The one `tau` shared by every query of an all-plain-range batch (exact
-/// bit match — f64 equality is the right notion for "same threshold").
-fn uniform_range_tau(queries: &[Query]) -> Option<f64> {
-    let mut t0: Option<f64> = None;
-    for q in queries {
-        if !q.req.is_plain() {
-            return None;
-        }
-        match (q.req.mode, t0) {
-            (SearchMode::Range { tau }, None) => t0 = Some(tau),
-            (SearchMode::Range { tau }, Some(prev)) if tau.to_bits() == prev.to_bits() => {}
-            _ => return None,
-        }
-    }
-    t0
-}
-
-/// Execute one batch on a shard through the worker's reusable context:
-/// uniform plain batches run through the batched index API
-/// (`knn_batch`/`range_batch`), everything else per query through
-/// [`Shard::search_ctx`] — either way every query of every batch reuses
-/// the same scratch arena. Aggregates each query's pruning stats into
-/// `agg` and returns per-job answers.
+/// Execute one batch on a shard through the worker's reusable context
+/// (ADR-006): every *plain* plan of the batch — any mode, any `k`/`tau`
+/// mix — rides the index's shared-frontier multi-query traversal in one
+/// call; optioned plans run per query through [`Shard::search_ctx`].
+/// Either way every query of every batch reuses the same scratch arena.
+/// Aggregates each query's pruning stats into `agg` and returns per-job
+/// answers in job order.
 fn run_shard_batch(
     shard: &Shard,
     queries: &[Query],
@@ -152,26 +118,40 @@ fn run_shard_batch(
     ctx: &mut QueryContext,
     agg: &mut QueryStats,
 ) -> Vec<ShardAnswer> {
-    let mut out = Vec::with_capacity(queries.len());
-    let batched = if let Some(k) = uniform_knn_k(queries) {
-        Some(shard.knn_batch(parsed, k, ctx))
-    } else {
-        uniform_range_tau(queries).map(|tau| shard.range_batch(parsed, tau, ctx))
-    };
-    match batched {
-        Some(results) => {
-            for (hits, stats) in results {
-                agg.merge(&stats);
-                out.push((hits, stats, false));
-            }
+    let n = queries.len();
+    let plain: Vec<usize> = (0..n).filter(|&i| queries[i].req.is_plain()).collect();
+    if plain.len() == n {
+        // All-plain (the common shape): no re-grouping copies.
+        let reqs: Vec<SearchRequest> = queries.iter().map(|q| q.req.clone()).collect();
+        let mut resps = Vec::new();
+        shard.search_batch_ctx(parsed, &reqs, ctx, &mut resps);
+        return resps
+            .into_iter()
+            .map(|resp| {
+                agg.merge(&resp.stats);
+                (resp.hits, resp.stats, resp.truncated)
+            })
+            .collect();
+    }
+    let mut out: Vec<ShardAnswer> = Vec::with_capacity(n);
+    out.resize_with(n, || (Vec::new(), QueryStats::default(), false));
+    if !plain.is_empty() {
+        let pv: Vec<DenseVec> = plain.iter().map(|&i| parsed[i].clone()).collect();
+        let reqs: Vec<SearchRequest> = plain.iter().map(|&i| queries[i].req.clone()).collect();
+        let mut resps = Vec::new();
+        shard.search_batch_ctx(&pv, &reqs, ctx, &mut resps);
+        for (pos, resp) in resps.into_iter().enumerate() {
+            agg.merge(&resp.stats);
+            out[plain[pos]] = (resp.hits, resp.stats, resp.truncated);
         }
-        None => {
-            for (q, v) in queries.iter().zip(parsed.iter()) {
-                let (hits, stats, truncated) = shard.search_ctx(v, &q.req, ctx);
-                agg.merge(&stats);
-                out.push((hits, stats, truncated));
-            }
+    }
+    for i in 0..n {
+        if queries[i].req.is_plain() {
+            continue;
         }
+        let (hits, stats, truncated) = shard.search_ctx(&parsed[i], &queries[i].req, ctx);
+        agg.merge(&stats);
+        out[i] = (hits, stats, truncated);
     }
     out
 }
@@ -335,12 +315,13 @@ impl Coordinator {
         // no shard fan-out, so one context (owned by the FnMut handler)
         // serves every query of every batch.
         let mut ctx = QueryContext::new();
-        let mut hits_buf: Vec<(u64, f64)> = Vec::new();
+        let mut outs: Vec<Vec<(u64, f64)>> = Vec::new();
+        let mut metas: Vec<(QueryStats, bool)> = Vec::new();
         let submitter = batcher::spawn_batcher(
             config.batch.clone(),
             move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
                 m2.batches.fetch_add(1, Relaxed);
-                execute_batch_ingest(&ing2, &m2, &mut ctx, &mut hits_buf, jobs);
+                execute_batch_ingest(&ing2, &m2, &mut ctx, &mut outs, &mut metas, jobs);
             },
         );
         let snapshot = ConfigSnapshot {
@@ -516,31 +497,37 @@ impl Coordinator {
     }
 }
 
-/// Execute one batch against the mutable corpus: each query runs over the
-/// atomically published generation snapshot (no shard scatter — the
-/// generation fan-out happens inside the snapshot), all through the
-/// collector thread's one reusable context and hit buffer.
+/// Execute one batch against the mutable corpus: the whole batch runs
+/// over one atomically published generation snapshot (no shard scatter —
+/// the generation fan-out happens inside the snapshot), through the
+/// collector thread's one reusable context and per-query hit buffers.
+/// Plain plans descend each generation's tree together behind the shared
+/// frontier (ADR-006); optioned plans fall back per query inside
+/// `search_batch_into`.
 fn execute_batch_ingest(
     ingest: &IngestCorpus,
     metrics: &Metrics,
     ctx: &mut QueryContext,
-    hits_buf: &mut Vec<(u64, f64)>,
+    outs: &mut Vec<Vec<(u64, f64)>>,
+    metas: &mut Vec<(QueryStats, bool)>,
     jobs: Vec<batcher::Job<Query, QueryResult>>,
 ) {
     let q0 = ctx.queries();
-    for job in jobs {
-        let q = DenseVec::new(job.query.vector.clone());
-        let (evals, truncated) = ingest.search_ctx(&q, &job.query.req, ctx, hits_buf);
-        metrics.sim_evals.fetch_add(evals, Relaxed);
-        metrics.pruned.fetch_add(ctx.stats.pruned, Relaxed);
-        metrics.nodes_visited.fetch_add(ctx.stats.nodes_visited, Relaxed);
-        let hits: Vec<Hit> = hits_buf.iter().map(|&(id, score)| Hit { id, score }).collect();
+    let mut parsed: Vec<DenseVec> = Vec::with_capacity(jobs.len());
+    parsed.extend(jobs.iter().map(|j| DenseVec::new(j.query.vector.clone())));
+    let reqs: Vec<SearchRequest> = jobs.iter().map(|j| j.query.req.clone()).collect();
+    ingest.search_batch_ctx(&parsed, &reqs, ctx, outs, metas);
+    for (job, (out, &(stats, truncated))) in jobs.into_iter().zip(outs.iter().zip(metas.iter())) {
+        metrics.sim_evals.fetch_add(stats.sim_evals, Relaxed);
+        metrics.pruned.fetch_add(stats.pruned, Relaxed);
+        metrics.nodes_visited.fetch_add(stats.nodes_visited, Relaxed);
+        let hits: Vec<Hit> = out.iter().map(|&(id, score)| Hit { id, score }).collect();
         let _ = job.reply.send(Ok(SearchResult {
             hits,
             truncated,
-            sim_evals: evals,
-            nodes_visited: ctx.stats.nodes_visited,
-            pruned: ctx.stats.pruned,
+            sim_evals: stats.sim_evals,
+            nodes_visited: stats.nodes_visited,
+            pruned: stats.pruned,
         }));
     }
     metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);

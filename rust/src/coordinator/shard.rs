@@ -262,6 +262,44 @@ impl Shard {
         (hits, stats)
     }
 
+    /// A whole batch of typed plans through one shared context (ADR-006):
+    /// plain plans ride the index's shared-frontier multi-query traversal;
+    /// optioned plans fall back to per-query execution inside the same
+    /// call. Filters are translated into shard-local id space exactly as
+    /// in [`Shard::search_ctx`]. Owns the query boundary. Responses land
+    /// in `resps` (resized to `queries.len()`), hits in local ids.
+    pub fn search_batch_ctx(
+        &self,
+        queries: &[DenseVec],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        if self.base == 0 || reqs.iter().all(|r| r.filter.is_none()) {
+            // base == 0: global ids ARE local ids (see search_ctx).
+            self.index.search_batch_into(queries, reqs, ctx, resps);
+            return;
+        }
+        let hi = self.base + self.len() as u64;
+        let local: Vec<SearchRequest> = reqs
+            .iter()
+            .map(|req| {
+                if req.filter.is_none() {
+                    req.clone()
+                } else {
+                    req.localized(req.mode, |id| {
+                        if (self.base..hi).contains(&id) {
+                            Some(id - self.base)
+                        } else {
+                            None
+                        }
+                    })
+                }
+            })
+            .collect();
+        self.index.search_batch_into(queries, &local, ctx, resps);
+    }
+
     /// A whole kNN batch through one shared context: per-query results and
     /// stats, byte-identical to per-query [`Shard::knn_index`] calls.
     pub fn knn_batch(

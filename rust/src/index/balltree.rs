@@ -13,7 +13,7 @@
 //! a zero-copy [`crate::storage::CorpusView`].
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, Frontier, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
@@ -219,6 +219,86 @@ impl<C: Corpus> BallTree<C> {
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
     }
+
+    /// Shared-frontier multi-query descent (ADR-006). Centers are
+    /// evaluated and offered per live slot when their node is *pushed*
+    /// (exactly once per slot, like the single-query expansion), so
+    /// frontier entries need no cached center similarity — the auxiliary
+    /// float carries the live-slot bitmask instead.
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let Some(root) = &self.root else { return };
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
+        {
+            let mut mask = 0u64;
+            let mut ub_max = f64::NEG_INFINITY;
+            let mut m = bc.full_mask();
+            while m != 0 {
+                let j = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let s = self.corpus.sim_q(&queries[j], root.center);
+                super::batch_offer(bc, resps, j, root.center, s);
+                let ub_j = match root.cover {
+                    Some(cover) => self.bound.upper_over(s, cover),
+                    None => -1.0,
+                };
+                if bc.slot_alive(j, ub_j) {
+                    mask |= 1 << j;
+                    ub_max = ub_max.max(ub_j);
+                } else {
+                    bc.stats[j].pruned += 1;
+                }
+            }
+            if mask != 0 {
+                frontier.push(ub_max, root, f64::from_bits(mask));
+            }
+        }
+        while let Some((ub, node, aux)) = frontier.pop() {
+            if !bc.any_alive(ub) {
+                break;
+            }
+            let mask = bc.refine(aux.to_bits(), ub);
+            if mask == 0 {
+                continue;
+            }
+            if node.cover.is_none() {
+                continue; // center-only node: its center was offered at push
+            }
+            super::note_visit(bc, mask);
+            super::batch_scan_ids(&self.corpus, queries, bc, mask, &node.bucket, resps);
+            for child in &node.children {
+                let mut child_mask = 0u64;
+                let mut child_ub = f64::NEG_INFINITY;
+                let mut m = mask;
+                while m != 0 {
+                    let j = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let sc = self.corpus.sim_q(&queries[j], child.center);
+                    super::batch_offer(bc, resps, j, child.center, sc);
+                    let ub_j = match child.cover {
+                        Some(cover) => self.bound.upper_over(sc, cover),
+                        None => -1.0,
+                    };
+                    if bc.slot_alive(j, ub_j) {
+                        child_mask |= 1 << j;
+                        child_ub = child_ub.max(ub_j);
+                    } else {
+                        bc.stats[j].pruned += 1;
+                    }
+                }
+                if child_mask != 0 {
+                    frontier.push(child_ub, child, f64::from_bits(child_mask));
+                }
+            }
+        }
+        ctx.release_frontier(frontier);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
@@ -247,6 +327,23 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
                 sort_desc(out);
             },
             |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

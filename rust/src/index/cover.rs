@@ -10,7 +10,7 @@
 //! together with Eq. 13, exactly like the other trees.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, Frontier, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
@@ -200,6 +200,82 @@ impl<C: Corpus> CoverTree<C> {
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
     }
+
+    /// ADR-006 multi-query traversal: one shared best-first frontier with
+    /// a live-slot mask in the aux word. Every node id is offered to each
+    /// live slot exactly once — at push time, like the single-query path —
+    /// so the heaps never see duplicates.
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let Some(root) = &self.root else { return };
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
+        let full = bc.full_mask();
+        {
+            let mut mask = 0u64;
+            let mut ub_max = f64::NEG_INFINITY;
+            let mut m = full;
+            while m != 0 {
+                let j = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let s = self.corpus.sim_q(&queries[j], root.id);
+                super::batch_offer(bc, resps, j, root.id, s);
+                let ub = match root.cover {
+                    Some(cover) => self.bound.upper_over(s, cover),
+                    None => -1.0,
+                };
+                if bc.slot_alive(j, ub) {
+                    mask |= 1 << j;
+                    ub_max = ub_max.max(ub);
+                } else {
+                    bc.stats[j].pruned += 1;
+                }
+            }
+            if mask != 0 {
+                frontier.push(ub_max, root, f64::from_bits(mask));
+            }
+        }
+        while let Some((ub, node, aux)) = frontier.pop() {
+            if !bc.any_alive(ub) {
+                break; // best-first: no remaining node serves any slot
+            }
+            let mask = bc.refine(aux.to_bits(), ub);
+            if mask == 0 {
+                continue; // every interested slot retired since the push
+            }
+            super::note_visit(bc, mask);
+            for child in &node.children {
+                let mut child_mask = 0u64;
+                let mut child_ub = f64::NEG_INFINITY;
+                let mut m = mask;
+                while m != 0 {
+                    let j = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let sc = self.corpus.sim_q(&queries[j], child.id);
+                    super::batch_offer(bc, resps, j, child.id, sc);
+                    let ub_j = match child.cover {
+                        Some(cover) => self.bound.upper_over(sc, cover),
+                        None => -1.0,
+                    };
+                    if bc.slot_alive(j, ub_j) {
+                        child_mask |= 1 << j;
+                        child_ub = child_ub.max(ub_j);
+                    } else {
+                        bc.stats[j].pruned += 1;
+                    }
+                }
+                if child_mask != 0 {
+                    frontier.push(child_ub, child, f64::from_bits(child_mask));
+                }
+            }
+        }
+        ctx.release_frontier(frontier);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
@@ -228,6 +304,23 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
                 sort_desc(out);
             },
             |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

@@ -14,7 +14,7 @@
 //! [`crate::storage::CorpusView`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, KnnHeap, RangePlan, SimilarityIndex, TopkPlan};
 
@@ -219,6 +219,95 @@ impl<C: Corpus> Gnat<C> {
         ctx.release_pairs(order);
         ctx.release_sims(split_sims);
     }
+
+    /// Multi-query recursive descent (ADR-006): one walk serves every
+    /// live slot. A region is entered while *any* slot's multi-pivot
+    /// bound admits it; regions are visited in order of their best bound
+    /// over the batch so the heaps tighten early, and each slot's
+    /// admission is re-checked against its current floor right before the
+    /// recursion.
+    fn batch_rec(
+        &self,
+        node: &Node,
+        queries: &[C::Vector],
+        mask: u64,
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        super::note_visit(bc, mask);
+        super::batch_scan_ids(&self.corpus, queries, bc, mask, &node.bucket, resps);
+        if node.splits.is_empty() {
+            return;
+        }
+        let m = node.splits.len();
+        let nslots = bc.len();
+        // Slot-major per-slot split similarities (slot j at [j*m, j*m+m)).
+        let mut split_sims = ctx.lease_sims();
+        split_sims.resize(nslots * m, 0.0);
+        let mut mm = mask;
+        while mm != 0 {
+            let j = mm.trailing_zeros() as usize;
+            mm &= mm - 1;
+            for (i, &sp) in node.splits.iter().enumerate() {
+                split_sims[j * m + i] = self.corpus.sim_q(&queries[j], sp);
+            }
+            bc.stats[j].sim_evals += m as u64;
+        }
+        // Child-major per-(region, slot) certified bounds.
+        let mut ubs = ctx.lease_sims();
+        ubs.resize(node.children.len() * nslots, f64::NEG_INFINITY);
+        let mut order = ctx.lease_pairs();
+        for c in 0..node.children.len() {
+            let mut best = f64::NEG_INFINITY;
+            let mut mm = mask;
+            while mm != 0 {
+                let j = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                let ub = (0..m)
+                    .map(|i| {
+                        self.bound.upper_over(split_sims[j * m + i], node.ranges[i * m + c])
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                ubs[c * nslots + j] = ub;
+                best = best.max(ub);
+            }
+            order.push((c as u32, best));
+        }
+        order.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for &(c, _) in order.iter() {
+            let c = c as usize;
+            let mut child_mask = 0u64;
+            let mut mm = mask;
+            while mm != 0 {
+                let j = mm.trailing_zeros() as usize;
+                mm &= mm - 1;
+                if bc.slot_alive(j, ubs[c * nslots + j]) {
+                    child_mask |= 1 << j;
+                } else {
+                    bc.stats[j].pruned += 1;
+                }
+            }
+            if child_mask != 0 {
+                self.batch_rec(&node.children[c], queries, child_mask, bc, ctx, resps);
+            }
+        }
+        ctx.release_pairs(order);
+        ctx.release_sims(ubs);
+        ctx.release_sims(split_sims);
+    }
+
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let Some(root) = &self.root else { return };
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        self.batch_rec(root, queries, bc.full_mask(), bc, ctx, resps);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
@@ -253,6 +342,23 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
                 results.drain_into(out);
                 ctx.release_heap(results);
             },
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

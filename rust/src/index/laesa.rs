@@ -13,9 +13,15 @@
 //! corpus's batch kernel ([`Corpus::sims_of_item`]).
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, QueryContext, SearchRequest, SearchResponse};
+use crate::storage::KernelScratch;
 
-use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
+use super::{sort_desc, Corpus, KnnHeap, QueryStats, RangePlan, SimilarityIndex, TopkPlan};
+
+/// Candidates per exact-evaluation chunk on the top-k path: small enough
+/// that the rising floor is re-checked often, large enough that the
+/// blocked kernels (and the i8 pre-filter, where armed) amortize.
+const CAND_CHUNK: usize = 32;
 
 /// Pivot-table index with triangle-inequality candidate filtering.
 pub struct Laesa<C: Corpus> {
@@ -108,6 +114,113 @@ impl<C: Corpus> Laesa<C> {
         ctx.stats.sim_evals += self.pivots.len() as u64;
         self.corpus.sims(q, &self.pivots, out);
     }
+
+    /// ADR-006 multi-query traversal: one (query-block × pivot-rows)
+    /// kernel sweep fills every slot's pivot similarities, then each slot
+    /// runs the standard candidate phases against its own heap/threshold
+    /// through the blocked kernels.
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let n = self.corpus.len();
+        let m = self.pivots.len();
+        if n == 0 {
+            return;
+        }
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        let mask = bc.full_mask();
+        super::note_visit(bc, mask);
+        let nslots = bc.len();
+
+        // Batched pivot stage. Floors are disabled: pivot similarities
+        // feed the interval table, so none may be skipped by a pre-filter.
+        let mut q_piv = ctx.lease_sims();
+        q_piv.resize(nslots * m, 0.0);
+        bc.live.clear();
+        for j in 0..nslots {
+            bc.live.push(j as u32);
+            bc.floors[j] = -2.0;
+        }
+        {
+            let BatchContext { qb, stats, scratches, live, floors, .. } = bc;
+            let _ = self.corpus.scan_ids_multi_ctx(
+                queries,
+                qb,
+                &self.pivots,
+                live,
+                floors,
+                scratches,
+                &mut |j, pos, s| q_piv[j * m + pos] = s,
+            );
+            for st in stats[..nslots].iter_mut() {
+                st.sim_evals += m as u64;
+            }
+        }
+
+        let mut ids = ctx.lease_ids();
+        let mut cands = ctx.lease_pairs();
+        for j in 0..nslots {
+            let piv = &q_piv[j * m..(j + 1) * m];
+            if bc.slots[j].range {
+                // Collect every candidate whose certified interval admits
+                // tau, then score the survivors in one blocked scan.
+                let tau = bc.slots[j].tau;
+                ids.clear();
+                for i in 0..n {
+                    let iv = self.interval_with(self.bound, piv, i);
+                    if iv.hi < tau || iv.is_empty() {
+                        bc.stats[j].pruned += 1;
+                    } else {
+                        ids.push(i as u32);
+                    }
+                }
+                let BatchContext { stats, scratches, .. } = bc;
+                let evals = self.corpus.scan_ids_range_ctx(
+                    &queries[j],
+                    &ids,
+                    tau,
+                    &mut resps[j].hits,
+                    &mut scratches[j],
+                );
+                stats[j].sim_evals += evals;
+            } else {
+                // Identical ordering and pivot seeding to the single-query
+                // path, so batch results match it bitwise.
+                cands.clear();
+                cands.extend(
+                    (0..n).map(|i| (i as u32, self.interval_with(self.bound, piv, i).hi)),
+                );
+                cands.sort_unstable_by(|a, b| {
+                    b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+                });
+                let plan = TopkPlan {
+                    k: bc.heaps[j].k(),
+                    within: bc.slots[j].within.then_some(bc.slots[j].tau),
+                    bound: self.bound,
+                };
+                for (idx, &p) in self.pivots.iter().enumerate() {
+                    bc.heaps[j].offer(p, piv[idx]);
+                }
+                let BatchContext { heaps, stats, scratches, .. } = bc;
+                self.topk_candidates(
+                    &queries[j],
+                    &cands,
+                    &plan,
+                    &mut heaps[j],
+                    &mut stats[j],
+                    &mut ids,
+                    &mut scratches[j],
+                );
+            }
+        }
+        ctx.release_pairs(cands);
+        ctx.release_ids(ids);
+        ctx.release_sims(q_piv);
+    }
 }
 
 impl<C: Corpus> Laesa<C> {
@@ -145,10 +258,59 @@ impl<C: Corpus> Laesa<C> {
         sort_desc(out);
     }
 
+    /// Evaluate the `(ub desc, id asc)`-ordered candidate list against the
+    /// heap in chunks of [`CAND_CHUNK`], so exact evaluations run through
+    /// the corpus's blocked kernel path — on the quantized backend each
+    /// chunk is pre-filtered by certified i8 upper bounds before the exact
+    /// re-rank (ADR-003). The floor is re-checked at chunk boundaries
+    /// rather than per candidate, so relative to a per-item loop at most
+    /// `CAND_CHUNK - 1` extra candidates are scored; every one of them is
+    /// certified at or below the floor, so the result set is unchanged.
+    /// Plain-request path only: no id filter, no evaluation budget.
+    #[allow(clippy::too_many_arguments)]
+    fn topk_candidates(
+        &self,
+        q: &C::Vector,
+        cands: &[(u32, f64)],
+        plan: &TopkPlan,
+        results: &mut KnnHeap,
+        stats: &mut QueryStats,
+        ids: &mut Vec<u32>,
+        scratch: &mut KernelScratch,
+    ) {
+        let mut pos = 0usize;
+        while pos < cands.len() {
+            if plan.dead_below_floor(cands[pos].1)
+                || (results.len() >= plan.k && cands[pos].1 <= results.floor())
+            {
+                // Sorted by ub desc: everything remaining is certified out.
+                stats.pruned += (cands.len() - pos) as u64;
+                break;
+            }
+            ids.clear();
+            while pos < cands.len() && ids.len() < CAND_CHUNK {
+                let (id, ub) = cands[pos];
+                if plan.dead_below_floor(ub)
+                    || (results.len() >= plan.k && ub <= results.floor())
+                {
+                    break; // the outer check charges the remainder as pruned
+                }
+                pos += 1;
+                if self.pivots_sorted.binary_search(&id).is_err() {
+                    ids.push(id); // pivots are already in the heap
+                }
+            }
+            if !ids.is_empty() {
+                stats.sim_evals += self.corpus.scan_ids_topk_ctx(q, ids, results, scratch);
+            }
+        }
+    }
+
     fn topk_search(
         &self,
         q: &C::Vector,
         plan: &TopkPlan,
+        kernel_path: bool,
         ctx: &mut QueryContext,
         out: &mut Vec<(u32, f64)>,
     ) {
@@ -172,22 +334,35 @@ impl<C: Corpus> Laesa<C> {
                 results.offer(p, q_piv[idx]);
             }
         }
-        for (pos, &(id, ub)) in cands.iter().enumerate() {
-            if plan.dead_below_floor(ub) || (results.len() >= plan.k && ub <= results.floor()) {
-                // Sorted by ub desc: everything remaining is certified out.
-                ctx.stats.pruned += (cands.len() - pos) as u64;
-                break;
+        if kernel_path {
+            // Plain request: chunked kernel evaluation (the i8 backend
+            // pre-filters each chunk against the current floor).
+            let mut ids = ctx.lease_ids();
+            let mut st = QueryStats::default();
+            let scratch = ctx.kernel_scratch();
+            self.topk_candidates(q, &cands, plan, &mut results, &mut st, &mut ids, scratch);
+            ctx.stats.merge(&st);
+            ctx.release_ids(ids);
+        } else {
+            for (pos, &(id, ub)) in cands.iter().enumerate() {
+                if plan.dead_below_floor(ub)
+                    || (results.len() >= plan.k && ub <= results.floor())
+                {
+                    // Sorted by ub desc: everything remaining is certified out.
+                    ctx.stats.pruned += (cands.len() - pos) as u64;
+                    break;
+                }
+                if self.pivots_sorted.binary_search(&id).is_ok() || !ctx.admits(id) {
+                    continue;
+                }
+                if ctx.budget_exhausted() {
+                    ctx.truncated = true;
+                    break;
+                }
+                let s = self.corpus.sim_q(q, id);
+                ctx.stats.sim_evals += 1;
+                results.offer(id, s);
             }
-            if self.pivots_sorted.binary_search(&id).is_ok() || !ctx.admits(id) {
-                continue;
-            }
-            if ctx.budget_exhausted() {
-                ctx.truncated = true;
-                break;
-            }
-            let s = self.corpus.sim_q(q, id);
-            ctx.stats.sim_evals += 1;
-            results.offer(id, s);
         }
         out.clear();
         results.drain_into(out);
@@ -209,13 +384,33 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
         ctx: &mut QueryContext,
         resp: &mut SearchResponse,
     ) {
+        // The chunked kernel path cannot honor per-candidate id filters or
+        // evaluation budgets; those requests take the per-item loop.
+        let kernel_path = req.filter.is_none() && req.budget.is_none();
         super::search_frame(
             req,
             ctx,
             resp,
             self.bound,
             |plan, ctx, out| self.range_search(q, plan, ctx, out),
-            |plan, ctx, out| self.topk_search(q, plan, ctx, out),
+            |plan, ctx, out| self.topk_search(q, plan, kernel_path, ctx, out),
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

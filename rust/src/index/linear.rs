@@ -99,6 +99,30 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
         );
     }
 
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, _ctx, chunk| {
+                // One multi-kernel sweep of the whole corpus serves every
+                // slot (no tree, so nothing retires mid-scan).
+                self.corpus.stage_queries(qs, &mut bc.qb);
+                let mask = bc.full_mask();
+                super::note_visit(bc, mask);
+                super::batch_scan_all(&self.corpus, qs, bc, mask, chunk);
+            },
+        );
+    }
+
     fn name(&self) -> &'static str {
         "linear"
     }

@@ -30,8 +30,10 @@ pub use vptree::VpTree;
 
 use crate::bounds::BoundKind;
 use crate::metrics::{DenseVec, SimVector};
-use crate::query::{QueryContext, SearchMode, SearchRequest, SearchResponse};
-use crate::storage::{CorpusView, KernelScratch};
+use crate::query::{
+    BatchContext, MAX_BATCH, QueryContext, SearchMode, SearchRequest, SearchResponse,
+};
+use crate::storage::{CorpusView, KernelScratch, QueryBlock};
 
 /// What an index builds over: a collection of vectors addressed by dense
 /// `u32` ids.
@@ -223,6 +225,71 @@ pub trait Corpus: Send + Sync + 'static {
         }
         evals
     }
+
+    // --- multi-query scan variants (the batched-traversal hot path) --------
+    //
+    // One call scores a whole batch's live query slots against one row
+    // block (ADR-006). The per-item defaults loop; the CorpusView impl
+    // overrides them to dispatch the GEMM-shaped `sim_block_multi` /
+    // `scan_multi` kernel entry points, where the quantized backend
+    // pre-filters each slot against its certified floor through one cached
+    // `QuantQuery` per slot. The batch path serves plain plans only, so no
+    // filter handling is needed here.
+
+    /// Pack the batch's query vectors for the multi kernels. The per-item
+    /// default leaves the block empty (per-item corpora score through
+    /// [`Corpus::sim_q`] in the multi-scan defaults); [`CorpusView`] packs
+    /// the dense query slices into one contiguous block.
+    fn stage_queries(&self, queries: &[Self::Vector], qb: &mut QueryBlock) {
+        let _ = queries;
+        qb.reset(0);
+    }
+
+    /// Score `ids` against every live query slot: `sink(slot, pos, sim)`
+    /// receives positions into `ids` (the caller maps `pos` back through
+    /// `ids[pos]`). `floors[slot]` is a certified lower cutoff for that
+    /// slot's result set — a backend may skip a `(slot, row)` pair only
+    /// when the row provably scores strictly below it. Returns the exact
+    /// evaluations delivered (= sink invocations).
+    #[allow(clippy::too_many_arguments)]
+    fn scan_ids_multi_ctx(
+        &self,
+        queries: &[Self::Vector],
+        qb: &QueryBlock,
+        ids: &[u32],
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: &mut dyn FnMut(usize, usize, f64),
+    ) -> u64 {
+        let _ = (qb, floors, scratches);
+        for &j in live {
+            for (pos, &id) in ids.iter().enumerate() {
+                sink(j as usize, pos, self.sim_q(&queries[j as usize], id));
+            }
+        }
+        live.len() as u64 * ids.len() as u64
+    }
+
+    /// Score the whole corpus against every live query slot (`pos` is the
+    /// item id for a full scan). See [`Corpus::scan_ids_multi_ctx`].
+    fn scan_all_multi_ctx(
+        &self,
+        queries: &[Self::Vector],
+        qb: &QueryBlock,
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: &mut dyn FnMut(usize, usize, f64),
+    ) -> u64 {
+        let _ = (qb, floors, scratches);
+        for &j in live {
+            for id in 0..self.len() as u32 {
+                sink(j as usize, id as usize, self.sim_q(&queries[j as usize], id));
+            }
+        }
+        live.len() as u64 * self.len() as u64
+    }
 }
 
 /// The owning per-item corpus: works for any [`SimVector`], including
@@ -343,6 +410,47 @@ impl Corpus for CorpusView {
     ) -> u64 {
         CorpusView::scan_topk_with(self, q.as_slice(), heap, scratch)
     }
+
+    fn stage_queries(&self, queries: &[DenseVec], qb: &mut QueryBlock) {
+        if self.is_empty() {
+            // An empty view has dimension 0; traversals bail before any
+            // scan, so leave the block empty instead of tripping the
+            // dimension assert (mirrors the single-query path, where
+            // `check_query` is never reached on an empty corpus).
+            qb.reset(0);
+            return;
+        }
+        qb.reset(CorpusView::dim(self));
+        for q in queries {
+            qb.push(q.as_slice());
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn scan_ids_multi_ctx(
+        &self,
+        _queries: &[DenseVec],
+        qb: &QueryBlock,
+        ids: &[u32],
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: &mut dyn FnMut(usize, usize, f64),
+    ) -> u64 {
+        CorpusView::scan_ids_multi_with(self, qb, ids, live, floors, scratches, sink)
+    }
+
+    fn scan_all_multi_ctx(
+        &self,
+        _queries: &[DenseVec],
+        qb: &QueryBlock,
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: &mut dyn FnMut(usize, usize, f64),
+    ) -> u64 {
+        CorpusView::scan_all_multi_with(self, qb, live, floors, scratches, sink)
+    }
 }
 
 /// Query-time instrumentation: the paper's pruning-power currency is the
@@ -401,6 +509,38 @@ pub trait SimilarityIndex<V: SimVector>: Send + Sync {
         ctx: &mut QueryContext,
         resp: &mut SearchResponse,
     );
+
+    /// Execute a batch of typed plans, one response per query, replacing
+    /// `resps`' contents (ADR-006). Results are byte-identical to calling
+    /// [`SimilarityIndex::search_into`] per query on tie-free corpora (the
+    /// usual kNN tie-membership caveat applies, exactly as between any two
+    /// sound traversal orders).
+    ///
+    /// The tree indexes override this: a batch of *plain* plans descends
+    /// the tree **once** behind a shared best-first frontier — a node is
+    /// pruned only when no live query's bound can admit it, queries retire
+    /// from the batch as their heaps tighten, and every leaf visit becomes
+    /// one (query-block × row-block) multi-kernel call. Optioned plans
+    /// (bound/kernel override, filter, budget) fall back to sequential
+    /// per-query execution. This default *is* that fallback, and unlike
+    /// [`SimilarityIndex::search_into`] it owns the query boundary: it
+    /// calls [`QueryContext::begin_query`] itself (per query here, per
+    /// chunk on the shared-frontier path), matching
+    /// [`SimilarityIndex::knn_batch`] semantics.
+    fn search_batch_into(
+        &self,
+        queries: &[V],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        assert_eq!(queries.len(), reqs.len(), "batch queries/plans length mismatch");
+        resps.resize_with(queries.len(), SearchResponse::default);
+        for ((q, req), resp) in queries.iter().zip(reqs).zip(resps.iter_mut()) {
+            ctx.begin_query();
+            self.search_into(q, req, ctx, resp);
+        }
+    }
 
     /// [`SimilarityIndex::search_into`] with a throwaway context — the
     /// convenience form for one-off plans.
@@ -676,6 +816,157 @@ pub(crate) fn search_frame(
     resp.truncated = ctx.truncated;
     resp.stats = ctx.stats;
     ctx.clear_plan();
+}
+
+/// The shared `search_batch_into` frame (ADR-006): validate lengths,
+/// route optioned plans to sequential per-query execution, and drive the
+/// plain-plan chunks (at most [`MAX_BATCH`] queries each) through the
+/// index's shared-frontier traversal — arming the leased [`BatchContext`]
+/// before each chunk and publishing per-slot heaps/hits/stats into the
+/// responses after. One place, so no index can forget to publish or to
+/// release the arena.
+pub(crate) fn run_batch<V: SimVector>(
+    queries: &[V],
+    reqs: &[SearchRequest],
+    ctx: &mut QueryContext,
+    resps: &mut Vec<SearchResponse>,
+    fallback: &mut dyn FnMut(&V, &SearchRequest, &mut QueryContext, &mut SearchResponse),
+    traverse: &mut dyn FnMut(&[V], &mut BatchContext, &mut QueryContext, &mut [SearchResponse]),
+) {
+    assert_eq!(queries.len(), reqs.len(), "batch queries/plans length mismatch");
+    resps.resize_with(queries.len(), SearchResponse::default);
+    if queries.is_empty() {
+        return;
+    }
+    if reqs.iter().any(|r| !r.is_plain()) {
+        for ((q, req), resp) in queries.iter().zip(reqs).zip(resps.iter_mut()) {
+            ctx.begin_query();
+            fallback(q, req, ctx, resp);
+        }
+        return;
+    }
+    let mut start = 0;
+    while start < queries.len() {
+        let end = (start + MAX_BATCH).min(queries.len());
+        ctx.begin_query();
+        let mut bc = ctx.lease_batch();
+        bc.begin(&reqs[start..end]);
+        let chunk = &mut resps[start..end];
+        for resp in chunk.iter_mut() {
+            resp.hits.clear();
+            resp.truncated = false;
+        }
+        traverse(&queries[start..end], &mut bc, ctx, chunk);
+        publish_batch(&mut bc, ctx, chunk);
+        ctx.release_batch(bc);
+        start = end;
+    }
+}
+
+/// Publish one traversed chunk: drain each kNN slot's heap (already in
+/// `(sim desc, id asc)` order) or sort each range slot's hits, copy the
+/// per-slot stats window, and fold it into the context's window.
+fn publish_batch(bc: &mut BatchContext, ctx: &mut QueryContext, resps: &mut [SearchResponse]) {
+    for (j, resp) in resps.iter_mut().enumerate() {
+        if bc.slots[j].range {
+            sort_desc(&mut resp.hits);
+        } else {
+            bc.heaps[j].drain_into(&mut resp.hits);
+        }
+        resp.stats = bc.stats[j];
+        ctx.stats.merge(&bc.stats[j]);
+    }
+}
+
+/// Attribute one physical node visit to the entry's first live slot, so
+/// the per-slot `nodes_visited` windows sum to the physical work done —
+/// which is what makes "batched nodes_visited < q independent traversals"
+/// measurable from response stats.
+#[inline]
+pub(crate) fn note_visit(bc: &mut BatchContext, mask: u64) {
+    debug_assert!(mask != 0, "visiting a node with no live slots");
+    bc.stats[mask.trailing_zeros() as usize].nodes_visited += 1;
+}
+
+/// Dispatch one directly-evaluated candidate (a vantage point, routing
+/// object, or pivot the traversal scored through [`Corpus::sim_q`]) to
+/// slot `j`'s collector, counting the exact evaluation in its window.
+#[inline]
+pub(crate) fn batch_offer(
+    bc: &mut BatchContext,
+    resps: &mut [SearchResponse],
+    j: usize,
+    id: u32,
+    sim: f64,
+) {
+    bc.stats[j].sim_evals += 1;
+    if bc.slots[j].range {
+        if sim >= bc.slots[j].tau {
+            resps[j].hits.push((id, sim));
+        }
+    } else {
+        bc.heaps[j].offer(id, sim);
+    }
+}
+
+/// One batched leaf/bucket visit (ADR-006): stage the live slots and
+/// their certified floors, route the id list through the corpus's multi
+/// kernel scan, and dispatch each delivered `(slot, id, sim)` to the
+/// slot's collector — heap offer for kNN slots, threshold check + push
+/// into the slot's response hits for range slots. Each delivery counts
+/// one exact evaluation in that slot's stats window, matching what the
+/// single-query scans report per query.
+pub(crate) fn batch_scan_ids<C: Corpus>(
+    corpus: &C,
+    queries: &[C::Vector],
+    bc: &mut BatchContext,
+    mask: u64,
+    ids: &[u32],
+    resps: &mut [SearchResponse],
+) {
+    if mask == 0 || ids.is_empty() {
+        return;
+    }
+    bc.stage_live(mask);
+    let BatchContext { qb, heaps, stats, scratches, slots, live, floors, .. } = bc;
+    corpus.scan_ids_multi_ctx(queries, qb, ids, live, floors, scratches, &mut |j, pos, sim| {
+        stats[j].sim_evals += 1;
+        let id = ids[pos];
+        if slots[j].range {
+            if sim >= slots[j].tau {
+                resps[j].hits.push((id, sim));
+            }
+        } else {
+            heaps[j].offer(id, sim);
+        }
+    });
+}
+
+/// [`batch_scan_ids`] over the whole corpus (the linear index's batch
+/// path): a full scan's positions are the item ids.
+pub(crate) fn batch_scan_all<C: Corpus>(
+    corpus: &C,
+    queries: &[C::Vector],
+    bc: &mut BatchContext,
+    mask: u64,
+    resps: &mut [SearchResponse],
+) {
+    if mask == 0 || corpus.is_empty() {
+        return;
+    }
+    bc.stage_live(mask);
+    let BatchContext { qb, heaps, stats, scratches, slots, live, floors, .. } = bc;
+    corpus.scan_all_multi_ctx(queries, qb, live, floors, scratches, &mut |j, pos, sim| {
+        stats[j].sim_evals += 1;
+        let id = pos as u32;
+        if slots[j].range {
+            if sim >= slots[j].tau {
+                resps[j].hits.push((id, sim));
+            }
+        } else {
+            heaps[j].offer(id, sim);
+        }
+    });
 }
 
 /// Sort a result set in descending similarity with deterministic tie order.

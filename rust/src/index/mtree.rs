@@ -15,7 +15,7 @@
 //! on a view) rather than the blocked bucket kernels.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, Frontier, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
@@ -288,6 +288,87 @@ impl<C: Corpus> MTree<C> {
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
     }
+
+    /// ADR-006 multi-query descent: entry-order recursion (the parent
+    /// route's per-slot similarities stay in scope for the parent-chain
+    /// pre-check), with each leaf scored for every live slot in one
+    /// multi-query kernel call.
+    #[allow(clippy::too_many_arguments)]
+    fn batch_rec(
+        &self,
+        node: &NodeBody,
+        queries: &[C::Vector],
+        mask: u64,
+        parent_sims: Option<&[f64]>,
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        super::note_visit(bc, mask);
+        if node.is_leaf {
+            let mut ids = ctx.lease_ids();
+            ids.extend(node.entries.iter().map(|e| e.id));
+            super::batch_scan_ids(&self.corpus, queries, bc, mask, &ids, resps);
+            ctx.release_ids(ids);
+            return;
+        }
+        let nslots = bc.len();
+        let mut sims = ctx.lease_sims();
+        sims.resize(nslots, 0.0);
+        for entry in &node.entries {
+            let Some(cover) = entry.cover else { continue };
+            let mut child_mask = 0u64;
+            let mut m = mask;
+            while m != 0 {
+                let j = m.trailing_zeros() as usize;
+                m &= m - 1;
+                // The M-tree's saved evaluation, per slot: the parent
+                // chain can certify the subtree dead for this slot before
+                // sim(q_j, route) is ever computed.
+                if let Some(ps) = parent_sims {
+                    let reach = Self::entry_reach(self.bound, ps[j], entry);
+                    if !bc.slot_alive(j, reach) {
+                        bc.stats[j].pruned += 1;
+                        continue;
+                    }
+                }
+                let s = self.corpus.sim_q(&queries[j], entry.id);
+                bc.stats[j].sim_evals += 1;
+                sims[j] = s;
+                if bc.slot_alive(j, self.bound.upper_over(s, cover)) {
+                    child_mask |= 1 << j;
+                } else {
+                    bc.stats[j].pruned += 1;
+                }
+            }
+            if child_mask != 0 {
+                // Recurse immediately, so `sims` is this entry's route
+                // similarities for the whole subtree walk.
+                self.batch_rec(
+                    entry.child.as_ref().unwrap(),
+                    queries,
+                    child_mask,
+                    Some(&sims),
+                    bc,
+                    ctx,
+                    resps,
+                );
+            }
+        }
+        ctx.release_sims(sims);
+    }
+
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let Some(root) = &self.root else { return };
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        self.batch_rec(root, queries, bc.full_mask(), None, bc, ctx, resps);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
@@ -314,6 +395,23 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
                 sort_desc(out);
             },
             |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

@@ -11,7 +11,7 @@
 //! scored through the blocked batch kernels.
 
 use crate::bounds::{BoundKind, SimInterval};
-use crate::query::{Frontier, QueryContext, SearchRequest, SearchResponse};
+use crate::query::{BatchContext, Frontier, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
 
@@ -185,6 +185,68 @@ impl<C: Corpus> VpTree<C> {
         ctx.release_heap(results);
         ctx.release_frontier(frontier);
     }
+
+    /// Shared-frontier multi-query descent (ADR-006): the whole batch
+    /// walks the tree once behind one best-first frontier whose entries
+    /// carry a live-slot bitmask in the auxiliary float. A node is visited
+    /// only while at least one slot's bound admits it; slots retire from
+    /// an entry between push and pop as their heaps tighten; every bucket
+    /// visit is one (query-block × row-block) multi-kernel call.
+    fn traverse_batch(
+        &self,
+        queries: &[C::Vector],
+        bc: &mut BatchContext,
+        ctx: &mut QueryContext,
+        resps: &mut [SearchResponse],
+    ) {
+        let Some(root) = &self.root else { return };
+        self.corpus.stage_queries(queries, &mut bc.qb);
+        let mut frontier: Frontier<'_, Node> = ctx.lease_frontier();
+        frontier.push(1.0, root, f64::from_bits(bc.full_mask()));
+        let mut sims = ctx.lease_sims();
+        sims.resize(bc.len(), 0.0);
+        while let Some((ub, node, aux)) = frontier.pop() {
+            if !bc.any_alive(ub) {
+                break; // best-first: no remaining entry can serve any slot
+            }
+            let mask = bc.refine(aux.to_bits(), ub);
+            if mask == 0 {
+                continue; // this entry's slots retired; other entries may live
+            }
+            super::note_visit(bc, mask);
+            let mut m = mask;
+            while m != 0 {
+                let j = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let s = self.corpus.sim_q(&queries[j], node.vp);
+                sims[j] = s;
+                super::batch_offer(bc, resps, j, node.vp, s);
+            }
+            super::batch_scan_ids(&self.corpus, queries, bc, mask, &node.bucket, resps);
+            for child in [&node.near, &node.far].into_iter().flatten() {
+                let (iv, sub) = child;
+                let mut child_mask = 0u64;
+                let mut child_ub = f64::NEG_INFINITY;
+                let mut m = mask;
+                while m != 0 {
+                    let j = m.trailing_zeros() as usize;
+                    m &= m - 1;
+                    let ub_j = self.bound.upper_over(sims[j], *iv);
+                    if bc.slot_alive(j, ub_j) {
+                        child_mask |= 1 << j;
+                        child_ub = child_ub.max(ub_j);
+                    } else {
+                        bc.stats[j].pruned += 1;
+                    }
+                }
+                if child_mask != 0 {
+                    frontier.push(child_ub, sub.as_ref(), f64::from_bits(child_mask));
+                }
+            }
+        }
+        ctx.release_sims(sims);
+        ctx.release_frontier(frontier);
+    }
 }
 
 impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
@@ -211,6 +273,23 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
                 sort_desc(out);
             },
             |plan, ctx, out| self.topk_into(q, plan, ctx, out),
+        );
+    }
+
+    fn search_batch_into(
+        &self,
+        queries: &[C::Vector],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        resps: &mut Vec<SearchResponse>,
+    ) {
+        super::run_batch(
+            queries,
+            reqs,
+            ctx,
+            resps,
+            &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
+            &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
     }
 

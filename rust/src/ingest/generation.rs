@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
-use crate::index::{LinearScan, SimilarityIndex};
+use crate::index::{LinearScan, QueryStats, SimilarityIndex};
 use crate::metrics::DenseVec;
 use crate::query::{QueryContext, SearchMode, SearchRequest, SearchResponse};
 use crate::storage::{CorpusStore, KernelBackend};
@@ -387,4 +387,116 @@ impl GenerationSet {
         (ctx.stats.sim_evals - evals_before, truncated)
     }
 
+    /// Execute a batch of typed plans across all generations plus the
+    /// memtable (ADR-006): every source sees the *whole* batch through one
+    /// [`SimilarityIndex::search_batch_into`] call, so a batch of plain
+    /// plans descends each generation's tree once behind the shared
+    /// frontier. Tombstone handling never disturbs that grouping — the
+    /// per-source over-fetch (`k + |tombstones|`, same exactness argument
+    /// as [`GenerationSet::search_ctx`]) only rewrites the *mode*, which
+    /// [`SearchRequest::is_plain`] ignores, so plain plans stay plain and
+    /// the post-hoc global-id filter does the rest. Only user filters
+    /// force the per-query fallback, and that decision is per source.
+    ///
+    /// `outs[j]` receives query `j`'s global hits (tombstones filtered,
+    /// `(sim desc, id asc)`); `metas[j]` its merged per-query stats and
+    /// truncation flag. The callee owns the query boundary (it runs
+    /// through `search_batch_into`), matching that method and unlike
+    /// [`GenerationSet::search_ctx`].
+    pub fn search_batch_ctx(
+        &self,
+        queries: &[DenseVec],
+        reqs: &[SearchRequest],
+        ctx: &mut QueryContext,
+        outs: &mut Vec<Vec<(u64, f64)>>,
+        metas: &mut Vec<(QueryStats, bool)>,
+    ) {
+        assert_eq!(queries.len(), reqs.len(), "batch queries/plans length mismatch");
+        let n = queries.len();
+        outs.resize_with(n, Vec::new);
+        for out in outs.iter_mut() {
+            out.clear();
+        }
+        metas.clear();
+        metas.resize(n, (QueryStats::default(), false));
+        if n == 0 {
+            return;
+        }
+        // Per-query target k and tombstone-over-fetching source mode.
+        let mut ks: Vec<Option<usize>> = Vec::with_capacity(n);
+        let mut fetch: Vec<SearchMode> = Vec::with_capacity(n);
+        for req in reqs {
+            let (k, mode) = match req.mode {
+                SearchMode::Knn { k } => {
+                    let k = k.max(1);
+                    (Some(k), SearchMode::Knn { k: k.saturating_add(self.tombstones.len()) })
+                }
+                SearchMode::KnnWithin { k, tau } => {
+                    let k = k.max(1);
+                    (
+                        Some(k),
+                        SearchMode::KnnWithin { k: k.saturating_add(self.tombstones.len()), tau },
+                    )
+                }
+                SearchMode::Range { tau } => (None, SearchMode::Range { tau }),
+            };
+            ks.push(k);
+            fetch.push(mode);
+        }
+        let mut local: Vec<SearchRequest> = Vec::with_capacity(n);
+        let mut resps: Vec<SearchResponse> = Vec::new();
+        for g in &self.generations {
+            local.clear();
+            for (req, &mode) in reqs.iter().zip(&fetch) {
+                local.push(g.localize(req, mode).unwrap_or_else(|| req.clone()));
+            }
+            g.index.search_batch_into(queries, &local, ctx, &mut resps);
+            for (j, resp) in resps.iter().enumerate() {
+                metas[j].0.merge(&resp.stats);
+                metas[j].1 |= resp.truncated;
+                for &(local_id, s) in resp.hits.iter() {
+                    let id = g.ids[local_id as usize];
+                    if !self.tombstones.contains(&id) {
+                        outs[j].push((id, s));
+                    }
+                }
+            }
+        }
+        if !self.memtable.is_empty() {
+            let base = self.memtable.base();
+            let hi = base + self.memtable.len() as u64;
+            local.clear();
+            for (req, &mode) in reqs.iter().zip(&fetch) {
+                local.push(if req.filter.is_none() || base == 0 {
+                    SearchRequest { mode, ..req.clone() }
+                } else {
+                    req.localized(mode, |id| {
+                        if (base..hi).contains(&id) {
+                            Some(id - base)
+                        } else {
+                            None
+                        }
+                    })
+                });
+            }
+            let scan = LinearScan::build(self.memtable.store().view());
+            scan.search_batch_into(queries, &local, ctx, &mut resps);
+            for (j, resp) in resps.iter().enumerate() {
+                metas[j].0.merge(&resp.stats);
+                metas[j].1 |= resp.truncated;
+                for &(local_id, s) in resp.hits.iter() {
+                    let id = base + local_id as u64;
+                    if !self.tombstones.contains(&id) {
+                        outs[j].push((id, s));
+                    }
+                }
+            }
+        }
+        for (out, k) in outs.iter_mut().zip(&ks) {
+            sort_hits(out);
+            if let Some(k) = k {
+                out.truncate(*k);
+            }
+        }
+    }
 }

@@ -479,6 +479,25 @@ impl IngestCorpus {
         self.inner.cell.load().search_ctx(q, req, ctx, out)
     }
 
+    /// Execute a batch of typed plans over the current snapshot (ADR-006):
+    /// the whole batch fans out together, so each generation's index sees
+    /// one [`crate::index::SimilarityIndex::search_batch_into`] call and a
+    /// batch of plain plans descends each tree once behind the shared
+    /// frontier. The snapshot is loaded once — every query in the batch
+    /// sees the same consistent corpus. `outs[j]` receives query `j`'s
+    /// global hits, `metas[j]` its stats and truncation flag; the query
+    /// boundary is owned by the batch machinery (no `begin_query` here).
+    pub fn search_batch_ctx(
+        &self,
+        queries: &[DenseVec],
+        reqs: &[crate::query::SearchRequest],
+        ctx: &mut QueryContext,
+        outs: &mut Vec<Vec<(u64, f64)>>,
+        metas: &mut Vec<(crate::index::QueryStats, bool)>,
+    ) {
+        self.inner.cell.load().search_batch_ctx(queries, reqs, ctx, outs, metas)
+    }
+
     /// Exact kNN over the current snapshot through a borrowed
     /// [`QueryContext`] (plain-plan shim over [`IngestCorpus::search_ctx`]).
     pub fn knn_ctx(

@@ -102,6 +102,32 @@
 //! println!("quantized-query builds: {}", ctx.quant_builds());
 //! ```
 //!
+//! Batches of *plain* plans go further (ADR-006):
+//! [`index::SimilarityIndex::search_batch_into`] descends the tree
+//! **once** for the whole batch behind a shared frontier — a node is
+//! pruned only when
+//! no live query's bound admits it, queries retire as their heaps
+//! tighten, and every leaf visit scores a (query-block × row-block)
+//! kernel call. Results stay byte-identical to per-query execution;
+//! optioned plans fall back per query automatically:
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::{uniform_sphere, uniform_sphere_store};
+//! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::query::{QueryContext, SearchRequest};
+//!
+//! let store = uniform_sphere_store(10_000, 64, 42);
+//! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
+//! let queries = uniform_sphere(32, 64, 43);
+//! let reqs: Vec<_> = queries.iter().map(|_| SearchRequest::knn(10).build()).collect();
+//! let mut ctx = QueryContext::new();
+//! let mut resps = Vec::new();
+//! index.search_batch_into(&queries, &reqs, &mut ctx, &mut resps);
+//! let nodes: u64 = resps.iter().map(|r| r.stats.nodes_visited).sum();
+//! println!("one shared descent: {nodes} physical node visits for 32 queries");
+//! ```
+//!
 //! Indexes also build from an owning `Vec<V>` for any `SimVector` (the
 //! per-item path sparse corpora use):
 //!

@@ -40,7 +40,13 @@ use std::collections::BinaryHeap;
 use std::marker::PhantomData;
 
 use crate::index::{KnnHeap, QueryStats};
-use crate::storage::{FilterMode, KernelScratch};
+use crate::storage::{FilterMode, KernelScratch, QueryBlock};
+
+/// The maximum number of queries one shared-frontier traversal carries:
+/// a batch entry's live-query set travels as a `u64` bitmask stored in
+/// the frontier's auxiliary float (ADR-006), so one chunk holds at most
+/// 64 slots. Larger request batches are served in chunks of this size.
+pub const MAX_BATCH: usize = 64;
 
 /// A type-erased frontier entry: the upper bound (the heap priority), a
 /// node pointer, and one auxiliary float (the already-computed center/parent
@@ -122,6 +128,182 @@ impl<'t, T> Frontier<'t, T> {
     }
 }
 
+/// Per-slot mode parameters of one batch entry, resolved from its
+/// [`SearchRequest`] at [`BatchContext::begin`].
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BatchSlot {
+    /// Range mode: hits are collected directly instead of through a heap.
+    pub range: bool,
+    /// The similarity threshold (`Range` / `KnnWithin` tau; `-1.0`, the
+    /// cosine minimum, when the mode has none).
+    pub tau: f64,
+    /// `KnnWithin`: `tau` also prunes the kNN traversal outright.
+    pub within: bool,
+}
+
+impl Default for BatchSlot {
+    fn default() -> Self {
+        BatchSlot { range: false, tau: -1.0, within: false }
+    }
+}
+
+/// The multi-query traversal arena (ADR-006): per-slot result heaps,
+/// stats windows, and kernel scratches, plus the packed [`QueryBlock`]
+/// the GEMM-shaped multi kernels consume and the live-list/floor staging
+/// buffers every shared-frontier leaf visit reuses. Leased from a
+/// [`QueryContext`] ([`QueryContext::lease_batch`]) so the steady-state
+/// batch path allocates nothing once the arena has grown to the largest
+/// batch size it has served (ADR-004).
+///
+/// One batch carries at most [`MAX_BATCH`] slots; the index-level batch
+/// entry points chunk larger request lists.
+#[derive(Default)]
+pub struct BatchContext {
+    /// The packed query block fed to the multi kernels (CorpusView path;
+    /// per-item corpora leave it empty).
+    pub(crate) qb: QueryBlock,
+    /// Per-slot kNN collectors (slot-indexed; idle for range slots).
+    pub(crate) heaps: Vec<KnnHeap>,
+    /// Per-slot instrumentation windows.
+    pub(crate) stats: Vec<QueryStats>,
+    /// Per-slot kernel scratches: one cached `QuantQuery` per slot per
+    /// batch, amortized across every row block the traversal scans.
+    pub(crate) scratches: Vec<KernelScratch>,
+    /// Per-slot mode parameters.
+    pub(crate) slots: Vec<BatchSlot>,
+    /// Compacted live-slot list staged for the current kernel scan.
+    pub(crate) live: Vec<u32>,
+    /// Slot-indexed certified floors staged for the current kernel scan.
+    pub(crate) floors: Vec<f64>,
+    /// Active batch size (slots beyond it are idle capacity). Crate
+    /// visibility only so the index-level batch frame can destructure the
+    /// arena into disjoint field borrows; everyone else reads
+    /// [`BatchContext::len`].
+    pub(crate) len: usize,
+}
+
+impl BatchContext {
+    /// Active batch size.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Arm the arena for one batch of *plain* plans: per-slot heaps reset
+    /// to their modes (with the `KnnWithin` floor pre-armed), stats and
+    /// floors zeroed, quantized-query caches invalidated.
+    ///
+    /// # Panics
+    /// Panics when the batch exceeds [`MAX_BATCH`] — callers chunk first.
+    pub fn begin(&mut self, reqs: &[SearchRequest]) {
+        let q = reqs.len();
+        assert!(q <= MAX_BATCH, "batch of {q} exceeds MAX_BATCH={MAX_BATCH}");
+        if self.slots.len() < q {
+            self.heaps.resize_with(q, KnnHeap::default);
+            self.stats.resize(q, QueryStats::default());
+            self.scratches.resize_with(q, KernelScratch::new);
+            self.slots.resize_with(q, BatchSlot::default);
+            self.floors.resize(q, -1.0);
+        }
+        self.len = q;
+        for (j, req) in reqs.iter().enumerate() {
+            self.stats[j] = QueryStats::default();
+            self.scratches[j].invalidate();
+            self.slots[j] = match req.mode {
+                SearchMode::Range { tau } => BatchSlot { range: true, tau, within: false },
+                SearchMode::Knn { k } => {
+                    self.heaps[j].reset(k);
+                    BatchSlot { range: false, tau: -1.0, within: false }
+                }
+                SearchMode::KnnWithin { k, tau } => {
+                    self.heaps[j].reset(k);
+                    self.heaps[j].set_min(tau);
+                    BatchSlot { range: false, tau, within: true }
+                }
+            };
+        }
+    }
+
+    /// The all-live bitmask for this batch (the root frontier entry's
+    /// auxiliary payload).
+    #[inline]
+    pub fn full_mask(&self) -> u64 {
+        if self.len == MAX_BATCH {
+            u64::MAX
+        } else {
+            (1u64 << self.len) - 1
+        }
+    }
+
+    /// Whether slot `j` can still admit a node with certified upper bound
+    /// `ub` — the batch form of the single-query prune predicates. A range
+    /// slot is live iff `ub >= tau` (a node below the threshold cannot
+    /// hold a hit). A kNN slot is dead once `ub` is strictly below its
+    /// `KnnWithin` floor, or once its heap is full and `ub` cannot beat
+    /// the current k-th similarity.
+    #[inline]
+    pub fn slot_alive(&self, j: usize, ub: f64) -> bool {
+        let slot = self.slots[j];
+        if slot.range {
+            return ub >= slot.tau;
+        }
+        if slot.within && ub < slot.tau {
+            return false;
+        }
+        let heap = &self.heaps[j];
+        heap.len() < heap.k() || ub > heap.floor()
+    }
+
+    /// Drop every slot of `mask` that is dead at `ub` (queries retire from
+    /// an entry as their heaps tighten between push and pop).
+    #[inline]
+    pub fn refine(&self, mask: u64, ub: f64) -> u64 {
+        let mut out = mask;
+        let mut m = mask;
+        while m != 0 {
+            let j = m.trailing_zeros();
+            m &= m - 1;
+            if !self.slot_alive(j as usize, ub) {
+                out &= !(1u64 << j);
+            }
+        }
+        out
+    }
+
+    /// Whether *any* slot of the batch could still admit a node with
+    /// upper bound `ub` — the global termination check: when this is
+    /// false at the popped (maximum remaining) bound of a best-first
+    /// frontier, every remaining entry is dead for every query.
+    #[inline]
+    pub fn any_alive(&self, ub: f64) -> bool {
+        (0..self.len).any(|j| self.slot_alive(j, ub))
+    }
+
+    /// Stage the compacted live-slot list and the slot-indexed certified
+    /// floors for one kernel scan (`scan_ids_multi_with` /
+    /// `scan_all_multi_with`): `floors[j]` is a value slot `j`'s result
+    /// set provably cannot admit below — its heap floor, or its range
+    /// threshold — captured at scan entry exactly like the single-query
+    /// quantized pre-filter captures it.
+    pub fn stage_live(&mut self, mask: u64) {
+        self.live.clear();
+        let mut m = mask;
+        while m != 0 {
+            let j = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.live.push(j as u32);
+            self.floors[j] = if self.slots[j].range {
+                self.slots[j].tau
+            } else {
+                self.heaps[j].floor()
+            };
+        }
+    }
+}
+
 /// Reusable per-worker query scratch: every buffer a traversal needs, plus
 /// per-query instrumentation and the kernel-level quantized-query cache.
 ///
@@ -160,6 +342,9 @@ pub struct QueryContext {
     totals: QueryStats,
     /// Queries started on this context.
     queries: u64,
+    /// The multi-query traversal arena (ADR-006), leased via
+    /// [`QueryContext::lease_batch`].
+    batch: BatchContext,
 }
 
 impl QueryContext {
@@ -317,6 +502,20 @@ impl QueryContext {
     #[inline]
     pub fn release_pairs(&mut self, v: Vec<(u32, f64)>) {
         self.pairs_pool.push(v);
+    }
+
+    /// Lease the multi-query traversal arena (ADR-006). The arena comes
+    /// back in whatever state the last batch left it — callers arm it
+    /// with [`BatchContext::begin`]. Pair with
+    /// [`QueryContext::release_batch`].
+    #[inline]
+    pub fn lease_batch(&mut self) -> BatchContext {
+        std::mem::take(&mut self.batch)
+    }
+
+    #[inline]
+    pub fn release_batch(&mut self, batch: BatchContext) {
+        self.batch = batch;
     }
 
     /// Lease a cleared `Vec<u32>` from the pool (budgeted chunk scans).

@@ -126,6 +126,62 @@ impl KernelCounters {
 /// Sink for per-row similarities; invoked in ascending position order.
 pub type SimSink<'a> = &'a mut dyn FnMut(usize, f64);
 
+/// Sink for multi-query similarities: `(query slot, position, sim)`. For
+/// each fixed slot, positions arrive in ascending order; the interleaving
+/// across slots is backend-chosen (the consumers — per-slot heaps and
+/// exact-checked range pushes — are insertion-order independent).
+pub type MultiSimSink<'a> = &'a mut dyn FnMut(usize, usize, f64);
+
+/// A batch of queries staged row-major in one flat f32 block — the
+/// query-side operand of the (query-block × row-block) kernel calls
+/// (ADR-006). Built once per batch from the individual query vectors; the
+/// buffer is reused across batches, so steady-state staging allocates
+/// nothing once warmed.
+#[derive(Default)]
+pub struct QueryBlock {
+    flat: Vec<f32>,
+    d: usize,
+}
+
+impl QueryBlock {
+    /// Clear and set the dimension for a new batch (buffer kept).
+    pub fn reset(&mut self, d: usize) {
+        self.flat.clear();
+        self.d = d;
+    }
+
+    /// Append one query row (must match the staged dimension).
+    pub fn push(&mut self, q: &[f32]) {
+        assert_eq!(q.len(), self.d, "QueryBlock: query dim {} != {}", q.len(), self.d);
+        self.flat.extend_from_slice(q);
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Number of staged queries.
+    pub fn len(&self) -> usize {
+        if self.d == 0 { 0 } else { self.flat.len() / self.d }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Query row `i`.
+    #[inline]
+    pub fn query(&self, i: usize) -> &[f32] {
+        &self.flat[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The whole staged block (row-major, `len() * dim()` floats).
+    #[inline]
+    pub fn as_flat(&self) -> &[f32] {
+        &self.flat
+    }
+}
+
 /// How the armed id filter of a [`KernelScratch`] interprets its id list
 /// (ADR-005). Ids are in the *report-id* space of the scan — the same ids
 /// a scan's heap offers / output pairs carry.
@@ -428,6 +484,63 @@ pub trait KernelBackend: Send + Sync {
         out: &mut Vec<(u32, f64)>,
         scratch: &mut KernelScratch,
     ) -> u64;
+
+    /// Exact sims of every `live` query of the staged block against the
+    /// selection — the (query-block × row-block) call of ADR-006. Every
+    /// sim is bit-identical to [`dot_slice`], exactly like
+    /// [`KernelBackend::sim_block`]; the default runs the canonical
+    /// per-query loop, the SIMD backend re-uses each row block across
+    /// queries.
+    fn sim_block_multi(
+        &self,
+        qb: &QueryBlock,
+        live: &[u32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        sink: MultiSimSink<'_>,
+    ) {
+        for &j in live {
+            let q = qb.query(j as usize);
+            match sel {
+                RowSel::Block { start, n } => {
+                    let block = &s.flat[start * s.d..(start + n) * s.d];
+                    self.sim_block(q, block, s.d, n, &mut |pos, sim| sink(j as usize, pos, sim));
+                }
+                RowSel::Gather { rows, base, .. } => {
+                    self.sim_gather(q, s.flat, s.d, rows, base, &mut |pos, sim| {
+                        sink(j as usize, pos, sim)
+                    });
+                }
+            }
+        }
+    }
+
+    /// Batched leaf scan with per-slot certified floors (the multi-query
+    /// traversal's bucket visit): like [`KernelBackend::sim_block_multi`],
+    /// but a backend may skip a `(slot, row)` pair when the row is
+    /// *certified* to score strictly below `floors[slot]` — so skipped
+    /// rows provably cannot change that slot's result set. Exact backends
+    /// skip nothing; the quantized backend pre-filters per slot through
+    /// one cached `QuantQuery` per slot (`scratches[slot]`), amortized
+    /// across every row block of the batch. Returns exact evaluations
+    /// (= sink invocations).
+    #[allow(clippy::too_many_arguments)]
+    fn scan_multi(
+        &self,
+        qb: &QueryBlock,
+        live: &[u32],
+        floors: &[f64],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        scratches: &mut [KernelScratch],
+        sink: MultiSimSink<'_>,
+    ) -> u64 {
+        let _ = (floors, scratches);
+        let n = sel.len() as u64;
+        self.counters().exact_rows.fetch_add(live.len() as u64 * n, Relaxed);
+        self.sim_block_multi(qb, live, s, sel, sink);
+        live.len() as u64 * n
+    }
 }
 
 /// The canonical scalar backend: today's loops, bit-for-bit.
@@ -564,6 +677,31 @@ impl KernelBackend for SimdKernel {
         with_filtered_sel(scratch, sel, |_, sel| {
             exact_range(self.isa, &self.counters, q, s, sel, tau, out)
         })
+    }
+
+    fn sim_block_multi(
+        &self,
+        qb: &QueryBlock,
+        live: &[u32],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        sink: MultiSimSink<'_>,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if let Isa::Avx = self.isa {
+            assert_eq!(qb.dim(), s.d, "sim_block_multi: query dim {} != d={}", qb.dim(), s.d);
+            match sel {
+                RowSel::Block { start, n } => {
+                    let block = &s.flat[start * s.d..(start + n) * s.d];
+                    unsafe { x86::block_multi_avx(qb.as_flat(), s.d, live, block, n, sink) };
+                }
+                RowSel::Gather { rows, base, .. } => unsafe {
+                    x86::gather_multi_avx(qb.as_flat(), s.d, live, s.flat, rows, base, sink)
+                },
+            }
+            return;
+        }
+        exact_multi(Isa::Scalar, qb, live, s, sel, sink);
     }
 }
 
@@ -733,6 +871,71 @@ impl KernelBackend for QuantizedI8Kernel {
             self.scan_range_unfiltered(q, s, sel, tau, out, scratch)
         })
     }
+
+    #[allow(clippy::too_many_arguments)]
+    fn scan_multi(
+        &self,
+        qb: &QueryBlock,
+        live: &[u32],
+        floors: &[f64],
+        s: StoreRef<'_>,
+        sel: RowSel<'_>,
+        scratches: &mut [KernelScratch],
+        sink: MultiSimSink<'_>,
+    ) -> u64 {
+        let n = sel.len();
+        if n == 0 || live.is_empty() {
+            return 0;
+        }
+        let Some(quant) = s.quant else {
+            // Store built without a sidecar: stay exact.
+            self.counters.exact_rows.fetch_add(live.len() as u64 * n as u64, Relaxed);
+            exact_multi(self.isa, qb, live, s, sel, sink);
+            return live.len() as u64 * n as u64;
+        };
+        let mut evals = 0u64;
+        for &j in live {
+            let q = qb.query(j as usize);
+            let scratch = &mut scratches[j as usize];
+            // One quantization per slot per batch, however many row blocks
+            // the traversal visits: the slot's scratch caches the
+            // QuantQuery exactly like the single-query path does per query.
+            scratch.ensure_quant(q);
+            let KernelScratch { state, qq, ub, rows, ids, .. } = scratch;
+            match state {
+                QuantState::Built => {}
+                // Non-finite query components: certified bounds are
+                // meaningless for this slot; score it exactly.
+                QuantState::NonFinite => {
+                    self.counters.exact_rows.fetch_add(n as u64, Relaxed);
+                    exact_multi(self.isa, qb, &[j], s, sel, sink);
+                    evals += n as u64;
+                    continue;
+                }
+                QuantState::Empty => unreachable!("ensure_quant always fills the cache"),
+            }
+            self.counters.quant_rows.fetch_add(n as u64, Relaxed);
+            quant.upper_bounds_into(qq, &sel, ub);
+            // Survivors for this slot: rows below its certified floor are
+            // provably outside its result set (exact sim <= ub < floor).
+            // `ids` stages selection *positions* here, so the sink reports
+            // in the same position space as the exact backends.
+            rows.clear();
+            ids.clear();
+            for (pos, &u) in ub.iter().enumerate() {
+                if u >= floors[j as usize] {
+                    rows.push(sel.store_row(pos) as u32);
+                    ids.push(pos as u32);
+                }
+            }
+            sim_gather_isa(self.isa, q, s.flat, s.d, rows, 0, &mut |i, sim| {
+                sink(j as usize, ids[i] as usize, sim)
+            });
+            self.counters.rerank_rows.fetch_add(rows.len() as u64, Relaxed);
+            evals += rows.len() as u64;
+        }
+        evals
+    }
 }
 
 // --- exact scan plumbing (shared by all backends) --------------------------
@@ -811,6 +1014,34 @@ fn exact_range(
         }
     }
     n as u64
+}
+
+/// Canonical multi-query exact scan: the per-query loop over the ISA
+/// kernels (each slot's sims bit-identical to [`dot_slice`]). The scalar
+/// backend's `sim_block_multi` default and every non-AVX fallback route
+/// here.
+fn exact_multi(
+    isa: Isa,
+    qb: &QueryBlock,
+    live: &[u32],
+    s: StoreRef<'_>,
+    sel: RowSel<'_>,
+    sink: MultiSimSink<'_>,
+) {
+    for &j in live {
+        let q = qb.query(j as usize);
+        match sel {
+            RowSel::Block { start, n } => {
+                let block = &s.flat[start * s.d..(start + n) * s.d];
+                sim_block_isa(isa, q, block, s.d, n, &mut |pos, sim| sink(j as usize, pos, sim));
+            }
+            RowSel::Gather { rows, base, .. } => {
+                sim_gather_isa(isa, q, s.flat, s.d, rows, base, &mut |pos, sim| {
+                    sink(j as usize, pos, sim)
+                });
+            }
+        }
+    }
 }
 
 // --- ISA dispatch ----------------------------------------------------------
@@ -973,7 +1204,7 @@ mod x86 {
         _mm256_mul_pd, _mm256_setzero_pd, _mm_cvtsd_f64, _mm_loadu_ps, _mm_unpackhi_pd,
     };
 
-    use super::SimSink;
+    use super::{MultiSimSink, SimSink};
 
     /// Widen 4 f32s at `p[j..j+4]` to f64 lanes. Caller guarantees bounds.
     #[inline]
@@ -1109,6 +1340,103 @@ mod x86 {
         }
         if i < n {
             sink(i, dot1(q, &block[i * d..(i + 1) * d]));
+        }
+    }
+
+    /// The blocked q×n microkernel (ADR-006): row-block outer, query
+    /// inner, so each 4-row block is loaded from cache once and streamed
+    /// against every live query. Per (query, row) the reduction is the
+    /// same `dot4`/`dot2`/`dot1` the single-query kernel runs, so every
+    /// sim stays bit-identical to the scalar path.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn block_multi_avx(
+        qs: &[f32],
+        d: usize,
+        live: &[u32],
+        block: &[f32],
+        n: usize,
+        sink: MultiSimSink<'_>,
+    ) {
+        let q = |j: u32| &qs[j as usize * d..(j as usize + 1) * d];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let b = i * d;
+            let (r0, r1, r2, r3) = (
+                &block[b..b + d],
+                &block[b + d..b + 2 * d],
+                &block[b + 2 * d..b + 3 * d],
+                &block[b + 3 * d..b + 4 * d],
+            );
+            for &j in live {
+                let (s0, s1, s2, s3) = dot4(q(j), r0, r1, r2, r3);
+                sink(j as usize, i, s0);
+                sink(j as usize, i + 1, s1);
+                sink(j as usize, i + 2, s2);
+                sink(j as usize, i + 3, s3);
+            }
+            i += 4;
+        }
+        while i + 2 <= n {
+            let b = i * d;
+            let (r0, r1) = (&block[b..b + d], &block[b + d..b + 2 * d]);
+            for &j in live {
+                let (s0, s1) = dot2(q(j), r0, r1);
+                sink(j as usize, i, s0);
+                sink(j as usize, i + 1, s1);
+            }
+            i += 2;
+        }
+        if i < n {
+            let r = &block[i * d..(i + 1) * d];
+            for &j in live {
+                sink(j as usize, i, dot1(q(j), r));
+            }
+        }
+    }
+
+    /// Gather form of [`block_multi_avx`]: same row-block-outer shape over
+    /// gathered rows.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gather_multi_avx(
+        qs: &[f32],
+        d: usize,
+        live: &[u32],
+        flat: &[f32],
+        rows: &[u32],
+        base: usize,
+        sink: MultiSimSink<'_>,
+    ) {
+        let q = |j: u32| &qs[j as usize * d..(j as usize + 1) * d];
+        let row = |pos: usize| {
+            let r = base + rows[pos] as usize;
+            &flat[r * d..(r + 1) * d]
+        };
+        let mut i = 0usize;
+        while i + 4 <= rows.len() {
+            let (r0, r1, r2, r3) = (row(i), row(i + 1), row(i + 2), row(i + 3));
+            for &j in live {
+                let (s0, s1, s2, s3) = dot4(q(j), r0, r1, r2, r3);
+                sink(j as usize, i, s0);
+                sink(j as usize, i + 1, s1);
+                sink(j as usize, i + 2, s2);
+                sink(j as usize, i + 3, s3);
+            }
+            i += 4;
+        }
+        while i + 2 <= rows.len() {
+            let (r0, r1) = (row(i), row(i + 1));
+            for &j in live {
+                let (s0, s1) = dot2(q(j), r0, r1);
+                sink(j as usize, i, s0);
+                sink(j as usize, i + 1, s1);
+            }
+            i += 2;
+        }
+        if i < rows.len() {
+            let r = row(i);
+            for &j in live {
+                sink(j as usize, i, dot1(q(j), r));
+            }
         }
     }
 
@@ -1521,6 +1849,115 @@ mod tests {
         shared.invalidate();
         kernel.scan_topk(q2.as_slice(), sref, sel, &mut h2, &mut shared);
         assert_eq!(shared.quant_builds(), 3);
+    }
+
+    #[test]
+    fn multi_kernels_match_per_query_bitwise() {
+        // Straddle the 4-row block, pair, and tail boundaries; exercise a
+        // live list with a hole so skipped slots truly see no sims.
+        for (n, d) in [(5usize, 7usize), (9, 13), (33, 17), (64, 32)] {
+            let rows = uniform_sphere(n, d, 7 + n as u64);
+            let mut flat = Vec::new();
+            for r in &rows {
+                flat.extend_from_slice(r.as_slice());
+            }
+            let queries = uniform_sphere(5, d, 1000 + n as u64);
+            let mut qb = QueryBlock::default();
+            qb.reset(d);
+            for q in &queries {
+                qb.push(q.as_slice());
+            }
+            assert_eq!(qb.len(), 5);
+            let live = [0u32, 2, 3, 4];
+            let gather: Vec<u32> = (0..n as u32).rev().collect();
+            let sref = StoreRef { flat: &flat, d, quant: None };
+            for kind in [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8] {
+                let backend = backend_for(kind);
+                let sels = [
+                    RowSel::Block { start: 0, n },
+                    RowSel::Gather { rows: &gather, base: 0, report: None },
+                ];
+                for sel in sels {
+                    let mut got: Vec<Vec<(usize, f64)>> = vec![Vec::new(); 5];
+                    backend.sim_block_multi(&qb, &live, sref, sel, &mut |j, pos, sim| {
+                        got[j].push((pos, sim))
+                    });
+                    assert!(got[1].is_empty(), "slot 1 is not live");
+                    for &j in &live {
+                        let q = queries[j as usize].as_slice();
+                        let mut want: Vec<(usize, f64)> = Vec::new();
+                        match sel {
+                            RowSel::Block { .. } => backend
+                                .sim_block(q, &flat, d, n, &mut |pos, s| want.push((pos, s))),
+                            RowSel::Gather { .. } => backend
+                                .sim_gather(q, &flat, d, &gather, 0, &mut |pos, s| {
+                                    want.push((pos, s))
+                                }),
+                        }
+                        assert_eq!(got[j as usize].len(), want.len());
+                        for (a, b) in got[j as usize].iter().zip(&want) {
+                            assert_eq!(a.0, b.0, "{} n={n} d={d}", kind.name());
+                            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{} n={n} d={d}", kind.name());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_scan_multi_prefilters_exactly_and_quantizes_once_per_slot() {
+        let (n, d, q_count, k) = (128usize, 16usize, 4usize, 4usize);
+        let rows = uniform_sphere(n, d, 41);
+        let mut flat = Vec::new();
+        for r in &rows {
+            flat.extend_from_slice(r.as_slice());
+        }
+        let side = QuantSidecar::build(&flat, d);
+        let sref = StoreRef { flat: &flat, d, quant: Some(&side) };
+        let queries = uniform_sphere(q_count, d, 4242);
+        let mut qb = QueryBlock::default();
+        qb.reset(d);
+        for q in &queries {
+            qb.push(q.as_slice());
+        }
+        let kernel = QuantizedI8Kernel::new();
+        let live: Vec<u32> = (0..q_count as u32).collect();
+        let mut scratches: Vec<KernelScratch> =
+            (0..q_count).map(|_| KernelScratch::new()).collect();
+        let mut heaps: Vec<KnnHeap> = (0..q_count).map(|_| KnnHeap::new(k)).collect();
+        let mut floors = vec![0.0f64; q_count];
+        // 8 bucket-like visits of 16 rows, floors captured at each entry —
+        // the multi-traversal leaf-visit shape.
+        for b in 0..8usize {
+            for (f, h) in floors.iter_mut().zip(&heaps) {
+                *f = h.floor();
+            }
+            let sel = RowSel::Block { start: b * 16, n: 16 };
+            kernel.scan_multi(&qb, &live, &floors, sref, sel, &mut scratches, &mut |j, pos, sim| {
+                heaps[j].offer((b * 16 + pos) as u32, sim)
+            });
+        }
+        for s in &scratches {
+            assert_eq!(s.quant_builds(), 1, "one QuantQuery per slot per batch");
+        }
+        let scalar = ScalarKernel::default();
+        for (h, q) in heaps.into_iter().zip(&queries) {
+            let mut want = KnnHeap::new(k);
+            scalar.scan_topk(
+                q.as_slice(),
+                sref,
+                RowSel::Block { start: 0, n },
+                &mut want,
+                &mut KernelScratch::new(),
+            );
+            let (a, b) = (h.into_sorted(), want.into_sorted());
+            assert_eq!(a.len(), b.len());
+            for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+                assert_eq!(ia, ib);
+                assert_eq!(sa.to_bits(), sb.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -38,7 +38,8 @@ use crate::metrics::DenseVec;
 
 pub use kernels::{
     backend_for, default_kernel, FilterMode, KernelBackend, KernelCounters, KernelKind,
-    KernelScratch, QuantSidecar, QuantizedI8Kernel, RowSel, ScalarKernel, SimdKernel, StoreRef,
+    KernelScratch, MultiSimSink, QuantSidecar, QuantizedI8Kernel, QueryBlock, RowSel,
+    ScalarKernel, SimdKernel, StoreRef,
 };
 pub use kernels::{QUANT_MAX_DIM, QUANT_MIN_ROWS};
 
@@ -689,6 +690,77 @@ impl CorpusView {
         let rows = mapped.as_deref().unwrap_or(locals);
         let gather = RowSel::Gather { rows, base, report: Some(locals) };
         kernel.scan_range(q, s, gather, tau, out, scratch)
+    }
+
+    fn check_query_block(&self, qb: &QueryBlock) {
+        assert_eq!(
+            qb.dim(),
+            self.dim(),
+            "query block dimension {} != corpus dimension {}",
+            qb.dim(),
+            self.dim()
+        );
+    }
+
+    /// Multi-query full-view scan (the batched-traversal leaf path,
+    /// ADR-006): every live query slot scores every view row through one
+    /// [`KernelBackend::scan_multi`] call. `sink(slot, pos, sim)` receives
+    /// selection positions `0..len`; the caller maps positions to ids.
+    /// Exact backends invoke the sink for every `(live slot, row)` pair;
+    /// the quantized backend pre-filters each slot against `floors[slot]`
+    /// with certified upper bounds and re-ranks survivors exactly, so
+    /// every delivered sim is bit-identical to [`dot_slice`]. Returns the
+    /// number of sink invocations (exact evaluations delivered).
+    ///
+    /// The batch path serves *plain* plans only, so this always dispatches
+    /// the store's primary backend — no per-request override resolution.
+    pub fn scan_all_multi_with(
+        &self,
+        qb: &QueryBlock,
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: MultiSimSink<'_>,
+    ) -> u64 {
+        self.check_query_block(qb);
+        if self.is_empty() || live.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        match &self.sel {
+            Selection::Rows(lo, hi) => {
+                let sel = RowSel::Block { start: *lo, n: *hi - *lo };
+                self.store.kernel.scan_multi(qb, live, floors, s, sel, scratches, sink)
+            }
+            Selection::Ids(sel) => {
+                let gather = RowSel::Gather { rows: &sel.ids, base: 0, report: None };
+                self.store.kernel.scan_multi(qb, live, floors, s, gather, scratches, sink)
+            }
+        }
+    }
+
+    /// Multi-query id-list scan (the batched leaf-bucket hot path,
+    /// ADR-006): like [`CorpusView::scan_all_multi_with`] over an explicit
+    /// local-id list. `sink(slot, pos, sim)` receives positions into
+    /// `locals`; the caller maps `pos` back through `locals[pos]`.
+    pub fn scan_ids_multi_with(
+        &self,
+        qb: &QueryBlock,
+        locals: &[u32],
+        live: &[u32],
+        floors: &[f64],
+        scratches: &mut [KernelScratch],
+        sink: MultiSimSink<'_>,
+    ) -> u64 {
+        self.check_query_block(qb);
+        if locals.is_empty() || live.is_empty() {
+            return 0;
+        }
+        let s = self.store_ref();
+        let (mapped, base) = self.resolve_locals(locals);
+        let rows = mapped.as_deref().unwrap_or(locals);
+        let gather = RowSel::Gather { rows, base, report: None };
+        self.store.kernel.scan_multi(qb, live, floors, s, gather, scratches, sink)
     }
 }
 

@@ -1,0 +1,309 @@
+//! ADR-006 batched multi-query traversal: `search_batch_into` (and the
+//! shard / ingest layers above it) must match sequential per-query
+//! execution bitwise on tie-free corpora, across all 7 indexes × 3
+//! kernels × static, sharded, and mutable corpora — while the shared
+//! frontier demonstrably does *less* physical work than q independent
+//! traversals.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::router::build_shards;
+use simetra::coordinator::IndexKind;
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::{QueryStats, SimilarityIndex};
+use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::metrics::DenseVec;
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
+use simetra::storage::{CorpusStore, KernelKind};
+
+const ALL_KINDS: [IndexKind; 7] = [
+    IndexKind::Linear,
+    IndexKind::Vp,
+    IndexKind::Ball,
+    IndexKind::MTree,
+    IndexKind::Cover,
+    IndexKind::Laesa,
+    IndexKind::Gnat,
+];
+
+const ALL_KERNELS: [KernelKind; 3] =
+    [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8];
+
+/// Bitwise equality of two result lists: same ids, same f64 bit patterns.
+fn assert_bits_eq(a: &[(u32, f64)], b: &[(u32, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+fn assert_bits_eq64(a: &[(u64, f64)], b: &[(u64, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+/// The sequential oracle: one `search_into` per query through a fresh
+/// context, exactly what the batch path claims to reproduce.
+fn sequential(
+    index: &dyn SimilarityIndex<DenseVec>,
+    queries: &[DenseVec],
+    reqs: &[SearchRequest],
+) -> Vec<SearchResponse> {
+    let mut ctx = QueryContext::new();
+    let mut resps = Vec::new();
+    for (q, req) in queries.iter().zip(reqs) {
+        ctx.begin_query();
+        let mut resp = SearchResponse::default();
+        index.search_into(q, req, &mut ctx, &mut resp);
+        resps.push(resp);
+    }
+    resps
+}
+
+fn assert_batch_matches(
+    index: &dyn SimilarityIndex<DenseVec>,
+    queries: &[DenseVec],
+    reqs: &[SearchRequest],
+    what: &str,
+) {
+    let mut ctx = QueryContext::new();
+    let mut resps = Vec::new();
+    index.search_batch_into(queries, reqs, &mut ctx, &mut resps);
+    let want = sequential(index, queries, reqs);
+    assert_eq!(resps.len(), want.len(), "{what}: response count");
+    for (qi, (b, s)) in resps.iter().zip(&want).enumerate() {
+        assert_bits_eq(&s.hits, &b.hits, &format!("{what} q{qi}"));
+        assert_eq!(s.truncated, b.truncated, "{what} q{qi} truncated");
+    }
+}
+
+// --- 1. plain batches, all indexes × kernels -------------------------------
+
+#[test]
+fn plain_batches_match_sequential_across_indexes_and_kernels() {
+    // Corpus size stays >= QUANT_MIN_ROWS so the i8 leg really builds a
+    // sidecar and takes the pre-filter + re-rank path.
+    let rows = uniform_sphere(1200, 16, 42);
+    let queries: Vec<DenseVec> = uniform_sphere(12, 16, 43);
+    let knn_reqs: Vec<SearchRequest> =
+        (0..queries.len()).map(|_| SearchRequest::knn(8).build()).collect();
+    let rng_reqs: Vec<SearchRequest> =
+        (0..queries.len()).map(|_| SearchRequest::range(0.15).build()).collect();
+    for kernel in ALL_KERNELS {
+        let store = CorpusStore::from_rows(rows.clone()).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let what = format!("{} / {}", kind.name(), kernel.name());
+            assert_batch_matches(index.as_ref(), &queries, &knn_reqs, &format!("{what} knn"));
+            assert_batch_matches(index.as_ref(), &queries, &rng_reqs, &format!("{what} range"));
+        }
+    }
+}
+
+// --- 2. mixed modes and ks in one batch ------------------------------------
+
+#[test]
+fn mixed_mode_batches_match_sequential() {
+    let store = uniform_sphere_store(1000, 12, 7);
+    let queries: Vec<DenseVec> = uniform_sphere(9, 12, 8);
+    // One batch mixing kNN (varying k), range (varying tau), and
+    // KnnWithin slots — every slot keeps its own collector and floor.
+    let reqs: Vec<SearchRequest> = (0..queries.len())
+        .map(|i| match i % 3 {
+            0 => SearchRequest::knn(1 + i).build(),
+            1 => SearchRequest::range(0.05 * i as f64).build(),
+            _ => SearchRequest::knn_within(5, 0.0).build(),
+        })
+        .collect();
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        assert_batch_matches(index.as_ref(), &queries, &reqs, &format!("mixed {}", kind.name()));
+    }
+}
+
+// --- 3. mid-batch retirement ------------------------------------------------
+
+#[test]
+fn retiring_slots_leave_live_slots_exact() {
+    let store = uniform_sphere_store(1500, 10, 15);
+    let queries: Vec<DenseVec> = uniform_sphere(4, 10, 16);
+    // Slot 0 retires almost immediately (k=1 with a high floor); slot 3
+    // keeps every node alive to the end (tau=-1 admits the whole corpus).
+    // The survivors must be exactly what sequential execution returns.
+    let reqs = vec![
+        SearchRequest::knn_within(1, 0.6).build(),
+        SearchRequest::knn(5).build(),
+        SearchRequest::range(0.3).build(),
+        SearchRequest::range(-1.0).build(),
+    ];
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let what = format!("retire {}", kind.name());
+        let mut ctx = QueryContext::new();
+        let mut resps = Vec::new();
+        index.search_batch_into(&queries, &reqs, &mut ctx, &mut resps);
+        assert_eq!(resps[3].hits.len(), 1500, "{what}: tau=-1 returns the whole corpus");
+        let want = sequential(index.as_ref(), &queries, &reqs);
+        for (qi, (b, s)) in resps.iter().zip(&want).enumerate() {
+            assert_bits_eq(&s.hits, &b.hits, &format!("{what} q{qi}"));
+        }
+    }
+}
+
+// --- 4. the shared frontier does less physical work -------------------------
+
+#[test]
+fn shared_traversal_visits_fewer_nodes_than_sequential() {
+    let store = uniform_sphere_store(2000, 16, 11);
+    // 16 identical queries: the shared traversal degenerates to ONE
+    // single-query descent (every slot admits and retires the same
+    // nodes), so batched nodes_visited must be ~16x below sequential.
+    let q = uniform_sphere(1, 16, 12).pop().unwrap();
+    let queries: Vec<DenseVec> = vec![q; 16];
+    let reqs: Vec<SearchRequest> =
+        (0..queries.len()).map(|_| SearchRequest::knn(10).build()).collect();
+    for kind in [IndexKind::Vp, IndexKind::Ball, IndexKind::Cover, IndexKind::MTree] {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let mut ctx = QueryContext::new();
+        let mut resps = Vec::new();
+        index.search_batch_into(&queries, &reqs, &mut ctx, &mut resps);
+        let want = sequential(index.as_ref(), &queries, &reqs);
+        for (qi, (b, s)) in resps.iter().zip(&want).enumerate() {
+            assert_bits_eq(&s.hits, &b.hits, &format!("dup {} q{qi}", kind.name()));
+        }
+        let batch_nodes: u64 = resps.iter().map(|r| r.stats.nodes_visited).sum();
+        let seq_nodes: u64 = want.iter().map(|r| r.stats.nodes_visited).sum();
+        assert!(batch_nodes > 0, "{}: batch visited nothing", kind.name());
+        assert!(
+            batch_nodes < seq_nodes,
+            "{}: shared frontier visited {batch_nodes} nodes vs {seq_nodes} sequential",
+            kind.name()
+        );
+    }
+}
+
+// --- 5. optioned plans fall back, bitwise ----------------------------------
+
+#[test]
+fn optioned_batches_fall_back_and_match_sequential() {
+    let store = uniform_sphere_store(600, 10, 21);
+    let queries: Vec<DenseVec> = uniform_sphere(6, 10, 22);
+    let allow: Vec<u64> = (0..600).step_by(3).collect();
+    let reqs: Vec<SearchRequest> = (0..queries.len())
+        .map(|i| match i % 4 {
+            0 => SearchRequest::knn(5).allow(allow.clone()).build(),
+            1 => SearchRequest::range(0.0).deny(vec![1, 2, 3]).build(),
+            2 => SearchRequest::knn(4).kernel(KernelKind::Scalar).build(),
+            _ => SearchRequest::range(-1.0).budget(500).build(),
+        })
+        .collect();
+    assert!(reqs.iter().any(|r| !r.is_plain()));
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        assert_batch_matches(
+            index.as_ref(),
+            &queries,
+            &reqs,
+            &format!("optioned {}", kind.name()),
+        );
+    }
+}
+
+// --- 6. sharded corpora -----------------------------------------------------
+
+#[test]
+fn shard_batches_match_per_query_search_ctx() {
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(1500, 12, 5).with_kernel(kernel);
+        let shards = build_shards(&store, 3, IndexKind::Vp, BoundKind::Mult, 0);
+        assert_eq!(shards.len(), 3);
+        let queries: Vec<DenseVec> = uniform_sphere(8, 12, 6);
+        let plain: Vec<SearchRequest> = (0..queries.len())
+            .map(|i| {
+                if i % 2 == 0 {
+                    SearchRequest::knn(6).build()
+                } else {
+                    SearchRequest::range(0.2).build()
+                }
+            })
+            .collect();
+        // A second round carrying global-id filters exercises the shard's
+        // per-request localization (and the per-query fallback under it).
+        let filtered: Vec<SearchRequest> = (0..queries.len())
+            .map(|i| {
+                if i % 2 == 0 {
+                    SearchRequest::knn(6).allow((0..1500).step_by(2).collect()).build()
+                } else {
+                    SearchRequest::range(0.2).build()
+                }
+            })
+            .collect();
+        for shard in &shards {
+            for reqs in [&plain, &filtered] {
+                let mut ctx = QueryContext::new();
+                let mut resps = Vec::new();
+                shard.search_batch_ctx(&queries, reqs, &mut ctx, &mut resps);
+                for (qi, q) in queries.iter().enumerate() {
+                    let mut c2 = QueryContext::new();
+                    let (hits, _, truncated) = shard.search_ctx(q, &reqs[qi], &mut c2);
+                    let what = format!("shard {} / {} q{qi}", shard.base, kernel.name());
+                    assert_bits_eq(&hits, &resps[qi].hits, &what);
+                    assert_eq!(truncated, resps[qi].truncated, "{what} truncated");
+                }
+            }
+        }
+    }
+}
+
+// --- 7. mutable (ingest) corpora --------------------------------------------
+
+#[test]
+fn ingest_batches_match_per_query_search_ctx() {
+    for kernel in ALL_KERNELS {
+        // Two sealed generations plus staged memtable rows plus
+        // tombstones: the whole batch fans out over one snapshot.
+        let cfg = IngestConfig {
+            seal_threshold: 500,
+            background: false,
+            kernel,
+            ..IngestConfig::new(12)
+        };
+        let corpus = IngestCorpus::new(cfg).unwrap();
+        for r in &uniform_sphere(1200, 12, 31) {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        for id in (0..1200u64).step_by(97) {
+            assert!(corpus.delete(id));
+        }
+        let st = corpus.stats();
+        assert!(st.generations >= 2 && st.memtable_items > 0, "{st:?}");
+
+        let queries: Vec<DenseVec> = uniform_sphere(8, 12, 33);
+        let reqs: Vec<SearchRequest> = (0..queries.len())
+            .map(|i| {
+                if i % 2 == 0 {
+                    SearchRequest::knn(9).build()
+                } else {
+                    SearchRequest::range(0.1).build()
+                }
+            })
+            .collect();
+        let mut ctx = QueryContext::new();
+        let mut outs: Vec<Vec<(u64, f64)>> = Vec::new();
+        let mut metas: Vec<(QueryStats, bool)> = Vec::new();
+        corpus.search_batch_ctx(&queries, &reqs, &mut ctx, &mut outs, &mut metas);
+        assert_eq!(outs.len(), queries.len());
+        for (qi, q) in queries.iter().enumerate() {
+            let mut c2 = QueryContext::new();
+            let mut out = Vec::new();
+            let (_, truncated) = corpus.search_ctx(q, &reqs[qi], &mut c2, &mut out);
+            let what = format!("ingest batch / {} q{qi}", kernel.name());
+            assert_bits_eq64(&out, &outs[qi], &what);
+            assert_eq!(truncated, metas[qi].1, "{what} truncated");
+            assert!(metas[qi].0.sim_evals > 0, "{what} evals");
+        }
+    }
+}

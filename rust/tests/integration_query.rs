@@ -9,7 +9,9 @@
 //!     types with results unchanged (the frontier type-erasure contract).
 //!  3. The steady-state query path performs **zero heap allocations** per
 //!     query (counting global allocator, thread-local so parallel tests
-//!     don't interfere).
+//!     don't interfere) — and the ADR-006 batched traversal holds the
+//!     same bar: a whole `search_batch_into` batch through a warmed
+//!     `BatchContext` arena allocates nothing.
 //!  4. A quantized traversal builds its `QuantQuery` once per query, no
 //!     matter how many leaf buckets it scans (the ROADMAP follow-on).
 
@@ -273,6 +275,47 @@ fn steady_state_queries_allocate_nothing() {
                 allocs,
                 0,
                 "steady-state {} / {} allocated {} times per 12 queries",
+                kind.name(),
+                kernel.name(),
+                allocs
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_state_batches_allocate_nothing() {
+    use simetra::query::{SearchRequest, SearchResponse};
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(2048, 32, 17).with_kernel(kernel);
+        let queries: Vec<DenseVec> = (0..8usize).map(|i| store.vec(i * 211)).collect();
+        // A mixed-mode batch arms every slot shape the arena has.
+        let reqs: Vec<SearchRequest> = (0..queries.len())
+            .map(|i| {
+                if i % 2 == 0 {
+                    SearchRequest::knn(10).build()
+                } else {
+                    SearchRequest::range(0.2).build()
+                }
+            })
+            .collect();
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let mut ctx = QueryContext::new();
+            let mut resps: Vec<SearchResponse> = Vec::new();
+            let mut run = |ctx: &mut QueryContext, resps: &mut Vec<SearchResponse>| {
+                index.search_batch_into(&queries, &reqs, ctx, resps);
+            };
+            // Two warm rounds: the BatchContext arena, per-slot heaps and
+            // scratches, response buffers, and lease pools all reach their
+            // steady-state capacity before the counting round.
+            run(&mut ctx, &mut resps);
+            run(&mut ctx, &mut resps);
+            let allocs = count_allocs(|| run(&mut ctx, &mut resps));
+            assert_eq!(
+                allocs,
+                0,
+                "steady-state batch {} / {} allocated {} times",
                 kind.name(),
                 kernel.name(),
                 allocs
