@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test for the serving stack (ADR-007).
+
+Expects a running `simetra serve` on HOST:PORT (argv[1], argv[2]) with
+--dim matching DIM below. Talks the JSON-lines TCP protocol directly
+(no client library) and validates:
+
+  - ping answers pong;
+  - the `search` op answers hits and never a trace;
+  - the `explain` op answers the same hits (bit-exact scores via repr)
+    plus a non-empty trace of known event kinds;
+  - the `metrics` op returns a Prometheus text page that parses line by
+    line and carries the ADR-007 families (bound-slack keyed by index
+    and bound, per-stage spans) next to the request-latency histogram.
+"""
+import json
+import re
+import socket
+import sys
+import time
+
+HOST, PORT = sys.argv[1], int(sys.argv[2])
+DIM = 16
+TRACE_KINDS = {"visit", "prune", "eval", "scan", "budget_stop", "filter_gate"}
+METRIC_LINE = re.compile(
+    r"^[A-Za-z_:][A-Za-z0-9_:]*(\{[^{}]*\})? -?[0-9][0-9.eE+-]*$"
+)
+
+
+def connect(retries=100):
+    for _ in range(retries):
+        try:
+            return socket.create_connection((HOST, PORT), timeout=10)
+        except OSError:
+            time.sleep(0.2)
+    sys.exit(f"server never came up on {HOST}:{PORT}")
+
+
+def main():
+    sock = connect()
+    f = sock.makefile("rwb")
+
+    def rpc(obj):
+        f.write((json.dumps(obj) + "\n").encode())
+        f.flush()
+        line = f.readline()
+        if not line:
+            sys.exit(f"connection closed on op {obj.get('op')!r}")
+        reply = json.loads(line)
+        if reply.get("status") == "error":
+            sys.exit(f"op {obj.get('op')!r} failed: {reply}")
+        return reply
+
+    assert rpc({"op": "ping"})["status"] == "pong"
+
+    vec = [1.0 if i == 0 else 1e-3 * i for i in range(DIM)]
+    plan = {"v": 1, "vector": vec, "mode": "knn", "k": 5}
+
+    search = rpc({"op": "search", **plan})
+    assert search["status"] == "search", search
+    assert len(search["hits"]) == 5, search
+    assert "trace" not in search, "search replies must never carry a trace"
+
+    explain = rpc({"op": "explain", **plan})
+    assert explain["status"] == "explain", explain
+    hits = [(h["id"], repr(h["score"])) for h in search["hits"]]
+    ehits = [(h["id"], repr(h["score"])) for h in explain["hits"]]
+    assert hits == ehits, f"explain hits diverge from search: {hits} vs {ehits}"
+    trace = explain["trace"]
+    assert trace, "explain returned an empty trace"
+    kinds = {e["kind"] for e in trace}
+    assert kinds <= TRACE_KINDS, f"unknown trace kinds: {kinds - TRACE_KINDS}"
+
+    text = rpc({"op": "metrics"})["text"]
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        assert METRIC_LINE.match(line), f"malformed metric line: {line!r}"
+    for needle in [
+        "# TYPE simetra_queries_total counter",
+        "# TYPE simetra_request_latency_us histogram",
+        "# TYPE simetra_bound_slack histogram",
+        'simetra_bound_slack_count{index="',
+        "# TYPE simetra_stage_duration_ns histogram",
+        'stage="parse"',
+        'stage="traversal"',
+    ]:
+        assert needle in text, f"metrics page is missing {needle!r}"
+
+    # The stats op exposes the same latency histogram the Prometheus page
+    # renders (one snapshot path; counts may drift between the two reads).
+    stats = rpc({"op": "stats"})
+    assert stats["queries"] >= 2, stats
+    assert sum(stats["latency_us_buckets"]) >= 2, stats
+    assert re.search(r"simetra_request_latency_us_count \d+", text), text
+
+    print("serve smoke test OK "
+          f"({len(trace)} trace events, {len(text.splitlines())} metric lines)")
+
+
+if __name__ == "__main__":
+    main()

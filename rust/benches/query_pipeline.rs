@@ -236,6 +236,55 @@ fn main() {
         }
     }
 
+    // --- observability legs (ADR-007): tracing on vs off ------------------
+    //
+    // The EXPLAIN trace writes into pre-sized context scratch, so its cost
+    // should be a small constant per event, and the tracing-OFF path must
+    // stay indistinguishable from the pre-ADR-007 baseline (one predicted
+    // branch per hook). Per-query `search_into` on both legs so the only
+    // difference is the `trace` flag.
+    let okinds: &[IndexKind] = if quick {
+        &[IndexKind::Vp]
+    } else {
+        &[IndexKind::Vp, IndexKind::Gnat, IndexKind::Linear]
+    };
+    let obatch = if quick { 16usize } else { 64 };
+    for &kind in okinds {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        let mut legs = Vec::new();
+        for (path, traced) in [("untraced", false), ("traced", true)] {
+            let req = if traced {
+                SearchRequest::knn(k).trace().build()
+            } else {
+                SearchRequest::knn(k).build()
+            };
+            let mut ctx = QueryContext::new();
+            let mut resp = SearchResponse::default();
+            let name = format!("knn_{path} {} b{obatch}", kind.name());
+            let m = bench(&cfg, &name, obatch as u64, || {
+                for q in &queries[..obatch] {
+                    ctx.begin_query();
+                    index.search_into(q, &req, &mut ctx, &mut resp);
+                    black_box((resp.hits.len(), resp.trace.len()));
+                }
+            });
+            report(&m);
+            legs.push(m.mean_ns);
+            let mut row = match m.to_json() {
+                Json::Obj(fields) => fields,
+                _ => unreachable!("to_json returns an object"),
+            };
+            row.push(("index".into(), Json::Str(kind.name().into())));
+            row.push(("path".into(), Json::Str(path.into())));
+            row.push(("batch".into(), Json::Num(obatch as f64)));
+            row.push(("n".into(), Json::Num(n as f64)));
+            row.push(("d".into(), Json::Num(d as f64)));
+            row.push(("k".into(), Json::Num(k as f64)));
+            rows.push(Json::Obj(row));
+        }
+        println!("    -> tracing overhead is {:.2}x\n", legs[1] / legs[0]);
+    }
+
     let path = std::path::Path::new("BENCH_query.json");
     write_bench_json(path, "query_pipeline", rows).expect("write BENCH_query.json");
     println!("wrote {}", path.display());

@@ -37,6 +37,7 @@ pub struct Metrics {
 pub struct LatencyHistogram {
     buckets: [AtomicU64; BUCKETS],
     max_us: AtomicU64,
+    sum_us: AtomicU64,
 }
 
 impl Default for LatencyHistogram {
@@ -44,6 +45,7 @@ impl Default for LatencyHistogram {
         LatencyHistogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             max_us: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
         }
     }
 }
@@ -62,12 +64,19 @@ impl LatencyHistogram {
     pub fn record(&self, us: u64) {
         self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
         self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Counts per bucket, loaded into a caller-provided fixed array — no
+    /// heap traffic on the stats path (ADR-004 discipline extends to
+    /// metrics reads, not just the query hot path).
+    fn load_counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
     }
 
     /// Approximate percentile (upper edge of the containing bucket).
     pub fn percentile(&self, p: f64) -> u64 {
-        let counts: Vec<u64> =
-            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let counts = self.load_counts();
         let total: u64 = counts.iter().sum();
         if total == 0 {
             return 0;
@@ -133,6 +142,8 @@ impl Metrics {
             latency_us_p50: self.latency.percentile(0.50),
             latency_us_p99: self.latency.percentile(0.99),
             latency_us_max: self.max_latency_us(),
+            latency_us_sum: self.latency.sum_us.load(Ordering::Relaxed),
+            latency_us_buckets: self.latency.load_counts().to_vec(),
             generations: ing.generations,
             memtable_items: ing.memtable_items,
             tombstones: ing.tombstones,
@@ -147,6 +158,69 @@ impl Metrics {
     fn max_latency_us(&self) -> u64 {
         self.latency.max_us.load(Ordering::Relaxed)
     }
+}
+
+/// Render a [`StatsSnapshot`] as Prometheus text-format families — the
+/// serving half of the exposition surface. The observability registry
+/// (`crate::obs::ObsRegistry::render_into`) appends its families after
+/// this, so the `metrics` wire op and `simetra stats --prometheus` share
+/// one snapshot path with the `stats` op.
+pub fn render_prometheus(s: &StatsSnapshot, out: &mut String) {
+    use std::fmt::Write;
+    let counters: [(&str, u64); 15] = [
+        ("simetra_queries_total", s.queries),
+        ("simetra_batches_total", s.batches),
+        ("simetra_errors_total", s.errors),
+        ("simetra_sim_evals_total", s.sim_evals),
+        ("simetra_engine_calls_total", s.engine_calls),
+        ("simetra_pruned_total", s.pruned),
+        ("simetra_nodes_visited_total", s.nodes_visited),
+        ("simetra_ctx_reuses_total", s.ctx_reuses),
+        ("simetra_inserts_total", s.inserts),
+        ("simetra_deletes_total", s.deletes),
+        ("simetra_seals_total", s.seals),
+        ("simetra_compactions_total", s.compactions),
+        ("simetra_blocked_scan_rows_total", s.blocked_scan_rows),
+        ("simetra_quant_prefilter_rows_total", s.quant_prefilter_rows),
+        ("simetra_quant_rerank_rows_total", s.quant_rerank_rows),
+    ];
+    for (name, v) in counters {
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let gauges: [(&str, u64); 6] = [
+        ("simetra_corpus_size", s.corpus_size),
+        ("simetra_shards", s.shards),
+        ("simetra_generations", s.generations),
+        ("simetra_memtable_items", s.memtable_items),
+        ("simetra_tombstones", s.tombstones),
+        ("simetra_sealed_bytes", s.sealed_bytes),
+    ];
+    for (name, v) in gauges {
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let _ = writeln!(out, "# TYPE simetra_pruned_fraction gauge");
+    let _ = writeln!(out, "simetra_pruned_fraction {}", s.pruned_fraction);
+    let _ = writeln!(out, "# TYPE simetra_kernel_info gauge");
+    let _ = writeln!(out, "simetra_kernel_info{{kernel=\"{}\"}} 1", s.kernel);
+    // Cumulative histogram over the pinned edges (bucket 0 holds exactly
+    // 0us; bucket i >= 1 holds [2^(i-1), 2^i), so its inclusive upper
+    // edge is 2^i - 1). Interior zero-count buckets are skipped — the
+    // cumulative counts stay exact.
+    let _ = writeln!(out, "# TYPE simetra_request_latency_us histogram");
+    let mut cum = 0u64;
+    for (i, &c) in s.latency_us_buckets.iter().enumerate() {
+        cum += c;
+        if c == 0 {
+            continue;
+        }
+        let le = if i == 0 { 0 } else { (1u64 << i.min(63)) - 1 };
+        let _ = writeln!(out, "simetra_request_latency_us_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "simetra_request_latency_us_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "simetra_request_latency_us_sum {}", s.latency_us_sum);
+    let _ = writeln!(out, "simetra_request_latency_us_count {cum}");
 }
 
 #[cfg(test)]
@@ -198,6 +272,29 @@ mod tests {
     }
 
     #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let kernel = crate::storage::ScalarKernel::default();
+        let m = Metrics::default();
+        m.queries.fetch_add(2, Ordering::Relaxed);
+        m.record_latency_us(0);
+        m.record_latency_us(100);
+        let s = m.snapshot(50, 1, None, &kernel);
+        let mut out = String::new();
+        render_prometheus(&s, &mut out);
+        assert!(out.contains("simetra_queries_total 2"), "{out}");
+        assert!(out.contains("simetra_kernel_info{kernel=\"scalar\"} 1"), "{out}");
+        assert!(out.contains("simetra_request_latency_us_bucket{le=\"0\"} 1"), "{out}");
+        assert!(out.contains("simetra_request_latency_us_bucket{le=\"127\"} 2"), "{out}");
+        assert!(out.contains("simetra_request_latency_us_bucket{le=\"+Inf\"} 2"), "{out}");
+        assert!(out.contains("simetra_request_latency_us_sum 100"), "{out}");
+        assert!(out.contains("simetra_request_latency_us_count 2"), "{out}");
+        // Exposition shape: every line is a # comment or `name value`.
+        for line in out.lines() {
+            assert!(line.starts_with('#') || line.split(' ').count() == 2, "{line}");
+        }
+    }
+
+    #[test]
     fn snapshot_reflects_counters_and_ingest_gauges() {
         let kernel = crate::storage::ScalarKernel::default();
         let m = Metrics::default();
@@ -209,6 +306,8 @@ mod tests {
         assert_eq!(s.shards, 2);
         assert_eq!(s.kernel, "scalar");
         assert!(s.latency_us_max >= 120);
+        assert_eq!(s.latency_us_buckets.len(), BUCKETS);
+        assert_eq!(s.latency_us_buckets.iter().sum::<u64>(), 1);
         assert_eq!(s.generations, 0);
 
         let ing = IngestStats {

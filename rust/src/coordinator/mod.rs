@@ -39,6 +39,7 @@ use crate::error::SimetraError;
 use crate::index::QueryStats;
 use crate::ingest::{IngestConfig, IngestCorpus};
 use crate::metrics::DenseVec;
+use crate::obs::{SlowEntry, Stage, TraceEvent, TraceKind, OBS};
 use crate::query::{QueryContext, SearchMode, SearchRequest};
 use crate::runtime::EngineHandle;
 use crate::storage::{CorpusStore, KernelBackend, KernelKind};
@@ -88,8 +89,21 @@ struct Query {
 type QueryResult = Result<SearchResult, String>;
 
 /// Per-job answer from one shard: local-id hits, the query's stats
-/// window, and the budget-truncation flag.
-type ShardAnswer = (Vec<(u32, f64)>, QueryStats, bool);
+/// window, the budget-truncation flag, and the trace event log (empty
+/// unless the request asked for one).
+type ShardAnswer = (Vec<(u32, f64)>, QueryStats, bool, Vec<TraceEvent>);
+
+/// Append a shard's trace to a per-job accumulator, lifting item-scoped
+/// event ids into the global id space (counter-scoped kinds — scan rows,
+/// filter lengths — pass through unchanged).
+fn extend_trace(acc: &mut Vec<TraceEvent>, base: u64, trace: Vec<TraceEvent>) {
+    for mut ev in trace {
+        if matches!(ev.kind, TraceKind::Visit | TraceKind::Prune | TraceKind::Eval) {
+            ev.id += base;
+        }
+        acc.push(ev);
+    }
+}
 
 /// Work sent to a persistent per-shard worker thread (Index mode): the
 /// whole batch, answered with per-job [`ShardAnswer`]s. Long-lived workers
@@ -129,12 +143,12 @@ fn run_shard_batch(
             .into_iter()
             .map(|resp| {
                 agg.merge(&resp.stats);
-                (resp.hits, resp.stats, resp.truncated)
+                (resp.hits, resp.stats, resp.truncated, resp.trace)
             })
             .collect();
     }
     let mut out: Vec<ShardAnswer> = Vec::with_capacity(n);
-    out.resize_with(n, || (Vec::new(), QueryStats::default(), false));
+    out.resize_with(n, || (Vec::new(), QueryStats::default(), false, Vec::new()));
     if !plain.is_empty() {
         let pv: Vec<DenseVec> = plain.iter().map(|&i| parsed[i].clone()).collect();
         let reqs: Vec<SearchRequest> = plain.iter().map(|&i| queries[i].req.clone()).collect();
@@ -142,32 +156,39 @@ fn run_shard_batch(
         shard.search_batch_ctx(&pv, &reqs, ctx, &mut resps);
         for (pos, resp) in resps.into_iter().enumerate() {
             agg.merge(&resp.stats);
-            out[plain[pos]] = (resp.hits, resp.stats, resp.truncated);
+            out[plain[pos]] = (resp.hits, resp.stats, resp.truncated, resp.trace);
         }
     }
     for i in 0..n {
         if queries[i].req.is_plain() {
             continue;
         }
-        let (hits, stats, truncated) = shard.search_ctx(&parsed[i], &queries[i].req, ctx);
+        let (hits, stats, truncated, trace) = shard.search_ctx(&parsed[i], &queries[i].req, ctx);
         agg.merge(&stats);
-        out[i] = (hits, stats, truncated);
+        out[i] = (hits, stats, truncated, trace);
     }
     out
 }
 
-fn spawn_shard_worker(shard: Arc<Shard>, metrics: Arc<Metrics>) -> ShardWorker {
+fn spawn_shard_worker(pos: usize, shard: Arc<Shard>, metrics: Arc<Metrics>) -> ShardWorker {
     let (tx, rx) = std::sync::mpsc::channel::<ShardJob>();
     std::thread::Builder::new()
         .name(format!("simetra-shard-{}", shard.base))
         .spawn(move || {
             // The worker's scratch arena: one per shard thread, reused by
-            // every query of every batch (ADR-004).
+            // every query of every batch (ADR-004). Serving contexts feed
+            // the observability registry (bound-slack histograms keyed by
+            // this shard's index kind; see `Shard::search_ctx`).
             let mut ctx = QueryContext::new();
+            ctx.set_obs_enabled(true);
             for job in rx {
+                let t0 = Instant::now();
                 let q0 = ctx.queries();
                 let mut agg = QueryStats::default();
                 let out = run_shard_batch(&shard, &job.queries, &job.parsed, &mut ctx, &mut agg);
+                OBS.record_stage(Stage::Traversal, t0.elapsed());
+                let nq = job.queries.len() as u64;
+                OBS.record_shard(pos, nq, agg.sim_evals, agg.nodes_visited, agg.pruned);
                 metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);
                 metrics.pruned.fetch_add(agg.pruned, Relaxed);
                 metrics.nodes_visited.fetch_add(agg.nodes_visited, Relaxed);
@@ -237,7 +258,11 @@ impl Coordinator {
         };
         let metrics = Arc::new(Metrics::default());
         let workers: Arc<Vec<ShardWorker>> = Arc::new(
-            shards.iter().map(|s| spawn_shard_worker(s.clone(), metrics.clone())).collect(),
+            shards
+                .iter()
+                .enumerate()
+                .map(|(i, s)| spawn_shard_worker(i, s.clone(), metrics.clone()))
+                .collect(),
         );
 
         let m2 = metrics.clone();
@@ -315,8 +340,9 @@ impl Coordinator {
         // no shard fan-out, so one context (owned by the FnMut handler)
         // serves every query of every batch.
         let mut ctx = QueryContext::new();
+        ctx.set_obs_enabled(true);
         let mut outs: Vec<Vec<(u64, f64)>> = Vec::new();
-        let mut metas: Vec<(QueryStats, bool)> = Vec::new();
+        let mut metas: Vec<(QueryStats, bool, Vec<TraceEvent>)> = Vec::new();
         let submitter = batcher::spawn_batcher(
             config.batch.clone(),
             move |jobs: Vec<batcher::Job<Query, QueryResult>>| {
@@ -443,16 +469,17 @@ impl Coordinator {
         req: SearchRequest,
     ) -> Result<SearchResult, SimetraError> {
         let started = Instant::now();
-        let out = self
-            .check_dim(&vector)
-            .and_then(|()| self.check_request(&req))
-            .and_then(|()| {
-                self.submitter
-                    .submit(Query { vector, req })
-                    .map_err(|e| SimetraError::Io(e.to_string()))?
-                    .map_err(SimetraError::Io)
-            });
-        self.finish(started, &out);
+        let checked = self.check_dim(&vector).and_then(|()| self.check_request(&req));
+        OBS.record_stage(Stage::Plan, started.elapsed());
+        let fanned = Instant::now();
+        let out = checked.and_then(|()| {
+            self.submitter
+                .submit(Query { vector, req: req.clone() })
+                .map_err(|e| SimetraError::Io(e.to_string()))?
+                .map_err(SimetraError::Io)
+        });
+        OBS.record_stage(Stage::ShardFanout, fanned.elapsed());
+        self.finish(started, &req, &out);
         out
     }
 
@@ -473,12 +500,38 @@ impl Coordinator {
         self.search(vector, SearchRequest::range(tau).build()).map(|r| (r.hits, r.sim_evals))
     }
 
-    fn finish(&self, started: Instant, out: &Result<SearchResult, SimetraError>) {
+    fn finish(
+        &self,
+        started: Instant,
+        req: &SearchRequest,
+        out: &Result<SearchResult, SimetraError>,
+    ) {
         self.metrics.queries.fetch_add(1, Relaxed);
         if out.is_err() {
             self.metrics.errors.fetch_add(1, Relaxed);
         }
-        self.metrics.record_latency_us(started.elapsed().as_micros() as u64);
+        let us = started.elapsed().as_micros() as u64;
+        self.metrics.record_latency_us(us);
+        if let Ok(r) = out {
+            let mode = match req.mode {
+                SearchMode::Knn { .. } => "knn",
+                SearchMode::Range { .. } => "range",
+                SearchMode::KnnWithin { .. } => "knn_within",
+            };
+            OBS.note_query(SlowEntry {
+                latency_us: us,
+                mode,
+                k: req.mode.k().unwrap_or(0) as u64,
+                tau: req.mode.tau().unwrap_or(0.0),
+                has_tau: req.mode.tau().is_some(),
+                bound: req.bound.map_or("default", |b| b.token()),
+                hits: r.hits.len() as u64,
+                sim_evals: r.sim_evals,
+                nodes_visited: r.nodes_visited,
+                pruned: r.pruned,
+                truncated: r.truncated,
+            });
+        }
     }
 
     pub fn stats(&self) -> StatsSnapshot {
@@ -495,6 +548,19 @@ impl Coordinator {
     pub fn describe(&self) -> ConfigSnapshot {
         (*self.config).clone()
     }
+
+    /// Prometheus text exposition: the serving counters and latency
+    /// histogram from the same snapshot path as [`Coordinator::stats`],
+    /// followed by the process-wide observability registry's families
+    /// (bound-slack histograms, per-stage spans, per-shard /
+    /// per-generation work, the slow-query ring). Serves the `metrics`
+    /// wire op and `simetra stats --prometheus`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        metrics::render_prometheus(&self.stats(), &mut out);
+        OBS.render_into(&mut out);
+        out
+    }
 }
 
 /// Execute one batch against the mutable corpus: the whole batch runs
@@ -509,27 +575,33 @@ fn execute_batch_ingest(
     metrics: &Metrics,
     ctx: &mut QueryContext,
     outs: &mut Vec<Vec<(u64, f64)>>,
-    metas: &mut Vec<(QueryStats, bool)>,
+    metas: &mut Vec<(QueryStats, bool, Vec<TraceEvent>)>,
     jobs: Vec<batcher::Job<Query, QueryResult>>,
 ) {
     let q0 = ctx.queries();
     let mut parsed: Vec<DenseVec> = Vec::with_capacity(jobs.len());
     parsed.extend(jobs.iter().map(|j| DenseVec::new(j.query.vector.clone())));
     let reqs: Vec<SearchRequest> = jobs.iter().map(|j| j.query.req.clone()).collect();
+    let t0 = Instant::now();
     ingest.search_batch_ctx(&parsed, &reqs, ctx, outs, metas);
-    for (job, (out, &(stats, truncated))) in jobs.into_iter().zip(outs.iter().zip(metas.iter())) {
+    OBS.record_stage(Stage::Traversal, t0.elapsed());
+    let t_merge = Instant::now();
+    for (job, (out, meta)) in jobs.into_iter().zip(outs.iter().zip(metas.iter_mut())) {
+        let (stats, truncated, trace) = meta;
         metrics.sim_evals.fetch_add(stats.sim_evals, Relaxed);
         metrics.pruned.fetch_add(stats.pruned, Relaxed);
         metrics.nodes_visited.fetch_add(stats.nodes_visited, Relaxed);
         let hits: Vec<Hit> = out.iter().map(|&(id, score)| Hit { id, score }).collect();
         let _ = job.reply.send(Ok(SearchResult {
             hits,
-            truncated,
+            truncated: *truncated,
             sim_evals: stats.sim_evals,
             nodes_visited: stats.nodes_visited,
             pruned: stats.pruned,
+            trace: std::mem::take(trace),
         }));
     }
+    OBS.record_stage(Stage::Merge, t_merge.elapsed());
     metrics.ctx_reuses.fetch_add(ctx.reuses_since(q0), Relaxed);
 }
 
@@ -550,12 +622,13 @@ fn execute_batch(
         Arc::new(queries.iter().map(|q| DenseVec::new(q.vector.clone())).collect());
     let queries = Arc::new(queries);
 
-    /// Per-job accumulator: global hits, stats, truncated.
+    /// Per-job accumulator: global hits, stats, truncated, trace.
     #[derive(Default, Clone)]
     struct Acc {
         hits: Vec<(u64, f64)>,
         stats: QueryStats,
         truncated: bool,
+        trace: Vec<TraceEvent>,
     }
     let mut results: Vec<Acc> = vec![Acc::default(); jobs.len()];
     let mut poisoned = false;
@@ -583,12 +656,13 @@ fn execute_batch(
             let mut answered = 0usize;
             for (base, per_shard) in rx {
                 answered += 1;
-                for (ji, (hits, stats, truncated)) in per_shard.into_iter().enumerate() {
+                for (ji, (hits, stats, truncated, trace)) in per_shard.into_iter().enumerate() {
                     for (id, s) in hits {
                         results[ji].hits.push((base + id as u64, s));
                     }
                     results[ji].stats.merge(&stats);
                     results[ji].truncated |= truncated;
+                    extend_trace(&mut results[ji].trace, base, trace);
                 }
             }
             if answered != sent {
@@ -640,13 +714,14 @@ fn execute_batch(
                         Err(e) => {
                             eprintln!("engine batch failed: {e}; falling back to index");
                             for &ji in &knn_ids {
-                                let (hits, stats, _) =
+                                let (hits, stats, _, trace) =
                                     shard.search_ctx(&parsed[ji], &queries[ji].req, ctx);
                                 agg.merge(&stats);
                                 for (id, s) in hits {
                                     results[ji].hits.push((shard.base + id as u64, s));
                                 }
                                 results[ji].stats.merge(&stats);
+                                extend_trace(&mut results[ji].trace, shard.base, trace);
                             }
                         }
                     }
@@ -669,7 +744,7 @@ fn execute_batch(
                             }
                             Err(e) => {
                                 eprintln!("hybrid range failed: {e}; index fallback");
-                                let (hits, stats, truncated) =
+                                let (hits, stats, truncated, trace) =
                                     shard.search_ctx(&parsed[ji], req, ctx);
                                 agg.merge(&stats);
                                 for (id, s) in hits {
@@ -677,19 +752,22 @@ fn execute_batch(
                                 }
                                 results[ji].stats.merge(&stats);
                                 results[ji].truncated |= truncated;
+                                extend_trace(&mut results[ji].trace, shard.base, trace);
                             }
                         }
                     } else {
                         // The engine scores plain top-k only; every other
                         // plan shape runs the index path on the
                         // collector's context.
-                        let (hits, stats, truncated) = shard.search_ctx(&parsed[ji], req, ctx);
+                        let (hits, stats, truncated, trace) =
+                            shard.search_ctx(&parsed[ji], req, ctx);
                         agg.merge(&stats);
                         for (id, s) in hits {
                             results[ji].hits.push((shard.base + id as u64, s));
                         }
                         results[ji].stats.merge(&stats);
                         results[ji].truncated |= truncated;
+                        extend_trace(&mut results[ji].trace, shard.base, trace);
                     }
                 }
             }
@@ -700,6 +778,7 @@ fn execute_batch(
     }
 
     // Merge + reply.
+    let t_merge = Instant::now();
     for (job, mut acc) in jobs.into_iter().zip(results) {
         if poisoned {
             metrics.errors.fetch_add(1, Relaxed);
@@ -720,8 +799,10 @@ fn execute_batch(
             sim_evals: acc.stats.sim_evals,
             nodes_visited: acc.stats.nodes_visited,
             pruned: acc.stats.pruned,
+            trace: acc.trace,
         }));
     }
+    OBS.record_stage(Stage::Merge, t_merge.elapsed());
 }
 
 #[cfg(test)]

@@ -19,6 +19,7 @@ use anyhow::Result;
 
 use crate::bounds::BoundKind;
 use crate::error::SimetraError;
+use crate::obs::{TraceEvent, TraceKind};
 use crate::query::{IdFilter, SearchMode, SearchRequest};
 use crate::storage::KernelKind;
 use crate::util::Json;
@@ -33,6 +34,9 @@ pub enum Request {
     Range { vector: Vec<f32>, tau: f64 },
     /// One typed search plan (ADR-005): mode + per-request options.
     Search { vector: Vec<f32>, req: SearchRequest },
+    /// A `search` envelope executed with tracing forced on; the reply
+    /// carries the bounded traversal event log (EXPLAIN).
+    Explain { vector: Vec<f32>, req: SearchRequest },
     /// Insert a vector into a mutable corpus; the reply carries the
     /// assigned id.
     Insert { vector: Vec<f32> },
@@ -44,6 +48,9 @@ pub enum Request {
     Compact,
     /// Server + query statistics.
     Stats,
+    /// Prometheus text exposition of the observability registry (shares
+    /// the `stats` snapshot path; see `crate::obs`).
+    Metrics,
     /// Serving configuration (active kernel backend, index, bound, mode).
     Config,
     /// Health check.
@@ -66,47 +73,8 @@ impl Request {
                 ("vector", Json::arr_f32(vector.iter().copied())),
                 ("tau", Json::Num(*tau)),
             ]),
-            Request::Search { vector, req } => {
-                let mut fields: Vec<(&str, Json)> = vec![
-                    ("op", Json::Str("search".into())),
-                    ("v", Json::Num(SEARCH_VERSION as f64)),
-                    ("vector", Json::arr_f32(vector.iter().copied())),
-                ];
-                match req.mode {
-                    SearchMode::Knn { k } => {
-                        fields.push(("mode", Json::Str("knn".into())));
-                        fields.push(("k", Json::Num(k as f64)));
-                    }
-                    SearchMode::Range { tau } => {
-                        fields.push(("mode", Json::Str("range".into())));
-                        fields.push(("tau", Json::Num(tau)));
-                    }
-                    SearchMode::KnnWithin { k, tau } => {
-                        fields.push(("mode", Json::Str("knn_within".into())));
-                        fields.push(("k", Json::Num(k as f64)));
-                        fields.push(("tau", Json::Num(tau)));
-                    }
-                }
-                if let Some(bound) = req.bound {
-                    fields.push(("bound", Json::Str(bound.token().into())));
-                }
-                if let Some(kernel) = req.kernel {
-                    fields.push(("kernel", Json::Str(kernel.name().into())));
-                }
-                match &req.filter {
-                    IdFilter::None => {}
-                    IdFilter::Allow(ids) => {
-                        fields.push(("allow", Json::arr_f64(ids.iter().map(|&i| i as f64))));
-                    }
-                    IdFilter::Deny(ids) => {
-                        fields.push(("deny", Json::arr_f64(ids.iter().map(|&i| i as f64))));
-                    }
-                }
-                if let Some(budget) = req.budget {
-                    fields.push(("budget", Json::Num(budget as f64)));
-                }
-                Json::obj(fields)
-            }
+            Request::Search { vector, req } => plan_to_json("search", vector, req),
+            Request::Explain { vector, req } => plan_to_json("explain", vector, req),
             Request::Insert { vector } => Json::obj(vec![
                 ("op", Json::Str("insert".into())),
                 ("vector", Json::arr_f32(vector.iter().copied())),
@@ -118,6 +86,7 @@ impl Request {
             Request::Flush => Json::obj(vec![("op", Json::Str("flush".into()))]),
             Request::Compact => Json::obj(vec![("op", Json::Str("compact".into()))]),
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
             Request::Config => Json::obj(vec![("op", Json::Str("config".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
         }
@@ -149,11 +118,19 @@ impl Request {
                 vector: v.req("vector")?.as_f32_vec()?,
                 req: parse_search_plan(v)?,
             },
+            "explain" => {
+                // An explain IS a traced search; tracing cannot be opted
+                // out of on this op.
+                let mut req = parse_search_plan(v)?;
+                req.trace = true;
+                Request::Explain { vector: v.req("vector")?.as_f32_vec()?, req }
+            }
             "insert" => Request::Insert { vector: v.req("vector")?.as_f32_vec()? },
             "delete" => Request::Delete { id: v.req("id")?.as_u64()? },
             "flush" => Request::Flush,
             "compact" => Request::Compact,
             "stats" => Request::Stats,
+            "metrics" => Request::Metrics,
             "config" => Request::Config,
             "ping" => Request::Ping,
             _ => return Ok(None),
@@ -164,6 +141,54 @@ impl Request {
         let v = Json::parse(line).map_err(|e| SimetraError::BadRequest(e.to_string()))?;
         Self::from_json(&v)
     }
+}
+
+/// Serialize a search plan under the given op name (`search` / `explain`).
+/// The `trace` field is emitted only on `search` — on `explain` tracing is
+/// implied by the op itself.
+fn plan_to_json(op: &str, vector: &[f32], req: &SearchRequest) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("op", Json::Str(op.into())),
+        ("v", Json::Num(SEARCH_VERSION as f64)),
+        ("vector", Json::arr_f32(vector.iter().copied())),
+    ];
+    match req.mode {
+        SearchMode::Knn { k } => {
+            fields.push(("mode", Json::Str("knn".into())));
+            fields.push(("k", Json::Num(k as f64)));
+        }
+        SearchMode::Range { tau } => {
+            fields.push(("mode", Json::Str("range".into())));
+            fields.push(("tau", Json::Num(tau)));
+        }
+        SearchMode::KnnWithin { k, tau } => {
+            fields.push(("mode", Json::Str("knn_within".into())));
+            fields.push(("k", Json::Num(k as f64)));
+            fields.push(("tau", Json::Num(tau)));
+        }
+    }
+    if let Some(bound) = req.bound {
+        fields.push(("bound", Json::Str(bound.token().into())));
+    }
+    if let Some(kernel) = req.kernel {
+        fields.push(("kernel", Json::Str(kernel.name().into())));
+    }
+    match &req.filter {
+        IdFilter::None => {}
+        IdFilter::Allow(ids) => {
+            fields.push(("allow", Json::arr_f64(ids.iter().map(|&i| i as f64))));
+        }
+        IdFilter::Deny(ids) => {
+            fields.push(("deny", Json::arr_f64(ids.iter().map(|&i| i as f64))));
+        }
+    }
+    if let Some(budget) = req.budget {
+        fields.push(("budget", Json::Num(budget as f64)));
+    }
+    if req.trace && op == "search" {
+        fields.push(("trace", Json::Bool(true)));
+    }
+    Json::obj(fields)
 }
 
 /// Parse the plan fields of a `search` envelope.
@@ -220,7 +245,11 @@ fn parse_search_plan(v: &Json) -> Result<SearchRequest> {
         Some(b) => Some(b.as_u64()?),
         None => None,
     };
-    Ok(SearchRequest { mode, bound, kernel, filter, budget })
+    let trace = match v.get("trace") {
+        Some(t) => t.as_bool()?,
+        None => false,
+    };
+    Ok(SearchRequest { mode, bound, kernel, filter, budget, trace })
 }
 
 /// One scored hit.
@@ -246,6 +275,10 @@ pub struct SearchResult {
     /// Candidates discarded by a certified bound without an exact
     /// evaluation.
     pub pruned: u64,
+    /// Bounded traversal event log — populated only when the request asked
+    /// for tracing, and serialized only on the `explain` envelope so the
+    /// `search` reply stays byte-identical whether or not it was traced.
+    pub trace: Vec<TraceEvent>,
 }
 
 /// A server response.
@@ -258,6 +291,8 @@ pub enum Response {
     },
     /// Reply to the `search` op: hits + stats + truncation envelope.
     Search(SearchResult),
+    /// Reply to the `explain` op: the search envelope plus the trace log.
+    Explain(SearchResult),
     /// Reply to `insert`: the assigned global id.
     Inserted { id: u64 },
     /// Reply to `delete`: whether the id was live (deleting an unknown or
@@ -267,6 +302,8 @@ pub enum Response {
     Done,
     Stats(StatsSnapshot),
     Config(ConfigSnapshot),
+    /// Reply to `metrics`: Prometheus text exposition.
+    Metrics { text: String },
     Pong,
     Error {
         /// Stable machine-readable code (`crate::error::SimetraError::code`;
@@ -294,6 +331,40 @@ fn hits_from_json(v: &Json) -> Result<Vec<Hit>> {
         .collect()
 }
 
+/// Trace events as a JSON array (the `explain` envelope only).
+fn trace_to_json(events: &[TraceEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("kind", Json::Str(e.kind.token().into())),
+                    ("id", Json::Num(e.id as f64)),
+                    ("bound", Json::Num(e.bound)),
+                    ("sim", Json::Num(e.sim)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn trace_from_json(v: &Json) -> Result<Vec<TraceEvent>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            let kind = e.req("kind")?.as_str()?;
+            let kind = TraceKind::parse(kind)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace kind '{kind}'"))?;
+            Ok(TraceEvent {
+                kind,
+                id: e.req("id")?.as_u64()?,
+                bound: e.req("bound")?.as_f64()?,
+                sim: e.req("sim")?.as_f64()?,
+            })
+        })
+        .collect()
+}
+
 impl Response {
     pub fn to_json(&self) -> Json {
         match self {
@@ -302,6 +373,8 @@ impl Response {
                 ("hits", hits_to_json(hits)),
                 ("sim_evals", Json::Num(*sim_evals as f64)),
             ]),
+            // The `search` reply never serializes the trace: a traced and
+            // an untraced search answer with identical bytes.
             Response::Search(r) => Json::obj(vec![
                 ("status", Json::Str("search".into())),
                 ("hits", hits_to_json(&r.hits)),
@@ -309,6 +382,15 @@ impl Response {
                 ("sim_evals", Json::Num(r.sim_evals as f64)),
                 ("nodes_visited", Json::Num(r.nodes_visited as f64)),
                 ("pruned", Json::Num(r.pruned as f64)),
+            ]),
+            Response::Explain(r) => Json::obj(vec![
+                ("status", Json::Str("explain".into())),
+                ("hits", hits_to_json(&r.hits)),
+                ("truncated", Json::Bool(r.truncated)),
+                ("sim_evals", Json::Num(r.sim_evals as f64)),
+                ("nodes_visited", Json::Num(r.nodes_visited as f64)),
+                ("pruned", Json::Num(r.pruned as f64)),
+                ("trace", trace_to_json(&r.trace)),
             ]),
             Response::Inserted { id } => Json::obj(vec![
                 ("status", Json::Str("inserted".into())),
@@ -345,6 +427,11 @@ impl Response {
                 ("latency_us_p50", Json::Num(s.latency_us_p50 as f64)),
                 ("latency_us_p99", Json::Num(s.latency_us_p99 as f64)),
                 ("latency_us_max", Json::Num(s.latency_us_max as f64)),
+                ("latency_us_sum", Json::Num(s.latency_us_sum as f64)),
+                (
+                    "latency_us_buckets",
+                    Json::arr_f64(s.latency_us_buckets.iter().map(|&c| c as f64)),
+                ),
                 ("generations", Json::Num(s.generations as f64)),
                 ("memtable_items", Json::Num(s.memtable_items as f64)),
                 ("tombstones", Json::Num(s.tombstones as f64)),
@@ -356,6 +443,10 @@ impl Response {
                 ("blocked_scan_rows", Json::Num(s.blocked_scan_rows as f64)),
                 ("quant_prefilter_rows", Json::Num(s.quant_prefilter_rows as f64)),
                 ("quant_rerank_rows", Json::Num(s.quant_rerank_rows as f64)),
+            ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("status", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
             ]),
             Response::Pong => Json::obj(vec![("status", Json::Str("pong".into()))]),
             Response::Error { code, message } => Json::obj(vec![
@@ -378,6 +469,15 @@ impl Response {
                 sim_evals: v.req("sim_evals")?.as_f64()? as u64,
                 nodes_visited: v.req("nodes_visited")?.as_f64()? as u64,
                 pruned: v.req("pruned")?.as_f64()? as u64,
+                trace: Vec::new(),
+            }),
+            "explain" => Response::Explain(SearchResult {
+                hits: hits_from_json(v.req("hits")?)?,
+                truncated: v.req("truncated")?.as_bool()?,
+                sim_evals: v.req("sim_evals")?.as_f64()? as u64,
+                nodes_visited: v.req("nodes_visited")?.as_f64()? as u64,
+                pruned: v.req("pruned")?.as_f64()? as u64,
+                trace: trace_from_json(v.req("trace")?)?,
             }),
             "inserted" => Response::Inserted { id: v.req("id")?.as_u64()? },
             "deleted" => Response::Deleted { existed: v.req("existed")?.as_bool()? },
@@ -408,6 +508,13 @@ impl Response {
                     latency_us_p50: g("latency_us_p50")?,
                     latency_us_p99: g("latency_us_p99")?,
                     latency_us_max: g("latency_us_max")?,
+                    latency_us_sum: g("latency_us_sum")?,
+                    latency_us_buckets: v
+                        .req("latency_us_buckets")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_f64()? as u64))
+                        .collect::<Result<Vec<u64>>>()?,
                     generations: g("generations")?,
                     memtable_items: g("memtable_items")?,
                     tombstones: g("tombstones")?,
@@ -421,6 +528,7 @@ impl Response {
                     quant_rerank_rows: g("quant_rerank_rows")?,
                 })
             }
+            "metrics" => Response::Metrics { text: v.req("text")?.as_str()?.to_string() },
             "pong" => Response::Pong,
             "error" => Response::Error {
                 // `code` is absent in pre-ADR-005 server output.
@@ -481,6 +589,13 @@ pub struct StatsSnapshot {
     pub latency_us_p50: u64,
     pub latency_us_p99: u64,
     pub latency_us_max: u64,
+    /// Total microseconds across all recorded requests (the Prometheus
+    /// histogram `_sum`).
+    pub latency_us_sum: u64,
+    /// Full latency histogram: per-bucket counts over the edges
+    /// `[0, 1, 2, 4, 8, ...)`us (bucket 0 holds exactly 0us; bucket
+    /// `i >= 1` holds `[2^(i-1), 2^i)`; the last bucket is unbounded).
+    pub latency_us_buckets: Vec<u64>,
     /// Ingest gauges (zero for build-once corpora): sealed generations,
     /// staged memtable rows, unresolved tombstones, sealed vector bytes.
     pub generations: u64,
@@ -514,6 +629,7 @@ mod tests {
             Request::Flush,
             Request::Compact,
             Request::Stats,
+            Request::Metrics,
             Request::Config,
             Request::Ping,
         ];
@@ -549,6 +665,7 @@ mod tests {
                                 kernel,
                                 filter: filter.clone(),
                                 budget,
+                                trace: false,
                             };
                             let wire =
                                 Request::Search { vector: vec![0.5, -0.5], req: req.clone() };
@@ -560,6 +677,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn traced_search_and_explain_round_trip() {
+        let req = SearchRequest::knn(5).trace().build();
+        let wire = Request::Search { vector: vec![0.5], req: req.clone() };
+        let line = wire.to_json().to_string();
+        assert!(line.contains(r#""trace":true"#), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), wire);
+
+        // `explain` implies tracing: the field is never emitted, and a
+        // parse always comes back with `trace` forced on.
+        let wire = Request::Explain { vector: vec![0.5], req };
+        let line = wire.to_json().to_string();
+        assert!(!line.contains("trace"), "{line}");
+        assert_eq!(Request::parse(&line).unwrap(), wire);
     }
 
     #[test]
@@ -641,8 +774,24 @@ mod tests {
                 sim_evals: 321,
                 nodes_visited: 17,
                 pruned: 44,
+                trace: Vec::new(),
             }),
             Response::Search(SearchResult::default()),
+            Response::Explain(SearchResult {
+                hits: vec![Hit { id: 9, score: 0.75 }],
+                truncated: false,
+                sim_evals: 12,
+                nodes_visited: 3,
+                pruned: 1,
+                trace: vec![
+                    TraceEvent::visit(7),
+                    TraceEvent::prune(3, 0.25),
+                    TraceEvent::eval(9, 0.875, 0.75),
+                    TraceEvent::scan(64, 16),
+                    TraceEvent::budget_stop(),
+                ],
+            }),
+            Response::Metrics { text: "# TYPE simetra_bound_slack histogram\n".into() },
             Response::Inserted { id: 42 },
             Response::Deleted { existed: true },
             Response::Deleted { existed: false },

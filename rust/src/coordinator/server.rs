@@ -6,13 +6,14 @@ use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use super::protocol::{ConfigSnapshot, Hit, Request, Response, SearchResult, StatsSnapshot};
 use super::Coordinator;
 use crate::error::SimetraError;
+use crate::obs::{Stage, OBS};
 use crate::query::SearchRequest;
 
 /// A running TCP server: the bound address plus a shutdown handle.
@@ -115,16 +116,21 @@ fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let response = match Request::parse(&line) {
+        let t_parse = Instant::now();
+        let parsed = Request::parse(&line);
+        OBS.record_stage(Stage::Parse, t_parse.elapsed());
+        let response = match parsed {
             Ok(req) => dispatch(&coord, req),
             Err(e) => Response::Error {
                 code: e.code().to_string(),
                 message: format!("bad request: {e}"),
             },
         };
+        let t_ser = Instant::now();
         let mut out = response.to_json().to_string().into_bytes();
         out.push(b'\n');
         writer.write_all(&out)?;
+        OBS.record_stage(Stage::Serialize, t_ser.elapsed());
     }
     Ok(())
 }
@@ -152,6 +158,13 @@ fn dispatch(coord: &Coordinator, req: Request) -> Response {
             Ok(result) => Response::Search(result),
             Err(e) => err_response(e),
         },
+        // Same execution path as `search` — only the reply envelope
+        // differs (it carries the trace the forced `req.trace` recorded).
+        Request::Explain { vector, req } => match coord.search(vector, req) {
+            Ok(result) => Response::Explain(result),
+            Err(e) => err_response(e),
+        },
+        Request::Metrics => Response::Metrics { text: coord.prometheus() },
         Request::Insert { vector } => match coord.insert(vector) {
             Ok(id) => Response::Inserted { id },
             Err(e) => err_response(e),
@@ -216,7 +229,7 @@ impl Client {
         // infallible JSON serialization can round them (see
         // check_wire_filter) — so every sender is covered, not just the
         // typed `search` wrappers.
-        if let Request::Search { req: plan, .. } = req {
+        if let Request::Search { req: plan, .. } | Request::Explain { req: plan, .. } = req {
             check_wire_filter(plan)?;
         }
         let mut line = req.to_json().to_string().into_bytes();
@@ -330,6 +343,25 @@ impl Client {
             other => anyhow::bail!("unexpected response: {other:?}"),
         }
     }
+
+    /// Execute a traced search over the wire `explain` op; the result's
+    /// `trace` holds the traversal event log.
+    pub fn explain(&mut self, vector: Vec<f32>, req: SearchRequest) -> Result<SearchResult> {
+        match self.request(&Request::Explain { vector, req })? {
+            Response::Explain(result) => Ok(result),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
+
+    /// Fetch the Prometheus text exposition over the wire `metrics` op.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.request(&Request::Metrics)? {
+            Response::Metrics { text } => Ok(text),
+            Response::Error { message, .. } => anyhow::bail!("server error: {message}"),
+            other => anyhow::bail!("unexpected response: {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -373,6 +405,23 @@ mod tests {
         // The connection still works afterwards.
         let hits = client.knn(pts[5].as_slice().to_vec(), 2).unwrap();
         assert_eq!(hits[0].id, 5);
+
+        // Explain returns the same hits as a plain search plus a trace.
+        let req = SearchRequest::knn(4).build();
+        let plain = client.search(pts[3].as_slice().to_vec(), req.clone()).unwrap();
+        let traced = client.explain(pts[3].as_slice().to_vec(), req).unwrap();
+        assert_eq!(plain.hits.len(), traced.hits.len());
+        for (a, b) in plain.hits.iter().zip(traced.hits.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.score.to_bits(), b.score.to_bits());
+        }
+        assert!(plain.trace.is_empty());
+        assert!(!traced.trace.is_empty());
+
+        // Metrics serves a non-empty Prometheus text exposition.
+        let text = client.metrics().unwrap();
+        assert!(text.contains("# TYPE simetra_queries_total counter"));
+        assert!(text.contains("simetra_request_latency_us_count"));
     }
 
     #[test]

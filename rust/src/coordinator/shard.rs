@@ -58,6 +58,12 @@ impl IndexKind {
         }
     }
 
+    /// Dense ordinal into the observability registry's per-index slots;
+    /// pinned to [`crate::obs::INDEX_NAMES`] by a unit test below.
+    pub fn ordinal(self) -> usize {
+        self as usize
+    }
+
     /// Build this index kind over a zero-copy corpus view (the view is an
     /// `Arc`-backed handle; no vector data is cloned).
     pub fn build(
@@ -123,6 +129,7 @@ pub struct Shard {
     /// Pivot->corpus similarity table, f32 row-major (p, n), for the engine.
     pivot_table_f32: Vec<f32>,
     bound: BoundKind,
+    kind: IndexKind,
 }
 
 impl Shard {
@@ -154,7 +161,7 @@ impl Shard {
             None => Vec::new(),
         };
         let index = kind.build(view.clone(), bound);
-        Shard { base, view, index, laesa, pivot_table_f32, bound }
+        Shard { base, view, index, laesa, pivot_table_f32, bound, kind }
     }
 
     pub fn len(&self) -> usize {
@@ -208,14 +215,15 @@ impl Shard {
     /// allocating (ADR-004/ADR-005). Marks the query boundary itself.
     /// The request's filter ids are *global*; they are translated into
     /// this shard's local id space (its contiguous block) before the index
-    /// runs. Returns local-id hits, the per-query stats window, and the
-    /// budget-truncation flag.
+    /// runs. Returns local-id hits, the per-query stats window, the
+    /// budget-truncation flag, and the trace event log (empty unless the
+    /// request asked for one).
     pub fn search_ctx(
         &self,
         q: &DenseVec,
         req: &SearchRequest,
         ctx: &mut QueryContext,
-    ) -> (Vec<(u32, f64)>, QueryStats, bool) {
+    ) -> (Vec<(u32, f64)>, QueryStats, bool, Vec<crate::obs::TraceEvent>) {
         ctx.begin_query();
         let mut resp = SearchResponse::default();
         if req.filter.is_none() || self.base == 0 {
@@ -235,7 +243,10 @@ impl Shard {
             });
             self.index.search_into(q, &local, ctx, &mut resp);
         }
-        (resp.hits, ctx.stats, resp.truncated)
+        if ctx.obs_enabled() {
+            ctx.drain_slack(self.kind.ordinal());
+        }
+        (resp.hits, ctx.stats, resp.truncated, resp.trace)
     }
 
     /// Per-query kNN through a borrowed [`QueryContext`] (plain-plan shim
@@ -246,7 +257,7 @@ impl Shard {
         k: usize,
         ctx: &mut QueryContext,
     ) -> (Vec<(u32, f64)>, QueryStats) {
-        let (hits, stats, _) = self.search_ctx(q, &SearchRequest::knn(k).build(), ctx);
+        let (hits, stats, _, _) = self.search_ctx(q, &SearchRequest::knn(k).build(), ctx);
         (hits, stats)
     }
 
@@ -258,7 +269,7 @@ impl Shard {
         tau: f64,
         ctx: &mut QueryContext,
     ) -> (Vec<(u32, f64)>, QueryStats) {
-        let (hits, stats, _) = self.search_ctx(q, &SearchRequest::range(tau).build(), ctx);
+        let (hits, stats, _, _) = self.search_ctx(q, &SearchRequest::range(tau).build(), ctx);
         (hits, stats)
     }
 
@@ -278,6 +289,9 @@ impl Shard {
         if self.base == 0 || reqs.iter().all(|r| r.filter.is_none()) {
             // base == 0: global ids ARE local ids (see search_ctx).
             self.index.search_batch_into(queries, reqs, ctx, resps);
+            if ctx.obs_enabled() {
+                ctx.drain_slack(self.kind.ordinal());
+            }
             return;
         }
         let hi = self.base + self.len() as u64;
@@ -298,6 +312,9 @@ impl Shard {
             })
             .collect();
         self.index.search_batch_into(queries, &local, ctx, resps);
+        if ctx.obs_enabled() {
+            ctx.drain_slack(self.kind.ordinal());
+        }
     }
 
     /// A whole kNN batch through one shared context: per-query results and
@@ -500,6 +517,12 @@ impl Shard {
     pub fn bound(&self) -> BoundKind {
         self.bound
     }
+
+    /// The index structure this shard built (drives the per-index slot in
+    /// the observability registry).
+    pub fn kind(&self) -> IndexKind {
+        self.kind
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +536,25 @@ mod tests {
         assert_eq!(IndexKind::parse("vp"), Some(IndexKind::Vp));
         assert_eq!(IndexKind::parse("m-tree"), Some(IndexKind::MTree));
         assert_eq!(IndexKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ordinals_pin_obs_index_names() {
+        // The obs registry labels per-index slots by ordinal; every kind's
+        // canonical name must sit at its own slot in INDEX_NAMES.
+        let kinds = [
+            IndexKind::Linear,
+            IndexKind::Vp,
+            IndexKind::Ball,
+            IndexKind::MTree,
+            IndexKind::Cover,
+            IndexKind::Laesa,
+            IndexKind::Gnat,
+        ];
+        assert_eq!(kinds.len(), crate::obs::INDEX_NAMES.len());
+        for k in kinds {
+            assert_eq!(crate::obs::INDEX_NAMES[k.ordinal()], k.name());
+        }
     }
 
     #[test]

@@ -136,12 +136,16 @@ impl<C: Corpus> BallTree<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.center as u64);
+        ctx.trace_eval(node.center as u64, 1.0, s);
         if s >= plan.tau && ctx.admits(node.center) {
             out.push((node.center, s));
         }
         let Some(cover) = node.cover else { return };
-        if plan.bound.upper_over(s, cover) < plan.tau {
+        let ub = plan.bound.upper_over(s, cover);
+        if ub < plan.tau {
             ctx.stats.pruned += 1;
+            ctx.trace_prune(node.center as u64, ub);
             return; // nothing below can reach tau
         }
         let n =
@@ -168,6 +172,7 @@ impl<C: Corpus> BallTree<C> {
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.center);
             ctx.stats.sim_evals += 1;
+            ctx.trace_eval(root.center as u64, 1.0, s);
             if ctx.admits(root.center) {
                 results.offer(root.center, s);
             }
@@ -192,12 +197,14 @@ impl<C: Corpus> BallTree<C> {
                 break;
             }
             ctx.stats.nodes_visited += 1;
+            ctx.trace_visit(node.center as u64);
             let evals =
                 self.corpus.scan_ids_topk_ctx(q, &node.bucket, &mut results, ctx.kernel_scratch());
             ctx.stats.sim_evals += evals;
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.center);
                 ctx.stats.sim_evals += 1;
+                ctx.note_eval_slack(plan.bound, child.center as u64, ub, sc);
                 if ctx.admits(child.center) {
                     results.offer(child.center, sc);
                 }
@@ -211,6 +218,7 @@ impl<C: Corpus> BallTree<C> {
                     frontier.push(child_ub, child, sc);
                 } else {
                     ctx.stats.pruned += 1;
+                    ctx.trace_prune(child.center as u64, child_ub);
                 }
             }
         }

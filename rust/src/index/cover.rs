@@ -128,12 +128,16 @@ impl<C: Corpus> CoverTree<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.id as u64);
+        ctx.trace_eval(node.id as u64, 1.0, s);
         if s >= plan.tau && ctx.admits(node.id) {
             out.push((node.id, s));
         }
         let Some(cover) = node.cover else { return };
-        if plan.bound.upper_over(s, cover) < plan.tau {
+        let ub = plan.bound.upper_over(s, cover);
+        if ub < plan.tau {
             ctx.stats.pruned += 1;
+            ctx.trace_prune(node.id as u64, ub);
             return;
         }
         for child in &node.children {
@@ -155,6 +159,7 @@ impl<C: Corpus> CoverTree<C> {
         if let Some(root) = &self.root {
             let s = self.corpus.sim_q(q, root.id);
             ctx.stats.sim_evals += 1;
+            ctx.trace_eval(root.id as u64, 1.0, s);
             if ctx.admits(root.id) {
                 results.offer(root.id, s);
             }
@@ -176,9 +181,11 @@ impl<C: Corpus> CoverTree<C> {
                 break;
             }
             ctx.stats.nodes_visited += 1;
+            ctx.trace_visit(node.id as u64);
             for child in &node.children {
                 let sc = self.corpus.sim_q(q, child.id);
                 ctx.stats.sim_evals += 1;
+                ctx.note_eval_slack(plan.bound, child.id as u64, ub, sc);
                 if ctx.admits(child.id) {
                     results.offer(child.id, sc);
                 }
@@ -192,6 +199,7 @@ impl<C: Corpus> CoverTree<C> {
                     frontier.push(child_ub, child, sc);
                 } else {
                     ctx.stats.pruned += 1;
+                    ctx.trace_prune(child.id as u64, child_ub);
                 }
             }
         }

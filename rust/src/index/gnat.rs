@@ -142,6 +142,7 @@ impl<C: Corpus> Gnat<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.splits.first().or(node.bucket.first()).map_or(0, |&s| s as u64));
         let n =
             self.corpus.scan_ids_range_ctx(q, &node.bucket, plan.tau, out, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
@@ -158,17 +159,20 @@ impl<C: Corpus> Gnat<C> {
         // NOTE: split points live in their own region's subtree; regions
         // are pruned collectively below, and surviving subtrees report them.
         for (j, child) in node.children.iter().enumerate() {
-            let mut alive = true;
+            let mut kill = None;
             for i in 0..m {
-                if plan.bound.upper_over(split_sims[i], node.ranges[i * m + j]) < plan.tau {
-                    alive = false;
+                let ub = plan.bound.upper_over(split_sims[i], node.ranges[i * m + j]);
+                if ub < plan.tau {
+                    kill = Some(ub);
                     break;
                 }
             }
-            if alive {
-                self.range_rec(child, q, plan, out, ctx);
-            } else {
-                ctx.stats.pruned += 1;
+            match kill {
+                None => self.range_rec(child, q, plan, out, ctx),
+                Some(ub) => {
+                    ctx.stats.pruned += 1;
+                    ctx.trace_prune(node.splits[j] as u64, ub);
+                }
             }
         }
         ctx.release_sims(split_sims);
@@ -187,6 +191,7 @@ impl<C: Corpus> Gnat<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.splits.first().or(node.bucket.first()).map_or(0, |&s| s as u64));
         let n = self.corpus.scan_ids_topk_ctx(q, &node.bucket, results, ctx.kernel_scratch());
         ctx.stats.sim_evals += n;
         if node.splits.is_empty() {
@@ -210,11 +215,14 @@ impl<C: Corpus> Gnat<C> {
         }));
         order.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         for &(j, ub) in order.iter() {
+            let sj = j as usize;
+            ctx.note_eval_slack(plan.bound, node.splits[sj] as u64, ub, split_sims[sj]);
             if plan.dead_below_floor(ub) || (results.len() >= plan.k && ub <= results.floor()) {
                 ctx.stats.pruned += 1;
+                ctx.trace_prune(node.splits[sj] as u64, ub);
                 continue;
             }
-            self.knn_rec(&node.children[j as usize], q, results, plan, ctx);
+            self.knn_rec(&node.children[sj], q, results, plan, ctx);
         }
         ctx.release_pairs(order);
         ctx.release_sims(split_sims);

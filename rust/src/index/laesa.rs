@@ -232,6 +232,7 @@ impl<C: Corpus> Laesa<C> {
         out: &mut Vec<(u32, f64)>,
     ) {
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(0);
         out.clear();
         let mut q_piv = ctx.lease_sims();
         self.query_pivot_sims_into(q, ctx, &mut q_piv);
@@ -246,10 +247,12 @@ impl<C: Corpus> Laesa<C> {
             let iv = self.interval_with(plan.bound, &q_piv, i);
             if iv.hi < plan.tau || iv.is_empty() {
                 ctx.stats.pruned += 1;
+                ctx.trace_prune(i as u64, iv.hi);
                 continue; // certified non-match
             }
             let s = self.corpus.sim_q(q, i as u32);
             ctx.stats.sim_evals += 1;
+            ctx.note_eval_slack(plan.bound, i as u64, iv.hi, s);
             if s >= plan.tau {
                 out.push((i as u32, s));
             }
@@ -315,6 +318,7 @@ impl<C: Corpus> Laesa<C> {
         out: &mut Vec<(u32, f64)>,
     ) {
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(0);
         let mut q_piv = ctx.lease_sims();
         self.query_pivot_sims_into(q, ctx, &mut q_piv);
         let n = self.corpus.len();
@@ -350,6 +354,7 @@ impl<C: Corpus> Laesa<C> {
                 {
                     // Sorted by ub desc: everything remaining is certified out.
                     ctx.stats.pruned += (cands.len() - pos) as u64;
+                    ctx.trace_prune(id as u64, ub);
                     break;
                 }
                 if self.pivots_sorted.binary_search(&id).is_ok() || !ctx.admits(id) {
@@ -361,6 +366,7 @@ impl<C: Corpus> Laesa<C> {
                 }
                 let s = self.corpus.sim_q(q, id);
                 ctx.stats.sim_evals += 1;
+                ctx.note_eval_slack(plan.bound, id as u64, ub, s);
                 results.offer(id, s);
             }
         }

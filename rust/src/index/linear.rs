@@ -75,6 +75,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
             crate::bounds::BoundKind::Mult,
             |plan, ctx, out| {
                 ctx.stats.nodes_visited += 1;
+                ctx.trace_visit(0);
                 if req.budget.is_some() {
                     self.scan_budgeted(q, plan.tau, None, ctx, out);
                 } else {
@@ -86,6 +87,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
             },
             |plan, ctx, out| {
                 ctx.stats.nodes_visited += 1;
+                ctx.trace_visit(0);
                 let mut heap = plan.lease_heap(ctx);
                 if req.budget.is_some() {
                     self.scan_budgeted(q, 0.0, Some(&mut heap), ctx, out);

@@ -807,6 +807,7 @@ pub(crate) fn search_frame(
     ctx.apply_plan(req);
     let bound = req.bound.unwrap_or(default_bound);
     resp.hits.clear();
+    resp.trace.clear();
     match req.mode {
         SearchMode::Range { tau } => range(&RangePlan { tau, bound }, ctx, &mut resp.hits),
         SearchMode::Knn { k } | SearchMode::KnnWithin { k, .. } => {
@@ -815,6 +816,12 @@ pub(crate) fn search_frame(
     }
     resp.truncated = ctx.truncated;
     resp.stats = ctx.stats;
+    if ctx.trace_armed() {
+        if ctx.truncated {
+            ctx.trace_event(crate::obs::TraceEvent::budget_stop());
+        }
+        ctx.take_trace(&mut resp.trace);
+    }
     ctx.clear_plan();
 }
 
@@ -854,6 +861,7 @@ pub(crate) fn run_batch<V: SimVector>(
         let chunk = &mut resps[start..end];
         for resp in chunk.iter_mut() {
             resp.hits.clear();
+            resp.trace.clear();
             resp.truncated = false;
         }
         traverse(&queries[start..end], &mut bc, ctx, chunk);

@@ -184,6 +184,7 @@ impl<C: Corpus> MTree<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.entries.first().map_or(0, |e| e.id) as u64);
         for entry in &node.entries {
             // Denied leaf entries are the data items themselves: skip them
             // before any exact evaluation. (Internal routes still need
@@ -194,14 +195,20 @@ impl<C: Corpus> MTree<C> {
             // Cheap pre-check (no sim eval): certified interval on
             // sim(q, entry.id) via the parent chain, widened over the
             // covering interval: can anything in the subtree reach tau?
-            if let Some(ps) = parent_s {
-                if Self::entry_reach(plan.bound, ps, entry) < plan.tau {
+            let reach = parent_s.map(|ps| Self::entry_reach(plan.bound, ps, entry));
+            if let Some(r) = reach {
+                if r < plan.tau {
                     ctx.stats.pruned += 1;
+                    ctx.trace_prune(entry.id as u64, r);
                     continue; // dropped without computing sim(q, route)
                 }
             }
             let s = self.corpus.sim_q(q, entry.id);
             ctx.stats.sim_evals += 1;
+            match reach {
+                Some(r) => ctx.note_eval_slack(plan.bound, entry.id as u64, r, s),
+                None => ctx.trace_eval(entry.id as u64, 1.0, s),
+            }
             if node.is_leaf {
                 if s >= plan.tau {
                     out.push((entry.id, s));
@@ -211,10 +218,12 @@ impl<C: Corpus> MTree<C> {
             // Internal entry: the route itself is reported by its subtree
             // (routes are members of their own subtrees).
             let Some(cover) = entry.cover else { continue };
-            if plan.bound.upper_over(s, cover) >= plan.tau {
+            let ub = plan.bound.upper_over(s, cover);
+            if ub >= plan.tau {
                 self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), plan, out, ctx);
             } else {
                 ctx.stats.pruned += 1;
+                ctx.trace_prune(entry.id as u64, ub);
             }
         }
     }
@@ -244,6 +253,7 @@ impl<C: Corpus> MTree<C> {
                 break;
             }
             ctx.stats.nodes_visited += 1;
+            ctx.trace_visit(node.entries.first().map_or(0, |e| e.id) as u64);
             for entry in &node.entries {
                 if node.is_leaf && !ctx.admits(entry.id) {
                     continue; // denied data item: no exact evaluation
@@ -260,11 +270,13 @@ impl<C: Corpus> MTree<C> {
                     };
                     if dead {
                         ctx.stats.pruned += 1;
+                        ctx.trace_prune(entry.id as u64, reach);
                         continue;
                     }
                 }
                 let s = self.corpus.sim_q(q, entry.id);
                 ctx.stats.sim_evals += 1;
+                ctx.note_eval_slack(plan.bound, entry.id as u64, ub, s);
                 if node.is_leaf {
                     results.offer(entry.id, s);
                 } else {
@@ -278,6 +290,7 @@ impl<C: Corpus> MTree<C> {
                             frontier.push(child_ub, entry.child.as_ref().unwrap(), s);
                         } else {
                             ctx.stats.pruned += 1;
+                            ctx.trace_prune(entry.id as u64, child_ub);
                         }
                     }
                 }

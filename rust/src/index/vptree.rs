@@ -118,8 +118,10 @@ impl<C: Corpus> VpTree<C> {
             return;
         }
         ctx.stats.nodes_visited += 1;
+        ctx.trace_visit(node.vp as u64);
         let s = self.corpus.sim_q(q, node.vp);
         ctx.stats.sim_evals += 1;
+        ctx.trace_eval(node.vp as u64, 1.0, s);
         if s >= plan.tau && ctx.admits(node.vp) {
             out.push((node.vp, s));
         }
@@ -128,10 +130,12 @@ impl<C: Corpus> VpTree<C> {
         ctx.stats.sim_evals += n;
         for child in [&node.near, &node.far].into_iter().flatten() {
             let (iv, sub) = child;
-            if plan.bound.upper_over(s, *iv) >= plan.tau {
+            let ub = plan.bound.upper_over(s, *iv);
+            if ub >= plan.tau {
                 self.range_node(sub, q, plan, out, ctx);
             } else {
                 ctx.stats.pruned += 1;
+                ctx.trace_prune(sub.vp as u64, ub);
             }
         }
     }
@@ -160,8 +164,10 @@ impl<C: Corpus> VpTree<C> {
                 break;
             }
             ctx.stats.nodes_visited += 1;
+            ctx.trace_visit(node.vp as u64);
             let s = self.corpus.sim_q(q, node.vp);
             ctx.stats.sim_evals += 1;
+            ctx.note_eval_slack(plan.bound, node.vp as u64, ub, s);
             if ctx.admits(node.vp) {
                 results.offer(node.vp, s);
             }
@@ -177,6 +183,7 @@ impl<C: Corpus> VpTree<C> {
                     frontier.push(child_ub, sub.as_ref(), 0.0);
                 } else {
                     ctx.stats.pruned += 1;
+                    ctx.trace_prune(sub.vp as u64, child_ub);
                 }
             }
         }

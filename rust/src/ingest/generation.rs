@@ -16,8 +16,26 @@ use crate::bounds::BoundKind;
 use crate::coordinator::IndexKind;
 use crate::index::{LinearScan, QueryStats, SimilarityIndex};
 use crate::metrics::DenseVec;
+use crate::obs::{TraceEvent, TraceKind, OBS};
 use crate::query::{QueryContext, SearchMode, SearchRequest, SearchResponse};
 use crate::storage::{CorpusStore, KernelBackend};
+
+/// Move one source's trace into the caller's accumulator, lifting
+/// item-scoped event ids (visit/prune/eval) into the global id space
+/// through `map` (a generation's id table, or the memtable base offset).
+/// Scan/budget/filter events carry counts, not ids — they pass through.
+fn lift_trace(
+    dst: &mut Vec<TraceEvent>,
+    src: &mut Vec<TraceEvent>,
+    mut map: impl FnMut(u64) -> u64,
+) {
+    for mut ev in src.drain(..) {
+        if matches!(ev.kind, TraceKind::Visit | TraceKind::Prune | TraceKind::Eval) {
+            ev.id = map(ev.id);
+        }
+        dst.push(ev);
+    }
+}
 
 /// Sort global hits in descending similarity with the crate-wide tie
 /// order (similarity desc, id asc) — the same total order the linear
@@ -335,9 +353,19 @@ impl GenerationSet {
             SearchMode::Range { tau } => (None, SearchMode::Range { tau }),
         };
         let mut resp = SearchResponse { hits: ctx.lease_pairs(), ..SearchResponse::default() };
-        for g in &self.generations {
+        for (gi, g) in self.generations.iter().enumerate() {
+            let before = ctx.stats;
             let local = g.localize(req, fetch_mode);
             g.index.search_into(q, local.as_ref().unwrap_or(req), ctx, &mut resp);
+            if ctx.obs_enabled() {
+                OBS.record_gen(
+                    gi,
+                    1,
+                    ctx.stats.sim_evals - before.sim_evals,
+                    ctx.stats.nodes_visited - before.nodes_visited,
+                    ctx.stats.pruned - before.pruned,
+                );
+            }
             truncated |= resp.truncated;
             for &(local_id, s) in resp.hits.iter() {
                 let id = g.ids[local_id as usize];
@@ -370,7 +398,17 @@ impl GenerationSet {
                 })
             };
             let scan = LinearScan::build(self.memtable.store().view());
+            let before = ctx.stats;
             scan.search_into(q, &local, ctx, &mut resp);
+            if ctx.obs_enabled() {
+                OBS.record_gen(
+                    self.generations.len(),
+                    1,
+                    ctx.stats.sim_evals - before.sim_evals,
+                    ctx.stats.nodes_visited - before.nodes_visited,
+                    ctx.stats.pruned - before.pruned,
+                );
+            }
             truncated |= resp.truncated;
             for &(local_id, s) in resp.hits.iter() {
                 let id = base + local_id as u64;
@@ -399,17 +437,18 @@ impl GenerationSet {
     /// force the per-query fallback, and that decision is per source.
     ///
     /// `outs[j]` receives query `j`'s global hits (tombstones filtered,
-    /// `(sim desc, id asc)`); `metas[j]` its merged per-query stats and
-    /// truncation flag. The callee owns the query boundary (it runs
-    /// through `search_batch_into`), matching that method and unlike
-    /// [`GenerationSet::search_ctx`].
+    /// `(sim desc, id asc)`); `metas[j]` its merged per-query stats,
+    /// truncation flag, and trace (traced plans only — event ids lifted
+    /// into the global id space, sources in execution order). The callee
+    /// owns the query boundary (it runs through `search_batch_into`),
+    /// matching that method and unlike [`GenerationSet::search_ctx`].
     pub fn search_batch_ctx(
         &self,
         queries: &[DenseVec],
         reqs: &[SearchRequest],
         ctx: &mut QueryContext,
         outs: &mut Vec<Vec<(u64, f64)>>,
-        metas: &mut Vec<(QueryStats, bool)>,
+        metas: &mut Vec<(QueryStats, bool, Vec<TraceEvent>)>,
     ) {
         assert_eq!(queries.len(), reqs.len(), "batch queries/plans length mismatch");
         let n = queries.len();
@@ -418,7 +457,7 @@ impl GenerationSet {
             out.clear();
         }
         metas.clear();
-        metas.resize(n, (QueryStats::default(), false));
+        metas.resize_with(n, || (QueryStats::default(), false, Vec::new()));
         if n == 0 {
             return;
         }
@@ -445,21 +484,27 @@ impl GenerationSet {
         }
         let mut local: Vec<SearchRequest> = Vec::with_capacity(n);
         let mut resps: Vec<SearchResponse> = Vec::new();
-        for g in &self.generations {
+        for (gi, g) in self.generations.iter().enumerate() {
             local.clear();
             for (req, &mode) in reqs.iter().zip(&fetch) {
                 local.push(g.localize(req, mode).unwrap_or_else(|| req.clone()));
             }
             g.index.search_batch_into(queries, &local, ctx, &mut resps);
-            for (j, resp) in resps.iter().enumerate() {
+            let mut work = QueryStats::default();
+            for (j, resp) in resps.iter_mut().enumerate() {
+                work.merge(&resp.stats);
                 metas[j].0.merge(&resp.stats);
                 metas[j].1 |= resp.truncated;
+                lift_trace(&mut metas[j].2, &mut resp.trace, |id| g.ids[id as usize]);
                 for &(local_id, s) in resp.hits.iter() {
                     let id = g.ids[local_id as usize];
                     if !self.tombstones.contains(&id) {
                         outs[j].push((id, s));
                     }
                 }
+            }
+            if ctx.obs_enabled() {
+                OBS.record_gen(gi, n as u64, work.sim_evals, work.nodes_visited, work.pruned);
             }
         }
         if !self.memtable.is_empty() {
@@ -481,15 +526,22 @@ impl GenerationSet {
             }
             let scan = LinearScan::build(self.memtable.store().view());
             scan.search_batch_into(queries, &local, ctx, &mut resps);
-            for (j, resp) in resps.iter().enumerate() {
+            let mut work = QueryStats::default();
+            for (j, resp) in resps.iter_mut().enumerate() {
+                work.merge(&resp.stats);
                 metas[j].0.merge(&resp.stats);
                 metas[j].1 |= resp.truncated;
+                lift_trace(&mut metas[j].2, &mut resp.trace, |id| base + id);
                 for &(local_id, s) in resp.hits.iter() {
                     let id = base + local_id as u64;
                     if !self.tombstones.contains(&id) {
                         outs[j].push((id, s));
                     }
                 }
+            }
+            if ctx.obs_enabled() {
+                let slot = self.generations.len();
+                OBS.record_gen(slot, n as u64, work.sim_evals, work.nodes_visited, work.pruned);
             }
         }
         for (out, k) in outs.iter_mut().zip(&ks) {

@@ -485,15 +485,16 @@ impl IngestCorpus {
     /// batch of plain plans descends each tree once behind the shared
     /// frontier. The snapshot is loaded once — every query in the batch
     /// sees the same consistent corpus. `outs[j]` receives query `j`'s
-    /// global hits, `metas[j]` its stats and truncation flag; the query
-    /// boundary is owned by the batch machinery (no `begin_query` here).
+    /// global hits, `metas[j]` its stats, truncation flag, and trace
+    /// (traced plans only); the query boundary is owned by the batch
+    /// machinery (no `begin_query` here).
     pub fn search_batch_ctx(
         &self,
         queries: &[DenseVec],
         reqs: &[crate::query::SearchRequest],
         ctx: &mut QueryContext,
         outs: &mut Vec<Vec<(u64, f64)>>,
-        metas: &mut Vec<(crate::index::QueryStats, bool)>,
+        metas: &mut Vec<(crate::index::QueryStats, bool, Vec<crate::obs::TraceEvent>)>,
     ) {
         self.inner.cell.load().search_batch_ctx(queries, reqs, ctx, outs, metas)
     }

@@ -128,6 +128,28 @@
 //! println!("one shared descent: {nodes} physical node visits for 32 queries");
 //! ```
 //!
+//! Any request can ask for an EXPLAIN trace (ADR-007): `trace()` records
+//! a bounded event log of the traversal — node visits, prune decisions
+//! with their certified bounds, exact evaluations, kernel scan blocks,
+//! budget/filter gates — into pre-sized context scratch. Traced results
+//! are byte-identical to untraced ones, and with tracing off the hooks
+//! cost one predicted branch (the zero-alloc contract holds):
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::uniform_sphere_store;
+//! use simetra::index::{SimilarityIndex, VpTree};
+//! use simetra::obs::TraceKind;
+//! use simetra::query::SearchRequest;
+//!
+//! let store = uniform_sphere_store(10_000, 64, 42);
+//! let index = VpTree::build(store.view(), BoundKind::Mult, 7);
+//! let req = SearchRequest::knn(10).trace().build();
+//! let resp = index.search(&store.vec(0), &req);
+//! let pruned = resp.trace.iter().filter(|e| e.kind == TraceKind::Prune).count();
+//! println!("{} events, {pruned} prune decisions", resp.trace.len());
+//! ```
+//!
 //! Indexes also build from an owning `Vec<V>` for any `SimVector` (the
 //! per-item path sparse corpora use):
 //!
@@ -166,6 +188,7 @@ pub mod figures;
 pub mod index;
 pub mod ingest;
 pub mod metrics;
+pub mod obs;
 pub mod query;
 pub mod runtime;
 pub mod sparse;

@@ -52,6 +52,12 @@ COMMANDS:
                                   before exact evaluation in the kernels)
              --bound-override mult  (per-request pruning bound; --bound
                                   stays the build-time bound)
+  stats      Fetch serving statistics from a running server
+             --addr 127.0.0.1:7878
+             --prometheus 1  (emit the full Prometheus text exposition —
+                           bound-slack histograms keyed by index and
+                           bound, per-stage spans, per-shard/generation
+                           work, slow-query ring — via the 'metrics' op)
   figures    Regenerate the paper's figures as CSV + summary
              --out figures_out  --steps 401
   selfcheck  Verify the PJRT runtime against native rust scoring
@@ -144,6 +150,7 @@ fn main() -> Result<()> {
     match command.as_str() {
         "serve" => cmd_serve(&flags),
         "search" => cmd_search(&flags),
+        "stats" => cmd_stats(&flags),
         "figures" => cmd_figures(&flags),
         "selfcheck" => cmd_selfcheck(&flags),
         "help" | "--help" | "-h" => {
@@ -273,6 +280,39 @@ fn cmd_search(flags: &Flags) -> Result<()> {
     for (rank, (id, s)) in resp.hits.iter().enumerate() {
         println!("  #{rank}: id={id} sim={s:.6}");
     }
+    Ok(())
+}
+
+fn cmd_stats(flags: &Flags) -> Result<()> {
+    let addr = flags.str_or("addr", "127.0.0.1:7878");
+    let prometheus = flags.get("prometheus").is_some_and(|v| v != "0" && v != "false");
+    let mut client = server::Client::connect(
+        addr.parse().with_context(|| format!("bad --addr '{addr}'"))?,
+    )?;
+    if prometheus {
+        // One snapshot path with the JSON 'stats' op — the server renders
+        // the same counters plus the observability registry's families.
+        print!("{}", client.metrics()?);
+        return Ok(());
+    }
+    let s = client.stats()?;
+    println!("kernel={} corpus_size={} shards={}", s.kernel, s.corpus_size, s.shards);
+    println!(
+        "queries={} batches={} errors={} ctx_reuses={}",
+        s.queries, s.batches, s.errors, s.ctx_reuses
+    );
+    println!(
+        "sim_evals={} pruned={} nodes_visited={} pruned_fraction={:.4}",
+        s.sim_evals, s.pruned, s.nodes_visited, s.pruned_fraction
+    );
+    println!(
+        "latency_us p50={} p99={} max={} sum={}",
+        s.latency_us_p50, s.latency_us_p99, s.latency_us_max, s.latency_us_sum
+    );
+    println!(
+        "ingest: generations={} memtable_items={} tombstones={} inserts={} deletes={}",
+        s.generations, s.memtable_items, s.tombstones, s.inserts, s.deletes
+    );
     Ok(())
 }
 

@@ -1,0 +1,799 @@
+//! Query observability (ADR-007): traced search (EXPLAIN), bound-slack
+//! histograms, per-stage span timings, per-shard / per-generation work
+//! breakdowns, and a slow-query ring — exposed as Prometheus text.
+//!
+//! Everything here is **zero-overhead when off** and allocation-free on
+//! the query path:
+//!
+//! * Trace recording is gated on a per-request `armed` flag; when a plan
+//!   does not ask for a trace every hook is a single predicted branch.
+//!   The event buffer is fixed-capacity ([`TRACE_CAP`]) and lives in the
+//!   per-context kernel scratch, so a traced query writes into pre-sized
+//!   storage (the one-time `arm` reservation is the only allocation a
+//!   traced request ever makes inside the engine).
+//! * Bound-slack samples land in a plain per-context array
+//!   ([`SlackWindow`]) and are drained into the global lock-free
+//!   [`ObsRegistry`] by the owning worker between batches — traversals
+//!   never touch an atomic.
+//! * Span timings, per-shard counters, and the slow-query floor check are
+//!   single relaxed atomic ops; the slow-query ring itself is a
+//!   fixed-capacity array behind a mutex that is only locked when a query
+//!   is slower than the current top-N floor.
+//!
+//! The registry is a process-wide static ([`OBS`]) because observability
+//! is a property of the serving process, not of one coordinator value —
+//! the `metrics` wire op and `simetra stats --prometheus` both render the
+//! same snapshot via [`ObsRegistry::render_into`].
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::bounds::BoundKind;
+
+/// Maximum events captured per traced request; beyond this the trace is
+/// marked truncated and further events are dropped (never reallocated).
+pub const TRACE_CAP: usize = 4096;
+
+/// Linear slack-histogram buckets of width [`SLACK_WIDTH`] over `[0, 2)`;
+/// slack of a sound upper bound on cosine similarity always fits.
+pub const SLACK_BUCKETS: usize = 16;
+
+/// Width of one slack bucket.
+pub const SLACK_WIDTH: f64 = 0.125;
+
+/// Number of `BoundKind` variants (slack histograms key on the ordinal).
+pub const BOUND_KINDS: usize = 7;
+
+/// Number of index kinds (must track `coordinator::IndexKind`).
+pub const INDEX_KINDS: usize = 7;
+
+/// Label names for index ordinals, in `coordinator::IndexKind` order
+/// (pinned by a test over `IndexKind::ordinal`/`name`).
+pub const INDEX_NAMES: [&str; INDEX_KINDS] =
+    ["linear", "vp", "ball", "m-tree", "cover", "laesa", "gnat"];
+
+/// Slots for per-shard work breakdowns (shards beyond this share the last
+/// slot; real deployments shard far below it).
+pub const SHARD_SLOTS: usize = 64;
+
+/// Slots for per-generation work breakdowns (keyed by the generation's
+/// position in the published set, clamped).
+pub const GEN_SLOTS: usize = 64;
+
+/// Capacity of the slow-query ring (top-N by latency).
+pub const SLOW_CAP: usize = 16;
+
+/// Log2-nanosecond buckets for stage spans: bucket `i` holds durations of
+/// `[2^(i-1), 2^i)` ns (bucket 0 is `0 ns`), the same edge scheme as the
+/// coordinator latency histogram but in nanoseconds.
+pub const SPAN_BUCKETS: usize = 40;
+
+// ---------------------------------------------------------------------------
+// Trace events
+// ---------------------------------------------------------------------------
+
+/// What a single trace event describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A tree node was visited; `id` is the node's representative item.
+    Visit,
+    /// A subtree/region/candidate was pruned; `bound` is the certified
+    /// upper bound that ruled it out, `id` its representative item.
+    Prune,
+    /// An exact similarity was computed; `bound` is the certified upper
+    /// bound the traversal held for `id` (1.0 when it had none), `sim`
+    /// the exact value — `bound - sim` is the observed slack.
+    Eval,
+    /// A blocked kernel scan ran; `id` is the number of rows scanned and
+    /// `bound` the number of exact evaluations it performed.
+    Scan,
+    /// The `sim_evals` budget ran out and the traversal stopped.
+    BudgetStop,
+    /// An id-filter was armed for this request; `id` is the filter size.
+    FilterGate,
+}
+
+impl TraceKind {
+    /// Stable lowercase wire token.
+    pub fn token(self) -> &'static str {
+        match self {
+            TraceKind::Visit => "visit",
+            TraceKind::Prune => "prune",
+            TraceKind::Eval => "eval",
+            TraceKind::Scan => "scan",
+            TraceKind::BudgetStop => "budget_stop",
+            TraceKind::FilterGate => "filter_gate",
+        }
+    }
+
+    /// Inverse of [`TraceKind::token`].
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        Some(match s {
+            "visit" => TraceKind::Visit,
+            "prune" => TraceKind::Prune,
+            "eval" => TraceKind::Eval,
+            "scan" => TraceKind::Scan,
+            "budget_stop" => TraceKind::BudgetStop,
+            "filter_gate" => TraceKind::FilterGate,
+            _ => return None,
+        })
+    }
+}
+
+/// One bounded-log entry of a traced traversal. All fields are finite —
+/// events with no bound/sim carry `0.0` (or `1.0` for the trivial upper
+/// bound) so the wire round-trip stays exact under `PartialEq`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    pub id: u64,
+    pub bound: f64,
+    pub sim: f64,
+}
+
+impl TraceEvent {
+    pub fn visit(id: u64) -> TraceEvent {
+        TraceEvent { kind: TraceKind::Visit, id, bound: 0.0, sim: 0.0 }
+    }
+
+    pub fn prune(id: u64, bound: f64) -> TraceEvent {
+        TraceEvent { kind: TraceKind::Prune, id, bound, sim: 0.0 }
+    }
+
+    pub fn eval(id: u64, bound: f64, sim: f64) -> TraceEvent {
+        TraceEvent { kind: TraceKind::Eval, id, bound, sim }
+    }
+
+    pub fn scan(rows: u64, evals: u64) -> TraceEvent {
+        TraceEvent { kind: TraceKind::Scan, id: rows, bound: evals as f64, sim: 0.0 }
+    }
+
+    pub fn budget_stop() -> TraceEvent {
+        TraceEvent { kind: TraceKind::BudgetStop, id: 0, bound: 0.0, sim: 0.0 }
+    }
+
+    pub fn filter_gate(filter_len: u64) -> TraceEvent {
+        TraceEvent { kind: TraceKind::FilterGate, id: filter_len, bound: 0.0, sim: 0.0 }
+    }
+}
+
+/// Fixed-capacity per-request event log. Disarmed it is a single branch
+/// per hook; armed it appends into storage reserved once per context.
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    armed: bool,
+    truncated: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    /// Start recording for one request. The first arm on a context
+    /// reserves [`TRACE_CAP`] slots; later arms reuse the storage.
+    pub fn arm(&mut self) {
+        self.armed = true;
+        self.truncated = false;
+        self.events.clear();
+        if self.events.capacity() < TRACE_CAP {
+            self.events.reserve_exact(TRACE_CAP - self.events.capacity());
+        }
+    }
+
+    pub fn disarm(&mut self) {
+        self.armed = false;
+    }
+
+    #[inline]
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// True when events were dropped at [`TRACE_CAP`].
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if !self.armed {
+            return;
+        }
+        if self.events.len() < TRACE_CAP {
+            self.events.push(ev);
+        } else {
+            self.truncated = true;
+        }
+    }
+
+    /// Move the recorded events into `out` (replacing its contents) and
+    /// clear the log; the buffer stays armed until [`TraceBuf::disarm`].
+    pub fn take_into(&mut self, out: &mut Vec<TraceEvent>) {
+        out.clear();
+        out.extend_from_slice(&self.events);
+        self.events.clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-context slack window
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn slack_bucket(slack: f64) -> usize {
+    ((slack.max(0.0) / SLACK_WIDTH) as usize).min(SLACK_BUCKETS - 1)
+}
+
+/// Per-`QueryContext` bound-slack accumulator: traversals record into a
+/// plain array (no atomics on the query path); the owning worker drains
+/// it into the global [`ObsRegistry`] keyed by its index kind.
+#[derive(Debug)]
+pub struct SlackWindow {
+    counts: [[u32; SLACK_BUCKETS]; BOUND_KINDS],
+    sum_micros: [u64; BOUND_KINDS],
+    any: bool,
+}
+
+impl Default for SlackWindow {
+    fn default() -> Self {
+        SlackWindow {
+            counts: [[0; SLACK_BUCKETS]; BOUND_KINDS],
+            sum_micros: [0; BOUND_KINDS],
+            any: false,
+        }
+    }
+}
+
+impl SlackWindow {
+    #[inline]
+    pub fn record(&mut self, bound: BoundKind, slack: f64) {
+        let bi = bound as usize;
+        self.counts[bi][slack_bucket(slack)] += 1;
+        self.sum_micros[bi] += (slack.max(0.0) * 1e6) as u64;
+        self.any = true;
+    }
+
+    /// Flush every sample into `reg` under `index` (an
+    /// `IndexKind::ordinal`) and reset the window.
+    pub fn drain_into(&mut self, reg: &ObsRegistry, index: usize) {
+        if !self.any {
+            return;
+        }
+        let ii = index.min(INDEX_KINDS - 1);
+        for (bi, row) in self.counts.iter_mut().enumerate() {
+            for (bu, c) in row.iter_mut().enumerate() {
+                if *c > 0 {
+                    reg.slack[ii][bi].buckets[bu].fetch_add(*c as u64, Ordering::Relaxed);
+                    *c = 0;
+                }
+            }
+            if self.sum_micros[bi] > 0 {
+                let micros = self.sum_micros[bi];
+                reg.slack[ii][bi].sum_micros.fetch_add(micros, Ordering::Relaxed);
+                self.sum_micros[bi] = 0;
+            }
+        }
+        self.any = false;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------------
+
+/// Pipeline stages with span-timing histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Parse,
+    Plan,
+    ShardFanout,
+    Traversal,
+    KernelScan,
+    Merge,
+    Serialize,
+}
+
+/// Number of [`Stage`] variants.
+pub const STAGES: usize = 7;
+
+impl Stage {
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Parse,
+        Stage::Plan,
+        Stage::ShardFanout,
+        Stage::Traversal,
+        Stage::KernelScan,
+        Stage::Merge,
+        Stage::Serialize,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Plan => "plan",
+            Stage::ShardFanout => "shard_fanout",
+            Stage::Traversal => "traversal",
+            Stage::KernelScan => "kernel_scan",
+            Stage::Merge => "merge",
+            Stage::Serialize => "serialize",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Slow-query ring
+// ---------------------------------------------------------------------------
+
+/// Summary of one completed request, kept when it ranks in the top
+/// [`SLOW_CAP`] by latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowEntry {
+    pub latency_us: u64,
+    /// `"knn"`, `"range"`, or `"knn_within"`.
+    pub mode: &'static str,
+    pub k: u64,
+    /// Similarity floor; meaningful only when `has_tau`.
+    pub tau: f64,
+    pub has_tau: bool,
+    /// Bound-override token, or `"default"`.
+    pub bound: &'static str,
+    pub hits: u64,
+    pub sim_evals: u64,
+    pub nodes_visited: u64,
+    pub pruned: u64,
+    pub truncated: bool,
+}
+
+/// Fixed-capacity top-N-by-latency ring: offers replace the current
+/// minimum once full, so the ring always holds the N slowest seen.
+#[derive(Debug)]
+pub struct SlowRing {
+    entries: [Option<SlowEntry>; SLOW_CAP],
+}
+
+impl SlowRing {
+    pub const fn new() -> SlowRing {
+        SlowRing { entries: [None; SLOW_CAP] }
+    }
+
+    /// Insert if a slot is free or `e` beats the slowest ring minimum;
+    /// returns whether the entry was kept.
+    pub fn offer(&mut self, e: SlowEntry) -> bool {
+        let mut free = None;
+        let mut min_i = 0usize;
+        let mut min_v = u64::MAX;
+        for (i, slot) in self.entries.iter().enumerate() {
+            match slot {
+                None => {
+                    free = Some(i);
+                    break;
+                }
+                Some(s) if s.latency_us < min_v => {
+                    min_v = s.latency_us;
+                    min_i = i;
+                }
+                Some(_) => {}
+            }
+        }
+        if let Some(i) = free {
+            self.entries[i] = Some(e);
+            return true;
+        }
+        if e.latency_us > min_v {
+            self.entries[min_i] = Some(e);
+            return true;
+        }
+        false
+    }
+
+    /// Minimum latency a new entry must beat; `0` until the ring fills.
+    pub fn floor(&self) -> u64 {
+        let mut min_v = u64::MAX;
+        for slot in &self.entries {
+            match slot {
+                None => return 0,
+                Some(s) => min_v = min_v.min(s.latency_us),
+            }
+        }
+        min_v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|s| s.is_none())
+    }
+
+    /// Entries sorted by latency, slowest first (allocates; exposition
+    /// and test path only).
+    pub fn sorted(&self) -> Vec<SlowEntry> {
+        let mut v: Vec<SlowEntry> = self.entries.iter().flatten().copied().collect();
+        v.sort_unstable_by(|a, b| b.latency_us.cmp(&a.latency_us));
+        v
+    }
+}
+
+impl Default for SlowRing {
+    fn default() -> Self {
+        SlowRing::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global registry
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// One (index kind, bound kind) slack histogram cell.
+struct SlackHist {
+    buckets: [AtomicU64; SLACK_BUCKETS],
+    sum_micros: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SLACK_HIST_ZERO: SlackHist =
+    SlackHist { buckets: [ATOMIC_ZERO; SLACK_BUCKETS], sum_micros: ATOMIC_ZERO };
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SLACK_ROW_ZERO: [SlackHist; BOUND_KINDS] = [SLACK_HIST_ZERO; BOUND_KINDS];
+
+/// One stage-span histogram (log2-ns buckets + sum).
+struct SpanHist {
+    buckets: [AtomicU64; SPAN_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const SPAN_HIST_ZERO: SpanHist =
+    SpanHist { buckets: [ATOMIC_ZERO; SPAN_BUCKETS], sum_ns: ATOMIC_ZERO };
+
+/// Per-shard / per-generation work counters.
+struct WorkCell {
+    queries: AtomicU64,
+    sim_evals: AtomicU64,
+    nodes_visited: AtomicU64,
+    pruned: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const WORK_CELL_ZERO: WorkCell = WorkCell {
+    queries: ATOMIC_ZERO,
+    sim_evals: ATOMIC_ZERO,
+    nodes_visited: ATOMIC_ZERO,
+    pruned: ATOMIC_ZERO,
+};
+
+#[inline]
+fn span_bucket(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(SPAN_BUCKETS - 1)
+}
+
+/// Process-wide lock-free observability registry.
+pub struct ObsRegistry {
+    slack: [[SlackHist; BOUND_KINDS]; INDEX_KINDS],
+    stages: [SpanHist; STAGES],
+    shards: [WorkCell; SHARD_SLOTS],
+    gens: [WorkCell; GEN_SLOTS],
+    slow: Mutex<SlowRing>,
+    slow_floor: AtomicU64,
+}
+
+/// The process-wide registry every layer records into.
+pub static OBS: ObsRegistry = ObsRegistry::new();
+
+impl ObsRegistry {
+    pub const fn new() -> ObsRegistry {
+        ObsRegistry {
+            slack: [SLACK_ROW_ZERO; INDEX_KINDS],
+            stages: [SPAN_HIST_ZERO; STAGES],
+            shards: [WORK_CELL_ZERO; SHARD_SLOTS],
+            gens: [WORK_CELL_ZERO; GEN_SLOTS],
+            slow: Mutex::new(SlowRing::new()),
+            slow_floor: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one span for `stage`.
+    #[inline]
+    pub fn record_stage(&self, stage: Stage, took: Duration) {
+        let ns = took.as_nanos() as u64;
+        let h = &self.stages[stage as usize];
+        h.buckets[span_bucket(ns)].fetch_add(1, Ordering::Relaxed);
+        h.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Fold one batch's work into the per-shard breakdown.
+    pub fn record_shard(&self, shard: usize, queries: u64, evals: u64, nodes: u64, pruned: u64) {
+        let c = &self.shards[shard.min(SHARD_SLOTS - 1)];
+        c.queries.fetch_add(queries, Ordering::Relaxed);
+        c.sim_evals.fetch_add(evals, Ordering::Relaxed);
+        c.nodes_visited.fetch_add(nodes, Ordering::Relaxed);
+        c.pruned.fetch_add(pruned, Ordering::Relaxed);
+    }
+
+    /// Fold one generation visit's work into the per-generation
+    /// breakdown (`pos` is the generation's position in the set).
+    pub fn record_gen(&self, pos: usize, queries: u64, evals: u64, nodes: u64, pruned: u64) {
+        let c = &self.gens[pos.min(GEN_SLOTS - 1)];
+        c.queries.fetch_add(queries, Ordering::Relaxed);
+        c.sim_evals.fetch_add(evals, Ordering::Relaxed);
+        c.nodes_visited.fetch_add(nodes, Ordering::Relaxed);
+        c.pruned.fetch_add(pruned, Ordering::Relaxed);
+    }
+
+    /// Offer a completed query to the slow-query ring. The common case
+    /// (faster than the current top-N floor) is one relaxed load.
+    pub fn note_query(&self, e: SlowEntry) {
+        let floor = self.slow_floor.load(Ordering::Relaxed);
+        if floor > 0 && e.latency_us <= floor {
+            return;
+        }
+        let mut ring = match self.slow.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        ring.offer(e);
+        self.slow_floor.store(ring.floor(), Ordering::Relaxed);
+    }
+
+    /// Total slack samples recorded under `(index, bound)`.
+    pub fn slack_count(&self, index: usize, bound: BoundKind) -> u64 {
+        let h = &self.slack[index.min(INDEX_KINDS - 1)][bound as usize];
+        h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total spans recorded for `stage`.
+    pub fn stage_count(&self, stage: Stage) -> u64 {
+        let h = &self.stages[stage as usize];
+        h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Slowest-first snapshot of the slow-query ring.
+    pub fn slow_queries(&self) -> Vec<SlowEntry> {
+        match self.slow.lock() {
+            Ok(g) => g.sorted(),
+            Err(poisoned) => poisoned.into_inner().sorted(),
+        }
+    }
+
+    /// Render every family in Prometheus text format into `buf`.
+    ///
+    /// Histogram `le` edges follow the recording buckets exactly: slack
+    /// buckets are linear with width [`SLACK_WIDTH`] (the top edge `2`
+    /// doubles as `+Inf` — slack of a sound bound never exceeds it); span
+    /// buckets are log2 nanoseconds with inclusive edges `2^i - 1`.
+    pub fn render_into(&self, buf: &mut String) {
+        buf.push_str("# HELP simetra_bound_slack Bound slack ub-sim of evaluated candidates.\n");
+        buf.push_str("# TYPE simetra_bound_slack histogram\n");
+        for (ii, iname) in INDEX_NAMES.iter().enumerate() {
+            for bk in BoundKind::ALL {
+                let h = &self.slack[ii][bk as usize];
+                let total: u64 = h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+                if total == 0 {
+                    continue;
+                }
+                let l = format!("index=\"{}\",bound=\"{}\"", iname, bk.token());
+                let mut cum = 0u64;
+                for (bu, cell) in h.buckets.iter().enumerate() {
+                    cum += cell.load(Ordering::Relaxed);
+                    let le = (bu + 1) as f64 * SLACK_WIDTH;
+                    let _ = writeln!(buf, "simetra_bound_slack_bucket{{{l},le=\"{le}\"}} {cum}");
+                }
+                let _ = writeln!(buf, "simetra_bound_slack_bucket{{{l},le=\"+Inf\"}} {total}");
+                let sum = h.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+                let _ = writeln!(buf, "simetra_bound_slack_sum{{{l}}} {sum}");
+                let _ = writeln!(buf, "simetra_bound_slack_count{{{l}}} {total}");
+            }
+        }
+
+        buf.push_str("# HELP simetra_stage_duration_ns Per-stage span timings.\n");
+        buf.push_str("# TYPE simetra_stage_duration_ns histogram\n");
+        for stage in Stage::ALL {
+            let h = &self.stages[stage as usize];
+            let l = format!("stage=\"{}\"", stage.name());
+            let mut cum = 0u64;
+            for (bu, cell) in h.buckets.iter().enumerate() {
+                let c = cell.load(Ordering::Relaxed);
+                cum += c;
+                // Sparse: skip interior zero buckets to keep the page
+                // small (cumulative counts stay exact).
+                if c == 0 && bu != 0 && bu != SPAN_BUCKETS - 1 {
+                    continue;
+                }
+                let le = (1u64 << bu) - 1;
+                let _ = writeln!(buf, "simetra_stage_duration_ns_bucket{{{l},le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(buf, "simetra_stage_duration_ns_bucket{{{l},le=\"+Inf\"}} {cum}");
+            let sum = h.sum_ns.load(Ordering::Relaxed);
+            let _ = writeln!(buf, "simetra_stage_duration_ns_sum{{{l}}} {sum}");
+            let _ = writeln!(buf, "simetra_stage_duration_ns_count{{{l}}} {cum}");
+        }
+
+        render_work(buf, "shard", &self.shards);
+        render_work(buf, "generation", &self.gens);
+
+        buf.push_str("# HELP simetra_slow_query_latency_us Slowest queries, top-N by latency.\n");
+        buf.push_str("# TYPE simetra_slow_query_latency_us gauge\n");
+        buf.push_str("# HELP simetra_slow_query_sim_evals Exact evals of the slowest queries.\n");
+        buf.push_str("# TYPE simetra_slow_query_sim_evals gauge\n");
+        for (rank, e) in self.slow_queries().iter().enumerate() {
+            let (m, k, b) = (e.mode, e.k, e.bound);
+            let l = format!("rank=\"{rank}\",mode=\"{m}\",k=\"{k}\",bound=\"{b}\"");
+            let _ = writeln!(buf, "simetra_slow_query_latency_us{{{l}}} {}", e.latency_us);
+            let _ = writeln!(buf, "simetra_slow_query_sim_evals{{{l}}} {}", e.sim_evals);
+        }
+    }
+}
+
+fn render_work(buf: &mut String, what: &str, cells: &[WorkCell]) {
+    let _ = writeln!(buf, "# HELP simetra_{what}_work Per-{what} query work counters.");
+    let _ = writeln!(buf, "# TYPE simetra_{what}_work counter");
+    for (i, c) in cells.iter().enumerate() {
+        let q = c.queries.load(Ordering::Relaxed);
+        if q == 0 {
+            continue;
+        }
+        let pairs = [
+            ("queries", q),
+            ("sim_evals", c.sim_evals.load(Ordering::Relaxed)),
+            ("nodes_visited", c.nodes_visited.load(Ordering::Relaxed)),
+            ("pruned", c.pruned.load(Ordering::Relaxed)),
+        ];
+        for (name, v) in pairs {
+            let l = format!("{what}=\"{i}\",counter=\"{name}\"");
+            let _ = writeln!(buf, "simetra_{what}_work{{{l}}} {v}");
+        }
+    }
+}
+
+impl Default for ObsRegistry {
+    fn default() -> Self {
+        ObsRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(latency_us: u64) -> SlowEntry {
+        SlowEntry {
+            latency_us,
+            mode: "knn",
+            k: 10,
+            tau: 0.0,
+            has_tau: false,
+            bound: "default",
+            hits: 10,
+            sim_evals: 100,
+            nodes_visited: 20,
+            pruned: 5,
+            truncated: false,
+        }
+    }
+
+    #[test]
+    fn trace_buf_caps_at_capacity_and_marks_truncation() {
+        let mut t = TraceBuf::default();
+        t.push(TraceEvent::visit(1));
+        let mut out = vec![TraceEvent::visit(9)];
+        t.take_into(&mut out);
+        assert!(out.is_empty(), "disarmed pushes record nothing");
+        t.arm();
+        for i in 0..(TRACE_CAP as u64 + 10) {
+            t.push(TraceEvent::visit(i));
+        }
+        assert!(t.truncated());
+        t.take_into(&mut out);
+        assert_eq!(out.len(), TRACE_CAP);
+        assert_eq!(out[0], TraceEvent::visit(0));
+        t.disarm();
+        assert!(!t.armed());
+    }
+
+    #[test]
+    fn slow_ring_fills_then_evicts_minimum() {
+        let mut r = SlowRing::new();
+        assert_eq!(r.floor(), 0);
+        assert!(r.is_empty());
+        for i in 0..SLOW_CAP as u64 {
+            assert!(r.offer(entry(100 + i)));
+        }
+        assert_eq!(r.len(), SLOW_CAP);
+        assert_eq!(r.floor(), 100);
+        // Slower than the floor: evicts the minimum.
+        assert!(r.offer(entry(500)));
+        assert_eq!(r.floor(), 101);
+        // Not slower than the (new) floor: rejected.
+        assert!(!r.offer(entry(101)));
+        assert!(!r.offer(entry(50)));
+        let sorted = r.sorted();
+        assert_eq!(sorted.len(), SLOW_CAP);
+        assert_eq!(sorted[0].latency_us, 500);
+        assert!(sorted.windows(2).all(|w| w[0].latency_us >= w[1].latency_us));
+    }
+
+    #[test]
+    fn registry_note_query_respects_floor() {
+        let reg = ObsRegistry::new();
+        for i in 0..SLOW_CAP as u64 {
+            reg.note_query(entry(1000 + i));
+        }
+        reg.note_query(entry(1)); // below floor: dropped without locking
+        let snap = reg.slow_queries();
+        assert_eq!(snap.len(), SLOW_CAP);
+        assert!(snap.iter().all(|e| e.latency_us >= 1000));
+        reg.note_query(entry(9999));
+        assert_eq!(reg.slow_queries()[0].latency_us, 9999);
+    }
+
+    #[test]
+    fn slack_window_drains_into_registry() {
+        let reg = ObsRegistry::new();
+        let mut w = SlackWindow::default();
+        w.record(BoundKind::Mult, 0.0);
+        w.record(BoundKind::Mult, 0.13);
+        w.record(BoundKind::Mult, 5.0); // clamped into the last bucket
+        w.record(BoundKind::Arccos, 0.5);
+        w.drain_into(&reg, 1); // "vp"
+        assert_eq!(reg.slack_count(1, BoundKind::Mult), 3);
+        assert_eq!(reg.slack_count(1, BoundKind::Arccos), 1);
+        assert_eq!(reg.slack_count(0, BoundKind::Mult), 0);
+        // Drained windows are empty: a second drain adds nothing.
+        w.drain_into(&reg, 1);
+        assert_eq!(reg.slack_count(1, BoundKind::Mult), 3);
+    }
+
+    #[test]
+    fn render_emits_parseable_prometheus_text() {
+        let reg = ObsRegistry::new();
+        let mut w = SlackWindow::default();
+        w.record(BoundKind::Mult, 0.3);
+        w.drain_into(&reg, 1);
+        reg.record_stage(Stage::Parse, Duration::from_micros(3));
+        reg.record_shard(0, 4, 400, 40, 10);
+        reg.record_gen(2, 1, 50, 5, 1);
+        reg.note_query(entry(42));
+        let mut buf = String::new();
+        reg.render_into(&mut buf);
+        for needle in [
+            "# TYPE simetra_bound_slack histogram",
+            "simetra_bound_slack_bucket{index=\"vp\",bound=\"mult\",le=\"+Inf\"} 1",
+            "simetra_bound_slack_count{index=\"vp\",bound=\"mult\"} 1",
+            "simetra_stage_duration_ns_bucket{stage=\"parse\",le=\"+Inf\"} 1",
+            "simetra_shard_work{shard=\"0\",counter=\"sim_evals\"} 400",
+            "simetra_generation_work{generation=\"2\",counter=\"queries\"} 1",
+            "simetra_slow_query_latency_us{rank=\"0\",mode=\"knn\"",
+        ] {
+            assert!(buf.contains(needle), "missing {needle:?} in:\n{buf}");
+        }
+        // Every non-comment line is `name{labels} value`.
+        for line in buf.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name_labels, value) = line.rsplit_once(' ').expect("sample line");
+            assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
+            assert!(name_labels.starts_with("simetra_"), "bad family in {line:?}");
+        }
+    }
+
+    #[test]
+    fn trace_kind_tokens_round_trip() {
+        for k in [
+            TraceKind::Visit,
+            TraceKind::Prune,
+            TraceKind::Eval,
+            TraceKind::Scan,
+            TraceKind::BudgetStop,
+            TraceKind::FilterGate,
+        ] {
+            assert_eq!(TraceKind::parse(k.token()), Some(k));
+        }
+        assert_eq!(TraceKind::parse("nope"), None);
+    }
+}

@@ -39,7 +39,9 @@ pub use plan::{IdFilter, SearchMode, SearchRequest, SearchRequestBuilder, Search
 use std::collections::BinaryHeap;
 use std::marker::PhantomData;
 
+use crate::bounds::BoundKind;
 use crate::index::{KnnHeap, QueryStats};
+use crate::obs::{SlackWindow, TraceEvent, OBS};
 use crate::storage::{FilterMode, KernelScratch, QueryBlock};
 
 /// The maximum number of queries one shared-frontier traversal carries:
@@ -345,6 +347,12 @@ pub struct QueryContext {
     /// The multi-query traversal arena (ADR-006), leased via
     /// [`QueryContext::lease_batch`].
     batch: BatchContext,
+    /// Per-context bound-slack window (ADR-007), drained into the global
+    /// registry by the owning worker via [`QueryContext::drain_slack`].
+    slack: SlackWindow,
+    /// Whether aggregate observability (slack windows, kernel-scan spans)
+    /// is recorded on this context; trace events are armed per request.
+    obs_enabled: bool,
 }
 
 impl QueryContext {
@@ -384,10 +392,21 @@ impl QueryContext {
         self.budget = req.budget;
         self.truncated = false;
         self.scratch.set_kernel_override(req.kernel);
+        if req.trace {
+            self.scratch.trace.arm();
+        } else {
+            self.scratch.trace.disarm();
+        }
         match &req.filter {
             IdFilter::None => self.scratch.clear_filter(),
-            IdFilter::Allow(ids) => self.scratch.set_filter(FilterMode::Allow, local_ids(ids)),
-            IdFilter::Deny(ids) => self.scratch.set_filter(FilterMode::Deny, local_ids(ids)),
+            IdFilter::Allow(ids) => {
+                self.scratch.trace.push(TraceEvent::filter_gate(ids.len() as u64));
+                self.scratch.set_filter(FilterMode::Allow, local_ids(ids))
+            }
+            IdFilter::Deny(ids) => {
+                self.scratch.trace.push(TraceEvent::filter_gate(ids.len() as u64));
+                self.scratch.set_filter(FilterMode::Deny, local_ids(ids))
+            }
         }
     }
 
@@ -397,6 +416,84 @@ impl QueryContext {
         self.budget = None;
         self.scratch.set_kernel_override(None);
         self.scratch.clear_filter();
+        self.scratch.trace.disarm();
+    }
+
+    /// Turn aggregate observability (ADR-007) on or off for this context:
+    /// bound-slack windows and kernel-scan span timings. Workers that own
+    /// a context enable it once; per-request EXPLAIN tracing is armed
+    /// independently by [`QueryContext::apply_plan`].
+    pub fn set_obs_enabled(&mut self, on: bool) {
+        self.obs_enabled = on;
+        self.scratch.obs_enabled = on;
+    }
+
+    /// Whether aggregate observability is on for this context.
+    #[inline]
+    pub fn obs_enabled(&self) -> bool {
+        self.obs_enabled
+    }
+
+    /// Whether the in-flight request asked for an EXPLAIN trace.
+    #[inline]
+    pub fn trace_armed(&self) -> bool {
+        self.scratch.trace.armed()
+    }
+
+    /// Whether the armed trace dropped events at `TRACE_CAP`.
+    #[inline]
+    pub fn trace_truncated(&self) -> bool {
+        self.scratch.trace.truncated()
+    }
+
+    /// Record a node visit into the armed trace (one branch when off).
+    #[inline]
+    pub fn trace_visit(&mut self, id: u64) {
+        self.scratch.trace.push(TraceEvent::visit(id));
+    }
+
+    /// Record a prune decision with its certified upper bound.
+    #[inline]
+    pub fn trace_prune(&mut self, id: u64, bound: f64) {
+        self.scratch.trace.push(TraceEvent::prune(id, bound));
+    }
+
+    /// Record a generic trace event (budget stops, scan summaries the
+    /// traversal itself issues).
+    #[inline]
+    pub fn trace_event(&mut self, ev: TraceEvent) {
+        self.scratch.trace.push(ev);
+    }
+
+    /// Record an exact evaluation without a slack sample — for sites
+    /// where the traversal holds no per-candidate certified bound
+    /// (`bound` is `1.0`, the trivial one, at such sites).
+    #[inline]
+    pub fn trace_eval(&mut self, id: u64, bound: f64, sim: f64) {
+        self.scratch.trace.push(TraceEvent::eval(id, bound, sim));
+    }
+
+    /// Record an exact evaluation whose admitting upper bound was `ub`:
+    /// an `Eval` trace event when armed, and a bound-slack sample
+    /// (`ub - sim`, keyed by `bound`) when aggregate observability is on.
+    #[inline]
+    pub fn note_eval_slack(&mut self, bound: BoundKind, id: u64, ub: f64, sim: f64) {
+        if self.obs_enabled {
+            self.slack.record(bound, ub - sim);
+        }
+        self.scratch.trace.push(TraceEvent::eval(id, ub, sim));
+    }
+
+    /// Move the recorded trace events into `out` (replacing its contents).
+    #[inline]
+    pub fn take_trace(&mut self, out: &mut Vec<TraceEvent>) {
+        self.scratch.trace.take_into(out);
+    }
+
+    /// Drain the per-context slack window into the global registry under
+    /// index-kind ordinal `index` (no-op when the window is empty).
+    pub fn drain_slack(&mut self, index: usize) {
+        self.slack.drain_into(&OBS, index);
     }
 
     /// Whether the armed evaluation budget is spent (always `false`

@@ -140,6 +140,13 @@ pub struct SearchRequest {
     /// [`SearchResponse::truncated`] set. Applied per partition (shard /
     /// generation-set window).
     pub budget: Option<u64>,
+    /// Record an EXPLAIN trace (ADR-007): a bounded event log of the
+    /// traversal (visits, prune decisions with their certified bounds,
+    /// exact evaluations, kernel scans, budget/filter gates) returned in
+    /// [`SearchResponse::trace`]. Results are byte-identical to the
+    /// untraced plan; traced requests take the per-query path (never the
+    /// shared-frontier batch descent).
+    pub trace: bool,
 }
 
 impl SearchRequest {
@@ -165,6 +172,7 @@ impl SearchRequest {
             && self.kernel.is_none()
             && self.budget.is_none()
             && self.filter.is_none()
+            && !self.trace
     }
 
     /// The same plan with `mode` and a translated filter — how layers with
@@ -180,6 +188,7 @@ impl SearchRequest {
             kernel: self.kernel,
             filter: self.filter.localize(map),
             budget: self.budget,
+            trace: self.trace,
         }
     }
 }
@@ -199,6 +208,7 @@ impl SearchRequestBuilder {
                 kernel: None,
                 filter: IdFilter::None,
                 budget: None,
+                trace: false,
             },
         }
     }
@@ -250,6 +260,12 @@ impl SearchRequestBuilder {
         self
     }
 
+    /// Record an EXPLAIN trace of the traversal (ADR-007).
+    pub fn trace(mut self) -> Self {
+        self.req.trace = true;
+        self
+    }
+
     pub fn build(self) -> SearchRequest {
         self.req
     }
@@ -264,6 +280,9 @@ pub struct SearchResponse {
     pub hits: Vec<(u32, f64)>,
     pub stats: QueryStats,
     pub truncated: bool,
+    /// The EXPLAIN event log when the request set [`SearchRequest::trace`]
+    /// (empty otherwise; capped at [`crate::obs::TRACE_CAP`] events).
+    pub trace: Vec<crate::obs::TraceEvent>,
 }
 
 #[cfg(test)]
@@ -278,6 +297,7 @@ mod tests {
             .kernel(KernelKind::Simd)
             .allow(vec![9, 3, 3, 7])
             .budget(1000)
+            .trace()
             .build();
         assert_eq!(req.mode, SearchMode::KnnWithin { k: 10, tau: 0.7 });
         assert_eq!(req.bound, Some(BoundKind::Euclidean));
@@ -285,8 +305,12 @@ mod tests {
         assert_eq!(req.filter.ids(), Some(&[3u64, 7, 9][..]));
         assert!(req.filter.is_sorted());
         assert_eq!(req.budget, Some(1000));
+        assert!(req.trace);
         assert!(!req.is_plain());
         assert!(SearchRequest::range(0.5).build().is_plain());
+        // A trace request alone de-plains the plan: traced searches must
+        // take the per-query path, never the shared-frontier batch.
+        assert!(!SearchRequest::knn(3).trace().build().is_plain());
     }
 
     #[test]

@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, OnceLock};
 
 use crate::index::KnnHeap;
+use crate::obs::{Stage, TraceBuf, TraceEvent, OBS};
 
 use super::dot_slice;
 
@@ -261,6 +262,12 @@ pub struct KernelScratch {
     /// Per-request kernel-backend override (ADR-005): `CorpusView` scans
     /// dispatch through this kind instead of the store's primary backend.
     kernel_override: Option<KernelKind>,
+    /// Per-request EXPLAIN event log (ADR-007), armed by the plan layer;
+    /// lives here so kernel scans can record their blocks directly.
+    pub trace: TraceBuf,
+    /// Whether aggregate observability (kernel-scan span timings) is on
+    /// for the context owning this scratch (ADR-007).
+    pub obs_enabled: bool,
     /// Debug builds keep the cached query's bytes so a cache hit can
     /// verify the `(ptr, len)` key really denotes the same query — an
     /// ABA'd address after a missed `invalidate` fails loudly in tests
@@ -945,20 +952,33 @@ impl KernelBackend for QuantizedI8Kernel {
 /// positions are staged as an explicit gather (absolute store rows +
 /// report ids) and `f` scans only those — denied rows never reach an
 /// exact or quantized evaluation, and every backend shares this one
-/// resolution path.
-fn with_filtered_sel<R>(
+/// resolution path. Being the one chokepoint every single-query scan goes
+/// through, this is also where ADR-007 hooks live: a `Scan` trace event
+/// (rows scanned, exact evals) when a trace is armed, and a `kernel_scan`
+/// stage span when aggregate observability is on.
+fn with_filtered_sel(
     scratch: &mut KernelScratch,
     sel: RowSel<'_>,
-    f: impl FnOnce(&mut KernelScratch, RowSel<'_>) -> R,
-) -> R {
-    match scratch.stage_filtered(&sel) {
-        None => f(scratch, sel),
+    f: impl FnOnce(&mut KernelScratch, RowSel<'_>) -> u64,
+) -> u64 {
+    let started = if scratch.obs_enabled { Some(std::time::Instant::now()) } else { None };
+    let (evals, scanned) = match scratch.stage_filtered(&sel) {
+        None => {
+            let n = sel.len() as u64;
+            (f(scratch, sel), n)
+        }
         Some((rows, ids)) => {
+            let n = rows.len() as u64;
             let out = f(scratch, RowSel::Gather { rows: &rows, base: 0, report: Some(&ids) });
             scratch.restore_filter_bufs((rows, ids));
-            out
+            (out, n)
         }
+    };
+    scratch.trace.push(TraceEvent::scan(scanned, evals));
+    if let Some(t0) = started {
+        OBS.record_stage(Stage::KernelScan, t0.elapsed());
     }
+    evals
 }
 
 fn exact_topk(

@@ -1,0 +1,223 @@
+//! The observability layer's contracts (ADR-007):
+//!
+//!  1. Traced (EXPLAIN) searches are **byte-identical** to untraced ones —
+//!     including against the shared-frontier batch path the untraced plain
+//!     plans ride — across all 7 indexes × {scalar, simd, i8} kernels ×
+//!     static, sharded, and mutable (ingest) corpora; and a traced search
+//!     really records a non-empty event log.
+//!  2. The wire surface: the `explain` op returns the same hits as
+//!     `search` plus the trace; the `metrics` op serves well-formed
+//!     Prometheus text containing the bound-slack histograms keyed by
+//!     index and bound, the per-stage span histograms, per-shard work
+//!     counters, and the slow-query ring.
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::router::build_shards;
+use simetra::coordinator::{server, Coordinator, CoordinatorConfig, IndexKind};
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::index::SimilarityIndex;
+use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::metrics::DenseVec;
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
+use simetra::storage::KernelKind;
+
+const ALL_KINDS: [IndexKind; 7] = [
+    IndexKind::Linear,
+    IndexKind::Vp,
+    IndexKind::Ball,
+    IndexKind::MTree,
+    IndexKind::Cover,
+    IndexKind::Laesa,
+    IndexKind::Gnat,
+];
+
+const ALL_KERNELS: [KernelKind; 3] =
+    [KernelKind::Scalar, KernelKind::Simd, KernelKind::QuantizedI8];
+
+/// Bitwise equality of two result lists: same ids, same f64 bit patterns.
+fn assert_bits_eq(a: &[(u32, f64)], b: &[(u32, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+fn assert_bits_eq64(a: &[(u64, f64)], b: &[(u64, f64)], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths differ");
+    for (pos, ((ia, sa), (ib, sb))) in a.iter().zip(b).enumerate() {
+        assert_eq!(ia, ib, "{what}: id at {pos}");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "{what}: sim bits at {pos}");
+    }
+}
+
+/// Alternating kNN / range plans, traced or not.
+fn mixed_reqs(n: usize, traced: bool) -> Vec<SearchRequest> {
+    (0..n)
+        .map(|i| {
+            let b = if i % 2 == 0 {
+                SearchRequest::knn(8)
+            } else {
+                SearchRequest::range(0.15)
+            };
+            if traced {
+                b.trace().build()
+            } else {
+                b.build()
+            }
+        })
+        .collect()
+}
+
+// --- 1. traced == untraced, static indexes ---------------------------------
+
+#[test]
+fn traced_matches_untraced_static_indexes() {
+    let queries: Vec<DenseVec> = uniform_sphere(6, 16, 77);
+    let plain = mixed_reqs(queries.len(), false);
+    let traced = mixed_reqs(queries.len(), true);
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(1200, 16, 76).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let what = format!("{} / {}", kind.name(), kernel.name());
+            let mut ctx = QueryContext::new();
+            let mut pr: Vec<SearchResponse> = Vec::new();
+            let mut tr: Vec<SearchResponse> = Vec::new();
+            // The plain batch rides the shared-frontier traversal; the
+            // traced batch is non-plain and falls back per query — the
+            // strongest form of the byte-identity contract.
+            index.search_batch_into(&queries, &plain, &mut ctx, &mut pr);
+            index.search_batch_into(&queries, &traced, &mut ctx, &mut tr);
+            for (qi, (p, t)) in pr.iter().zip(&tr).enumerate() {
+                assert_bits_eq(&p.hits, &t.hits, &format!("{what} q{qi}"));
+                assert!(p.trace.is_empty(), "{what} q{qi}: untraced request grew a trace");
+                assert!(!t.trace.is_empty(), "{what} q{qi}: traced request has no events");
+            }
+        }
+    }
+}
+
+// --- sharded corpora -------------------------------------------------------
+
+#[test]
+fn traced_matches_untraced_sharded() {
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(1500, 12, 5).with_kernel(kernel);
+        for kind in ALL_KINDS {
+            let shards = build_shards(&store, 3, kind, BoundKind::Mult, 0);
+            let queries: Vec<DenseVec> = uniform_sphere(4, 12, 8);
+            let what = format!("{} / {}", kind.name(), kernel.name());
+            for shard in &shards {
+                let mut ctx = QueryContext::new();
+                for (qi, q) in queries.iter().enumerate() {
+                    let plain = SearchRequest::knn(6).build();
+                    let traced = SearchRequest::knn(6).trace().build();
+                    let (ph, ps, _, pt) = shard.search_ctx(q, &plain, &mut ctx);
+                    let (th, ts, _, tt) = shard.search_ctx(q, &traced, &mut ctx);
+                    assert_bits_eq(&ph, &th, &format!("{what} shard {} q{qi}", shard.base));
+                    assert_eq!(ps.sim_evals, ts.sim_evals, "{what} q{qi}: evals differ");
+                    assert!(pt.is_empty(), "{what} q{qi}: untraced request grew a trace");
+                    assert!(!tt.is_empty(), "{what} q{qi}: traced request has no events");
+                }
+            }
+        }
+    }
+}
+
+// --- mutable (ingest) corpora ----------------------------------------------
+
+#[test]
+fn traced_matches_untraced_mutable_corpus() {
+    for kernel in ALL_KERNELS {
+        // One sealed generation plus staged memtable rows plus tombstones:
+        // the traced fan-out crosses every source kind.
+        let cfg = IngestConfig {
+            seal_threshold: 600,
+            background: false,
+            kernel,
+            ..IngestConfig::new(12)
+        };
+        let corpus = IngestCorpus::new(cfg).unwrap();
+        for r in &uniform_sphere(700, 12, 31) {
+            corpus.insert(r.as_slice().to_vec()).unwrap();
+        }
+        for id in (0..700u64).step_by(101) {
+            assert!(corpus.delete(id));
+        }
+        let queries: Vec<DenseVec> = uniform_sphere(6, 12, 32);
+        let plain = mixed_reqs(queries.len(), false);
+        let traced = mixed_reqs(queries.len(), true);
+        let mut ctx = QueryContext::new();
+        let (mut outs_p, mut metas_p) = (Vec::new(), Vec::new());
+        let (mut outs_t, mut metas_t) = (Vec::new(), Vec::new());
+        corpus.search_batch_ctx(&queries, &plain, &mut ctx, &mut outs_p, &mut metas_p);
+        corpus.search_batch_ctx(&queries, &traced, &mut ctx, &mut outs_t, &mut metas_t);
+        for qi in 0..queries.len() {
+            let what = format!("ingest / {} q{qi}", kernel.name());
+            assert_bits_eq64(&outs_p[qi], &outs_t[qi], &what);
+            assert_eq!(metas_p[qi].0.sim_evals, metas_t[qi].0.sim_evals, "{what}: evals");
+            assert!(metas_p[qi].2.is_empty(), "{what}: untraced request grew a trace");
+            assert!(!metas_t[qi].2.is_empty(), "{what}: traced request has no events");
+        }
+    }
+}
+
+// --- 2. wire surface: explain + metrics ------------------------------------
+
+/// Every non-comment line of a Prometheus text page is `name value` or
+/// `name{labels} value` with a numeric value and balanced label braces.
+fn assert_prometheus_well_formed(text: &str) {
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (_, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        assert!(value.parse::<f64>().is_ok(), "non-numeric value in line: {line}");
+        assert_eq!(line.matches('{').count(), line.matches('}').count(), "{line}");
+    }
+}
+
+#[test]
+fn wire_explain_and_metrics_surface() {
+    let pts = uniform_sphere(600, 8, 91);
+    let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+    let server = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = server::Client::connect(server.addr()).unwrap();
+
+    // Populate the registries: plain searches feed the stage histograms,
+    // shard work cells, latency histogram, and slow-query ring. (Bound
+    // slack is recorded on the per-query path only, so the `explain`
+    // call below is what guarantees slack samples exist.)
+    for i in 0..12usize {
+        let req = SearchRequest::knn(5).build();
+        let result = client.search(pts[i].as_slice().to_vec(), req).unwrap();
+        assert_eq!(result.hits[0].id, i as u64);
+    }
+
+    // Explain == search, bit for bit, plus a non-empty trace.
+    let req = SearchRequest::knn(5).build();
+    let plain = client.search(pts[3].as_slice().to_vec(), req.clone()).unwrap();
+    let traced = client.explain(pts[3].as_slice().to_vec(), req).unwrap();
+    assert_eq!(plain.hits.len(), traced.hits.len());
+    for (a, b) in plain.hits.iter().zip(traced.hits.iter()) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+    }
+    assert!(plain.trace.is_empty(), "search replies never carry a trace");
+    assert!(!traced.trace.is_empty(), "explain reply carries the event log");
+
+    // The metrics op: one well-formed Prometheus page with the ADR-007
+    // families (the default config serves a vp index).
+    let text = client.metrics().unwrap();
+    assert_prometheus_well_formed(&text);
+    assert!(text.contains("# TYPE simetra_queries_total counter"), "{text}");
+    assert!(text.contains("# TYPE simetra_request_latency_us histogram"), "{text}");
+    assert!(text.contains("# TYPE simetra_bound_slack histogram"), "{text}");
+    assert!(text.contains("simetra_bound_slack_count{index=\"vp\",bound=\""), "{text}");
+    assert!(text.contains("# TYPE simetra_stage_duration_ns histogram"), "{text}");
+    assert!(text.contains("stage=\"traversal\""), "{text}");
+    assert!(text.contains("stage=\"parse\""), "{text}");
+    assert!(text.contains("simetra_shard_work{shard=\"0\",counter=\"queries\"}"), "{text}");
+    assert!(text.contains("simetra_slow_query_latency_us{rank=\"0\",mode=\"knn\""), "{text}");
+}

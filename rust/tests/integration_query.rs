@@ -11,7 +11,9 @@
 //!     query (counting global allocator, thread-local so parallel tests
 //!     don't interfere) — and the ADR-006 batched traversal holds the
 //!     same bar: a whole `search_batch_into` batch through a warmed
-//!     `BatchContext` arena allocates nothing.
+//!     `BatchContext` arena allocates nothing. Enabling aggregate
+//!     observability (ADR-007 bound-slack windows + span timings, all
+//!     fixed-capacity) does not move the bar.
 //!  4. A quantized traversal builds its `QuantQuery` once per query, no
 //!     matter how many leaf buckets it scans (the ROADMAP follow-on).
 
@@ -316,6 +318,45 @@ fn steady_state_batches_allocate_nothing() {
                 allocs,
                 0,
                 "steady-state batch {} / {} allocated {} times",
+                kind.name(),
+                kernel.name(),
+                allocs
+            );
+        }
+    }
+}
+
+#[test]
+fn steady_state_obs_recording_allocates_nothing() {
+    // Aggregate observability on (ADR-007): the per-context bound-slack
+    // window, its drain into the global registry, and the kernel-scan span
+    // timings all write fixed-capacity structures — the zero-allocation
+    // bar of the tracing-off serving path is unchanged with observability
+    // enabled.
+    for kernel in ALL_KERNELS {
+        let store = uniform_sphere_store(2048, 32, 17).with_kernel(kernel);
+        let queries: Vec<DenseVec> = (0..6usize).map(|i| store.vec(i * 311)).collect();
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let mut ctx = QueryContext::new();
+            ctx.set_obs_enabled(true);
+            let mut out = Vec::new();
+            let mut run = |ctx: &mut QueryContext, out: &mut Vec<(u32, f64)>| {
+                for q in &queries {
+                    ctx.begin_query();
+                    index.knn_into(q, 10, ctx, out);
+                    ctx.begin_query();
+                    index.range_into(q, 0.2, ctx, out);
+                }
+                ctx.drain_slack(kind.ordinal());
+            };
+            run(&mut ctx, &mut out);
+            run(&mut ctx, &mut out);
+            let allocs = count_allocs(|| run(&mut ctx, &mut out));
+            assert_eq!(
+                allocs,
+                0,
+                "obs-enabled steady state {} / {} allocated {} times per 12 queries",
                 kind.name(),
                 kernel.name(),
                 allocs
