@@ -11,7 +11,13 @@ Expects a running `simetra serve` on HOST:PORT (argv[1], argv[2]) with
     plus a non-empty trace of known event kinds;
   - the `metrics` op returns a Prometheus text page that parses line by
     line and carries the ADR-007 families (bound-slack keyed by index
-    and bound, per-stage spans) next to the request-latency histogram.
+    and bound, per-stage spans) next to the request-latency histogram
+    and the ADR-008 wire counters/gauges;
+  - a pipelined burst (many frames in one write) answers every frame,
+    in order (ADR-008);
+  - malformed frames — broken JSON, a truncated line, invalid UTF-8,
+    an unknown op — each earn an error reply and the connection keeps
+    serving afterwards.
 """
 import json
 import re
@@ -84,6 +90,9 @@ def main():
         "# TYPE simetra_stage_duration_ns histogram",
         'stage="parse"',
         'stage="traversal"',
+        "# TYPE simetra_bytes_in_total counter",
+        "# TYPE simetra_bytes_out_total counter",
+        "# TYPE simetra_conns_live gauge",
     ]:
         assert needle in text, f"metrics page is missing {needle!r}"
 
@@ -94,8 +103,44 @@ def main():
     assert sum(stats["latency_us_buckets"]) >= 2, stats
     assert re.search(r"simetra_request_latency_us_count \d+", text), text
 
+    # Pipelined burst (ADR-008): many frames in one write, replies must
+    # come back in order. Distinct k values make reordering detectable.
+    burst_n = 32
+    burst = b"".join(
+        (json.dumps({"op": "knn", "vector": vec, "k": 1 + (i % 7)}) + "\n").encode()
+        for i in range(burst_n)
+    )
+    f.write(burst)
+    f.flush()
+    for i in range(burst_n):
+        line = f.readline()
+        if not line:
+            sys.exit(f"connection closed mid-burst at reply {i}")
+        reply = json.loads(line)
+        assert reply.get("status") == "ok", (i, reply)
+        assert len(reply["hits"]) == 1 + (i % 7), (i, reply)
+
+    # Malformed frames each earn an error line on the SAME connection,
+    # which must keep serving (the legacy server dropped it on bad UTF-8).
+    for frame, code in [
+        (b"{not json}\n", "bad_request"),
+        (b'{"op":"knn","vector":[1,2\n', "bad_request"),
+        (b'{"op":"ping","x":"\xff"}\n', "bad_request"),
+        (b'{"op":"explode"}\n', "unknown_op"),
+    ]:
+        f.write(frame)
+        f.flush()
+        line = f.readline()
+        if not line:
+            sys.exit(f"connection closed on malformed frame {frame!r}")
+        reply = json.loads(line)
+        assert reply.get("status") == "error", (frame, reply)
+        assert reply.get("code") == code, (frame, reply)
+    assert rpc({"op": "ping"})["status"] == "pong"
+
     print("serve smoke test OK "
-          f"({len(trace)} trace events, {len(text.splitlines())} metric lines)")
+          f"({len(trace)} trace events, {len(text.splitlines())} metric lines, "
+          f"{burst_n} pipelined replies)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,159 @@
+//! Wire-path throughput (ADR-008): the streaming pull-parser and
+//! tree-free serializer vs the legacy `Json`-tree codec, plus pipelined
+//! end-to-end QPS through the worker-pool front door vs the legacy
+//! thread-per-connection server.
+//!
+//!     cargo bench --bench wire_path
+//!     SIMETRA_BENCH_QUICK=1 cargo bench --bench wire_path   # small
+//!
+//! Emits `BENCH_wire.json`. Parse/serialize rows are ns per request
+//! line; end-to-end rows are ns per request at a given pipelining depth
+//! (`inflight` lines written before the first reply is read), so `mops`
+//! is millions of requests per second.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use simetra::coordinator::protocol::{
+    parse_wire_streaming, write_response, Hit, Request, Response, WireScratch,
+};
+use simetra::coordinator::server::{serve, serve_legacy};
+use simetra::coordinator::{Coordinator, CoordinatorConfig};
+use simetra::data::uniform_sphere;
+use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig, Measurement};
+use simetra::util::Json;
+
+fn push_row(
+    rows: &mut Vec<Json>,
+    m: &Measurement,
+    stage: &str,
+    path: &str,
+    inflight: Option<usize>,
+) {
+    let mut row = match m.to_json() {
+        Json::Obj(fields) => fields,
+        _ => unreachable!("to_json returns an object"),
+    };
+    row.push(("stage".into(), Json::Str(stage.into())));
+    row.push(("path".into(), Json::Str(path.into())));
+    if let Some(w) = inflight {
+        row.push(("inflight".into(), Json::Num(w as f64)));
+    }
+    rows.push(Json::Obj(row));
+}
+
+/// Request-line parse: streaming pull-parser into connection scratch vs
+/// the legacy parse through a `Json` tree.
+fn parse_section(cfg: &BenchConfig, rows: &mut Vec<Json>) {
+    println!("== parse: streaming pull-parser vs legacy tree ==");
+    let qv = uniform_sphere(1, 64, 0x81f)[0].as_slice().to_vec();
+    let knn = Request::Knn { vector: qv.clone(), k: 10 }.to_json().to_string();
+    let comps: Vec<String> = qv.iter().map(|v| format!("{v}")).collect();
+    let search = format!(
+        r#"{{"op":"search","v":1,"vector":[{}],"mode":"knn","k":10,"allow":[7],"trace":true}}"#,
+        comps.join(",")
+    );
+    let mut scratch = WireScratch::new();
+    for (label, line) in [("knn d64", &knn), ("search d64 optioned", &search)] {
+        let m = bench(cfg, &format!("parse_streaming {label}"), 1, || {
+            black_box(parse_wire_streaming(line.as_bytes(), &mut scratch).unwrap())
+        });
+        report(&m);
+        push_row(rows, &m, "parse", "streaming", None);
+
+        let m2 = bench(cfg, &format!("parse_legacy {label}"), 1, || {
+            black_box(Request::parse(line).unwrap())
+        });
+        report(&m2);
+        push_row(rows, &m2, "parse", "legacy", None);
+        println!("    -> streaming parse is {:.2}x vs tree\n", m2.mean_ns / m.mean_ns);
+    }
+}
+
+/// Response serialization: tree-free writer into a reused buffer vs
+/// building a `Json` tree and rendering it to a fresh `String`.
+fn serialize_section(cfg: &BenchConfig, rows: &mut Vec<Json>) {
+    println!("== serialize: tree-free writer vs legacy tree ==");
+    let hits: Vec<Hit> =
+        (0..10).map(|i| Hit { id: i as u64 * 31, score: 1.0 - i as f64 * 0.05 }).collect();
+    let resp = Response::Ok { hits, sim_evals: 4321 };
+    let mut out = String::new();
+    let m = bench(cfg, "serialize_streaming k10", 1, || {
+        out.clear();
+        write_response(&resp, &mut out);
+        black_box(out.len())
+    });
+    report(&m);
+    push_row(rows, &m, "serialize", "streaming", None);
+
+    let m2 = bench(cfg, "serialize_legacy k10", 1, || {
+        black_box(resp.to_json().to_string().len())
+    });
+    report(&m2);
+    push_row(rows, &m2, "serialize", "legacy", None);
+    println!("    -> streaming serialize is {:.2}x vs tree\n", m2.mean_ns / m.mean_ns);
+}
+
+/// End-to-end over TCP: a pipelined client writes `w` kNN request lines,
+/// then reads `w` reply lines, against the worker-pool server and the
+/// legacy thread-per-connection server.
+fn e2e_section(cfg: &BenchConfig, rows: &mut Vec<Json>) {
+    println!("== end-to-end: pipelined QPS, pool vs thread-per-connection ==");
+    let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
+    let n: usize = if quick { 2_000 } else { 10_000 };
+    let d = 32usize;
+    let inflights: &[usize] = if quick { &[1, 8] } else { &[1, 8, 64] };
+
+    let pts = uniform_sphere(n, d, 0x83e);
+    let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+    let mut pool = serve(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut legacy = serve_legacy(coord, "127.0.0.1:0").unwrap();
+
+    // 64 distinct pre-rendered request lines, cycled into bursts.
+    let lines: Vec<String> = (0..64usize)
+        .map(|i| {
+            let vector = pts[(i * 131) % n].as_slice().to_vec();
+            let mut line = Request::Knn { vector, k: 10 }.to_json().to_string();
+            line.push('\n');
+            line
+        })
+        .collect();
+
+    for &w in inflights {
+        let burst: String = lines.iter().cycle().take(w).cloned().collect();
+        for (path, addr) in [("pool", pool.addr()), ("legacy", legacy.addr())] {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut reply = String::new();
+            let m = bench(cfg, &format!("e2e_{path} w{w}"), w as u64, || {
+                writer.write_all(burst.as_bytes()).unwrap();
+                let mut bytes = 0usize;
+                for _ in 0..w {
+                    reply.clear();
+                    reader.read_line(&mut reply).unwrap();
+                    bytes += reply.len();
+                }
+                black_box(bytes)
+            });
+            report(&m);
+            println!("    -> {:.0} req/s", 1e9 / m.mean_ns);
+            push_row(rows, &m, "e2e", path, Some(w));
+        }
+        println!();
+    }
+    pool.stop();
+    legacy.stop();
+}
+
+fn main() {
+    let cfg = BenchConfig::from_env();
+    let mut rows: Vec<Json> = Vec::new();
+    parse_section(&cfg, &mut rows);
+    serialize_section(&cfg, &mut rows);
+    e2e_section(&cfg, &mut rows);
+    let path = std::path::Path::new("BENCH_wire.json");
+    write_bench_json(path, "wire_path", rows).expect("write BENCH_wire.json");
+    println!("wrote {}", path.display());
+}

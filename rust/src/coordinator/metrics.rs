@@ -30,6 +30,15 @@ pub struct Metrics {
     /// scratch-arena hit rate (steady state: every query but each worker's
     /// first).
     pub ctx_reuses: AtomicU64,
+    /// Wire bytes read off client sockets (request lines, ADR-008).
+    pub bytes_in: AtomicU64,
+    /// Wire bytes flushed back to client sockets (response lines).
+    pub bytes_out: AtomicU64,
+    /// Connections currently open against the worker pool (gauge).
+    pub conns_live: AtomicU64,
+    /// Connections parked in the pool's run queue waiting for a worker
+    /// turn (gauge; live - queued connections are being served right now).
+    pub conns_queued: AtomicU64,
     latency: LatencyHistogram,
 }
 
@@ -152,6 +161,10 @@ impl Metrics {
             deletes: ing.deletes,
             seals: ing.seals,
             compactions: ing.compactions,
+            bytes_in: self.bytes_in.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
+            conns_live: self.conns_live.load(Ordering::Relaxed),
+            conns_queued: self.conns_queued.load(Ordering::Relaxed),
         }
     }
 
@@ -167,7 +180,7 @@ impl Metrics {
 /// one snapshot path with the `stats` op.
 pub fn render_prometheus(s: &StatsSnapshot, out: &mut String) {
     use std::fmt::Write;
-    let counters: [(&str, u64); 15] = [
+    let counters: [(&str, u64); 17] = [
         ("simetra_queries_total", s.queries),
         ("simetra_batches_total", s.batches),
         ("simetra_errors_total", s.errors),
@@ -183,18 +196,22 @@ pub fn render_prometheus(s: &StatsSnapshot, out: &mut String) {
         ("simetra_blocked_scan_rows_total", s.blocked_scan_rows),
         ("simetra_quant_prefilter_rows_total", s.quant_prefilter_rows),
         ("simetra_quant_rerank_rows_total", s.quant_rerank_rows),
+        ("simetra_bytes_in_total", s.bytes_in),
+        ("simetra_bytes_out_total", s.bytes_out),
     ];
     for (name, v) in counters {
         let _ = writeln!(out, "# TYPE {name} counter");
         let _ = writeln!(out, "{name} {v}");
     }
-    let gauges: [(&str, u64); 6] = [
+    let gauges: [(&str, u64); 8] = [
         ("simetra_corpus_size", s.corpus_size),
         ("simetra_shards", s.shards),
         ("simetra_generations", s.generations),
         ("simetra_memtable_items", s.memtable_items),
         ("simetra_tombstones", s.tombstones),
         ("simetra_sealed_bytes", s.sealed_bytes),
+        ("simetra_conns_live", s.conns_live),
+        ("simetra_conns_queued", s.conns_queued),
     ];
     for (name, v) in gauges {
         let _ = writeln!(out, "# TYPE {name} gauge");

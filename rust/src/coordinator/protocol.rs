@@ -22,6 +22,8 @@ use crate::error::SimetraError;
 use crate::obs::{TraceEvent, TraceKind};
 use crate::query::{IdFilter, SearchMode, SearchRequest};
 use crate::storage::KernelKind;
+use crate::util::json::MAX_EXACT_JSON_INT;
+use crate::util::json_stream::{Event, PullParser, StrSpan};
 use crate::util::Json;
 
 /// A client request.
@@ -443,6 +445,10 @@ impl Response {
                 ("blocked_scan_rows", Json::Num(s.blocked_scan_rows as f64)),
                 ("quant_prefilter_rows", Json::Num(s.quant_prefilter_rows as f64)),
                 ("quant_rerank_rows", Json::Num(s.quant_rerank_rows as f64)),
+                ("bytes_in", Json::Num(s.bytes_in as f64)),
+                ("bytes_out", Json::Num(s.bytes_out as f64)),
+                ("conns_live", Json::Num(s.conns_live as f64)),
+                ("conns_queued", Json::Num(s.conns_queued as f64)),
             ]),
             Response::Metrics { text } => Json::obj(vec![
                 ("status", Json::Str("metrics".into())),
@@ -492,6 +498,11 @@ impl Response {
             }),
             "stats" => {
                 let g = |key: &str| -> Result<u64> { Ok(v.req(key)?.as_f64()? as u64) };
+                // Wire-path fields are absent in pre-ADR-008 server
+                // output: default to zero instead of failing the parse.
+                let opt = |key: &str| -> u64 {
+                    v.get(key).and_then(|x| x.as_f64().ok()).unwrap_or(0.0) as u64
+                };
                 Response::Stats(StatsSnapshot {
                     kernel: v.req("kernel")?.as_str()?.to_string(),
                     queries: g("queries")?,
@@ -526,6 +537,10 @@ impl Response {
                     blocked_scan_rows: g("blocked_scan_rows")?,
                     quant_prefilter_rows: g("quant_prefilter_rows")?,
                     quant_rerank_rows: g("quant_rerank_rows")?,
+                    bytes_in: opt("bytes_in"),
+                    bytes_out: opt("bytes_out"),
+                    conns_live: opt("conns_live"),
+                    conns_queued: opt("conns_queued"),
                 })
             }
             "metrics" => Response::Metrics { text: v.req("text")?.as_str()?.to_string() },
@@ -541,6 +556,869 @@ impl Response {
 
     pub fn parse(line: &str) -> Result<Response> {
         Self::from_json(&Json::parse(line)?)
+    }
+}
+
+// --- streaming wire path (ADR-008) --------------------------------------
+//
+// The tree-based `Request::parse` / `Response::to_json` above allocate a
+// `Vec`/`String` per field per request. The functions below replace them
+// on the serving hot path: `parse_wire_streaming` pull-parses the line
+// straight into connection scratch, `write_response` serializes into a
+// reusable output buffer. Both are conformance-locked to the tree path —
+// identical accept/reject decisions and byte-identical output — and the
+// tree path stays as the differential oracle (tests/integration_wire.rs).
+
+/// Per-connection parse scratch: the reusable landing buffers the
+/// streaming parser fills instead of allocating per request. Query
+/// vectors land in `vector`, filter id lists in the pooled `filter_ids`
+/// `Arc`, escaped strings decode into `unescape` — after the first few
+/// requests warm the capacities, parsing allocates nothing.
+#[derive(Debug)]
+pub struct WireScratch {
+    vector: Vec<f32>,
+    filter_ids: Arc<Vec<u64>>,
+    unescape: String,
+}
+
+impl Default for WireScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WireScratch {
+    pub fn new() -> WireScratch {
+        WireScratch {
+            vector: Vec::new(),
+            filter_ids: Arc::new(Vec::new()),
+            unescape: String::new(),
+        }
+    }
+
+    /// The query vector of the most recently parsed vector-carrying op.
+    pub fn vector(&self) -> &[f32] {
+        &self.vector
+    }
+}
+
+/// A parsed request in borrowed form: the streaming twin of [`Request`].
+/// Vector-carrying ops leave the query vector in the [`WireScratch`] it
+/// was parsed into instead of owning a fresh `Vec<f32>` per request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireOp {
+    Knn { k: usize },
+    Range { tau: f64 },
+    Search { req: SearchRequest },
+    Explain { req: SearchRequest },
+    Insert,
+    Delete { id: u64 },
+    Flush,
+    Compact,
+    Stats,
+    Metrics,
+    Config,
+    Ping,
+}
+
+impl WireOp {
+    /// Rebuild the owning [`Request`] (tests and compatibility shims;
+    /// clones the scratch vector, so not for the hot path).
+    pub fn into_request(self, scratch: &WireScratch) -> Request {
+        match self {
+            WireOp::Knn { k } => Request::Knn { vector: scratch.vector.clone(), k },
+            WireOp::Range { tau } => Request::Range { vector: scratch.vector.clone(), tau },
+            WireOp::Search { req } => Request::Search { vector: scratch.vector.clone(), req },
+            WireOp::Explain { req } => Request::Explain { vector: scratch.vector.clone(), req },
+            WireOp::Insert => Request::Insert { vector: scratch.vector.clone() },
+            WireOp::Delete { id } => Request::Delete { id },
+            WireOp::Flush => Request::Flush,
+            WireOp::Compact => Request::Compact,
+            WireOp::Stats => Request::Stats,
+            WireOp::Metrics => Request::Metrics,
+            WireOp::Config => Request::Config,
+            WireOp::Ping => Request::Ping,
+        }
+    }
+
+    /// Decompose an owned [`Request`], parking its vector in `scratch`
+    /// (the legacy-fallback path of [`parse_wire`]).
+    pub fn from_request(req: Request, scratch: &mut WireScratch) -> WireOp {
+        let mut park = |v: Vec<f32>| {
+            scratch.vector.clear();
+            scratch.vector.extend_from_slice(&v);
+        };
+        match req {
+            Request::Knn { vector, k } => {
+                park(vector);
+                WireOp::Knn { k }
+            }
+            Request::Range { vector, tau } => {
+                park(vector);
+                WireOp::Range { tau }
+            }
+            Request::Search { vector, req } => {
+                park(vector);
+                WireOp::Search { req }
+            }
+            Request::Explain { vector, req } => {
+                park(vector);
+                WireOp::Explain { req }
+            }
+            Request::Insert { vector } => {
+                park(vector);
+                WireOp::Insert
+            }
+            Request::Delete { id } => WireOp::Delete { id },
+            Request::Flush => WireOp::Flush,
+            Request::Compact => WireOp::Compact,
+            Request::Stats => WireOp::Stats,
+            Request::Metrics => WireOp::Metrics,
+            Request::Config => WireOp::Config,
+            Request::Ping => WireOp::Ping,
+        }
+    }
+}
+
+fn bad_req(e: impl std::fmt::Display) -> SimetraError {
+    SimetraError::BadRequest(e.to_string())
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpKind {
+    Knn,
+    Range,
+    Search,
+    Explain,
+    Insert,
+    Delete,
+    Flush,
+    Compact,
+    Stats,
+    Metrics,
+    Config,
+    Ping,
+}
+
+fn op_kind(name: &str) -> Option<OpKind> {
+    Some(match name {
+        "knn" => OpKind::Knn,
+        "range" => OpKind::Range,
+        "search" => OpKind::Search,
+        "explain" => OpKind::Explain,
+        "insert" => OpKind::Insert,
+        "delete" => OpKind::Delete,
+        "flush" => OpKind::Flush,
+        "compact" => OpKind::Compact,
+        "stats" => OpKind::Stats,
+        "metrics" => OpKind::Metrics,
+        "config" => OpKind::Config,
+        "ping" => OpKind::Ping,
+        _ => return None,
+    })
+}
+
+/// A numeric field captured during the field walk. Deferred validation
+/// preserves a tree-parser quirk: fields are only *type*-checked when the
+/// op actually consumes them (`tau` on a `mode:"knn"` search may hold any
+/// JSON value), so capture records what was there and judgement waits.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+enum NumField {
+    #[default]
+    Missing,
+    NotNum,
+    Num(f64),
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+enum StrField<'a> {
+    #[default]
+    Missing,
+    NotStr,
+    Str(StrSpan<'a>),
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+enum BoolField {
+    #[default]
+    Missing,
+    NotBool,
+    Bool(bool),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FieldId {
+    Vector,
+    K,
+    Tau,
+    Ver,
+    Mode,
+    Bound,
+    Kernel,
+    Allow,
+    Deny,
+    Budget,
+    Trace,
+    Id,
+}
+
+/// The fields each op consumes; everything else on the line is
+/// syntax-validated but otherwise ignored, exactly like the tree parser.
+fn consumed_fields(op: OpKind) -> &'static [(&'static str, FieldId)] {
+    use FieldId::*;
+    match op {
+        OpKind::Knn => &[("vector", Vector), ("k", K)],
+        OpKind::Range => &[("vector", Vector), ("tau", Tau)],
+        OpKind::Search | OpKind::Explain => &[
+            ("vector", Vector),
+            ("v", Ver),
+            ("mode", Mode),
+            ("k", K),
+            ("tau", Tau),
+            ("bound", Bound),
+            ("kernel", Kernel),
+            ("allow", Allow),
+            ("deny", Deny),
+            ("budget", Budget),
+            ("trace", Trace),
+        ],
+        OpKind::Insert => &[("vector", Vector)],
+        OpKind::Delete => &[("id", Id)],
+        OpKind::Flush
+        | OpKind::Compact
+        | OpKind::Stats
+        | OpKind::Metrics
+        | OpKind::Config
+        | OpKind::Ping => &[],
+    }
+}
+
+#[derive(Default)]
+struct Fields<'a> {
+    vector: bool,
+    k: NumField,
+    tau: NumField,
+    ver: NumField,
+    budget: NumField,
+    id: NumField,
+    mode: StrField<'a>,
+    bound: StrField<'a>,
+    kernel: StrField<'a>,
+    trace: BoolField,
+    allow_seen: bool,
+    deny_seen: bool,
+}
+
+fn expect_end(p: &mut PullParser) -> Result<(), SimetraError> {
+    match p.next().map_err(bad_req)? {
+        Event::End => Ok(()),
+        _ => Err(SimetraError::BadRequest("trailing characters".into())),
+    }
+}
+
+/// Pass 1: validate the whole line (syntax, escapes, UTF-8) and resolve
+/// the op. The tree parser validates the full document before looking at
+/// any field, so the streaming path must too or error *codes* diverge —
+/// `unknown_op` is only ever reported for a syntactically valid line.
+fn scan_op(line: &[u8], unescape: &mut String) -> Result<OpKind, SimetraError> {
+    let mut p = PullParser::new(line);
+    match p.next().map_err(bad_req)? {
+        Event::ObjBegin => {}
+        first => {
+            // Not an object: finish validating (syntax errors win over
+            // the missing-op error, like the oracle), then reject.
+            p.finish_value(first).map_err(bad_req)?;
+            expect_end(&mut p)?;
+            return Err(SimetraError::BadRequest("missing field 'op'".into()));
+        }
+    }
+    let mut op: Option<StrSpan> = None;
+    let mut op_not_string = false;
+    let mut op_seen = false;
+    loop {
+        match p.next().map_err(bad_req)? {
+            Event::ObjEnd => break,
+            Event::Key(key) => {
+                // First duplicate wins, like `Json::get`.
+                let is_op = !op_seen && key.eq_decoded("op", unescape);
+                let first = p.next().map_err(bad_req)?;
+                if is_op {
+                    op_seen = true;
+                    match first {
+                        Event::Str(s) => op = Some(s),
+                        other => {
+                            op_not_string = true;
+                            p.finish_value(other).map_err(bad_req)?;
+                        }
+                    }
+                } else {
+                    p.finish_value(first).map_err(bad_req)?;
+                }
+            }
+            _ => unreachable!("object fields always start with a Key event"),
+        }
+    }
+    expect_end(&mut p)?;
+    if op_not_string {
+        return Err(SimetraError::BadRequest("expected string op".into()));
+    }
+    let Some(span) = op else {
+        return Err(SimetraError::BadRequest("missing field 'op'".into()));
+    };
+    let name = span.decode(unescape).map_err(bad_req)?;
+    op_kind(name).ok_or_else(|| SimetraError::UnknownOp(name.to_string()))
+}
+
+/// `Json::as_usize` for a streamed number.
+fn num_to_usize(v: f64) -> Result<usize, SimetraError> {
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(SimetraError::BadRequest(format!("expected non-negative integer, got {v}")));
+    }
+    Ok(v as usize)
+}
+
+/// `Json::as_u64` for a streamed number, including the 2^53 id guard.
+fn num_to_u64(v: f64) -> Result<u64, SimetraError> {
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(SimetraError::BadRequest(format!("expected non-negative integer, got {v}")));
+    }
+    if v >= MAX_EXACT_JSON_INT as f64 {
+        return Err(SimetraError::BadRequest(format!(
+            "integer {v} is not exactly representable in JSON (>= 2^53)"
+        )));
+    }
+    Ok(v as u64)
+}
+
+fn req_num(f: NumField, name: &str) -> Result<f64, SimetraError> {
+    match f {
+        NumField::Num(n) => Ok(n),
+        NumField::NotNum => Err(SimetraError::BadRequest(format!("expected number '{name}'"))),
+        NumField::Missing => Err(SimetraError::BadRequest(format!("missing field '{name}'"))),
+    }
+}
+
+impl NumField {
+    /// Capture the next value as this field; the first occurrence wins,
+    /// later duplicates are skipped (like `Json::get` on a tree).
+    fn capture(self, p: &mut PullParser) -> Result<NumField, SimetraError> {
+        let first = p.next().map_err(bad_req)?;
+        if self != NumField::Missing {
+            p.finish_value(first).map_err(bad_req)?;
+            return Ok(self);
+        }
+        Ok(match first {
+            Event::Num(n) => NumField::Num(n),
+            other => {
+                p.finish_value(other).map_err(bad_req)?;
+                NumField::NotNum
+            }
+        })
+    }
+}
+
+impl<'a> StrField<'a> {
+    fn capture(self, p: &mut PullParser<'a>) -> Result<StrField<'a>, SimetraError> {
+        let first = p.next().map_err(bad_req)?;
+        if !matches!(self, StrField::Missing) {
+            p.finish_value(first).map_err(bad_req)?;
+            return Ok(self);
+        }
+        Ok(match first {
+            Event::Str(s) => StrField::Str(s),
+            other => {
+                p.finish_value(other).map_err(bad_req)?;
+                StrField::NotStr
+            }
+        })
+    }
+}
+
+impl BoolField {
+    fn capture(self, p: &mut PullParser) -> Result<BoolField, SimetraError> {
+        let first = p.next().map_err(bad_req)?;
+        if !matches!(self, BoolField::Missing) {
+            p.finish_value(first).map_err(bad_req)?;
+            return Ok(self);
+        }
+        Ok(match first {
+            Event::Bool(b) => BoolField::Bool(b),
+            other => {
+                p.finish_value(other).map_err(bad_req)?;
+                BoolField::NotBool
+            }
+        })
+    }
+}
+
+/// Stream a `[f32]` query vector into the scratch buffer.
+fn parse_vector(p: &mut PullParser, out: &mut Vec<f32>) -> Result<(), SimetraError> {
+    out.clear();
+    match p.next().map_err(bad_req)? {
+        Event::ArrBegin => {}
+        other => {
+            p.finish_value(other).map_err(bad_req)?;
+            return Err(SimetraError::BadRequest("expected array, got vector".into()));
+        }
+    }
+    loop {
+        match p.next().map_err(bad_req)? {
+            Event::ArrEnd => return Ok(()),
+            Event::Num(n) => out.push(n as f32),
+            _ => return Err(SimetraError::BadRequest("expected number in vector".into())),
+        }
+    }
+}
+
+/// Stream a filter id list into the pooled buffer, sorted + deduped with
+/// the same per-element checks as `Json::as_u64`.
+fn parse_ids(p: &mut PullParser, out: &mut Vec<u64>) -> Result<(), SimetraError> {
+    out.clear();
+    match p.next().map_err(bad_req)? {
+        Event::ArrBegin => {}
+        other => {
+            p.finish_value(other).map_err(bad_req)?;
+            return Err(SimetraError::BadRequest("expected id array".into()));
+        }
+    }
+    loop {
+        match p.next().map_err(bad_req)? {
+            Event::ArrEnd => break,
+            Event::Num(n) => out.push(num_to_u64(n)?),
+            _ => return Err(SimetraError::BadRequest("expected id number".into())),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(())
+}
+
+/// Pass 2: re-walk the (already validated) line capturing the op's
+/// consumed fields; everything else is skipped event-by-event.
+fn collect_fields<'a>(
+    line: &'a [u8],
+    table: &[(&'static str, FieldId)],
+    vector: &mut Vec<f32>,
+    ids: &mut Vec<u64>,
+    unescape: &mut String,
+) -> Result<Fields<'a>, SimetraError> {
+    let mut f = Fields::default();
+    let mut p = PullParser::new(line);
+    match p.next().map_err(bad_req)? {
+        Event::ObjBegin => {}
+        _ => return Err(SimetraError::BadRequest("expected object".into())),
+    }
+    loop {
+        match p.next().map_err(bad_req)? {
+            Event::ObjEnd => break,
+            Event::Key(key) => {
+                let fid = table
+                    .iter()
+                    .find(|(name, _)| key.eq_decoded(name, unescape))
+                    .map(|&(_, id)| id);
+                match fid {
+                    None => p.skip_value().map_err(bad_req)?,
+                    Some(FieldId::Vector) => {
+                        if f.vector {
+                            p.skip_value().map_err(bad_req)?;
+                        } else {
+                            parse_vector(&mut p, vector)?;
+                            f.vector = true;
+                        }
+                    }
+                    Some(FieldId::K) => f.k = f.k.capture(&mut p)?,
+                    Some(FieldId::Tau) => f.tau = f.tau.capture(&mut p)?,
+                    Some(FieldId::Ver) => f.ver = f.ver.capture(&mut p)?,
+                    Some(FieldId::Budget) => f.budget = f.budget.capture(&mut p)?,
+                    Some(FieldId::Id) => f.id = f.id.capture(&mut p)?,
+                    Some(FieldId::Mode) => f.mode = f.mode.capture(&mut p)?,
+                    Some(FieldId::Bound) => f.bound = f.bound.capture(&mut p)?,
+                    Some(FieldId::Kernel) => f.kernel = f.kernel.capture(&mut p)?,
+                    Some(FieldId::Trace) => f.trace = f.trace.capture(&mut p)?,
+                    Some(FieldId::Allow) => {
+                        if f.allow_seen {
+                            p.skip_value().map_err(bad_req)?;
+                        } else if f.deny_seen {
+                            return Err(SimetraError::BadRequest(
+                                "allow and deny are mutually exclusive".into(),
+                            ));
+                        } else {
+                            parse_ids(&mut p, ids)?;
+                            f.allow_seen = true;
+                        }
+                    }
+                    Some(FieldId::Deny) => {
+                        if f.deny_seen {
+                            p.skip_value().map_err(bad_req)?;
+                        } else if f.allow_seen {
+                            return Err(SimetraError::BadRequest(
+                                "allow and deny are mutually exclusive".into(),
+                            ));
+                        } else {
+                            parse_ids(&mut p, ids)?;
+                            f.deny_seen = true;
+                        }
+                    }
+                }
+            }
+            _ => unreachable!("object fields always start with a Key event"),
+        }
+    }
+    expect_end(&mut p)?;
+    Ok(f)
+}
+
+/// Assemble a [`SearchRequest`] from captured fields, mirroring
+/// `parse_search_plan` (version gate, conditional `k`/`tau` consumption,
+/// finite-`tau` check, bound/kernel token parse, filter exclusivity,
+/// forced tracing on `explain`).
+fn assemble_plan(
+    op: OpKind,
+    f: &Fields,
+    filter_ids: &Arc<Vec<u64>>,
+    unescape: &mut String,
+) -> Result<SearchRequest, SimetraError> {
+    match f.ver {
+        NumField::Missing => {}
+        NumField::NotNum => return Err(SimetraError::BadRequest("expected number 'v'".into())),
+        NumField::Num(n) => {
+            let ver = num_to_usize(n)?;
+            if ver != SEARCH_VERSION {
+                return Err(SimetraError::BadRequest(format!("unsupported search version {ver}")));
+            }
+        }
+    }
+    let finite_tau = |tau: f64| -> Result<f64, SimetraError> {
+        if tau.is_finite() {
+            Ok(tau)
+        } else {
+            Err(SimetraError::BadRequest(format!("tau must be finite, got {tau}")))
+        }
+    };
+    let mode = {
+        let name = match &f.mode {
+            StrField::Str(s) => s.decode(unescape).map_err(bad_req)?,
+            StrField::NotStr => return Err(SimetraError::BadRequest("expected string mode".into())),
+            StrField::Missing => {
+                return Err(SimetraError::BadRequest("missing field 'mode'".into()));
+            }
+        };
+        match name {
+            "knn" => SearchMode::Knn { k: num_to_usize(req_num(f.k, "k")?)? },
+            "range" => SearchMode::Range { tau: finite_tau(req_num(f.tau, "tau")?)? },
+            "knn_within" => SearchMode::KnnWithin {
+                k: num_to_usize(req_num(f.k, "k")?)?,
+                tau: finite_tau(req_num(f.tau, "tau")?)?,
+            },
+            other => return Err(SimetraError::BadRequest(format!("unknown search mode '{other}'"))),
+        }
+    };
+    let bound = match &f.bound {
+        StrField::Missing => None,
+        StrField::NotStr => return Err(SimetraError::BadRequest("expected string bound".into())),
+        StrField::Str(s) => {
+            let name = s.decode(unescape).map_err(bad_req)?;
+            Some(
+                BoundKind::parse(name)
+                    .ok_or_else(|| SimetraError::BadRequest(format!("unknown bound '{name}'")))?,
+            )
+        }
+    };
+    let kernel = match &f.kernel {
+        StrField::Missing => None,
+        StrField::NotStr => return Err(SimetraError::BadRequest("expected string kernel".into())),
+        StrField::Str(s) => {
+            let name = s.decode(unescape).map_err(bad_req)?;
+            Some(
+                KernelKind::parse(name)
+                    .ok_or_else(|| SimetraError::BadRequest(format!("unknown kernel '{name}'")))?,
+            )
+        }
+    };
+    let filter = match (f.allow_seen, f.deny_seen) {
+        (true, true) => unreachable!("exclusivity is rejected during the field walk"),
+        (true, false) => IdFilter::Allow(filter_ids.clone()),
+        (false, true) => IdFilter::Deny(filter_ids.clone()),
+        (false, false) => IdFilter::None,
+    };
+    let budget = match f.budget {
+        NumField::Missing => None,
+        NumField::NotNum => return Err(SimetraError::BadRequest("expected number 'budget'".into())),
+        NumField::Num(n) => Some(num_to_u64(n)?),
+    };
+    let trace = match f.trace {
+        BoolField::Missing => false,
+        BoolField::NotBool => return Err(SimetraError::BadRequest("expected bool 'trace'".into())),
+        BoolField::Bool(b) => b,
+    };
+    let trace = trace || op == OpKind::Explain;
+    Ok(SearchRequest { mode, bound, kernel, filter, budget, trace })
+}
+
+/// Mutable access to the pooled filter-id buffer: reuse the `Arc`'s
+/// allocation when this connection holds the only reference (steady
+/// state — the previous request's plan has been executed and dropped),
+/// fall back to a fresh one while a previous filter is still alive.
+fn lease_ids(slot: &mut Arc<Vec<u64>>) -> &mut Vec<u64> {
+    if Arc::get_mut(slot).is_none() {
+        *slot = Arc::new(Vec::new());
+    }
+    Arc::get_mut(slot).expect("freshly created Arc has one owner")
+}
+
+/// Parse one request line with the streaming pull-parser — no `Json`
+/// tree, no per-request allocation: the query vector and filter id list
+/// land in `scratch`, escaped strings decode into its scratch buffer.
+///
+/// Accept/reject decisions and error *codes* match [`Request::parse`]
+/// exactly (swept by the differential oracle in
+/// `tests/integration_wire.rs`); error *messages* may differ —
+/// [`parse_wire`] re-runs the tree parser on the error path so served
+/// diagnostics stay byte-identical to the legacy server's.
+pub fn parse_wire_streaming(
+    line: &[u8],
+    scratch: &mut WireScratch,
+) -> Result<WireOp, SimetraError> {
+    let WireScratch { vector, filter_ids, unescape } = scratch;
+    let op = scan_op(line, unescape)?;
+    let table = consumed_fields(op);
+    if table.is_empty() {
+        return Ok(match op {
+            OpKind::Flush => WireOp::Flush,
+            OpKind::Compact => WireOp::Compact,
+            OpKind::Stats => WireOp::Stats,
+            OpKind::Metrics => WireOp::Metrics,
+            OpKind::Config => WireOp::Config,
+            OpKind::Ping => WireOp::Ping,
+            _ => unreachable!("field-carrying op with an empty field table"),
+        });
+    }
+    let ids = lease_ids(filter_ids);
+    let f = collect_fields(line, table, vector, ids, unescape)?;
+    let missing_vector = || SimetraError::BadRequest("missing field 'vector'".into());
+    match op {
+        OpKind::Knn => {
+            if !f.vector {
+                return Err(missing_vector());
+            }
+            Ok(WireOp::Knn { k: num_to_usize(req_num(f.k, "k")?)? })
+        }
+        OpKind::Range => {
+            if !f.vector {
+                return Err(missing_vector());
+            }
+            // The legacy `range` op does NOT finiteness-check tau — only
+            // the versioned `search` envelope does. Conformance > taste.
+            Ok(WireOp::Range { tau: req_num(f.tau, "tau")? })
+        }
+        OpKind::Insert => {
+            if !f.vector {
+                return Err(missing_vector());
+            }
+            Ok(WireOp::Insert)
+        }
+        OpKind::Delete => Ok(WireOp::Delete { id: num_to_u64(req_num(f.id, "id")?)? }),
+        OpKind::Search | OpKind::Explain => {
+            if !f.vector {
+                return Err(missing_vector());
+            }
+            let req = assemble_plan(op, &f, filter_ids, unescape)?;
+            Ok(if op == OpKind::Search {
+                WireOp::Search { req }
+            } else {
+                WireOp::Explain { req }
+            })
+        }
+        _ => unreachable!("no-field ops returned above"),
+    }
+}
+
+/// Parse a request line for serving: the streaming parser first, the
+/// tree parser as the diagnostics fallback. The happy path allocates
+/// nothing; when the streaming parse rejects, the line is re-parsed
+/// through the legacy oracle so served error messages stay byte-identical
+/// (and any accept/reject divergence — which the differential tests would
+/// catch first — resolves to the oracle's verdict).
+pub fn parse_wire(line: &[u8], scratch: &mut WireScratch) -> Result<WireOp, SimetraError> {
+    match parse_wire_streaming(line, scratch) {
+        Ok(op) => Ok(op),
+        Err(stream_err) => match std::str::from_utf8(line) {
+            Ok(text) => Request::parse(text).map(|req| WireOp::from_request(req, scratch)),
+            // The tree parser never sees invalid UTF-8 (it takes `&str`);
+            // keep the streaming error.
+            Err(_) => Err(stream_err),
+        },
+    }
+}
+
+fn write_bool(out: &mut String, b: bool) {
+    out.push_str(if b { "true" } else { "false" });
+}
+
+fn write_hits(hits: &[Hit], out: &mut String) {
+    use crate::util::json::write_num;
+    out.push('[');
+    for (i, h) in hits.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str("{\"id\":");
+        write_num(out, h.id as f64);
+        out.push_str(",\"score\":");
+        write_num(out, h.score);
+        out.push('}');
+    }
+    out.push(']');
+}
+
+/// The shared body of the `search` / `explain` envelopes (everything
+/// after the status, before the optional trace).
+fn write_search_body(r: &SearchResult, out: &mut String) {
+    use crate::util::json::write_num;
+    out.push_str(",\"hits\":");
+    write_hits(&r.hits, out);
+    out.push_str(",\"truncated\":");
+    write_bool(out, r.truncated);
+    out.push_str(",\"sim_evals\":");
+    write_num(out, r.sim_evals as f64);
+    out.push_str(",\"nodes_visited\":");
+    write_num(out, r.nodes_visited as f64);
+    out.push_str(",\"pruned\":");
+    write_num(out, r.pruned as f64);
+}
+
+fn write_stats(s: &StatsSnapshot, out: &mut String) {
+    use crate::util::json::{write_escaped, write_num};
+    fn field(out: &mut String, key: &str, v: f64) {
+        out.push_str(",\"");
+        out.push_str(key);
+        out.push_str("\":");
+        crate::util::json::write_num(out, v);
+    }
+    out.push_str("{\"status\":\"stats\",\"kernel\":");
+    write_escaped(&s.kernel, out);
+    field(out, "queries", s.queries as f64);
+    field(out, "batches", s.batches as f64);
+    field(out, "errors", s.errors as f64);
+    field(out, "corpus_size", s.corpus_size as f64);
+    field(out, "shards", s.shards as f64);
+    field(out, "sim_evals", s.sim_evals as f64);
+    field(out, "engine_calls", s.engine_calls as f64);
+    field(out, "pruned", s.pruned as f64);
+    field(out, "nodes_visited", s.nodes_visited as f64);
+    field(out, "ctx_reuses", s.ctx_reuses as f64);
+    field(out, "pruned_fraction", s.pruned_fraction);
+    field(out, "latency_us_p50", s.latency_us_p50 as f64);
+    field(out, "latency_us_p99", s.latency_us_p99 as f64);
+    field(out, "latency_us_max", s.latency_us_max as f64);
+    field(out, "latency_us_sum", s.latency_us_sum as f64);
+    out.push_str(",\"latency_us_buckets\":[");
+    for (i, &c) in s.latency_us_buckets.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_num(out, c as f64);
+    }
+    out.push(']');
+    field(out, "generations", s.generations as f64);
+    field(out, "memtable_items", s.memtable_items as f64);
+    field(out, "tombstones", s.tombstones as f64);
+    field(out, "sealed_bytes", s.sealed_bytes as f64);
+    field(out, "inserts", s.inserts as f64);
+    field(out, "deletes", s.deletes as f64);
+    field(out, "seals", s.seals as f64);
+    field(out, "compactions", s.compactions as f64);
+    field(out, "blocked_scan_rows", s.blocked_scan_rows as f64);
+    field(out, "quant_prefilter_rows", s.quant_prefilter_rows as f64);
+    field(out, "quant_rerank_rows", s.quant_rerank_rows as f64);
+    field(out, "bytes_in", s.bytes_in as f64);
+    field(out, "bytes_out", s.bytes_out as f64);
+    field(out, "conns_live", s.conns_live as f64);
+    field(out, "conns_queued", s.conns_queued as f64);
+    out.push('}');
+}
+
+/// Serialize a [`Response`] into `out` without building a `Json` tree —
+/// byte-identical to `resp.to_json().to_string()` by construction (both
+/// writers share `util::json::{write_num, write_escaped}`; the
+/// differential tests sweep the corpus). The buffer is appended to, not
+/// cleared: the server writes one response per drained request and
+/// flushes the batch in one syscall.
+pub fn write_response(resp: &Response, out: &mut String) {
+    use crate::util::json::{write_escaped, write_num};
+    match resp {
+        Response::Ok { hits, sim_evals } => {
+            out.push_str("{\"status\":\"ok\",\"hits\":");
+            write_hits(hits, out);
+            out.push_str(",\"sim_evals\":");
+            write_num(out, *sim_evals as f64);
+            out.push('}');
+        }
+        Response::Search(r) => {
+            out.push_str("{\"status\":\"search\"");
+            write_search_body(r, out);
+            out.push('}');
+        }
+        Response::Explain(r) => {
+            out.push_str("{\"status\":\"explain\"");
+            write_search_body(r, out);
+            out.push_str(",\"trace\":[");
+            for (i, e) in r.trace.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str("{\"kind\":");
+                write_escaped(e.kind.token(), out);
+                out.push_str(",\"id\":");
+                write_num(out, e.id as f64);
+                out.push_str(",\"bound\":");
+                write_num(out, e.bound);
+                out.push_str(",\"sim\":");
+                write_num(out, e.sim);
+                out.push('}');
+            }
+            out.push_str("]}");
+        }
+        Response::Inserted { id } => {
+            out.push_str("{\"status\":\"inserted\",\"id\":");
+            write_num(out, *id as f64);
+            out.push('}');
+        }
+        Response::Deleted { existed } => {
+            out.push_str("{\"status\":\"deleted\",\"existed\":");
+            write_bool(out, *existed);
+            out.push('}');
+        }
+        Response::Done => out.push_str("{\"status\":\"done\"}"),
+        Response::Config(c) => {
+            out.push_str("{\"status\":\"config\",\"kernel\":");
+            write_escaped(&c.kernel, out);
+            out.push_str(",\"index\":");
+            write_escaped(&c.index, out);
+            out.push_str(",\"bound\":");
+            write_escaped(&c.bound, out);
+            out.push_str(",\"mode\":");
+            write_escaped(&c.mode, out);
+            out.push_str(",\"shards\":");
+            write_num(out, c.shards as f64);
+            out.push_str(",\"mutable\":");
+            write_bool(out, c.mutable);
+            out.push('}');
+        }
+        Response::Stats(s) => write_stats(s, out),
+        Response::Metrics { text } => {
+            out.push_str("{\"status\":\"metrics\",\"text\":");
+            write_escaped(text, out);
+            out.push('}');
+        }
+        Response::Pong => out.push_str("{\"status\":\"pong\"}"),
+        Response::Error { code, message } => {
+            out.push_str("{\"status\":\"error\",\"code\":");
+            write_escaped(code, out);
+            out.push_str(",\"message\":");
+            write_escaped(message, out);
+            out.push('}');
+        }
     }
 }
 
@@ -613,6 +1491,14 @@ pub struct StatsSnapshot {
     pub blocked_scan_rows: u64,
     pub quant_prefilter_rows: u64,
     pub quant_rerank_rows: u64,
+    /// Wire-path byte counters (ADR-008): request bytes read off sockets
+    /// and response bytes written back, totalled across all connections.
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Front-door pool gauges (ADR-008): connections currently open, and
+    /// open connections parked in the worker queue awaiting a drain turn.
+    pub conns_live: u64,
+    pub conns_queued: u64,
 }
 
 #[cfg(test)]
@@ -711,9 +1597,7 @@ mod tests {
                 "non-finite tau",
             ),
             (
-                format!(
-                    r#"{{"op": "search", {base}, "mode": "knn", "k": 3, "allow": [1], "deny": [2]}}"#
-                ),
+                format!(r#"{{"op":"search",{base},"mode":"knn","k":3,"allow":[1],"deny":[2]}}"#),
                 "allow+deny",
             ),
             (
@@ -844,5 +1728,285 @@ mod tests {
         assert!(Request::parse(r#"{"op": "delete"}"#).is_err());
         assert!(Request::parse(r#"{"op": "delete", "id": -3}"#).is_err());
         assert!(Request::parse(r#"{"op": "insert", "vector": [NaN]}"#).is_err());
+    }
+
+    /// Run one line through the streaming parser, rebuilt as an owning
+    /// [`Request`] for comparison against the tree oracle.
+    fn stream_parse(line: &str) -> Result<Request, SimetraError> {
+        let mut scratch = WireScratch::new();
+        parse_wire_streaming(line.as_bytes(), &mut scratch).map(|op| op.into_request(&scratch))
+    }
+
+    /// Streaming and tree parse must agree: equal requests on accept,
+    /// equal error *codes* on reject (messages may differ — `parse_wire`
+    /// re-runs the oracle for served diagnostics).
+    fn assert_parsers_agree(line: &str) {
+        let tree = Request::parse(line);
+        let stream = stream_parse(line);
+        match (&tree, &stream) {
+            (Ok(a), Ok(b)) => assert_eq!(a, b, "line: {line}"),
+            (Err(a), Err(b)) => assert_eq!(a.code(), b.code(), "line: {line}\n {a}\n {b}"),
+            _ => panic!("parsers diverge on {line}:\n tree {tree:?}\n stream {stream:?}"),
+        }
+    }
+
+    #[test]
+    fn streaming_parse_agrees_with_the_oracle_on_every_round_trip() {
+        let mut lines = Vec::new();
+        for r in [
+            Request::Knn { vector: vec![1.0, 2.0], k: 5 },
+            Request::Range { vector: vec![-0.5], tau: 0.25 },
+            Request::Insert { vector: vec![0.25, -1.5, 0.0] },
+            Request::Delete { id: (1u64 << 53) - 1 },
+            Request::Flush,
+            Request::Compact,
+            Request::Stats,
+            Request::Metrics,
+            Request::Config,
+            Request::Ping,
+        ] {
+            lines.push(r.to_json().to_string());
+        }
+        let filters = [
+            IdFilter::None,
+            IdFilter::Allow(Arc::new(vec![1, 5, 9])),
+            IdFilter::Deny(Arc::new(vec![0, 2, 4_294_967_296])),
+        ];
+        let modes = [
+            SearchMode::Knn { k: 7 },
+            SearchMode::Range { tau: 0.3 },
+            SearchMode::KnnWithin { k: 4, tau: 0.6 },
+        ];
+        for mode in modes {
+            for bound in [None, Some(BoundKind::Mult)] {
+                for kernel in [None, Some(KernelKind::QuantizedI8)] {
+                    for filter in &filters {
+                        for budget in [None, Some(123_456u64)] {
+                            for trace in [false, true] {
+                                let req = SearchRequest {
+                                    mode,
+                                    bound,
+                                    kernel,
+                                    filter: filter.clone(),
+                                    budget,
+                                    trace,
+                                };
+                                let v = vec![0.5, -0.5];
+                                let s = Request::Search { vector: v.clone(), req: req.clone() };
+                                lines.push(s.to_json().to_string());
+                                let e = Request::Explain { vector: v, req };
+                                lines.push(e.to_json().to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for line in &lines {
+            assert_parsers_agree(line);
+            assert!(Request::parse(line).is_ok(), "corpus line must be valid: {line}");
+        }
+    }
+
+    #[test]
+    fn streaming_parse_agrees_with_the_oracle_on_edge_lines() {
+        let valid = r#"{"op":"search","vector":[1.0],"mode":"knn","k":3}"#;
+        let mut lines: Vec<String> = vec![
+            // Field order, duplicates, ignored fields.
+            r#"{"vector":[1,2],"k":3,"op":"knn"}"#.into(),
+            r#"{"op":"knn","k":3,"k":99,"vector":[1]}"#.into(),
+            r#"{"op":"knn","op":"range","vector":[1],"k":1,"tau":0.5}"#.into(),
+            r#"{"op":"ping","k":"not a number"}"#.into(),
+            r#"{"op":"knn","vector":[1],"k":2,"extra":{"deep":[null,true]}}"#.into(),
+            r#"{"op":"range","vector":[1],"tau":0.5,"k":"ignored junk"}"#.into(),
+            // Escaped keys and values.
+            r#"{"op":"knn","vector":[1],"k":2}"#.into(),
+            r#"{"op":"ping"}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":1}"#.into(),
+            // Numbers in all their glory.
+            r#"{"op":"knn","vector":[1],"k":1e1}"#.into(),
+            r#"{"op":"knn","vector":[1],"k":3.0}"#.into(),
+            r#"{"op":"knn","vector":[1],"k":3.5}"#.into(),
+            r#"{"op":"knn","vector":[1],"k":-2}"#.into(),
+            r#"{"op":"knn","vector":[1],"k":+5}"#.into(),
+            r#"{"op":"range","vector":[1],"tau":1e999}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"range","tau":1e999}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"v":1}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"v":2}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"v":1.5}"#.into(),
+            r#"{"op":"delete","id":9007199254740992}"#.into(),
+            r#"{"op":"delete","id":9007199254740991}"#.into(),
+            r#"{"op":"delete","id":-3}"#.into(),
+            r#"{"op":"delete","id":1.5}"#.into(),
+            r#"{"op":"insert","vector":[NaN]}"#.into(),
+            r#"{"op":"insert","vector":[1,]}"#.into(),
+            r#"{"op":"insert","vector":"not an array"}"#.into(),
+            // Filters.
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"allow":[9,1,5,1]}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"deny":[]}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"allow":[1],"deny":[2]}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"allow":[1.5]}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"allow":[9007199254740992]}"#.into(),
+            // Plan options.
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"bound":"best"}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"kernel":"gpu"}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"trace":"yes"}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"knn","k":3,"budget":null}"#.into(),
+            r#"{"op":"explain","vector":[1],"mode":"knn","k":3,"trace":false}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":"warp"}"#.into(),
+            r#"{"op":"search","vector":[1],"mode":7,"k":1}"#.into(),
+            // Structure errors and non-object documents.
+            "[1,2]".into(),
+            "42".into(),
+            "{}".into(),
+            r#"{"op":null}"#.into(),
+            r#"{"op":["knn"]}"#.into(),
+            r#"{"op":"explode"}"#.into(),
+            r#"{"op":"explode",}"#.into(),
+            r#"{"op" "ping"}"#.into(),
+            r#"{"op":"ping"} trailing"#.into(),
+            "".into(),
+            "   ".into(),
+            r#" { "op" : "ping" } "#.into(),
+            "{\"op\":\t\"ping\"}".into(),
+            // Broken strings.
+            r#"{"op":"ping","x":"\q"}"#.into(),
+            r#"{"op":"ping","x":"\ud800"}"#.into(),
+            r#"{"op":"ping","x":"\ud800A"}"#.into(),
+            r#"{"op":"ping","x":"😀"}"#.into(),
+            r#"{"op":"ping","x":"unterminated"#.into(),
+        ];
+        // Every truncation of a valid line.
+        for cut in 0..valid.len() {
+            lines.push(valid[..cut].to_string());
+        }
+        for line in &lines {
+            assert_parsers_agree(line);
+        }
+    }
+
+    #[test]
+    fn streaming_parse_lands_vectors_and_ids_in_scratch() {
+        let mut scratch = WireScratch::new();
+        let line = br#"{"op":"search","vector":[3.0,4.0],"mode":"knn","k":2,"allow":[9,1,5]}"#;
+        let op = parse_wire_streaming(line, &mut scratch).unwrap();
+        assert_eq!(scratch.vector(), &[3.0, 4.0]);
+        match op {
+            WireOp::Search { req } => match req.filter {
+                IdFilter::Allow(ids) => assert_eq!(*ids, vec![1, 5, 9]),
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+        // The pooled id buffer is reused once the previous plan is gone.
+        let first = Arc::as_ptr(&scratch.filter_ids);
+        parse_wire_streaming(line, &mut scratch).unwrap();
+        assert_eq!(Arc::as_ptr(&scratch.filter_ids), first, "id pool must be reused");
+    }
+
+    #[test]
+    fn parse_wire_serves_legacy_diagnostics_on_errors() {
+        let lines = [r#"{"op":"explode"}"#, r#"{"op":"knn","vector":[1]}"#, r#"{not json}"#, "[]"];
+        for line in lines {
+            let mut scratch = WireScratch::new();
+            let stream = parse_wire(line.as_bytes(), &mut scratch).unwrap_err();
+            let tree = Request::parse(line).unwrap_err();
+            assert_eq!(stream.code(), tree.code(), "{line}");
+            assert_eq!(stream.to_string(), tree.to_string(), "{line}");
+        }
+        // Invalid UTF-8 never reaches the tree parser; the streaming
+        // error is served as-is.
+        let mut scratch = WireScratch::new();
+        assert_eq!(
+            parse_wire(b"{\"op\":\"ping\",\"x\":\"\xff\"}", &mut scratch).unwrap_err().code(),
+            "bad_request"
+        );
+    }
+
+    #[test]
+    fn write_response_is_byte_identical_to_the_tree_serializer() {
+        let resps = vec![
+            Response::Ok { hits: vec![Hit { id: 3, score: 0.9 }], sim_evals: 17 },
+            Response::Ok { hits: Vec::new(), sim_evals: 0 },
+            Response::Search(SearchResult {
+                hits: vec![Hit { id: 9, score: 0.75 }, Hit { id: 2, score: -0.5 }],
+                truncated: true,
+                sim_evals: 321,
+                nodes_visited: 17,
+                pruned: 44,
+                trace: Vec::new(),
+            }),
+            Response::Search(SearchResult::default()),
+            Response::Explain(SearchResult {
+                hits: vec![Hit { id: 9, score: 1.0 }],
+                truncated: false,
+                sim_evals: 12,
+                nodes_visited: 3,
+                pruned: 1,
+                trace: vec![
+                    TraceEvent::visit(7),
+                    TraceEvent::prune(3, 0.25),
+                    TraceEvent::eval(9, 0.875, 0.75),
+                    TraceEvent::scan(64, 16),
+                    TraceEvent::budget_stop(),
+                ],
+            }),
+            Response::Metrics { text: "# TYPE x counter\nline \"quoted\"\tok\n".into() },
+            Response::Inserted { id: (1 << 53) - 1 },
+            Response::Deleted { existed: true },
+            Response::Deleted { existed: false },
+            Response::Done,
+            Response::Stats(StatsSnapshot {
+                kernel: "i8".into(),
+                queries: 5,
+                corpus_size: 100,
+                nodes_visited: 42,
+                ctx_reuses: 4,
+                pruned_fraction: 0.247_211,
+                latency_us_p50: 12,
+                latency_us_p99: 99,
+                latency_us_max: 123,
+                latency_us_sum: 4567,
+                generations: 3,
+                memtable_items: 17,
+                tombstones: 2,
+                sealed_bytes: 8192,
+                inserts: 120,
+                deletes: 4,
+                seals: 6,
+                compactions: 1,
+                blocked_scan_rows: 4096,
+                quant_prefilter_rows: 2048,
+                quant_rerank_rows: 77,
+                bytes_in: 1024,
+                bytes_out: 2048,
+                conns_live: 3,
+                conns_queued: 1,
+                ..Default::default()
+            }),
+            Response::Config(ConfigSnapshot {
+                kernel: "simd".into(),
+                index: "vp".into(),
+                bound: "mult".into(),
+                mode: "index".into(),
+                shards: 4,
+                mutable: true,
+            }),
+            Response::Pong,
+            Response::Error { code: "bad_request".into(), message: "boom \"q\" \n".into() },
+            Response::Error { code: "unknown_op".into(), message: "unknown op 'x'".into() },
+        ];
+        let mut out = String::new();
+        for r in &resps {
+            out.clear();
+            write_response(r, &mut out);
+            assert_eq!(out, r.to_json().to_string(), "{r:?}");
+        }
+        // The buffer appends (one response per pipelined line), never
+        // clears behind the caller's back.
+        out.clear();
+        write_response(&Response::Pong, &mut out);
+        write_response(&Response::Done, &mut out);
+        assert_eq!(out, "{\"status\":\"pong\"}{\"status\":\"done\"}");
     }
 }

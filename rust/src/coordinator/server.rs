@@ -1,31 +1,71 @@
-//! TCP front end: newline-delimited JSON requests, thread-per-connection,
-//! a shutdown handle, plus a typed blocking client.
+//! TCP front end: a fixed worker pool multiplexing pipelined
+//! newline-delimited JSON connections over the streaming wire path
+//! (ADR-008), a shutdown handle that joins its workers, a legacy
+//! thread-per-connection server kept as the conformance baseline, plus a
+//! typed blocking client.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use super::metrics::Metrics;
+use super::protocol::{parse_wire, write_response, WireOp, WireScratch};
 use super::protocol::{ConfigSnapshot, Hit, Request, Response, SearchResult, StatsSnapshot};
 use super::Coordinator;
 use crate::error::SimetraError;
 use crate::obs::{Stage, OBS};
 use crate::query::SearchRequest;
 
+/// How long one worker turn blocks on a quiet socket before parking the
+/// connection back in the run queue — the pool's fairness quantum, and
+/// its shutdown-latency floor for a worker mid-turn.
+const TURN_READ_TIMEOUT: Duration = Duration::from_millis(20);
+
+/// How long a parked worker waits for the ready signal before re-checking
+/// the stop flag.
+const POP_WAIT: Duration = Duration::from_millis(50);
+
+/// How long [`ServeHandle::stop`] waits for workers to finish their
+/// current turns before giving up on the join.
+const STOP_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Tuning for the worker-pool front door (ADR-008).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeConfig {
+    /// Worker threads multiplexing every connection; `0` (the default)
+    /// sizes the pool from the host's available parallelism, clamped to
+    /// `2..=8`.
+    pub workers: usize,
+}
+
+impl ServeConfig {
+    fn resolved_workers(self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(2, 8)
+    }
+}
+
 /// A running TCP server: the bound address plus a shutdown handle.
 ///
-/// [`ServeHandle::stop`] (also called on drop) closes the listener and
-/// joins the accept thread, so tests and examples that bind port 0 tear
-/// down cleanly instead of leaking an accept thread until process exit.
+/// [`ServeHandle::stop`] (also called on drop) closes the listener, joins
+/// the accept thread and the worker pool, so tests and examples that bind
+/// port 0 tear down cleanly instead of leaking threads until process
+/// exit.
 #[must_use = "dropping the handle stops the server"]
 pub struct ServeHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
+    pool: Option<Arc<PoolShared>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl ServeHandle {
@@ -34,9 +74,12 @@ impl ServeHandle {
         self.addr
     }
 
-    /// Close the listener and join the accept thread. Idempotent.
-    /// Established connections keep their per-connection threads until the
-    /// peer disconnects; no new connections are accepted.
+    /// Close the listener, join the accept thread, then shut the pool
+    /// down: workers are signalled and joined within [`STOP_DEADLINE`],
+    /// and connections still parked in the run queue are dropped, so no
+    /// `simetra-conn-*` thread outlives `stop()`. Idempotent. (The legacy
+    /// server has no pool; its per-connection threads live until the peer
+    /// disconnects.)
     pub fn stop(&mut self) {
         if let Some(handle) = self.accept.take() {
             self.stop.store(true, Ordering::SeqCst);
@@ -58,6 +101,27 @@ impl ServeHandle {
                 let _ = handle.join();
             }
         }
+        if let Some(pool) = self.pool.take() {
+            pool.stop.store(true, Ordering::SeqCst);
+            pool.ready.notify_all();
+            let deadline = Instant::now() + STOP_DEADLINE;
+            for worker in self.workers.drain(..) {
+                // Turn reads and condvar waits are bounded, so workers
+                // notice the stop flag promptly; the deadline guards one
+                // wedged writing to a dead-slow peer (leaked, not joined).
+                while !worker.is_finished() && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                if worker.is_finished() {
+                    let _ = worker.join();
+                }
+            }
+            // Close connections still waiting for a worker turn.
+            if let Ok(mut queue) = pool.queue.lock() {
+                queue.clear();
+                pool.metrics.conns_queued.store(0, Ordering::Relaxed);
+            }
+        }
     }
 }
 
@@ -67,9 +131,73 @@ impl Drop for ServeHandle {
     }
 }
 
-/// Serve a coordinator on `addr` on a background thread; returns a
-/// [`ServeHandle`] carrying the bound address and the shutdown control.
+/// Serve a coordinator on `addr` with the default pool configuration;
+/// returns a [`ServeHandle`] carrying the bound address and the shutdown
+/// control.
 pub fn serve(coordinator: Coordinator, addr: &str) -> Result<ServeHandle> {
+    serve_with(coordinator, addr, ServeConfig::default())
+}
+
+/// Serve a coordinator on `addr` through a fixed worker pool (ADR-008):
+/// each worker multiplexes queued connections round-robin, draining every
+/// complete pipelined request line per turn and flushing the batch of
+/// responses with one write.
+pub fn serve_with(
+    coordinator: Coordinator,
+    addr: &str,
+    config: ServeConfig,
+) -> Result<ServeHandle> {
+    let listener = TcpListener::bind(addr).context("bind")?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let metrics = coordinator.metrics.clone();
+    let pool = Arc::new(PoolShared {
+        queue: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+        stop: AtomicBool::new(false),
+        metrics: metrics.clone(),
+    });
+    let mut workers = Vec::new();
+    for i in 0..config.resolved_workers() {
+        let coord = coordinator.clone();
+        let pool = pool.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("simetra-conn-{i}"))
+            .spawn(move || worker_loop(coord, &pool))
+            .context("spawn pool worker")?;
+        workers.push(worker);
+    }
+    let stop2 = stop.clone();
+    let pool2 = pool.clone();
+    let accept = std::thread::Builder::new()
+        .name("simetra-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(socket) => match Conn::new(socket, metrics.clone()) {
+                        Ok(conn) => pool2.push(conn),
+                        Err(e) => eprintln!("connection setup error: {e}"),
+                    },
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+            // The listener drops here, closing the socket.
+        })
+        .context("spawn accept thread")?;
+    Ok(ServeHandle { addr: local, stop, accept: Some(accept), pool: Some(pool), workers })
+}
+
+/// Serve a coordinator thread-per-connection over the legacy `Json`-tree
+/// wire path. Kept as the conformance and performance baseline for the
+/// streaming pool (`benches/wire_path.rs`, the differential tests);
+/// established connections keep their threads until the peer disconnects.
+pub fn serve_legacy(coordinator: Coordinator, addr: &str) -> Result<ServeHandle> {
     let listener = TcpListener::bind(addr).context("bind")?;
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -82,19 +210,7 @@ pub fn serve(coordinator: Coordinator, addr: &str) -> Result<ServeHandle> {
                     break;
                 }
                 match stream {
-                    Ok(socket) => {
-                        let coord = coordinator.clone();
-                        let _ = std::thread::Builder::new()
-                            .name("simetra-conn".into())
-                            .spawn(move || {
-                                if let Err(e) = handle_conn(coord, socket) {
-                                    let msg = e.to_string();
-                                    if !msg.contains("reset") && !msg.contains("Broken pipe") {
-                                        eprintln!("connection error: {msg}");
-                                    }
-                                }
-                            });
-                    }
+                    Ok(socket) => spawn_legacy_conn(coordinator.clone(), socket),
                     Err(e) => {
                         eprintln!("accept error: {e}");
                         break;
@@ -104,10 +220,224 @@ pub fn serve(coordinator: Coordinator, addr: &str) -> Result<ServeHandle> {
             // The listener drops here, closing the socket.
         })
         .context("spawn accept thread")?;
-    Ok(ServeHandle { addr: local, stop, accept: Some(accept) })
+    Ok(ServeHandle { addr: local, stop, accept: Some(accept), pool: None, workers: Vec::new() })
 }
 
-fn handle_conn(coord: Coordinator, socket: TcpStream) -> Result<()> {
+fn spawn_legacy_conn(coord: Coordinator, socket: TcpStream) {
+    let _ = std::thread::Builder::new()
+        .name("simetra-legacy".into())
+        .spawn(move || {
+            if let Err(e) = handle_conn_legacy(coord, socket) {
+                // Peer disconnects are business as usual; everything else
+                // is worth a log line. Classified by `io::ErrorKind`, not
+                // by error-message substrings.
+                if !e.downcast_ref::<io::Error>().is_some_and(is_disconnect) {
+                    eprintln!("connection error: {e}");
+                }
+            }
+        });
+}
+
+/// Whether `e` is a routine peer disconnect (not worth logging).
+fn is_disconnect(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::ConnectionReset | io::ErrorKind::BrokenPipe)
+}
+
+/// One client connection owned by the pool: buffered reader + writer
+/// halves, the partial-line carryover, and the per-connection scratch
+/// that keeps the steady-state wire path allocation-free (ADR-008).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Bytes of the current request line; a turn that times out mid-line
+    /// parks the partial prefix here and the next turn appends to it.
+    line: Vec<u8>,
+    scratch: WireScratch,
+    out: String,
+    metrics: Arc<Metrics>,
+}
+
+impl Conn {
+    fn new(socket: TcpStream, metrics: Arc<Metrics>) -> io::Result<Conn> {
+        socket.set_nodelay(true)?;
+        // A bounded read timeout turns the blocking socket cooperative: a
+        // quiet connection costs its worker one `TURN_READ_TIMEOUT` slice
+        // per turn, then yields the worker back to the run queue.
+        socket.set_read_timeout(Some(TURN_READ_TIMEOUT))?;
+        let writer = socket.try_clone()?;
+        metrics.conns_live.fetch_add(1, Ordering::Relaxed);
+        Ok(Conn {
+            reader: BufReader::new(socket),
+            writer,
+            line: Vec::new(),
+            scratch: WireScratch::new(),
+            out: String::new(),
+            metrics,
+        })
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.metrics.conns_live.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// State shared between the accept thread and the pool workers: the
+/// connection run queue plus the pool's stop signal.
+struct PoolShared {
+    queue: Mutex<VecDeque<Conn>>,
+    ready: Condvar,
+    stop: AtomicBool,
+    metrics: Arc<Metrics>,
+}
+
+impl PoolShared {
+    fn push(&self, conn: Conn) {
+        let mut queue = self.queue.lock().unwrap();
+        queue.push_back(conn);
+        self.metrics.conns_queued.store(queue.len() as u64, Ordering::Relaxed);
+        drop(queue);
+        self.ready.notify_one();
+    }
+
+    /// The next connection due a turn; `None` once the pool is stopping.
+    fn pop(&self) -> Option<Conn> {
+        let mut queue = self.queue.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(conn) = queue.pop_front() {
+                self.metrics.conns_queued.store(queue.len() as u64, Ordering::Relaxed);
+                return Some(conn);
+            }
+            queue = self.ready.wait_timeout(queue, POP_WAIT).unwrap().0;
+        }
+    }
+}
+
+/// What to do with a connection after one worker turn.
+enum Turn {
+    /// Park it back in the run queue (idle, or mid-request-line).
+    Keep,
+    /// Drop it (EOF, disconnect, or an unrecoverable socket error).
+    Close,
+}
+
+fn worker_loop(coord: Coordinator, pool: &PoolShared) {
+    while let Some(mut conn) = pool.pop() {
+        match serve_turn(&coord, &mut conn) {
+            Turn::Keep => pool.push(conn),
+            Turn::Close => drop(conn),
+        }
+    }
+}
+
+/// One worker turn over one connection: drain every complete request line
+/// already readable (pipelining: read many, answer in order), accumulate
+/// the response lines in the connection's output buffer, and flush them
+/// with one write.
+fn serve_turn(coord: &Coordinator, conn: &mut Conn) -> Turn {
+    conn.out.clear();
+    let mut close = false;
+    loop {
+        match conn.reader.read_until(b'\n', &mut conn.line) {
+            Ok(0) => {
+                // EOF: answer a final unterminated line, then close.
+                if !conn.line.is_empty() {
+                    conn.metrics.bytes_in.fetch_add(conn.line.len() as u64, Ordering::Relaxed);
+                    process_line(coord, &conn.line, &mut conn.scratch, &mut conn.out);
+                    conn.line.clear();
+                }
+                close = true;
+                break;
+            }
+            Ok(_) => {
+                if conn.line.last() != Some(&b'\n') {
+                    // `read_until` stops short of the delimiter only at
+                    // EOF; the next read reports it as `Ok(0)`.
+                    continue;
+                }
+                conn.metrics.bytes_in.fetch_add(conn.line.len() as u64, Ordering::Relaxed);
+                process_line(coord, &conn.line, &mut conn.scratch, &mut conn.out);
+                conn.line.clear();
+                if !conn.reader.buffer().contains(&b'\n') {
+                    break;
+                }
+            }
+            // No (more) data within this turn's slice: any partial line
+            // stays parked in `conn.line` for the next turn.
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                break;
+            }
+            Err(e) => {
+                if !is_disconnect(&e) {
+                    eprintln!("connection error: {e}");
+                }
+                close = true;
+                break;
+            }
+        }
+    }
+    if !conn.out.is_empty() {
+        if let Err(e) = conn.writer.write_all(conn.out.as_bytes()) {
+            if !is_disconnect(&e) {
+                eprintln!("connection error: {e}");
+            }
+            return Turn::Close;
+        }
+        conn.metrics.bytes_out.fetch_add(conn.out.len() as u64, Ordering::Relaxed);
+    }
+    if close {
+        Turn::Close
+    } else {
+        Turn::Keep
+    }
+}
+
+/// Answer one raw request line, appending the response line to `out`.
+fn process_line(coord: &Coordinator, raw: &[u8], scratch: &mut WireScratch, out: &mut String) {
+    let mut line = raw;
+    if line.last() == Some(&b'\n') {
+        line = &line[..line.len() - 1];
+    }
+    if line.last() == Some(&b'\r') {
+        line = &line[..line.len() - 1];
+    }
+    // Blank lines are skipped, matching the legacy loop's `trim` check; a
+    // non-UTF-8 line is not blank and earns an error response below
+    // (where the legacy server dropped the whole connection).
+    if std::str::from_utf8(line).is_ok_and(|s| s.trim().is_empty()) {
+        return;
+    }
+    let t_parse = Instant::now();
+    let parsed = parse_wire(line, scratch);
+    OBS.record_stage(Stage::Parse, t_parse.elapsed());
+    let response = match parsed {
+        Ok(op) => dispatch_wire(coord, op, scratch),
+        Err(e) => Response::Error {
+            code: e.code().to_string(),
+            message: format!("bad request: {e}"),
+        },
+    };
+    let t_ser = Instant::now();
+    write_response(&response, out);
+    out.push('\n');
+    OBS.record_stage(Stage::Serialize, t_ser.elapsed());
+}
+
+/// Execute a streaming-parsed op. Vector-carrying ops pay exactly one
+/// owned copy out of the connection scratch here — the coordinator hands
+/// the query vector to shard workers by value — and that copy is the only
+/// steady-state allocation between socket read and dispatch.
+fn dispatch_wire(coord: &Coordinator, op: WireOp, scratch: &WireScratch) -> Response {
+    dispatch(coord, op.into_request(scratch))
+}
+
+/// Per-connection loop of the legacy server: `Json`-tree parse and
+/// serialize, one request per iteration, one thread per connection.
+fn handle_conn_legacy(coord: Coordinator, socket: TcpStream) -> Result<()> {
     socket.set_nodelay(true)?;
     let mut writer = socket.try_clone()?;
     let reader = BufReader::new(socket);
@@ -394,6 +724,9 @@ mod tests {
             Response::Stats(s) => {
                 assert_eq!(s.corpus_size, 200);
                 assert!(s.queries >= 1);
+                assert!(s.bytes_in > 0, "wire bytes not counted: {s:?}");
+                assert!(s.bytes_out > 0, "wire bytes not counted: {s:?}");
+                assert_eq!(s.conns_live, 1);
             }
             other => panic!("{other:?}"),
         }
@@ -418,10 +751,15 @@ mod tests {
         assert!(plain.trace.is_empty());
         assert!(!traced.trace.is_empty());
 
-        // Metrics serves a non-empty Prometheus text exposition.
+        // Metrics serves a non-empty Prometheus text exposition,
+        // including the wire counters and pool gauges.
         let text = client.metrics().unwrap();
         assert!(text.contains("# TYPE simetra_queries_total counter"));
         assert!(text.contains("simetra_request_latency_us_count"));
+        assert!(text.contains("# TYPE simetra_bytes_in_total counter"));
+        assert!(text.contains("# TYPE simetra_bytes_out_total counter"));
+        assert!(text.contains("simetra_conns_live 1"));
+        assert!(text.contains("# TYPE simetra_conns_queued gauge"));
     }
 
     #[test]
@@ -448,27 +786,132 @@ mod tests {
     }
 
     #[test]
-    fn stop_closes_listener_and_joins_accept_thread() {
-        let pts = uniform_sphere(50, 8, 113);
+    fn more_clients_than_pool_workers() {
+        let pts = uniform_sphere(100, 8, 116);
         let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
-        let mut server = serve(coord, "127.0.0.1:0").unwrap();
+        let server = serve_with(coord, "127.0.0.1:0", ServeConfig { workers: 2 }).unwrap();
         let addr = server.addr();
-        {
-            let mut client = Client::connect(addr).unwrap();
-            match client.request(&Request::Ping).unwrap() {
-                Response::Pong => {}
+        let mut handles = Vec::new();
+        for c in 0..8usize {
+            let pts = pts.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for qi in 0..5 {
+                    let id = (c * 13 + qi) % 100;
+                    let hits = client.knn(pts[id].as_slice().to_vec(), 1).unwrap();
+                    assert_eq!(hits[0].id, id as u64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_are_answered_in_order() {
+        let pts = uniform_sphere(64, 8, 114);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let server = serve(coord, "127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        let mut burst = Vec::new();
+        for id in 0..32usize {
+            let req = Request::Knn { vector: pts[id].as_slice().to_vec(), k: 1 };
+            burst.extend_from_slice(req.to_json().to_string().as_bytes());
+            burst.push(b'\n');
+        }
+        stream.write_all(&burst).unwrap();
+        let mut reader = BufReader::new(stream);
+        for id in 0..32usize {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Ok { hits, .. } => assert_eq!(hits[0].id, id as u64),
                 other => panic!("{other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn slow_reader_gets_backpressure_not_disconnect() {
+        let pts = uniform_sphere(64, 8, 115);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let server = serve_with(coord, "127.0.0.1:0", ServeConfig { workers: 2 }).unwrap();
+        let addr = server.addr();
+        // A slow reader: hundreds of pipelined responses back up in the
+        // socket buffers until the client finally drains them.
+        let mut slow = TcpStream::connect(addr).unwrap();
+        let mut burst = Vec::new();
+        for id in 0..256usize {
+            let req = Request::Knn { vector: pts[id % 64].as_slice().to_vec(), k: 8 };
+            burst.extend_from_slice(req.to_json().to_string().as_bytes());
+            burst.push(b'\n');
+        }
+        slow.write_all(&burst).unwrap();
+        // While those responses queue, other connections stay responsive.
+        let mut fast = Client::connect(addr).unwrap();
+        let hits = fast.knn(pts[7].as_slice().to_vec(), 1).unwrap();
+        assert_eq!(hits[0].id, 7);
+        std::thread::sleep(Duration::from_millis(100));
+        let mut reader = BufReader::new(slow);
+        for id in 0..256usize {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            match Response::parse(&line).unwrap() {
+                Response::Ok { hits, .. } => assert_eq!(hits[0].id, (id % 64) as u64),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn stop_joins_pool_workers() {
+        let pts = uniform_sphere(50, 8, 117);
+        let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+        let mut server = serve_with(coord, "127.0.0.1:0", ServeConfig { workers: 3 }).unwrap();
+        let mut client = Client::connect(server.addr()).unwrap();
+        let hits = client.knn(pts[1].as_slice().to_vec(), 1).unwrap();
+        assert_eq!(hits[0].id, 1);
         server.stop();
-        server.stop(); // idempotent
-        assert!(TcpStream::connect(addr).is_err(), "listener still accepting after stop()");
-        // Mutations against a build-once coordinator fail cleanly.
-        let coord2 = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
-        let server2 = serve(coord2, "127.0.0.1:0").unwrap();
-        let mut client = Client::connect(server2.addr()).unwrap();
-        let err = client.insert(vec![0.0; 8]);
-        assert!(err.is_err());
-        assert!(err.unwrap_err().to_string().contains("read-only"));
+        assert!(server.workers.is_empty(), "workers not joined by stop()");
+        // The open connection was dropped by the shutdown: the next
+        // request observes EOF (or a reset) instead of hanging.
+        assert!(client.request(&Request::Ping).is_err());
+    }
+
+    fn exchange(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        reply
+    }
+
+    #[test]
+    fn pool_answers_byte_identically_to_the_legacy_server() {
+        let pts = uniform_sphere(80, 8, 118);
+        let coord = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+        let pool = serve(coord.clone(), "127.0.0.1:0").unwrap();
+        let legacy = serve_legacy(coord, "127.0.0.1:0").unwrap();
+        let mut a = TcpStream::connect(pool.addr()).unwrap();
+        let mut b = TcpStream::connect(legacy.addr()).unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        let lines = [
+            r#"{"op":"ping"}"#,
+            r#"{"op":"knn","vector":[1,0,0,0,0,0,0,0],"k":3}"#,
+            r#"{"op":"range","vector":[0,1,0,0,0,0,0,0],"tau":0.9}"#,
+            r#"{"op":"search","v":1,"vector":[0,0,1,0,0,0,0,0],"mode":"knn","k":2}"#,
+            r#"{"op":"explain","v":1,"vector":[0,0,1,0,0,0,0,0],"mode":"knn","k":2}"#,
+            r#"{"op":"explode"}"#,
+            r#"{"op":"knn","vector":"nope","k":1}"#,
+            r#"{"op":"delete","id":7}"#,
+        ];
+        for line in lines {
+            let la = exchange(&mut a, &mut ra, line);
+            let lb = exchange(&mut b, &mut rb, line);
+            assert_eq!(la, lb, "divergent replies for {line}");
+            assert!(la.ends_with('\n'), "unterminated reply for {line}");
+        }
     }
 }

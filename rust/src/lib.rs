@@ -178,6 +178,28 @@
 //! assert_eq!(hits[0].id, id);
 //! coord.delete(id).unwrap();
 //! ```
+//!
+//! Serving is one call (ADR-008): a fixed worker pool multiplexes
+//! pipelined newline-delimited JSON connections over a streaming wire
+//! path — request lines pull-parse straight off the socket buffer into
+//! per-connection scratch, responses serialize tree-free into a reused
+//! output buffer, and the steady-state wire path allocates nothing per
+//! request:
+//!
+//! ```no_run
+//! use simetra::coordinator::server::{serve, Client};
+//! use simetra::coordinator::{Coordinator, CoordinatorConfig};
+//! use simetra::data::uniform_sphere;
+//!
+//! let corpus = uniform_sphere(10_000, 64, 42);
+//! let coord = Coordinator::new(corpus, CoordinatorConfig::default()).unwrap();
+//! let mut server = serve(coord, "127.0.0.1:0").unwrap();
+//!
+//! let mut client = Client::connect(server.addr()).unwrap();
+//! let hits = client.knn(vec![0.5; 64], 10).unwrap();
+//! assert_eq!(hits.len(), 10);
+//! server.stop(); // joins the accept thread and every pool worker
+//! ```
 
 pub mod bounds;
 pub mod cluster;

@@ -36,6 +36,9 @@ COMMANDS:
                            SIMETRA_KERNEL env var, else scalar)
              --mode index|engine|hybrid  --artifacts artifacts
              --max-batch 32  --max-wait-us 2000
+             --workers 0  (connection worker-pool size for the pipelined
+                           wire path, ADR-008; 0 = auto from available
+                           cores, clamped to 2..=8)
              --mutable 1  (generational ingest: insert/delete/flush/compact
                            ops enabled; requires --mode index)
              Wire ops: knn/range (legacy) plus the versioned 'search' op
@@ -181,6 +184,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let artifacts = flags.get("artifacts").map(PathBuf::from);
     let max_batch = flags.usize_or("max_batch", 32)?;
     let max_wait_us = flags.usize_or("max_wait_us", 2000)? as u64;
+    let workers = flags.usize_or("workers", 0)?;
 
     let mutable = flags.get("mutable").is_some_and(|v| v != "0" && v != "false");
 
@@ -214,7 +218,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     } else {
         Coordinator::new(store, config)?
     };
-    let server_handle = server::serve(coord, &addr)?;
+    let server_handle = server::serve_with(coord, &addr, server::ServeConfig { workers })?;
     eprintln!("serving on {} — press Ctrl-C to stop", server_handle.addr());
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

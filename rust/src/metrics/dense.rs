@@ -31,6 +31,23 @@ impl DenseVec {
         DenseVec { data }
     }
 
+    /// Reload this vector from raw values in place, L2-normalizing like
+    /// [`DenseVec::new`] (zero vectors stay all-zeros). Reuses the
+    /// existing payload buffer when its capacity suffices, so the
+    /// streaming wire path can turn scratch slices into query vectors
+    /// without a steady-state allocation (ADR-008).
+    pub fn refill(&mut self, raw: &[f32]) {
+        self.data.clear();
+        self.data.extend_from_slice(raw);
+        let norm: f64 = self.data.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            let inv = (1.0 / norm) as f32;
+            for v in &mut self.data {
+                *v *= inv;
+            }
+        }
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()
@@ -70,6 +87,18 @@ mod tests {
         let v = DenseVec::new(vec![3.0, 4.0]);
         let norm: f32 = v.as_slice().iter().map(|x| x * x).sum::<f32>().sqrt();
         assert!((norm - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn refill_matches_new_and_reuses_the_buffer() {
+        let mut v = DenseVec::new(vec![0.0; 8]);
+        let cap = v.data.capacity();
+        v.refill(&[3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(v, DenseVec::new(vec![3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]));
+        assert_eq!(v.data.capacity(), cap, "refill reallocated the payload");
+        // Zero vectors stay all-zeros, like `new`.
+        v.refill(&[0.0; 8]);
+        assert_eq!(v, DenseVec::new(vec![0.0; 8]));
     }
 
     #[test]

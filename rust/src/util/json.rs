@@ -142,13 +142,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
-            Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 9e15 {
-                    let _ = write!(out, "{}", *v as i64);
-                } else {
-                    let _ = write!(out, "{v}");
-                }
-            }
+            Json::Num(v) => write_num(out, *v),
             Json::Str(s) => write_escaped(s, out),
             Json::Arr(items) => {
                 out.push('[');
@@ -184,7 +178,23 @@ impl Json {
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Write a JSON number exactly the way [`Json::to_string`] does: values
+/// that are integral (and within f64's exact integer range) print without
+/// a decimal point, everything else through Rust's shortest-roundtrip
+/// float formatting. Shared with the streaming serializer
+/// (`coordinator::protocol::write_response`) so the tree-free writer is
+/// byte-identical to the tree writer by construction, not by testing luck.
+pub fn write_num(out: &mut String, v: f64) {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+/// Write `s` as a quoted, escaped JSON string — the one escape routine
+/// both the tree writer and the streaming serializer go through.
+pub fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -317,9 +327,18 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                                 .get(*pos + 7..*pos + 11)
                                 .ok_or_else(|| anyhow!("bad surrogate pair"))?;
                             let low = u32::from_str_radix(std::str::from_utf8(hex2)?, 16)?;
-                            let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
-                            out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
-                            *pos += 10;
+                            if (0xDC00..0xE000).contains(&low) {
+                                let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                                out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                *pos += 10;
+                            } else {
+                                // Mismatched pair: the high surrogate is
+                                // lone (U+FFFD) and the second escape is
+                                // re-scanned on its own — `low - 0xDC00`
+                                // would underflow here.
+                                out.push('\u{FFFD}');
+                                *pos += 4;
+                            }
                         } else {
                             out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
                             *pos += 4;
@@ -387,6 +406,16 @@ mod tests {
     fn unicode_escape() {
         assert_eq!(Json::parse(r#""é""#).unwrap().as_str().unwrap(), "é");
         assert_eq!(Json::parse(r#""😀""#).unwrap().as_str().unwrap(), "😀");
+    }
+
+    #[test]
+    fn surrogate_escapes_decode_or_degrade_to_replacement() {
+        assert_eq!(Json::parse(r#""😀""#).unwrap().as_str().unwrap(), "😀");
+        // Lone and mismatched surrogates decode to U+FFFD instead of
+        // underflowing `low - 0xDC00`.
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str().unwrap(), "\u{FFFD}");
+        assert_eq!(Json::parse(r#""\udc00""#).unwrap().as_str().unwrap(), "\u{FFFD}");
+        assert_eq!(Json::parse(r#""\ud800A""#).unwrap().as_str().unwrap(), "\u{FFFD}A");
     }
 
     #[test]

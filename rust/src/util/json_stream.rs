@@ -1,0 +1,598 @@
+//! Allocation-free streaming JSON pull-parser over a borrowed byte slice.
+//!
+//! The wire hot path (`coordinator::protocol::parse_wire_streaming`) walks
+//! request lines with this parser instead of materializing a `Json` tree:
+//! no recursion (an explicit bitstack tracks container nesting, bounded by
+//! [`MAX_DEPTH`]), no heap traffic (string events are borrowed
+//! [`StrSpan`]s; escape decoding goes into caller-provided scratch), one
+//! event at a time off the socket buffer — the picojson idiom.
+//!
+//! Conformance contract: this parser accepts exactly the documents
+//! [`crate::util::Json::parse`] accepts (including its quirks — the
+//! permissive number scan that admits `1e999` as `inf` and a leading `+`,
+//! and the U+FFFD policy for lone or mismatched surrogate escapes), and
+//! decodes strings to identical contents. The tree parser stays in the
+//! codebase as the differential oracle (`tests/integration_wire.rs`).
+
+use std::fmt;
+
+/// Maximum container nesting the pull-parser accepts. One bit of the
+/// nesting stack per level; wire requests are at most 3 deep, so 64 is
+/// pure headroom — but unlike the recursive tree parser, a hostile
+/// deeply-nested line errors here instead of growing the thread stack.
+pub const MAX_DEPTH: u32 = 64;
+
+/// A parse error: a static message plus the byte offset it refers to.
+/// Construction never allocates (the hot path stays zero-alloc even when
+/// rejecting garbage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamError {
+    pub msg: &'static str,
+    pub at: usize,
+}
+
+impl fmt::Display for StreamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} at offset {}", self.msg, self.at)
+    }
+}
+
+impl std::error::Error for StreamError {}
+
+/// The raw content of a JSON string (the bytes between the quotes, escape
+/// sequences unprocessed), borrowed from the input line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StrSpan<'a> {
+    bytes: &'a [u8],
+    escaped: bool,
+    at: usize,
+}
+
+impl<'a> StrSpan<'a> {
+    /// The raw bytes between the quotes (escapes unprocessed).
+    pub fn raw(&self) -> &'a [u8] {
+        self.bytes
+    }
+
+    /// Whether the span contains at least one `\` escape (i.e. whether
+    /// [`StrSpan::decode`] needs the scratch buffer).
+    pub fn is_escaped(&self) -> bool {
+        self.escaped
+    }
+
+    /// Decode the string content. Escape-free spans are returned as a
+    /// borrow of the input line; spans with escapes are decoded into
+    /// `scratch` (cleared first) — either way no allocation happens once
+    /// the scratch has warmed to the longest escaped string seen.
+    pub fn decode<'s>(&self, scratch: &'s mut String) -> Result<&'s str, StreamError>
+    where
+        'a: 's,
+    {
+        if !self.escaped {
+            return std::str::from_utf8(self.bytes)
+                .map_err(|_| StreamError { msg: "invalid UTF-8 in string", at: self.at });
+        }
+        scratch.clear();
+        decode_escaped(self.bytes, self.at, scratch)?;
+        Ok(scratch.as_str())
+    }
+
+    /// Whether the decoded content equals `expected` (key matching on the
+    /// hot path: escape-free spans compare without touching the scratch).
+    pub fn eq_decoded(&self, expected: &str, scratch: &mut String) -> bool {
+        if !self.escaped {
+            return self.bytes == expected.as_bytes();
+        }
+        matches!(self.decode(scratch), Ok(s) if s == expected)
+    }
+}
+
+/// Decode a string body that contains at least one escape into `out`,
+/// mirroring the tree parser's `parse_string` exactly: the same escape
+/// set, the same `\u` hex parse, and the same U+FFFD policy for lone or
+/// mismatched surrogates.
+fn decode_escaped(b: &[u8], base: usize, out: &mut String) -> Result<(), StreamError> {
+    let bad = |at: usize, msg: &'static str| StreamError { msg, at };
+    let mut pos = 0;
+    while pos < b.len() {
+        if b[pos] != b'\\' {
+            let start = pos;
+            while pos < b.len() && b[pos] != b'\\' {
+                pos += 1;
+            }
+            let chunk = std::str::from_utf8(&b[start..pos])
+                .map_err(|_| bad(base + start, "invalid UTF-8 in string"))?;
+            out.push_str(chunk);
+            continue;
+        }
+        pos += 1;
+        match b.get(pos) {
+            Some(b'"') => out.push('"'),
+            Some(b'\\') => out.push('\\'),
+            Some(b'/') => out.push('/'),
+            Some(b'n') => out.push('\n'),
+            Some(b't') => out.push('\t'),
+            Some(b'r') => out.push('\r'),
+            Some(b'b') => out.push('\u{0008}'),
+            Some(b'f') => out.push('\u{000C}'),
+            Some(b'u') => {
+                let hex = b.get(pos + 1..pos + 5).ok_or(bad(base + pos, "bad \\u escape"))?;
+                let code = parse_hex4(hex, base + pos)?;
+                // Surrogate pairs: a high surrogate combines with the low
+                // surrogate escape that follows; a lone high surrogate, or
+                // one followed by a non-low-surrogate escape, decodes to
+                // U+FFFD and the next escape is re-scanned on its own.
+                if (0xD800..0xDC00).contains(&code) && b.get(pos + 5..pos + 7) == Some(b"\\u") {
+                    let hex2 =
+                        b.get(pos + 7..pos + 11).ok_or(bad(base + pos, "bad surrogate pair"))?;
+                    let low = parse_hex4(hex2, base + pos + 6)?;
+                    if (0xDC00..0xE000).contains(&low) {
+                        let c = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                        out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                        pos += 10;
+                    } else {
+                        out.push('\u{FFFD}');
+                        pos += 4;
+                    }
+                } else {
+                    out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    pos += 4;
+                }
+            }
+            _ => return Err(bad(base + pos, "bad escape")),
+        }
+        pos += 1;
+    }
+    Ok(())
+}
+
+/// Parse one `\u` hex quartet. `u32::from_str_radix` is the same routine
+/// the tree parser uses — it accepts a leading `+` (so `\u+12f` parses),
+/// and conformance means preserving that quirk.
+fn parse_hex4(hex: &[u8], at: usize) -> Result<u32, StreamError> {
+    std::str::from_utf8(hex)
+        .ok()
+        .and_then(|s| u32::from_str_radix(s, 16).ok())
+        .ok_or(StreamError { msg: "bad \\u escape", at })
+}
+
+/// One parse event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key; the `:` after it is already consumed, so the next
+    /// event is the key's value.
+    Key(StrSpan<'a>),
+    Str(StrSpan<'a>),
+    Num(f64),
+    Bool(bool),
+    Null,
+    /// End of input, emitted once the top-level value has closed and only
+    /// trailing whitespace remains (anything else is an error, matching
+    /// the tree parser's trailing-characters check).
+    End,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Expect {
+    Value,
+    ValueOrArrEnd,
+    Key,
+    KeyOrObjEnd,
+    CommaOrClose,
+    Done,
+}
+
+/// The pull-parser: an explicit-state event iterator over one request
+/// line. No recursion — container nesting lives in a 64-bit stack (one
+/// bit per level, 1 = object, 0 = array).
+pub struct PullParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+    stack: u64,
+    depth: u32,
+    expect: Expect,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(line: &'a [u8]) -> PullParser<'a> {
+        PullParser { b: line, pos: 0, stack: 0, depth: 0, expect: Expect::Value }
+    }
+
+    /// Byte offset of the next unconsumed input (error reporting).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&self, msg: &'static str) -> StreamError {
+        StreamError { msg, at: self.pos }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    /// Pull the next event.
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> Result<Event<'a>, StreamError> {
+        loop {
+            self.skip_ws();
+            match self.expect {
+                Expect::Done => {
+                    return if self.pos == self.b.len() {
+                        Ok(Event::End)
+                    } else {
+                        Err(self.err("trailing characters"))
+                    };
+                }
+                Expect::Key | Expect::KeyOrObjEnd => {
+                    if self.expect == Expect::KeyOrObjEnd && self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        return Ok(self.pop(Event::ObjEnd));
+                    }
+                    let span = self.string()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(self.err("expected ':'"));
+                    }
+                    self.pos += 1;
+                    self.expect = Expect::Value;
+                    return Ok(Event::Key(span));
+                }
+                Expect::Value | Expect::ValueOrArrEnd => {
+                    if self.expect == Expect::ValueOrArrEnd && self.peek() == Some(b']') {
+                        self.pos += 1;
+                        return Ok(self.pop(Event::ArrEnd));
+                    }
+                    return self.value();
+                }
+                Expect::CommaOrClose => {
+                    let in_obj = self.stack & 1 == 1;
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                            self.expect = if in_obj { Expect::Key } else { Expect::Value };
+                        }
+                        Some(b'}') if in_obj => {
+                            self.pos += 1;
+                            return Ok(self.pop(Event::ObjEnd));
+                        }
+                        Some(b']') if !in_obj => {
+                            self.pos += 1;
+                            return Ok(self.pop(Event::ArrEnd));
+                        }
+                        _ => {
+                            return Err(self.err(if in_obj {
+                                "expected ',' or '}'"
+                            } else {
+                                "expected ',' or ']'"
+                            }));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Consume one complete value; the parser must be at a value boundary.
+    pub fn skip_value(&mut self) -> Result<(), StreamError> {
+        let first = self.next()?;
+        self.finish_value(first)
+    }
+
+    /// Consume the remainder of a value whose first event was already
+    /// pulled (a no-op for scalars).
+    pub fn finish_value(&mut self, first: Event<'a>) -> Result<(), StreamError> {
+        let mut open = match first {
+            Event::ObjBegin | Event::ArrBegin => 1u32,
+            Event::End => return Err(self.err("unexpected end of input")),
+            _ => return Ok(()),
+        };
+        while open > 0 {
+            match self.next()? {
+                Event::ObjBegin | Event::ArrBegin => open += 1,
+                Event::ObjEnd | Event::ArrEnd => open -= 1,
+                Event::End => return Err(self.err("unexpected end of input")),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Event<'a>, StreamError> {
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => {
+                self.literal("null")?;
+                self.after_value();
+                Ok(Event::Null)
+            }
+            Some(b't') => {
+                self.literal("true")?;
+                self.after_value();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal("false")?;
+                self.after_value();
+                Ok(Event::Bool(false))
+            }
+            Some(b'"') => {
+                let span = self.string()?;
+                self.after_value();
+                Ok(Event::Str(span))
+            }
+            Some(b'[') => {
+                self.push(false)?;
+                Ok(Event::ArrBegin)
+            }
+            Some(b'{') => {
+                self.push(true)?;
+                Ok(Event::ObjBegin)
+            }
+            // Anything else is attempted as a number — the tree parser's
+            // dispatch, so garbage rejects identically.
+            Some(_) => {
+                let n = self.number()?;
+                self.after_value();
+                Ok(Event::Num(n))
+            }
+        }
+    }
+
+    fn after_value(&mut self) {
+        self.expect = if self.depth == 0 { Expect::Done } else { Expect::CommaOrClose };
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), StreamError> {
+        if self.depth == MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.stack = (self.stack << 1) | u64::from(is_obj);
+        self.depth += 1;
+        self.pos += 1;
+        self.expect = if is_obj { Expect::KeyOrObjEnd } else { Expect::ValueOrArrEnd };
+        Ok(())
+    }
+
+    fn pop(&mut self, ev: Event<'a>) -> Event<'a> {
+        self.stack >>= 1;
+        self.depth -= 1;
+        self.after_value();
+        ev
+    }
+
+    /// Scan a string, validating escapes and UTF-8 without decoding.
+    fn string(&mut self) -> Result<StrSpan<'a>, StreamError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let span = StrSpan { bytes: &self.b[start..self.pos], escaped, at: start };
+                    self.pos += 1;
+                    return Ok(span);
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {
+                            self.pos += 1;
+                        }
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            parse_hex4(hex, self.pos)?;
+                            self.pos += 5;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                }
+                Some(_) => {
+                    // Raw run up to the next quote/escape; a multi-byte
+                    // UTF-8 scalar never contains 0x22 or 0x5C, so the
+                    // break bytes cannot split a valid sequence.
+                    let run = self.pos;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    if std::str::from_utf8(&self.b[run..self.pos]).is_err() {
+                        return Err(StreamError { msg: "invalid UTF-8 in string", at: run });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Number scan: the same byte set and `f64` parse as the tree parser
+    /// (`1e999` parses to `inf`; a bare `NaN` already fails at the scan).
+    fn number(&mut self) -> Result<f64, StreamError> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.pos])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .ok_or(StreamError { msg: "bad number", at: start })
+    }
+
+    fn literal(&mut self, lit: &'static str) -> Result<(), StreamError> {
+        if self.b[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    /// Validate a whole document the way the wire path does: first event,
+    /// finish the value, then require a clean end.
+    fn scan(src: &str) -> Result<(), StreamError> {
+        let mut p = PullParser::new(src.as_bytes());
+        let first = p.next()?;
+        p.finish_value(first)?;
+        match p.next()? {
+            Event::End => Ok(()),
+            other => panic!("expected End, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn accepts_and_rejects_exactly_like_the_tree_parser() {
+        let cases = [
+            r#"{"a": [1, 2.5, -3e2], "b": {"c": true, "d": null}, "e": "x\ny"}"#,
+            "42",
+            "-1.5",
+            "1e3",
+            "1e999",
+            "+5",
+            "[]",
+            "{}",
+            "null",
+            "true",
+            "false",
+            "  [ 1 , 2 ]  ",
+            r#""😀""#,
+            r#""\ud800""#,
+            r#""\ud800A""#,
+            r#"{"op":"knn","k":1}"#,
+            // Rejections (every one must reject in BOTH parsers).
+            "[1,]",
+            "{\"a\" 1}",
+            "{\"a\":1,}",
+            r#"{"a":}"#,
+            "tru",
+            "1 2",
+            "{",
+            "[1",
+            "\"unterminated",
+            r#""\q""#,
+            "nan",
+            "NaN",
+            "{}x",
+            "",
+            "[1 2]",
+            r#"{"a":1 "b":2}"#,
+            r#"{1: 2}"#,
+        ];
+        for src in cases {
+            let tree = Json::parse(src).is_ok();
+            let stream = scan(src).is_ok();
+            assert_eq!(stream, tree, "accept/reject divergence on {src:?}");
+        }
+    }
+
+    #[test]
+    fn event_sequence_walks_nested_documents() {
+        let src = r#"{"op":"knn","vector":[1,2.5],"deep":{"x":[true,null]}}"#;
+        let mut p = PullParser::new(src.as_bytes());
+        let mut scratch = String::new();
+        assert_eq!(p.next().unwrap(), Event::ObjBegin);
+        match p.next().unwrap() {
+            Event::Key(k) => assert!(k.eq_decoded("op", &mut scratch)),
+            other => panic!("{other:?}"),
+        }
+        match p.next().unwrap() {
+            Event::Str(s) => assert_eq!(s.decode(&mut scratch).unwrap(), "knn"),
+            other => panic!("{other:?}"),
+        }
+        match p.next().unwrap() {
+            Event::Key(k) => assert!(k.eq_decoded("vector", &mut scratch)),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(p.next().unwrap(), Event::ArrBegin);
+        assert_eq!(p.next().unwrap(), Event::Num(1.0));
+        assert_eq!(p.next().unwrap(), Event::Num(2.5));
+        assert_eq!(p.next().unwrap(), Event::ArrEnd);
+        match p.next().unwrap() {
+            Event::Key(k) => assert!(k.eq_decoded("deep", &mut scratch)),
+            other => panic!("{other:?}"),
+        }
+        p.skip_value().unwrap();
+        assert_eq!(p.next().unwrap(), Event::ObjEnd);
+        assert_eq!(p.next().unwrap(), Event::End);
+    }
+
+    #[test]
+    fn string_decode_matches_the_tree_parser() {
+        let cases = [
+            r#""plain""#,
+            r#""q\" s\\ t\t n\n r\r b\b f\f sl\/""#,
+            "\"\u{e9} \u{0} \u{ffff}\"",
+            r#""😀""#,
+            r#""\ud800x""#,
+            r#""\udc00""#,
+            r#""\ud800A""#,
+            r#""mix é 😀""#,
+        ];
+        for src in cases {
+            let want = Json::parse(src).unwrap();
+            let mut p = PullParser::new(src.as_bytes());
+            let span = match p.next().unwrap() {
+                Event::Str(s) => s,
+                other => panic!("{other:?}"),
+            };
+            let mut scratch = String::new();
+            assert_eq!(span.decode(&mut scratch).unwrap(), want.as_str().unwrap(), "{src}");
+        }
+    }
+
+    #[test]
+    fn numbers_parse_to_identical_bits() {
+        for src in ["0", "-0.0", "1e999", "-1e999", "3.141592653589793", "9007199254740993"] {
+            let tree = Json::parse(src).unwrap().as_f64().unwrap();
+            let mut p = PullParser::new(src.as_bytes());
+            match p.next().unwrap() {
+                Event::Num(n) => assert_eq!(n.to_bits(), tree.to_bits(), "{src}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH as usize), "]".repeat(MAX_DEPTH as usize));
+        assert!(scan(&ok).is_ok());
+        let deep = format!(
+            "{}{}",
+            "[".repeat(MAX_DEPTH as usize + 1),
+            "]".repeat(MAX_DEPTH as usize + 1)
+        );
+        assert_eq!(scan(&deep).unwrap_err().msg, "nesting too deep");
+    }
+
+    #[test]
+    fn errors_carry_offsets_without_allocating() {
+        let err = scan(r#"{"a": zz}"#).unwrap_err();
+        assert_eq!(err.msg, "bad number");
+        assert_eq!(err.at, 6);
+        assert_eq!(err.to_string(), "bad number at offset 6");
+    }
+}

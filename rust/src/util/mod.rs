@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod json_stream;
 pub mod rng;
 
 pub use json::Json;

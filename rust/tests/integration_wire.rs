@@ -1,0 +1,276 @@
+//! The streaming wire path's conformance and allocation contracts
+//! (ADR-008):
+//!
+//!  1. The worker-pool server answers byte-identically to the legacy
+//!     thread-per-connection `Json`-tree server, across the full wire-op
+//!     corpus (happy paths, optioned plans, malformed / truncated lines,
+//!     read-only mutations) — sequentially and as one pipelined frame.
+//!  2. Robustness: a non-UTF-8 frame earns an error line on the pool
+//!     server (the legacy server dropped the connection) and the
+//!     connection keeps serving afterwards.
+//!  3. More concurrent clients than pool workers all get exact answers.
+//!  4. The steady-state wire path performs **zero heap allocations** from
+//!     request-line parse through response-line serialization on plain
+//!     kNN traffic: `parse_wire_streaming` → `DenseVec::refill` →
+//!     `knn_into` through a warmed `QueryContext` → `write_response` into
+//!     a reused output buffer.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use simetra::bounds::BoundKind;
+use simetra::coordinator::protocol::{
+    parse_wire_streaming, write_response, Hit, Request, Response, WireOp, WireScratch,
+};
+use simetra::coordinator::server::{serve, serve_legacy, serve_with, Client, ServeConfig};
+use simetra::coordinator::{Coordinator, CoordinatorConfig, IndexKind};
+use simetra::data::{uniform_sphere, uniform_sphere_store};
+use simetra::metrics::DenseVec;
+use simetra::query::QueryContext;
+
+// --- counting allocator ----------------------------------------------------
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator that counts allocations made by the *current thread*
+/// while that thread has counting enabled — the zero-allocation assertion
+/// stays exact even with other tests running in parallel threads.
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn note(&self) {
+        // try_with: allocation during TLS teardown must not panic.
+        let _ = COUNTING.try_with(|c| {
+            if c.get() {
+                let _ = ALLOCS.try_with(|a| a.set(a.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.note();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        self.note();
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    COUNTING.with(|c| c.set(true));
+    ALLOCS.with(|a| a.set(0));
+    f();
+    COUNTING.with(|c| c.set(false));
+    ALLOCS.with(|a| a.get())
+}
+
+// --- 1. pool server == legacy server, byte for byte ------------------------
+
+/// Deterministic request corpus: every wire op whose reply does not
+/// depend on shared mutable counters (`stats` / `metrics` are excluded —
+/// the two servers share one coordinator, so those drift by design).
+fn corpus_lines() -> Vec<String> {
+    vec![
+        r#"{"op":"ping"}"#.into(),
+        r#"{"op":"config"}"#.into(),
+        r#"{"op":"knn","vector":[1,0,0,0,0,0,0,0],"k":5}"#.into(),
+        r#"{"op":"knn","vector":[0.5,-0.5,0,0,0,0,0,0],"k":1}"#.into(),
+        r#"{"op":"range","vector":[0,1,0,0,0,0,0,0],"tau":0.8}"#.into(),
+        r#"{"op":"search","v":1,"vector":[0,0,1,0,0,0,0,0],"mode":"knn","k":3}"#.into(),
+        r#"{"op":"search","v":1,"vector":[0,0,1,0,0,0,0,0],"mode":"range","tau":0.5}"#.into(),
+        r#"{"op":"search","v":1,"vector":[1,0,0,0,0,0,0,0],"mode":"knn","k":3,"allow":[2,4,6]}"#
+            .into(),
+        r#"{"op":"search","v":1,"vector":[1,0,0,0,0,0,0,0],"mode":"knn","k":2,"trace":true}"#
+            .into(),
+        r#"{"op":"explain","v":1,"vector":[0,1,0,0,0,0,0,0],"mode":"knn","k":2}"#.into(),
+        // Errors: unknown op, malformed, truncated, type errors, bad dims,
+        // read-only mutations — every reply line must still match.
+        r#"{"op":"explode"}"#.into(),
+        r#"{not json}"#.into(),
+        r#"{"op":"knn","vector":[1,2"#.into(),
+        r#"{"op":"knn","vector":"nope","k":1}"#.into(),
+        r#"{"op":"knn","vector":[1,0,0,0,0,0,0,0]}"#.into(),
+        r#"{"op":"knn","vector":[1,2,3],"k":2}"#.into(),
+        r#"{"op":"search","v":2,"vector":[1,0,0,0,0,0,0,0],"mode":"knn","k":1}"#.into(),
+        r#"{"op":"delete","id":9007199254740993}"#.into(),
+        r#"{"op":"insert","vector":[1,0,0,0,0,0,0,0]}"#.into(),
+        r#"{"op":"delete","id":3}"#.into(),
+        r#"{"op":"flush"}"#.into(),
+        r#"{"op":"compact"}"#.into(),
+        r#"{"op":"ping","extra":"ignored"}"#.into(),
+    ]
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    line
+}
+
+#[test]
+fn pool_server_matches_legacy_server_byte_for_byte() {
+    let pts = uniform_sphere(120, 8, 207);
+    let coord = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+    let pool = serve(coord.clone(), "127.0.0.1:0").unwrap();
+    let legacy = serve_legacy(coord, "127.0.0.1:0").unwrap();
+    let lines = corpus_lines();
+
+    // Sequential: one request/reply round trip at a time on each server.
+    let mut ps = TcpStream::connect(pool.addr()).unwrap();
+    let mut ls = TcpStream::connect(legacy.addr()).unwrap();
+    let mut pr = BufReader::new(ps.try_clone().unwrap());
+    let mut lr = BufReader::new(ls.try_clone().unwrap());
+    let mut legacy_replies = Vec::new();
+    for line in &lines {
+        ps.write_all(line.as_bytes()).unwrap();
+        ps.write_all(b"\n").unwrap();
+        ls.write_all(line.as_bytes()).unwrap();
+        ls.write_all(b"\n").unwrap();
+        let from_pool = read_line(&mut pr);
+        let from_legacy = read_line(&mut lr);
+        assert_eq!(from_pool, from_legacy, "divergent replies for {line}");
+        assert!(from_pool.ends_with('\n'), "unterminated reply for {line}");
+        legacy_replies.push(from_legacy);
+    }
+
+    // Pipelined: the whole corpus as one frame into the pool server must
+    // produce the same reply lines, in order.
+    let mut burst = Vec::new();
+    for line in &lines {
+        burst.extend_from_slice(line.as_bytes());
+        burst.push(b'\n');
+    }
+    let mut ps2 = TcpStream::connect(pool.addr()).unwrap();
+    ps2.write_all(&burst).unwrap();
+    let mut pr2 = BufReader::new(ps2);
+    for (i, want) in legacy_replies.iter().enumerate() {
+        let got = read_line(&mut pr2);
+        assert_eq!(&got, want, "pipelined reply {i} diverged ({})", lines[i]);
+    }
+}
+
+// --- 2. robustness past the legacy server ----------------------------------
+
+#[test]
+fn non_utf8_frame_gets_an_error_line_and_the_connection_survives() {
+    let pts = uniform_sphere(60, 8, 208);
+    let coord = Coordinator::new(pts, CoordinatorConfig::default()).unwrap();
+    let pool = serve(coord, "127.0.0.1:0").unwrap();
+    let mut stream = TcpStream::connect(pool.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    stream.write_all(b"{\"op\":\"ping\",\"x\":\"\xff\"}\n").unwrap();
+    let reply = read_line(&mut reader);
+    match Response::parse(&reply).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, "bad_request"),
+        other => panic!("{other:?}"),
+    }
+    // The same connection still answers.
+    stream.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    match Response::parse(&read_line(&mut reader)).unwrap() {
+        Response::Pong => {}
+        other => panic!("{other:?}"),
+    }
+}
+
+// --- 3. more clients than workers ------------------------------------------
+
+#[test]
+fn exact_answers_with_more_clients_than_workers() {
+    let pts = uniform_sphere(90, 8, 209);
+    let coord = Coordinator::new(pts.clone(), CoordinatorConfig::default()).unwrap();
+    let server = serve_with(coord, "127.0.0.1:0", ServeConfig { workers: 2 }).unwrap();
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for c in 0..6usize {
+        let pts = pts.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for qi in 0..8 {
+                let id = (c * 17 + qi) % 90;
+                let hits = client.knn(pts[id].as_slice().to_vec(), 1).unwrap();
+                assert_eq!(hits[0].id, id as u64);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+// --- 4. zero allocations, request line in to response line out -------------
+
+#[test]
+fn steady_state_wire_path_allocates_nothing() {
+    let store = uniform_sphere_store(2048, 32, 210);
+    let index = IndexKind::Vp.build(store.view(), BoundKind::Mult);
+    // Request lines as they arrive off the socket, pre-rendered through
+    // the legacy serializer (setup may allocate freely).
+    let lines: Vec<String> = (0..8usize)
+        .map(|i| {
+            let vector = store.vec(i * 251).as_slice().to_vec();
+            Request::Knn { vector, k: 10 }.to_json().to_string()
+        })
+        .collect();
+
+    let mut scratch = WireScratch::new();
+    let mut qvec = DenseVec::new(vec![0.0; 32]);
+    let mut ctx = QueryContext::new();
+    let mut hits: Vec<(u32, f64)> = Vec::new();
+    let mut resp = Response::Ok { hits: Vec::new(), sim_evals: 0 };
+    let mut out = String::new();
+
+    let mut run = || {
+        for line in &lines {
+            // Parse straight off the line bytes into connection scratch.
+            let op = parse_wire_streaming(line.as_bytes(), &mut scratch).unwrap();
+            let k = match op {
+                WireOp::Knn { k } => k,
+                other => panic!("{other:?}"),
+            };
+            // Query vector lands in the reused DenseVec, then the warmed
+            // QueryContext answers into the reused hit buffer.
+            qvec.refill(scratch.vector());
+            ctx.begin_query();
+            index.knn_into(&qvec, k, &mut ctx, &mut hits);
+            // Serialize through the tree-free writer into a reused buffer.
+            if let Response::Ok { hits: out_hits, sim_evals } = &mut resp {
+                out_hits.clear();
+                out_hits.extend(hits.iter().map(|&(id, score)| Hit { id: id as u64, score }));
+                *sim_evals = 0;
+            }
+            out.clear();
+            write_response(&resp, &mut out);
+            out.push('\n');
+            assert!(out.starts_with(r#"{"status":"ok""#), "{out}");
+        }
+    };
+
+    // Two warm rounds: scratch vector/unescape buffers, the DenseVec
+    // payload, context arenas, the hit and response buffers all reach
+    // steady-state capacity before the counting round.
+    run();
+    run();
+    let allocs = count_allocs(run);
+    assert_eq!(allocs, 0, "wire path allocated {allocs} times over 8 requests");
+}
