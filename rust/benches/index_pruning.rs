@@ -3,7 +3,18 @@
 //! Complements examples/pruning_study.rs (which sweeps more workloads) with
 //! timed end-to-end query benchmarks on a fixed serving-like corpus.
 //!
+//! Two sections:
+//!   1. index structures under the default Mult bound (Eq. 10/13);
+//!   2. the bound-family race: every `BoundKind` (including the Ptolemaic
+//!      pair bounds of ADR-009 and the Auto selector) over the same
+//!      prebuilt LAESA / m-tree / vp-tree, via per-request overrides, so
+//!      the structure is held fixed while only the bound varies.
+//!
+//! Emits `BENCH_bounds.json` with per-leg `mean_ns` and `pruned_fraction`
+//! so bound-tightness claims are tracked as a perf trajectory.
+//!
 //!     cargo bench --bench index_pruning
+//!     SIMETRA_BENCH_QUICK=1 cargo bench --bench index_pruning  # small
 
 use simetra::bounds::BoundKind;
 use simetra::data::{vmf_mixture, VmfSpec};
@@ -11,18 +22,20 @@ use simetra::index::{
     BallTree, CoverTree, Gnat, Laesa, LinearScan, MTree, QueryStats, SimilarityIndex, VpTree,
 };
 use simetra::metrics::DenseVec;
-use simetra::util::bench::{bench, black_box, report, BenchConfig};
+use simetra::query::{QueryContext, SearchRequest, SearchResponse};
+use simetra::util::bench::{bench, black_box, report, write_bench_json, BenchConfig};
+use simetra::util::Json;
 
-const N: usize = 30_000;
 const DIM: usize = 32;
 const K: usize = 10;
-const QUERY_ROT: usize = 64;
 
 fn bench_index(
     cfg: &BenchConfig,
+    rows: &mut Vec<Json>,
     name: &str,
     idx: &dyn SimilarityIndex<DenseVec>,
     queries: &[DenseVec],
+    n: usize,
 ) {
     // Wall clock per kNN query.
     let mut qi = 0usize;
@@ -36,58 +49,126 @@ fn bench_index(
     for q in queries {
         idx.knn(q, K, &mut stats);
     }
-    let pct = 100.0 * stats.sim_evals as f64 / (queries.len() * N) as f64;
+    let scored = stats.sim_evals as f64 / (queries.len() * n) as f64;
     report(&m);
-    println!("    -> {pct:.1}% of corpus exactly scored, {} subtrees pruned", stats.pruned);
+    println!(
+        "    -> {:.1}% of corpus exactly scored, {} subtrees pruned",
+        100.0 * scored,
+        stats.pruned
+    );
+    let mut row = match m.to_json() {
+        Json::Obj(fields) => fields,
+        _ => unreachable!("to_json returns an object"),
+    };
+    row.push(("leg".into(), Json::Str("structure".into())));
+    row.push(("pruned_fraction".into(), Json::Num(1.0 - scored)));
+    row.push(("n".into(), Json::Num(n as f64)));
+    row.push(("d".into(), Json::Num(DIM as f64)));
+    row.push(("k".into(), Json::Num(K as f64)));
+    rows.push(Json::Obj(row));
+}
+
+/// Race every bound family over one prebuilt index via per-request
+/// overrides: same tree/table, only the certified interval math varies.
+fn race_bounds(
+    cfg: &BenchConfig,
+    rows: &mut Vec<Json>,
+    leg: &str,
+    idx: &dyn SimilarityIndex<DenseVec>,
+    queries: &[DenseVec],
+    n: usize,
+) {
+    println!("\n== bound race on {leg} (fixed structure, request overrides) ==");
+    for bound in BoundKind::ALL {
+        let req = SearchRequest::knn(K).bound(bound).build();
+        let mut ctx = QueryContext::new();
+        let mut resp = SearchResponse::default();
+        let mut qi = 0usize;
+        let m = bench(cfg, &format!("{leg}/{}", bound.name()), 1, || {
+            qi = (qi + 1) % queries.len();
+            ctx.begin_query();
+            idx.search_into(&queries[qi], &req, &mut ctx, &mut resp);
+            black_box(resp.hits.len())
+        });
+        // Pruning power, measured separately (not timed).
+        let mut evals = 0u64;
+        let mut pruned = 0u64;
+        for q in queries {
+            ctx.begin_query();
+            idx.search_into(q, &req, &mut ctx, &mut resp);
+            evals += resp.stats.sim_evals;
+            pruned += resp.stats.pruned;
+        }
+        let scored = evals as f64 / (queries.len() * n) as f64;
+        report(&m);
+        println!(
+            "    -> {:.1}% of corpus exactly scored, {pruned} candidates/subtrees pruned",
+            100.0 * scored
+        );
+        let mut row = match m.to_json() {
+            Json::Obj(fields) => fields,
+            _ => unreachable!("to_json returns an object"),
+        };
+        row.push(("leg".into(), Json::Str(leg.into())));
+        row.push(("bound".into(), Json::Str(bound.name().into())));
+        row.push(("pruned_fraction".into(), Json::Num(1.0 - scored)));
+        row.push(("n".into(), Json::Num(n as f64)));
+        row.push(("d".into(), Json::Num(DIM as f64)));
+        row.push(("k".into(), Json::Num(K as f64)));
+        rows.push(Json::Obj(row));
+    }
 }
 
 fn main() {
     let cfg = BenchConfig::from_env();
-    println!("corpus: vMF n={N} d={DIM} clusters=50 kappa=80; k={K}\n");
+    let quick = std::env::var("SIMETRA_BENCH_QUICK").as_deref() == Ok("1");
+    let n: usize = if quick { 4_000 } else { 30_000 };
+    let query_rot: usize = if quick { 16 } else { 64 };
+    println!("corpus: vMF n={n} d={DIM} clusters=50 kappa=80; k={K}\n");
     let (pts, _) = vmf_mixture(&VmfSpec {
-        n: N,
+        n,
         dim: DIM,
         clusters: 50,
         kappa: 80.0,
         seed: 21,
     });
     let (qs, _) = vmf_mixture(&VmfSpec {
-        n: QUERY_ROT,
+        n: query_rot,
         dim: DIM,
         clusters: 50,
         kappa: 40.0,
         seed: 22,
     });
 
+    let mut rows: Vec<Json> = Vec::new();
+
     println!("== baseline ==");
     let lin = LinearScan::build(pts.clone());
-    bench_index(&cfg, "linear", &lin, &qs);
+    bench_index(&cfg, &mut rows, "linear", &lin, &qs, n);
 
     println!("\n== index structures (Mult bound, Eq. 10/13) ==");
     let vp = VpTree::build(pts.clone(), BoundKind::Mult, 7);
-    bench_index(&cfg, "vp-tree", &vp, &qs);
+    bench_index(&cfg, &mut rows, "vp-tree", &vp, &qs, n);
     let ball = BallTree::build(pts.clone(), BoundKind::Mult, 16);
-    bench_index(&cfg, "ball-tree", &ball, &qs);
+    bench_index(&cfg, &mut rows, "ball-tree", &ball, &qs, n);
     let mtree = MTree::build(pts.clone(), BoundKind::Mult, 12);
-    bench_index(&cfg, "m-tree", &mtree, &qs);
+    bench_index(&cfg, &mut rows, "m-tree", &mtree, &qs, n);
     let cover = CoverTree::build(pts.clone(), BoundKind::Mult);
-    bench_index(&cfg, "cover-tree", &cover, &qs);
+    bench_index(&cfg, &mut rows, "cover-tree", &cover, &qs, n);
     let laesa = Laesa::build(pts.clone(), BoundKind::Mult, 32);
-    bench_index(&cfg, "laesa-32", &laesa, &qs);
+    bench_index(&cfg, &mut rows, "laesa-32", &laesa, &qs, n);
     let gnat = Gnat::build(pts.clone(), BoundKind::Mult, 8);
-    bench_index(&cfg, "gnat", &gnat, &qs);
+    bench_index(&cfg, &mut rows, "gnat", &gnat, &qs, n);
 
-    println!("\n== bound ablation on the vp-tree (same tree shape) ==");
-    for bound in [
-        BoundKind::Mult,
-        BoundKind::ArccosFast,
-        BoundKind::Arccos,
-        BoundKind::Euclidean,
-        BoundKind::MultLb1,
-        BoundKind::MultLb2,
-        BoundKind::EuclLb,
-    ] {
-        let idx = VpTree::build(pts.clone(), bound, 7);
-        bench_index(&cfg, &format!("vp-tree/{}", bound.name()), &idx, &qs);
-    }
+    // The race legs: the pivot table is where the Ptolemaic pair bound has
+    // both references exact (ADR-009), the m-tree is where the parent
+    // route supplies the second reference for free, and the vp-tree is the
+    // two-sim degradation control (Ptolemaic == Mult there by design).
+    race_bounds(&cfg, &mut rows, "laesa-32", &laesa, &qs, n);
+    race_bounds(&cfg, &mut rows, "m-tree", &mtree, &qs, n);
+    race_bounds(&cfg, &mut rows, "vp-tree", &vp, &qs, n);
+
+    let path = std::path::Path::new("BENCH_bounds.json");
+    write_bench_json(path, "index_pruning", rows).expect("write BENCH_bounds.json");
+    println!("\nwrote {}", path.display());
 }

@@ -15,10 +15,17 @@
 //! paper evaluates (Table 1) plus the matching upper-bound forms, so the
 //! index layer can be instantiated with any of them and the benchmark
 //! harness can regenerate the paper's comparisons.
+//!
+//! Beyond the paper's triangle family, [`ptolemy`] ports the quadrilateral
+//! (Ptolemaic) inequality into similarity space the same way, [`pivot_table`]
+//! combines it across build-time pivot pairs, and [`BoundKind::Auto`] picks
+//! a family per (index, bound) from the live obs slack histograms (ADR-009).
 
 pub mod interval;
 pub mod lower;
 pub mod order;
+pub mod pivot_table;
+pub mod ptolemy;
 pub mod upper;
 
 pub use interval::SimInterval;
@@ -26,7 +33,9 @@ pub use lower::{
     fast_arccos, lb_arccos, lb_arccos_fast, lb_eucl_lb, lb_euclidean, lb_mult,
     lb_mult_lb1, lb_mult_lb2, lb_mult_variant,
 };
-pub use upper::{ub_arccos, ub_eucl_ub, ub_euclidean, ub_mult, ub_mult_ub1};
+pub use pivot_table::PivotPairs;
+pub use ptolemy::PairRefs;
+pub use upper::{ub_arccos, ub_arccos_fast, ub_eucl_ub, ub_euclidean, ub_mult, ub_mult_ub1};
 
 /// Which triangle-inequality pair an index uses for pruning.
 ///
@@ -52,11 +61,25 @@ pub enum BoundKind {
     MultLb1,
     /// Paper Eq. 12 (lower) + Eq. 13 relaxed the same way (upper).
     MultLb2,
+    /// Quadrilateral (Ptolemaic) family ([`ptolemy`]): indexes holding a
+    /// *pair* of reference points intersect the Ptolemy pair interval on
+    /// top of the triangle bounds. The plain two-sim forms below degrade to
+    /// Mult (Eqs. 10/13), so the family is never looser than Mult.
+    Ptolemaic,
+    /// Sqrt-free Ptolemaic relaxation; two-sim forms degrade to the
+    /// sqrt-free Eq. 11 pair, matching the family's cost profile.
+    PtolemaicFast,
+    /// Per-(index, bound) adaptive selection trained on the obs slack
+    /// histograms (ADR-009): resolved to a concrete family once per query
+    /// at the search frame (fixed Mult fallback while histograms are
+    /// cold), so it never reaches a traversal. Two-sim forms equal Mult.
+    Auto,
 }
 
 impl BoundKind {
-    /// All kinds, in the paper's Table 1 order (fast-arccos appended).
-    pub const ALL: [BoundKind; 7] = [
+    /// All kinds, in the paper's Table 1 order (fast-arccos appended),
+    /// followed by the quadrilateral family and the adaptive selector.
+    pub const ALL: [BoundKind; 10] = [
         BoundKind::Euclidean,
         BoundKind::EuclLb,
         BoundKind::Arccos,
@@ -64,22 +87,39 @@ impl BoundKind {
         BoundKind::Mult,
         BoundKind::MultLb1,
         BoundKind::MultLb2,
+        BoundKind::Ptolemaic,
+        BoundKind::PtolemaicFast,
+        BoundKind::Auto,
     ];
 
     /// Parse a bound name: the lowercase wire tokens ([`BoundKind::token`]),
     /// the Table-1 display names ([`BoundKind::name`], case-insensitive),
     /// and the CLI short aliases all round-trip.
+    ///
+    /// Allocation-free: this sits on the per-request wire path (ADR-004),
+    /// so matching is `eq_ignore_ascii_case` against a static alias table
+    /// instead of building a lowercased copy of the input.
     pub fn parse(s: &str) -> Option<BoundKind> {
-        Some(match s.to_lowercase().as_str() {
-            "euclidean" | "eucl" => BoundKind::Euclidean,
-            "eucl-lb" | "eucllb" => BoundKind::EuclLb,
-            "arccos" => BoundKind::Arccos,
-            "arccos-fast" | "fast" => BoundKind::ArccosFast,
-            "mult" => BoundKind::Mult,
-            "mult-lb1" | "lb1" => BoundKind::MultLb1,
-            "mult-lb2" | "lb2" => BoundKind::MultLb2,
-            _ => return None,
-        })
+        const ALIASES: &[(&str, BoundKind)] = &[
+            ("euclidean", BoundKind::Euclidean),
+            ("eucl", BoundKind::Euclidean),
+            ("eucl-lb", BoundKind::EuclLb),
+            ("eucllb", BoundKind::EuclLb),
+            ("arccos", BoundKind::Arccos),
+            ("arccos-fast", BoundKind::ArccosFast),
+            ("fast", BoundKind::ArccosFast),
+            ("mult", BoundKind::Mult),
+            ("mult-lb1", BoundKind::MultLb1),
+            ("lb1", BoundKind::MultLb1),
+            ("mult-lb2", BoundKind::MultLb2),
+            ("lb2", BoundKind::MultLb2),
+            ("ptolemaic", BoundKind::Ptolemaic),
+            ("ptol", BoundKind::Ptolemaic),
+            ("ptolemaic-fast", BoundKind::PtolemaicFast),
+            ("ptol-fast", BoundKind::PtolemaicFast),
+            ("auto", BoundKind::Auto),
+        ];
+        ALIASES.iter().find(|(alias, _)| s.eq_ignore_ascii_case(alias)).map(|&(_, k)| k)
     }
 
     /// Stable lowercase wire token (round-trips through
@@ -93,6 +133,9 @@ impl BoundKind {
             BoundKind::Mult => "mult",
             BoundKind::MultLb1 => "mult-lb1",
             BoundKind::MultLb2 => "mult-lb2",
+            BoundKind::Ptolemaic => "ptolemaic",
+            BoundKind::PtolemaicFast => "ptolemaic-fast",
+            BoundKind::Auto => "auto",
         }
     }
 
@@ -106,11 +149,15 @@ impl BoundKind {
             BoundKind::Mult => "Mult",
             BoundKind::MultLb1 => "Mult-LB1",
             BoundKind::MultLb2 => "Mult-LB2",
+            BoundKind::Ptolemaic => "Ptolemaic",
+            BoundKind::PtolemaicFast => "Ptolemaic-fast",
+            BoundKind::Auto => "Auto",
         }
     }
 
     /// Paper equation number of the lower bound ("9*" for the fast-math
-    /// variant of Eq. 9).
+    /// variant of Eq. 9; "P"/"P*" for the Ptolemaic pair, which is not in
+    /// the paper's table; "—" for the selector, which is not a formula).
     pub fn equation(self) -> &'static str {
         match self {
             BoundKind::Euclidean => "7",
@@ -120,10 +167,27 @@ impl BoundKind {
             BoundKind::Mult => "10",
             BoundKind::MultLb1 => "11",
             BoundKind::MultLb2 => "12",
+            BoundKind::Ptolemaic => "P",
+            BoundKind::PtolemaicFast => "P*",
+            BoundKind::Auto => "—",
         }
     }
 
+    /// True for the quadrilateral family: traversals that hold a second
+    /// reference point (LAESA pivot partners, M-tree parent routes)
+    /// additionally intersect [`ptolemy`] pair bounds for these kinds.
+    #[inline]
+    pub fn is_ptolemaic(self) -> bool {
+        matches!(self, BoundKind::Ptolemaic | BoundKind::PtolemaicFast)
+    }
+
     /// Lower bound on `sim(x, y)` from `s1 = sim(x, z)`, `s2 = sim(z, y)`.
+    ///
+    /// The Ptolemaic kinds need *two* reference points to improve on the
+    /// triangle family; with a single reference they fall back to the Mult
+    /// forms (exact: Eq. 10; fast: the sqrt-free Eq. 11), so they are valid
+    /// everywhere a `BoundKind` is accepted. `Auto` is resolved before
+    /// traversal; its own forms equal Mult as a safe identity.
     #[inline]
     pub fn lower(self, s1: f64, s2: f64) -> f64 {
         match self {
@@ -131,22 +195,24 @@ impl BoundKind {
             BoundKind::EuclLb => lb_eucl_lb(s1, s2),
             BoundKind::Arccos => lb_arccos(s1, s2),
             BoundKind::ArccosFast => lb_arccos_fast(s1, s2),
-            BoundKind::Mult => lb_mult(s1, s2),
-            BoundKind::MultLb1 => lb_mult_lb1(s1, s2),
+            BoundKind::Mult | BoundKind::Ptolemaic | BoundKind::Auto => lb_mult(s1, s2),
+            BoundKind::MultLb1 | BoundKind::PtolemaicFast => lb_mult_lb1(s1, s2),
             BoundKind::MultLb2 => lb_mult_lb2(s1, s2),
         }
     }
 
     /// Upper bound on `sim(x, y)` from `s1 = sim(x, z)`, `s2 = sim(z, y)`.
+    /// (Single-reference fallbacks for the Ptolemaic kinds mirror
+    /// [`BoundKind::lower`].)
     #[inline]
     pub fn upper(self, s1: f64, s2: f64) -> f64 {
         match self {
             BoundKind::Euclidean => ub_euclidean(s1, s2),
             BoundKind::EuclLb => ub_eucl_ub(s1, s2),
             BoundKind::Arccos => ub_arccos(s1, s2),
-            BoundKind::ArccosFast => ub_mult(s1, s2),
-            BoundKind::Mult => ub_mult(s1, s2),
-            BoundKind::MultLb1 => ub_mult_ub1(s1, s2),
+            BoundKind::ArccosFast => ub_arccos_fast(s1, s2),
+            BoundKind::Mult | BoundKind::Ptolemaic | BoundKind::Auto => ub_mult(s1, s2),
+            BoundKind::MultLb1 | BoundKind::PtolemaicFast => ub_mult_ub1(s1, s2),
             BoundKind::MultLb2 => ub_mult_ub1(s1, s2),
         }
     }
@@ -172,6 +238,9 @@ mod tests {
         assert_eq!(rows[4], ("Mult", "10"));
         assert_eq!(rows[5], ("Mult-LB1", "11"));
         assert_eq!(rows[6], ("Mult-LB2", "12"));
+        assert_eq!(rows[7], ("Ptolemaic", "P"));
+        assert_eq!(rows[8], ("Ptolemaic-fast", "P*"));
+        assert_eq!(rows[9], ("Auto", "—"));
     }
 
     #[test]
@@ -181,7 +250,34 @@ mod tests {
             assert_eq!(BoundKind::parse(kind.name()), Some(kind), "{}", kind.name());
         }
         assert_eq!(BoundKind::parse("lb1"), Some(BoundKind::MultLb1));
+        assert_eq!(BoundKind::parse("ptol"), Some(BoundKind::Ptolemaic));
+        assert_eq!(BoundKind::parse("PTOL-FAST"), Some(BoundKind::PtolemaicFast));
         assert_eq!(BoundKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ptolemaic_two_sim_forms_equal_their_fallbacks() {
+        // With one reference point the quadrilateral kinds must behave
+        // exactly like the triangle forms they degrade to — traversals that
+        // know no second reference rely on this identity.
+        for i in 0..=40 {
+            for j in 0..=40 {
+                let s1 = -1.0 + i as f64 / 20.0;
+                let s2 = -1.0 + j as f64 / 20.0;
+                assert_eq!(BoundKind::Ptolemaic.lower(s1, s2), BoundKind::Mult.lower(s1, s2));
+                assert_eq!(BoundKind::Ptolemaic.upper(s1, s2), BoundKind::Mult.upper(s1, s2));
+                assert_eq!(BoundKind::Auto.lower(s1, s2), BoundKind::Mult.lower(s1, s2));
+                assert_eq!(BoundKind::Auto.upper(s1, s2), BoundKind::Mult.upper(s1, s2));
+                assert_eq!(
+                    BoundKind::PtolemaicFast.lower(s1, s2),
+                    BoundKind::MultLb1.lower(s1, s2)
+                );
+                assert_eq!(
+                    BoundKind::PtolemaicFast.upper(s1, s2),
+                    BoundKind::MultLb1.upper(s1, s2)
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Multi-pivot combination bounds: Ptolemaic refinement over a pivot table.
+//!
+//! A pivot table (LAESA) already certifies `sim(q, c)` by intersecting the
+//! per-pivot triangle intervals. With [`super::ptolemy`] every *pair* of
+//! pivots certifies a second, quadrilateral interval from the same stored
+//! similarities — no extra exact evaluations, just arithmetic. Evaluating
+//! all `m^2` pairs per candidate would break LAESA's O(m) filter cost, so
+//! each pivot is assigned one build-time *partner*: the pivot it is least
+//! similar to. That maximizes the pair chord `1 - sim(u, v)` — the
+//! denominator of every Ptolemaic form — which is where the quadrilateral
+//! bound is tightest (and the inequality degenerates as partners coincide).
+//! The combination bound is then the intersection of the per-pivot triangle
+//! intervals and the `m` partner-pair intervals: still O(m) per candidate,
+//! and never looser than the triangle-only intersection by construction.
+//!
+//! The survey taxonomy (Chen et al., "Indexing Metric Spaces") calls this a
+//! hybrid pivot-combination scheme; Hetland's Ptolemaic LAESA uses the full
+//! pair matrix. The partner scheme keeps the candidate phase linear in the
+//! number of pivots, which is what the batched traversal relies on.
+
+use super::ptolemy::PairRefs;
+use super::SimInterval;
+
+/// Build-time pivot pairing for Ptolemaic refinement.
+///
+/// `partner[p]` is the index (into the same pivot list) of the pivot least
+/// similar to pivot `p`; `pair_sim[p]` caches `sim(pivot[p],
+/// pivot[partner[p]])`. With fewer than two pivots the table is empty and
+/// refinement is a no-op.
+#[derive(Debug, Clone, Default)]
+pub struct PivotPairs {
+    partner: Vec<u32>,
+    pair_sim: Vec<f64>,
+}
+
+impl PivotPairs {
+    /// Pair each of `m` pivots with its least-similar peer. `sim(a, b)`
+    /// reports the similarity between pivots `a` and `b` (only called for
+    /// `a != b`, `O(m^2)` total — build-time only).
+    pub fn build(m: usize, mut sim: impl FnMut(usize, usize) -> f64) -> Self {
+        if m < 2 {
+            return PivotPairs::default();
+        }
+        let mut partner = Vec::with_capacity(m);
+        let mut pair_sim = Vec::with_capacity(m);
+        for p in 0..m {
+            let mut best = usize::MAX;
+            let mut best_sim = f64::INFINITY;
+            for q in 0..m {
+                if q == p {
+                    continue;
+                }
+                let s = sim(p, q);
+                // Deterministic tie-break on index keeps builds reproducible
+                // across corpora that store the same vectors.
+                if s < best_sim || (s == best_sim && q < best) {
+                    best = q;
+                    best_sim = s;
+                }
+            }
+            partner.push(best as u32);
+            pair_sim.push(best_sim);
+        }
+        PivotPairs { partner, pair_sim }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.partner.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.partner.is_empty()
+    }
+
+    /// The partner pivot index for pivot `p`.
+    #[inline]
+    pub fn partner(&self, p: usize) -> usize {
+        self.partner[p] as usize
+    }
+
+    /// Cached `sim(pivot[p], pivot[partner(p)])`.
+    #[inline]
+    pub fn pair_sim(&self, p: usize) -> f64 {
+        self.pair_sim[p]
+    }
+
+    /// Intersect the `m` partner-pair Ptolemaic intervals into `iv`.
+    ///
+    /// `q_piv[p]` holds `sim(q, pivot[p])` (already computed once per
+    /// query); `cand(p)` reads the candidate's stored `sim(c, pivot[p])`
+    /// from the table. `fast` selects the sqrt-free variant. Returns as
+    /// soon as the intersection is empty — the candidate is certified out.
+    #[inline]
+    pub fn refine(
+        &self,
+        mut iv: SimInterval,
+        fast: bool,
+        q_piv: &[f64],
+        cand: impl Fn(usize) -> f64,
+    ) -> SimInterval {
+        for p in 0..self.partner.len() {
+            let o = self.partner[p] as usize;
+            let refs = PairRefs::new(q_piv[p], q_piv[o], self.pair_sim[p]);
+            let (s_yu, s_yv) = (cand(p), cand(o));
+            let pair = if fast {
+                refs.interval_fast(s_yu, s_yv)
+            } else {
+                refs.interval(s_yu, s_yv)
+            };
+            iv = iv.intersect(&pair);
+            if iv.is_empty() {
+                break;
+            }
+        }
+        iv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::BoundKind;
+    use crate::data::uniform_sphere;
+
+    #[test]
+    fn partners_are_least_similar_and_never_self() {
+        let pts = uniform_sphere(8, 6, 77);
+        let pairs = PivotPairs::build(8, |a, b| pts[a].dot(&pts[b]));
+        assert_eq!(pairs.len(), 8);
+        for p in 0..8 {
+            let o = pairs.partner(p);
+            assert_ne!(o, p);
+            for q in 0..8 {
+                if q != p {
+                    assert!(pts[p].dot(&pts[q]) >= pairs.pair_sim(p) - 1e-12);
+                }
+            }
+            assert!((pts[p].dot(&pts[o]) - pairs.pair_sim(p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn under_two_pivots_is_inert() {
+        let pairs = PivotPairs::build(1, |_, _| unreachable!());
+        assert!(pairs.is_empty());
+        let iv = pairs.refine(SimInterval::new(-0.5, 0.5), false, &[0.1], |_| 0.2);
+        assert_eq!((iv.lo, iv.hi), (-0.5, 0.5));
+    }
+
+    /// The combined interval stays valid and is never looser than the
+    /// Mult-only intersection it refines (S4 tightness obligation: the
+    /// Ptolemaic family is the triangle intersection *plus* constraints).
+    #[test]
+    fn refined_interval_contains_truth_and_tightens_mult() {
+        let m = 6;
+        let pts = uniform_sphere(200 + m, 8, 78);
+        let (pivots, items) = pts.split_at(m);
+        let pairs = PivotPairs::build(m, |a, b| pivots[a].dot(&pivots[b]));
+        let q = &items[0];
+        let q_piv: Vec<f64> = (0..m).map(|p| q.dot(&pivots[p])).collect();
+        for c in items.iter().skip(1) {
+            let truth = q.dot(c);
+            let mut mult = SimInterval::full();
+            for p in 0..m {
+                mult = mult.intersect(&BoundKind::Mult.interval(q_piv[p], c.dot(&pivots[p])));
+            }
+            for fast in [false, true] {
+                let iv = pairs.refine(mult, fast, &q_piv, |p| c.dot(&pivots[p]));
+                // f32-normalized corpus vectors leave ~1e-6 of chord slack
+                // (the f64 derivation itself is pinned in bounds::ptolemy).
+                assert!(
+                    iv.lo <= truth + 1e-6 && truth <= iv.hi + 1e-6,
+                    "fast={fast}: sim={truth} outside {iv:?}"
+                );
+                assert!(iv.lo >= mult.lo - 1e-12 && iv.hi <= mult.hi + 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,340 @@
+//! Ptolemaic (quadrilateral) bounds for cosine similarity.
+//!
+//! The paper ports the *triangle* inequality into similarity space through
+//! the chord distance `d(a, b) = sqrt(2 - 2 sim(a, b))`, which is the
+//! Euclidean distance between unit vectors. The same embedding buys more:
+//! Euclidean spaces are *Ptolemaic*, i.e. for any four points
+//!
+//! ```text
+//! d(x,y) * d(u,v) <= d(x,u) * d(y,v) + d(x,v) * d(y,u)
+//! ```
+//!
+//! (products of opposite sides of the quadrilateral `x u y v`; Hetland,
+//! "Ptolemaic Indexing"). Solving for `d(x,y)` with *two* reference points
+//! `u, v` certifies an interval on `sim(x, y)` that is often strictly
+//! tighter than intersecting the two per-pivot triangle (Mult) intervals —
+//! extra pruning for free wherever two pivot similarities are already known
+//! (LAESA's pivot table, an M-tree child route + its parent route).
+//!
+//! Substituting chords and writing `A^2 = (1 - s_xu)(1 - s_yv)`,
+//! `B^2 = (1 - s_xv)(1 - s_yu)`, `C = 1 - s_uv` gives the sin-form pair
+//! (mirroring the paper's Mult derivation, one shared square root):
+//!
+//! ```text
+//! sim(x,y) >= 1 - (A^2 + B^2 + 2*sqrt(A^2*B^2)) / C      (= 1 - (A+B)^2/C)
+//! sim(x,y) <= 1 - (A^2 + B^2 - 2*sqrt(A^2*B^2)) / C      (= 1 - (A-B)^2/C)
+//! ```
+//!
+//! The lower bound is the direct Ptolemy inequality; the upper bound is the
+//! permuted form `d(x,y) d(u,v) >= |d(x,u) d(y,v) - d(x,v) d(y,u)|`
+//! (Ptolemy applied to the other two side pairings). Both are valid for
+//! any four points of a Ptolemaic space, hence for any four unit vectors.
+//!
+//! The *fast* variant drops the remaining square root using
+//! `(A + B)^2 <= 2 (A^2 + B^2)` and
+//! `(A - B)^2 >= (A^2 - B^2)^2 / (2 (A^2 + B^2))`, trading tightness for a
+//! fully polynomial evaluation — the same cost/tightness trade Table 1
+//! makes for the triangle family.
+//!
+//! Degenerate pivots (`s_uv -> 1`, chord `C -> 0`) certify nothing: every
+//! form returns the trivial interval instead of dividing by zero.
+
+use super::SimInterval;
+
+/// Below this pivot-pair chord (`1 - s_uv`) the quadrilateral collapses
+/// and the bounds certify nothing; callers get the trivial interval.
+const MIN_PAIR_CHORD: f64 = 1e-9;
+
+/// Known similarities of query `x` and the pivot pair `(u, v)`.
+///
+/// These are the quantities available *before* a candidate is scored:
+/// LAESA computes the query row against all pivots once per query, and the
+/// pivot-pair similarity is a build-time constant.
+#[derive(Debug, Clone, Copy)]
+pub struct PairRefs {
+    /// `sim(x, u)` — query to first pivot.
+    pub s_xu: f64,
+    /// `sim(x, v)` — query to second pivot.
+    pub s_xv: f64,
+    /// `sim(u, v)` — pivot to pivot (build-time constant).
+    pub s_uv: f64,
+}
+
+impl PairRefs {
+    #[inline]
+    pub fn new(s_xu: f64, s_xv: f64, s_uv: f64) -> Self {
+        PairRefs { s_xu, s_xv, s_uv }
+    }
+
+    /// `1 - s_uv`, the squared pivot-pair chord over 2.
+    #[inline]
+    fn c(&self) -> f64 {
+        (1.0 - self.s_uv).max(0.0)
+    }
+
+    /// Squared cross terms `A^2 = (1-s_xu)(1-s_yv)`, `B^2 = (1-s_xv)(1-s_yu)`
+    /// for a candidate `y` with known pivot similarities.
+    #[inline]
+    fn cross_sq(&self, s_yu: f64, s_yv: f64) -> (f64, f64) {
+        let a2 = (1.0 - self.s_xu).max(0.0) * (1.0 - s_yv).max(0.0);
+        let b2 = (1.0 - self.s_xv).max(0.0) * (1.0 - s_yu).max(0.0);
+        (a2, b2)
+    }
+
+    /// Certified Ptolemaic interval on `sim(x, y)` given the candidate's
+    /// similarities `s_yu = sim(y, u)`, `s_yv = sim(y, v)`. One square root.
+    #[inline]
+    pub fn interval(&self, s_yu: f64, s_yv: f64) -> SimInterval {
+        let c = self.c();
+        if c < MIN_PAIR_CHORD {
+            return SimInterval::full();
+        }
+        let (a2, b2) = self.cross_sq(s_yu, s_yv);
+        let r2 = 2.0 * (a2 * b2).sqrt();
+        let sum = a2 + b2;
+        SimInterval::new(1.0 - (sum + r2) / c, 1.0 - (sum - r2) / c)
+    }
+
+    /// Sqrt-free relaxation of [`PairRefs::interval`]: the lower bound uses
+    /// `(A+B)^2 <= 2(A^2+B^2)`, the upper `(A-B)^2 >= (A^2-B^2)^2 /
+    /// (2(A^2+B^2))`. Strictly contains the exact interval.
+    #[inline]
+    pub fn interval_fast(&self, s_yu: f64, s_yv: f64) -> SimInterval {
+        let c = self.c();
+        if c < MIN_PAIR_CHORD {
+            return SimInterval::full();
+        }
+        let (a2, b2) = self.cross_sq(s_yu, s_yv);
+        let sum = a2 + b2;
+        let lo = 1.0 - 2.0 * sum / c;
+        let hi = if sum > 0.0 {
+            let diff = a2 - b2;
+            1.0 - diff * diff / (2.0 * sum * c)
+        } else {
+            1.0 // x = u = v (or antipodal pivots hit by both): nothing known.
+        };
+        SimInterval::new(lo, hi)
+    }
+
+    /// Upper bound over a whole subtree: every `y` below the routing pair
+    /// has `sim(y, u)` in `cover_u` and `sim(y, v)` in `cover_v`; the bound
+    /// must dominate the per-point upper for every such `y`.
+    ///
+    /// `A^2` and `B^2` are monotone (decreasing) images of `s_yv` / `s_yu`,
+    /// so they range over boxes; `max_y ub = 1 - min (A-B)^2 / C`, and the
+    /// minimum of `(A-B)^2` over an axis box is 0 when the `A`- and
+    /// `B`-ranges overlap (tested on the squared endpoints — sqrt is
+    /// monotone) or the squared gap between the nearest endpoints otherwise.
+    #[inline]
+    pub fn upper_over(&self, cover_u: SimInterval, cover_v: SimInterval) -> f64 {
+        let c = self.c();
+        if c < MIN_PAIR_CHORD {
+            return 1.0;
+        }
+        let (a2_lo, a2_hi, b2_lo, b2_hi) = self.cross_sq_boxes(cover_u, cover_v);
+        if a2_lo <= b2_hi && b2_lo <= a2_hi {
+            return 1.0; // A = B reachable: the quadrilateral can degenerate.
+        }
+        // Disjoint ranges: nearest endpoints carry the minimum gap.
+        let (near_hi, near_lo) = if a2_lo > b2_hi { (a2_lo, b2_hi) } else { (b2_lo, a2_hi) };
+        let gap_sq = near_hi + near_lo - 2.0 * (near_hi * near_lo).sqrt();
+        (1.0 - gap_sq / c).min(1.0)
+    }
+
+    /// Lower bound over a whole subtree (see [`PairRefs::upper_over`]):
+    /// `min_y lb = 1 - max (A+B)^2 / C`, maximized at both box tops.
+    #[inline]
+    pub fn lower_over(&self, cover_u: SimInterval, cover_v: SimInterval) -> f64 {
+        let c = self.c();
+        if c < MIN_PAIR_CHORD {
+            return -1.0;
+        }
+        let (_, a2_hi, _, b2_hi) = self.cross_sq_boxes(cover_u, cover_v);
+        let peak = a2_hi + b2_hi + 2.0 * (a2_hi * b2_hi).sqrt();
+        (1.0 - peak / c).max(-1.0)
+    }
+
+    /// Sqrt-free subtree upper bound: minimum of the fast per-point upper
+    /// over the box, via `min (A^2-B^2)^2` and `max (A^2+B^2)`.
+    #[inline]
+    pub fn upper_over_fast(&self, cover_u: SimInterval, cover_v: SimInterval) -> f64 {
+        let c = self.c();
+        if c < MIN_PAIR_CHORD {
+            return 1.0;
+        }
+        let (a2_lo, a2_hi, b2_lo, b2_hi) = self.cross_sq_boxes(cover_u, cover_v);
+        let sum_hi = a2_hi + b2_hi;
+        if sum_hi <= 0.0 || (a2_lo <= b2_hi && b2_lo <= a2_hi) {
+            return 1.0;
+        }
+        let min_diff = if a2_lo > b2_hi { a2_lo - b2_hi } else { b2_lo - a2_hi };
+        (1.0 - min_diff * min_diff / (2.0 * sum_hi * c)).min(1.0)
+    }
+
+    /// Squared cross-term ranges over a subtree box: `1 - s` is decreasing,
+    /// so the `hi` cover endpoint maps to the `lo` squared cross term.
+    #[inline]
+    fn cross_sq_boxes(
+        &self,
+        cover_u: SimInterval,
+        cover_v: SimInterval,
+    ) -> (f64, f64, f64, f64) {
+        let xu = (1.0 - self.s_xu).max(0.0);
+        let xv = (1.0 - self.s_xv).max(0.0);
+        let a2_lo = xu * (1.0 - cover_v.hi).max(0.0);
+        let a2_hi = xu * (1.0 - cover_v.lo).max(0.0);
+        let b2_lo = xv * (1.0 - cover_u.hi).max(0.0);
+        let b2_hi = xv * (1.0 - cover_u.lo).max(0.0);
+        (a2_lo, a2_hi, b2_lo, b2_hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift sampler. The quadruples are drawn as *f64*
+    /// unit vectors (not f32 `DenseVec`s): on low dimensions every
+    /// quadruple is near-concyclic, Ptolemy approaches equality, and f32
+    /// normalization error amplified by a small pivot chord would swamp a
+    /// tight tolerance — the property under test is the derivation, not
+    /// the storage precision.
+    struct Rng(u64);
+    impl Rng {
+        fn next_f64(&mut self) -> f64 {
+            self.0 ^= self.0 << 13;
+            self.0 ^= self.0 >> 7;
+            self.0 ^= self.0 << 17;
+            (self.0 >> 11) as f64 / (1u64 << 53) as f64
+        }
+
+        /// Standard normal via Box-Muller.
+        fn next_gauss(&mut self) -> f64 {
+            let u1 = self.next_f64().max(1e-12);
+            let u2 = self.next_f64();
+            (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+        }
+
+        fn unit(&mut self, dim: usize) -> Vec<f64> {
+            let mut v: Vec<f64> = (0..dim).map(|_| self.next_gauss()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+            v.iter_mut().for_each(|x| *x /= norm);
+            v
+        }
+    }
+
+    fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum::<f64>().clamp(-1.0, 1.0)
+    }
+
+    fn quad_sims(dim: usize, seed: u64, n: usize) -> Vec<[f64; 6]> {
+        // Draw unit-sphere quadruples (x, y, u, v) and record all six sims.
+        let mut rng = Rng(seed);
+        (0..n)
+            .map(|_| {
+                let (x, y, u, v) =
+                    (rng.unit(dim), rng.unit(dim), rng.unit(dim), rng.unit(dim));
+                [
+                    dot(&x, &y),
+                    dot(&x, &u),
+                    dot(&x, &v),
+                    dot(&y, &u),
+                    dot(&y, &v),
+                    dot(&u, &v),
+                ]
+            })
+            .collect()
+    }
+
+    /// S4 property sweep: `lower <= sim(x,y) <= upper` for both variants on
+    /// >= 10^4 random unit-sphere quadruples, across dimensions where the
+    /// quadrilateral is near-degenerate (d=2: concyclic, Ptolemy equality)
+    /// and generic (d=16).
+    #[test]
+    fn random_quadruples_respect_interval() {
+        let mut cases = 0usize;
+        for (dim, seed) in [(2, 41u64), (3, 42), (8, 43), (16, 44)] {
+            for [sxy, sxu, sxv, syu, syv, suv] in quad_sims(dim, seed, 3000) {
+                let refs = PairRefs::new(sxu, sxv, suv);
+                let iv = refs.interval(syu, syv);
+                assert!(
+                    iv.lo <= sxy + 1e-7 && sxy <= iv.hi + 1e-7,
+                    "exact: sim={sxy} outside [{}, {}] (d={dim})",
+                    iv.lo,
+                    iv.hi
+                );
+                let ivf = refs.interval_fast(syu, syv);
+                assert!(
+                    ivf.lo <= sxy + 1e-7 && sxy <= ivf.hi + 1e-7,
+                    "fast: sim={sxy} outside [{}, {}] (d={dim})",
+                    ivf.lo,
+                    ivf.hi
+                );
+                // The fast interval is a relaxation of the exact one.
+                assert!(ivf.lo <= iv.lo + 1e-9 && ivf.hi >= iv.hi - 1e-9);
+                cases += 1;
+            }
+        }
+        assert!(cases >= 10_000);
+    }
+
+    #[test]
+    fn degenerate_pivot_pair_is_trivial() {
+        let refs = PairRefs::new(0.3, 0.3, 1.0);
+        let iv = refs.interval(0.5, 0.5);
+        assert_eq!((iv.lo, iv.hi), (-1.0, 1.0));
+        let ivf = refs.interval_fast(0.5, 0.5);
+        assert_eq!((ivf.lo, ivf.hi), (-1.0, 1.0));
+        assert_eq!(refs.upper_over(SimInterval::full(), SimInterval::full()), 1.0);
+        assert_eq!(refs.lower_over(SimInterval::full(), SimInterval::full()), -1.0);
+    }
+
+    #[test]
+    fn coincident_query_and_pivot_pins_value() {
+        // x = u: A^2 = 0, so the interval collapses onto sim(y, v)-driven
+        // bounds; with y = v too it must pin sim(x,y) = s_uv ... = s_xv.
+        let refs = PairRefs::new(1.0, 0.2, 0.2);
+        let iv = refs.interval(0.2, 1.0);
+        assert!(iv.lo <= 0.2 + 1e-12 && 0.2 <= iv.hi + 1e-12);
+        assert!(iv.hi - iv.lo < 1e-9, "exact quadrilateral must pin: {iv:?}");
+    }
+
+    /// Over-box forms dominate the per-point forms for every (s_yu, s_yv)
+    /// inside the covers — the subtree-pruning soundness obligation.
+    #[test]
+    fn over_box_dominates_pointwise() {
+        let mut rng = Rng(0x9e3779b97f4a7c15);
+        for _ in 0..2000 {
+            let r = |rng: &mut Rng| 2.0 * rng.next_f64() - 1.0;
+            let refs = PairRefs::new(r(&mut rng), r(&mut rng), r(&mut rng) * 0.999);
+            let (a, b) = (r(&mut rng), r(&mut rng));
+            let cover_u = SimInterval::new(a.min(b), a.max(b));
+            let (a, b) = (r(&mut rng), r(&mut rng));
+            let cover_v = SimInterval::new(a.min(b), a.max(b));
+            let ub = refs.upper_over(cover_u, cover_v);
+            let ubf = refs.upper_over_fast(cover_u, cover_v);
+            let lb = refs.lower_over(cover_u, cover_v);
+            for i in 0..=8 {
+                for j in 0..=8 {
+                    let syu = cover_u.lo + (cover_u.hi - cover_u.lo) * i as f64 / 8.0;
+                    let syv = cover_v.lo + (cover_v.hi - cover_v.lo) * j as f64 / 8.0;
+                    let iv = refs.interval(syu, syv);
+                    assert!(ub >= iv.hi - 1e-9, "ub_over {ub} < point {}", iv.hi);
+                    assert!(lb <= iv.lo + 1e-9, "lb_over {lb} > point {}", iv.lo);
+                    let ivf = refs.interval_fast(syu, syv);
+                    assert!(ubf >= ivf.hi - 1e-9, "fast ub_over {ubf} < point {}", ivf.hi);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn point_covers_reduce_to_pointwise() {
+        let refs = PairRefs::new(0.4, -0.2, 0.1);
+        let (syu, syv) = (0.3, -0.5);
+        let iv = refs.interval(syu, syv);
+        let ub = refs.upper_over(SimInterval::point(syu), SimInterval::point(syv));
+        let lb = refs.lower_over(SimInterval::point(syu), SimInterval::point(syv));
+        assert!((ub - iv.hi).abs() < 1e-12 && (lb - iv.lo).abs() < 1e-12);
+    }
+}

@@ -18,6 +18,22 @@ pub fn ub_arccos(s1: f64, s2: f64) -> f64 {
     (s1.clamp(-1.0, 1.0).acos() - s2.clamp(-1.0, 1.0).acos()).cos()
 }
 
+/// Eq. 13 evaluated with [`crate::bounds::fast_arccos`] — the upper-side
+/// counterpart of [`crate::bounds::lb_arccos_fast`], so the ArccosFast kind
+/// is fast-math in *both* pruning directions instead of silently borrowing
+/// the exact [`ub_mult`].
+///
+/// Validity mirrors the lower form: the polynomial errs by at most
+/// ~1.27e-4 rad per call and `cos` is 1-Lipschitz, so adding the summed
+/// worst-case angle error keeps this an over-estimate of
+/// `cos(arccos s1 - arccos s2)` on both monotone branches.
+#[inline(always)]
+pub fn ub_arccos_fast(s1: f64, s2: f64) -> f64 {
+    use crate::bounds::lower::fast_arccos;
+    const ERR: f64 = 2.6e-4; // 2 * max poly error (1.27e-4 rad each)
+    (fast_arccos(s1.clamp(-1.0, 1.0)) - fast_arccos(s2.clamp(-1.0, 1.0))).cos() + ERR
+}
+
 /// Upper bound via the Euclidean metric on the sphere: from
 /// `d(x,y) >= |d(x,z) - d(z,y)|` with `d = sqrt(2 - 2 sim)`,
 /// `sim(x,y) <= s1 + s2 - 1 + 2 sqrt((1-s1)(1-s2))` — the mirror of Eq. 7.
@@ -66,6 +82,21 @@ mod tests {
                 assert!(ub_euclidean(s1, s2) >= tight - 1e-12);
                 assert!(ub_eucl_ub(s1, s2) >= ub_euclidean(s1, s2) - 1e-12);
                 assert!(ub_mult_ub1(s1, s2) >= tight - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fast_arccos_upper_is_conservative_and_close() {
+        // ub_arccos_fast must dominate the true tight upper bound (it is a
+        // pruning upper bound) while staying within the documented error
+        // budget of it — fast-math, not a different bound.
+        for &s1 in &grid() {
+            for &s2 in &grid() {
+                let tight = ub_mult(s1, s2);
+                let fast = ub_arccos_fast(s1, s2);
+                assert!(fast >= tight - 1e-12, "fast {fast} < tight {tight} at ({s1}, {s2})");
+                assert!(fast <= tight + 6e-4, "fast {fast} too loose at ({s1}, {s2})");
             }
         }
     }

@@ -253,7 +253,7 @@ impl<C: Corpus> BallTree<C> {
                 let s = self.corpus.sim_q(&queries[j], root.center);
                 super::batch_offer(bc, resps, j, root.center, s);
                 let ub_j = match root.cover {
-                    Some(cover) => self.bound.upper_over(s, cover),
+                    Some(cover) => bc.bound.upper_over(s, cover),
                     None => -1.0,
                 };
                 if bc.slot_alive(j, ub_j) {
@@ -290,7 +290,7 @@ impl<C: Corpus> BallTree<C> {
                     let sc = self.corpus.sim_q(&queries[j], child.center);
                     super::batch_offer(bc, resps, j, child.center, sc);
                     let ub_j = match child.cover {
-                        Some(cover) => self.bound.upper_over(sc, cover),
+                        Some(cover) => bc.bound.upper_over(sc, cover),
                         None => -1.0,
                     };
                     if bc.slot_alive(j, ub_j) {
@@ -326,6 +326,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_BALL,
             |plan, ctx, out| {
                 if let Some(root) = &self.root {
                     let s = self.corpus.sim_q(q, root.center);
@@ -350,6 +351,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for BallTree<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_BALL,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );

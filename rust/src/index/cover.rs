@@ -234,7 +234,7 @@ impl<C: Corpus> CoverTree<C> {
                 let s = self.corpus.sim_q(&queries[j], root.id);
                 super::batch_offer(bc, resps, j, root.id, s);
                 let ub = match root.cover {
-                    Some(cover) => self.bound.upper_over(s, cover),
+                    Some(cover) => bc.bound.upper_over(s, cover),
                     None => -1.0,
                 };
                 if bc.slot_alive(j, ub) {
@@ -267,7 +267,7 @@ impl<C: Corpus> CoverTree<C> {
                     let sc = self.corpus.sim_q(&queries[j], child.id);
                     super::batch_offer(bc, resps, j, child.id, sc);
                     let ub_j = match child.cover {
-                        Some(cover) => self.bound.upper_over(sc, cover),
+                        Some(cover) => bc.bound.upper_over(sc, cover),
                         None => -1.0,
                     };
                     if bc.slot_alive(j, ub_j) {
@@ -303,6 +303,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_COVER,
             |plan, ctx, out| {
                 if let Some(root) = &self.root {
                     let s = self.corpus.sim_q(q, root.id);
@@ -327,6 +328,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for CoverTree<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_COVER,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );

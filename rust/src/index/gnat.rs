@@ -274,7 +274,7 @@ impl<C: Corpus> Gnat<C> {
                 mm &= mm - 1;
                 let ub = (0..m)
                     .map(|i| {
-                        self.bound.upper_over(split_sims[j * m + i], node.ranges[i * m + c])
+                        bc.bound.upper_over(split_sims[j * m + i], node.ranges[i * m + c])
                     })
                     .fold(f64::INFINITY, f64::min);
                 ubs[c * nslots + j] = ub;
@@ -335,6 +335,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_GNAT,
             |plan, ctx, out| {
                 if let Some(root) = &self.root {
                     self.range_rec(root, q, plan, out, ctx);
@@ -365,6 +366,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Gnat<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_GNAT,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );

@@ -12,7 +12,7 @@
 //! XLA side. Table construction streams each pivot row through the
 //! corpus's batch kernel ([`Corpus::sims_of_item`]).
 
-use crate::bounds::{BoundKind, SimInterval};
+use crate::bounds::{BoundKind, PivotPairs, SimInterval};
 use crate::query::{BatchContext, QueryContext, SearchRequest, SearchResponse};
 use crate::storage::KernelScratch;
 
@@ -33,6 +33,9 @@ pub struct Laesa<C: Corpus> {
     pivots_sorted: Vec<u32>,
     /// `table[p * n + i]` = sim(pivots[p], items[i]).
     table: Vec<f64>,
+    /// Pivot-pair partners for the Ptolemaic refinement (ADR-009). Built
+    /// from the table itself — no extra similarity evaluations.
+    pairs: PivotPairs,
     bound: BoundKind,
 }
 
@@ -69,7 +72,10 @@ impl<C: Corpus> Laesa<C> {
         }
         let mut pivots_sorted = pivots.clone();
         pivots_sorted.sort_unstable();
-        Laesa { corpus, pivots, pivots_sorted, table, bound }
+        // Pivot-pivot similarities are already in the table (rows span the
+        // whole corpus, pivots included), so pairing costs no extra evals.
+        let pairs = PivotPairs::build(pivots.len(), |a, b| table[a * n + pivots[b] as usize]);
+        Laesa { corpus, pivots, pivots_sorted, table, pairs, bound }
     }
 
     pub fn n_pivots(&self) -> usize {
@@ -103,8 +109,15 @@ impl<C: Corpus> Laesa<C> {
             let sp = self.table[p * n + i];
             iv = iv.intersect(&bound.interval(sq, sp));
             if iv.is_empty() {
-                break;
+                return iv;
             }
+        }
+        // Ptolemaic kinds: the per-pivot base interval above already equals
+        // the Mult/MultLb1 intersection (the two-sim degradation), so the
+        // pair refinement can only tighten — never-looser by construction.
+        if bound.is_ptolemaic() && !self.pairs.is_empty() {
+            let fast = bound == BoundKind::PtolemaicFast;
+            iv = self.pairs.refine(iv, fast, q_piv, |p| self.table[p * n + i]);
         }
         iv
     }
@@ -171,7 +184,7 @@ impl<C: Corpus> Laesa<C> {
                 let tau = bc.slots[j].tau;
                 ids.clear();
                 for i in 0..n {
-                    let iv = self.interval_with(self.bound, piv, i);
+                    let iv = self.interval_with(bc.bound, piv, i);
                     if iv.hi < tau || iv.is_empty() {
                         bc.stats[j].pruned += 1;
                     } else {
@@ -192,7 +205,7 @@ impl<C: Corpus> Laesa<C> {
                 // path, so batch results match it bitwise.
                 cands.clear();
                 cands.extend(
-                    (0..n).map(|i| (i as u32, self.interval_with(self.bound, piv, i).hi)),
+                    (0..n).map(|i| (i as u32, self.interval_with(bc.bound, piv, i).hi)),
                 );
                 cands.sort_unstable_by(|a, b| {
                     b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
@@ -200,7 +213,7 @@ impl<C: Corpus> Laesa<C> {
                 let plan = TopkPlan {
                     k: bc.heaps[j].k(),
                     within: bc.slots[j].within.then_some(bc.slots[j].tau),
-                    bound: self.bound,
+                    bound: bc.bound,
                 };
                 for (idx, &p) in self.pivots.iter().enumerate() {
                     bc.heaps[j].offer(p, piv[idx]);
@@ -398,6 +411,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_LAESA,
             |plan, ctx, out| self.range_search(q, plan, ctx, out),
             |plan, ctx, out| self.topk_search(q, plan, kernel_path, ctx, out),
         );
@@ -415,6 +429,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for Laesa<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_LAESA,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
@@ -487,6 +503,72 @@ mod tests {
         idx.range(&pts[0], 0.9, &mut st);
         assert!(st.sim_evals < 3000, "{} evals", st.sim_evals);
         assert!(st.pruned > 0);
+    }
+
+    #[test]
+    fn ptolemaic_matches_linear_scan() {
+        let (pts, _) =
+            vmf_mixture(&VmfSpec { n: 600, dim: 8, clusters: 12, kappa: 60.0, seed: 7 });
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for bound in [BoundKind::Ptolemaic, BoundKind::PtolemaicFast] {
+            let idx = Laesa::build(pts.clone(), bound, 8);
+            for qi in [0usize, 123, 599] {
+                for tau in [0.85, 0.4] {
+                    assert_eq!(
+                        idx.range(&pts[qi], tau, &mut s1),
+                        lin.range(&pts[qi], tau, &mut s2),
+                        "{bound:?} range tau={tau}"
+                    );
+                }
+                let a = idx.knn(&pts[qi], 7, &mut s1);
+                let b = lin.knn(&pts[qi], 7, &mut s2);
+                for ((_, x), (_, y)) in a.iter().zip(&b) {
+                    assert!((x - y).abs() < 1e-12, "{bound:?} knn");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ptolemaic_intervals_contain_truth() {
+        let pts = uniform_sphere(100, 8, 45);
+        for bound in [BoundKind::Ptolemaic, BoundKind::PtolemaicFast] {
+            let idx = Laesa::build(pts.clone(), bound, 8);
+            let q = &pts[99];
+            let mut ctx = QueryContext::new();
+            let mut q_piv = Vec::new();
+            idx.query_pivot_sims_into(q, &mut ctx, &mut q_piv);
+            for i in 0..100 {
+                let iv = idx.interval_for(&q_piv, i);
+                let s = q.sim(&pts[i]);
+                // f32-normalized corpus vectors leave ~1e-6 of chord slack
+                // (the f64 derivation itself is pinned in bounds::ptolemy).
+                assert!(
+                    iv.lo <= s + 1e-6 && s <= iv.hi + 1e-6,
+                    "{bound:?} item {i}: {iv:?} vs {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ptolemaic_prunes_at_least_as_much_as_mult() {
+        let (pts, _) =
+            vmf_mixture(&VmfSpec { n: 1500, dim: 16, clusters: 15, kappa: 80.0, seed: 8 });
+        let mult = Laesa::build(pts.clone(), BoundKind::Mult, 16);
+        let ptol = Laesa::build(pts.clone(), BoundKind::Ptolemaic, 16);
+        let mut sm = QueryStats::default();
+        let mut sp = QueryStats::default();
+        for qi in 0..8 {
+            mult.range(&pts[qi * 150], 0.85, &mut sm);
+            ptol.range(&pts[qi * 150], 0.85, &mut sp);
+        }
+        // The pair refinement intersects the Mult interval, so it can only
+        // prune more (never-looser by construction).
+        assert!(sp.sim_evals <= sm.sim_evals, "mult={} ptol={}", sm.sim_evals, sp.sim_evals);
+        assert!(sp.pruned >= sm.pruned, "mult={} ptol={}", sm.pruned, sp.pruned);
     }
 
     #[test]

@@ -73,6 +73,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
             ctx,
             resp,
             crate::bounds::BoundKind::Mult,
+            super::ORD_LINEAR,
             |plan, ctx, out| {
                 ctx.stats.nodes_visited += 1;
                 ctx.trace_visit(0);
@@ -113,6 +114,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for LinearScan<C> {
             reqs,
             ctx,
             resps,
+            crate::bounds::BoundKind::Mult,
+            super::ORD_LINEAR,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, _ctx, chunk| {
                 // One multi-kernel sweep of the whole corpus serves every

@@ -790,22 +790,49 @@ pub(crate) struct RangePlan {
     pub bound: BoundKind,
 }
 
+/// Dense index ordinals into the obs registry's per-index slots, in
+/// `obs::INDEX_NAMES` order (`coordinator::IndexKind::ordinal` maps to the
+/// same slots) — each index passes its own ordinal to the search frames so
+/// `BoundKind::Auto` reads the right slack histograms.
+pub(crate) const ORD_LINEAR: usize = 0;
+pub(crate) const ORD_VP: usize = 1;
+pub(crate) const ORD_BALL: usize = 2;
+pub(crate) const ORD_MTREE: usize = 3;
+pub(crate) const ORD_COVER: usize = 4;
+pub(crate) const ORD_LAESA: usize = 5;
+pub(crate) const ORD_GNAT: usize = 6;
+
+/// Resolve the effective pruning bound once per query: `Auto` consults the
+/// process-wide obs slack histograms for this index kind (ADR-009), with a
+/// fixed Mult fallback while the histograms are cold; concrete kinds pass
+/// through. The snapshot-per-query rule keeps a query's trace coherent;
+/// results never depend on the choice because every family is exact.
+#[inline]
+pub(crate) fn resolve_bound(kind: BoundKind, index_ord: usize) -> BoundKind {
+    if kind == BoundKind::Auto {
+        crate::obs::OBS.select_bound(index_ord).unwrap_or(BoundKind::Mult)
+    } else {
+        kind
+    }
+}
+
 /// The shared `search_into` frame (ADR-005): arm the plan on the context,
-/// resolve the effective bound, dispatch the mode to the index's two
-/// traversal closures, then publish truncation/stats into the response
-/// and disarm. One place — so no index implementation can forget to
-/// disarm an armed filter or budget before the context serves the next
-/// query.
+/// resolve the effective bound (including `Auto`, against `index_ord`'s
+/// slack histograms), dispatch the mode to the index's two traversal
+/// closures, then publish truncation/stats into the response and disarm.
+/// One place — so no index implementation can forget to disarm an armed
+/// filter or budget before the context serves the next query.
 pub(crate) fn search_frame(
     req: &SearchRequest,
     ctx: &mut QueryContext,
     resp: &mut SearchResponse,
     default_bound: BoundKind,
+    index_ord: usize,
     range: impl FnOnce(&RangePlan, &mut QueryContext, &mut Vec<(u32, f64)>),
     topk: impl FnOnce(&TopkPlan, &mut QueryContext, &mut Vec<(u32, f64)>),
 ) {
     ctx.apply_plan(req);
-    let bound = req.bound.unwrap_or(default_bound);
+    let bound = resolve_bound(req.bound.unwrap_or(default_bound), index_ord);
     resp.hits.clear();
     resp.trace.clear();
     match req.mode {
@@ -827,16 +854,27 @@ pub(crate) fn search_frame(
 
 /// The shared `search_batch_into` frame (ADR-006): validate lengths,
 /// route optioned plans to sequential per-query execution, and drive the
-/// plain-plan chunks (at most [`MAX_BATCH`] queries each) through the
+/// batchable chunks (at most [`MAX_BATCH`] queries each) through the
 /// index's shared-frontier traversal — arming the leased [`BatchContext`]
 /// before each chunk and publishing per-slot heaps/hits/stats into the
 /// responses after. One place, so no index can forget to publish or to
 /// release the arena.
+///
+/// A batch is admitted to the shared-frontier path when every request is
+/// plain *except possibly a pruning-bound override they all agree on*: the
+/// bound is batch-global traversal state, so a uniform override batches
+/// exactly like the default. The agreed bound (else `default_bound`, the
+/// index's build-time bound) is resolved once — including `Auto` — and
+/// published on [`BatchContext::bound`] for every chunk, matching the
+/// per-query frame's snapshot rule. Mixed-bound or otherwise-optioned
+/// batches take the sequential fallback.
 pub(crate) fn run_batch<V: SimVector>(
     queries: &[V],
     reqs: &[SearchRequest],
     ctx: &mut QueryContext,
     resps: &mut Vec<SearchResponse>,
+    default_bound: BoundKind,
+    index_ord: usize,
     fallback: &mut dyn FnMut(&V, &SearchRequest, &mut QueryContext, &mut SearchResponse),
     traverse: &mut dyn FnMut(&[V], &mut BatchContext, &mut QueryContext, &mut [SearchResponse]),
 ) {
@@ -845,19 +883,23 @@ pub(crate) fn run_batch<V: SimVector>(
     if queries.is_empty() {
         return;
     }
-    if reqs.iter().any(|r| !r.is_plain()) {
+    let uniform = reqs.iter().all(|r| r.is_plain_except_bound())
+        && reqs.iter().all(|r| r.bound == reqs[0].bound);
+    if !uniform {
         for ((q, req), resp) in queries.iter().zip(reqs).zip(resps.iter_mut()) {
             ctx.begin_query();
             fallback(q, req, ctx, resp);
         }
         return;
     }
+    let bound = resolve_bound(reqs[0].bound.unwrap_or(default_bound), index_ord);
     let mut start = 0;
     while start < queries.len() {
         let end = (start + MAX_BATCH).min(queries.len());
         ctx.begin_query();
         let mut bc = ctx.lease_batch();
         bc.begin(&reqs[start..end]);
+        bc.bound = bound;
         let chunk = &mut resps[start..end];
         for resp in chunk.iter_mut() {
             resp.hits.clear();

@@ -14,7 +14,7 @@
 //! per-item scoring (through [`Corpus::sim_q`], zero-copy rows when built
 //! on a view) rather than the blocked bucket kernels.
 
-use crate::bounds::{BoundKind, SimInterval};
+use crate::bounds::{BoundKind, PairRefs, SimInterval};
 use crate::query::{BatchContext, Frontier, QueryContext, SearchRequest, SearchResponse};
 
 use super::{sort_desc, Corpus, RangePlan, SimilarityIndex, TopkPlan};
@@ -27,6 +27,10 @@ struct Entry {
     /// Covering interval: similarities of all subtree items to `id`.
     /// `None` for leaf entries (the entry is the item itself).
     cover: Option<SimInterval>,
+    /// Similarities of all subtree items to the *parent's* routing object —
+    /// the second over-box for the Ptolemaic descend refinement (ADR-009).
+    /// `None` at the root level and on leaf entries.
+    parent_cover: Option<SimInterval>,
     child: Option<Box<NodeBody>>,
 }
 
@@ -73,7 +77,13 @@ impl<C: Corpus> MTree<C> {
         if ids.len() <= capacity {
             let entries = ids
                 .into_iter()
-                .map(|id| Entry { id, parent_sim: parent_sim(id), cover: None, child: None })
+                .map(|id| Entry {
+                    id,
+                    parent_sim: parent_sim(id),
+                    cover: None,
+                    parent_cover: None,
+                    child: None,
+                })
                 .collect();
             return NodeBody { entries, is_leaf: true };
         }
@@ -102,7 +112,13 @@ impl<C: Corpus> MTree<C> {
             // is correct and terminates the recursion.
             let entries = ids
                 .into_iter()
-                .map(|id| Entry { id, parent_sim: parent_sim(id), cover: None, child: None })
+                .map(|id| Entry {
+                    id,
+                    parent_sim: parent_sim(id),
+                    cover: None,
+                    parent_cover: None,
+                    child: None,
+                })
                 .collect();
             return NodeBody { entries, is_leaf: true };
         }
@@ -136,11 +152,22 @@ impl<C: Corpus> MTree<C> {
                         None => cover = Some(SimInterval::point(s)),
                     }
                 }
+                // The parent route's similarity cover over the same subtree:
+                // the (parent, route) pivot pair then bounds every member by
+                // Ptolemy at query time, for free at descend.
+                let parent_cover = parent.map(|p| {
+                    let mut pc = SimInterval::point(corpus.sim_ij(p, group[0]));
+                    for &i in &group[1..] {
+                        pc.extend(corpus.sim_ij(p, i));
+                    }
+                    pc
+                });
                 let child = Self::bulk_load(corpus, group, capacity, Some(r));
                 Entry {
                     id: r,
                     parent_sim: parent_sim(r),
                     cover,
+                    parent_cover,
                     child: Some(Box::new(child)),
                 }
             })
@@ -164,6 +191,28 @@ impl<C: Corpus> MTree<C> {
                 }
             }
             None => route_iv.hi,
+        }
+    }
+
+    /// Ptolemaic refinement of an internal entry's descend bound (ADR-009):
+    /// the parent route `u` and the entry's route `v` form a pivot pair with
+    /// exact `sim(q,u) = parent_s`, `sim(q,v) = s`, `sim(u,v) = parent_sim`;
+    /// the subtree's similarity covers to each are the over-boxes. Returns
+    /// 1.0 (vacuous) when no parent cover was recorded (root level).
+    #[inline]
+    fn ptolemaic_child_ub(
+        bound: BoundKind,
+        parent_s: f64,
+        s: f64,
+        entry: &Entry,
+        cover: SimInterval,
+    ) -> f64 {
+        let Some(parent_cover) = entry.parent_cover else { return 1.0 };
+        let refs = PairRefs::new(parent_s, s, entry.parent_sim);
+        if bound == BoundKind::PtolemaicFast {
+            refs.upper_over_fast(parent_cover, cover)
+        } else {
+            refs.upper_over(parent_cover, cover)
         }
     }
 
@@ -218,7 +267,12 @@ impl<C: Corpus> MTree<C> {
             // Internal entry: the route itself is reported by its subtree
             // (routes are members of their own subtrees).
             let Some(cover) = entry.cover else { continue };
-            let ub = plan.bound.upper_over(s, cover);
+            let mut ub = plan.bound.upper_over(s, cover);
+            if plan.bound.is_ptolemaic() {
+                if let Some(ps) = parent_s {
+                    ub = ub.min(Self::ptolemaic_child_ub(plan.bound, ps, s, entry, cover));
+                }
+            }
             if ub >= plan.tau {
                 self.range_rec(entry.child.as_ref().unwrap(), q, Some(s), plan, out, ctx);
             } else {
@@ -283,7 +337,11 @@ impl<C: Corpus> MTree<C> {
                     // Routes are members of their own subtrees; the leaf
                     // level reports them (avoids duplicate result entries).
                     if let Some(cover) = entry.cover {
-                        let child_ub = plan.bound.upper_over(s, cover);
+                        let mut child_ub = plan.bound.upper_over(s, cover);
+                        if plan.bound.is_ptolemaic() && !parent_s.is_nan() {
+                            child_ub = child_ub
+                                .min(Self::ptolemaic_child_ub(plan.bound, parent_s, s, entry, cover));
+                        }
                         if !plan.dead_below_floor(child_ub)
                             && (results.len() < plan.k || child_ub > results.floor())
                         {
@@ -339,7 +397,7 @@ impl<C: Corpus> MTree<C> {
                 // chain can certify the subtree dead for this slot before
                 // sim(q_j, route) is ever computed.
                 if let Some(ps) = parent_sims {
-                    let reach = Self::entry_reach(self.bound, ps[j], entry);
+                    let reach = Self::entry_reach(bc.bound, ps[j], entry);
                     if !bc.slot_alive(j, reach) {
                         bc.stats[j].pruned += 1;
                         continue;
@@ -348,7 +406,13 @@ impl<C: Corpus> MTree<C> {
                 let s = self.corpus.sim_q(&queries[j], entry.id);
                 bc.stats[j].sim_evals += 1;
                 sims[j] = s;
-                if bc.slot_alive(j, self.bound.upper_over(s, cover)) {
+                let mut ub = bc.bound.upper_over(s, cover);
+                if bc.bound.is_ptolemaic() {
+                    if let Some(ps) = parent_sims {
+                        ub = ub.min(Self::ptolemaic_child_ub(bc.bound, ps[j], s, entry, cover));
+                    }
+                }
+                if bc.slot_alive(j, ub) {
                     child_mask |= 1 << j;
                 } else {
                     bc.stats[j].pruned += 1;
@@ -401,6 +465,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_MTREE,
             |plan, ctx, out| {
                 if let Some(root) = &self.root {
                     self.range_rec(root, q, None, plan, out, ctx);
@@ -423,6 +488,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for MTree<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_MTREE,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );
@@ -476,6 +543,78 @@ mod tests {
                     lin.range(&pts[qi], 0.5, &mut s2),
                     "bound={bound:?}"
                 );
+            }
+        }
+    }
+
+    /// Walk the tree collecting each entry's subtree members, asserting
+    /// `parent_cover` really covers sim(parent, member) for every member.
+    /// Returns the member ids of `node` (for the caller's own check).
+    fn check_parent_covers<C: Corpus>(
+        corpus: &C,
+        node: &NodeBody,
+        parent: Option<u32>,
+    ) -> Vec<u32> {
+        let mut all = Vec::new();
+        for e in &node.entries {
+            match &e.child {
+                Some(child) => {
+                    let members = check_parent_covers(corpus, child, Some(e.id));
+                    match (parent, e.parent_cover) {
+                        (Some(p), Some(pc)) => {
+                            for &m in &members {
+                                let s = corpus.sim_ij(p, m);
+                                assert!(
+                                    pc.lo <= s && s <= pc.hi,
+                                    "entry {}: sim({p},{m})={s} outside {pc:?}",
+                                    e.id
+                                );
+                            }
+                        }
+                        (Some(_), None) => panic!("internal entry {} lacks parent_cover", e.id),
+                        (None, Some(_)) => panic!("root-level entry {} has parent_cover", e.id),
+                        (None, None) => {}
+                    }
+                    all.extend(members);
+                }
+                None => all.push(e.id),
+            }
+        }
+        all
+    }
+
+    #[test]
+    fn parent_covers_contain_subtree_sims() {
+        let (pts, _) =
+            vmf_mixture(&VmfSpec { n: 800, dim: 8, clusters: 8, kappa: 60.0, seed: 10 });
+        let tree = MTree::build(pts.clone(), BoundKind::Ptolemaic, 6);
+        let root = tree.root.as_ref().unwrap();
+        let members = check_parent_covers(&tree.corpus, root, None);
+        assert_eq!(members.len(), pts.len());
+    }
+
+    #[test]
+    fn ptolemaic_descend_matches_linear_on_clusters() {
+        let (pts, _) =
+            vmf_mixture(&VmfSpec { n: 1200, dim: 8, clusters: 12, kappa: 80.0, seed: 9 });
+        let lin = LinearScan::build(pts.clone());
+        let mut s1 = QueryStats::default();
+        let mut s2 = QueryStats::default();
+        for bound in [BoundKind::Ptolemaic, BoundKind::PtolemaicFast] {
+            let tree = MTree::build(pts.clone(), bound, 8);
+            for qi in [0usize, 600, 1199] {
+                for tau in [0.9, 0.5] {
+                    assert_eq!(
+                        tree.range(&pts[qi], tau, &mut s1),
+                        lin.range(&pts[qi], tau, &mut s2),
+                        "{bound:?} tau={tau} qi={qi}"
+                    );
+                }
+                let a = tree.knn(&pts[qi], 9, &mut s1);
+                let b = lin.knn(&pts[qi], 9, &mut s2);
+                for ((_, x), (_, y)) in a.iter().zip(&b) {
+                    assert!((x - y).abs() < 1e-12, "{bound:?} knn qi={qi}");
+                }
             }
         }
     }

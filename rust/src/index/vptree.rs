@@ -238,7 +238,7 @@ impl<C: Corpus> VpTree<C> {
                 while m != 0 {
                     let j = m.trailing_zeros() as usize;
                     m &= m - 1;
-                    let ub_j = self.bound.upper_over(sims[j], *iv);
+                    let ub_j = bc.bound.upper_over(sims[j], *iv);
                     if bc.slot_alive(j, ub_j) {
                         child_mask |= 1 << j;
                         child_ub = child_ub.max(ub_j);
@@ -273,6 +273,7 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
             ctx,
             resp,
             self.bound,
+            super::ORD_VP,
             |plan, ctx, out| {
                 if let Some(root) = &self.root {
                     self.range_node(root, q, plan, out, ctx);
@@ -295,6 +296,8 @@ impl<C: Corpus> SimilarityIndex<C::Vector> for VpTree<C> {
             reqs,
             ctx,
             resps,
+            self.bound,
+            super::ORD_VP,
             &mut |q, req, ctx, resp| self.search_into(q, req, ctx, resp),
             &mut |qs, bc, ctx, chunk| self.traverse_batch(qs, bc, ctx, chunk),
         );

@@ -58,6 +58,30 @@
 //! shims over [`index::SimilarityIndex::search_into`] — byte-identical to
 //! plain plans.
 //!
+//! The pruning bound itself is pluggable ([`bounds::BoundKind`], ADR-009):
+//! the paper's Eq. 10/13 `Mult` interval is the default; `Ptolemaic` (and
+//! its sqrt-free `PtolemaicFast` relaxation) adds pivot-*pair* refinement
+//! by Ptolemy's inequality where an index holds two references per
+//! candidate — LAESA's pivot table, the M-tree's parent/route pair — and
+//! `Auto` picks per index from observed bound slack (ADR-007), falling
+//! back to `Mult` until warm. Every kind returns exactly the linear-scan
+//! result; only the amount of pruning changes:
+//!
+//! ```no_run
+//! use simetra::bounds::BoundKind;
+//! use simetra::data::uniform_sphere_store;
+//! use simetra::index::{Laesa, SimilarityIndex};
+//! use simetra::query::SearchRequest;
+//!
+//! let store = uniform_sphere_store(10_000, 64, 42);
+//! let index = Laesa::build(store.view(), BoundKind::Mult, 32);
+//! // Per-request override: identical hits, tighter candidate filtering.
+//! let req = SearchRequest::knn(10).bound(BoundKind::Ptolemaic).build();
+//! let resp = index.search(&store.vec(0), &req);
+//! assert_eq!(resp.hits[0].0, 0);
+//! println!("pruned with pair bounds: {}", resp.stats.pruned);
+//! ```
+//!
 //! Scans default to the scalar backend;
 //! [`storage::CorpusStore::with_kernel`] swaps in the SIMD backend
 //! (bit-identical results, AVX-accelerated) or the i8-quantized pre-filter

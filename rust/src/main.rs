@@ -68,6 +68,8 @@ COMMANDS:
 
 INDEXES: linear vp ball m-tree cover laesa gnat
 BOUNDS:  euclidean eucl-lb arccos arccos-fast mult mult-lb1 mult-lb2
+         ptolemaic ptolemaic-fast (pivot-pair bounds, ADR-009)
+         auto (per-index pick from observed bound slack; mult until warm)
 KERNELS: scalar simd i8
 ";
 

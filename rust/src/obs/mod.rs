@@ -44,7 +44,19 @@ pub const SLACK_BUCKETS: usize = 16;
 pub const SLACK_WIDTH: f64 = 0.125;
 
 /// Number of `BoundKind` variants (slack histograms key on the ordinal).
-pub const BOUND_KINDS: usize = 7;
+/// `Auto` has a row for layout parity but never accumulates: slack is
+/// always recorded under the *resolved* kind, so its row renders empty.
+pub const BOUND_KINDS: usize = 10;
+
+/// Samples a (index, bound) slack histogram needs before the `Auto`
+/// selector trusts its mean — below this the cell is "cold".
+pub const AUTO_MIN_SAMPLES: u64 = 1024;
+
+/// Mean-slack margin (in similarity units) the `Auto` selector requires:
+/// the exact Ptolemaic family must *beat* Mult by this much to amortize
+/// its extra per-candidate arithmetic; the sqrt-free variant merely has to
+/// stay within it.
+pub const AUTO_MARGIN: f64 = 0.01;
 
 /// Number of index kinds (must track `coordinator::IndexKind`).
 pub const INDEX_KINDS: usize = 7;
@@ -546,6 +558,56 @@ impl ObsRegistry {
         h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
+    /// Mean observed slack (`ub - sim` per admitted candidate) and sample
+    /// count for `(index, bound)`; `None` when no samples were recorded.
+    pub fn mean_slack(&self, index: usize, bound: BoundKind) -> Option<(f64, u64)> {
+        let h = &self.slack[index.min(INDEX_KINDS - 1)][bound as usize];
+        let n: u64 = h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if n == 0 {
+            return None;
+        }
+        Some((h.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64, n))
+    }
+
+    /// Resolve [`BoundKind::Auto`] for one index kind from the live slack
+    /// histograms (ADR-009).
+    ///
+    /// Measured mean slack is the tightness signal: lower slack means the
+    /// upper bounds hug the true similarities and prune more. The policy,
+    /// over cells with at least [`AUTO_MIN_SAMPLES`] samples:
+    ///
+    /// 1. `Ptolemaic` if its mean slack beats Mult's by [`AUTO_MARGIN`]
+    ///    (the measured tightness win pays for the extra pair arithmetic);
+    /// 2. else `PtolemaicFast` if its mean slack is within the margin of
+    ///    Mult's (equal tightness at lower per-candidate cost);
+    /// 3. else `Mult` once its own histogram is warm;
+    /// 4. `None` while Mult's histogram is cold — the caller falls back to
+    ///    a fixed default so behavior is deterministic from process start.
+    ///
+    /// Candidate families only warm up once traffic has actually run them
+    /// (e.g. canary requests with an explicit override); until then the
+    /// selector stays on the warm baseline. Exactness does not depend on
+    /// the choice — every family is valid — so a selection flip mid-stream
+    /// can never change results, only cost; the search frame still
+    /// snapshots one selection per query so per-query traces are coherent.
+    pub fn select_bound(&self, index: usize) -> Option<BoundKind> {
+        let warm = |b: BoundKind| {
+            self.mean_slack(index, b).filter(|&(_, n)| n >= AUTO_MIN_SAMPLES).map(|(m, _)| m)
+        };
+        let mult = warm(BoundKind::Mult)?;
+        if let Some(p) = warm(BoundKind::Ptolemaic) {
+            if p + AUTO_MARGIN <= mult {
+                return Some(BoundKind::Ptolemaic);
+            }
+        }
+        if let Some(f) = warm(BoundKind::PtolemaicFast) {
+            if f <= mult + AUTO_MARGIN {
+                return Some(BoundKind::PtolemaicFast);
+            }
+        }
+        Some(BoundKind::Mult)
+    }
+
     /// Total spans recorded for `stage`.
     pub fn stage_count(&self, stage: Stage) -> u64 {
         let h = &self.stages[stage as usize];
@@ -780,6 +842,63 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "bad value in {line:?}");
             assert!(name_labels.starts_with("simetra_"), "bad family in {line:?}");
         }
+    }
+
+    fn warm(reg: &ObsRegistry, index: usize, bound: BoundKind, slack: f64) {
+        let mut w = SlackWindow::default();
+        for _ in 0..AUTO_MIN_SAMPLES {
+            w.record(bound, slack);
+        }
+        w.drain_into(reg, index);
+    }
+
+    #[test]
+    fn auto_selector_policy() {
+        let reg = ObsRegistry::new();
+        // Cold registry: no selection, caller uses the fixed fallback.
+        assert_eq!(reg.select_bound(5), None);
+        // Warm baseline only: stay on Mult.
+        warm(&reg, 5, BoundKind::Mult, 0.5);
+        assert_eq!(reg.select_bound(5), Some(BoundKind::Mult));
+        // A candidate family below AUTO_MIN_SAMPLES stays invisible.
+        let mut w = SlackWindow::default();
+        w.record(BoundKind::Ptolemaic, 0.0);
+        w.drain_into(&reg, 5);
+        assert_eq!(reg.select_bound(5), Some(BoundKind::Mult));
+        // Warm and measurably tighter: the exact family wins.
+        warm(&reg, 5, BoundKind::Ptolemaic, 0.2);
+        assert_eq!(reg.select_bound(5), Some(BoundKind::Ptolemaic));
+        // Selections are per index kind — other rows stay cold.
+        assert_eq!(reg.select_bound(1), None);
+    }
+
+    #[test]
+    fn auto_selector_prefers_fast_at_equal_tightness() {
+        let reg = ObsRegistry::new();
+        warm(&reg, 1, BoundKind::Mult, 0.5);
+        // Exact Ptolemaic within the margin (not a win), fast within the
+        // margin too: the cheaper family takes it.
+        warm(&reg, 1, BoundKind::Ptolemaic, 0.495);
+        warm(&reg, 1, BoundKind::PtolemaicFast, 0.505);
+        assert_eq!(reg.select_bound(1), Some(BoundKind::PtolemaicFast));
+        // A clearly looser fast family falls back to Mult.
+        let reg2 = ObsRegistry::new();
+        warm(&reg2, 1, BoundKind::Mult, 0.5);
+        warm(&reg2, 1, BoundKind::PtolemaicFast, 0.9);
+        assert_eq!(reg2.select_bound(1), Some(BoundKind::Mult));
+    }
+
+    #[test]
+    fn mean_slack_reports_average() {
+        let reg = ObsRegistry::new();
+        let mut w = SlackWindow::default();
+        w.record(BoundKind::Mult, 0.25);
+        w.record(BoundKind::Mult, 0.75);
+        w.drain_into(&reg, 0);
+        let (mean, n) = reg.mean_slack(0, BoundKind::Mult).unwrap();
+        assert_eq!(n, 2);
+        assert!((mean - 0.5).abs() < 1e-4);
+        assert_eq!(reg.mean_slack(0, BoundKind::Arccos), None);
     }
 
     #[test]

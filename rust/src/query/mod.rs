@@ -159,11 +159,15 @@ impl Default for BatchSlot {
 ///
 /// One batch carries at most [`MAX_BATCH`] slots; the index-level batch
 /// entry points chunk larger request lists.
-#[derive(Default)]
 pub struct BatchContext {
     /// The packed query block fed to the multi kernels (CorpusView path;
     /// per-item corpora leave it empty).
     pub(crate) qb: QueryBlock,
+    /// The batch-effective pruning bound: the uniform per-request override
+    /// when the batch carries one, else the index's build-time bound, with
+    /// `Auto` already resolved — set by the batch frame (`run_batch`)
+    /// after [`BatchContext::begin`], read by every `traverse_batch`.
+    pub(crate) bound: BoundKind,
     /// Per-slot kNN collectors (slot-indexed; idle for range slots).
     pub(crate) heaps: Vec<KnnHeap>,
     /// Per-slot instrumentation windows.
@@ -182,6 +186,22 @@ pub struct BatchContext {
     /// arena into disjoint field borrows; everyone else reads
     /// [`BatchContext::len`].
     pub(crate) len: usize,
+}
+
+impl Default for BatchContext {
+    fn default() -> Self {
+        BatchContext {
+            qb: QueryBlock::default(),
+            bound: BoundKind::Mult,
+            heaps: Vec::new(),
+            stats: Vec::new(),
+            scratches: Vec::new(),
+            slots: Vec::new(),
+            live: Vec::new(),
+            floors: Vec::new(),
+            len: 0,
+        }
+    }
 }
 
 impl BatchContext {

@@ -168,11 +168,16 @@ impl SearchRequest {
     /// Whether the request carries no per-request options — the shape the
     /// coordinator's uniform-batch fast paths accept.
     pub fn is_plain(&self) -> bool {
-        self.bound.is_none()
-            && self.kernel.is_none()
-            && self.budget.is_none()
-            && self.filter.is_none()
-            && !self.trace
+        self.bound.is_none() && self.is_plain_except_bound()
+    }
+
+    /// Like [`SearchRequest::is_plain`] but tolerating a pruning-bound
+    /// override: the effective bound is batch-global state in the
+    /// shared-frontier traversal, so a batch whose requests all agree on
+    /// the override batches exactly like a plain one (ADR-006 follow-on).
+    /// Kernel overrides, filters, budgets, and traces remain per-query.
+    pub fn is_plain_except_bound(&self) -> bool {
+        self.kernel.is_none() && self.budget.is_none() && self.filter.is_none() && !self.trace
     }
 
     /// The same plan with `mode` and a translated filter — how layers with

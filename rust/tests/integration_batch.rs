@@ -103,6 +103,62 @@ fn plain_batches_match_sequential_across_indexes_and_kernels() {
     }
 }
 
+// --- 1b. uniform bound overrides stay on the batched path -------------------
+
+#[test]
+fn uniform_bound_override_batches_match_sequential() {
+    let rows = uniform_sphere(900, 12, 61);
+    let store = CorpusStore::from_rows(rows);
+    let queries: Vec<DenseVec> = uniform_sphere(8, 12, 62);
+    // Every request overrides the build-time bound with the same kind: the
+    // batch must be admitted to the shared traversal (not the per-query
+    // fallback) and still match sequential execution bitwise. Auto rides
+    // along — it resolves once per chunk, and every resolution is exact.
+    for bound in [
+        BoundKind::ArccosFast,
+        BoundKind::MultLb1,
+        BoundKind::Ptolemaic,
+        BoundKind::PtolemaicFast,
+        BoundKind::Auto,
+    ] {
+        let knn_reqs: Vec<SearchRequest> =
+            (0..queries.len()).map(|_| SearchRequest::knn(6).bound(bound).build()).collect();
+        let rng_reqs: Vec<SearchRequest> =
+            (0..queries.len()).map(|_| SearchRequest::range(0.1).bound(bound).build()).collect();
+        assert!(knn_reqs.iter().all(|r| !r.is_plain() && r.is_plain_except_bound()));
+        for kind in ALL_KINDS {
+            let index = kind.build(store.view(), BoundKind::Mult);
+            let what = format!("{} / {bound:?}", kind.name());
+            assert_batch_matches(index.as_ref(), &queries, &knn_reqs, &format!("{what} knn"));
+            assert_batch_matches(index.as_ref(), &queries, &rng_reqs, &format!("{what} range"));
+        }
+    }
+}
+
+#[test]
+fn mixed_bound_batches_fall_back_and_match_sequential() {
+    let store = uniform_sphere_store(700, 10, 63);
+    let queries: Vec<DenseVec> = uniform_sphere(6, 10, 64);
+    // Disagreeing overrides (and override-vs-none mixes) are not uniform:
+    // the batch frame must take the per-query fallback and still be exact.
+    let reqs: Vec<SearchRequest> = (0..queries.len())
+        .map(|i| match i % 3 {
+            0 => SearchRequest::knn(5).bound(BoundKind::Ptolemaic).build(),
+            1 => SearchRequest::knn(5).bound(BoundKind::ArccosFast).build(),
+            _ => SearchRequest::knn(5).build(),
+        })
+        .collect();
+    for kind in ALL_KINDS {
+        let index = kind.build(store.view(), BoundKind::Mult);
+        assert_batch_matches(
+            index.as_ref(),
+            &queries,
+            &reqs,
+            &format!("mixed-bound {}", kind.name()),
+        );
+    }
+}
+
 // --- 2. mixed modes and ks in one batch ------------------------------------
 
 #[test]

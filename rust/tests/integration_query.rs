@@ -301,12 +301,18 @@ fn steady_state_batches_allocate_nothing() {
                 }
             })
             .collect();
+        // A uniform Ptolemaic override stays on the shared batched path and
+        // pins the pivot-pair refinement math as allocation-free too.
+        let ptol_reqs: Vec<SearchRequest> = (0..queries.len())
+            .map(|_| SearchRequest::knn(10).bound(BoundKind::Ptolemaic).build())
+            .collect();
         for kind in ALL_KINDS {
             let index = kind.build(store.view(), BoundKind::Mult);
             let mut ctx = QueryContext::new();
             let mut resps: Vec<SearchResponse> = Vec::new();
             let mut run = |ctx: &mut QueryContext, resps: &mut Vec<SearchResponse>| {
                 index.search_batch_into(&queries, &reqs, ctx, resps);
+                index.search_batch_into(&queries, &ptol_reqs, ctx, resps);
             };
             // Two warm rounds: the BatchContext arena, per-slot heaps and
             // scratches, response buffers, and lease pools all reach their
@@ -324,6 +330,28 @@ fn steady_state_batches_allocate_nothing() {
             );
         }
     }
+}
+
+#[test]
+fn bound_parsing_allocates_nothing() {
+    // The wire/CLI hot path parses a bound token per request; the table
+    // lookup must never touch the heap (no lowercasing into a String).
+    let tokens = [
+        "euclidean", "eucl-lb", "arccos", "ARCCOS-FAST", "mult", "lb1", "MULT-LB2", "Ptolemaic",
+        "ptol-fast", "auto", "not-a-bound",
+    ];
+    let mut hits = 0usize;
+    let allocs = count_allocs(|| {
+        for _ in 0..64 {
+            for t in tokens {
+                if BoundKind::parse(t).is_some() {
+                    hits += 1;
+                }
+            }
+        }
+    });
+    assert_eq!(hits, 64 * (tokens.len() - 1));
+    assert_eq!(allocs, 0, "BoundKind::parse allocated {allocs} times");
 }
 
 #[test]
