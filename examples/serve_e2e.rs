@@ -5,7 +5,6 @@
 //!
 //!     make artifacts && cargo run --release --example serve_e2e
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -16,6 +15,7 @@ use simetra::coordinator::{
 use simetra::data::{vmf_mixture_store, VmfSpec};
 use simetra::metrics::DenseVec;
 use simetra::storage::CorpusStore;
+use simetra::sync::{AtomicU64, Ordering};
 
 const N: usize = 50_000;
 const DIM: usize = 128;

@@ -7,7 +7,6 @@
 //!
 //! Reported through `util::bench::Measurement` like every other bench.
 
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -16,6 +15,7 @@ use simetra::data::{uniform_sphere, uniform_sphere_store};
 use simetra::ingest::{IngestConfig, IngestCorpus};
 use simetra::metrics::DenseVec;
 use simetra::storage::dot_slice;
+use simetra::sync::{AtomicBool, Ordering};
 use simetra::util::bench::{bench, black_box, report, BenchConfig};
 use simetra::util::Rng;
 

@@ -1,0 +1,34 @@
+//! `simetra-lint`: run the repo-invariant lint pass (ADR-010) over a
+//! source tree and exit non-zero on any violation.
+//!
+//! Usage: `simetra-lint [SRC_DIR]` — defaults to this crate's `src/`.
+//! The same checks run as a unit test (`lint::tests`), so `cargo test`
+//! and the CI `lint` job enforce identical invariants.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use simetra::lint;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    let violations = match lint::check_tree(&root) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("simetra-lint: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if violations.is_empty() {
+        println!("simetra-lint: {} clean", root.display());
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    eprintln!("simetra-lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}

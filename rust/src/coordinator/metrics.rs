@@ -2,10 +2,9 @@
 //! plus the ingest gauges (generations, memtable, tombstones, sealed
 //! bytes) when the coordinator serves a mutable corpus.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use crate::ingest::IngestStats;
 use crate::storage::KernelBackend;
+use crate::sync::{AtomicU64, Ordering};
 
 use super::protocol::StatsSnapshot;
 

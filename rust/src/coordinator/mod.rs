@@ -28,7 +28,6 @@ pub use protocol::{ConfigSnapshot, Hit, Request, Response, SearchResult, StatsSn
 pub use shard::{ExecMode, IndexKind, Shard};
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -43,6 +42,7 @@ use crate::obs::{SlowEntry, Stage, TraceEvent, TraceKind, OBS};
 use crate::query::{QueryContext, SearchMode, SearchRequest};
 use crate::runtime::EngineHandle;
 use crate::storage::{CorpusStore, KernelBackend, KernelKind};
+use crate::sync::Ordering::Relaxed;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]

@@ -4,11 +4,9 @@
 //! thread-per-connection server kept as the conformance baseline, plus a
 //! typed blocking client.
 
-use std::collections::VecDeque;
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -21,6 +19,8 @@ use super::Coordinator;
 use crate::error::SimetraError;
 use crate::obs::{Stage, OBS};
 use crate::query::SearchRequest;
+use crate::sync::queue::RunQueue;
+use crate::sync::{AtomicBool, Ordering};
 
 /// How long one worker turn blocks on a quiet socket before parking the
 /// connection back in the run queue — the pool's fairness quantum, and
@@ -102,8 +102,7 @@ impl ServeHandle {
             }
         }
         if let Some(pool) = self.pool.take() {
-            pool.stop.store(true, Ordering::SeqCst);
-            pool.ready.notify_all();
+            pool.queue.stop();
             let deadline = Instant::now() + STOP_DEADLINE;
             for worker in self.workers.drain(..) {
                 // Turn reads and condvar waits are bounded, so workers
@@ -117,10 +116,8 @@ impl ServeHandle {
                 }
             }
             // Close connections still waiting for a worker turn.
-            if let Ok(mut queue) = pool.queue.lock() {
-                queue.clear();
-                pool.metrics.conns_queued.store(0, Ordering::Relaxed);
-            }
+            drop(pool.queue.drain());
+            pool.metrics.conns_queued.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -151,12 +148,7 @@ pub fn serve_with(
     let local = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let metrics = coordinator.metrics.clone();
-    let pool = Arc::new(PoolShared {
-        queue: Mutex::new(VecDeque::new()),
-        ready: Condvar::new(),
-        stop: AtomicBool::new(false),
-        metrics: metrics.clone(),
-    });
+    let pool = Arc::new(PoolShared { queue: RunQueue::new(), metrics: metrics.clone() });
     let mut workers = Vec::new();
     for i in 0..config.resolved_workers() {
         let coord = coordinator.clone();
@@ -284,36 +276,25 @@ impl Drop for Conn {
 }
 
 /// State shared between the accept thread and the pool workers: the
-/// connection run queue plus the pool's stop signal.
+/// connection run queue (a [`RunQueue`], so the model checker covers its
+/// push/pop/stop protocol directly — see `tests/model_checker.rs`) plus
+/// the queue-depth gauge.
 struct PoolShared {
-    queue: Mutex<VecDeque<Conn>>,
-    ready: Condvar,
-    stop: AtomicBool,
+    queue: RunQueue<Conn>,
     metrics: Arc<Metrics>,
 }
 
 impl PoolShared {
     fn push(&self, conn: Conn) {
-        let mut queue = self.queue.lock().unwrap();
-        queue.push_back(conn);
-        self.metrics.conns_queued.store(queue.len() as u64, Ordering::Relaxed);
-        drop(queue);
-        self.ready.notify_one();
+        let queued = self.queue.push(conn);
+        self.metrics.conns_queued.store(queued as u64, Ordering::Relaxed);
     }
 
     /// The next connection due a turn; `None` once the pool is stopping.
     fn pop(&self) -> Option<Conn> {
-        let mut queue = self.queue.lock().unwrap();
-        loop {
-            if self.stop.load(Ordering::SeqCst) {
-                return None;
-            }
-            if let Some(conn) = queue.pop_front() {
-                self.metrics.conns_queued.store(queue.len() as u64, Ordering::Relaxed);
-                return Some(conn);
-            }
-            queue = self.ready.wait_timeout(queue, POP_WAIT).unwrap().0;
-        }
+        let (conn, queued) = self.queue.pop(POP_WAIT)?;
+        self.metrics.conns_queued.store(queued as u64, Ordering::Relaxed);
+        Some(conn)
     }
 }
 

@@ -111,6 +111,7 @@ impl<C: Corpus> CoverTree<C> {
     /// above extends covers only along the exact descent path, which is
     /// precisely the set of ancestors of the new node, so all covers stay
     /// valid by construction.
+    // Doc anchor only: exists to carry the invariant note above in rustdoc.
     #[allow(dead_code)]
     fn cover_invariant_doc() {}
 

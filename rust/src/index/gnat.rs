@@ -428,7 +428,7 @@ mod tests {
         let hits = tree.range(&pts[0], -1.0, &mut st);
         assert_eq!(hits.len(), 200);
         let mut ids: Vec<u32> = hits.iter().map(|&(i, _)| i).collect();
-        ids.sort();
+        ids.sort(); // lint: stable-sort — test-only dedup ordering
         ids.dedup();
         assert_eq!(ids.len(), 200);
     }

@@ -283,6 +283,8 @@ impl<C: Corpus> Laesa<C> {
     /// `CAND_CHUNK - 1` extra candidates are scored; every one of them is
     /// certified at or below the floor, so the result set is unchanged.
     /// Plain-request path only: no id filter, no evaluation budget.
+    // Zero-alloc hot path: candidate state rides as parameters rather than
+    // allocating a per-call struct (ADR-004).
     #[allow(clippy::too_many_arguments)]
     fn topk_candidates(
         &self,

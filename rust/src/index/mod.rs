@@ -251,6 +251,8 @@ pub trait Corpus: Send + Sync + 'static {
     /// slot's result set — a backend may skip a `(slot, row)` pair only
     /// when the row provably scores strictly below it. Returns the exact
     /// evaluations delivered (= sink invocations).
+    // Wide by design: the multi-query kernel contract threads every
+    // per-slot buffer through one call (ADR-006).
     #[allow(clippy::too_many_arguments)]
     fn scan_ids_multi_ctx(
         &self,
@@ -426,6 +428,7 @@ impl Corpus for CorpusView {
         }
     }
 
+    // Wide by design: mirrors the trait method above (ADR-006).
     #[allow(clippy::too_many_arguments)]
     fn scan_ids_multi_ctx(
         &self,

@@ -364,6 +364,8 @@ impl<C: Corpus> MTree<C> {
     /// route's per-slot similarities stay in scope for the parent-chain
     /// pre-check), with each leaf scored for every live slot in one
     /// multi-query kernel call.
+    // Zero-alloc recursion: the batch state rides as parameters instead of
+    // a heap-built context struct (ADR-004).
     #[allow(clippy::too_many_arguments)]
     fn batch_rec(
         &self,

@@ -77,6 +77,8 @@ impl<C: Corpus> VpTree<C> {
         // Split at the median similarity to the vantage point.
         let mut sims: Vec<(u32, f64)> =
             rest.iter().map(|&id| (id, corpus.sim_ij(vp, id))).collect();
+        // lint: stable-sort — build path; similarity ties must keep id
+        // order so tree construction is deterministic across runs.
         sims.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let mid = sims.len() / 2;
 

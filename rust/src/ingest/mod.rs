@@ -36,7 +36,6 @@ pub use generation::{Generation, GenerationSet, MemTable};
 pub use swap::SnapshotCell;
 
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -50,6 +49,7 @@ use crate::query::QueryContext;
 use crate::storage::{
     backend_for, default_kernel, normalize_row, CorpusStore, KernelBackend, KernelKind,
 };
+use crate::sync::{AtomicBool, AtomicU64, Ordering};
 
 /// Configuration of a mutable corpus.
 #[derive(Debug, Clone)]
@@ -270,6 +270,8 @@ impl Inner {
             Some(pick) => self.compact_locked(&pick),
             None => {
                 let mut order: Vec<usize> = (0..sizes.len()).collect();
+                // lint: stable-sort — compaction path; equal-size segments
+                // must merge oldest-first (index order) for determinism.
                 order.sort_by_key(|&i| sizes[i]);
                 self.compact_locked(&order[..2])
             }
@@ -573,6 +575,8 @@ pub fn pick_tiered_merge(sizes: &[usize], ratio: f64, min_run: usize) -> Option<
     }
     let ratio = ratio.max(1.0);
     let mut order: Vec<usize> = (0..sizes.len()).collect();
+    // lint: stable-sort — compaction planning; equal-size segments must
+    // stay in index order so tier runs are deterministic.
     order.sort_by_key(|&i| sizes[i]);
     let mut start = 0usize;
     while start < order.len() {

@@ -224,6 +224,21 @@
 //! assert_eq!(hits.len(), 10);
 //! server.stop(); // joins the accept thread and every pool worker
 //! ```
+//!
+//! ## Unsafe-code policy (ADR-010)
+//!
+//! `unsafe` is confined to two places — the AVX kernels in `storage` and
+//! the pointer-reclamation sites of the hazard-pointer snapshot cell /
+//! zero-alloc frontier — and every `unsafe` block or function carries a
+//! `// SAFETY:` comment justifying it, with `unsafe_op_in_unsafe_fn`
+//! denied crate-wide so no operation is implicitly trusted. Concurrency
+//! primitives never touch `std::sync::atomic` directly: they go through
+//! the [`sync`] shim layer, which doubles as the instrumentation plane for
+//! the deterministic model checker in [`sync::model`]. All of this is
+//! machine-enforced by `simetra-lint` ([`lint`], run in CI and by unit
+//! test), Miri, and ThreadSanitizer — not by convention.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bounds;
 pub mod cluster;
@@ -233,12 +248,14 @@ pub mod error;
 pub mod figures;
 pub mod index;
 pub mod ingest;
+pub mod lint;
 pub mod metrics;
 pub mod obs;
 pub mod query;
 pub mod runtime;
 pub mod sparse;
 pub mod storage;
+pub mod sync;
 pub mod util;
 
 pub use error::SimetraError;

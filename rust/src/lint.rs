@@ -1,0 +1,416 @@
+//! Repo-invariant lint pass (ADR-010).
+//!
+//! A small source-level checker for invariants that `rustc`/`clippy`
+//! cannot express because they are *policy*, not language rules:
+//!
+//! 1. **Documented `unsafe`** — every `unsafe` block or fn must carry a
+//!    `// SAFETY:` comment (or a `# Safety` doc section) in the comment
+//!    block immediately preceding it.
+//! 2. **No stable sorts on query-path modules** (ADR-004) — `.sort()` /
+//!    `.sort_by*()` in `index/`, `query/`, `storage/`, `bounds/`,
+//!    `ingest/`, `sparse/` need an explicit `lint: stable-sort` waiver
+//!    comment explaining why a stable sort is intended.
+//! 3. **No FMA in kernel code** (ADR-003) — `mul_add` contracts the
+//!    mul/add rounding steps and breaks the bit-exactness contract
+//!    between scalar and SIMD paths; a `lint: fma` waiver is required
+//!    anywhere it appears.
+//! 4. **Atomics only through the shim** — `std::sync::atomic` /
+//!    `core::sync::atomic` may be named only under `sync/`, so the
+//!    model checker (see [`crate::sync::model`]) sees every atomic op.
+//! 5. **Justified lint suppressions** — `#[allow(..)]` / `#![allow(..)]`
+//!    must carry a comment (same line or immediately above) saying why.
+//!
+//! The checker is deliberately lexical: it splits each line into code
+//! and comment, blanks string-literal contents, and matches fixed
+//! needles. That keeps it dependency-free and fast enough to run as a
+//! unit test ([`check_tree`] over `src/` is asserted empty in this
+//! crate's test suite and in the CI `lint` job via the `simetra-lint`
+//! binary).
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One finding: a rule violated at a file/line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to the scanned root.
+    pub file: PathBuf,
+    /// 1-based line number.
+    pub line: usize,
+    /// Short rule identifier (e.g. `unsafe-needs-safety-comment`).
+    pub rule: &'static str,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+/// Module directories that count as the query path for rule 2
+/// (ADR-004). `util/`, `coordinator/`, `obs/` and the binaries are
+/// build/serve plumbing where stable sorts are fine.
+const QUERY_PATH_DIRS: &[&str] = &["bounds/", "index/", "ingest/", "query/", "sparse/", "storage/"];
+
+/// Stable-sort method calls rejected by rule 2. `sort_unstable*` is the
+/// sanctioned spelling on these paths.
+const STABLE_SORTS: &[&str] = &[".sort(", ".sort_by(", ".sort_by_key(", ".sort_by_cached_key("];
+
+/// Walk every `.rs` file under `src_root` and collect violations.
+///
+/// Files are visited in sorted order so output is deterministic.
+pub fn check_tree(src_root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f.strip_prefix(src_root).unwrap_or(f).to_string_lossy().replace('\\', "/");
+        let source = fs::read_to_string(f)?;
+        out.extend(check_source(&rel, &source));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Check one file's source. `rel_path` is the path relative to `src/`
+/// with `/` separators (e.g. `storage/kernels.rs`); it decides which
+/// directory-scoped rules apply.
+pub fn check_source(rel_path: &str, source: &str) -> Vec<Violation> {
+    let lines: Vec<SplitLine> = source.lines().map(split_line).collect();
+    let mut out = Vec::new();
+    let on_query_path = QUERY_PATH_DIRS.iter().any(|d| rel_path.starts_with(d));
+    let in_sync = rel_path.starts_with("sync/") || rel_path == "sync.rs";
+
+    for (idx, l) in lines.iter().enumerate() {
+        let line_no = idx + 1;
+
+        // Rule 1: documented unsafe.
+        if contains_word(&l.code, "unsafe")
+            && !l.comment.contains("SAFETY:")
+            && !block_above_has(&lines, idx, &["SAFETY:", "# Safety"])
+        {
+            out.push(Violation {
+                file: PathBuf::from(rel_path),
+                line: line_no,
+                rule: "unsafe-needs-safety-comment",
+                message: "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc) \
+                          immediately above"
+                    .into(),
+            });
+        }
+
+        // Rule 2: no stable sorts on the query path (ADR-004).
+        if on_query_path
+            && STABLE_SORTS.iter().any(|s| l.code.contains(s))
+            && !l.comment.contains("lint: stable-sort")
+            && !block_above_has(&lines, idx, &["lint: stable-sort"])
+        {
+            out.push(Violation {
+                file: PathBuf::from(rel_path),
+                line: line_no,
+                rule: "stable-sort-on-query-path",
+                message: "stable sort on a query-path module (ADR-004); use \
+                          `sort_unstable*` or add a `lint: stable-sort` waiver comment"
+                    .into(),
+            });
+        }
+
+        // Rule 3: no FMA contraction (ADR-003).
+        if contains_word(&l.code, "mul_add")
+            && !l.comment.contains("lint: fma")
+            && !block_above_has(&lines, idx, &["lint: fma"])
+        {
+            out.push(Violation {
+                file: PathBuf::from(rel_path),
+                line: line_no,
+                rule: "fma-breaks-bit-exactness",
+                message: "`mul_add` fuses the mul/add rounding steps (ADR-003); compute \
+                          them separately or add a `lint: fma` waiver comment"
+                    .into(),
+            });
+        }
+
+        // Rule 4: atomics only through the sync shim.
+        if !in_sync
+            && (l.code.contains("std::sync::atomic") || l.code.contains("core::sync::atomic"))
+        {
+            out.push(Violation {
+                file: PathBuf::from(rel_path),
+                line: line_no,
+                rule: "raw-atomics-outside-sync",
+                message: "direct `std::sync::atomic` use outside `sync/`; import the \
+                          shim types from `crate::sync` so the model checker sees the op"
+                    .into(),
+            });
+        }
+
+        // Rule 5: justified lint suppressions.
+        if (l.code.contains("#[allow(") || l.code.contains("#![allow("))
+            && l.comment.trim().is_empty()
+            && !plain_comment_above(&lines, idx)
+        {
+            out.push(Violation {
+                file: PathBuf::from(rel_path),
+                line: line_no,
+                rule: "allow-needs-justification",
+                message: "`#[allow(..)]` without a justification comment on the same \
+                          line or immediately above"
+                    .into(),
+            });
+        }
+    }
+    out
+}
+
+/// One source line split into its code part (string-literal contents
+/// blanked) and its trailing `//` comment text (empty when none).
+struct SplitLine {
+    raw: String,
+    code: String,
+    comment: String,
+}
+
+/// Lexically split a line. Tracks double-quoted strings (with `\`
+/// escapes) and char/byte literals so a `//` or needle inside a
+/// literal never counts as code; lifetimes (`'a`) are left alone.
+/// Strings and literals reset at end of line — multi-line string
+/// bodies are rare enough here that per-line state is a fair trade.
+fn split_line(raw: &str) -> SplitLine {
+    let b = raw.as_bytes();
+    let mut code: Vec<u8> = Vec::with_capacity(b.len());
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                // String literal: keep the quotes, blank the contents.
+                code.push(b'"');
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            code.push(b'"');
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            b'\'' => {
+                // Char/byte literal vs lifetime: a literal closes with a
+                // quote within a short window, a lifetime never does.
+                let mut j = i + 1;
+                let mut close = None;
+                while j < b.len() && j <= i + 12 {
+                    match b[j] {
+                        b'\\' => j += 2,
+                        b'\'' => {
+                            close = Some(j);
+                            break;
+                        }
+                        _ => j += 1,
+                    }
+                }
+                match close {
+                    Some(end) => {
+                        code.extend_from_slice(b"' '");
+                        i = end + 1;
+                    }
+                    None => {
+                        code.push(b'\'');
+                        i += 1;
+                    }
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                comment = String::from_utf8_lossy(&b[i..]).into_owned();
+                break;
+            }
+            c => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    SplitLine {
+        raw: raw.to_string(),
+        code: String::from_utf8_lossy(&code).into_owned(),
+        comment,
+    }
+}
+
+/// Word-boundary search: `needle` in `hay` with no identifier char on
+/// either side (so `unsafe_op_in_unsafe_fn` does not match `unsafe`).
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let hb = hay.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !is_ident(hb[start - 1]);
+        let post_ok = end >= hb.len() || !is_ident(hb[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Walk the contiguous block of comment/attribute lines directly above
+/// line `idx` and report whether any comment contains one of `needles`.
+fn block_above_has(lines: &[SplitLine], idx: usize, needles: &[&str]) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].raw.trim_start();
+        if t.starts_with("//") {
+            if needles.iter().any(|n| t.contains(n)) {
+                return true;
+            }
+        } else if t.starts_with("#[") || t.starts_with("#!") {
+            continue;
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Like [`block_above_has`] but just requires a plain (non-doc) `//`
+/// comment to exist in the block — used for `#[allow]` justification,
+/// where any explanation counts.
+fn plain_comment_above(lines: &[SplitLine], idx: usize) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].raw.trim_start();
+        if t.starts_with("///") || t.starts_with("//!") {
+            continue;
+        }
+        if t.starts_with("//") {
+            return true;
+        }
+        if t.starts_with("#[") || t.starts_with("#!") {
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        check_source(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn undocumented_unsafe_is_flagged_and_safety_comment_clears_it() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules("query/x.rs", bad), vec!["unsafe-needs-safety-comment"]);
+
+        let good =
+            "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller owns p.\n    unsafe { *p }\n}\n";
+        assert!(rules("query/x.rs", good).is_empty());
+
+        let doc =
+            "/// # Safety\n/// Caller owns p.\nunsafe fn f(p: *const u8) -> u8 {\n    *p\n}\n";
+        assert!(rules("query/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn unsafe_inside_comments_strings_and_idents_is_ignored() {
+        let src = "//! unsafe is discussed here\nconst X: &str = \"unsafe\";\nfn unsafe_op_in_unsafe_fn_lookalike() {}\n";
+        assert!(rules("query/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn stable_sort_scoping_and_waiver() {
+        let sort = "fn f(v: &mut Vec<u32>) {\n    v.sort_by_key(|x| *x);\n}\n";
+        assert_eq!(rules("index/x.rs", sort), vec!["stable-sort-on-query-path"]);
+        // Out of scope: util and binaries may sort stably.
+        assert!(rules("util/x.rs", sort).is_empty());
+
+        let waived =
+            "fn f(v: &mut Vec<u32>) {\n    // lint: stable-sort — build path.\n    v.sort_by_key(|x| *x);\n}\n";
+        assert!(rules("index/x.rs", waived).is_empty());
+
+        let unstable = "fn f(v: &mut Vec<u32>) {\n    v.sort_unstable();\n}\n";
+        assert!(rules("index/x.rs", unstable).is_empty());
+    }
+
+    #[test]
+    fn mul_add_is_flagged_everywhere() {
+        let src = "fn f(a: f64, b: f64, c: f64) -> f64 {\n    a.mul_add(b, c)\n}\n";
+        assert_eq!(rules("util/x.rs", src), vec!["fma-breaks-bit-exactness"]);
+    }
+
+    #[test]
+    fn raw_atomics_allowed_only_under_sync() {
+        let src = "use std::sync::atomic::AtomicU64;\n";
+        assert_eq!(rules("obs/mod.rs", src), vec!["raw-atomics-outside-sync"]);
+        assert!(rules("sync/model.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_needs_a_comment() {
+        let bare = "#[allow(dead_code)]\nfn f() {}\n";
+        assert_eq!(rules("query/x.rs", bare), vec!["allow-needs-justification"]);
+
+        let same_line = "#[allow(dead_code)] // kept for doc anchoring\nfn f() {}\n";
+        assert!(rules("query/x.rs", same_line).is_empty());
+
+        let above = "// kept for doc anchoring\n#[allow(dead_code)]\nfn f() {}\n";
+        assert!(rules("query/x.rs", above).is_empty());
+
+        // Doc comments alone do not justify a suppression.
+        let doc_only = "/// Does things.\n#[allow(dead_code)]\nfn f() {}\n";
+        assert_eq!(rules("query/x.rs", doc_only), vec!["allow-needs-justification"]);
+    }
+
+    #[test]
+    fn char_literals_do_not_derail_the_scanner() {
+        // The quote char literal must not open a string that would
+        // swallow the rest of the line (a real stable sort follows).
+        let src =
+            "fn f(v: &mut Vec<char>) {\n    let _q = '\"'; v.sort_by_key(|c| *c as u32);\n}\n";
+        assert_eq!(rules("index/x.rs", src), vec!["stable-sort-on-query-path"]);
+    }
+
+    #[test]
+    fn the_crate_source_tree_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let violations = check_tree(&root).expect("walk src");
+        assert!(
+            violations.is_empty(),
+            "lint violations:\n{}",
+            violations.iter().map(|v| format!("  {v}\n")).collect::<String>()
+        );
+    }
+}

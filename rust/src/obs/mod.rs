@@ -26,9 +26,10 @@
 //! same snapshot via [`ObsRegistry::render_into`].
 
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::sync::{AtomicU64, Ordering};
 
 use crate::bounds::BoundKind;
 
@@ -437,6 +438,10 @@ impl Default for SlowRing {
 // Global registry
 // ---------------------------------------------------------------------------
 
+// The `_ZERO` consts below are deliberate const-seeded templates: each use
+// site *copies* the interior-mutable value into a fresh static cell (array
+// repetition in `ObsRegistry::new`), which is exactly the pattern the lint
+// exists to flag when done by accident.
 #[allow(clippy::declare_interior_mutable_const)]
 const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
 
@@ -446,10 +451,12 @@ struct SlackHist {
     sum_micros: AtomicU64,
 }
 
+// Const template, copied per array slot (see ATOMIC_ZERO above).
 #[allow(clippy::declare_interior_mutable_const)]
 const SLACK_HIST_ZERO: SlackHist =
     SlackHist { buckets: [ATOMIC_ZERO; SLACK_BUCKETS], sum_micros: ATOMIC_ZERO };
 
+// Const template, copied per array slot (see ATOMIC_ZERO above).
 #[allow(clippy::declare_interior_mutable_const)]
 const SLACK_ROW_ZERO: [SlackHist; BOUND_KINDS] = [SLACK_HIST_ZERO; BOUND_KINDS];
 
@@ -459,6 +466,7 @@ struct SpanHist {
     sum_ns: AtomicU64,
 }
 
+// Const template, copied per array slot (see ATOMIC_ZERO above).
 #[allow(clippy::declare_interior_mutable_const)]
 const SPAN_HIST_ZERO: SpanHist =
     SpanHist { buckets: [ATOMIC_ZERO; SPAN_BUCKETS], sum_ns: ATOMIC_ZERO };
@@ -471,6 +479,7 @@ struct WorkCell {
     pruned: AtomicU64,
 }
 
+// Const template, copied per array slot (see ATOMIC_ZERO above).
 #[allow(clippy::declare_interior_mutable_const)]
 const WORK_CELL_ZERO: WorkCell = WorkCell {
     queries: ATOMIC_ZERO,

@@ -15,6 +15,8 @@ impl SparseVec {
     /// Build from (index, value) pairs; sorts, merges duplicate indexes
     /// (summing), drops explicit zeros, and L2-normalizes.
     pub fn new(mut pairs: Vec<(u32, f32)>, dim: usize) -> Self {
+        // lint: stable-sort — construction path, not a query path; order
+        // ties (duplicate indexes) must keep insertion order for the merge.
         pairs.sort_by_key(|&(i, _)| i);
         let mut idx = Vec::with_capacity(pairs.len());
         let mut val: Vec<f32> = Vec::with_capacity(pairs.len());

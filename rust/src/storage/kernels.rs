@@ -23,11 +23,11 @@
 //! `SIMETRA_KERNEL` env var, else scalar), and are inherited by every view,
 //! index, shard, and ingest generation built over the store.
 
-use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, OnceLock};
 
 use crate::index::KnnHeap;
 use crate::obs::{Stage, TraceBuf, TraceEvent, OBS};
+use crate::sync::{AtomicU64, Ordering::Relaxed};
 
 use super::dot_slice;
 
@@ -531,6 +531,8 @@ pub trait KernelBackend: Send + Sync {
     /// one cached `QuantQuery` per slot (`scratches[slot]`), amortized
     /// across every row block of the batch. Returns exact evaluations
     /// (= sink invocations).
+    // Wide by design: the multi-query kernel contract threads every
+    // per-slot buffer through one call (ADR-006).
     #[allow(clippy::too_many_arguments)]
     fn scan_multi(
         &self,
@@ -700,8 +702,14 @@ impl KernelBackend for SimdKernel {
             match sel {
                 RowSel::Block { start, n } => {
                     let block = &s.flat[start * s.d..(start + n) * s.d];
+                    // SAFETY: `Isa::Avx` is only produced by `detect_isa`
+                    // after a runtime AVX check, and the assert above pins
+                    // every query row to exactly `d` elements.
                     unsafe { x86::block_multi_avx(qb.as_flat(), s.d, live, block, n, sink) };
                 }
+                // SAFETY: same AVX/dimension argument as the Block arm;
+                // gathered row indices are bounds-checked against `flat`
+                // inside the kernel.
                 RowSel::Gather { rows, base, .. } => unsafe {
                     x86::gather_multi_avx(qb.as_flat(), s.d, live, s.flat, rows, base, sink)
                 },
@@ -879,6 +887,8 @@ impl KernelBackend for QuantizedI8Kernel {
         })
     }
 
+    // Wide by design: mirrors the kernel trait's multi-query contract
+    // (ADR-006).
     #[allow(clippy::too_many_arguments)]
     fn scan_multi(
         &self,
@@ -1094,6 +1104,8 @@ fn sim_block_isa(isa: Isa, q: &[f32], block: &[f32], d: usize, n: usize, sink: S
     match isa {
         Isa::Scalar => scalar_block(q, block, d, n, sink),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx` is only produced by `detect_isa` after a
+        // runtime AVX check, and the asserts above pin `q`/`block` lengths.
         Isa::Avx => unsafe { x86::block_avx(q, block, d, n, sink) },
     }
 }
@@ -1113,6 +1125,9 @@ fn sim_gather_isa(
     match isa {
         Isa::Scalar => scalar_gather(q, flat, d, rows, base, sink),
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx` is only produced by `detect_isa` after a
+        // runtime AVX check; `q.len() == d` is asserted above and row
+        // slices are bounds-checked against `flat` inside the kernel.
         Isa::Avx => unsafe { x86::gather_avx(q, flat, d, rows, base, sink) },
     }
 }
@@ -1219,6 +1234,13 @@ fn scalar_gather(q: &[f32], flat: &[f32], d: usize, rows: &[u32], base: usize, s
 /// the scalar code, so every similarity is bit-identical.
 #[cfg(target_arch = "x86_64")]
 mod x86 {
+    // On toolchains with safe target-feature intrinsics (Rust 1.86+) the
+    // register-only intrinsic calls below are safe when the enclosing fn
+    // enables `avx`, so the explicit `unsafe {}` blocks — required by
+    // `deny(unsafe_op_in_unsafe_fn)` on older toolchains — become
+    // redundant and would trip `unused_unsafe`.
+    #![allow(unused_unsafe)]
+
     use std::arch::x86_64::{
         __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_cvtps_pd, _mm256_extractf128_pd,
         _mm256_mul_pd, _mm256_setzero_pd, _mm_cvtsd_f64, _mm_loadu_ps, _mm_unpackhi_pd,
@@ -1226,46 +1248,71 @@ mod x86 {
 
     use super::{MultiSimSink, SimSink};
 
-    /// Widen 4 f32s at `p[j..j+4]` to f64 lanes. Caller guarantees bounds.
+    /// Widen 4 f32s at `p[j..j+4]` to f64 lanes.
+    ///
+    /// # Safety
+    /// Requires `j + 4 <= p.len()` and the `avx` target feature.
     #[inline]
     #[target_feature(enable = "avx")]
     unsafe fn load4(p: &[f32], j: usize) -> __m256d {
         debug_assert!(j + 4 <= p.len());
-        _mm256_cvtps_pd(_mm_loadu_ps(p.as_ptr().add(j)))
+        // SAFETY: the caller guarantees `j + 4 <= p.len()` (checked above
+        // in debug builds), so the 16-byte unaligned load stays in bounds.
+        unsafe { _mm256_cvtps_pd(_mm_loadu_ps(p.as_ptr().add(j))) }
     }
 
     /// Per-lane `acc + q * r` as separate mul/add (never fused).
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature.
     #[inline]
     #[target_feature(enable = "avx")]
     unsafe fn muladd(acc: __m256d, q: __m256d, r: __m256d) -> __m256d {
-        _mm256_add_pd(acc, _mm256_mul_pd(q, r))
+        // SAFETY: register-only arithmetic intrinsics; `avx` is enabled on
+        // this fn and verified at runtime by the dispatcher.
+        unsafe { _mm256_add_pd(acc, _mm256_mul_pd(q, r)) }
     }
 
     /// Combine lanes in the scalar order `(s0 + s1) + (s2 + s3)`.
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature.
     #[inline]
     #[target_feature(enable = "avx")]
     unsafe fn hsum(acc: __m256d) -> f64 {
-        let lo = _mm256_castpd256_pd128(acc);
-        let hi = _mm256_extractf128_pd(acc, 1);
-        let s0 = _mm_cvtsd_f64(lo);
-        let s1 = _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo));
-        let s2 = _mm_cvtsd_f64(hi);
-        let s3 = _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi));
-        (s0 + s1) + (s2 + s3)
+        // SAFETY: register-only lane-extraction intrinsics; `avx` is
+        // enabled on this fn and verified at runtime by the dispatcher.
+        unsafe {
+            let lo = _mm256_castpd256_pd128(acc);
+            let hi = _mm256_extractf128_pd(acc, 1);
+            let s0 = _mm_cvtsd_f64(lo);
+            let s1 = _mm_cvtsd_f64(_mm_unpackhi_pd(lo, lo));
+            let s2 = _mm_cvtsd_f64(hi);
+            let s3 = _mm_cvtsd_f64(_mm_unpackhi_pd(hi, hi));
+            (s0 + s1) + (s2 + s3)
+        }
     }
 
     /// One row; bit-identical to [`dot_slice`].
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature; row length is asserted.
     #[target_feature(enable = "avx")]
     pub unsafe fn dot1(q: &[f32], r: &[f32]) -> f64 {
         let n = q.len();
         assert_eq!(r.len(), n, "dot1: dimension mismatch ({} vs {})", q.len(), r.len());
         let chunks = n / 4;
-        let mut acc = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let j = i * 4;
-            acc = muladd(acc, load4(q, j), load4(r, j));
-        }
-        let mut sum = hsum(acc);
+        // SAFETY: `r.len() == q.len()` is asserted above, so every
+        // `load4(_, i * 4)` with `i < chunks` stays in bounds for both
+        // slices; `avx` is enabled on this fn.
+        let mut sum = unsafe {
+            let mut acc = _mm256_setzero_pd();
+            for i in 0..chunks {
+                let j = i * 4;
+                acc = muladd(acc, load4(q, j), load4(r, j));
+            }
+            hsum(acc)
+        };
         for j in chunks * 4..n {
             sum += q[j] as f64 * r[j] as f64;
         }
@@ -1273,22 +1320,30 @@ mod x86 {
     }
 
     /// Two rows, query widened once per chunk.
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature and `r0.len() == r1.len() ==
+    /// q.len()` (callers slice rows to exactly `d` elements).
     #[target_feature(enable = "avx")]
     unsafe fn dot2(q: &[f32], r0: &[f32], r1: &[f32]) -> (f64, f64) {
         let n = q.len();
         debug_assert_eq!(r0.len(), n);
         debug_assert_eq!(r1.len(), n);
         let chunks = n / 4;
-        let mut a = _mm256_setzero_pd();
-        let mut b = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let j = i * 4;
-            let qv = load4(q, j);
-            a = muladd(a, qv, load4(r0, j));
-            b = muladd(b, qv, load4(r1, j));
-        }
-        let mut sa = hsum(a);
-        let mut sb = hsum(b);
+        // SAFETY: rows are `n` long (caller contract, checked above in
+        // debug builds), so each `load4` stays in bounds; `avx` is enabled
+        // on this fn.
+        let (mut sa, mut sb) = unsafe {
+            let mut a = _mm256_setzero_pd();
+            let mut b = _mm256_setzero_pd();
+            for i in 0..chunks {
+                let j = i * 4;
+                let qv = load4(q, j);
+                a = muladd(a, qv, load4(r0, j));
+                b = muladd(b, qv, load4(r1, j));
+            }
+            (hsum(a), hsum(b))
+        };
         for j in chunks * 4..n {
             sa += q[j] as f64 * r0[j] as f64;
             sb += q[j] as f64 * r1[j] as f64;
@@ -1297,6 +1352,10 @@ mod x86 {
     }
 
     /// Four rows, query widened once per chunk.
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature and all four rows exactly
+    /// `q.len()` elements (callers slice rows to exactly `d`).
     #[target_feature(enable = "avx")]
     unsafe fn dot4(
         q: &[f32],
@@ -1307,22 +1366,23 @@ mod x86 {
     ) -> (f64, f64, f64, f64) {
         let n = q.len();
         let chunks = n / 4;
-        let mut a = _mm256_setzero_pd();
-        let mut b = _mm256_setzero_pd();
-        let mut c = _mm256_setzero_pd();
-        let mut e = _mm256_setzero_pd();
-        for i in 0..chunks {
-            let j = i * 4;
-            let qv = load4(q, j);
-            a = muladd(a, qv, load4(r0, j));
-            b = muladd(b, qv, load4(r1, j));
-            c = muladd(c, qv, load4(r2, j));
-            e = muladd(e, qv, load4(r3, j));
-        }
-        let mut s0 = hsum(a);
-        let mut s1 = hsum(b);
-        let mut s2 = hsum(c);
-        let mut s3 = hsum(e);
+        // SAFETY: rows are `n` long (caller contract), so each `load4`
+        // stays in bounds; `avx` is enabled on this fn.
+        let (mut s0, mut s1, mut s2, mut s3) = unsafe {
+            let mut a = _mm256_setzero_pd();
+            let mut b = _mm256_setzero_pd();
+            let mut c = _mm256_setzero_pd();
+            let mut e = _mm256_setzero_pd();
+            for i in 0..chunks {
+                let j = i * 4;
+                let qv = load4(q, j);
+                a = muladd(a, qv, load4(r0, j));
+                b = muladd(b, qv, load4(r1, j));
+                c = muladd(c, qv, load4(r2, j));
+                e = muladd(e, qv, load4(r3, j));
+            }
+            (hsum(a), hsum(b), hsum(c), hsum(e))
+        };
         for j in chunks * 4..n {
             let qd = q[j] as f64;
             s0 += qd * r0[j] as f64;
@@ -1333,18 +1393,25 @@ mod x86 {
         (s0.clamp(-1.0, 1.0), s1.clamp(-1.0, 1.0), s2.clamp(-1.0, 1.0), s3.clamp(-1.0, 1.0))
     }
 
+    /// # Safety
+    /// Requires the `avx` target feature, `q.len() == d`, and
+    /// `block.len() == n * d` (asserted by the dispatcher).
     #[target_feature(enable = "avx")]
     pub unsafe fn block_avx(q: &[f32], block: &[f32], d: usize, n: usize, sink: SimSink<'_>) {
         let mut i = 0usize;
         while i + 4 <= n {
             let b = i * d;
-            let (s0, s1, s2, s3) = dot4(
-                q,
-                &block[b..b + d],
-                &block[b + d..b + 2 * d],
-                &block[b + 2 * d..b + 3 * d],
-                &block[b + 3 * d..b + 4 * d],
-            );
+            // SAFETY: each row slice is exactly `d == q.len()` elements
+            // (dispatcher-asserted); `avx` is enabled on this fn.
+            let (s0, s1, s2, s3) = unsafe {
+                dot4(
+                    q,
+                    &block[b..b + d],
+                    &block[b + d..b + 2 * d],
+                    &block[b + 2 * d..b + 3 * d],
+                    &block[b + 3 * d..b + 4 * d],
+                )
+            };
             sink(i, s0);
             sink(i + 1, s1);
             sink(i + 2, s2);
@@ -1353,13 +1420,15 @@ mod x86 {
         }
         while i + 2 <= n {
             let b = i * d;
-            let (s0, s1) = dot2(q, &block[b..b + d], &block[b + d..b + 2 * d]);
+            // SAFETY: as above — `d`-element row slices, `avx` enabled.
+            let (s0, s1) = unsafe { dot2(q, &block[b..b + d], &block[b + d..b + 2 * d]) };
             sink(i, s0);
             sink(i + 1, s1);
             i += 2;
         }
         if i < n {
-            sink(i, dot1(q, &block[i * d..(i + 1) * d]));
+            // SAFETY: as above — `d`-element row slice, `avx` enabled.
+            sink(i, unsafe { dot1(q, &block[i * d..(i + 1) * d]) });
         }
     }
 
@@ -1368,6 +1437,11 @@ mod x86 {
     /// against every live query. Per (query, row) the reduction is the
     /// same `dot4`/`dot2`/`dot1` the single-query kernel runs, so every
     /// sim stays bit-identical to the scalar path.
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature and `qs` packed as `d`-element
+    /// query rows (dispatcher-asserted); `block`/`live` indexing is
+    /// bounds-checked.
     #[target_feature(enable = "avx")]
     pub unsafe fn block_multi_avx(
         qs: &[f32],
@@ -1388,7 +1462,9 @@ mod x86 {
                 &block[b + 3 * d..b + 4 * d],
             );
             for &j in live {
-                let (s0, s1, s2, s3) = dot4(q(j), r0, r1, r2, r3);
+                // SAFETY: query and row slices are exactly `d` elements;
+                // `avx` is enabled on this fn.
+                let (s0, s1, s2, s3) = unsafe { dot4(q(j), r0, r1, r2, r3) };
                 sink(j as usize, i, s0);
                 sink(j as usize, i + 1, s1);
                 sink(j as usize, i + 2, s2);
@@ -1400,7 +1476,8 @@ mod x86 {
             let b = i * d;
             let (r0, r1) = (&block[b..b + d], &block[b + d..b + 2 * d]);
             for &j in live {
-                let (s0, s1) = dot2(q(j), r0, r1);
+                // SAFETY: as above — `d`-element slices, `avx` enabled.
+                let (s0, s1) = unsafe { dot2(q(j), r0, r1) };
                 sink(j as usize, i, s0);
                 sink(j as usize, i + 1, s1);
             }
@@ -1409,13 +1486,19 @@ mod x86 {
         if i < n {
             let r = &block[i * d..(i + 1) * d];
             for &j in live {
-                sink(j as usize, i, dot1(q(j), r));
+                // SAFETY: as above — `d`-element slices, `avx` enabled.
+                sink(j as usize, i, unsafe { dot1(q(j), r) });
             }
         }
     }
 
     /// Gather form of [`block_multi_avx`]: same row-block-outer shape over
     /// gathered rows.
+    ///
+    /// # Safety
+    /// Requires the `avx` target feature and `qs` packed as `d`-element
+    /// query rows (dispatcher-asserted); gathered rows are bounds-checked
+    /// against `flat`.
     #[target_feature(enable = "avx")]
     pub unsafe fn gather_multi_avx(
         qs: &[f32],
@@ -1435,7 +1518,9 @@ mod x86 {
         while i + 4 <= rows.len() {
             let (r0, r1, r2, r3) = (row(i), row(i + 1), row(i + 2), row(i + 3));
             for &j in live {
-                let (s0, s1, s2, s3) = dot4(q(j), r0, r1, r2, r3);
+                // SAFETY: query and row slices are exactly `d` elements;
+                // `avx` is enabled on this fn.
+                let (s0, s1, s2, s3) = unsafe { dot4(q(j), r0, r1, r2, r3) };
                 sink(j as usize, i, s0);
                 sink(j as usize, i + 1, s1);
                 sink(j as usize, i + 2, s2);
@@ -1446,7 +1531,8 @@ mod x86 {
         while i + 2 <= rows.len() {
             let (r0, r1) = (row(i), row(i + 1));
             for &j in live {
-                let (s0, s1) = dot2(q(j), r0, r1);
+                // SAFETY: as above — `d`-element slices, `avx` enabled.
+                let (s0, s1) = unsafe { dot2(q(j), r0, r1) };
                 sink(j as usize, i, s0);
                 sink(j as usize, i + 1, s1);
             }
@@ -1455,11 +1541,16 @@ mod x86 {
         if i < rows.len() {
             let r = row(i);
             for &j in live {
-                sink(j as usize, i, dot1(q(j), r));
+                // SAFETY: as above — `d`-element slices, `avx` enabled.
+                sink(j as usize, i, unsafe { dot1(q(j), r) });
             }
         }
     }
 
+    /// # Safety
+    /// Requires the `avx` target feature and `q.len() == d`
+    /// (dispatcher-asserted); gathered rows are bounds-checked against
+    /// `flat`.
     #[target_feature(enable = "avx")]
     pub unsafe fn gather_avx(
         q: &[f32],
@@ -1475,7 +1566,9 @@ mod x86 {
         };
         let mut i = 0usize;
         while i + 4 <= rows.len() {
-            let (s0, s1, s2, s3) = dot4(q, row(i), row(i + 1), row(i + 2), row(i + 3));
+            // SAFETY: row slices are exactly `d == q.len()` elements;
+            // `avx` is enabled on this fn.
+            let (s0, s1, s2, s3) = unsafe { dot4(q, row(i), row(i + 1), row(i + 2), row(i + 3)) };
             sink(i, s0);
             sink(i + 1, s1);
             sink(i + 2, s2);
@@ -1483,13 +1576,15 @@ mod x86 {
             i += 4;
         }
         while i + 2 <= rows.len() {
-            let (s0, s1) = dot2(q, row(i), row(i + 1));
+            // SAFETY: as above — `d`-element row slices, `avx` enabled.
+            let (s0, s1) = unsafe { dot2(q, row(i), row(i + 1)) };
             sink(i, s0);
             sink(i + 1, s1);
             i += 2;
         }
         if i < rows.len() {
-            sink(i, dot1(q, row(i)));
+            // SAFETY: as above — `d`-element row slice, `avx` enabled.
+            sink(i, unsafe { dot1(q, row(i)) });
         }
     }
 }

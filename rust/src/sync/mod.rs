@@ -1,0 +1,420 @@
+//! Synchronization shim layer: the one place in the tree allowed to touch
+//! `std::sync::atomic` directly (enforced by `simetra-lint`).
+//!
+//! Every atomic, yield point, and blocking primitive the crate's concurrent
+//! code uses goes through the wrappers in this module. In a normal build
+//! each wrapper is a `#[repr(transparent)]`-thin delegate to the `std`
+//! primitive with one predicted branch of overhead (a thread-local check).
+//! Inside a [`model::explore`] run, the same wrappers become *schedule
+//! points*: each operation parks the calling thread and hands control to a
+//! deterministic, deviation-bounded scheduler that enumerates thread
+//! interleavings and replays them exactly (ADR-010). That is what lets the
+//! hazard-pointer [`crate::ingest::swap::SnapshotCell`], the
+//! [`crate::obs::ObsRegistry`] hot counters, and the server worker-pool
+//! [`queue::RunQueue`] be model-checked by plain `cargo test` with no
+//! nightly features and no external tooling.
+//!
+//! The switch is per-thread and runtime: threads spawned by the model
+//! scheduler take the instrumented path, every other thread takes the
+//! `std` path. The two coexist safely — instrumented lock acquisition is a
+//! `try_lock` spin, which interoperates with real blocking lockers.
+
+// Justification: this module *is* the shim boundary — it must name the raw
+// `std` atomics and `std::thread::yield_now` that `clippy.toml` disallows
+// everywhere else in the crate.
+#![allow(clippy::disallowed_types, clippy::disallowed_methods)]
+
+pub mod model;
+pub mod queue;
+
+use std::sync::atomic as std_atomic;
+use std::sync::{LockResult, PoisonError, TryLockError};
+use std::time::Duration;
+
+pub use std_atomic::Ordering;
+
+macro_rules! shim_atomic_int {
+    ($(#[$doc:meta])* $name:ident, $std:ty, $prim:ty) => {
+        $(#[$doc])*
+        #[derive(Default)]
+        #[repr(transparent)]
+        pub struct $name($std);
+
+        impl $name {
+            #[inline]
+            pub const fn new(v: $prim) -> $name {
+                $name(<$std>::new(v))
+            }
+
+            #[inline]
+            pub fn load(&self, order: Ordering) -> $prim {
+                model::op();
+                self.0.load(order)
+            }
+
+            #[inline]
+            pub fn store(&self, v: $prim, order: Ordering) {
+                model::op();
+                self.0.store(v, order)
+            }
+
+            #[inline]
+            pub fn swap(&self, v: $prim, order: Ordering) -> $prim {
+                model::op();
+                self.0.swap(v, order)
+            }
+
+            #[inline]
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                model::op();
+                self.0.compare_exchange(current, new, success, failure)
+            }
+
+            #[inline]
+            pub fn fetch_add(&self, v: $prim, order: Ordering) -> $prim {
+                model::op();
+                self.0.fetch_add(v, order)
+            }
+
+            #[inline]
+            pub fn fetch_sub(&self, v: $prim, order: Ordering) -> $prim {
+                model::op();
+                self.0.fetch_sub(v, order)
+            }
+
+            #[inline]
+            pub fn fetch_max(&self, v: $prim, order: Ordering) -> $prim {
+                model::op();
+                self.0.fetch_max(v, order)
+            }
+
+            /// Exclusive access needs no schedule point: `&mut self` proves
+            /// no other thread can race this read.
+            #[inline]
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.0.get_mut()
+            }
+
+            #[inline]
+            pub fn into_inner(self) -> $prim {
+                self.0.into_inner()
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                self.0.fmt(f)
+            }
+        }
+    };
+}
+
+shim_atomic_int!(
+    /// Shim over [`std::sync::atomic::AtomicU64`]; a model schedule point
+    /// when the calling thread belongs to a [`model::explore`] run.
+    AtomicU64,
+    std_atomic::AtomicU64,
+    u64
+);
+shim_atomic_int!(
+    /// Shim over [`std::sync::atomic::AtomicUsize`]; a model schedule point
+    /// when the calling thread belongs to a [`model::explore`] run.
+    AtomicUsize,
+    std_atomic::AtomicUsize,
+    usize
+);
+
+/// Shim over [`std::sync::atomic::AtomicBool`]; a model schedule point when
+/// the calling thread belongs to a [`model::explore`] run.
+#[derive(Default)]
+#[repr(transparent)]
+pub struct AtomicBool(std_atomic::AtomicBool);
+
+impl AtomicBool {
+    #[inline]
+    pub const fn new(v: bool) -> AtomicBool {
+        AtomicBool(std_atomic::AtomicBool::new(v))
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> bool {
+        model::op();
+        self.0.load(order)
+    }
+
+    #[inline]
+    pub fn store(&self, v: bool, order: Ordering) {
+        model::op();
+        self.0.store(v, order)
+    }
+
+    #[inline]
+    pub fn swap(&self, v: bool, order: Ordering) -> bool {
+        model::op();
+        self.0.swap(v, order)
+    }
+
+    /// Exclusive access needs no schedule point (`&mut self`).
+    #[inline]
+    pub fn get_mut(&mut self) -> &mut bool {
+        self.0.get_mut()
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// Shim over [`std::sync::atomic::AtomicPtr`]; a model schedule point when
+/// the calling thread belongs to a [`model::explore`] run.
+#[repr(transparent)]
+pub struct AtomicPtr<T>(std_atomic::AtomicPtr<T>);
+
+impl<T> AtomicPtr<T> {
+    #[inline]
+    pub const fn new(p: *mut T) -> AtomicPtr<T> {
+        AtomicPtr(std_atomic::AtomicPtr::new(p))
+    }
+
+    #[inline]
+    pub fn load(&self, order: Ordering) -> *mut T {
+        model::op();
+        self.0.load(order)
+    }
+
+    #[inline]
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        model::op();
+        self.0.store(p, order)
+    }
+
+    #[inline]
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        model::op();
+        self.0.swap(p, order)
+    }
+
+    /// Exclusive access needs no schedule point (`&mut self`).
+    #[inline]
+    pub fn get_mut(&mut self) -> &mut *mut T {
+        self.0.get_mut()
+    }
+}
+
+impl<T> std::fmt::Debug for AtomicPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+/// Cooperative yield: the `std` yield normally, a *voluntary* schedule
+/// point (`Yield` kind — the model's default policy switches threads here
+/// without charging a preemption) inside a model run.
+#[inline]
+pub fn yield_now() {
+    if model::active() {
+        model::op_yield();
+    } else {
+        std::thread::yield_now();
+    }
+}
+
+/// Shim over [`std::sync::Mutex`]. Outside a model run, `lock` delegates
+/// to the blocking `std` lock. Inside one it spins on `try_lock` with a
+/// yield schedule point per attempt, so the scheduler can run the holder
+/// to its release instead of deadlocking the single-stepped execution.
+pub struct Mutex<T> {
+    inner: std::sync::Mutex<T>,
+}
+
+/// Guard for [`Mutex`]; carries its lock so [`Condvar::wait_timeout`] can
+/// re-acquire under the model (the `std` guard hides its mutex).
+pub struct MutexGuard<'a, T> {
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Mutex<T> {
+        Mutex { inner: std::sync::Mutex::new(value) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if model::active() {
+            loop {
+                match self.inner.try_lock() {
+                    Ok(g) => return Ok(MutexGuard { inner: Some(g), lock: self }),
+                    Err(TryLockError::Poisoned(pe)) => {
+                        return Err(PoisonError::new(MutexGuard {
+                            inner: Some(pe.into_inner()),
+                            lock: self,
+                        }));
+                    }
+                    // Contended: let the scheduler run other threads (one
+                    // of them holds the lock and will release it).
+                    Err(TryLockError::WouldBlock) => model::op_yield(),
+                }
+            }
+        }
+        match self.inner.lock() {
+            Ok(g) => Ok(MutexGuard { inner: Some(g), lock: self }),
+            Err(pe) => Err(PoisonError::new(MutexGuard {
+                inner: Some(pe.into_inner()),
+                lock: self,
+            })),
+        }
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut().map_err(|pe| PoisonError::new(pe.into_inner()))
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard holds the lock")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard holds the lock")
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`]. The crate's own type: `std`'s
+/// `WaitTimeoutResult` has no public constructor, and the model path must
+/// fabricate one for its simulated (always-spurious) wakeups.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult {
+    timed_out: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+}
+
+/// Shim over [`std::sync::Condvar`]. Under the model, `wait_timeout`
+/// releases the lock, yields one schedule point, and re-acquires — i.e.
+/// every wait is a spurious wakeup. That is sound (and complete for
+/// timeout-polling waiters like [`queue::RunQueue::pop`]): correct condvar
+/// code must re-check its predicate in a loop anyway, and modeling waits as
+/// spurious lets the bounded scheduler explore waiter/notifier orders
+/// without modeling wakeup sets.
+pub struct Condvar {
+    inner: std::sync::Condvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar { inner: std::sync::Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        model::op();
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        model::op();
+        self.inner.notify_all();
+    }
+
+    #[allow(clippy::type_complexity)] // mirrors the std signature
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = guard.lock;
+        let std_guard = guard.inner.take().expect("guard holds the lock");
+        if model::active() {
+            drop(std_guard);
+            model::op_yield();
+            let timed_out = WaitTimeoutResult { timed_out: true };
+            return match lock.lock() {
+                Ok(g) => Ok((g, timed_out)),
+                Err(pe) => Err(PoisonError::new((pe.into_inner(), timed_out))),
+            };
+        }
+        match self.inner.wait_timeout(std_guard, dur) {
+            Ok((g, wtr)) => Ok((
+                MutexGuard { inner: Some(g), lock },
+                WaitTimeoutResult { timed_out: wtr.timed_out() },
+            )),
+            Err(pe) => {
+                let (g, wtr) = pe.into_inner();
+                Err(PoisonError::new((
+                    MutexGuard { inner: Some(g), lock },
+                    WaitTimeoutResult { timed_out: wtr.timed_out() },
+                )))
+            }
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn atomics_delegate_outside_a_model_run() {
+        let a = AtomicU64::new(5);
+        assert_eq!(a.fetch_add(2, Ordering::Relaxed), 5);
+        assert_eq!(a.load(Ordering::SeqCst), 7);
+        assert_eq!(a.swap(1, Ordering::SeqCst), 7);
+        assert_eq!(a.fetch_max(9, Ordering::Relaxed), 1);
+        let b = AtomicBool::new(false);
+        assert!(!b.swap(true, Ordering::SeqCst));
+        assert!(b.load(Ordering::SeqCst));
+        let u = AtomicUsize::new(0);
+        assert!(u.compare_exchange(0, 3, Ordering::SeqCst, Ordering::SeqCst).is_ok());
+        assert_eq!(u.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn mutex_and_condvar_delegate_outside_a_model_run() {
+        let m = Arc::new(Mutex::new(0u32));
+        let cv = Arc::new(Condvar::new());
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        let g = m.lock().unwrap();
+        let (g, wtr) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        assert!(wtr.timed_out());
+        assert_eq!(*g, 1);
+    }
+
+    #[test]
+    fn guard_releases_on_drop() {
+        let m = Mutex::new(7u32);
+        drop(m.lock().unwrap());
+        assert_eq!(*m.lock().unwrap(), 7);
+    }
+}

@@ -1,0 +1,808 @@
+//! Deterministic, deviation-bounded concurrency model checker (ADR-010).
+//!
+//! [`explore`] runs a small multi-threaded scenario over and over, each
+//! time under a different thread interleaving, until the bounded schedule
+//! space is exhausted or an invariant breaks. Scheduling is *serialized*:
+//! real OS threads are spawned per execution, but only one is ever granted
+//! the CPU at a time, and every shim operation in [`crate::sync`] parks
+//! the thread until the scheduler grants it the next step. Because the
+//! program under test is deterministic apart from thread order, recording
+//! the chosen thread per step yields an exactly replayable schedule — the
+//! classic stateless-exploration design (CHESS-style iterative context
+//! bounding) rather than full DPOR: schedules are enumerated depth-first,
+//! each charged one unit of [`Config::max_preemptions`] per *deviation*
+//! from the deterministic fair default policy (run the granted thread
+//! until it yields, blocks, or finishes; then rotate round-robin). A
+//! deviation is an involuntary preemption at an atomic op or an
+//! alternative pick at a voluntary switch point (`yield_now`, lock
+//! contention, condvar waits); returning to the default policy costs
+//! nothing. Charging voluntary-switch alternatives too is what keeps
+//! spin-wait loops (hazard scans, condvar poll loops) from exploding the
+//! space — the default schedule is fair, so only bounded departures from
+//! it are enumerated, and for the protocols in this crate the 2-deviation
+//! space already covers every published-vs-reclaimed race the
+//! hazard-pointer cell can express (see the broken-cell test in
+//! `tests/model_checker.rs`, which the checker catches with 1 deviation).
+//!
+//! Memory-reclamation invariants come from three hooks the code under test
+//! calls around its `unsafe` reclamation points — [`note_alloc`],
+//! [`note_free`], [`note_deref`] — each a schedule point of its own, so a
+//! writer's free can interleave *between* a reader's re-validation and its
+//! dereference if the protocol allows it. The checker fails an execution
+//! on use-after-free, double reclaim, or (at thread exit) leaked
+//! retirements. All hooks are no-ops on threads that do not belong to a
+//! model run.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// What a parked thread is about to do. `Yield` marks voluntary
+/// reschedule points (spin backoff, lock contention, condvar waits): the
+/// default policy rotates threads there, and a repeat grant right after a
+/// yield is pruned as a stutter (nothing ran, so its re-check is a no-op).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Op,
+    Yield,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum TState {
+    /// Spawned but not yet parked at the start barrier.
+    Starting,
+    /// Granted the current step; executing up to its next schedule point.
+    Running,
+    /// Parked at a schedule point, waiting for a grant.
+    Parked(OpKind),
+    Finished,
+}
+
+/// Exploration bounds. The defaults suit the scenarios in this repo's
+/// model tests: small thread counts, a few dozen schedule points each.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Maximum scheduling deviations per execution: each step whose
+    /// granted thread differs from the fair default policy's pick —
+    /// an involuntary preemption at an op, or an alternative choice at
+    /// a voluntary yield — spends one unit.
+    pub max_preemptions: usize,
+    /// Per-execution step cap: trips the livelock guard when a schedule
+    /// stops making progress (e.g. a spin loop the schedule starves).
+    pub max_steps: u64,
+    /// Total executions cap; exceeding it reports `complete: false`.
+    pub max_execs: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config { max_preemptions: 2, max_steps: 20_000, max_execs: 200_000 }
+    }
+}
+
+/// Outcome of an [`explore`] call.
+#[derive(Debug)]
+pub struct Report {
+    /// Executions actually run.
+    pub executions: u64,
+    /// Whether the bounded schedule space was exhausted (false when the
+    /// execution cap tripped or a failure stopped the search).
+    pub complete: bool,
+    /// The first failing schedule found, if any.
+    pub failure: Option<Failure>,
+    /// Total [`note_alloc`] calls summed over all executions.
+    pub allocs_total: u64,
+    /// Total [`note_free`] calls summed over all executions; equals
+    /// `allocs_total` whenever no execution leaked.
+    pub frees_total: u64,
+}
+
+/// A failing schedule: the invariant message plus the exact sequence of
+/// thread ids granted per step, for replay while debugging.
+#[derive(Debug)]
+pub struct Failure {
+    pub message: String,
+    pub schedule: Vec<usize>,
+}
+
+struct Inner {
+    states: Vec<TState>,
+    granted: Option<usize>,
+    abort: bool,
+    failure: Option<String>,
+    /// Tracked reclamation units: address -> currently live. An address
+    /// freed and then returned again by the allocator flips back to live.
+    allocs: HashMap<usize, bool>,
+    allocs_total: u64,
+    frees_total: u64,
+    steps: u64,
+    max_steps: u64,
+}
+
+struct Shared {
+    m: Mutex<Inner>,
+    cv: Condvar,
+}
+
+struct Participant {
+    shared: Arc<Shared>,
+    tid: usize,
+}
+
+thread_local! {
+    static PARTICIPANT: RefCell<Option<Participant>> = const { RefCell::new(None) };
+}
+
+/// At most one [`explore`] runs at a time (held for the whole search, so
+/// concurrent `cargo test` threads serialize their model runs instead of
+/// cross-talking through the session global below).
+static EXPLORE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Fast guard for the reclamation hooks on non-participant threads: true
+/// exactly while an execution's session is installed. Raw `std` atomic —
+/// this module is the model's own machinery, not code under test.
+static SESSION_ACTIVE: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// The running execution's session, visible to non-participant threads.
+/// Scenario factories run on the exploring thread *before* any model
+/// thread spawns, yet the state they build (e.g. a `SnapshotCell`'s
+/// initial box) must be tracked — otherwise its eventual reclamation by a
+/// participant would look like a foreign free.
+static SESSION: Mutex<Option<Arc<Shared>>> = Mutex::new(None);
+
+fn current_session() -> Option<Arc<Shared>> {
+    // Skip while unwinding for the same reason as [`active`]: a hook
+    // firing from a drop during a panic must not panic again.
+    if std::thread::panicking() || !SESSION_ACTIVE.load(std::sync::atomic::Ordering::Acquire) {
+        return None;
+    }
+    SESSION.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Installs a session for the duration of one execution; cleared on drop
+/// so every exit path (including stalls) tears it down.
+struct SessionGuard;
+
+impl SessionGuard {
+    fn install(shared: &Arc<Shared>) -> SessionGuard {
+        *SESSION.lock().unwrap_or_else(|e| e.into_inner()) = Some(shared.clone());
+        SESSION_ACTIVE.store(true, std::sync::atomic::Ordering::Release);
+        SessionGuard
+    }
+}
+
+impl Drop for SessionGuard {
+    fn drop(&mut self) {
+        SESSION_ACTIVE.store(false, std::sync::atomic::Ordering::Release);
+        *SESSION.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+/// Panic payload used to unwind model threads without touching the global
+/// panic hook: aborted executions and detected violations must not spray
+/// backtraces for schedules the checker handles itself.
+struct ModelAbort;
+
+/// Whether the calling thread belongs to a running [`explore`] execution.
+/// False while the thread is unwinding: drops that run during an abort
+/// (or an assertion failure) must not re-enter the scheduler — parking,
+/// or unwinding a second time from a schedule point, inside a panic
+/// would escalate to a process abort.
+#[inline]
+pub fn active() -> bool {
+    !std::thread::panicking() && PARTICIPANT.with(|p| p.borrow().is_some())
+}
+
+/// Schedule point for an ordinary shim operation.
+#[inline]
+pub(crate) fn op() {
+    if active() {
+        schedule_point(OpKind::Op);
+    }
+}
+
+/// Schedule point for a voluntary yield (the default policy rotates here).
+#[inline]
+pub(crate) fn op_yield() {
+    if active() {
+        schedule_point(OpKind::Yield);
+    }
+}
+
+fn with_participant<R>(f: impl FnOnce(&Arc<Shared>, usize) -> R) -> Option<R> {
+    PARTICIPANT.with(|p| p.borrow().as_ref().map(|q| f(&q.shared, q.tid)))
+}
+
+fn abort_unwind() -> ! {
+    panic::resume_unwind(Box::new(ModelAbort))
+}
+
+/// Record a violation, wake everyone, and unwind the current thread.
+fn violation(shared: &Arc<Shared>, mut g: MutexGuard<'_, Inner>, message: String) -> ! {
+    g.abort = true;
+    if g.failure.is_none() {
+        g.failure = Some(message);
+    }
+    shared.cv.notify_all();
+    drop(g);
+    abort_unwind()
+}
+
+fn schedule_point(kind: OpKind) {
+    let part = with_participant(|shared, tid| (shared.clone(), tid));
+    let Some((shared, tid)) = part else { return };
+    let mut g = shared.m.lock().unwrap();
+    if g.abort {
+        drop(g);
+        abort_unwind();
+    }
+    g.states[tid] = TState::Parked(kind);
+    shared.cv.notify_all();
+    loop {
+        if g.abort {
+            drop(g);
+            abort_unwind();
+        }
+        if g.granted == Some(tid) {
+            break;
+        }
+        g = shared.cv.wait(g).unwrap();
+    }
+    g.granted = None;
+    g.states[tid] = TState::Running;
+    g.steps += 1;
+    if g.steps > g.max_steps {
+        let max = g.max_steps;
+        violation(&shared, g, format!("livelock guard: schedule exceeded {max} steps"));
+    }
+}
+
+/// Register a reclamation unit (e.g. the `Box` a `SnapshotCell` publishes).
+/// A schedule point of its own on model threads, so allocation interleaves
+/// like any other op; on non-participant threads it records into the
+/// running session, if any (scenario factories allocate before threads
+/// spawn), and is free otherwise.
+pub fn note_alloc(addr: usize) {
+    if active() {
+        schedule_point(OpKind::Op);
+        with_participant(|shared, _| {
+            let mut g = shared.m.lock().unwrap();
+            g.allocs.insert(addr, true);
+            g.allocs_total += 1;
+        });
+    } else if let Some(shared) = current_session() {
+        let mut g = shared.m.lock().unwrap();
+        g.allocs.insert(addr, true);
+        g.allocs_total += 1;
+    }
+}
+
+/// Record reclamation of a unit. Fails the execution on double reclaim.
+/// Call *immediately before* the actual free so the checker sees the
+/// free at the earliest point it can race a reader.
+pub fn note_free(addr: usize) {
+    if active() {
+        schedule_point(OpKind::Op);
+        with_participant(|shared, tid| {
+            let mut g = shared.m.lock().unwrap();
+            if g.allocs.get(&addr) == Some(&true) {
+                g.allocs.insert(addr, false);
+                g.frees_total += 1;
+            } else {
+                violation(
+                    shared,
+                    g,
+                    format!("double reclaim: thread {tid} freed {addr:#x} twice"),
+                );
+            }
+        });
+    } else if let Some(shared) = current_session() {
+        let mut g = shared.m.lock().unwrap();
+        if g.allocs.get(&addr) == Some(&true) {
+            g.allocs.insert(addr, false);
+            g.frees_total += 1;
+        } else {
+            panic!("double reclaim (off-schedule): {addr:#x} freed twice");
+        }
+    }
+}
+
+/// Assert a tracked unit is still live before dereferencing it. Fails the
+/// execution with a use-after-free otherwise. A schedule point of its own,
+/// so a racing free can land between a protocol's validation and its
+/// dereference if the protocol allows that schedule.
+pub fn note_deref(addr: usize) {
+    if active() {
+        schedule_point(OpKind::Op);
+        with_participant(|shared, tid| {
+            let g = shared.m.lock().unwrap();
+            if g.allocs.get(&addr) != Some(&true) {
+                violation(
+                    shared,
+                    g,
+                    format!("use-after-free: thread {tid} dereferenced freed {addr:#x}"),
+                );
+            }
+        });
+    } else if let Some(shared) = current_session() {
+        let g = shared.m.lock().unwrap();
+        if g.allocs.get(&addr) != Some(&true) {
+            panic!("use-after-free (off-schedule): dereferenced freed {addr:#x}");
+        }
+    }
+}
+
+#[derive(Clone)]
+struct StepRec {
+    chosen: usize,
+    /// Parked threads (tid, pending op kind) the scheduler could have
+    /// picked at this step, in tid order.
+    runnable: Vec<(usize, OpKind)>,
+}
+
+struct Outcome {
+    trace: Vec<StepRec>,
+    failure: Option<String>,
+    allocs: u64,
+    frees: u64,
+}
+
+/// Deviation-free default policy: keep running the current thread; at a
+/// voluntary yield (or when it blocks/finishes), rotate round-robin.
+fn default_choice(prev: Option<usize>, runnable: &[(usize, OpKind)]) -> usize {
+    if let Some(p) = prev {
+        if runnable.iter().any(|&(t, k)| t == p && k != OpKind::Yield) {
+            return p;
+        }
+        if let Some(&(t, _)) = runnable.iter().find(|&&(t, _)| t > p) {
+            return t;
+        }
+    }
+    runnable[0].0
+}
+
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked".to_string()
+    }
+}
+
+fn runner(shared: Arc<Shared>, tid: usize, body: Box<dyn FnOnce() + Send>) {
+    PARTICIPANT.with(|p| {
+        *p.borrow_mut() = Some(Participant { shared: shared.clone(), tid });
+    });
+    let result = panic::catch_unwind(AssertUnwindSafe(|| {
+        // Start barrier: the scheduler controls the first step too.
+        schedule_point(OpKind::Op);
+        body();
+    }));
+    PARTICIPANT.with(|p| *p.borrow_mut() = None);
+    let mut g = shared.m.lock().unwrap();
+    g.states[tid] = TState::Finished;
+    if let Err(payload) = result {
+        if !payload.is::<ModelAbort>() {
+            g.abort = true;
+            if g.failure.is_none() {
+                g.failure = Some(panic_message(payload.as_ref()));
+            }
+        }
+    }
+    shared.cv.notify_all();
+}
+
+/// How long the scheduler waits for quiescence before declaring the
+/// execution stalled (a thread blocked outside any schedule point — e.g.
+/// on a raw `std` lock held across a shim op, which the model cannot
+/// single-step through).
+const STALL_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn run_one<F>(cfg: &Config, prefix: &[usize], scenario: &mut F) -> Outcome
+where
+    F: FnMut() -> Vec<Box<dyn FnOnce() + Send>>,
+{
+    let shared = Arc::new(Shared {
+        m: Mutex::new(Inner {
+            states: Vec::new(),
+            granted: None,
+            abort: false,
+            failure: None,
+            allocs: HashMap::new(),
+            allocs_total: 0,
+            frees_total: 0,
+            steps: 0,
+            max_steps: cfg.max_steps,
+        }),
+        cv: Condvar::new(),
+    });
+    // Install the session before building the scenario: state constructed
+    // by the factory (initial boxes etc.) must be tracked by the hooks.
+    let _session = SessionGuard::install(&shared);
+    let bodies = scenario();
+    let n = bodies.len();
+    assert!(n > 0, "model scenario needs at least one thread");
+    shared.m.lock().unwrap().states = vec![TState::Starting; n];
+    let mut handles = Vec::with_capacity(n);
+    for (tid, body) in bodies.into_iter().enumerate() {
+        let shared = shared.clone();
+        handles.push(std::thread::spawn(move || runner(shared, tid, body)));
+    }
+
+    let mut trace: Vec<StepRec> = Vec::new();
+    let mut prev: Option<usize> = None;
+    let mut stalled = false;
+    let outcome = loop {
+        let mut g = shared.m.lock().unwrap();
+        loop {
+            if g.abort {
+                if g.states.iter().all(|s| matches!(s, TState::Finished)) {
+                    break;
+                }
+                // Wake parked threads so they observe the abort and exit.
+                shared.cv.notify_all();
+            } else if g.granted.is_none()
+                && g.states.iter().all(|s| matches!(s, TState::Parked(_) | TState::Finished))
+            {
+                break;
+            }
+            let (ng, to) = shared.cv.wait_timeout(g, STALL_TIMEOUT).unwrap();
+            g = ng;
+            if to.timed_out() {
+                stalled = true;
+                break;
+            }
+        }
+        if stalled {
+            g.abort = true;
+            if g.failure.is_none() {
+                g.failure = Some(
+                    "model stall: a thread blocked outside any schedule point \
+                     (raw lock held across a shim operation?)"
+                        .to_string(),
+                );
+            }
+            shared.cv.notify_all();
+            break Outcome {
+                trace: trace.clone(),
+                failure: g.failure.clone(),
+                allocs: g.allocs_total,
+                frees: g.frees_total,
+            };
+        }
+        if g.abort {
+            break Outcome {
+                trace: trace.clone(),
+                failure: g.failure.clone(),
+                allocs: g.allocs_total,
+                frees: g.frees_total,
+            };
+        }
+        let runnable: Vec<(usize, OpKind)> = g
+            .states
+            .iter()
+            .enumerate()
+            .filter_map(|(t, s)| match s {
+                TState::Parked(k) => Some((t, *k)),
+                _ => None,
+            })
+            .collect();
+        if runnable.is_empty() {
+            // All threads finished cleanly: check for leaked retirements.
+            let leaked = g.allocs.values().filter(|&&live| live).count();
+            let failure = if leaked > 0 {
+                Some(format!("leaked retirement: {leaked} allocation(s) never reclaimed"))
+            } else {
+                None
+            };
+            break Outcome {
+                trace: trace.clone(),
+                failure,
+                allocs: g.allocs_total,
+                frees: g.frees_total,
+            };
+        }
+        let step = trace.len();
+        let chosen = if step < prefix.len() {
+            let c = prefix[step];
+            if !runnable.iter().any(|&(t, _)| t == c) {
+                // Replay diverged: the scenario is not deterministic under
+                // its schedule (time, randomness, or address-dependent
+                // branching leaked in). Surface it as a failure.
+                g.abort = true;
+                if g.failure.is_none() {
+                    g.failure = Some(format!(
+                        "nondeterministic replay: thread {c} not runnable at step {step}"
+                    ));
+                }
+                shared.cv.notify_all();
+                drop(g);
+                continue;
+            }
+            c
+        } else {
+            default_choice(prev, &runnable)
+        };
+        trace.push(StepRec { chosen, runnable });
+        prev = Some(chosen);
+        g.granted = Some(chosen);
+        shared.cv.notify_all();
+    };
+    if !stalled {
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+    outcome
+}
+
+/// Enumerate unexplored sibling choices of `trace` (depth-first, at steps
+/// not fixed by `prefix`) whose deviation count stays within bounds.
+///
+/// A step's cost is 1 when its granted thread differs from what
+/// [`default_choice`] would pick there, else 0. Charging voluntary-switch
+/// alternatives (not just op preemptions) bounds the enumeration of
+/// spin-wait interleavings: without it, depth-first search burrows into
+/// ever-longer reorderings of side-effect-free yield loops — condvar
+/// polls, hazard scans — until the livelock guard misfires on perfectly
+/// clean code. With it, every explored schedule is the fair default plus
+/// at most `max_preemptions` departures, so clean scenarios terminate and
+/// the budget is spent near the ops where races actually live.
+fn push_branches(cfg: &Config, prefix: &[usize], trace: &[StepRec], frames: &mut Vec<Vec<usize>>) {
+    let mut deviations = 0usize;
+    for i in 0..trace.len() {
+        let prev = if i == 0 { None } else { Some(&trace[i - 1]) };
+        let default = default_choice(prev.map(|p| p.chosen), &trace[i].runnable);
+        if i >= prefix.len() {
+            for &(alt, _) in &trace[i].runnable {
+                if alt == trace[i].chosen {
+                    continue;
+                }
+                // Stutter pruning: re-granting a thread parked at a
+                // voluntary yield with nothing run in between just re-runs
+                // its (side-effect-free) spin check against unchanged
+                // state; the yielder stays eligible at every later step.
+                if let Some(prev) = prev {
+                    if alt == prev.chosen
+                        && trace[i].runnable.len() > 1
+                        && trace[i]
+                            .runnable
+                            .iter()
+                            .any(|&(t, k)| t == prev.chosen && k == OpKind::Yield)
+                    {
+                        continue;
+                    }
+                }
+                let extra = usize::from(alt != default);
+                if deviations + extra <= cfg.max_preemptions {
+                    let mut branch: Vec<usize> =
+                        trace[..i].iter().map(|s| s.chosen).collect();
+                    branch.push(alt);
+                    frames.push(branch);
+                }
+            }
+        }
+        if trace[i].chosen != default {
+            deviations += 1;
+        }
+    }
+}
+
+/// Explore the bounded schedule space of a scenario.
+///
+/// `scenario` is called once per execution and returns the thread bodies
+/// (fresh state each time — typically closures over a new `Arc`'d value).
+/// The scenario must be deterministic apart from thread interleaving.
+/// Returns after the space is exhausted, [`Config::max_execs`] trips, or
+/// the first failing schedule (invariant panic, use-after-free, double
+/// reclaim, leaked retirement, or livelock guard).
+pub fn explore<F>(cfg: Config, mut scenario: F) -> Report
+where
+    F: FnMut() -> Vec<Box<dyn FnOnce() + Send>>,
+{
+    let _serial = EXPLORE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut frames: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut executions = 0u64;
+    let mut allocs_total = 0u64;
+    let mut frees_total = 0u64;
+    while let Some(prefix) = frames.pop() {
+        if executions >= cfg.max_execs {
+            return Report {
+                executions,
+                complete: false,
+                failure: None,
+                allocs_total,
+                frees_total,
+            };
+        }
+        executions += 1;
+        let outcome = run_one(&cfg, &prefix, &mut scenario);
+        allocs_total += outcome.allocs;
+        frees_total += outcome.frees;
+        if let Some(message) = outcome.failure {
+            let schedule = outcome.trace.iter().map(|s| s.chosen).collect();
+            return Report {
+                executions,
+                complete: false,
+                failure: Some(Failure { message, schedule }),
+                allocs_total,
+                frees_total,
+            };
+        }
+        push_branches(&cfg, &prefix, &outcome.trace, &mut frames);
+    }
+    Report { executions, complete: true, failure: None, allocs_total, frees_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::{AtomicU64, Ordering};
+
+    fn quick() -> Config {
+        Config { max_preemptions: 2, max_steps: 5_000, max_execs: 50_000 }
+    }
+
+    #[test]
+    fn single_thread_runs_once() {
+        let report = explore(quick(), || {
+            vec![Box::new(|| {
+                let a = AtomicU64::new(0);
+                a.store(1, Ordering::SeqCst);
+                assert_eq!(a.load(Ordering::SeqCst), 1);
+            }) as Box<dyn FnOnce() + Send>]
+        });
+        assert!(report.complete, "{report:?}");
+        assert_eq!(report.executions, 1);
+        assert!(report.failure.is_none(), "{report:?}");
+    }
+
+    #[test]
+    fn explores_multiple_interleavings_of_two_writers() {
+        let report = explore(quick(), || {
+            let shared = std::sync::Arc::new(AtomicU64::new(0));
+            (0..2u64)
+                .map(|i| {
+                    let shared = shared.clone();
+                    Box::new(move || {
+                        shared.fetch_add(i + 1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect()
+        });
+        assert!(report.complete, "{report:?}");
+        assert!(report.failure.is_none(), "{report:?}");
+        assert!(report.executions > 1, "expected >1 interleaving, got {}", report.executions);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // explores hundreds of executions — too slow under Miri
+    fn finds_a_racy_read_modify_write() {
+        // Classic lost update: load + store instead of fetch_add. The
+        // checker must find a schedule where an increment disappears.
+        let report = explore(quick(), || {
+            let shared = std::sync::Arc::new(AtomicU64::new(0));
+            let done = std::sync::Arc::new(AtomicU64::new(0));
+            let mut bodies: Vec<Box<dyn FnOnce() + Send>> = (0..2)
+                .map(|_| {
+                    let shared = shared.clone();
+                    let done = done.clone();
+                    Box::new(move || {
+                        let v = shared.load(Ordering::SeqCst);
+                        shared.store(v + 1, Ordering::SeqCst);
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect();
+            let check = shared.clone();
+            bodies.push(Box::new(move || {
+                while done.load(Ordering::SeqCst) < 2 {
+                    crate::sync::yield_now();
+                }
+                let v = check.load(Ordering::SeqCst);
+                assert_eq!(v, 2, "lost update: counter is {v}");
+            }));
+            bodies
+        });
+        let failure = report.failure.expect("checker must find the lost update");
+        assert!(failure.message.contains("lost update"), "{}", failure.message);
+        assert!(!failure.schedule.is_empty());
+    }
+
+    #[test]
+    fn reclamation_hooks_catch_double_free() {
+        let report = explore(quick(), || {
+            vec![Box::new(|| {
+                note_alloc(0x1000);
+                note_free(0x1000);
+                note_free(0x1000);
+            }) as Box<dyn FnOnce() + Send>]
+        });
+        let failure = report.failure.expect("double reclaim must be caught");
+        assert!(failure.message.contains("double reclaim"), "{}", failure.message);
+    }
+
+    #[test]
+    fn reclamation_hooks_catch_leaks() {
+        let report = explore(quick(), || {
+            vec![Box::new(|| {
+                note_alloc(0x2000);
+            }) as Box<dyn FnOnce() + Send>]
+        });
+        let failure = report.failure.expect("leak must be caught");
+        assert!(failure.message.contains("leaked retirement"), "{}", failure.message);
+    }
+
+    #[test]
+    fn reclamation_hooks_catch_use_after_free() {
+        let report = explore(quick(), || {
+            vec![Box::new(|| {
+                note_alloc(0x3000);
+                note_free(0x3000);
+                note_deref(0x3000);
+            }) as Box<dyn FnOnce() + Send>]
+        });
+        let failure = report.failure.expect("use-after-free must be caught");
+        assert!(failure.message.contains("use-after-free"), "{}", failure.message);
+    }
+
+    #[test]
+    fn livelock_guard_trips_on_unbounded_spin() {
+        let report = explore(Config { max_preemptions: 0, max_steps: 200, max_execs: 10 }, || {
+            let flag = std::sync::Arc::new(crate::sync::AtomicBool::new(false));
+            vec![{
+                let flag = flag.clone();
+                Box::new(move || {
+                    // Nobody ever sets the flag: spins until the guard.
+                    while !flag.load(Ordering::SeqCst) {
+                        crate::sync::yield_now();
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            }]
+        });
+        let failure = report.failure.expect("livelock guard must trip");
+        assert!(failure.message.contains("livelock"), "{}", failure.message);
+    }
+
+    #[test]
+    fn deviation_budget_gates_alternative_schedules() {
+        // Two threads that fetch_add / yield / fetch_add. At budget 0 the
+        // only explored schedule is the fair default — exactly one
+        // execution, and it must run clean. Granting one deviation opens
+        // the alternative orderings around the yield points.
+        let scenario = || {
+            let shared = std::sync::Arc::new(AtomicU64::new(0));
+            (0..2u64)
+                .map(|_| {
+                    let shared = shared.clone();
+                    Box::new(move || {
+                        shared.fetch_add(1, Ordering::SeqCst);
+                        crate::sync::yield_now();
+                        shared.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send>
+                })
+                .collect::<Vec<_>>()
+        };
+        let tight = explore(
+            Config { max_preemptions: 0, max_steps: 1_000, max_execs: 1_000 },
+            scenario,
+        );
+        assert!(tight.complete, "{tight:?}");
+        assert!(tight.failure.is_none(), "{tight:?}");
+        assert_eq!(tight.executions, 1, "budget 0 must pin the default schedule");
+
+        let loose = explore(
+            Config { max_preemptions: 1, max_steps: 1_000, max_execs: 1_000 },
+            scenario,
+        );
+        assert!(loose.complete, "{loose:?}");
+        assert!(loose.failure.is_none(), "{loose:?}");
+        assert!(loose.executions > 1, "budget 1 must branch: {}", loose.executions);
+    }
+}

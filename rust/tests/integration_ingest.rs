@@ -19,12 +19,12 @@
 //!    background maintenance — no panics, exact results at quiesce.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use simetra::coordinator::{server, Coordinator, CoordinatorConfig, IndexKind, Response};
 use simetra::ingest::{IngestConfig, IngestCorpus};
+use simetra::sync::{AtomicBool, Ordering};
 use simetra::metrics::DenseVec;
 use simetra::storage::{dot_slice, normalize_row};
 use simetra::util::Rng;
